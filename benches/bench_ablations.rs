@@ -1,0 +1,14 @@
+//! Ablation suite: Alg.1 linear vs exact (paper future-work §1), decision
+//! interval, ε_M, preemption mode, α/δ, and the RLHF-sampling extension.
+use dynabatch::experiments::ablations;
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+    let n = if quick { 120 } else { 500 };
+    ablations::linear_vs_exact(n).unwrap().print();
+    ablations::interval_sweep(n).unwrap().print();
+    ablations::eps_mem_sweep(n).unwrap().print();
+    ablations::preempt_mode(n).unwrap().print();
+    ablations::alpha_delta_sweep(n).unwrap().print();
+    ablations::rlhf_sampling(n).unwrap().print();
+}

@@ -1,0 +1,46 @@
+//! End-to-end scheduler+sim-engine stepping rate: how many virtual serving
+//! iterations the coordinator sustains per wall second (L3 must never be
+//! the bottleneck — the paper's engine steps are ≥ tens of ms).
+use dynabatch::benchkit::Bench;
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::run_sim;
+use dynabatch::driver::SimScenario;
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+    let n = if quick { 200 } else { 1319 };
+    let mut b = Bench::new("end-to-end (virtual time, wallclock measured)")
+        .min_iters(if quick { 1 } else { 3 });
+    for policy in [PolicyKind::StaticGreedy { max: 256 },
+                   PolicyKind::MemoryAware, PolicyKind::Combined] {
+        let model = llama_65b();
+        let hardware = node_for(&model);
+        let s = SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig {
+                policy: policy.clone(),
+                d_sla: Some(0.05),
+                ..SchedulerConfig::default()
+            },
+            workload: Workload {
+                name: "bench".into(),
+                arrival: Arrival::AllAtOnce,
+                prompt: LengthDist::around(68.4, 1024),
+                output: LengthDist::around(344.5, 1024),
+                n_requests: n,
+                seed: 42,
+            },
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let total_tokens = (n as f64) * 344.5;
+        b.bench_units(&policy.label(), Some((total_tokens, "vtok")), || {
+            std::hint::black_box(run_sim(&s).unwrap());
+        });
+    }
+    b.report();
+    println!("(vtok/s = virtual generated tokens simulated per wall-second)");
+}

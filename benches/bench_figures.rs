@@ -1,0 +1,23 @@
+//! Regenerates Fig. 2 (memory timeline), Fig. 3 (D(b), Φ(b)) and
+//! Fig. 4 (capacity bars + SLA sweep).
+use dynabatch::experiments::figures;
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+
+    let pts = figures::fig3(500.0, 300);
+    figures::render_fig3(&pts).print();
+    for (sla, b, phi) in figures::fig3_anchors(&pts) {
+        println!("SLA {sla:.0} ms → b ≈ {b}, Φ ≈ {phi:.0} tok/s");
+    }
+    println!("(paper anchors: 50 ms → b≈100/Φ≈1900; 80 ms → b≈230/Φ≈2700)");
+
+    let n = if quick { 150 } else { 600 };
+    let r2 = figures::fig2(n).expect("fig2");
+    print!("{}", figures::render_fig2(&r2));
+
+    let probe = if quick { 150 } else { 400 };
+    let sweep = if quick { vec![] } else { vec![0.030, 0.050, 0.080] };
+    let r4 = figures::fig4(probe, &sweep).expect("fig4");
+    print!("{}", figures::render_fig4(&r4));
+}

@@ -1,0 +1,43 @@
+//! KV block manager hot-path micro-benches (allocate/grow/free cycles at
+//! serving scale, can_grow probes).
+use dynabatch::benchkit::Bench;
+use dynabatch::kv::KvBlockManager;
+
+fn main() {
+    let mut b = Bench::new("kv block manager");
+
+    b.bench("alloc+grow64+free (1 req)", || {
+        let mut m = KvBlockManager::new(1_000_000, 16, 0);
+        m.allocate(1, 128).unwrap();
+        for _ in 0..64 {
+            m.grow(1, 1).unwrap();
+        }
+        m.free(1).unwrap();
+    });
+
+    let mut m = KvBlockManager::new(10_000_000, 16, 0);
+    for id in 0..256u64 {
+        m.allocate(id, 300).unwrap();
+    }
+    b.bench_units("grow 256 live reqs by 1", Some((256.0, "grow")), || {
+        // Recycle when the pool runs low so long bench runs don't exhaust.
+        if m.free_blocks() < 256 {
+            for id in 0..256u64 {
+                m.free(id).unwrap();
+                m.allocate(id, 300).unwrap();
+            }
+        }
+        for id in 0..256u64 {
+            m.grow(id, 1).unwrap();
+        }
+    });
+    b.bench_units("can_grow probe x256", Some((256.0, "probe")), || {
+        for id in 0..256u64 {
+            std::hint::black_box(m.can_grow(id, 1));
+        }
+    });
+    b.bench("utilization gauge", || {
+        std::hint::black_box(m.used_tokens());
+    });
+    b.report();
+}

@@ -1,0 +1,49 @@
+//! Policy decision micro-bench: the paper's "barrier 2" concern is that
+//! frequent batch adjustment costs more than it gains. decide() must be
+//! effectively free next to a multi-ms engine step.
+use dynabatch::batching;
+use dynabatch::benchkit::Bench;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::telemetry::Observation;
+
+fn obs() -> Observation {
+    Observation {
+        now: 1.0,
+        eta_tokens: 100_000,
+        used_tokens: 40_000,
+        mean_in: 128.0,
+        mean_out: 256.0,
+        var_in: 900.0,
+        var_out: 4000.0,
+        length_samples: 500,
+        recent_decode_latency: Some(0.045),
+        recent_decode_batch: Some(96.0),
+        running_decode: 96,
+        pending_prefill: 4,
+        waiting: 12,
+    }
+}
+
+fn main() {
+    let mut b = Bench::new("policy.decide()");
+    for kind in [
+        PolicyKind::StaticGreedy { max: 256 },
+        PolicyKind::MemoryAware,
+        PolicyKind::MemoryAwareExact,
+        PolicyKind::SlaFeedback,
+        PolicyKind::Combined,
+    ] {
+        let cfg = SchedulerConfig {
+            policy: kind,
+            d_sla: Some(0.05),
+            ..SchedulerConfig::default()
+        };
+        let mut p = batching::build_policy(&cfg);
+        let o = obs();
+        let label = p.label();
+        b.bench(&label, || {
+            std::hint::black_box(p.decide(std::hint::black_box(&o)));
+        });
+    }
+    b.report();
+}

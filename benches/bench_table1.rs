@@ -1,0 +1,13 @@
+//! Regenerates Table I (throughput: static vs dynamic, infinite arrivals).
+//! Full scale: `cargo bench --bench bench_table1`; quick: set
+//! DYNABATCH_BENCH_QUICK=1 (0.2×).
+use dynabatch::experiments::table1;
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+    let scale = if quick { 0.2 } else { 1.0 };
+    let t0 = std::time::Instant::now();
+    let rows = table1::run(scale).expect("table1");
+    table1::render(&rows).print();
+    println!("(scale {scale}, wallclock {:.1}s)", t0.elapsed().as_secs_f64());
+}

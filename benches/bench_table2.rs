@@ -1,0 +1,11 @@
+//! Regenerates Table II (capacity + throughput under SLA 50 ms).
+use dynabatch::experiments::table2;
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+    let scale = if quick { 0.3 } else { 1.0 };
+    let t0 = std::time::Instant::now();
+    let rows = table2::run(scale).expect("table2");
+    table2::render(&rows).print();
+    println!("(scale {scale}, wallclock {:.1}s)", t0.elapsed().as_secs_f64());
+}

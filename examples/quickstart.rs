@@ -1,0 +1,50 @@
+//! Quickstart: compare static vs dynamic batching on a simulated LLaMA-65B
+//! deployment in a few seconds of wallclock (virtual time inside).
+//!
+//!     cargo run --release --example quickstart
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::{run_sim, SimScenario};
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let model = llama_65b();
+    let hardware = node_for(&model);
+    println!("model: {} on {} (KV budget {} tokens)", model.name,
+             hardware.name,
+             hardware.kv_budget(&model) / model.kv_bytes_per_token());
+
+    let workload = Workload {
+        name: "quickstart".into(),
+        arrival: Arrival::AllAtOnce, // the paper's "infinite arrival rate"
+        prompt: LengthDist::around(68.4, 1024),
+        output: LengthDist::around(344.5, 1024),
+        n_requests: 400,
+        seed: 42,
+    };
+
+    for policy in [
+        PolicyKind::StaticGreedy { max: 256 }, // vLLM static batching
+        PolicyKind::MemoryAware,               // Algorithm 1
+    ] {
+        let s = SimScenario {
+            model: model.clone(),
+            hardware: hardware.clone(),
+            sched: SchedulerConfig { policy, ..SchedulerConfig::default() },
+            workload: workload.clone(),
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let m = run_sim(&s)?;
+        println!(
+            "{:28} {:7.0} tok/s  mean batch {:5.1}  preemptions {:4}  \
+             GPU-util {:.0}%",
+            m.policy, m.throughput, m.mean_batch, m.preemptions,
+            m.utilization.unwrap_or(0.0) * 100.0
+        );
+    }
+    println!("\nDynamic batching avoids the static baseline's preemption \
+              storms by sizing\nthe batch from the memory bound \
+              (eq. 14 of the paper). See `dynabatch table1`.");
+    Ok(())
+}

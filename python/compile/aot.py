@@ -1,0 +1,232 @@
+"""AOT pipeline: lower the JAX model to HLO-text artifacts for the rust runtime.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path. Emits into the output directory:
+
+  manifest.json              — model config, weight table, artifact index
+  weights.bin                — all parameters, raw little-endian f32,
+                               concatenated in param_specs() order
+  decode_b{B}.hlo.txt        — decode step per batch bucket B
+  prefill_b{B}_c{C}.hlo.txt  — chunked prefill per (bucket, chunk) pair
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+DEFAULT_BUCKETS = [1, 2, 4, 8, 16]
+DEFAULT_CHUNKS = [64]
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-compatible path).
+
+    return_tuple=False is essential: every serving function returns a
+    SINGLE array (the packed state / the token tail), and an untupled root
+    is what lets the rust runtime chain the output buffer straight into
+    the next execution (a 1-tuple buffer cannot be passed as a parameter).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False)
+    return comp.as_hlo_text()
+
+
+def _f32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def make_decode_fn(cfg: M.ModelConfig):
+    n_params = len(M.param_specs(cfg))
+
+    def f(*args):
+        params = args[:n_params]
+        state, pos, active = args[n_params:]
+        return M.decode_state(cfg, list(params), state, pos, active)
+
+    return f
+
+
+def make_prefill_fn(cfg: M.ModelConfig, bucket: int):
+    n_params = len(M.param_specs(cfg))
+
+    def f(*args):
+        params = args[:n_params]
+        state, tokens, slot, start, n_valid = args[n_params:]
+        return M.prefill_state(cfg, list(params), state, tokens, slot, start,
+                               n_valid, bucket)
+
+    return f
+
+
+def lower_decode(cfg: M.ModelConfig, bucket: int) -> str:
+    """decode_b{B}: [weights…, state, pos[B], active[B]] -> state'.
+
+    The state argument is donated so XLA updates the cache in place — the
+    serving hot loop must not copy the whole state every step."""
+    specs = [_f32(s) for _, s in M.param_specs(cfg)]
+    n_params = len(specs)
+    state = _f32((M.state_size(cfg, bucket),))
+    args = specs + [state, _i32((bucket,)), _i32((bucket,))]
+    lowered = jax.jit(make_decode_fn(cfg),
+                      donate_argnums=(n_params,)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_prefill(cfg: M.ModelConfig, bucket: int, chunk: int) -> str:
+    """prefill_b{B}_c{C}: [weights…, state, tokens[C], slot, start, n_valid]
+    -> state'. State donated, as in decode."""
+    specs = [_f32(s) for _, s in M.param_specs(cfg)]
+    n_params = len(specs)
+    state = _f32((M.state_size(cfg, bucket),))
+    args = specs + [state, _i32((chunk,)), _i32(()), _i32(()), _i32(())]
+    lowered = jax.jit(make_prefill_fn(cfg, bucket),
+                      donate_argnums=(n_params,)).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def lower_read_tokens(cfg: M.ModelConfig, bucket: int) -> str:
+    """read_tokens_b{B}: [state] -> tokens[B] i32 (state NOT donated)."""
+    state = _f32((M.state_size(cfg, bucket),))
+    lowered = jax.jit(
+        lambda s: M.read_tokens(cfg, s, bucket)).lower(state)
+    return to_hlo_text(lowered)
+
+
+def write_weights(cfg: M.ModelConfig, seed: int, path: str):
+    """Raw little-endian f32 blob + the table describing it."""
+    params = M.init_params(cfg, seed=seed)
+    table = []
+    offset = 0
+    with open(path, "wb") as f:
+        for (name, shape), arr in zip(M.param_specs(cfg), params):
+            assert arr.shape == tuple(shape) and arr.dtype == np.float32
+            data = np.ascontiguousarray(arr, "<f4").tobytes()
+            f.write(data)
+            table.append({
+                "name": name,
+                "shape": list(shape),
+                "offset_bytes": offset,
+                "size_bytes": len(data),
+            })
+            offset += len(data)
+    return table, offset
+
+
+def build(out_dir: str, config_name: str, buckets, chunks, seed: int,
+          verbose: bool = True):
+    cfg = M.CONFIGS[config_name]
+    os.makedirs(out_dir, exist_ok=True)
+
+    def log(msg):
+        if verbose:
+            print(f"[aot] {msg}", flush=True)
+
+    t0 = time.time()
+    weights_path = os.path.join(out_dir, "weights.bin")
+    table, total = write_weights(cfg, seed, weights_path)
+    log(f"weights.bin: {total / 1e6:.1f} MB, {len(table)} tensors")
+
+    decode_files = {}
+    read_files = {}
+    for b in buckets:
+        name = f"decode_b{b}.hlo.txt"
+        text = lower_decode(cfg, b)
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        decode_files[str(b)] = name
+        log(f"{name}: {len(text) / 1e3:.0f} kB")
+        rname = f"read_tokens_b{b}.hlo.txt"
+        with open(os.path.join(out_dir, rname), "w") as f:
+            f.write(lower_read_tokens(cfg, b))
+        read_files[str(b)] = rname
+
+    prefill_files = {}
+    for b in buckets:
+        prefill_files[str(b)] = {}
+        for c in chunks:
+            name = f"prefill_b{b}_c{c}.hlo.txt"
+            text = lower_prefill(cfg, b, c)
+            with open(os.path.join(out_dir, name), "w") as f:
+                f.write(text)
+            prefill_files[str(b)][str(c)] = name
+            log(f"{name}: {len(text) / 1e3:.0f} kB")
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "model": {
+            "name": cfg.name,
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "block_kv": cfg.block_kv,
+            "param_count": cfg.param_count,
+            "kv_bytes_per_token": cfg.kv_bytes_per_token,
+        },
+        "seed": seed,
+        "bos_id": M.BOS_ID,
+        "pad_id": M.PAD_ID,
+        "weights_file": "weights.bin",
+        "weights": table,
+        "buckets": list(buckets),
+        "chunk_sizes": list(chunks),
+        "decode": decode_files,
+        "read_tokens": read_files,
+        "prefill": prefill_files,
+        "state_sizes": {str(b): M.state_size(cfg, b) for b in buckets},
+        # Argument convention for the rust runtime:
+        #   decode : [weights..., state, pos[B], active[B]] -> state'
+        #   prefill: [weights..., state, tokens[C], slot, start, n_valid]
+        #            -> state'
+        #   read   : [state] -> tokens[B] i32
+        # state = [k.flat | v.flat | last_tokens(f32)], donated in
+        # decode/prefill.
+        "arg_convention": "weights-then-state-v2",
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    log(f"manifest.json written; total {time.time() - t0:.1f}s")
+    return manifest
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for artifacts")
+    ap.add_argument("--config", default="tiny", choices=sorted(M.CONFIGS))
+    ap.add_argument("--buckets", default=",".join(map(str, DEFAULT_BUCKETS)),
+                    help="comma-separated decode batch buckets")
+    ap.add_argument("--chunks", default=",".join(map(str, DEFAULT_CHUNKS)),
+                    help="comma-separated prefill chunk sizes")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    buckets = sorted({int(x) for x in args.buckets.split(",") if x})
+    chunks = sorted({int(x) for x in args.chunks.split(",") if x})
+    build(args.out, args.config, buckets, chunks, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Layer-1 Pallas kernels: the attention hot spots of the serving stack.
+
+Two kernels, both flash-style (blocked KV streaming + online softmax):
+
+* ``decode_attention``          — one query token per active slot against its
+                                  KV-cache prefix (the decode hot loop).
+* ``chunked_prefill_attention`` — a C-token prefill chunk for a single slot,
+                                  causal within the chunk, full prefix before
+                                  it (the PD-fusion prefill path).
+
+TPU adaptation (paper targets GPUs — see DESIGN.md §Hardware-Adaptation):
+the CUDA version streams KV tiles through shared memory per threadblock;
+here each grid step owns a (block_kv × Dh) VMEM tile selected by BlockSpec,
+and the online-softmax accumulator (m, l, acc) is carried through the KV
+block loop — the VMEM-resident analogue of warp-level accumulation.
+
+Kernels are always invoked with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and correctness (vs. kernels/ref.py) is
+the signal we need at build time. Real-TPU performance is *estimated*
+analytically in DESIGN.md, never measured through interpret mode.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _pick_block(total: int, desired: int) -> int:
+    """Largest block size ≤ desired that divides ``total`` exactly.
+
+    Pallas loads with static block shapes; an exact divisor avoids
+    out-of-bounds tail handling inside the kernel.
+    """
+    d = max(1, min(desired, total))
+    while total % d != 0:
+        d -= 1
+    return d
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *,
+                        block_kv: int, seq_len: int):
+    """Grid = (B, H). Each step handles one (slot, head) pair.
+
+    Streams the slot's KV prefix in ``block_kv``-sized tiles, maintaining a
+    running (max, normalizer, weighted-sum) triple — the online softmax.
+    """
+    dh = q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[0, 0, :].astype(jnp.float32) * scale          # [Dh]
+    length = len_ref[0]
+    nblocks = seq_len // block_kv
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        k = k_ref[0, pl.dslice(i * block_kv, block_kv), 0, :]  # [bk, Dh]
+        v = v_ref[0, pl.dslice(i * block_kv, block_kv), 0, :]  # [bk, Dh]
+        s = jnp.dot(k.astype(jnp.float32), q)                  # [bk]
+        kpos = i * block_kv + jnp.arange(block_kv)
+        valid = kpos < length
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        # Rescale previous accumulator to the new running max.
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new) * valid.astype(jnp.float32)     # [bk]
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc_prev * alpha + jnp.dot(p, v.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.asarray(NEG_INF, jnp.float32)
+    l0 = jnp.asarray(0.0, jnp.float32)
+    acc0 = jnp.zeros((dh,), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)                          # zeros if empty
+    o_ref[0, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_kv: int = 64):
+    """Batched decode attention. See ref.decode_attention_ref for semantics.
+
+    q        [B, H, Dh]; k_cache/v_cache [B, S, H, Dh]; lengths [B] int32.
+    Returns  [B, H, Dh] in q.dtype. Inactive slots (length 0) yield zeros.
+    """
+    b, s, h, dh = k_cache.shape
+    bk = _pick_block(s, block_kv)
+    kernel = functools.partial(_decode_attn_kernel, block_kv=bk, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),      # q
+            pl.BlockSpec((1, s, 1, dh), lambda i, j: (i, 0, j, 0)),  # k
+            pl.BlockSpec((1, s, 1, dh), lambda i, j: (i, 0, j, 0)),  # v
+            pl.BlockSpec((1,), lambda i, j: (i,)),                 # lengths
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, lengths)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention
+# ---------------------------------------------------------------------------
+
+def _chunk_attn_kernel(q_ref, k_ref, v_ref, start_ref, o_ref, *,
+                       block_kv: int, seq_len: int):
+    """Grid = (H,). One head; all C chunk queries processed together.
+
+    Causal mask: query i (absolute position start+i) sees cache positions
+    ``<= start + i``. KV blocks strictly past the chunk's last position are
+    masked out entirely (they contribute exp(-inf) = 0).
+    """
+    c, dh = q_ref.shape[0], q_ref.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    q = q_ref[:, 0, :].astype(jnp.float32) * scale           # [C, Dh]
+    start = start_ref[0]
+    qpos = start + jnp.arange(c)                             # [C]
+    nblocks = seq_len // block_kv
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry                     # [C],[C],[C,Dh]
+        k = k_ref[pl.dslice(i * block_kv, block_kv), 0, :]   # [bk, Dh]
+        v = v_ref[pl.dslice(i * block_kv, block_kv), 0, :]
+        s = jnp.dot(q, k.astype(jnp.float32).T)              # [C, bk]
+        kpos = i * block_kv + jnp.arange(block_kv)
+        valid = kpos[None, :] <= qpos[:, None]               # [C, bk]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None]) * valid.astype(jnp.float32)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + jnp.dot(p, v.astype(jnp.float32))
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((c,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((c,), jnp.float32)
+    acc0 = jnp.zeros((c, dh), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, nblocks, body, (m0, l0, acc0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_kv",))
+def chunked_prefill_attention(q, k_cache, v_cache, start, *,
+                              block_kv: int = 64):
+    """Chunked-prefill attention for one slot.
+
+    q [C, H, Dh]; k_cache/v_cache [S, H, Dh] with the chunk's K/V already
+    written at [start, start+C); start scalar/[1] int32. Returns [C, H, Dh].
+    """
+    s, h, dh = k_cache.shape
+    c = q.shape[0]
+    start = jnp.reshape(jnp.asarray(start, jnp.int32), (1,))
+    bk = _pick_block(s, block_kv)
+    kernel = functools.partial(_chunk_attn_kernel, block_kv=bk, seq_len=s)
+    return pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((c, 1, dh), lambda j: (0, j, 0)),     # q
+            pl.BlockSpec((s, 1, dh), lambda j: (0, j, 0)),     # k
+            pl.BlockSpec((s, 1, dh), lambda j: (0, j, 0)),     # v
+            pl.BlockSpec((1,), lambda j: (0,)),                # start
+        ],
+        out_specs=pl.BlockSpec((c, 1, dh), lambda j: (0, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, h, dh), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, start)

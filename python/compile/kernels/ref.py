@@ -1,0 +1,70 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the CORE correctness signal: every Pallas kernel in this package
+must match its oracle to float tolerance across a hypothesis-driven sweep of
+shapes and dtypes (see python/tests/test_kernel.py).
+
+Layout conventions (shared with model.py and the rust engine):
+  decode attention :  q        [B, H, Dh]
+                      k_cache  [B, S, H, Dh]
+                      v_cache  [B, S, H, Dh]
+                      lengths  [B]  int32   -- valid cache prefix per slot
+                      out      [B, H, Dh]
+  chunked prefill  :  q        [C, H, Dh]   -- chunk of C query tokens
+                      k_cache  [S, H, Dh]   -- single slot, chunk K/V already
+                      v_cache  [S, H, Dh]      written at [start, start+C)
+                      start    scalar int32 -- position of the chunk's 1st tok
+                      out      [C, H, Dh]
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Masked single-token attention over a per-slot KV prefix.
+
+    Slots with ``lengths == 0`` (inactive batch slots) produce zeros.
+    """
+    b, s, h, dh = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    # scores[b, h, s] = q[b, h, :] . k_cache[b, s, h, :]
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(s)[None, None, :]
+    valid = pos < lengths[:, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    # Stable softmax; fully-masked rows fall back to zeros.
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * valid.astype(jnp.float32)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("bhs,bshd->bhd", p, v_cache.astype(jnp.float32))
+    any_valid = (lengths > 0)[:, None, None]
+    return jnp.where(any_valid, out, 0.0).astype(q.dtype)
+
+
+def chunked_prefill_attention_ref(q, k_cache, v_cache, start):
+    """Causal attention of a prefill chunk against a single slot's cache.
+
+    Query i (position ``start + i``) attends to cache positions
+    ``[0, start + i]``.  The chunk's own K/V must already be present in the
+    cache at ``[start, start + C)`` — this mirrors how model.py writes the
+    cache before calling the kernel.
+    """
+    c, h, dh = q.shape
+    s = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    scores = jnp.einsum("chd,shd->chs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    qpos = start + jnp.arange(c)[:, None]            # [C, 1]
+    kpos = jnp.arange(s)[None, :]                    # [1, S]
+    valid = kpos <= qpos                             # causal incl. prefix
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m) * valid[:, None, :].astype(jnp.float32)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    out = jnp.einsum("chs,shd->chd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

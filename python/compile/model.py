@@ -1,0 +1,364 @@
+"""Layer-2 JAX model: a GPT-style decoder served through the rust stack.
+
+This is the "small real model" for the end-to-end serving path. It is
+config-driven; the default ``tiny`` config (4 layers, d=256, 8 heads, byte
+vocab) AOT-compiles in seconds and decodes fast enough on the CPU PJRT
+backend for live serving demos, while exercising every real mechanism:
+explicit KV cache, batch-slot masking, chunked prefill, greedy sampling
+in-graph, and the Pallas attention kernels from kernels/attention.py.
+
+Weight layout: a flat, ordered list of arrays (see ``param_specs``). The
+same order is used by aot.py when writing weights.bin and by the rust
+runtime when building input literals — keep them in sync via manifest.json.
+
+Functions exported for AOT (shapes static per compiled variant):
+
+  decode_step(params…, k_cache, v_cache, tokens, pos, active)
+      -> (next_tokens [B] i32, k_cache', v_cache')
+  prefill_chunk(params…, k_cache, v_cache, tokens [C], slot, start, active)
+      -> (next_token [1] i32, k_cache', v_cache')
+
+Cache layout: [L, B, S, H, Dh] (layer-major so lax.scan over layers maps to
+the leading axis).
+"""
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attention import chunked_prefill_attention, decode_attention
+
+# Byte-level tokenizer: 256 raw bytes + BOS + PAD (must match rust/src/tokenizer.rs)
+VOCAB_SIZE = 258
+BOS_ID = 256
+PAD_ID = 257
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters of the served decoder."""
+
+    name: str = "tiny"
+    vocab: int = VOCAB_SIZE
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_ff: int = 1024
+    max_seq: int = 256
+    block_kv: int = 64
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in param_specs(self))
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        """f32 KV-cache bytes for one token across all layers."""
+        return 2 * self.n_layers * self.n_heads * self.d_head * 4
+
+
+CONFIGS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(name="small", d_model=512, n_layers=6, n_heads=8,
+                         d_ff=2048, max_seq=512),
+    # Micro config for fast unit tests.
+    "micro": ModelConfig(name="micro", d_model=32, n_layers=2, n_heads=2,
+                         d_ff=64, max_seq=32, block_kv=8),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the single source of truth for weight
+    order across aot.py, manifest.json and the rust runtime."""
+    L, D, F, H = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.n_heads
+    return [
+        ("tok_emb", (cfg.vocab, D)),
+        ("pos_emb", (cfg.max_seq, D)),
+        ("ln1_scale", (L, D)), ("ln1_bias", (L, D)),
+        ("qkv_w", (L, D, 3 * D)), ("qkv_b", (L, 3 * D)),
+        ("out_w", (L, D, D)), ("out_b", (L, D)),
+        ("ln2_scale", (L, D)), ("ln2_bias", (L, D)),
+        ("ff1_w", (L, D, F)), ("ff1_b", (L, F)),
+        ("ff2_w", (L, F, D)), ("ff2_b", (L, D)),
+        ("lnf_scale", (D,)), ("lnf_bias", (D,)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[np.ndarray]:
+    """Deterministic GPT-2-style init (scaled normal, ones/zeros for norms)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        if "scale" in name:
+            arr = np.ones(shape, np.float32)
+        elif "bias" in name or name.endswith("_b"):
+            arr = np.zeros(shape, np.float32)
+        else:
+            std = 0.02
+            if name in ("out_w", "ff2_w"):  # residual-branch scaling
+                std = 0.02 / math.sqrt(2 * cfg.n_layers)
+            arr = rng.normal(0.0, std, shape).astype(np.float32)
+        out.append(arr)
+    return out
+
+
+def _unpack(cfg: ModelConfig, params):
+    names = [n for n, _ in param_specs(cfg)]
+    assert len(params) == len(names), f"expected {len(names)} params"
+    return dict(zip(names, params))
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 *
+                                     (x + 0.044715 * x * x * x)))
+
+
+# ---------------------------------------------------------------------------
+# decode step (the serving hot loop)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, k_cache, v_cache, tokens, pos,
+                active, *, return_logits: bool = False):
+    """One decode iteration for a padded batch of B slots.
+
+    tokens [B] i32 — the most recent token of each slot.
+    pos    [B] i32 — its absolute position (cache write index).
+    active [B] i32 — 1 for live slots; inactive slots neither read sensibly
+                     nor write the cache (their rows are fully preserved).
+    """
+    p = _unpack(cfg, params)
+    L, B = cfg.n_layers, tokens.shape[0]
+    S, H, Dh = cfg.max_seq, cfg.n_heads, cfg.d_head
+    act = active.astype(jnp.float32)[:, None]
+    safe_pos = jnp.clip(pos, 0, S - 1)
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][safe_pos]          # [B, D]
+    x = x * act
+
+    stacked = (p["ln1_scale"], p["ln1_bias"], p["qkv_w"], p["qkv_b"],
+               p["out_w"], p["out_b"], p["ln2_scale"], p["ln2_bias"],
+               p["ff1_w"], p["ff1_b"], p["ff2_w"], p["ff2_b"])
+
+    def layer(x, scanned):
+        (ln1_s, ln1_b, qkv_w, qkv_b, out_w, out_b,
+         ln2_s, ln2_b, ff1_w, ff1_b, ff2_w, ff2_b, kc, vc) = scanned
+        h = _layer_norm(x, ln1_s, ln1_b)
+        qkv = h @ qkv_w + qkv_b                                # [B, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(B, H, Dh)
+        k = k.reshape(B, H, Dh)
+        v = v.reshape(B, H, Dh)
+        # Write K/V at each slot's position; masked so inactive slots keep
+        # their cache rows bit-identical.
+        bidx = jnp.arange(B)
+        kc_new = kc.at[bidx, safe_pos].set(k)
+        vc_new = vc.at[bidx, safe_pos].set(v)
+        mask4 = active.astype(kc.dtype)[:, None, None, None]
+        kc_new = kc_new * mask4 + kc * (1 - mask4)
+        vc_new = vc_new * mask4 + vc * (1 - mask4)
+        lengths = jnp.where(active > 0, safe_pos + 1, 0).astype(jnp.int32)
+        attn = decode_attention(q, kc_new, vc_new, lengths,
+                                block_kv=cfg.block_kv)          # [B, H, Dh]
+        x = x + (attn.reshape(B, -1) @ out_w + out_b) * act
+        h2 = _layer_norm(x, ln2_s, ln2_b)
+        x = x + (_gelu(h2 @ ff1_w + ff1_b) @ ff2_w + ff2_b) * act
+        return x, (kc_new, vc_new)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        lambda carry, sc: layer(carry, sc), x, stacked + (k_cache, v_cache))
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["tok_emb"].T                                 # [B, V]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    next_tokens = jnp.where(active > 0, next_tokens, PAD_ID)
+    if return_logits:
+        return next_tokens, k_new, v_new, logits
+    return next_tokens, k_new, v_new
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (one slot, C tokens)
+# ---------------------------------------------------------------------------
+
+def prefill_chunk(cfg: ModelConfig, params, k_cache, v_cache, tokens, slot,
+                  start, n_valid, *, return_logits: bool = False):
+    """Prefill ``tokens`` [C] into cache slot ``slot`` at positions
+    ``start .. start+C-1``. Only the first ``n_valid`` tokens are real; the
+    tail is padding (its cache writes are masked out).
+
+    Returns the greedy next token after the last *valid* position — only
+    meaningful on the final chunk of a prompt.
+    """
+    p = _unpack(cfg, params)
+    C = tokens.shape[0]
+    S, H, Dh = cfg.max_seq, cfg.n_heads, cfg.d_head
+    slot = jnp.reshape(slot, ()).astype(jnp.int32)
+    start = jnp.reshape(start, ()).astype(jnp.int32)
+    n_valid = jnp.reshape(n_valid, ()).astype(jnp.int32)
+    cpos = start + jnp.arange(C)
+    valid = (jnp.arange(C) < n_valid)
+    vmask = valid.astype(jnp.float32)[:, None]
+    safe_cpos = jnp.clip(cpos, 0, S - 1)
+
+    x = p["tok_emb"][tokens] + p["pos_emb"][safe_cpos]          # [C, D]
+    x = x * vmask
+
+    stacked = (p["ln1_scale"], p["ln1_bias"], p["qkv_w"], p["qkv_b"],
+               p["out_w"], p["out_b"], p["ln2_scale"], p["ln2_bias"],
+               p["ff1_w"], p["ff1_b"], p["ff2_w"], p["ff2_b"])
+
+    def layer(x, scanned):
+        (ln1_s, ln1_b, qkv_w, qkv_b, out_w, out_b,
+         ln2_s, ln2_b, ff1_w, ff1_b, ff2_w, ff2_b, kc, vc) = scanned
+        h = _layer_norm(x, ln1_s, ln1_b)
+        qkv = h @ qkv_w + qkv_b                                 # [C, 3D]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(C, H, Dh)
+        k = k.reshape(C, H, Dh) * vmask[:, :, None]
+        v = v.reshape(C, H, Dh) * vmask[:, :, None]
+        # Insert the chunk's K/V into this slot's cache rows.
+        slot_k = jax.lax.dynamic_slice(kc, (slot, 0, 0, 0),
+                                       (1, S, H, Dh))[0]        # [S, H, Dh]
+        slot_v = jax.lax.dynamic_slice(vc, (slot, 0, 0, 0),
+                                       (1, S, H, Dh))[0]
+        slot_k = jax.lax.dynamic_update_slice(slot_k, k, (start, 0, 0))
+        slot_v = jax.lax.dynamic_update_slice(slot_v, v, (start, 0, 0))
+        attn = chunked_prefill_attention(q, slot_k, slot_v, start,
+                                         block_kv=cfg.block_kv)  # [C, H, Dh]
+        kc_new = jax.lax.dynamic_update_slice(kc, slot_k[None], (slot, 0, 0, 0))
+        vc_new = jax.lax.dynamic_update_slice(vc, slot_v[None], (slot, 0, 0, 0))
+        x = x + (attn.reshape(C, -1) @ out_w + out_b) * vmask
+        h2 = _layer_norm(x, ln2_s, ln2_b)
+        x = x + (_gelu(h2 @ ff1_w + ff1_b) @ ff2_w + ff2_b) * vmask
+        return x, (kc_new, vc_new)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        lambda carry, sc: layer(carry, sc), x, stacked + (k_cache, v_cache))
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    logits = x @ p["tok_emb"].T                                 # [C, V]
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    next_token = jnp.argmax(logits[last], axis=-1).astype(jnp.int32)
+    next_token = jnp.reshape(next_token, (1,))
+    if return_logits:
+        return next_token, k_new, v_new, logits
+    return next_token, k_new, v_new
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Single-array serving state
+#
+# The rust runtime chains executions device-side via PJRT buffers. The CPU
+# PJRT plugin returns multi-output computations as ONE tuple buffer, which
+# the xla crate cannot feed back as an input — so the serving functions take
+# and return a SINGLE f32 state vector:
+#
+#   state = [ k_cache.flat | v_cache.flat | last_tokens (as f32) ]
+#
+# Token ids (< 2^24) are exactly representable in f32. A tiny companion
+# executable `read_tokens` extracts the [B]-token tail so the rust side
+# transfers only B ints per step, never the cache.
+# ---------------------------------------------------------------------------
+
+def state_size(cfg: ModelConfig, batch: int) -> int:
+    cache = cfg.n_layers * batch * cfg.max_seq * cfg.n_heads * cfg.d_head
+    return 2 * cache + batch
+
+
+def pack_state(cfg: ModelConfig, k, v, tokens) -> jnp.ndarray:
+    return jnp.concatenate([
+        k.reshape(-1), v.reshape(-1),
+        tokens.astype(jnp.float32),
+    ])
+
+
+def unpack_state(cfg: ModelConfig, state, batch: int):
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head)
+    n = int(np.prod(shape))
+    k = state[:n].reshape(shape)
+    v = state[n:2 * n].reshape(shape)
+    tokens = state[2 * n:].astype(jnp.int32)
+    return k, v, tokens
+
+
+def empty_state(cfg: ModelConfig, batch: int) -> jnp.ndarray:
+    return jnp.zeros((state_size(cfg, batch),), jnp.float32)
+
+
+def decode_state(cfg: ModelConfig, params, state, pos, active):
+    """Decode step over the packed state. The input token of each active
+    slot is the token stored in the state's tail (greedy self-feeding);
+    inactive slots keep their stored token and cache rows untouched."""
+    batch = pos.shape[0]
+    k, v, tokens = unpack_state(cfg, state, batch)
+    next_tokens, k, v = decode_step(cfg, params, k, v, tokens, pos, active)
+    kept = jnp.where(active > 0, next_tokens, tokens)
+    return pack_state(cfg, k, v, kept)
+
+
+def prefill_state(cfg: ModelConfig, params, state, tokens, slot, start,
+                  n_valid, batch: int):
+    """Chunked prefill over the packed state; writes the slot's greedy
+    next-token into the state tail (meaningful on the final chunk)."""
+    k, v, last = unpack_state(cfg, state, batch)
+    nt, k, v = prefill_chunk(cfg, params, k, v, tokens, slot, start, n_valid)
+    last = last.at[jnp.reshape(slot, ())].set(nt[0])
+    return pack_state(cfg, k, v, last)
+
+
+def read_tokens(cfg: ModelConfig, state, batch: int):
+    """Extract the [B] last-token tail as int32 (the only per-step
+    device→host transfer)."""
+    return state[-batch:].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Reference full-sequence forward (oracle for prefill/decode consistency)
+# ---------------------------------------------------------------------------
+
+def forward_full(cfg: ModelConfig, params, tokens):
+    """Plain causal forward over a full sequence [T] — no cache, no pallas.
+
+    Used by tests: prefill+decode through the cache must reproduce these
+    logits position-by-position.
+    """
+    p = _unpack(cfg, params)
+    T = tokens.shape[0]
+    H, Dh = cfg.n_heads, cfg.d_head
+    x = p["tok_emb"][tokens] + p["pos_emb"][jnp.arange(T)]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    for i in range(cfg.n_layers):
+        h = _layer_norm(x, p["ln1_scale"][i], p["ln1_bias"][i])
+        qkv = h @ p["qkv_w"][i] + p["qkv_b"][i]
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(T, H, Dh)
+        k = k.reshape(T, H, Dh)
+        v = v.reshape(T, H, Dh)
+        s = jnp.einsum("qhd,khd->hqk", q, k) / math.sqrt(Dh)
+        s = jnp.where(mask[None], s, -1e30)
+        a = jax.nn.softmax(s, axis=-1)
+        attn = jnp.einsum("hqk,khd->qhd", a, v).reshape(T, -1)
+        x = x + attn @ p["out_w"][i] + p["out_b"][i]
+        h2 = _layer_norm(x, p["ln2_scale"][i], p["ln2_bias"][i])
+        x = x + _gelu(h2 @ p["ff1_w"][i] + p["ff1_b"][i]) @ p["ff2_w"][i] \
+            + p["ff2_b"][i]
+    x = _layer_norm(x, p["lnf_scale"], p["lnf_bias"])
+    return x @ p["tok_emb"].T                                   # [T, V]

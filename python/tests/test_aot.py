@@ -1,0 +1,108 @@
+"""AOT pipeline tests: manifest integrity, weight blob layout, HLO text
+shape. Uses the micro config so a full build runs in ~1 s."""
+
+import json
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    manifest = aot.build(out, "micro", buckets=[1, 2], chunks=[4],
+                         seed=123, verbose=False)
+    return out, manifest
+
+
+def test_manifest_matches_disk(built):
+    out, manifest = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    for name in manifest["decode"].values():
+        assert os.path.exists(os.path.join(out, name))
+    for per_bucket in manifest["prefill"].values():
+        for name in per_bucket.values():
+            assert os.path.exists(os.path.join(out, name))
+
+
+def test_weight_blob_layout(built):
+    out, manifest = built
+    cfg = M.CONFIGS["micro"]
+    specs = M.param_specs(cfg)
+    table = manifest["weights"]
+    assert [w["name"] for w in table] == [n for n, _ in specs]
+    blob_size = os.path.getsize(os.path.join(out, "weights.bin"))
+    # Offsets are contiguous and cover the file exactly.
+    offset = 0
+    for w, (_, shape) in zip(table, specs):
+        assert w["offset_bytes"] == offset
+        assert w["size_bytes"] == 4 * int(np.prod(shape))
+        assert w["shape"] == list(shape)
+        offset += w["size_bytes"]
+    assert offset == blob_size == 4 * cfg.param_count
+
+
+def test_weight_blob_values_roundtrip(built):
+    out, manifest = built
+    params = M.init_params(M.CONFIGS["micro"], seed=123)
+    with open(os.path.join(out, "weights.bin"), "rb") as f:
+        blob = f.read()
+    for w, arr in zip(manifest["weights"], params):
+        got = np.frombuffer(
+            blob[w["offset_bytes"]:w["offset_bytes"] + w["size_bytes"]],
+            dtype="<f4").reshape(w["shape"])
+        np.testing.assert_array_equal(got, arr)
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    out, manifest = built
+    for name in manifest["decode"].values():
+        with open(os.path.join(out, name)) as f:
+            text = f.read()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text
+        # 16 weights + k + v + tokens + pos + active parameters
+        assert text.count("parameter(") >= 21
+
+
+def test_hlo_decode_param_shapes(built):
+    """The bucket's batch dim must appear in the cache parameter shape."""
+    out, manifest = built
+    cfg = M.CONFIGS["micro"]
+    for b, name in manifest["decode"].items():
+        with open(os.path.join(out, name)) as f:
+            text = f.read()
+        cache_shape = (f"f32[{cfg.n_layers},{b},{cfg.max_seq},"
+                       f"{cfg.n_heads},{cfg.d_head}]")
+        assert cache_shape in text, f"{name}: missing {cache_shape}"
+        assert f"s32[{b}]" in text
+
+
+def test_manifest_model_section(built):
+    _, manifest = built
+    cfg = M.CONFIGS["micro"]
+    m = manifest["model"]
+    assert m["param_count"] == cfg.param_count
+    assert m["kv_bytes_per_token"] == cfg.kv_bytes_per_token
+    assert manifest["bos_id"] == M.BOS_ID
+    assert manifest["pad_id"] == M.PAD_ID
+    assert manifest["buckets"] == [1, 2]
+    assert manifest["chunk_sizes"] == [4]
+
+
+def test_build_is_deterministic(tmp_path):
+    a = aot.build(str(tmp_path / "a"), "micro", [1], [4], seed=9,
+                  verbose=False)
+    b = aot.build(str(tmp_path / "b"), "micro", [1], [4], seed=9,
+                  verbose=False)
+    assert a["weights"] == b["weights"]
+    wa = open(tmp_path / "a" / "weights.bin", "rb").read()
+    wb = open(tmp_path / "b" / "weights.bin", "rb").read()
+    assert wa == wb

@@ -1,0 +1,197 @@
+"""L1 correctness: Pallas kernels vs. the pure-jnp oracles in kernels/ref.py.
+
+Hypothesis sweeps shapes, dtypes, block sizes and length patterns; a handful
+of deterministic edge-case tests pin down the corners (empty slots, single
+token, full cache, tail blocks).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import (_pick_block, chunked_prefill_attention,
+                                       decode_attention)
+from compile.kernels.ref import (chunked_prefill_attention_ref,
+                                 decode_attention_ref)
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+TOL16 = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    s=st.integers(1, 96),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    block=st.sampled_from([4, 16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_decode_attention_matches_ref(b, s, h, dh, block, seed):
+    rng = np.random.default_rng(seed)
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    lengths = jnp.asarray(rng.integers(0, s + 1, size=b), jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=block)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_all_inactive():
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (3, 2, 8))
+    k = _rand(rng, (3, 16, 2, 8))
+    v = _rand(rng, (3, 16, 2, 8))
+    lengths = jnp.zeros(3, jnp.int32)
+    out = decode_attention(q, k, v, lengths)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+def test_decode_attention_single_token():
+    """length=1 attends only to position 0 → output == v[:, 0]."""
+    rng = np.random.default_rng(1)
+    q = _rand(rng, (2, 2, 8))
+    k = _rand(rng, (2, 8, 2, 8))
+    v = _rand(rng, (2, 8, 2, 8))
+    lengths = jnp.ones(2, jnp.int32)
+    out = decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[:, 0]), **TOL)
+
+
+def test_decode_attention_full_cache():
+    rng = np.random.default_rng(2)
+    b, s, h, dh = 4, 64, 8, 32
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    lengths = jnp.full((b,), s, jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=16)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_decode_attention_large_scores_stable():
+    """Online softmax must not overflow with large score magnitudes."""
+    rng = np.random.default_rng(3)
+    q = _rand(rng, (1, 1, 8)) * 40.0
+    k = _rand(rng, (1, 32, 1, 8)) * 40.0
+    v = _rand(rng, (1, 32, 1, 8))
+    lengths = jnp.asarray([32], jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=8)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_block_invariance():
+    """The result must not depend on the KV block size."""
+    rng = np.random.default_rng(4)
+    b, s, h, dh = 2, 48, 2, 16
+    q = _rand(rng, (b, h, dh))
+    k = _rand(rng, (b, s, h, dh))
+    v = _rand(rng, (b, s, h, dh))
+    lengths = jnp.asarray([17, 48], jnp.int32)
+    outs = [np.asarray(decode_attention(q, k, v, lengths, block_kv=bk))
+            for bk in (1, 3, 16, 48)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_decode_attention_float16(seed):
+    rng = np.random.default_rng(seed)
+    b, s, h, dh = 2, 32, 2, 16
+    q = _rand(rng, (b, h, dh), np.float16)
+    k = _rand(rng, (b, s, h, dh), np.float16)
+    v = _rand(rng, (b, s, h, dh), np.float16)
+    lengths = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+    out = decode_attention(q, k, v, lengths, block_kv=8)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert out.dtype == jnp.float16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL16)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    c=st.integers(1, 24),
+    h=st.integers(1, 4),
+    dh=st.sampled_from([4, 8, 16]),
+    extra=st.integers(0, 64),
+    start=st.integers(0, 48),
+    block=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunk_attention_matches_ref(c, h, dh, extra, start, block, seed):
+    rng = np.random.default_rng(seed)
+    s = start + c + extra                 # cache big enough for the chunk
+    q = _rand(rng, (c, h, dh))
+    k = _rand(rng, (s, h, dh))
+    v = _rand(rng, (s, h, dh))
+    out = chunked_prefill_attention(q, k, v, start, block_kv=block)
+    ref = chunked_prefill_attention_ref(q, k, v, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+
+
+def test_chunk_attention_start_zero_is_causal_self_attention():
+    """start=0 over exactly C cache rows == plain causal self-attention."""
+    rng = np.random.default_rng(5)
+    c, h, dh = 8, 2, 16
+    q = _rand(rng, (c, h, dh))
+    k = _rand(rng, (c, h, dh))
+    v = _rand(rng, (c, h, dh))
+    out = chunked_prefill_attention(q, k, v, 0, block_kv=4)
+    ref = chunked_prefill_attention_ref(q, k, v, 0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **TOL)
+    # First query sees only position 0.
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(v[0]), **TOL)
+
+
+def test_chunk_attention_is_prefix_consistent():
+    """Splitting one chunk into two must give the same outputs."""
+    rng = np.random.default_rng(6)
+    h, dh, total = 2, 8, 16
+    s = 32
+    k = _rand(rng, (s, h, dh))
+    v = _rand(rng, (s, h, dh))
+    q = _rand(rng, (total, h, dh))
+    whole = np.asarray(chunked_prefill_attention(q, k, v, 0, block_kv=8))
+    first = np.asarray(chunked_prefill_attention(q[:8], k, v, 0, block_kv=8))
+    second = np.asarray(chunked_prefill_attention(q[8:], k, v, 8, block_kv=8))
+    np.testing.assert_allclose(whole[:8], first, **TOL)
+    np.testing.assert_allclose(whole[8:], second, **TOL)
+
+
+# ---------------------------------------------------------------------------
+# block picker
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(total=st.integers(1, 4096), desired=st.integers(1, 512))
+def test_pick_block_divides(total, desired):
+    b = _pick_block(total, desired)
+    assert 1 <= b <= max(1, min(desired, total))
+    assert total % b == 0
+
+
+@pytest.mark.parametrize("total,desired,expect", [
+    (256, 64, 64), (96, 64, 48), (7, 64, 7), (1, 8, 1), (100, 64, 50),
+])
+def test_pick_block_cases(total, desired, expect):
+    assert _pick_block(total, desired) == expect

@@ -1,0 +1,178 @@
+"""L2 correctness: the cached prefill/decode path must reproduce the plain
+causal forward pass, position by position, across chunkings and batch
+layouts. This is the guarantee the rust engine relies on when it mixes
+chunked prefills and decodes over shared cache buffers."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+CFG = M.CONFIGS["micro"]
+PARAMS = [jnp.asarray(a) for a in M.init_params(CFG, seed=7)]
+
+
+def _toks(rng, n):
+    return jnp.asarray(rng.integers(0, 256, n), jnp.int32)
+
+
+def test_param_specs_count_and_order():
+    specs = M.param_specs(CFG)
+    names = [n for n, _ in specs]
+    assert names[0] == "tok_emb" and names[-1] == "lnf_bias"
+    assert len(set(names)) == len(names)
+    assert CFG.param_count == sum(int(np.prod(s)) for _, s in specs)
+
+
+def test_init_params_deterministic():
+    a = M.init_params(CFG, seed=3)
+    b = M.init_params(CFG, seed=3)
+    c = M.init_params(CFG, seed=4)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_kv_bytes_per_token():
+    # 2 (K,V) * layers * heads * d_head * 4 bytes
+    assert CFG.kv_bytes_per_token == 2 * CFG.n_layers * CFG.n_heads \
+        * CFG.d_head * 4
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_full_forward_causality(t, seed):
+    """Changing a future token must not change past logits."""
+    rng = np.random.default_rng(seed)
+    toks = _toks(rng, t)
+    logits = M.forward_full(CFG, PARAMS, toks)
+    toks2 = toks.at[t - 1].set((int(toks[t - 1]) + 1) % 256)
+    logits2 = M.forward_full(CFG, PARAMS, toks2)
+    np.testing.assert_allclose(np.asarray(logits[:t - 1]),
+                               np.asarray(logits2[:t - 1]), rtol=1e-5,
+                               atol=1e-5)
+    assert not np.allclose(np.asarray(logits[t - 1]),
+                           np.asarray(logits2[t - 1]))
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    prompt_len=st.integers(1, 12),
+    n_decode=st.integers(1, 6),
+    chunk=st.sampled_from([2, 4, 8]),
+    slot=st.integers(0, 2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_prefill_decode_matches_full_forward(prompt_len, n_decode, chunk,
+                                             slot, seed):
+    """Chunked prefill + decode through the KV cache == full forward."""
+    rng = np.random.default_rng(seed)
+    total = prompt_len + n_decode
+    toks = _toks(rng, total)
+    ref_logits = np.asarray(M.forward_full(CFG, PARAMS, toks))
+
+    B = 3
+    k, v = M.empty_cache(CFG, B)
+    nt = None
+    for c0 in range(0, prompt_len, chunk):
+        n_valid = min(chunk, prompt_len - c0)
+        padded = np.full(chunk, M.PAD_ID, np.int32)
+        padded[:n_valid] = np.asarray(toks[c0:c0 + n_valid])
+        nt, k, v = M.prefill_chunk(
+            CFG, PARAMS, k, v, jnp.asarray(padded), jnp.int32(slot),
+            jnp.int32(c0), jnp.int32(n_valid))
+    assert int(nt[0]) == int(np.argmax(ref_logits[prompt_len - 1]))
+
+    for t in range(prompt_len, total):
+        tokens = jnp.full((B,), M.PAD_ID, jnp.int32).at[slot].set(toks[t])
+        pos = jnp.zeros((B,), jnp.int32).at[slot].set(t)
+        active = jnp.zeros((B,), jnp.int32).at[slot].set(1)
+        ntk, k, v, logits = M.decode_step(CFG, PARAMS, k, v, tokens, pos,
+                                          active, return_logits=True)
+        np.testing.assert_allclose(np.asarray(logits[slot]), ref_logits[t],
+                                   rtol=5e-4, atol=5e-4)
+        assert int(ntk[slot]) == int(np.argmax(ref_logits[t]))
+
+
+def test_decode_inactive_slots_unchanged():
+    """Inactive slots must not corrupt their cache rows or emit tokens."""
+    rng = np.random.default_rng(11)
+    B = 4
+    k, v = M.empty_cache(CFG, B)
+    # Prefill slot 2 so its cache is non-trivial.
+    toks = _toks(rng, 4)
+    _, k, v = M.prefill_chunk(CFG, PARAMS, k, v, toks, jnp.int32(2),
+                              jnp.int32(0), jnp.int32(4))
+    k0, v0 = np.asarray(k), np.asarray(v)
+    # Decode with only slot 1 active.
+    tokens = jnp.asarray([M.PAD_ID, 42, M.PAD_ID, M.PAD_ID], jnp.int32)
+    pos = jnp.asarray([0, 0, 0, 0], jnp.int32)
+    active = jnp.asarray([0, 1, 0, 0], jnp.int32)
+    nt, k1, v1 = M.decode_step(CFG, PARAMS, k, v, tokens, pos, active)
+    k1, v1 = np.asarray(k1), np.asarray(v1)
+    # Slot 2's rows are untouched; slot 1's position 0 was written.
+    np.testing.assert_array_equal(k1[:, 2], k0[:, 2])
+    np.testing.assert_array_equal(v1[:, 2], v0[:, 2])
+    assert np.any(k1[:, 1, 0] != k0[:, 1, 0])
+    assert int(nt[0]) == M.PAD_ID and int(nt[2]) == M.PAD_ID
+
+
+def test_decode_batch_order_independence():
+    """The same request must produce the same token regardless of which
+    slot it occupies or what other slots are doing (padding isolation)."""
+    rng = np.random.default_rng(12)
+    toks = _toks(rng, 5)
+
+    def run(slot, B):
+        k, v = M.empty_cache(CFG, B)
+        nt, k, v = M.prefill_chunk(CFG, PARAMS, k, v, toks, jnp.int32(slot),
+                                   jnp.int32(0), jnp.int32(5))
+        tokens = jnp.full((B,), M.PAD_ID, jnp.int32).at[slot].set(nt[0])
+        pos = jnp.zeros((B,), jnp.int32).at[slot].set(5)
+        active = jnp.zeros((B,), jnp.int32).at[slot].set(1)
+        nt2, _, _ = M.decode_step(CFG, PARAMS, k, v, tokens, pos, active)
+        return int(nt[0]), int(nt2[slot])
+
+    base = run(0, 1)
+    assert run(1, 2) == base
+    assert run(3, 4) == base
+
+
+def test_two_active_slots_do_not_interfere():
+    rng = np.random.default_rng(13)
+    ta, tb = _toks(rng, 6), _toks(rng, 3)
+    ref_a = int(np.argmax(np.asarray(M.forward_full(CFG, PARAMS, ta))[-1]))
+    ref_b = int(np.argmax(np.asarray(M.forward_full(CFG, PARAMS, tb))[-1]))
+    B = 2
+    k, v = M.empty_cache(CFG, B)
+    na, k, v = M.prefill_chunk(CFG, PARAMS, k, v, ta, jnp.int32(0),
+                               jnp.int32(0), jnp.int32(6))
+    nb, k, v = M.prefill_chunk(CFG, PARAMS, k, v, tb, jnp.int32(1),
+                               jnp.int32(0), jnp.int32(3))
+    assert (int(na[0]), int(nb[0])) == (ref_a, ref_b)
+
+
+def test_prefill_padded_tail_is_masked():
+    """A chunk padded past n_valid equals the unpadded prefill."""
+    rng = np.random.default_rng(14)
+    toks = _toks(rng, 5)
+    k1, v1 = M.empty_cache(CFG, 1)
+    nt1, k1, v1 = M.prefill_chunk(CFG, PARAMS, k1, v1, toks, jnp.int32(0),
+                                  jnp.int32(0), jnp.int32(5))
+    padded = jnp.concatenate([toks, jnp.full((3,), M.PAD_ID, jnp.int32)])
+    k2, v2 = M.empty_cache(CFG, 1)
+    nt2, k2, v2 = M.prefill_chunk(CFG, PARAMS, k2, v2, padded, jnp.int32(0),
+                                  jnp.int32(0), jnp.int32(5))
+    assert int(nt1[0]) == int(nt2[0])
+    np.testing.assert_allclose(np.asarray(k1)[:, 0, :5],
+                               np.asarray(k2)[:, 0, :5], rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("name", sorted(M.CONFIGS))
+def test_configs_are_consistent(name):
+    cfg = M.CONFIGS[name]
+    assert cfg.d_model % cfg.n_heads == 0
+    assert cfg.vocab == M.VOCAB_SIZE
+    assert cfg.param_count > 0

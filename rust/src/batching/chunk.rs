@@ -1,0 +1,158 @@
+//! Adaptive prefill chunk sizing for PD-fusion (chunked prefill) — the
+//! paper's Table II row 3: "our method is also valid for determining chunk
+//! size".
+//!
+//! In PD-fusion every engine step carries the running decode batch plus a
+//! slice of pending prefill tokens. The chunk budget trades prefill
+//! progress (TTFT) against step latency (TBT): bigger chunks inflate the
+//! step beyond `D_SLA`. This controller reuses the Algorithm 2 feedback
+//! structure with the chunk token budget as the decision variable.
+
+use crate::config::SchedulerConfig;
+use crate::telemetry::Observation;
+
+pub struct ChunkController {
+    d_sla: f64,
+    eps_d: f64,
+    min_chunk: u32,
+    max_chunk: u32,
+    alpha: u32,
+    delta: u32,
+    lo: u32,
+    hi: u32,
+    last: u32,
+}
+
+impl ChunkController {
+    /// `base_chunk` is the static chunk size (also the fallback when no
+    /// SLA is configured).
+    pub fn new(cfg: &SchedulerConfig, base_chunk: u32) -> Self {
+        let max_chunk = base_chunk * 8;
+        let min_chunk = (base_chunk / 8).max(8);
+        ChunkController {
+            d_sla: cfg.d_sla.unwrap_or(f64::INFINITY),
+            eps_d: cfg.eps_d,
+            min_chunk,
+            max_chunk,
+            alpha: (cfg.alpha.max(1)) * 4, // token-granular, scale up
+            delta: cfg.delta * 4,
+            lo: min_chunk,
+            hi: max_chunk,
+            last: base_chunk,
+        }
+    }
+
+    pub fn bounds(&self) -> (u32, u32) {
+        (self.min_chunk, self.max_chunk)
+    }
+
+    /// Decide the next step's prefill token budget.
+    pub fn decide(&mut self, obs: &Observation) -> u32 {
+        if !self.d_sla.is_finite() {
+            return self.last;
+        }
+        let tau = match obs.recent_decode_latency {
+            Some(t) => t,
+            None => return self.last,
+        };
+        let cur = self.last;
+        if tau > self.d_sla + self.eps_d {
+            self.hi = cur.max(self.lo.saturating_add(self.alpha));
+            self.lo = self.lo.saturating_sub(self.delta).max(self.min_chunk);
+        } else if tau < self.d_sla - self.eps_d {
+            self.lo = cur.min(self.hi.saturating_sub(self.alpha));
+            self.hi = (self.hi + self.delta).min(self.max_chunk);
+        } else {
+            self.hi = (cur + self.alpha / 2).min(self.max_chunk);
+            self.lo = cur.saturating_sub(self.alpha / 2).max(self.min_chunk);
+        }
+        self.lo = self.lo.clamp(self.min_chunk, self.max_chunk);
+        self.hi = self.hi.clamp(self.min_chunk, self.max_chunk);
+        if self.lo > self.hi {
+            std::mem::swap(&mut self.lo, &mut self.hi);
+        }
+        self.last = (self.lo + self.hi) / 2;
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::test_obs;
+    use crate::telemetry::Observation;
+
+    fn cfg(d_sla: Option<f64>) -> SchedulerConfig {
+        SchedulerConfig { d_sla, ..SchedulerConfig::default() }
+    }
+
+    fn obs(tau: Option<f64>) -> Observation {
+        let mut o = test_obs(1_000_000, 0, 4, 1);
+        o.recent_decode_latency = tau;
+        o
+    }
+
+    #[test]
+    fn static_without_sla() {
+        let mut c = ChunkController::new(&cfg(None), 64);
+        for _ in 0..5 {
+            assert_eq!(c.decide(&obs(Some(0.2))), 64);
+        }
+    }
+
+    #[test]
+    fn no_latency_sample_keeps_last() {
+        let mut c = ChunkController::new(&cfg(Some(0.05)), 64);
+        assert_eq!(c.decide(&obs(None)), 64);
+    }
+
+    #[test]
+    fn over_sla_shrinks_chunk() {
+        let mut c = ChunkController::new(&cfg(Some(0.05)), 128);
+        let mut cur = 128;
+        for _ in 0..20 {
+            cur = c.decide(&obs(Some(0.120)));
+        }
+        let (min_chunk, _) = c.bounds();
+        assert!(cur <= 64, "chunk={cur}");
+        assert!(cur >= min_chunk);
+    }
+
+    #[test]
+    fn under_sla_grows_chunk() {
+        let mut c = ChunkController::new(&cfg(Some(0.05)), 64);
+        let mut cur = 64;
+        for _ in 0..30 {
+            cur = c.decide(&obs(Some(0.010)));
+        }
+        let (_, max_chunk) = c.bounds();
+        assert!(cur > 256, "chunk={cur}");
+        assert!(cur <= max_chunk);
+    }
+
+    #[test]
+    fn converges_under_linear_step_model() {
+        // step latency = 20ms + 0.1ms per prefill token.
+        let d_sla = 0.05;
+        let target = ((d_sla - 0.020) / 0.0001) as u32; // 300 tokens
+        let mut c = ChunkController::new(&cfg(Some(d_sla)), 64);
+        let mut chunk = 64u32;
+        for _ in 0..200 {
+            let tau = 0.020 + 0.0001 * chunk as f64;
+            chunk = c.decide(&obs(Some(tau)));
+        }
+        let err = (chunk as f64 - target as f64).abs() / target as f64;
+        assert!(err < 0.35, "chunk={chunk} target={target}");
+    }
+
+    #[test]
+    fn bounds_always_respected() {
+        let mut c = ChunkController::new(&cfg(Some(0.05)), 64);
+        let (lo, hi) = c.bounds();
+        for i in 0..100 {
+            let tau = if i % 3 == 0 { 0.2 } else { 0.001 };
+            let chunk = c.decide(&obs(Some(tau)));
+            assert!((lo..=hi).contains(&chunk), "chunk={chunk}");
+        }
+    }
+}

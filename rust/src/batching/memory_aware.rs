@@ -1,0 +1,283 @@
+//! Algorithm 1 — memory-constrained dynamic batching.
+//!
+//! The controller bounds the probability that the steady-state token
+//! population `S = Σᵢ (l_in,i + l_out,i)` exceeds the KV capacity `η`:
+//! with per-request moments `μ₁ = E[l_in] + E[l_out]`,
+//! `σ₁² = Var(l_in) + Var(l_out)` and the CLT approximation
+//! `S ~ N(b·μ₁, b·σ₁²)`, requiring `P(S > η) ≤ ε_M` gives
+//!
+//! ```text
+//!     b·μ₁ + θ·√b·σ₁ ≤ η ,         θ = Θ⁻¹(1 − ε_M)
+//! ```
+//!
+//! * **Exact** (paper eq. 12, flagged as future work): solve the quadratic
+//!   in √b directly —
+//!   `b ≤ ((√(θ²σ₁² + 4·μ₁·η) − θ·σ₁) / (2·μ₁))²`.
+//! * **Linear** (paper eq. 13–14, the deployed heuristic): freeze a safety
+//!   buffer `L0` and use the O(1) rule `b = ⌊(η − L0)/μ₁⌋`, refreshing
+//!   `L0` periodically. Note: the paper prints `L0 = η − (θσ_S + μ_S)`,
+//!   which substituted into eq. 14 is self-referential
+//!   (`b_t = b_{t-1} + θσ_S/μ₁`, divergent). We implement the evident
+//!   intent — `L0 = θ·σ_S`, i.e. reserve CLT headroom for fluctuations —
+//!   with `σ_S` evaluated at the previous batch size, exactly the quantity
+//!   eq. 10 refreshes online. The `memory-aware-exact` variant exists
+//!   precisely to ablate this (see benches/bench_ablations.rs).
+//!
+//! Guard (Alg. 1 lines 4–6): only adjust when there are both running
+//! decodes (`N^d > 0`, so moments are live) and pending prefill work
+//! (`N^p > 0`, otherwise no admission decision is needed); always return
+//! within `[max(b, N^d) … B_max]`.
+
+use super::BatchPolicy;
+use crate::config::SchedulerConfig;
+use crate::telemetry::Observation;
+use crate::util::stats::normal_quantile;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryAwareVariant {
+    Linear,
+    Exact,
+}
+
+pub struct MemoryAwarePolicy {
+    variant: MemoryAwareVariant,
+    b_min: u32,
+    b_max: u32,
+    theta: f64,
+    l0_refresh: u32,
+    // state
+    b_prev: u32,
+    l0: f64,
+    decisions_since_refresh: u32,
+    pub stat_decisions: u64,
+    pub stat_adjustments: u64,
+}
+
+impl MemoryAwarePolicy {
+    pub fn new(cfg: &SchedulerConfig, variant: MemoryAwareVariant) -> Self {
+        MemoryAwarePolicy {
+            variant,
+            b_min: cfg.b_min,
+            b_max: cfg.b_max,
+            theta: normal_quantile(1.0 - cfg.eps_mem),
+            l0_refresh: cfg.l0_refresh_decisions,
+            b_prev: cfg.b_min,
+            l0: 0.0,
+            decisions_since_refresh: u32::MAX, // force refresh on first call
+            stat_decisions: 0,
+            stat_adjustments: 0,
+        }
+    }
+
+    /// σ_S at batch size b: √(b · (Var(l_in) + Var(l_out))).
+    fn sigma_s(&self, obs: &Observation, b: f64) -> f64 {
+        (b * (obs.var_in + obs.var_out)).sqrt()
+    }
+
+    fn mu1(obs: &Observation) -> f64 {
+        (obs.mean_in + obs.mean_out).max(1.0)
+    }
+
+    /// Paper eq. 12: the rigorous closed form.
+    fn decide_exact(&self, obs: &Observation) -> u32 {
+        let mu1 = Self::mu1(obs);
+        let sigma1 = (obs.var_in + obs.var_out).sqrt();
+        let eta = obs.eta_tokens as f64;
+        let ts = self.theta * sigma1;
+        let sqrt_b = ((ts * ts + 4.0 * mu1 * eta).sqrt() - ts) / (2.0 * mu1);
+        (sqrt_b * sqrt_b).floor() as u32
+    }
+
+    /// Paper eq. 14: the O(1) linear rule with the frozen buffer L0.
+    fn decide_linear(&mut self, obs: &Observation) -> u32 {
+        if self.decisions_since_refresh >= self.l0_refresh {
+            // Refresh L0 (Alg. 1 line 1) from the current moments at the
+            // previous batch size.
+            self.l0 = self.theta * self.sigma_s(obs, self.b_prev.max(1) as f64);
+            self.decisions_since_refresh = 0;
+        } else {
+            self.decisions_since_refresh += 1;
+        }
+        let mu1 = Self::mu1(obs);
+        let eta = obs.eta_tokens as f64;
+        ((eta - self.l0) / mu1).floor().max(0.0) as u32
+    }
+}
+
+impl BatchPolicy for MemoryAwarePolicy {
+    fn decide(&mut self, obs: &Observation) -> u32 {
+        self.stat_decisions += 1;
+        let mut b = self.b_prev;
+        // Alg. 1 line 4: adjust only when N^d > 0 and N^p > 0.
+        if obs.running_decode > 0 && obs.pending_prefill > 0 {
+            b = match self.variant {
+                MemoryAwareVariant::Linear => self.decide_linear(obs),
+                MemoryAwareVariant::Exact => self.decide_exact(obs),
+            };
+            self.stat_adjustments += 1;
+        }
+        // Alg. 1 line 6: b_t = min(max(b_t, N^d_{t-1}), B_max); plus the
+        // global floor B_min.
+        let b = b
+            .max(obs.running_decode)
+            .max(self.b_min)
+            .min(self.b_max);
+        self.b_prev = b;
+        b
+    }
+
+    fn label(&self) -> String {
+        match self.variant {
+            MemoryAwareVariant::Linear => "memory-aware(alg1-linear)".into(),
+            MemoryAwareVariant::Exact => "memory-aware(alg1-exact)".into(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::test_obs;
+    use crate::util::prop::check;
+
+    fn cfg() -> SchedulerConfig {
+        SchedulerConfig::default()
+    }
+
+    fn obs_with(eta: u64, mean: f64, var: f64, nd: u32, np: u32)
+                -> Observation {
+        let mut o = test_obs(eta, 0, nd, np);
+        o.mean_in = mean / 2.0;
+        o.mean_out = mean / 2.0;
+        o.var_in = var / 2.0;
+        o.var_out = var / 2.0;
+        o
+    }
+
+    #[test]
+    fn exact_satisfies_clt_bound() {
+        // The exact form must pick the largest b with b·μ1 + θ√b·σ1 ≤ η.
+        let cfg = cfg();
+        let mut p = MemoryAwarePolicy::new(&cfg, MemoryAwareVariant::Exact);
+        let o = obs_with(100_000, 400.0, 120.0 * 120.0, 8, 2);
+        let b = p.decide(&o) as f64;
+        let theta = normal_quantile(1.0 - cfg.eps_mem);
+        let mu1 = 400.0;
+        let sigma1 = 120.0;
+        let load = |x: f64| x * mu1 + theta * x.sqrt() * sigma1;
+        assert!(load(b) <= 100_000.0, "b={b} load={}", load(b));
+        assert!(load(b + 2.0) > 100_000.0, "b={b} not maximal");
+    }
+
+    #[test]
+    fn linear_close_to_exact_at_fixed_point() {
+        // After repeated decisions the linear rule's L0 (refreshed at the
+        // running b) should land near the exact solution.
+        let c = SchedulerConfig { l0_refresh_decisions: 1, ..cfg() };
+        let mut lin = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Linear);
+        let mut exa = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
+        let o = obs_with(80_000, 300.0, 90.0 * 90.0, 4, 1);
+        let be = exa.decide(&o);
+        let mut bl = 0;
+        for _ in 0..50 {
+            bl = lin.decide(&o);
+        }
+        let rel = (bl as f64 - be as f64).abs() / be as f64;
+        assert!(rel < 0.10, "linear {bl} vs exact {be}");
+    }
+
+    #[test]
+    fn holds_when_no_prefill_pending() {
+        // Alg. 1 line 4: no adjustment without pending prefill.
+        let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Linear);
+        let b1 = p.decide(&obs_with(50_000, 256.0, 32.0 * 32.0, 8, 3));
+        let o2 = obs_with(500, 256.0, 32.0 * 32.0, 8, 0); // tiny eta now
+        let b2 = p.decide(&o2);
+        assert_eq!(b2, b1.max(8), "must hold previous b when N^p == 0");
+    }
+
+    #[test]
+    fn never_below_running_decodes() {
+        let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Exact);
+        // eta so small the formula wants b≈1, but 40 decodes are running.
+        let o = obs_with(600, 500.0, 100.0, 40, 5);
+        assert_eq!(p.decide(&o), 40);
+    }
+
+    #[test]
+    fn respects_b_max() {
+        let c = SchedulerConfig { b_max: 64, ..cfg() };
+        let mut p = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
+        let o = obs_with(10_000_000, 100.0, 10.0, 8, 2);
+        assert_eq!(p.decide(&o), 64);
+    }
+
+    #[test]
+    fn tighter_eps_means_smaller_batch() {
+        let loose = SchedulerConfig { eps_mem: 0.2, ..cfg() };
+        let tight = SchedulerConfig { eps_mem: 0.001, ..cfg() };
+        let mut pl = MemoryAwarePolicy::new(&loose, MemoryAwareVariant::Exact);
+        let mut pt = MemoryAwarePolicy::new(&tight, MemoryAwareVariant::Exact);
+        let o = obs_with(60_000, 300.0, 200.0 * 200.0, 4, 2);
+        assert!(pt.decide(&o) < pl.decide(&o));
+    }
+
+    #[test]
+    fn zero_variance_uses_full_capacity() {
+        let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Exact);
+        let o = obs_with(25_600, 256.0, 0.0, 4, 2);
+        assert_eq!(p.decide(&o), 100); // exactly η/μ1
+    }
+
+    #[test]
+    fn prop_bounds_always_hold() {
+        check("alg1 bounds", 300, |g| {
+            let c = SchedulerConfig {
+                b_min: g.u64(1..=8) as u32,
+                b_max: g.u64(16..=512) as u32,
+                eps_mem: g.f64(0.001, 0.3),
+                l0_refresh_decisions: g.u64(1..=32) as u32,
+                ..cfg()
+            };
+            let variant = if g.bool() {
+                MemoryAwareVariant::Linear
+            } else {
+                MemoryAwareVariant::Exact
+            };
+            let mut p = MemoryAwarePolicy::new(&c, variant);
+            for _ in 0..30 {
+                let mut o = test_obs(g.u64(100..=1_000_000), 0,
+                                     g.u64(0..=300) as u32,
+                                     g.u64(0..=20) as u32);
+                o.mean_in = g.f64(1.0, 2000.0);
+                o.mean_out = g.f64(1.0, 2000.0);
+                o.var_in = g.f64(0.0, 1e6);
+                o.var_out = g.f64(0.0, 1e6);
+                let b = p.decide(&o);
+                if b < c.b_min || b > c.b_max {
+                    return false;
+                }
+                if o.running_decode <= c.b_max && b < o.running_decode.min(c.b_max) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn prop_exact_monotone_in_eta() {
+        check("alg1 monotone in eta", 200, |g| {
+            let c = cfg();
+            let mut p1 = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
+            let mut p2 = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
+            let eta = g.u64(1_000..=500_000);
+            let extra = g.u64(0..=100_000);
+            let mean = g.f64(10.0, 1000.0);
+            let var = g.f64(0.0, 1e5);
+            let o1 = obs_with(eta, mean, var, 1, 1);
+            let o2 = obs_with(eta + extra, mean, var, 1, 1);
+            p1.decide(&o1) <= p2.decide(&o2)
+        });
+    }
+}

@@ -1,0 +1,156 @@
+//! Batch-size controllers — the paper's contribution, as pluggable
+//! policies consumed by the scheduler every decision interval.
+//!
+//! * [`static_policy`] — the vLLM-style baselines (greedy cap / hard fixed).
+//! * [`memory_aware`] — Algorithm 1 (linear deployable form and the
+//!   rigorous eq. 12 closed form).
+//! * [`sla`] — Algorithm 2 (latency-feedback noisy binary search).
+//! * [`chunk`] — the PD-fusion adaptive chunk-size controller.
+//! * [`CombinedPolicy`] — `b*_t = min(b_mem, b_SLA)`.
+
+pub mod chunk;
+pub mod memory_aware;
+pub mod sla;
+pub mod static_policy;
+
+use crate::config::{PolicyKind, SchedulerConfig};
+use crate::telemetry::Observation;
+
+pub use chunk::ChunkController;
+pub use memory_aware::{MemoryAwarePolicy, MemoryAwareVariant};
+pub use sla::SlaFeedbackPolicy;
+pub use static_policy::{StaticFixedPolicy, StaticGreedyPolicy};
+
+/// A batch-size controller. `decide` returns the target concurrent batch
+/// size `b_t` for the next scheduling interval.
+pub trait BatchPolicy: Send {
+    fn decide(&mut self, obs: &Observation) -> u32;
+    fn label(&self) -> String;
+    /// Whether the scheduler should gate admissions strictly at `b_t`
+    /// (dynamic policies) or admit greedily while memory allows (the vLLM
+    /// static-greedy baseline).
+    fn gates_admission(&self) -> bool {
+        true
+    }
+}
+
+/// Instantiate the policy named by the config.
+pub fn build_policy(cfg: &SchedulerConfig) -> Box<dyn BatchPolicy> {
+    match &cfg.policy {
+        PolicyKind::StaticGreedy { max } => {
+            Box::new(StaticGreedyPolicy::new(*max))
+        }
+        PolicyKind::StaticFixed { batch } => {
+            Box::new(StaticFixedPolicy::new(*batch))
+        }
+        PolicyKind::MemoryAware => Box::new(MemoryAwarePolicy::new(
+            cfg,
+            MemoryAwareVariant::Linear,
+        )),
+        PolicyKind::MemoryAwareExact => Box::new(MemoryAwarePolicy::new(
+            cfg,
+            MemoryAwareVariant::Exact,
+        )),
+        PolicyKind::SlaFeedback => Box::new(SlaFeedbackPolicy::new(cfg)),
+        PolicyKind::Combined => Box::new(CombinedPolicy::new(cfg)),
+    }
+}
+
+/// `b*_t = min(b^mem_t, b^SLA_t)` — Section III-B.
+pub struct CombinedPolicy {
+    mem: MemoryAwarePolicy,
+    sla: SlaFeedbackPolicy,
+}
+
+impl CombinedPolicy {
+    pub fn new(cfg: &SchedulerConfig) -> Self {
+        CombinedPolicy {
+            mem: MemoryAwarePolicy::new(cfg, MemoryAwareVariant::Linear),
+            sla: SlaFeedbackPolicy::new(cfg),
+        }
+    }
+}
+
+impl BatchPolicy for CombinedPolicy {
+    fn decide(&mut self, obs: &Observation) -> u32 {
+        let b_mem = self.mem.decide(obs);
+        let b_sla = self.sla.decide(obs);
+        b_mem.min(b_sla)
+    }
+
+    fn label(&self) -> String {
+        "combined(min(alg1,alg2))".into()
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_obs(eta: u64, used: u64, nd: u32, np: u32) -> Observation {
+    Observation {
+        now: 0.0,
+        eta_tokens: eta,
+        used_tokens: used,
+        mean_in: 128.0,
+        mean_out: 128.0,
+        var_in: 64.0 * 64.0,
+        var_out: 64.0 * 64.0,
+        length_samples: 100,
+        recent_decode_latency: Some(0.04),
+        recent_decode_batch: Some(nd as f64),
+        running_decode: nd,
+        pending_prefill: np,
+        waiting: 10,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerConfig;
+
+    fn cfg_with_sla() -> SchedulerConfig {
+        SchedulerConfig {
+            d_sla: Some(0.05),
+            ..SchedulerConfig::default()
+        }
+    }
+
+    #[test]
+    fn factory_builds_each_kind() {
+        for (kind, gates) in [
+            (PolicyKind::StaticGreedy { max: 64 }, false),
+            (PolicyKind::StaticFixed { batch: 8 }, true),
+            (PolicyKind::MemoryAware, true),
+            (PolicyKind::MemoryAwareExact, true),
+            (PolicyKind::SlaFeedback, true),
+            (PolicyKind::Combined, true),
+        ] {
+            let c = SchedulerConfig { policy: kind.clone(), ..cfg_with_sla() };
+            let p = build_policy(&c);
+            assert_eq!(p.gates_admission(), gates, "{}", p.label());
+        }
+    }
+
+    #[test]
+    fn combined_is_min_of_parts() {
+        let cfg = cfg_with_sla();
+        let mut combined = CombinedPolicy::new(&cfg);
+        let mut mem =
+            MemoryAwarePolicy::new(&cfg, MemoryAwareVariant::Linear);
+        let mut sla = SlaFeedbackPolicy::new(&cfg);
+        let obs = test_obs(100_000, 10_000, 16, 2);
+        let b = combined.decide(&obs);
+        let m = mem.decide(&obs);
+        let s = sla.decide(&obs);
+        assert_eq!(b, m.min(s));
+    }
+
+    #[test]
+    fn combined_respects_bounds_over_time() {
+        let cfg = cfg_with_sla();
+        let mut p = CombinedPolicy::new(&cfg);
+        for used in [0u64, 5_000, 20_000, 90_000, 99_000] {
+            let b = p.decide(&test_obs(100_000, used, 8, 1));
+            assert!(b >= cfg.b_min && b <= cfg.b_max, "b={b}");
+        }
+    }
+}

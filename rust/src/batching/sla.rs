@@ -1,0 +1,217 @@
+//! Algorithm 2 — SLA-constrained dynamic batching.
+//!
+//! A noisy binary search over batch size, driven by the recent average
+//! decode latency `τ̄` versus the target `D_SLA` (±ε_D): when too slow the
+//! window drops (`b_high ← max(b̄, b_low + α)`), when too fast it rises
+//! (`b_low ← min(b̄, b_high − α)`), and inside the tolerance band it
+//! re-centres on `b̄` with width α. `δ` relaxes the opposite bound each
+//! step so the window never collapses onto a noise artefact. The decision
+//! is the window midpoint, clamped per Alg. 2 line 15.
+
+use super::BatchPolicy;
+use crate::config::SchedulerConfig;
+use crate::telemetry::Observation;
+
+pub struct SlaFeedbackPolicy {
+    d_sla: f64,
+    eps_d: f64,
+    b_min: u32,
+    b_max: u32,
+    alpha: u32,
+    delta: u32,
+    // search window state
+    b_low: u32,
+    b_high: u32,
+    pub stat_decisions: u64,
+}
+
+impl SlaFeedbackPolicy {
+    pub fn new(cfg: &SchedulerConfig) -> Self {
+        // A missing D_SLA means "unconstrained": the policy degenerates to
+        // B_max so that min(b_mem, b_sla) == b_mem in CombinedPolicy.
+        let d_sla = cfg.d_sla.unwrap_or(f64::INFINITY);
+        SlaFeedbackPolicy {
+            d_sla,
+            eps_d: cfg.eps_d,
+            b_min: cfg.b_min,
+            b_max: cfg.b_max,
+            alpha: cfg.alpha.max(1),
+            delta: cfg.delta,
+            b_low: cfg.b_min,
+            b_high: cfg.b_max,
+            stat_decisions: 0,
+        }
+    }
+
+    pub fn window(&self) -> (u32, u32) {
+        (self.b_low, self.b_high)
+    }
+}
+
+impl BatchPolicy for SlaFeedbackPolicy {
+    fn decide(&mut self, obs: &Observation) -> u32 {
+        self.stat_decisions += 1;
+        if !self.d_sla.is_finite() {
+            return self.b_max;
+        }
+        let (tau, b_bar) = match (obs.recent_decode_latency,
+                                  obs.recent_decode_batch) {
+            (Some(t), Some(b)) => (t, b),
+            // No decode samples yet: start from the window midpoint.
+            _ => {
+                let b = (self.b_low + self.b_high) / 2;
+                return b.max(obs.running_decode).max(self.b_min)
+                        .min(self.b_max);
+            }
+        };
+        let b_bar = b_bar.round() as u32;
+
+        if tau > self.d_sla + self.eps_d {
+            // Too slow: pull the ceiling down to the observed batch.
+            self.b_high = b_bar.max(self.b_low.saturating_add(self.alpha));
+            self.b_low = self.b_low.saturating_sub(self.delta).max(self.b_min);
+        } else if tau < self.d_sla - self.eps_d {
+            // Headroom: push the floor up to the observed batch.
+            self.b_low = b_bar.min(self.b_high.saturating_sub(self.alpha));
+            self.b_high = (self.b_high + self.delta).min(self.b_max);
+        } else {
+            // Inside the band: re-centre a width-α window on b̄.
+            self.b_high = (b_bar + self.alpha / 2).min(self.b_max);
+            self.b_low = b_bar.saturating_sub(self.alpha / 2).max(self.b_min);
+        }
+        // Keep the window ordered and inside the hard bounds.
+        self.b_low = self.b_low.clamp(self.b_min, self.b_max);
+        self.b_high = self.b_high.clamp(self.b_min, self.b_max);
+        if self.b_low > self.b_high {
+            std::mem::swap(&mut self.b_low, &mut self.b_high);
+        }
+
+        let b = (self.b_low + self.b_high) / 2;
+        // Alg. 2 line 15.
+        b.max(obs.running_decode).max(self.b_min).min(self.b_max)
+    }
+
+    fn label(&self) -> String {
+        format!("sla-feedback(D_SLA={:.0}ms)", self.d_sla * 1e3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::test_obs;
+    use crate::util::prop::check;
+
+    fn cfg(d_sla: f64) -> SchedulerConfig {
+        SchedulerConfig {
+            d_sla: Some(d_sla),
+            b_min: 1,
+            b_max: 256,
+            alpha: 16,
+            delta: 4,
+            ..SchedulerConfig::default()
+        }
+    }
+
+    fn obs(tau: f64, batch: f64, nd: u32) -> Observation {
+        let mut o = test_obs(1_000_000, 0, nd, 1);
+        o.recent_decode_latency = Some(tau);
+        o.recent_decode_batch = Some(batch);
+        o
+    }
+
+    #[test]
+    fn no_sla_returns_bmax() {
+        let c = SchedulerConfig { d_sla: None, ..SchedulerConfig::default() };
+        let mut p = SlaFeedbackPolicy::new(&c);
+        assert_eq!(p.decide(&obs(1.0, 10.0, 0)), c.b_max);
+    }
+
+    #[test]
+    fn cold_start_uses_midpoint() {
+        let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
+        let mut o = test_obs(1_000_000, 0, 0, 0);
+        o.recent_decode_latency = None;
+        o.recent_decode_batch = None;
+        assert_eq!(p.decide(&o), (1 + 256) / 2);
+    }
+
+    /// Closed-loop convergence: with a linear latency model
+    /// D(b) = c0 + c1·b, the feedback loop must settle near the batch size
+    /// where D(b) == D_SLA (the paper's Fig. 3 reading: 50 ms → b ≈ 100).
+    #[test]
+    fn converges_to_sla_batch_under_linear_model() {
+        let c0 = 0.0269;
+        let c1 = 0.000231;
+        let d_sla = 0.050;
+        let target = (d_sla - c0) / c1; // ≈ 100
+        let mut p = SlaFeedbackPolicy::new(&cfg(d_sla));
+        let mut b = 128u32;
+        for _ in 0..200 {
+            let tau = c0 + c1 * b as f64;
+            b = p.decide(&obs(tau, b as f64, 0));
+        }
+        let err = (b as f64 - target).abs() / target;
+        assert!(err < 0.20, "settled at b={b}, target {target:.0}");
+        // And the settled latency respects the SLA within tolerance + one α
+        // step of slack.
+        let settled = c0 + c1 * b as f64;
+        assert!(settled < d_sla + 0.004, "settled latency {settled}");
+    }
+
+    #[test]
+    fn over_sla_shrinks_under_sla_grows() {
+        let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
+        let b0 = p.decide(&obs(0.080, 128.0, 0)); // way over SLA
+        let b1 = p.decide(&obs(0.080, b0 as f64, 0));
+        assert!(b1 <= b0, "{b1} > {b0}");
+        let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
+        let c = p.decide(&obs(0.010, 8.0, 0));
+        let c2 = p.decide(&obs(0.010, c as f64, 0));
+        assert!(c2 >= c, "{c2} < {c}");
+    }
+
+    #[test]
+    fn within_band_recentres_on_observed() {
+        let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
+        let b = p.decide(&obs(0.050, 77.0, 0));
+        // window = [77-8, 77+8] → midpoint 77
+        assert_eq!(b, 77);
+        assert_eq!(p.window(), (69, 85));
+    }
+
+    #[test]
+    fn never_below_running_decodes() {
+        let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
+        let b = p.decide(&obs(0.090, 40.0, 120));
+        assert!(b >= 120);
+    }
+
+    #[test]
+    fn prop_bounds_and_window_invariants() {
+        check("alg2 invariants", 300, |g| {
+            let c = SchedulerConfig {
+                d_sla: Some(g.f64(0.005, 0.2)),
+                b_min: g.u64(1..=8) as u32,
+                b_max: g.u64(32..=512) as u32,
+                alpha: g.u64(1..=32) as u32,
+                delta: g.u64(0..=16) as u32,
+                ..SchedulerConfig::default()
+            };
+            let mut p = SlaFeedbackPolicy::new(&c);
+            for _ in 0..50 {
+                let o = obs(g.f64(0.0, 0.3), g.f64(1.0, 512.0),
+                            g.u64(0..=64) as u32);
+                let b = p.decide(&o);
+                let (lo, hi) = p.window();
+                if !(c.b_min..=c.b_max).contains(&b) && o.running_decode <= c.b_max {
+                    return false;
+                }
+                if lo > hi || lo < c.b_min || hi > c.b_max {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! Static baselines: what the paper (and vLLM) call "static batching".
+//!
+//! * [`StaticGreedyPolicy`] — vLLM's default: the scheduler may run up to
+//!   `max_num_seqs` concurrent requests and admits new ones whenever KV
+//!   blocks are free at admission time. Batch size is a *cap*, not a
+//!   target; memory-pressure preemptions do the real regulation.
+//! * [`StaticFixedPolicy`] — a hard operator-chosen batch size (the
+//!   conservative provisioning alternative).
+
+use super::BatchPolicy;
+use crate::telemetry::Observation;
+
+/// vLLM default behaviour (`max_num_seqs`, greedy admission).
+pub struct StaticGreedyPolicy {
+    max: u32,
+}
+
+impl StaticGreedyPolicy {
+    pub fn new(max: u32) -> Self {
+        assert!(max > 0);
+        StaticGreedyPolicy { max }
+    }
+}
+
+impl BatchPolicy for StaticGreedyPolicy {
+    fn decide(&mut self, _obs: &Observation) -> u32 {
+        self.max
+    }
+
+    fn label(&self) -> String {
+        format!("static-greedy:{}", self.max)
+    }
+
+    /// Admission is governed by free KV blocks only (the vLLM baseline
+    /// semantics the paper compares against).
+    fn gates_admission(&self) -> bool {
+        false
+    }
+}
+
+/// Hard fixed concurrent batch size.
+pub struct StaticFixedPolicy {
+    batch: u32,
+}
+
+impl StaticFixedPolicy {
+    pub fn new(batch: u32) -> Self {
+        assert!(batch > 0);
+        StaticFixedPolicy { batch }
+    }
+}
+
+impl BatchPolicy for StaticFixedPolicy {
+    fn decide(&mut self, _obs: &Observation) -> u32 {
+        self.batch
+    }
+
+    fn label(&self) -> String {
+        format!("static-fixed:{}", self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::test_obs;
+
+    #[test]
+    fn greedy_returns_cap_and_does_not_gate() {
+        let mut p = StaticGreedyPolicy::new(256);
+        assert_eq!(p.decide(&test_obs(1000, 0, 0, 0)), 256);
+        assert_eq!(p.decide(&test_obs(1000, 999, 200, 50)), 256);
+        assert!(!p.gates_admission());
+    }
+
+    #[test]
+    fn fixed_is_fixed_and_gates() {
+        let mut p = StaticFixedPolicy::new(32);
+        for _ in 0..5 {
+            assert_eq!(p.decide(&test_obs(1000, 500, 10, 3)), 32);
+        }
+        assert!(p.gates_admission());
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_batch_rejected() {
+        StaticFixedPolicy::new(0);
+    }
+}

@@ -1,0 +1,306 @@
+//! Benchmark harness (the offline registry has no `criterion`).
+//!
+//! Benches are plain binaries (`[[bench]] harness = false`) that build
+//! [`Bench`] groups. Each measurement does warmup, then timed iterations
+//! until both a minimum iteration count and a minimum wall-time are met,
+//! and reports mean / p50 / p99 / throughput in an aligned table — the
+//! same information criterion would print, minus the plotting.
+//!
+//! For the paper-table benches, [`Table`] renders labelled rows (model,
+//! static, dynamic, improvement) as GitHub-flavoured markdown so the output
+//! can be pasted straight into EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// One timed measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    /// Optional units-per-iteration for throughput reporting.
+    pub units: Option<(f64, &'static str)>,
+}
+
+impl Measurement {
+    pub fn throughput(&self) -> Option<String> {
+        self.units.map(|(n, unit)| {
+            let per_sec = n / self.mean.as_secs_f64();
+            format!("{} {unit}/s", human_count(per_sec))
+        })
+    }
+}
+
+fn human_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2}G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2}M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2}k", x / 1e3)
+    } else {
+        format!("{x:.2}")
+    }
+}
+
+fn human_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+/// A named group of measurements with shared settings.
+pub struct Bench {
+    group: String,
+    min_iters: u64,
+    min_time: Duration,
+    warmup: Duration,
+    results: Vec<Measurement>,
+    quick: bool,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // DYNABATCH_BENCH_QUICK=1 shrinks budgets (used by `cargo test`
+        // smoke-running the bench binaries and by CI).
+        let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+        Bench {
+            group: group.to_string(),
+            min_iters: if quick { 3 } else { 20 },
+            min_time: Duration::from_millis(if quick { 20 } else { 300 }),
+            warmup: Duration::from_millis(if quick { 5 } else { 100 }),
+            results: Vec::new(),
+            quick,
+        }
+    }
+
+    pub fn quick(&self) -> bool {
+        self.quick
+    }
+
+    pub fn min_iters(mut self, n: u64) -> Self {
+        self.min_iters = n;
+        self
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &Measurement {
+        self.bench_units(name, None, f)
+    }
+
+    /// Time `f` and report throughput as `units_per_iter` per second.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units: Option<(f64, &'static str)>,
+        mut f: F,
+    ) -> &Measurement {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Timed.
+        let mut samples: Vec<Duration> = Vec::new();
+        let timed = Instant::now();
+        while samples.len() < self.min_iters as usize
+            || timed.elapsed() < self.min_time
+        {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+            if samples.len() > 5_000_000 {
+                break; // pathological fast function; enough samples
+            }
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let mean = total / samples.len() as u32;
+        let p50 = samples[samples.len() / 2];
+        let p99 = samples[((samples.len() * 99) / 100)
+            .min(samples.len() - 1)];
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len() as u64,
+            mean,
+            p50,
+            p99,
+            units,
+        };
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Print the group as an aligned table.
+    pub fn report(&self) {
+        println!("\n== bench group: {} ==", self.group);
+        println!(
+            "{:<40} {:>10} {:>10} {:>10} {:>8} {:>16}",
+            "name", "mean", "p50", "p99", "iters", "throughput"
+        );
+        for m in &self.results {
+            println!(
+                "{:<40} {:>10} {:>10} {:>10} {:>8} {:>16}",
+                m.name,
+                human_dur(m.mean),
+                human_dur(m.p50),
+                human_dur(m.p99),
+                m.iters,
+                m.throughput().unwrap_or_default()
+            );
+        }
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Markdown table builder for paper-style result rows.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {c:<w$} |"));
+            }
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.to_markdown());
+    }
+}
+
+/// Simple ASCII bar chart (for Fig. 4-style capacity comparisons).
+pub fn bar_chart(title: &str, bars: &[(String, f64)], unit: &str) -> String {
+    let max = bars.iter().map(|(_, v)| *v).fold(f64::MIN, f64::max).max(1e-9);
+    let label_w = bars.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = format!("\n{title}\n");
+    for (label, v) in bars {
+        let n = ((v / max) * 40.0).round() as usize;
+        out.push_str(&format!(
+            "  {label:<label_w$} | {:<40} {v:.2} {unit}\n",
+            "█".repeat(n)
+        ));
+    }
+    out
+}
+
+/// ASCII sparkline of a time series (for Fig. 2-style memory timelines).
+pub fn sparkline(xs: &[f64]) -> String {
+    const TICKS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if xs.is_empty() {
+        return String::new();
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    xs.iter()
+        .map(|x| TICKS[(((x - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("DYNABATCH_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        let m = b.bench("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters >= 3);
+        assert!(m.mean.as_nanos() > 0);
+        assert!(m.p99 >= m.p50);
+    }
+
+    #[test]
+    fn throughput_reporting() {
+        std::env::set_var("DYNABATCH_BENCH_QUICK", "1");
+        let mut b = Bench::new("t");
+        let m = b
+            .bench_units("u", Some((1000.0, "tok")), || {
+                std::hint::black_box((0..100).sum::<u64>());
+            })
+            .clone();
+        let t = m.throughput().unwrap();
+        assert!(t.contains("tok/s"), "{t}");
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("T", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### T"));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_rows() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn bar_chart_and_sparkline() {
+        let s = bar_chart("cap", &[("a".into(), 5.4), ("b".into(), 6.6)], "qps");
+        assert!(s.contains("5.40 qps") && s.contains("6.60 qps"));
+        let sp = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(sp.chars().count(), 3);
+        assert!(sparkline(&[]).is_empty());
+    }
+}

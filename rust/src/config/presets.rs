@@ -1,0 +1,245 @@
+//! Model / hardware presets for every system the paper evaluates.
+//!
+//! Architecture numbers follow the published checkpoints (LLaMA, LLaMA-3)
+//! or the closest plausible layout (PanGu sizes are not fully public; we
+//! derive layer/width splits that hit the advertised parameter counts).
+//! KV layout: the MHA checkpoints store full-head KV; LLaMA3-70B is GQA
+//! with 8 KV heads. The paper's testbed details are unspecified, so each
+//! model is deployed on the *minimal-fit* node returned by [`node_for`] —
+//! the smallest tensor-parallel group whose KV budget clears a usable
+//! floor. See DESIGN.md "Substitutions".
+
+use super::{HardwareSpec, ModelSpec};
+
+const GIB: u64 = 1 << 30;
+
+pub fn llama_65b() -> ModelSpec {
+    ModelSpec {
+        name: "llama-65b".into(),
+        params: 65_000_000_000,
+        n_layers: 80,
+        n_heads: 64,
+        d_head: 128,
+        n_kv_heads: 64, // MHA
+        kv_dtype_bytes: 2,
+        weight_dtype_bytes: 2,
+        max_model_len: 2048,
+    }
+}
+
+pub fn llama3_70b() -> ModelSpec {
+    ModelSpec {
+        name: "llama3-70b".into(),
+        params: 70_000_000_000,
+        n_layers: 80,
+        n_heads: 64,
+        d_head: 128,
+        n_kv_heads: 8, // GQA
+        kv_dtype_bytes: 2,
+        weight_dtype_bytes: 2,
+        max_model_len: 8192,
+    }
+}
+
+pub fn pangu_7b() -> ModelSpec {
+    ModelSpec {
+        name: "pangu-7b".into(),
+        params: 7_000_000_000,
+        n_layers: 32,
+        n_heads: 32,
+        d_head: 128,
+        n_kv_heads: 32,
+        kv_dtype_bytes: 2,
+        weight_dtype_bytes: 2,
+        max_model_len: 2048,
+    }
+}
+
+pub fn pangu_38b() -> ModelSpec {
+    ModelSpec {
+        name: "pangu-38b".into(),
+        params: 38_000_000_000,
+        n_layers: 40,
+        n_heads: 64,
+        d_head: 128,
+        n_kv_heads: 64,
+        kv_dtype_bytes: 2,
+        weight_dtype_bytes: 2,
+        max_model_len: 4096,
+    }
+}
+
+pub fn pangu_135b() -> ModelSpec {
+    ModelSpec {
+        name: "pangu-135b".into(),
+        params: 135_000_000_000,
+        n_layers: 88,
+        n_heads: 88,
+        d_head: 128,
+        n_kv_heads: 88,
+        kv_dtype_bytes: 2,
+        weight_dtype_bytes: 2,
+        max_model_len: 4096,
+    }
+}
+
+/// The TinyGPT actually served end-to-end through PJRT (f32 everywhere).
+pub fn tiny_real() -> ModelSpec {
+    ModelSpec {
+        name: "tiny".into(),
+        params: 3_400_000,
+        n_layers: 4,
+        n_heads: 8,
+        d_head: 32,
+        n_kv_heads: 8,
+        kv_dtype_bytes: 4,
+        weight_dtype_bytes: 4,
+        max_model_len: 256,
+    }
+}
+
+pub fn all_models() -> Vec<ModelSpec> {
+    vec![llama_65b(), llama3_70b(), pangu_7b(), pangu_38b(), pangu_135b(),
+         tiny_real()]
+}
+
+pub fn model_by_name(name: &str) -> Option<ModelSpec> {
+    all_models().into_iter().find(|m| m.name == name)
+}
+
+/// N×A100-80GB tensor-parallel group (efficiencies calibrated so the
+/// llama3-70b preset reproduces the paper's Fig. 3 anchors — asserted in
+/// config::tests::fig3_anchor_calibration).
+pub fn a100_node(n: u32) -> HardwareSpec {
+    HardwareSpec {
+        name: format!("a100-80g-x{n}"),
+        n_devices: n,
+        mem_bytes_per_device: 80 * GIB,
+        hbm_bw_per_device: 2.0e12,
+        flops_per_device: 312e12,
+        bw_efficiency: 0.8,
+        flops_efficiency: 0.75,
+        mem_utilization: 0.9,
+        activation_reserve_bytes: 10 * GIB,
+        step_overhead_s: 2e-3,
+        preempt_overhead_s: 20e-3,
+        pcie_bw: 25e9,
+    }
+}
+
+/// N×Ascend-910 (32 GB HBM) group — the PanGu models' natural home.
+pub fn ascend_910b_node(n: u32) -> HardwareSpec {
+    HardwareSpec {
+        name: format!("ascend-910-32g-x{n}"),
+        n_devices: n,
+        mem_bytes_per_device: 32 * GIB,
+        hbm_bw_per_device: 1.2e12,
+        flops_per_device: 280e12,
+        bw_efficiency: 0.8,
+        flops_efficiency: 0.75,
+        mem_utilization: 0.9,
+        activation_reserve_bytes: 4 * GIB,
+        step_overhead_s: 2e-3,
+        preempt_overhead_s: 20e-3,
+        pcie_bw: 25e9,
+    }
+}
+
+/// The host CPU running the real PJRT engine (numbers only used for
+/// provisioning sanity, not for timing — the real engine measures).
+pub fn cpu_host() -> HardwareSpec {
+    HardwareSpec {
+        name: "cpu-host".into(),
+        n_devices: 1,
+        mem_bytes_per_device: 8 * GIB,
+        hbm_bw_per_device: 50e9,
+        flops_per_device: 200e9,
+        bw_efficiency: 0.5,
+        flops_efficiency: 0.5,
+        mem_utilization: 0.5,
+        activation_reserve_bytes: GIB,
+        step_overhead_s: 1e-4,
+        preempt_overhead_s: 0.0,
+        pcie_bw: 10e9,
+    }
+}
+
+/// Minimum usable KV budget for a deployment to make sense (tokens).
+pub const MIN_KV_TOKENS: u64 = 16_384;
+
+/// Minimal-fit node: the smallest device count whose KV budget clears
+/// [`MIN_KV_TOKENS`]. PanGu models map to Ascend nodes, the rest to A100s.
+pub fn node_for(model: &ModelSpec) -> HardwareSpec {
+    let make: fn(u32) -> HardwareSpec = if model.name.starts_with("pangu") {
+        ascend_910b_node
+    } else {
+        a100_node
+    };
+    for n in 1..=64 {
+        let hw = make(n);
+        if hw.kv_budget(model) >= MIN_KV_TOKENS * model.kv_bytes_per_token() {
+            return hw;
+        }
+    }
+    make(64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_fit_is_minimal() {
+        for m in [llama_65b(), llama3_70b(), pangu_7b(), pangu_38b(),
+                  pangu_135b()] {
+            let hw = node_for(&m);
+            let floor = MIN_KV_TOKENS * m.kv_bytes_per_token();
+            assert!(hw.kv_budget(&m) >= floor, "{}", m.name);
+            if hw.n_devices > 1 {
+                let smaller = if m.name.starts_with("pangu") {
+                    ascend_910b_node(hw.n_devices - 1)
+                } else {
+                    a100_node(hw.n_devices - 1)
+                };
+                assert!(smaller.kv_budget(&m) < floor, "{} not minimal",
+                        m.name);
+            }
+        }
+    }
+
+    #[test]
+    fn expected_node_sizes() {
+        assert_eq!(node_for(&llama_65b()).n_devices, 3);
+        assert_eq!(node_for(&llama3_70b()).n_devices, 3);
+        assert_eq!(node_for(&pangu_7b()).n_devices, 1);
+    }
+
+    #[test]
+    fn eta_tokens_are_in_memory_bound_regimes() {
+        // The MHA presets must actually be memory-bound at B_max=256 with
+        // their Table-I length settings — that is the paper's premise.
+        let cases = [
+            (llama_65b(), 68.4 + 344.5),
+            (pangu_7b(), 256.0),
+            (pangu_38b(), 256.0),
+            (pangu_135b(), 256.0),
+        ];
+        for (m, mean_len) in cases {
+            let hw = node_for(&m);
+            let eta = hw.kv_budget(&m) / m.kv_bytes_per_token();
+            let demand = 256.0 * mean_len;
+            assert!(
+                (eta as f64) < demand,
+                "{}: eta={eta} not binding vs demand={demand}",
+                m.name
+            );
+            assert!(eta > 1000, "{}: eta={eta} unusably small", m.name);
+        }
+    }
+
+    #[test]
+    fn model_lookup() {
+        assert!(model_by_name("llama-65b").is_some());
+        assert!(model_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,313 @@
+//! Experiment driver: wires workload → scheduler → engine → metrics, in
+//! virtual time (simulation) or wall time (real engine), plus the capacity
+//! search used by Table II / Fig. 4.
+
+use crate::config::{HardwareSpec, ModelSpec, SchedulerConfig};
+use crate::engine::sim::SimEngine;
+use crate::engine::Engine;
+use crate::metrics::RunMetrics;
+use crate::request::Request;
+use crate::scheduler::Scheduler;
+use crate::sim::{Clock, VirtualClock};
+use crate::workload::{Arrival, Workload};
+use anyhow::Result;
+
+/// A fully-specified simulation scenario.
+#[derive(Debug, Clone)]
+pub struct SimScenario {
+    pub model: ModelSpec,
+    pub hardware: HardwareSpec,
+    pub sched: SchedulerConfig,
+    pub workload: Workload,
+    /// Override η (KV token capacity); None derives it from the hardware.
+    pub eta_tokens_override: Option<u64>,
+    /// CPU swap pool in tokens (swap preemption headroom).
+    pub swap_tokens: u64,
+}
+
+impl SimScenario {
+    pub fn eta_tokens(&self) -> u64 {
+        self.eta_tokens_override.unwrap_or_else(|| {
+            self.hardware.kv_budget(&self.model)
+                / self.model.kv_bytes_per_token().max(1)
+        })
+    }
+}
+
+/// Run any engine+clock against a request list until completion (or
+/// `max_steps`, a safety net against livelock).
+pub fn run_loop<E: Engine + ?Sized, C: Clock>(
+    sched: &mut Scheduler,
+    engine: &mut E,
+    clock: &mut C,
+    mut requests: Vec<Request>,
+    max_steps: u64,
+) -> Result<()> {
+    requests.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
+    let mut next = 0usize;
+    let mut steps = 0u64;
+    while steps < max_steps {
+        let now = clock.now();
+        while next < requests.len() && requests[next].arrived_at <= now {
+            let mut r = requests[next].clone();
+            r.arrived_at = r.arrived_at.max(0.0);
+            sched.submit(r);
+            next += 1;
+        }
+        if !sched.has_work() {
+            if next >= requests.len() {
+                break; // drained
+            }
+            clock.sleep_until(requests[next].arrived_at);
+            continue;
+        }
+        match sched.step(engine, clock.now())? {
+            Some(report) => clock.advance(report.elapsed),
+            None => {
+                // Work exists but nothing runnable (e.g. queue gated behind
+                // b_t while batch drains): advance to the next event.
+                if next < requests.len() {
+                    clock.sleep_until(requests[next].arrived_at);
+                } else {
+                    // Nothing can ever unblock — should not happen; bail
+                    // via the step budget rather than spinning.
+                    clock.advance(1e-3);
+                }
+            }
+        }
+        steps += 1;
+    }
+    Ok(())
+}
+
+/// Run one simulated scenario to completion and compute metrics.
+pub fn run_sim(scenario: &SimScenario) -> Result<RunMetrics> {
+    let mut engine = SimEngine::new(&scenario.model, &scenario.hardware);
+    let mut sched = Scheduler::new(
+        scenario.sched.clone(),
+        scenario.eta_tokens(),
+        scenario.swap_tokens,
+        scenario.workload.prompt.mean(),
+        scenario.workload.output.mean(),
+    );
+    sched.telemetry.set_prior_variances(
+        scenario.workload.prompt.variance(),
+        scenario.workload.output.variance(),
+    );
+    let mut clock = VirtualClock::new();
+    let requests = scenario.workload.generate();
+    let n = requests.len() as u64;
+    // Generous budget: every request needs ≲ prompt_chunks + outputs steps;
+    // preemption storms can multiply it.
+    let max_steps = (n * 4096).max(1_000_000);
+    run_loop(&mut sched, &mut engine, &mut clock, requests, max_steps)?;
+    let makespan = clock.now();
+    Ok(RunMetrics::compute(
+        sched.policy_label(),
+        sched.finished(),
+        &sched.stats,
+        &sched.decode_latencies,
+        makespan,
+        engine.utilization(),
+    ))
+}
+
+/// Outcome of a capacity search (Table II / Fig. 4).
+#[derive(Debug, Clone)]
+pub struct CapacityResult {
+    /// Max sustainable request rate (qps) meeting the SLA.
+    pub capacity_qps: f64,
+    /// Metrics at the capacity point.
+    pub at_capacity: RunMetrics,
+}
+
+/// Binary-search the highest Poisson rate whose run meets the SLA at
+/// percentile `pct` (and finishes every request). `probe_requests` bounds
+/// run length during the search.
+pub fn capacity_search(
+    scenario: &SimScenario,
+    d_sla: f64,
+    eps_d: f64,
+    pct: f64,
+    probe_requests: usize,
+    resolution: f64,
+) -> Result<CapacityResult> {
+    // Probe size scales with the offered rate so the arrival span (≥20 s
+    // simulated) dominates per-request residence time — otherwise a short
+    // burst drains within the grace window and overload goes undetected.
+    let n_at = |rate: f64| probe_requests.max((rate * 20.0).ceil() as usize);
+    let probe = |rate: f64| -> Result<RunMetrics> {
+        let mut s = scenario.clone();
+        s.workload = s
+            .workload
+            .with_arrival(Arrival::Poisson { rate });
+        s.workload.n_requests = n_at(rate);
+        run_sim(&s)
+    };
+    // Meeting the TBT SLA is necessary but not sufficient: a TBT-gating
+    // policy could claim unbounded capacity by parking load in the queue.
+    // Capacity additionally requires *stability*: queueing delay (TTFT)
+    // bounded and the makespan close to the arrival span.
+    let ttft_slo = (10.0 * d_sla).max(2.0);
+    let ok = |m: &RunMetrics, rate: f64| {
+        let span = n_at(rate) as f64 / rate;
+        m.meets_sla(d_sla, eps_d, pct)
+            && m.n_requests >= n_at(rate)
+            && m.ttft_p95 <= ttft_slo
+            && m.makespan <= span * 1.15 + 2.0
+    };
+
+    // Bracket: grow until violation.
+    let mut lo = 0.0f64;
+    let mut lo_metrics: Option<RunMetrics> = None;
+    let mut hi = 0.5f64;
+    loop {
+        let m = probe(hi)?;
+        if ok(&m, hi) {
+            lo = hi;
+            lo_metrics = Some(m);
+            hi *= 2.0;
+            if hi > 4096.0 {
+                break; // engine never violates — call that capacity
+            }
+        } else {
+            break;
+        }
+    }
+    // Bisect.
+    while hi - lo > resolution {
+        let mid = 0.5 * (lo + hi);
+        let m = probe(mid)?;
+        if ok(&m, mid) {
+            lo = mid;
+            lo_metrics = Some(m);
+        } else {
+            hi = mid;
+        }
+    }
+    let at = match lo_metrics {
+        Some(m) => m,
+        None => probe(lo.max(resolution))?,
+    };
+    Ok(CapacityResult { capacity_qps: lo, at_capacity: at })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::*;
+    use crate::config::PolicyKind;
+    use crate::workload::LengthDist;
+
+    fn scenario(policy: PolicyKind, n: usize, arrival: Arrival)
+                -> SimScenario {
+        let model = pangu_7b();
+        let hardware = node_for(&model);
+        SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig { policy, ..SchedulerConfig::default() },
+            workload: Workload {
+                name: "test".into(),
+                arrival,
+                prompt: LengthDist::Fixed(128),
+                output: LengthDist::Fixed(128),
+                n_requests: n,
+                seed: 5,
+            },
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn sim_run_completes_and_reports() {
+        let s = scenario(PolicyKind::MemoryAware, 100, Arrival::AllAtOnce);
+        let m = run_sim(&s).unwrap();
+        assert_eq!(m.n_requests, 100);
+        assert_eq!(m.output_tokens, 100 * 128);
+        assert!(m.throughput > 0.0);
+        assert!(m.makespan > 0.0);
+        assert!(m.mean_batch >= 1.0);
+        assert!(m.utilization.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn poisson_run_has_idle_gaps() {
+        let s = scenario(PolicyKind::MemoryAware, 50,
+                         Arrival::Poisson { rate: 0.5 });
+        let m = run_sim(&s).unwrap();
+        assert_eq!(m.n_requests, 50);
+        // 50 requests at 0.5 qps → makespan ≈ 100 s (arrival-dominated).
+        assert!(m.makespan > 50.0, "makespan={}", m.makespan);
+    }
+
+    #[test]
+    fn dynamic_beats_greedy_under_memory_pressure() {
+        // The Table-I mechanism in miniature, in the regime where it bites
+        // (the LLaMA-65B row: long, variable outputs — every recompute
+        // preemption re-prefills a long context and stalls the batch).
+        let model = llama_65b();
+        let hardware = node_for(&model);
+        let mk = |policy| SimScenario {
+            model: model.clone(),
+            hardware: hardware.clone(),
+            sched: SchedulerConfig { policy, ..SchedulerConfig::default() },
+            workload: Workload {
+                name: "t1-65b-mini".into(),
+                arrival: Arrival::AllAtOnce,
+                prompt: LengthDist::around(68.4, 1024),
+                output: LengthDist::around(344.5, 1024),
+                n_requests: 300,
+                seed: 5,
+            },
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let mg = run_sim(&mk(PolicyKind::StaticGreedy { max: 256 })).unwrap();
+        let md = run_sim(&mk(PolicyKind::MemoryAware)).unwrap();
+        assert!(mg.preemptions > 0, "greedy must thrash");
+        assert!(md.preemptions <= mg.preemptions / 10,
+                "Alg.1 must mostly avoid thrash: {} vs {}", md.preemptions,
+                mg.preemptions);
+        assert!(
+            md.throughput > mg.throughput,
+            "dynamic {:.0} <= static {:.0} tok/s (preempts {} vs {})",
+            md.throughput,
+            mg.throughput,
+            md.preemptions,
+            mg.preemptions
+        );
+    }
+
+    #[test]
+    fn capacity_search_brackets_sla() {
+        let mut s = scenario(PolicyKind::Combined, 0,
+                             Arrival::Poisson { rate: 1.0 });
+        s.sched.d_sla = Some(0.05);
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::Fixed(32);
+        let cap = capacity_search(&s, 0.05, 0.002, 95.0, 200, 0.25).unwrap();
+        assert!(cap.capacity_qps > 0.0);
+        // Capacity is finite: the stability criterion must bite well below
+        // the bracket ceiling even though the TBT gate never trips.
+        assert!(cap.capacity_qps < 500.0, "cap={}", cap.capacity_qps);
+        assert!(cap.at_capacity.meets_sla(0.05, 0.002, 95.0));
+        // Sustained 2× overload must fail the stability criterion the
+        // search uses (TTFT / makespan), i.e. the bracket is real.
+        let rate = cap.capacity_qps * 2.0 + 1.0;
+        let n = 200usize.max((rate * 20.0) as usize);
+        let mut above = s.clone();
+        above.workload =
+            s.workload.with_arrival(Arrival::Poisson { rate });
+        above.workload.n_requests = n;
+        let m = run_sim(&above).unwrap();
+        let span = n as f64 / rate;
+        let unstable = m.ttft_p95 > 2.0
+            || m.makespan > span * 1.15 + 2.0
+            || !m.meets_sla(0.05, 0.002, 95.0);
+        assert!(unstable, "2x overload should be unstable (ttft_p95={}, \
+                makespan={span_m}, span={span})", m.ttft_p95,
+                span_m = m.makespan);
+    }
+}

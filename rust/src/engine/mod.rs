@@ -1,0 +1,100 @@
+//! Execution engines: the scheduler plans a step, an engine runs it.
+//!
+//! Two implementations share the [`Engine`] trait:
+//! * [`sim::SimEngine`] — discrete-event simulation with a roofline cost
+//!   model (how the paper-scale models are evaluated).
+//! * [`pjrt::PjrtEngine`] — the real path: AOT-compiled TinyGPT executed
+//!   through the PJRT CPU client with a device-resident KV state.
+
+pub mod pjrt;
+pub mod sim;
+
+use crate::request::RequestId;
+
+/// A slice of prefill work for one request within a step.
+#[derive(Debug, Clone)]
+pub struct PrefillWork {
+    pub id: RequestId,
+    /// Token ids of this chunk (empty in simulation — counts suffice).
+    pub tokens: Vec<i32>,
+    /// Chunk length in tokens (== tokens.len() on the real path).
+    pub n_tokens: u32,
+    /// Absolute position of the chunk's first token.
+    pub start: u32,
+    /// True when this chunk completes the prompt: the engine then emits
+    /// the request's first generated token.
+    pub is_last: bool,
+}
+
+/// One decode slot in a step.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeWork {
+    pub id: RequestId,
+    /// Cache-write position for the token being generated (== tokens
+    /// currently cached for the request).
+    pub position: u32,
+}
+
+/// Everything the engine must do in one scheduler iteration.
+#[derive(Debug, Clone, Default)]
+pub struct StepPlan {
+    pub prefills: Vec<PrefillWork>,
+    pub decodes: Vec<DecodeWork>,
+    /// KV tokens moved out to host / back in this step (swap preemption);
+    /// engines only cost these, the block manager owns the accounting.
+    pub swap_out_tokens: u64,
+    pub swap_in_tokens: u64,
+    /// Preemption events triggered while planning this step (each costs
+    /// an iteration abort — HardwareSpec::preempt_overhead_s).
+    pub preempt_events: u32,
+}
+
+impl StepPlan {
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty()
+            && self.decodes.is_empty()
+            && self.swap_out_tokens == 0
+            && self.swap_in_tokens == 0
+            && self.preempt_events == 0
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.prefills.iter().map(|p| p.n_tokens as u64).sum()
+    }
+}
+
+/// What happened: elapsed time plus every token emitted this step.
+#[derive(Debug, Clone, Default)]
+pub struct StepOutcome {
+    /// Step duration in seconds — virtual for the simulator, measured
+    /// wall-clock for the real engine.
+    pub elapsed: f64,
+    /// (request, token) pairs: one per decode slot, plus one per completed
+    /// prompt (its first generated token).
+    pub tokens: Vec<(RequestId, i32)>,
+}
+
+pub trait Engine {
+    /// Execute one step. The plan's decode positions and prefill chunks
+    /// are assumed valid (the scheduler enforces memory limits).
+    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome>;
+
+    /// The request finished or was preempted: release engine-side
+    /// resources (real engine frees its batch slot; simulator is a no-op).
+    fn release(&mut self, id: RequestId);
+
+    /// Hard concurrency limit of this engine (slot count for the real
+    /// engine; effectively unbounded for the simulator).
+    fn max_batch(&self) -> u32;
+
+    /// Longest sequence (prompt + generation) a request may reach.
+    fn max_seq(&self) -> u32;
+
+    fn label(&self) -> String;
+
+    /// Compute-time fraction of busy time, if the engine can attribute it
+    /// (the "GPU utilization" proxy reported alongside Table I).
+    fn utilization(&self) -> Option<f64> {
+        None
+    }
+}

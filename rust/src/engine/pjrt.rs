@@ -1,0 +1,268 @@
+//! The real engine: TinyGPT served through the PJRT CPU client.
+//!
+//! Slots, buckets and state: the engine owns a device-resident state
+//! buffer sized for the current batch *bucket* (the compiled sizes, e.g.
+//! 1/2/4/8/16). Requests are pinned to slots on their first prefill chunk;
+//! when the live slot count outgrows the bucket the state is migrated
+//! host-side once (download → repack → upload) — the concrete cost of a
+//! batch-size reconfiguration that the paper's "barrier 2" worries about,
+//! surfaced in `stat_migrations`/`stat_migration_time`.
+
+use super::{Engine, StepOutcome, StepPlan};
+use crate::request::RequestId;
+use crate::runtime::ModelRuntime;
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+use xla::PjRtBuffer;
+
+pub struct PjrtEngine {
+    rt: ModelRuntime,
+    bucket: u32,
+    state: Option<PjRtBuffer>,
+    /// slot → request pinned to it.
+    slots: Vec<Option<RequestId>>,
+    by_request: BTreeMap<RequestId, usize>,
+    pub stat_decode_steps: u64,
+    pub stat_prefill_chunks: u64,
+    pub stat_migrations: u64,
+    pub stat_migration_time: f64,
+}
+
+impl PjrtEngine {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let rt = ModelRuntime::load(artifacts_dir)?;
+        let bucket = rt.buckets()[0];
+        let state = rt.new_state(bucket)?;
+        Ok(PjrtEngine {
+            slots: vec![None; bucket as usize],
+            by_request: BTreeMap::new(),
+            bucket,
+            state: Some(state),
+            rt,
+            stat_decode_steps: 0,
+            stat_prefill_chunks: 0,
+            stat_migrations: 0,
+            stat_migration_time: 0.0,
+        })
+    }
+
+    pub fn runtime(&self) -> &ModelRuntime {
+        &self.rt
+    }
+
+    pub fn bucket(&self) -> u32 {
+        self.bucket
+    }
+
+    pub fn pad_id(&self) -> i32 {
+        self.rt.manifest.pad_id
+    }
+
+    pub fn bos_id(&self) -> i32 {
+        self.rt.manifest.bos_id
+    }
+
+    fn live_slots(&self) -> u32 {
+        self.by_request.len() as u32
+    }
+
+    /// Pin `id` to a free slot, growing the bucket if required.
+    fn assign_slot(&mut self, id: RequestId) -> Result<usize> {
+        if let Some(&s) = self.by_request.get(&id) {
+            return Ok(s);
+        }
+        if self.live_slots() + 1 > self.bucket {
+            let need = self.live_slots() + 1;
+            let new_bucket = self
+                .rt
+                .bucket_for(need)
+                .ok_or_else(|| anyhow!("batch {need} exceeds largest bucket"))?;
+            self.migrate(new_bucket)?;
+        }
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("bucket grown but no free slot");
+        self.slots[slot] = Some(id);
+        self.by_request.insert(id, slot);
+        Ok(slot)
+    }
+
+    /// Host-side state migration to a different bucket. Slot indices are
+    /// compacted so every live request keeps its cache contents.
+    fn migrate(&mut self, new_bucket: u32) -> Result<()> {
+        let t0 = Instant::now();
+        let old_bucket = self.bucket;
+        let state = self.state.take().expect("state present");
+        let host = self.rt.download_state(&state)?;
+        drop(state);
+        // Compact live slots to the front (repack keeps low indices).
+        let live: Vec<(usize, RequestId)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.map(|id| (i, id)))
+            .collect();
+        if live.iter().enumerate().any(|(want, (at, _))| want != *at) {
+            // Need a compaction pass before repacking: build a permuted
+            // host state with live slots moved to [0, n).
+            let mut compact = host.clone();
+            let m = &self.rt.manifest;
+            let row = m.max_seq as usize * m.n_heads as usize
+                * m.d_head as usize;
+            let l = m.n_layers as usize;
+            let ob = old_bucket as usize;
+            for (dst, (src, _)) in live.iter().enumerate() {
+                if dst == *src {
+                    continue;
+                }
+                for plane in 0..2 {
+                    for layer in 0..l {
+                        let base = plane * l * ob * row + layer * ob * row;
+                        let (s, d) = (base + src * row, base + dst * row);
+                        let tmp: Vec<f32> = host[s..s + row].to_vec();
+                        compact[d..d + row].copy_from_slice(&tmp);
+                    }
+                }
+                let tail = 2 * l * ob * row;
+                compact[tail + dst] = host[tail + src];
+            }
+            let repacked =
+                self.rt.repack_state(&compact, old_bucket, new_bucket);
+            self.state = Some(self.rt.upload_state(&repacked)?);
+        } else {
+            let repacked = self.rt.repack_state(&host, old_bucket, new_bucket);
+            self.state = Some(self.rt.upload_state(&repacked)?);
+        }
+        // Rebuild slot maps compacted.
+        let mut slots = vec![None; new_bucket as usize];
+        self.by_request.clear();
+        for (dst, (_, id)) in live.iter().enumerate() {
+            slots[dst] = Some(*id);
+            self.by_request.insert(*id, dst);
+        }
+        self.slots = slots;
+        self.bucket = new_bucket;
+        self.stat_migrations += 1;
+        self.stat_migration_time += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Maybe shrink the bucket when occupancy drops far below it (hysteresis:
+    /// only when the next-smaller bucket fits with ≥1 slot spare... kept
+    /// simple: shrink when live ≤ bucket/4 and a smaller bucket exists).
+    fn maybe_shrink(&mut self) -> Result<()> {
+        let live = self.live_slots().max(1);
+        if live * 4 > self.bucket {
+            return Ok(());
+        }
+        if let Some(target) = self.rt.bucket_for(live) {
+            if target < self.bucket {
+                self.migrate(target)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn step(&mut self, plan: &StepPlan) -> Result<StepOutcome> {
+        if plan.is_empty() {
+            return Ok(StepOutcome::default());
+        }
+        let t0 = Instant::now();
+
+        // 1. Prefill chunks (each its own execution; engine re-chunks to
+        //    the compiled sizes).
+        for p in &plan.prefills {
+            if p.tokens.len() != p.n_tokens as usize {
+                bail!("real engine needs prompt tokens for request {}", p.id);
+            }
+            let slot = self.assign_slot(p.id)? as u32;
+            let max_chunk = self.rt.max_chunk() as usize;
+            let mut offset = 0usize;
+            while offset < p.tokens.len() {
+                let end = (offset + max_chunk).min(p.tokens.len());
+                let state = self.state.take().expect("state");
+                let new_state = self.rt.prefill_chunk(
+                    self.bucket,
+                    state,
+                    &p.tokens[offset..end],
+                    slot,
+                    p.start + offset as u32,
+                )?;
+                self.state = Some(new_state);
+                self.stat_prefill_chunks += 1;
+                offset = end;
+            }
+        }
+
+        // 2. Fused decode for every decode slot in the plan.
+        let mut decode_slots: Vec<(usize, RequestId)> = Vec::new();
+        if !plan.decodes.is_empty() {
+            let b = self.bucket as usize;
+            let mut pos = vec![0i32; b];
+            let mut active = vec![0i32; b];
+            for d in &plan.decodes {
+                let slot = *self
+                    .by_request
+                    .get(&d.id)
+                    .ok_or_else(|| anyhow!("decode for unknown request {}",
+                                           d.id))?;
+                pos[slot] = d.position as i32;
+                active[slot] = 1;
+                decode_slots.push((slot, d.id));
+            }
+            let state = self.state.take().expect("state");
+            let new_state =
+                self.rt.decode_step(self.bucket, state, &pos, &active)?;
+            self.state = Some(new_state);
+            self.stat_decode_steps += 1;
+        }
+
+        // 3. One token read covers decode outputs and completed prefills.
+        let mut tokens = Vec::new();
+        let needs_read = !decode_slots.is_empty()
+            || plan.prefills.iter().any(|p| p.is_last);
+        if needs_read {
+            let toks = self
+                .rt
+                .read_tokens(self.bucket, self.state.as_ref().unwrap())?;
+            for (slot, id) in &decode_slots {
+                tokens.push((*id, toks[*slot]));
+            }
+            for p in &plan.prefills {
+                if p.is_last {
+                    let slot = self.by_request[&p.id];
+                    tokens.push((p.id, toks[slot]));
+                }
+            }
+        }
+
+        Ok(StepOutcome { elapsed: t0.elapsed().as_secs_f64(), tokens })
+    }
+
+    fn release(&mut self, id: RequestId) {
+        if let Some(slot) = self.by_request.remove(&id) {
+            self.slots[slot] = None;
+            // Stale cache rows are harmless: a new occupant re-prefills
+            // from position 0 and attention is masked by its own length.
+            let _ = self.maybe_shrink();
+        }
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.rt.max_bucket()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.rt.manifest.max_seq
+    }
+
+    fn label(&self) -> String {
+        format!("pjrt({})", self.rt.manifest.model_name)
+    }
+}

@@ -1,0 +1,191 @@
+//! Ablations beyond the paper's tables — the design choices DESIGN.md
+//! calls out. Each returns structured rows consumed by
+//! benches/bench_ablations.rs and the `dynabatch ablations` CLI.
+
+use super::table_model;
+use crate::benchkit::Table;
+use crate::config::{presets, PolicyKind, PreemptMode, SchedulerConfig};
+use crate::driver::{run_sim, SimScenario};
+use crate::workload::{Arrival, LengthDist, Workload};
+use anyhow::Result;
+
+fn base_scenario(n: usize) -> SimScenario {
+    let model = table_model("llama-65b");
+    let hardware = presets::node_for(&model);
+    SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig::default(),
+        workload: Workload {
+            name: "ablation".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::around(68.4, 1024),
+            output: LengthDist::around(344.5, 1024),
+            n_requests: n,
+            seed: 17,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    }
+}
+
+/// Alg.1 linear (eq.14) vs exact (eq.12) — paper future-work §1.
+pub fn linear_vs_exact(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — Alg.1 linear (deployed) vs exact eq.(12)",
+        &["variant", "throughput", "mean batch", "preempts"],
+    );
+    for policy in [PolicyKind::MemoryAware, PolicyKind::MemoryAwareExact] {
+        let mut s = base_scenario(n);
+        s.sched.policy = policy;
+        let m = run_sim(&s)?;
+        t.row(vec![
+            m.policy.clone(),
+            format!("{:.0}", m.throughput),
+            format!("{:.1}", m.mean_batch),
+            m.preemptions.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Scheduling-interval sweep (barrier 2: does re-deciding more often pay
+/// for its overhead?).
+pub fn interval_sweep(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — policy decision interval (steps)",
+        &["interval", "throughput", "decisions", "preempts"],
+    );
+    for interval in [1u32, 4, 8, 16, 64, 256] {
+        let mut s = base_scenario(n);
+        s.sched.policy = PolicyKind::MemoryAware;
+        s.sched.interval_steps = interval;
+        let m = run_sim(&s)?;
+        t.row(vec![
+            interval.to_string(),
+            format!("{:.0}", m.throughput),
+            "-".into(),
+            m.preemptions.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// ε_M sweep — the soft memory constraint's safety/throughput trade.
+pub fn eps_mem_sweep(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — ε_M (overflow probability bound)",
+        &["eps_M", "throughput", "mean batch", "preempts"],
+    );
+    for eps in [0.001, 0.01, 0.05, 0.2, 0.4] {
+        let mut s = base_scenario(n);
+        s.sched.policy = PolicyKind::MemoryAware;
+        s.sched.eps_mem = eps;
+        let m = run_sim(&s)?;
+        t.row(vec![
+            format!("{eps}"),
+            format!("{:.0}", m.throughput),
+            format!("{:.1}", m.mean_batch),
+            m.preemptions.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Swap vs recompute preemption under deliberate pressure (greedy
+/// baseline, tight memory).
+pub fn preempt_mode(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — preemption mode under pressure (static-greedy)",
+        &["mode", "throughput", "preempts", "swaps"],
+    );
+    for (mode, swap_tokens) in
+        [(PreemptMode::Recompute, 0u64), (PreemptMode::Swap, 2_000_000)]
+    {
+        let mut s = base_scenario(n);
+        s.sched.policy = PolicyKind::StaticGreedy { max: 256 };
+        s.sched.preempt = mode;
+        s.swap_tokens = swap_tokens;
+        let m = run_sim(&s)?;
+        t.row(vec![
+            format!("{mode:?}"),
+            format!("{:.0}", m.throughput),
+            m.preemptions.to_string(),
+            m.swaps.to_string(),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Alg.2 α/δ sensitivity at a fixed SLA with Poisson load.
+pub fn alpha_delta_sweep(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Ablation — Alg.2 α/δ sensitivity (SLA 50 ms)",
+        &["alpha", "delta", "tbt_p95 ms", "throughput"],
+    );
+    for (alpha, delta) in [(4u32, 1u32), (16, 4), (64, 16)] {
+        let mut s = base_scenario(n);
+        s.sched.policy = PolicyKind::SlaFeedback;
+        s.sched.d_sla = Some(0.05);
+        s.sched.alpha = alpha;
+        s.sched.delta = delta;
+        s.workload.arrival = Arrival::Poisson { rate: 2.0 };
+        let m = run_sim(&s)?;
+        t.row(vec![
+            alpha.to_string(),
+            delta.to_string(),
+            format!("{:.1}", m.tbt_p95 * 1e3),
+            format!("{:.0}", m.throughput),
+        ]);
+    }
+    Ok(t)
+}
+
+/// RLHF-style sampling workload (paper future-work §3): fixed prompts,
+/// wildly varying output lengths.
+pub fn rlhf_sampling(n: usize) -> Result<Table> {
+    let mut t = Table::new(
+        "Extension — RLHF sampling batch (fixed prompts, long-tail outputs)",
+        &["policy", "throughput", "preempts", "makespan s"],
+    );
+    for policy in [
+        PolicyKind::StaticGreedy { max: 256 },
+        PolicyKind::MemoryAware,
+    ] {
+        let mut s = base_scenario(n);
+        s.sched.policy = policy;
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::LogNormal {
+            mu: 5.3,
+            sigma: 0.8,
+            min: 8,
+            max: 1500,
+        };
+        let m = run_sim(&s)?;
+        t.row(vec![
+            m.policy.clone(),
+            format!("{:.0}", m.throughput),
+            m.preemptions.to_string(),
+            format!("{:.1}", m.makespan),
+        ]);
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablations_run_at_small_scale() {
+        for t in [
+            linear_vs_exact(60).unwrap(),
+            eps_mem_sweep(60).unwrap(),
+            preempt_mode(60).unwrap(),
+            rlhf_sampling(60).unwrap(),
+        ] {
+            let md = t.to_markdown();
+            assert!(md.lines().count() >= 5, "{md}");
+        }
+    }
+}

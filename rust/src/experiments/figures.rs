@@ -1,0 +1,275 @@
+//! Figures 2, 3 and 4.
+//!
+//! * Fig. 2 — KV-memory utilization over time under dynamic batching
+//!   (timeline + sparkline + CSV).
+//! * Fig. 3 — decode latency D(b) and throughput Φ(b) vs batch size:
+//!   the cost-model sweep that anchors the whole simulator.
+//! * Fig. 4 — capacity bars at SLA 50 ms (Table II row 2), plus a sweep
+//!   of capacity vs D_SLA beyond the paper.
+
+use super::table_model;
+use crate::benchkit::{bar_chart, sparkline, Table};
+use crate::config::{presets, PolicyKind, SchedulerConfig};
+use crate::driver::{capacity_search, run_sim, SimScenario};
+use crate::engine::sim::CostModel;
+use crate::scheduler::Scheduler;
+use crate::sim::{Clock, VirtualClock};
+use crate::workload::{table2_rows, Arrival, LengthDist, Workload};
+use anyhow::Result;
+
+// ---------------------------------------------------------------------
+// Fig. 3
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig3Point {
+    pub batch: u32,
+    pub decode_ms: f64,
+    pub throughput: f64,
+}
+
+/// Sweep the decode cost model over batch sizes (paper Fig. 3, llama3-70b
+/// with ~500-token mean context).
+pub fn fig3(ctx_tokens: f64, max_b: u32) -> Vec<Fig3Point> {
+    let model = presets::llama3_70b();
+    let hw = presets::node_for(&model);
+    let cm = CostModel::new(&model, &hw);
+    (1..=max_b)
+        .step_by(1)
+        .map(|b| Fig3Point {
+            batch: b,
+            decode_ms: cm.decode_step(b, (b as f64 * ctx_tokens) as u64)
+                * 1e3,
+            throughput: cm.throughput(b, ctx_tokens),
+        })
+        .collect()
+}
+
+pub fn render_fig3(points: &[Fig3Point]) -> Table {
+    let mut t = Table::new(
+        "Fig. 3 — Φ(b) and D(b) vs batch size (llama3-70b cost model)",
+        &["b", "D(b) ms", "Phi(b) tok/s"],
+    );
+    for p in points.iter().filter(|p| p.batch % 10 == 0 || p.batch == 1) {
+        t.row(vec![
+            p.batch.to_string(),
+            format!("{:.1}", p.decode_ms),
+            format!("{:.0}", p.throughput),
+        ]);
+    }
+    t
+}
+
+/// The anchor readings the paper quotes from Fig. 3.
+pub fn fig3_anchors(points: &[Fig3Point]) -> Vec<(f64, u32, f64)> {
+    // (SLA ms, max b with D(b) ≤ SLA, Φ at that b)
+    [50.0, 80.0]
+        .iter()
+        .map(|&sla| {
+            let best = points
+                .iter()
+                .filter(|p| p.decode_ms <= sla)
+                .last();
+            match best {
+                Some(p) => (sla, p.batch, p.throughput),
+                None => (sla, 0, 0.0),
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Fig. 2
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig2Result {
+    /// (t, used_tokens, capacity_tokens)
+    pub timeline: Vec<(f64, u64, u64)>,
+    pub bt_timeline: Vec<(f64, u32)>,
+}
+
+/// Memory-use timeline under dynamic batching (Alg. 1) with Poisson load.
+pub fn fig2(n_requests: usize) -> Result<Fig2Result> {
+    let model = table_model("llama3-70b");
+    let hardware = presets::node_for(&model);
+    let s = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::MemoryAware,
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "fig2".into(),
+            arrival: Arrival::Bursty { high: 8.0, low: 1.0, period: 30.0 },
+            prompt: LengthDist::around(191.0, 1024),
+            output: LengthDist::around(381.9, 1024),
+            n_requests,
+            seed: 7,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    };
+    // Run manually so we can enable the telemetry timeline.
+    let mut engine =
+        crate::engine::sim::SimEngine::new(&s.model, &s.hardware);
+    let mut sched = Scheduler::new(s.sched.clone(), s.eta_tokens(),
+                                   s.swap_tokens, 191.0, 381.9);
+    sched.telemetry.enable_timeline();
+    let mut clock = VirtualClock::new();
+    let requests = s.workload.generate();
+    crate::driver::run_loop(&mut sched, &mut engine, &mut clock, requests,
+                            10_000_000)?;
+    let _ = clock.now();
+    Ok(Fig2Result {
+        timeline: sched.telemetry.mem_timeline.clone(),
+        bt_timeline: sched.bt_timeline.clone(),
+    })
+}
+
+pub fn render_fig2(r: &Fig2Result) -> String {
+    let utils: Vec<f64> = r
+        .timeline
+        .iter()
+        .map(|(_, used, cap)| *used as f64 / (*cap).max(1) as f64)
+        .collect();
+    // Downsample for the sparkline.
+    let stride = (utils.len() / 100).max(1);
+    let sampled: Vec<f64> =
+        utils.iter().step_by(stride).copied().collect();
+    let peak = utils.iter().cloned().fold(0.0, f64::max);
+    let mean = utils.iter().sum::<f64>() / utils.len().max(1) as f64;
+    format!(
+        "\nFig. 2 — KV memory utilization over time (dynamic batching)\n\
+         utilization: {}\n\
+         mean {:.0}%  peak {:.0}%  (capacity never exceeded: {})\n",
+        sparkline(&sampled),
+        mean * 100.0,
+        peak * 100.0,
+        peak <= 1.0
+    )
+}
+
+pub fn fig2_csv(r: &Fig2Result) -> String {
+    let mut s = String::from("t_s,used_tokens,capacity_tokens\n");
+    for (t, u, c) in &r.timeline {
+        s.push_str(&format!("{t:.3},{u},{c}\n"));
+    }
+    s
+}
+
+// ---------------------------------------------------------------------
+// Fig. 4
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Fig4Result {
+    pub static_qps: f64,
+    pub dynamic_qps: f64,
+    /// Extension: capacity vs SLA sweep [(d_sla, static, dynamic)].
+    pub sweep: Vec<(f64, f64, f64)>,
+}
+
+/// Fig. 4: capacity bars at 50 ms (Table II row 2) (+ SLA sweep when
+/// `sweep_slas` is non-empty).
+pub fn fig4(probe: usize, sweep_slas: &[f64]) -> Result<Fig4Result> {
+    let (model_name, d_sla, workload, _) = &table2_rows()[1];
+    let model = table_model(model_name);
+    let hardware = presets::node_for(&model);
+    let base = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            d_sla: Some(*d_sla),
+            ..SchedulerConfig::default()
+        },
+        workload: workload.clone(),
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    };
+    let cap_for = |policy: PolicyKind, sla: f64| -> Result<f64> {
+        let mut s = base.clone();
+        s.sched.policy = policy;
+        s.sched.d_sla = Some(sla);
+        Ok(capacity_search(&s, sla, s.sched.eps_d, crate::experiments::table2::SLA_PCT, probe, 0.1)?
+            .capacity_qps)
+    };
+    let static_qps = cap_for(PolicyKind::StaticGreedy { max: 256 }, *d_sla)?;
+    let dynamic_qps = cap_for(PolicyKind::Combined, *d_sla)?;
+    let mut sweep = Vec::new();
+    for &sla in sweep_slas {
+        sweep.push((
+            sla,
+            cap_for(PolicyKind::StaticGreedy { max: 256 }, sla)?,
+            cap_for(PolicyKind::Combined, sla)?,
+        ));
+    }
+    Ok(Fig4Result { static_qps, dynamic_qps, sweep })
+}
+
+pub fn render_fig4(r: &Fig4Result) -> String {
+    let mut out = bar_chart(
+        "Fig. 4 — capacity at SLA 50 ms (paper: 5.4 → 6.6 qps)",
+        &[
+            ("static batching".to_string(), r.static_qps),
+            ("dynamic batching".to_string(), r.dynamic_qps),
+        ],
+        "qps",
+    );
+    if !r.sweep.is_empty() {
+        out.push_str("\ncapacity vs SLA (extension):\n");
+        for (sla, s, d) in &r.sweep {
+            out.push_str(&format!(
+                "  D_SLA {:>3.0} ms: static {s:.1} qps, dynamic {d:.1} qps\n",
+                sla * 1e3
+            ));
+        }
+    }
+    out
+}
+
+/// Run one simulated scenario and return metrics (re-export convenience
+/// used by the ablation benches).
+pub fn quick_sim(s: &SimScenario) -> Result<crate::metrics::RunMetrics> {
+    run_sim(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_matches_paper_anchors() {
+        let pts = fig3(500.0, 300);
+        // D(b) strictly increasing, Φ(b) increasing & concave.
+        for w in pts.windows(2) {
+            assert!(w[1].decode_ms > w[0].decode_ms);
+            assert!(w[1].throughput >= w[0].throughput);
+        }
+        let anchors = fig3_anchors(&pts);
+        let (sla50, b50, phi50) = anchors[0];
+        let (sla80, b80, phi80) = anchors[1];
+        assert_eq!(sla50, 50.0);
+        assert_eq!(sla80, 80.0);
+        // Paper: 50 ms → b≈100, Φ≈1 900; 80 ms → b≈230, Φ≈2 700 (±25%).
+        assert!((75..=125).contains(&b50), "b@50ms = {b50}");
+        assert!((172..=288).contains(&b80), "b@80ms = {b80}");
+        assert!((1425.0..=2375.0).contains(&phi50), "phi@50 = {phi50}");
+        assert!((2025.0..=3375.0).contains(&phi80), "phi@80 = {phi80}");
+    }
+
+    #[test]
+    fn fig2_memory_tracks_budget_without_overflow() {
+        let r = fig2(150).unwrap();
+        assert!(!r.timeline.is_empty());
+        let peak = r
+            .timeline
+            .iter()
+            .map(|(_, u, c)| *u as f64 / *c as f64)
+            .fold(0.0, f64::max);
+        assert!(peak <= 1.0, "KV capacity exceeded: {peak}");
+        assert!(peak > 0.5, "memory never loaded: peak={peak}");
+        assert!(!r.bt_timeline.is_empty());
+    }
+}

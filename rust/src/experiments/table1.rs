@@ -1,0 +1,130 @@
+//! Table I — throughput, static vs dynamic batching, infinite arrival
+//! rate, six (model, prompt/output, request-count) rows.
+//!
+//! Baseline: vLLM's static batching (`static-greedy:256` — admit while KV
+//! blocks are free, preempt-recompute under pressure). Dynamic: Algorithm 1
+//! (memory-aware). The paper reports +8%…+28% and GPU utilization moving
+//! from <40% to ~50%; our simulator reproduces the ordering and the
+//! mechanism (preemption-storm avoidance) — see EXPERIMENTS.md for the
+//! measured numbers and the conservative-static comparison.
+
+use super::{scaled_n, table_model};
+use crate::benchkit::Table;
+use crate::config::{presets, PolicyKind, SchedulerConfig};
+use crate::driver::{run_sim, SimScenario};
+use crate::metrics::RunMetrics;
+use crate::workload::table1_rows;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub model: String,
+    pub workload: String,
+    pub n_requests: usize,
+    pub static_metrics: RunMetrics,
+    pub dynamic_metrics: RunMetrics,
+}
+
+impl Row {
+    pub fn improvement(&self) -> f64 {
+        (self.dynamic_metrics.throughput / self.static_metrics.throughput
+            - 1.0)
+            * 100.0
+    }
+}
+
+/// Run all six rows at `scale` (1.0 = the paper's request counts).
+pub fn run(scale: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (model_name, mut workload) in table1_rows() {
+        let model = table_model(model_name);
+        let hardware = presets::node_for(&model);
+        workload.n_requests = scaled_n(workload.n_requests, scale);
+        let base = SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig::default(),
+            workload: workload.clone(),
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let mut st = base.clone();
+        st.sched.policy = PolicyKind::StaticGreedy { max: 256 };
+        let static_metrics = run_sim(&st)?;
+        let mut dy = base.clone();
+        dy.sched.policy = PolicyKind::MemoryAware;
+        let dynamic_metrics = run_sim(&dy)?;
+        rows.push(Row {
+            model: model_name.to_string(),
+            workload: workload.name.clone(),
+            n_requests: workload.n_requests,
+            static_metrics,
+            dynamic_metrics,
+        });
+    }
+    Ok(rows)
+}
+
+/// Paper's reported improvements per row, for the comparison column.
+pub const PAPER_IMPROVEMENT: [f64; 6] = [8.2, 6.5, 12.2, 28.2, 26.0, 8.0];
+
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table I — throughput (tok/s), static vs dynamic, infinite arrivals",
+        &["LLM", "Requests", "Static", "Dynamic", "Improv.", "Paper",
+          "Static preempts", "Util s→d"],
+    );
+    for (i, r) in rows.iter().enumerate() {
+        t.row(vec![
+            r.model.clone(),
+            r.n_requests.to_string(),
+            format!("{:.0}", r.static_metrics.throughput),
+            format!("{:.0}", r.dynamic_metrics.throughput),
+            format!("{:+.1}%", r.improvement()),
+            format!("+{:.1}%", PAPER_IMPROVEMENT.get(i).unwrap_or(&0.0)),
+            r.static_metrics.preemptions.to_string(),
+            format!(
+                "{:.0}%→{:.0}%",
+                r.static_metrics.utilization.unwrap_or(0.0) * 100.0,
+                r.dynamic_metrics.utilization.unwrap_or(0.0) * 100.0
+            ),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Scaled-down Table I (0.3× the paper's request counts — small enough
+    /// for CI, large enough that steady state dominates completion waves):
+    /// dynamic must win every row, decisively on the memory-pressure rows.
+    /// The full-scale numbers are recorded in EXPERIMENTS.md.
+    #[test]
+    fn table1_shape_holds_at_small_scale() {
+        let rows = run(0.3).unwrap();
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.static_metrics.n_requests > 0);
+            assert!(r.dynamic_metrics.throughput > 0.0);
+            assert!(
+                r.improvement() > 0.0,
+                "{}: dynamic lost ({:+.1}%)",
+                r.model,
+                r.improvement()
+            );
+            // Alg.1 all but eliminates preemption.
+            assert!(r.dynamic_metrics.preemptions * 10
+                        <= r.static_metrics.preemptions.max(10),
+                    "{}: dynamic preempts {} vs static {}", r.model,
+                    r.dynamic_metrics.preemptions,
+                    r.static_metrics.preemptions);
+        }
+        // The llama-65b row is the canonical memory-pressure regime.
+        assert!(rows[0].improvement() > 4.0,
+                "llama-65b row: {:+.1}%", rows[0].improvement());
+        // Static baseline must exhibit the preemption-storm mechanism.
+        assert!(rows.iter().all(|r| r.static_metrics.preemptions > 0));
+    }
+}

@@ -1,0 +1,160 @@
+//! Table II — capacity (qps) and throughput under a 50 ms decode SLA,
+//! static vs dynamic, three rows; row 3 runs PD fusion with the adaptive
+//! chunk controller. Fig. 4 is the bar-chart view of row 2.
+
+use super::{scaled_n, table_model};
+use crate::benchkit::Table;
+use crate::config::{presets, PolicyKind, SchedulerConfig};
+use crate::driver::{capacity_search, CapacityResult, SimScenario};
+use crate::workload::table2_rows;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub model: String,
+    pub workload: String,
+    pub d_sla: f64,
+    pub pd_fusion: bool,
+    pub static_cap: CapacityResult,
+    pub dynamic_cap: CapacityResult,
+}
+
+impl Row {
+    pub fn capacity_improvement(&self) -> f64 {
+        if self.static_cap.capacity_qps <= 0.0 {
+            return 0.0;
+        }
+        (self.dynamic_cap.capacity_qps / self.static_cap.capacity_qps - 1.0)
+            * 100.0
+    }
+
+    pub fn throughput_improvement(&self) -> f64 {
+        let s = self.static_cap.at_capacity.throughput;
+        if s <= 0.0 {
+            return 0.0;
+        }
+        (self.dynamic_cap.at_capacity.throughput / s - 1.0) * 100.0
+    }
+}
+
+/// SLA attainment percentile used throughout Table II.
+pub const SLA_PCT: f64 = 99.0;
+
+/// Run the three rows. `scale` shrinks the probe population; capacity runs
+/// auto-extend probes with the offered rate (driver::capacity_search).
+pub fn run(scale: f64) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (model_name, d_sla, workload, pd_fusion) in table2_rows() {
+        let model = table_model(model_name);
+        let hardware = presets::node_for(&model);
+        let probe = scaled_n(workload.n_requests, scale * 0.2).max(150);
+        let sched = SchedulerConfig {
+            d_sla: Some(d_sla),
+            chunk_tokens: if pd_fusion { Some(256) } else { None },
+            adaptive_chunk: false, // set per policy below
+            ..SchedulerConfig::default()
+        };
+        let base = SimScenario {
+            model,
+            hardware,
+            sched,
+            workload: workload.clone(),
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+
+        // Static baseline: vLLM default cap, no latency feedback.
+        let mut st = base.clone();
+        st.sched.policy = PolicyKind::StaticGreedy { max: 256 };
+        let static_cap =
+            capacity_search(&st, d_sla, st.sched.eps_d, SLA_PCT, probe, 0.1)?;
+
+        // Dynamic: min(Alg.1, Alg.2); PD-fusion row also adapts the chunk.
+        let mut dy = base.clone();
+        dy.sched.policy = PolicyKind::Combined;
+        dy.sched.adaptive_chunk = pd_fusion;
+        let dynamic_cap =
+            capacity_search(&dy, d_sla, dy.sched.eps_d, SLA_PCT, probe, 0.1)?;
+
+        rows.push(Row {
+            model: model_name.to_string(),
+            workload: workload.name.clone(),
+            d_sla,
+            pd_fusion,
+            static_cap,
+            dynamic_cap,
+        });
+    }
+    Ok(rows)
+}
+
+/// Paper row references: (capacity static, dynamic), (throughput s, d).
+pub const PAPER: [((f64, f64), (f64, f64)); 3] = [
+    ((3.0, 3.3), (1190.0, 1223.0)),
+    ((5.4, 6.6), (331.0, 405.0)),
+    ((3.0, 3.8), (1322.0, 1665.0)),
+];
+
+pub fn render(rows: &[Row]) -> Table {
+    let mut t = Table::new(
+        "Table II — capacity (qps) & throughput (tok/s) under SLA 50 ms",
+        &["LLM", "Workload", "PD", "Cap static", "Cap dyn", "Cap Δ",
+          "Thr static", "Thr dyn", "Thr Δ", "Paper cap"],
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let paper = PAPER.get(i).map(|p| p.0).unwrap_or((0.0, 0.0));
+        t.row(vec![
+            r.model.clone(),
+            r.workload.clone(),
+            if r.pd_fusion { "yes" } else { "no" }.into(),
+            format!("{:.1}", r.static_cap.capacity_qps),
+            format!("{:.1}", r.dynamic_cap.capacity_qps),
+            format!("{:+.1}%", r.capacity_improvement()),
+            format!("{:.0}", r.static_cap.at_capacity.throughput),
+            format!("{:.0}", r.dynamic_cap.at_capacity.throughput),
+            format!("{:+.1}%", r.throughput_improvement()),
+            format!("{:.1}→{:.1}", paper.0, paper.1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One scaled row (the Fig. 4 row) — dynamic capacity ≥ static.
+    #[test]
+    fn row2_dynamic_capacity_not_worse() {
+        let (model_name, d_sla, workload, _) = &crate::workload::table2_rows()[1];
+        let model = table_model(model_name);
+        let hardware = presets::node_for(&model);
+        let base = SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig {
+                d_sla: Some(*d_sla),
+                ..SchedulerConfig::default()
+            },
+            workload: workload.clone(),
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let mut st = base.clone();
+        st.sched.policy = PolicyKind::StaticGreedy { max: 256 };
+        let sc = capacity_search(&st, *d_sla, 0.002, SLA_PCT, 100, 0.25)
+            .unwrap();
+        let mut dy = base.clone();
+        dy.sched.policy = PolicyKind::Combined;
+        let dc = capacity_search(&dy, *d_sla, 0.002, SLA_PCT, 100, 0.25)
+            .unwrap();
+        assert!(
+            dc.capacity_qps >= sc.capacity_qps * 0.95,
+            "dynamic {:.2} << static {:.2}",
+            dc.capacity_qps,
+            sc.capacity_qps
+        );
+        // At capacity both meet the SLA.
+        assert!(dc.at_capacity.meets_sla(*d_sla, 0.002, SLA_PCT));
+    }
+}

@@ -1,0 +1,452 @@
+//! Paged KV-cache block manager (the vLLM-style memory substrate).
+//!
+//! GPU KV memory is divided into fixed-size blocks of `block_tokens`
+//! tokens. Each running request owns a block table; blocks move between
+//! the GPU free pool, request tables, and an (optional) CPU swap pool.
+//! The manager is purely accounting — actual tensor storage lives in the
+//! engine — but its numbers *are* the memory constraint `M(b_t) ≤ M_max`
+//! the paper's Algorithm 1 manages, so its invariants are property-tested
+//! hard (no leaks, no double-free, exact token↔block arithmetic).
+
+use crate::request::RequestId;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    OutOfBlocks { needed: usize, free: usize },
+    UnknownRequest(RequestId),
+    AlreadyAllocated(RequestId),
+    SwapSpaceExhausted { needed: usize, free: usize },
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { needed, free } => {
+                write!(f, "out of KV blocks: need {needed}, free {free}")
+            }
+            KvError::UnknownRequest(id) => write!(f, "unknown request {id}"),
+            KvError::AlreadyAllocated(id) => {
+                write!(f, "request {id} already has a block table")
+            }
+            KvError::SwapSpaceExhausted { needed, free } => {
+                write!(f, "swap space exhausted: need {needed}, free {free}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+#[derive(Debug, Clone, Default)]
+struct Allocation {
+    blocks: usize,
+    tokens: u32,
+    swapped: bool,
+}
+
+/// Block-granular KV accounting for one device (or TP group).
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    block_tokens: u32,
+    total_blocks: usize,
+    free_blocks: usize,
+    /// CPU swap pool capacity in blocks (0 disables swapping).
+    swap_blocks_total: usize,
+    swap_blocks_free: usize,
+    tables: BTreeMap<RequestId, Allocation>,
+    /// Cumulative counters for telemetry.
+    pub stat_allocs: u64,
+    pub stat_frees: u64,
+    pub stat_swap_outs: u64,
+    pub stat_swap_ins: u64,
+}
+
+impl KvBlockManager {
+    /// `capacity_tokens` is η — the token budget the hardware's KV memory
+    /// allows (HardwareSpec::kv_budget / kv_bytes_per_token).
+    pub fn new(capacity_tokens: u64, block_tokens: u32,
+               swap_capacity_tokens: u64) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = (capacity_tokens / block_tokens as u64) as usize;
+        let swap_blocks = (swap_capacity_tokens / block_tokens as u64) as usize;
+        KvBlockManager {
+            block_tokens,
+            total_blocks,
+            free_blocks: total_blocks,
+            swap_blocks_total: swap_blocks,
+            swap_blocks_free: swap_blocks,
+            tables: BTreeMap::new(),
+            stat_allocs: 0,
+            stat_frees: 0,
+            stat_swap_outs: 0,
+            stat_swap_ins: 0,
+        }
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Capacity in tokens (η, rounded down to block granularity).
+    pub fn capacity_tokens(&self) -> u64 {
+        self.total_blocks as u64 * self.block_tokens as u64
+    }
+
+    /// Tokens currently resident on device (counts whole blocks' reserved
+    /// space — the number the utilization gauge reports).
+    pub fn used_tokens(&self) -> u64 {
+        self.tables
+            .values()
+            .filter(|a| !a.swapped)
+            .map(|a| a.tokens as u64)
+            .sum()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    fn blocks_for(&self, tokens: u32) -> usize {
+        tokens.div_ceil(self.block_tokens) as usize
+    }
+
+    /// Can `tokens` more tokens be appended for `id` (or allocated fresh)
+    /// without exceeding capacity?
+    pub fn can_grow(&self, id: RequestId, tokens: u32) -> bool {
+        let cur = self.tables.get(&id).map(|a| (a.blocks, a.tokens));
+        let (blocks, cur_tokens) = cur.unwrap_or((0, 0));
+        let need = self.blocks_for(cur_tokens + tokens) - blocks;
+        need <= self.free_blocks
+    }
+
+    /// Allocate the initial table for a request's first `tokens` tokens.
+    pub fn allocate(&mut self, id: RequestId, tokens: u32)
+                    -> Result<(), KvError> {
+        if self.tables.contains_key(&id) {
+            return Err(KvError::AlreadyAllocated(id));
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free_blocks {
+            return Err(KvError::OutOfBlocks { needed: need,
+                                              free: self.free_blocks });
+        }
+        self.free_blocks -= need;
+        self.tables.insert(id, Allocation { blocks: need, tokens,
+                                            swapped: false });
+        self.stat_allocs += 1;
+        Ok(())
+    }
+
+    /// Append `tokens` tokens to an existing table (decode growth or the
+    /// next prefill chunk), acquiring new blocks as needed.
+    pub fn grow(&mut self, id: RequestId, tokens: u32) -> Result<(), KvError> {
+        let alloc = self
+            .tables
+            .get_mut(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        debug_assert!(!alloc.swapped, "grow on swapped request");
+        let new_tokens = alloc.tokens + tokens;
+        let need_total = new_tokens.div_ceil(self.block_tokens) as usize;
+        let extra = need_total.saturating_sub(alloc.blocks);
+        if extra > self.free_blocks {
+            return Err(KvError::OutOfBlocks { needed: extra,
+                                              free: self.free_blocks });
+        }
+        alloc.blocks = need_total;
+        alloc.tokens = new_tokens;
+        self.free_blocks -= extra;
+        Ok(())
+    }
+
+    /// Release a request's blocks (finish or recompute-preemption).
+    pub fn free(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let alloc = self
+            .tables
+            .remove(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        if alloc.swapped {
+            self.swap_blocks_free += alloc.blocks;
+        } else {
+            self.free_blocks += alloc.blocks;
+        }
+        self.stat_frees += 1;
+        debug_assert!(self.free_blocks <= self.total_blocks);
+        Ok(alloc.tokens)
+    }
+
+    /// Move a request's blocks to the CPU pool. Returns the bytes-worth of
+    /// blocks moved (in tokens) so the engine can cost the transfer.
+    pub fn swap_out(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let alloc = self
+            .tables
+            .get_mut(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        debug_assert!(!alloc.swapped);
+        if alloc.blocks > self.swap_blocks_free {
+            return Err(KvError::SwapSpaceExhausted {
+                needed: alloc.blocks,
+                free: self.swap_blocks_free,
+            });
+        }
+        self.swap_blocks_free -= alloc.blocks;
+        self.free_blocks += alloc.blocks;
+        alloc.swapped = true;
+        self.stat_swap_outs += 1;
+        Ok(alloc.tokens)
+    }
+
+    /// Bring a swapped request back to the device.
+    pub fn swap_in(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let alloc = self
+            .tables
+            .get_mut(&id)
+            .ok_or(KvError::UnknownRequest(id))?;
+        debug_assert!(alloc.swapped);
+        if alloc.blocks > self.free_blocks {
+            return Err(KvError::OutOfBlocks { needed: alloc.blocks,
+                                              free: self.free_blocks });
+        }
+        self.free_blocks -= alloc.blocks;
+        self.swap_blocks_free += alloc.blocks;
+        alloc.swapped = false;
+        self.stat_swap_ins += 1;
+        Ok(alloc.tokens)
+    }
+
+    pub fn is_swapped(&self, id: RequestId) -> bool {
+        self.tables.get(&id).map(|a| a.swapped).unwrap_or(false)
+    }
+
+    pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
+        self.tables.get(&id).map(|a| a.tokens)
+    }
+
+    pub fn resident_requests(&self) -> usize {
+        self.tables.values().filter(|a| !a.swapped).count()
+    }
+
+    /// Internal consistency check (used by tests and debug assertions):
+    /// free + Σ tables(on-device) == total, same for swap pool.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let dev: usize = self
+            .tables
+            .values()
+            .filter(|a| !a.swapped)
+            .map(|a| a.blocks)
+            .sum();
+        if dev + self.free_blocks != self.total_blocks {
+            return Err(format!(
+                "device leak: used {dev} + free {} != total {}",
+                self.free_blocks, self.total_blocks
+            ));
+        }
+        let swp: usize = self
+            .tables
+            .values()
+            .filter(|a| a.swapped)
+            .map(|a| a.blocks)
+            .sum();
+        if swp + self.swap_blocks_free != self.swap_blocks_total {
+            return Err(format!(
+                "swap leak: used {swp} + free {} != total {}",
+                self.swap_blocks_free, self.swap_blocks_total
+            ));
+        }
+        for (id, a) in &self.tables {
+            let want = a.tokens.div_ceil(self.block_tokens) as usize;
+            if a.blocks != want.max(if a.tokens == 0 { 0 } else { 1 }) {
+                return Err(format!(
+                    "req {id}: {} tokens in {} blocks (want {want})",
+                    a.tokens, a.blocks
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn mgr(tokens: u64) -> KvBlockManager {
+        KvBlockManager::new(tokens, 16, tokens)
+    }
+
+    #[test]
+    fn allocate_grow_free_roundtrip() {
+        let mut m = mgr(1024); // 64 blocks
+        assert_eq!(m.total_blocks(), 64);
+        m.allocate(1, 20).unwrap(); // 2 blocks
+        assert_eq!(m.free_blocks(), 62);
+        assert_eq!(m.used_tokens(), 20);
+        m.grow(1, 12).unwrap(); // 32 tokens → 2 blocks, no extra
+        assert_eq!(m.free_blocks(), 62);
+        m.grow(1, 1).unwrap(); // 33 tokens → 3 blocks
+        assert_eq!(m.free_blocks(), 61);
+        assert_eq!(m.free(1).unwrap(), 33);
+        assert_eq!(m.free_blocks(), 64);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_double_alloc_and_unknown() {
+        let mut m = mgr(256);
+        m.allocate(7, 10).unwrap();
+        assert_eq!(m.allocate(7, 10), Err(KvError::AlreadyAllocated(7)));
+        assert_eq!(m.grow(9, 1), Err(KvError::UnknownRequest(9)));
+        assert_eq!(m.free(9), Err(KvError::UnknownRequest(9)));
+    }
+
+    #[test]
+    fn exhaustion_reports_exact_need() {
+        let mut m = mgr(64); // 4 blocks
+        m.allocate(1, 33).unwrap(); // 3 blocks
+        let err = m.allocate(2, 32).unwrap_err(); // needs 2, free 1
+        assert_eq!(err, KvError::OutOfBlocks { needed: 2, free: 1 });
+        // State unchanged on failure.
+        assert_eq!(m.free_blocks(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_grow_predicts_grow() {
+        let mut m = mgr(64); // 4 blocks
+        m.allocate(1, 16).unwrap(); // 1 block
+        assert!(m.can_grow(1, 48)); // 64 tokens → 4 blocks, need 3, free 3
+        assert!(!m.can_grow(1, 49));
+        assert!(m.can_grow(2, 48)); // fresh alloc prediction
+        assert!(!m.can_grow(2, 49));
+    }
+
+    #[test]
+    fn swap_out_in_cycle() {
+        let mut m = KvBlockManager::new(256, 16, 128);
+        m.allocate(1, 40).unwrap(); // 3 blocks
+        let before_free = m.free_blocks();
+        let toks = m.swap_out(1).unwrap();
+        assert_eq!(toks, 40);
+        assert_eq!(m.free_blocks(), before_free + 3);
+        assert!(m.is_swapped(1));
+        assert_eq!(m.used_tokens(), 0);
+        m.swap_in(1).unwrap();
+        assert!(!m.is_swapped(1));
+        assert_eq!(m.free_blocks(), before_free);
+        m.check_invariants().unwrap();
+        // Freeing a swapped request returns blocks to the swap pool.
+        m.swap_out(1).unwrap();
+        m.free(1).unwrap();
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_space_exhaustion() {
+        let mut m = KvBlockManager::new(256, 16, 32); // swap: 2 blocks
+        m.allocate(1, 48).unwrap(); // 3 blocks
+        assert!(matches!(m.swap_out(1),
+                         Err(KvError::SwapSpaceExhausted { .. })));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut m = mgr(160); // 10 blocks
+        assert_eq!(m.utilization(), 0.0);
+        m.allocate(1, 160).unwrap();
+        assert_eq!(m.utilization(), 1.0);
+        assert_eq!(KvBlockManager::new(0, 16, 0).utilization(), 1.0);
+    }
+
+    /// Property: any interleaving of alloc/grow/free/swap operations
+    /// preserves exact block accounting (no leak, no double-free).
+    #[test]
+    fn prop_no_leaks_under_random_ops() {
+        check("kv accounting", 300, |g| {
+            let cap = g.u64(64..=2048);
+            let block = *g.choose(&[1u32, 8, 16, 32]);
+            let mut m = KvBlockManager::new(cap, block, cap / 2);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..=120) {
+                match g.u64(0..=5) {
+                    0 => {
+                        let t = g.u64(1..=300) as u32;
+                        if m.allocate(next_id, t).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.grow(id, g.u64(1..=64) as u32);
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.usize(0..=live.len() - 1);
+                        let id = live.swap_remove(i);
+                        m.free(id).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.swap_out(id);
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if m.is_swapped(id) {
+                            let _ = m.swap_in(id);
+                        }
+                    }
+                    _ => {}
+                }
+                if let Err(e) = m.check_invariants() {
+                    eprintln!("invariant violated: {e}");
+                    return false;
+                }
+            }
+            // Drain everything; pool must return to full.
+            for id in live {
+                m.free(id).unwrap();
+            }
+            m.free_blocks() == m.total_blocks()
+                && m.check_invariants().is_ok()
+        });
+    }
+
+    /// Property: used_tokens never exceeds capacity_tokens.
+    #[test]
+    fn prop_capacity_respected() {
+        check("kv capacity", 200, |g| {
+            let cap = g.u64(32..=512);
+            let mut m = KvBlockManager::new(cap, 16, 0);
+            let mut id = 0u64;
+            for _ in 0..g.usize(1..=60) {
+                let t = g.u64(1..=128) as u32;
+                let _ = m.allocate(id, t);
+                let _ = m.grow(id, g.u64(1..=32) as u32);
+                id += 1;
+            }
+            m.used_tokens() <= m.capacity_tokens()
+                && m.used_blocks() <= m.total_blocks()
+        });
+    }
+}

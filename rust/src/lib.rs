@@ -1,0 +1,28 @@
+//! # dynabatch
+//!
+//! Memory-aware and SLA-constrained dynamic batching for LLM inference
+//! serving — a full-stack reproduction of Pang, Li & Wang (CS.DC 2025).
+//!
+//! Three layers (see DESIGN.md): a rust coordinator (this crate) on the
+//! request path, a JAX TinyGPT model and Pallas attention kernels compiled
+//! once to HLO-text artifacts (`python/compile/`), and the PJRT runtime
+//! that executes them ([`runtime`]). The paper-scale models run through a
+//! calibrated discrete-event simulator ([`engine::sim`]).
+
+pub mod batching;
+pub mod benchkit;
+pub mod config;
+pub mod driver;
+pub mod engine;
+pub mod experiments;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod telemetry;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

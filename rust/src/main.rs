@@ -1,0 +1,305 @@
+//! dynabatch launcher: experiments, capacity search, workload tooling, and
+//! the live PJRT-backed serving frontend.
+
+use anyhow::{anyhow, Result};
+use dynabatch::config::{presets, PolicyKind, SchedulerConfig};
+use dynabatch::driver::{capacity_search, run_sim, SimScenario};
+use dynabatch::engine::pjrt::PjrtEngine;
+use dynabatch::engine::Engine;
+use dynabatch::experiments::{ablations, figures, table1, table2};
+use dynabatch::scheduler::Scheduler;
+use dynabatch::server;
+use dynabatch::util::cli::Command;
+use dynabatch::workload::{trace, Arrival, LengthDist, Workload};
+use std::path::Path;
+
+fn cli() -> Command {
+    Command::new("dynabatch",
+                 "memory-aware & SLA-constrained dynamic batching")
+        .subcommand(
+            Command::new("table1", "reproduce Table I (throughput)")
+                .opt("scale", "1.0", "request-count scale factor"),
+        )
+        .subcommand(
+            Command::new("table2", "reproduce Table II (capacity under SLA)")
+                .opt("scale", "1.0", "probe scale factor"),
+        )
+        .subcommand(
+            Command::new("fig2", "memory-utilization timeline")
+                .opt("requests", "400", "number of requests")
+                .opt("csv", "", "optional CSV output path"),
+        )
+        .subcommand(
+            Command::new("fig3", "D(b) and Phi(b) sweep")
+                .opt("ctx", "500", "mean context tokens per request")
+                .opt("max-b", "300", "largest batch size"),
+        )
+        .subcommand(
+            Command::new("fig4", "capacity bars at SLA 50ms")
+                .opt("probe", "300", "probe request count")
+                .flag("sweep", "also sweep capacity over SLA values"),
+        )
+        .subcommand(
+            Command::new("ablations", "run the ablation suite")
+                .opt("requests", "200", "requests per ablation run"),
+        )
+        .subcommand(
+            Command::new("run", "run one custom simulated scenario")
+                .opt("model", "llama-65b", "model preset")
+                .opt("policy", "dynamic",
+                     "static-greedy[:N] | static-fixed:N | alg1 | \
+                      alg1-exact | alg2 | dynamic")
+                .opt("requests", "500", "request count")
+                .opt("rate", "inf", "arrival rate qps, or 'inf'")
+                .opt("prompt-mean", "128", "mean prompt tokens")
+                .opt("output-mean", "256", "mean output tokens")
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)")
+                .opt("seed", "42", "workload seed")
+                .flag("json", "emit metrics as JSON"),
+        )
+        .subcommand(
+            Command::new("capacity", "binary-search capacity under an SLA")
+                .opt("model", "llama3-70b", "model preset")
+                .opt("policy", "dynamic", "batching policy")
+                .opt("d-sla", "50", "decode SLA in ms")
+                .opt("prompt-mean", "256.6", "mean prompt tokens")
+                .opt("output-mean", "61.5", "mean output tokens")
+                .opt("probe", "300", "probe request count"),
+        )
+        .subcommand(
+            Command::new("serve", "serve the real TinyGPT over TCP (PJRT)")
+                .opt("artifacts", "artifacts", "AOT artifacts directory")
+                .opt("bind", "127.0.0.1:7077", "listen address")
+                .opt("policy", "dynamic", "batching policy")
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)"),
+        )
+        .subcommand(
+            Command::new("workload", "generate a workload trace (JSONL)")
+                .opt("out", "trace.jsonl", "output path")
+                .opt("requests", "1000", "request count")
+                .opt("rate", "5", "Poisson arrival rate qps, or 'inf'")
+                .opt("prompt-mean", "128", "mean prompt tokens")
+                .opt("output-mean", "256", "mean output tokens")
+                .opt("seed", "42", "seed"),
+        )
+}
+
+fn parse_arrival(rate: &str) -> Result<Arrival> {
+    if rate == "inf" || rate == "infinite" {
+        Ok(Arrival::AllAtOnce)
+    } else {
+        Ok(Arrival::Poisson { rate: rate.parse()? })
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = cli();
+    let matches = match cmd.parse(&args) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let Some((name, sub)) = matches.subcommand else {
+        eprintln!("{}", cli().help_text());
+        std::process::exit(2);
+    };
+    let r = match name.as_str() {
+        "table1" => cmd_table1(&sub),
+        "table2" => cmd_table2(&sub),
+        "fig2" => cmd_fig2(&sub),
+        "fig3" => cmd_fig3(&sub),
+        "fig4" => cmd_fig4(&sub),
+        "ablations" => cmd_ablations(&sub),
+        "run" => cmd_run(&sub),
+        "capacity" => cmd_capacity(&sub),
+        "serve" => cmd_serve(&sub),
+        "workload" => cmd_workload(&sub),
+        _ => unreachable!(),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+type M = dynabatch::util::cli::Matches;
+
+fn cmd_table1(m: &M) -> Result<()> {
+    let rows = table1::run(m.get_f64("scale")?)?;
+    table1::render(&rows).print();
+    Ok(())
+}
+
+fn cmd_table2(m: &M) -> Result<()> {
+    let rows = table2::run(m.get_f64("scale")?)?;
+    table2::render(&rows).print();
+    Ok(())
+}
+
+fn cmd_fig2(m: &M) -> Result<()> {
+    let r = figures::fig2(m.get_usize("requests")?)?;
+    print!("{}", figures::render_fig2(&r));
+    let csv = m.get("csv");
+    if !csv.is_empty() {
+        std::fs::write(csv, figures::fig2_csv(&r))?;
+        println!("wrote {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_fig3(m: &M) -> Result<()> {
+    let pts = figures::fig3(m.get_f64("ctx")?, m.get_usize("max-b")? as u32);
+    figures::render_fig3(&pts).print();
+    for (sla, b, phi) in figures::fig3_anchors(&pts) {
+        println!("SLA {sla:.0} ms → b ≈ {b}, Φ ≈ {phi:.0} tok/s");
+    }
+    println!("(paper: 50 ms → b≈100, Φ≈1900; 80 ms → b≈230, Φ≈2700)");
+    Ok(())
+}
+
+fn cmd_fig4(m: &M) -> Result<()> {
+    let sweep: Vec<f64> = if m.get_flag("sweep") {
+        vec![0.030, 0.040, 0.050, 0.065, 0.080]
+    } else {
+        vec![]
+    };
+    let r = figures::fig4(m.get_usize("probe")?, &sweep)?;
+    print!("{}", figures::render_fig4(&r));
+    Ok(())
+}
+
+fn cmd_ablations(m: &M) -> Result<()> {
+    let n = m.get_usize("requests")?;
+    ablations::linear_vs_exact(n)?.print();
+    ablations::interval_sweep(n)?.print();
+    ablations::eps_mem_sweep(n)?.print();
+    ablations::preempt_mode(n)?.print();
+    ablations::alpha_delta_sweep(n)?.print();
+    ablations::rlhf_sampling(n)?.print();
+    Ok(())
+}
+
+fn scenario_from(m: &M) -> Result<SimScenario> {
+    let model = dynabatch::experiments::table_model(m.get("model"));
+    let hardware = presets::node_for(&model);
+    let d_sla_ms = m.get_f64("d-sla")?;
+    let sched = SchedulerConfig {
+        policy: PolicyKind::parse(m.get("policy"))?,
+        d_sla: if d_sla_ms > 0.0 { Some(d_sla_ms / 1e3) } else { None },
+        ..SchedulerConfig::default()
+    };
+    let prompt_mean = m.get_f64("prompt-mean")?;
+    let output_mean = m.get_f64("output-mean")?;
+    Ok(SimScenario {
+        model,
+        hardware,
+        sched,
+        workload: Workload {
+            name: "cli".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::around(prompt_mean, 4096),
+            output: LengthDist::around(output_mean, 4096),
+            n_requests: 500,
+            seed: 42,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    })
+}
+
+fn cmd_run(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    s.workload.n_requests = m.get_usize("requests")?;
+    s.workload.seed = m.get_u64("seed")?;
+    s.workload.arrival = parse_arrival(m.get("rate"))?;
+    let metrics = run_sim(&s)?;
+    if m.get_flag("json") {
+        println!("{}", metrics.to_json().to_string_pretty());
+    } else {
+        println!(
+            "policy={} throughput={:.0} tok/s  mean_batch={:.1}  \
+             tbt p50/p95/p99 = {:.1}/{:.1}/{:.1} ms  ttft p95={:.2} s  \
+             preempts={}  util={:.0}%",
+            metrics.policy,
+            metrics.throughput,
+            metrics.mean_batch,
+            metrics.tbt_p50 * 1e3,
+            metrics.tbt_p95 * 1e3,
+            metrics.tbt_p99 * 1e3,
+            metrics.ttft_p95,
+            metrics.preemptions,
+            metrics.utilization.unwrap_or(0.0) * 100.0,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_capacity(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    let d_sla = m.get_f64("d-sla")? / 1e3;
+    s.sched.d_sla = Some(d_sla);
+    let cap = capacity_search(&s, d_sla, s.sched.eps_d, 95.0,
+                              m.get_usize("probe")?, 0.1)?;
+    println!(
+        "capacity = {:.1} qps (throughput {:.0} tok/s, tbt_p95 {:.1} ms)",
+        cap.capacity_qps,
+        cap.at_capacity.throughput,
+        cap.at_capacity.tbt_p95 * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_serve(m: &M) -> Result<()> {
+    let dir = Path::new(m.get("artifacts"));
+    if !dir.join("manifest.json").exists() {
+        return Err(anyhow!(
+            "no artifacts at {} — run `make artifacts` first",
+            dir.display()
+        ));
+    }
+    // Probe the manifest on this thread for config; the engine itself is
+    // built on the serving thread (PJRT handles are not Send).
+    let manifest = dynabatch::runtime::manifest::Manifest::load(
+        &dir.join("manifest.json"))?;
+    let max_seq = manifest.max_seq;
+    let max_batch = *manifest.buckets.iter().max().unwrap_or(&1);
+    let d_sla_ms = m.get_f64("d-sla")?;
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::parse(m.get("policy"))?,
+        b_max: max_batch,
+        d_sla: if d_sla_ms > 0.0 { Some(d_sla_ms / 1e3) } else { None },
+        ..SchedulerConfig::default()
+    };
+    // η for the real engine: slots × context window.
+    let eta = max_batch as u64 * max_seq as u64;
+    let sched = Scheduler::new(cfg, eta, 0, 32.0, 32.0);
+    let dir = dir.to_path_buf();
+    let server = server::serve(
+        move || Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>),
+        sched,
+        m.get("bind"),
+    )?;
+    println!("serving on {} — protocol: line-delimited JSON \
+              ({{\"op\":\"generate\",...}})", server.local_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_workload(m: &M) -> Result<()> {
+    let w = Workload {
+        name: "generated".into(),
+        arrival: parse_arrival(m.get("rate"))?,
+        prompt: LengthDist::around(m.get_f64("prompt-mean")?, 4096),
+        output: LengthDist::around(m.get_f64("output-mean")?, 4096),
+        n_requests: m.get_usize("requests")?,
+        seed: m.get_u64("seed")?,
+    };
+    let reqs = w.generate();
+    trace::save(Path::new(m.get("out")), &reqs)?;
+    println!("wrote {} requests to {}", reqs.len(), m.get("out"));
+    Ok(())
+}

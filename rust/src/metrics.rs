@@ -1,0 +1,187 @@
+//! Run-level metrics: the numbers the paper's tables report, computed from
+//! finished requests + the scheduler's step log.
+
+use crate::request::Request;
+use crate::scheduler::SchedStats;
+use crate::util::json::Json;
+use crate::util::stats::percentile_of;
+
+/// Everything a single experiment run yields.
+#[derive(Debug, Clone)]
+pub struct RunMetrics {
+    pub policy: String,
+    pub n_requests: usize,
+    pub n_finished: usize,
+    /// Generated tokens (the paper's throughput numerator).
+    pub output_tokens: u64,
+    /// Prompt + generated tokens processed.
+    pub total_tokens: u64,
+    /// Virtual/wall time from first submit to last completion.
+    pub makespan: f64,
+    /// Output tokens per second — Table I/II "Throughput (token/s)".
+    pub throughput: f64,
+    /// Decode-step latency stats (the SLA object, "TBT").
+    pub tbt_mean: f64,
+    pub tbt_p50: f64,
+    pub tbt_p95: f64,
+    pub tbt_p99: f64,
+    pub ttft_mean: f64,
+    pub ttft_p95: f64,
+    pub e2e_mean: f64,
+    /// Mean decode batch size over decode steps.
+    pub mean_batch: f64,
+    pub preemptions: u64,
+    pub swaps: u64,
+    /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
+    pub utilization: Option<f64>,
+}
+
+impl RunMetrics {
+    pub fn compute(policy: String, finished: &[Request], stats: &SchedStats,
+                   decode_latencies: &[f64], makespan: f64,
+                   utilization: Option<f64>) -> Self {
+        let output_tokens: u64 =
+            finished.iter().map(|r| r.generated as u64).sum();
+        let total_tokens: u64 = finished
+            .iter()
+            .map(|r| (r.generated + r.prompt_len) as u64)
+            .sum();
+        let mut lat = decode_latencies.to_vec();
+        let mut ttfts: Vec<f64> =
+            finished.iter().filter_map(|r| r.ttft()).collect();
+        let e2es: Vec<f64> =
+            finished.iter().filter_map(|r| r.e2e_latency()).collect();
+        let mean = |xs: &[f64]| {
+            if xs.is_empty() { 0.0 } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        RunMetrics {
+            policy,
+            n_requests: finished.len(),
+            n_finished: finished.iter().filter(|r| r.generated > 0).count(),
+            output_tokens,
+            total_tokens,
+            makespan,
+            throughput: if makespan > 0.0 {
+                output_tokens as f64 / makespan
+            } else {
+                0.0
+            },
+            tbt_mean: mean(&lat),
+            tbt_p50: percentile_of(&mut lat, 50.0),
+            tbt_p95: percentile_of(&mut lat, 95.0),
+            tbt_p99: percentile_of(&mut lat, 99.0),
+            ttft_mean: mean(&ttfts),
+            ttft_p95: percentile_of(&mut ttfts, 95.0),
+            e2e_mean: mean(&e2es),
+            mean_batch: if stats.decode_steps > 0 {
+                stats.decode_batch_sum as f64 / stats.decode_steps as f64
+            } else {
+                0.0
+            },
+            preemptions: stats.preempt_recompute,
+            swaps: stats.preempt_swap,
+            utilization,
+        }
+    }
+
+    /// Does this run meet an SLA on decode latency at percentile `pct`?
+    pub fn meets_sla(&self, d_sla: f64, eps_d: f64, pct: f64) -> bool {
+        let v = match pct {
+            p if (p - 50.0).abs() < 1e-9 => self.tbt_p50,
+            p if (p - 95.0).abs() < 1e-9 => self.tbt_p95,
+            p if (p - 99.0).abs() < 1e-9 => self.tbt_p99,
+            _ => self.tbt_mean,
+        };
+        v <= d_sla + eps_d
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("policy", Json::from(self.policy.clone())),
+            ("n_requests", Json::from(self.n_requests)),
+            ("n_finished", Json::from(self.n_finished)),
+            ("output_tokens", Json::from(self.output_tokens)),
+            ("total_tokens", Json::from(self.total_tokens)),
+            ("makespan_s", Json::Num(self.makespan)),
+            ("throughput_tok_s", Json::Num(self.throughput)),
+            ("tbt_mean_s", Json::Num(self.tbt_mean)),
+            ("tbt_p50_s", Json::Num(self.tbt_p50)),
+            ("tbt_p95_s", Json::Num(self.tbt_p95)),
+            ("tbt_p99_s", Json::Num(self.tbt_p99)),
+            ("ttft_mean_s", Json::Num(self.ttft_mean)),
+            ("ttft_p95_s", Json::Num(self.ttft_p95)),
+            ("e2e_mean_s", Json::Num(self.e2e_mean)),
+            ("mean_batch", Json::Num(self.mean_batch)),
+            ("preemptions", Json::from(self.preemptions)),
+            ("swaps", Json::from(self.swaps)),
+            (
+                "utilization",
+                self.utilization.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::request::Phase;
+
+    fn finished_req(id: u64, prompt: u32, gen: u32, t0: f64, t1: f64)
+                    -> Request {
+        let mut r = Request::new(id, prompt, gen, t0);
+        r.phase = Phase::Decode;
+        r.prefilled = prompt;
+        let dt = (t1 - t0) / gen as f64;
+        for i in 0..gen {
+            r.record_token(t0 + dt * (i + 1) as f64);
+        }
+        r
+    }
+
+    #[test]
+    fn throughput_and_percentiles() {
+        let reqs: Vec<Request> =
+            (0..10).map(|i| finished_req(i, 100, 50, 0.0, 10.0)).collect();
+        let stats = SchedStats { decode_steps: 50, decode_batch_sum: 500,
+                                 ..Default::default() };
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let m = RunMetrics::compute("test".into(), &reqs, &stats, &lat, 10.0,
+                                    Some(0.5));
+        assert_eq!(m.output_tokens, 500);
+        assert_eq!(m.total_tokens, 1500);
+        assert!((m.throughput - 50.0).abs() < 1e-9);
+        assert!((m.mean_batch - 10.0).abs() < 1e-9);
+        assert!(m.tbt_p99 > m.tbt_p50);
+        assert!((m.tbt_mean - 0.0505).abs() < 1e-6);
+        assert_eq!(m.utilization, Some(0.5));
+    }
+
+    #[test]
+    fn sla_check_uses_percentile() {
+        let reqs = vec![finished_req(0, 10, 5, 0.0, 1.0)];
+        let stats = SchedStats::default();
+        // p95 = ~0.0955
+        let lat: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let m = RunMetrics::compute("t".into(), &reqs, &stats, &lat, 1.0,
+                                    None);
+        assert!(m.meets_sla(0.100, 0.0, 95.0));
+        assert!(!m.meets_sla(0.050, 0.0, 95.0));
+        assert!(m.meets_sla(0.051, 0.0, 50.0));
+        assert!(!m.meets_sla(0.090, 0.0, 99.0));
+    }
+
+    #[test]
+    fn json_serializes() {
+        let m = RunMetrics::compute("t".into(), &[], &SchedStats::default(),
+                                    &[], 0.0, None);
+        let j = m.to_json();
+        assert_eq!(j.get("policy").as_str(), Some("t"));
+        assert!(j.get("utilization").is_null());
+        // parses back
+        let s = j.to_string();
+        assert!(crate::util::json::Json::parse(&s).is_ok());
+    }
+}

@@ -1,0 +1,237 @@
+//! Request lifecycle: the unit of work flowing router → queue → scheduler
+//! → engine, with the timestamps the metrics layer needs (TTFT, TBT, SLA
+//! attainment).
+
+pub type RequestId = u64;
+
+/// Where a request currently is in its lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// In the waiting queue; no KV allocated.
+    Waiting,
+    /// Admitted; prompt (or a prefix of it) is being prefilled.
+    Prefill,
+    /// Generating tokens.
+    Decode,
+    /// Victim of a memory-pressure preemption, waiting to resume.
+    Preempted,
+    /// Done (all tokens generated or aborted).
+    Finished,
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    /// Prompt length in tokens (the actual token ids live engine-side; the
+    /// scheduler only needs counts).
+    pub prompt_len: u32,
+    /// Generation budget: the request finishes after this many new tokens.
+    pub max_new_tokens: u32,
+    /// Arrival time (scheduler clock, seconds).
+    pub arrived_at: f64,
+
+    // ---- mutable progress ----
+    pub phase: Phase,
+    /// Prompt tokens prefilled so far (chunked prefill advances this).
+    pub prefilled: u32,
+    /// Tokens generated so far.
+    pub generated: u32,
+    /// First-token emission time.
+    pub first_token_at: Option<f64>,
+    /// Completion time.
+    pub finished_at: Option<f64>,
+    /// Number of times this request was preempted.
+    pub preemptions: u32,
+    /// Engine slot while running (PJRT engine bookkeeping).
+    pub slot: Option<usize>,
+    /// Raw prompt token ids (real-engine path only; empty in simulation).
+    pub prompt_tokens: Vec<i32>,
+    /// Generated token ids (real-engine path only).
+    pub output_tokens: Vec<i32>,
+}
+
+impl Request {
+    pub fn new(id: RequestId, prompt_len: u32, max_new_tokens: u32,
+               arrived_at: f64) -> Self {
+        Request {
+            id,
+            prompt_len,
+            max_new_tokens,
+            arrived_at,
+            phase: Phase::Waiting,
+            prefilled: 0,
+            generated: 0,
+            first_token_at: None,
+            finished_at: None,
+            preemptions: 0,
+            slot: None,
+            prompt_tokens: Vec::new(),
+            output_tokens: Vec::new(),
+        }
+    }
+
+    pub fn with_tokens(id: RequestId, prompt_tokens: Vec<i32>,
+                       max_new_tokens: u32, arrived_at: f64) -> Self {
+        let mut r = Self::new(id, prompt_tokens.len() as u32, max_new_tokens,
+                              arrived_at);
+        r.prompt_tokens = prompt_tokens;
+        r
+    }
+
+    /// Tokens currently resident in the KV cache for this request.
+    pub fn cached_tokens(&self) -> u32 {
+        match self.phase {
+            Phase::Waiting | Phase::Preempted | Phase::Finished => 0,
+            _ => self.prefilled + self.generated,
+        }
+    }
+
+    /// Total tokens this request will eventually occupy (the scheduler's
+    /// worst-case growth bound).
+    pub fn final_tokens(&self) -> u32 {
+        self.prompt_len + self.max_new_tokens
+    }
+
+    pub fn prefill_done(&self) -> bool {
+        self.prefilled >= self.prompt_len
+    }
+
+    pub fn decode_done(&self) -> bool {
+        self.generated >= self.max_new_tokens
+    }
+
+    pub fn is_running(&self) -> bool {
+        matches!(self.phase, Phase::Prefill | Phase::Decode)
+    }
+
+    /// Record one generated token at time `now`; returns true if finished.
+    pub fn record_token(&mut self, now: f64) -> bool {
+        debug_assert!(self.phase == Phase::Decode || self.prefill_done());
+        self.generated += 1;
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(now);
+        }
+        if self.decode_done() {
+            self.phase = Phase::Finished;
+            self.finished_at = Some(now);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Reset to re-run from scratch after a recompute-preemption (vLLM
+    /// semantics: generated tokens are re-derived greedily, so progress
+    /// counts are kept but the cache must be rebuilt; the prompt AND the
+    /// already-generated tokens are re-prefilled on resume).
+    pub fn preempt_recompute(&mut self) {
+        debug_assert!(self.is_running());
+        self.preemptions += 1;
+        self.phase = Phase::Preempted;
+        // All prefill progress is lost; generated tokens stay (they will be
+        // re-prefilled as part of the restored context).
+        self.prefilled = 0;
+        self.slot = None;
+    }
+
+    /// Tokens that must be prefilled when resuming after recompute:
+    /// prompt + already-generated context.
+    pub fn resume_prefill_tokens(&self) -> u32 {
+        self.prompt_len + self.generated
+    }
+
+    // ---- metrics ----
+
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrived_at)
+    }
+
+    pub fn e2e_latency(&self) -> Option<f64> {
+        self.finished_at.map(|t| t - self.arrived_at)
+    }
+
+    /// Mean time between tokens over the decode phase.
+    pub fn mean_tbt(&self) -> Option<f64> {
+        match (self.first_token_at, self.finished_at) {
+            (Some(f), Some(d)) if self.generated > 1 => {
+                Some((d - f) / (self.generated - 1) as f64)
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut r = Request::new(1, 10, 3, 0.0);
+        assert_eq!(r.phase, Phase::Waiting);
+        assert_eq!(r.cached_tokens(), 0);
+        assert_eq!(r.final_tokens(), 13);
+
+        r.phase = Phase::Prefill;
+        r.prefilled = 10;
+        assert!(r.prefill_done());
+        r.phase = Phase::Decode;
+        assert_eq!(r.cached_tokens(), 10);
+
+        assert!(!r.record_token(1.0));
+        assert!(!r.record_token(1.1));
+        assert!(r.record_token(1.2));
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.ttft(), Some(1.0));
+        assert_eq!(r.e2e_latency(), Some(1.2));
+        let tbt = r.mean_tbt().unwrap();
+        assert!((tbt - 0.1).abs() < 1e-9, "tbt={tbt}");
+    }
+
+    #[test]
+    fn chunked_prefill_progress() {
+        let mut r = Request::new(2, 100, 5, 0.0);
+        r.phase = Phase::Prefill;
+        r.prefilled = 64;
+        assert!(!r.prefill_done());
+        assert_eq!(r.cached_tokens(), 64);
+        r.prefilled = 100;
+        assert!(r.prefill_done());
+    }
+
+    #[test]
+    fn recompute_preemption_resets_cache_keeps_progress() {
+        let mut r = Request::new(3, 20, 10, 0.0);
+        r.phase = Phase::Prefill;
+        r.prefilled = 20;
+        r.phase = Phase::Decode;
+        r.record_token(0.5);
+        r.record_token(0.6);
+        r.preempt_recompute();
+        assert_eq!(r.phase, Phase::Preempted);
+        assert_eq!(r.generated, 2);
+        assert_eq!(r.prefilled, 0);
+        assert_eq!(r.cached_tokens(), 0);
+        assert_eq!(r.resume_prefill_tokens(), 22);
+        assert_eq!(r.preemptions, 1);
+        // TTFT survives preemption (first token already emitted).
+        assert_eq!(r.ttft(), Some(0.5));
+    }
+
+    #[test]
+    fn single_token_request_has_no_tbt() {
+        let mut r = Request::new(4, 5, 1, 0.0);
+        r.phase = Phase::Decode;
+        r.prefilled = 5;
+        assert!(r.record_token(2.0));
+        assert_eq!(r.mean_tbt(), None);
+        assert_eq!(r.e2e_latency(), Some(2.0));
+    }
+
+    #[test]
+    fn with_tokens_sets_len() {
+        let r = Request::with_tokens(5, vec![1, 2, 3], 4, 0.0);
+        assert_eq!(r.prompt_len, 3);
+        assert_eq!(r.prompt_tokens, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,272 @@
+//! Artifact manifest parsing — the contract between `python/compile/aot.py`
+//! and the rust runtime (arg order, state layout, file index).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// The argument convention this runtime implements. aot.py stamps the
+/// manifest with the same string; a mismatch means the artifacts predate
+/// (or postdate) this loader.
+pub const ARG_CONVENTION: &str = "weights-then-state-v2";
+
+#[derive(Debug, Clone)]
+pub struct WeightEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model_name: String,
+    pub vocab: u32,
+    pub d_model: u32,
+    pub n_layers: u32,
+    pub n_heads: u32,
+    pub d_head: u32,
+    pub max_seq: u32,
+    pub param_count: u64,
+    pub kv_bytes_per_token: u64,
+    pub seed: u64,
+    pub bos_id: i32,
+    pub pad_id: i32,
+    pub weights_file: String,
+    pub weights: Vec<WeightEntry>,
+    pub buckets: Vec<u32>,
+    pub chunk_sizes: Vec<u32>,
+    pub state_sizes: BTreeMap<u32, usize>,
+    pub decode_files: BTreeMap<u32, String>,
+    pub read_tokens_files: BTreeMap<u32, String>,
+    pub prefill_files: BTreeMap<(u32, u32), String>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let conv = j.get("arg_convention").as_str().unwrap_or("");
+        if conv != ARG_CONVENTION {
+            bail!("artifact convention '{conv}' != expected \
+                   '{ARG_CONVENTION}' — rebuild with `make artifacts`");
+        }
+        let model = j.get("model");
+        let gu = |v: &Json, k: &str| -> Result<u64> {
+            v.get(k).as_u64().with_context(|| format!("manifest {k}"))
+        };
+
+        let mut weights = Vec::new();
+        for w in j.get("weights").as_arr().context("weights[]")? {
+            weights.push(WeightEntry {
+                name: w.get("name").as_str().context("weight name")?.into(),
+                shape: w
+                    .get("shape")
+                    .as_arr()
+                    .context("weight shape")?
+                    .iter()
+                    .map(|x| x.as_usize().context("shape dim"))
+                    .collect::<Result<_>>()?,
+                offset_bytes: w
+                    .get("offset_bytes")
+                    .as_usize()
+                    .context("offset")?,
+                size_bytes: w.get("size_bytes").as_usize().context("size")?,
+            });
+        }
+        if weights.is_empty() {
+            bail!("manifest has no weights");
+        }
+
+        let buckets: Vec<u32> = j
+            .get("buckets")
+            .as_arr()
+            .context("buckets[]")?
+            .iter()
+            .map(|x| x.as_u64().map(|v| v as u32).context("bucket"))
+            .collect::<Result<_>>()?;
+        let chunk_sizes: Vec<u32> = j
+            .get("chunk_sizes")
+            .as_arr()
+            .context("chunk_sizes[]")?
+            .iter()
+            .map(|x| x.as_u64().map(|v| v as u32).context("chunk"))
+            .collect::<Result<_>>()?;
+
+        let mut decode_files = BTreeMap::new();
+        for (k, v) in j.get("decode").as_obj().context("decode{}")? {
+            decode_files.insert(k.parse::<u32>().context("decode bucket")?,
+                                v.as_str().context("decode file")?.into());
+        }
+        let mut read_tokens_files = BTreeMap::new();
+        for (k, v) in j.get("read_tokens").as_obj().context("read_tokens{}")? {
+            read_tokens_files.insert(
+                k.parse::<u32>().context("read bucket")?,
+                v.as_str().context("read file")?.into(),
+            );
+        }
+        let mut prefill_files = BTreeMap::new();
+        for (k, per) in j.get("prefill").as_obj().context("prefill{}")? {
+            let b: u32 = k.parse().context("prefill bucket")?;
+            for (ck, v) in per.as_obj().context("prefill chunks")? {
+                prefill_files.insert(
+                    (b, ck.parse::<u32>().context("prefill chunk")?),
+                    v.as_str().context("prefill file")?.to_string(),
+                );
+            }
+        }
+        let mut state_sizes = BTreeMap::new();
+        for (k, v) in j.get("state_sizes").as_obj().context("state_sizes{}")? {
+            state_sizes.insert(k.parse::<u32>().context("state bucket")?,
+                               v.as_usize().context("state size")?);
+        }
+
+        let m = Manifest {
+            model_name: model.get("name").as_str().unwrap_or("?").into(),
+            vocab: gu(&model, "vocab")? as u32,
+            d_model: gu(&model, "d_model")? as u32,
+            n_layers: gu(&model, "n_layers")? as u32,
+            n_heads: gu(&model, "n_heads")? as u32,
+            d_head: gu(&model, "d_head")? as u32,
+            max_seq: gu(&model, "max_seq")? as u32,
+            param_count: gu(&model, "param_count")?,
+            kv_bytes_per_token: gu(&model, "kv_bytes_per_token")?,
+            seed: j.get("seed").as_u64().unwrap_or(0),
+            bos_id: j.get("bos_id").as_i64().context("bos_id")? as i32,
+            pad_id: j.get("pad_id").as_i64().context("pad_id")? as i32,
+            weights_file: j
+                .get("weights_file")
+                .as_str()
+                .context("weights_file")?
+                .into(),
+            weights,
+            buckets,
+            chunk_sizes,
+            state_sizes,
+            decode_files,
+            read_tokens_files,
+            prefill_files,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn validate(&self) -> Result<()> {
+        for &b in &self.buckets {
+            if !self.decode_files.contains_key(&b) {
+                bail!("bucket {b}: missing decode executable");
+            }
+            if !self.read_tokens_files.contains_key(&b) {
+                bail!("bucket {b}: missing read_tokens executable");
+            }
+            if !self.state_sizes.contains_key(&b) {
+                bail!("bucket {b}: missing state size");
+            }
+            let expect = 2
+                * self.n_layers as usize
+                * b as usize
+                * self.max_seq as usize
+                * self.n_heads as usize
+                * self.d_head as usize
+                + b as usize;
+            if self.state_sizes[&b] != expect {
+                bail!("bucket {b}: state size {} != computed {expect}",
+                      self.state_sizes[&b]);
+            }
+            for &c in &self.chunk_sizes {
+                if !self.prefill_files.contains_key(&(b, c)) {
+                    bail!("bucket {b} chunk {c}: missing prefill executable");
+                }
+            }
+        }
+        // Weight table must be contiguous from 0.
+        let mut offset = 0;
+        for w in &self.weights {
+            if w.offset_bytes != offset {
+                bail!("weight {}: offset {} != expected {offset}", w.name,
+                      w.offset_bytes);
+            }
+            let elems: usize = w.shape.iter().product();
+            if elems * 4 != w.size_bytes {
+                bail!("weight {}: size/shape mismatch", w.name);
+            }
+            offset += w.size_bytes;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn minimal_json() -> String {
+        r#"{
+          "arg_convention": "weights-then-state-v2",
+          "model": {"name": "micro", "vocab": 258, "d_model": 32,
+                    "n_layers": 2, "n_heads": 2, "d_head": 16,
+                    "max_seq": 32, "param_count": 100,
+                    "kv_bytes_per_token": 512},
+          "seed": 0, "bos_id": 256, "pad_id": 257,
+          "weights_file": "weights.bin",
+          "weights": [{"name": "w0", "shape": [2, 3],
+                       "offset_bytes": 0, "size_bytes": 24}],
+          "buckets": [1],
+          "chunk_sizes": [4],
+          "state_sizes": {"1": 4097},
+          "decode": {"1": "d1.hlo.txt"},
+          "read_tokens": {"1": "r1.hlo.txt"},
+          "prefill": {"1": {"4": "p1.hlo.txt"}}
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_minimal() {
+        let j = Json::parse(&minimal_json()).unwrap();
+        let m = Manifest::from_json(&j).unwrap();
+        assert_eq!(m.model_name, "micro");
+        assert_eq!(m.buckets, vec![1]);
+        assert_eq!(m.state_sizes[&1], 4097);
+        assert_eq!(m.prefill_files[&(1, 4)], "p1.hlo.txt");
+        assert_eq!(m.pad_id, 257);
+    }
+
+    #[test]
+    fn rejects_wrong_convention() {
+        let s = minimal_json().replace("-v2", "-v1");
+        let j = Json::parse(&s).unwrap();
+        let err = Manifest::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("convention"), "{err}");
+    }
+
+    #[test]
+    fn rejects_bad_state_size() {
+        let s = minimal_json().replace("4097", "999");
+        let j = Json::parse(&s).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_prefill() {
+        let s = minimal_json().replace(r#""prefill": {"1": {"4": "p1.hlo.txt"}}"#,
+                                       r#""prefill": {"1": {}}"#);
+        let j = Json::parse(&s).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn rejects_noncontiguous_weights() {
+        let s = minimal_json().replace(r#""offset_bytes": 0"#,
+                                       r#""offset_bytes": 8"#);
+        let j = Json::parse(&s).unwrap();
+        assert!(Manifest::from_json(&j).is_err());
+    }
+}

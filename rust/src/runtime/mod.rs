@@ -1,0 +1,256 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Responsibilities: manifest parsing, weight upload (once), executable
+//! compilation per (kind, bucket, chunk), and the buffer plumbing that
+//! keeps the serving state device-resident across steps (see the state
+//! convention in python/compile/model.py — single f32 array, donated).
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use manifest::Manifest;
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::{HloModuleProto, PjRtBuffer, PjRtClient, PjRtLoadedExecutable,
+          XlaComputation};
+
+/// A loaded model: weights on device + compiled executables per variant.
+pub struct ModelRuntime {
+    pub client: PjRtClient,
+    pub manifest: Manifest,
+    /// Weight buffers, in manifest order — passed as the leading arguments
+    /// of every decode/prefill execution.
+    weights: Vec<PjRtBuffer>,
+    decode: BTreeMap<u32, PjRtLoadedExecutable>,
+    read_tokens: BTreeMap<u32, PjRtLoadedExecutable>,
+    /// (bucket, chunk) → prefill executable.
+    prefill: BTreeMap<(u32, u32), PjRtLoadedExecutable>,
+}
+
+fn compile(client: &PjRtClient, path: &Path) -> Result<PjRtLoadedExecutable> {
+    let proto = HloModuleProto::from_text_file(path)
+        .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+    let comp = XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))
+}
+
+impl ModelRuntime {
+    /// Load the manifest, upload weights, compile all executables.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e}"))?;
+
+        // Weights: one sequential read, then per-tensor upload.
+        let blob = std::fs::read(dir.join(&manifest.weights_file))
+            .with_context(|| format!("reading {}", manifest.weights_file))?;
+        let mut weights = Vec::with_capacity(manifest.weights.len());
+        for w in &manifest.weights {
+            let bytes = blob
+                .get(w.offset_bytes..w.offset_bytes + w.size_bytes)
+                .ok_or_else(|| anyhow!("weight {} out of blob bounds", w.name))?;
+            // Little-endian f32s on a little-endian host; avoid the copy a
+            // chunked parse would need.
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let buf = client
+                .buffer_from_host_buffer::<f32>(&data, &w.shape, None)
+                .map_err(|e| anyhow!("uploading weight {}: {e}", w.name))?;
+            weights.push(buf);
+        }
+
+        let mut decode = BTreeMap::new();
+        let mut read_tokens = BTreeMap::new();
+        let mut prefill = BTreeMap::new();
+        for (&b, file) in &manifest.decode_files {
+            decode.insert(b, compile(&client, &dir.join(file))?);
+        }
+        for (&b, file) in &manifest.read_tokens_files {
+            read_tokens.insert(b, compile(&client, &dir.join(file))?);
+        }
+        for (&(b, c), file) in &manifest.prefill_files {
+            prefill.insert((b, c), compile(&client, &dir.join(file))?);
+        }
+        if decode.is_empty() {
+            bail!("no decode executables in manifest");
+        }
+        Ok(ModelRuntime { client, manifest, weights, decode, read_tokens,
+                          prefill })
+    }
+
+    pub fn buckets(&self) -> Vec<u32> {
+        self.decode.keys().copied().collect()
+    }
+
+    pub fn chunk_sizes(&self) -> Vec<u32> {
+        self.manifest.chunk_sizes.clone()
+    }
+
+    /// Smallest compiled bucket that fits `n` concurrent slots.
+    pub fn bucket_for(&self, n: u32) -> Option<u32> {
+        self.decode.keys().copied().find(|&b| b >= n)
+    }
+
+    pub fn max_bucket(&self) -> u32 {
+        *self.decode.keys().last().unwrap()
+    }
+
+    pub fn state_size(&self, bucket: u32) -> usize {
+        self.manifest.state_sizes[&bucket]
+    }
+
+    /// Fresh zeroed serving state for `bucket` slots.
+    pub fn new_state(&self, bucket: u32) -> Result<PjRtBuffer> {
+        let n = self.state_size(bucket);
+        let zeros = vec![0f32; n];
+        self.upload_state(&zeros)
+    }
+
+    pub fn upload_state(&self, data: &[f32]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, &[data.len()], None)
+            .map_err(|e| anyhow!("uploading state: {e}"))
+    }
+
+    pub fn download_state(&self, state: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = state
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching state: {e}"))?;
+        lit.to_vec::<f32>().map_err(|e| anyhow!("state to_vec: {e}"))
+    }
+
+    fn i32_buffer(&self, data: &[i32]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, &[data.len()], None)
+            .map_err(|e| anyhow!("uploading i32 arg: {e}"))
+    }
+
+    fn i32_scalar(&self, v: i32) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(&[v], &[], None)
+            .map_err(|e| anyhow!("uploading i32 scalar: {e}"))
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer])
+           -> Result<PjRtBuffer> {
+        let mut out = exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("execute: {e}"))?;
+        let replica = out
+            .pop()
+            .ok_or_else(|| anyhow!("execute returned no replicas"))?;
+        replica
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("execute returned no outputs"))
+    }
+
+    /// One decode step: consumes `state` (donated to the execution),
+    /// returns the new state buffer.
+    pub fn decode_step(&self, bucket: u32, state: PjRtBuffer, pos: &[i32],
+                       active: &[i32]) -> Result<PjRtBuffer> {
+        let exe = self
+            .decode
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no decode executable for bucket {bucket}"))?;
+        debug_assert_eq!(pos.len(), bucket as usize);
+        let pos_b = self.i32_buffer(pos)?;
+        let act_b = self.i32_buffer(active)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&state);
+        args.push(&pos_b);
+        args.push(&act_b);
+        self.run(exe, &args)
+        // `state` drops here — its device memory was donated.
+    }
+
+    /// One prefill chunk for `slot`: consumes and returns the state.
+    /// `tokens` is padded to the compiled chunk size internally; callers
+    /// must keep chunks within the largest compiled size.
+    pub fn prefill_chunk(&self, bucket: u32, state: PjRtBuffer, tokens: &[i32],
+                         slot: u32, start: u32) -> Result<PjRtBuffer> {
+        let chunk = self
+            .chunk_for(tokens.len() as u32)
+            .ok_or_else(|| anyhow!("chunk of {} tokens exceeds compiled sizes",
+                                   tokens.len()))?;
+        let exe = self
+            .prefill
+            .get(&(bucket, chunk))
+            .ok_or_else(|| {
+                anyhow!("no prefill executable for bucket {bucket} chunk {chunk}")
+            })?;
+        let mut padded = tokens.to_vec();
+        padded.resize(chunk as usize, self.manifest.pad_id);
+        let tok_b = self.i32_buffer(&padded)?;
+        let slot_b = self.i32_scalar(slot as i32)?;
+        let start_b = self.i32_scalar(start as i32)?;
+        let nvalid_b = self.i32_scalar(tokens.len() as i32)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&state);
+        args.push(&tok_b);
+        args.push(&slot_b);
+        args.push(&start_b);
+        args.push(&nvalid_b);
+        self.run(exe, &args)
+    }
+
+    /// Smallest compiled chunk size that fits `n` tokens.
+    pub fn chunk_for(&self, n: u32) -> Option<u32> {
+        self.manifest.chunk_sizes.iter().copied().find(|&c| c >= n)
+    }
+
+    pub fn max_chunk(&self) -> u32 {
+        self.manifest.chunk_sizes.last().copied().unwrap_or(0)
+    }
+
+    /// Fetch the [bucket] last-token tail (the only per-step transfer).
+    pub fn read_tokens(&self, bucket: u32, state: &PjRtBuffer)
+                       -> Result<Vec<i32>> {
+        let exe = self
+            .read_tokens
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no read_tokens for bucket {bucket}"))?;
+        let out = self.run(exe, &[state])?;
+        let lit = out
+            .to_literal_sync()
+            .map_err(|e| anyhow!("read_tokens fetch: {e}"))?;
+        lit.to_vec::<i32>().map_err(|e| anyhow!("read_tokens to_vec: {e}"))
+    }
+
+    /// Repack a downloaded state from one bucket layout into another,
+    /// preserving slots `[0, min(old, new))` — bucket migration when the
+    /// dynamic batch outgrows (or shrinks well below) the compiled size.
+    pub fn repack_state(&self, old: &[f32], old_bucket: u32, new_bucket: u32)
+                        -> Vec<f32> {
+        let m = &self.manifest;
+        let (l, s, h, dh) = (m.n_layers as usize, m.max_seq as usize,
+                             m.n_heads as usize, m.d_head as usize);
+        let (ob, nb) = (old_bucket as usize, new_bucket as usize);
+        debug_assert_eq!(old.len(), 2 * l * ob * s * h * dh + ob);
+        let keep = ob.min(nb);
+        let row = s * h * dh; // per-slot cache row within one layer plane
+        let mut new = vec![0f32; self.state_size(new_bucket)];
+        // k then v planes: [L, B, S, H, Dh]
+        for plane in 0..2 {
+            let o_base = plane * l * ob * row;
+            let n_base = plane * l * nb * row;
+            for layer in 0..l {
+                for slot in 0..keep {
+                    let src = o_base + (layer * ob + slot) * row;
+                    let dst = n_base + (layer * nb + slot) * row;
+                    new[dst..dst + row].copy_from_slice(&old[src..src + row]);
+                }
+            }
+        }
+        // token tail
+        let o_tail = 2 * l * ob * row;
+        let n_tail = 2 * l * nb * row;
+        new[n_tail..n_tail + keep].copy_from_slice(&old[o_tail..o_tail + keep]);
+        new
+    }
+}

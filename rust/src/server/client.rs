@@ -1,0 +1,103 @@
+//! Blocking client for the dynabatch serving protocol — used by examples,
+//! load generators and tests.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// Final result of one generation call.
+#[derive(Debug, Clone)]
+pub struct Generation {
+    pub id: u64,
+    pub text: String,
+    pub n_tokens: u32,
+    pub ttft_ms: f64,
+    pub e2e_ms: f64,
+    /// Streamed token ids in order.
+    pub tokens: Vec<i32>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    fn send(&mut self, j: &Json) -> Result<()> {
+        writeln!(self.writer, "{}", j.to_string())?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.reader.read_line(&mut line)?;
+            if n == 0 {
+                bail!("server closed connection");
+            }
+            if !line.trim().is_empty() {
+                break;
+            }
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow!("bad server json: {e}"))
+    }
+
+    /// Generate, blocking until done; token events are collected.
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: u32)
+                    -> Result<Generation> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("generate")),
+            ("prompt", Json::from(prompt)),
+            ("max_new_tokens", Json::from(max_new_tokens as u64)),
+        ]))?;
+        let mut id = 0u64;
+        let mut tokens = Vec::new();
+        loop {
+            let ev = self.recv()?;
+            match ev.get("type").as_str() {
+                Some("accepted") => {
+                    id = ev.get("id").as_u64().unwrap_or(0);
+                }
+                Some("token") => {
+                    if let Some(t) = ev.get("token").as_i64() {
+                        tokens.push(t as i32);
+                    }
+                }
+                Some("done") => {
+                    return Ok(Generation {
+                        id,
+                        text: ev.get("text").as_str().unwrap_or("").into(),
+                        n_tokens: ev.get("n_tokens").as_u64().unwrap_or(0)
+                            as u32,
+                        ttft_ms: ev.get("ttft_ms").as_f64().unwrap_or(0.0),
+                        e2e_ms: ev.get("e2e_ms").as_f64().unwrap_or(0.0),
+                        tokens,
+                    });
+                }
+                Some("error") => {
+                    bail!("server error: {}",
+                          ev.get("error").as_str().unwrap_or("?"));
+                }
+                other => bail!("unexpected event type {other:?}"),
+            }
+        }
+    }
+
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.send(&Json::obj(vec![("op", Json::from("shutdown"))]))?;
+        Ok(())
+    }
+}

@@ -1,0 +1,322 @@
+//! TCP serving frontend: a threaded line-delimited-JSON protocol over the
+//! scheduler, streaming tokens as they decode. This is the "router →
+//! scheduler → engine" request path of the paper's Fig. 1, with no python
+//! anywhere near it.
+//!
+//! Protocol (one JSON object per line):
+//!   → {"op":"generate", "prompt": "...", "max_new_tokens": 32}
+//!   ← {"type":"accepted", "id": 7}
+//!   ← {"type":"token", "id": 7, "token": 104, "text": "h"}   (× n)
+//!   ← {"type":"done", "id": 7, "text": "…", "n_tokens": 32,
+//!      "ttft_ms": 12.3, "e2e_ms": 210.0}
+//!   → {"op":"shutdown"}         ← {"type":"bye"}
+
+pub mod client;
+
+use crate::engine::Engine;
+use crate::request::{Request, RequestId};
+use crate::scheduler::Scheduler;
+use crate::tokenizer;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+
+/// A submitted generation job plus where to stream its events.
+struct Job {
+    request: Request,
+    events: Sender<Json>,
+}
+
+/// Shared server state.
+pub struct Server {
+    submit_tx: Sender<Job>,
+    next_id: AtomicU64,
+    shutdown: Arc<AtomicBool>,
+    pub local_addr: std::net::SocketAddr,
+}
+
+/// Spawn the engine loop + TCP acceptor. Returns once the listener is
+/// bound; serving continues on background threads until `shutdown`.
+///
+/// The engine is constructed *inside* its thread via `engine_builder`
+/// because PJRT handles are not `Send` (Rc + raw pointers); single-thread
+/// ownership is exactly what the runtime wants anyway.
+pub fn serve<F>(
+    engine_builder: F,
+    sched: Scheduler,
+    bind: &str,
+) -> Result<Arc<Server>>
+where
+    F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
+{
+    let listener =
+        TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    let local_addr = listener.local_addr()?;
+    let (submit_tx, submit_rx): (Sender<Job>, Receiver<Job>) =
+        std::sync::mpsc::channel();
+    let shutdown = Arc::new(AtomicBool::new(false));
+
+    let server = Arc::new(Server {
+        submit_tx,
+        next_id: AtomicU64::new(1),
+        shutdown: shutdown.clone(),
+        local_addr,
+    });
+
+    // ---- engine loop thread ----
+    {
+        let shutdown = shutdown.clone();
+        let mut sched = sched;
+        std::thread::Builder::new()
+            .name("dynabatch-engine".into())
+            .spawn(move || {
+                let engine = match engine_builder() {
+                    Ok(e) => e,
+                    Err(e) => {
+                        crate::log_error!("server", "engine init failed: {e}");
+                        shutdown.store(true, Ordering::Relaxed);
+                        return;
+                    }
+                };
+                engine_loop(engine, &mut sched, submit_rx, shutdown);
+            })?;
+    }
+
+    // ---- acceptor thread ----
+    {
+        let server = server.clone();
+        let shutdown = shutdown.clone();
+        std::thread::Builder::new()
+            .name("dynabatch-accept".into())
+            .spawn(move || {
+                listener
+                    .set_nonblocking(true)
+                    .expect("nonblocking listener");
+                while !shutdown.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let server = server.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, &server);
+                            });
+                        }
+                        Err(e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock =>
+                        {
+                            std::thread::sleep(
+                                std::time::Duration::from_millis(5),
+                            );
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+    }
+
+    Ok(server)
+}
+
+impl Server {
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+    }
+}
+
+fn engine_loop(
+    mut engine: Box<dyn Engine>,
+    sched: &mut Scheduler,
+    submit_rx: Receiver<Job>,
+    shutdown: Arc<AtomicBool>,
+) {
+    let clock = std::time::Instant::now();
+    let mut watchers: BTreeMap<RequestId, Sender<Json>> = BTreeMap::new();
+    let mut texts: BTreeMap<RequestId, Vec<i32>> = BTreeMap::new();
+    while !shutdown.load(Ordering::Relaxed) {
+        // Drain submissions.
+        loop {
+            match submit_rx.try_recv() {
+                Ok(mut job) => {
+                    // Stamp arrival in the engine-loop clock domain.
+                    job.request.arrived_at = clock.elapsed().as_secs_f64();
+                    watchers.insert(job.request.id, job.events);
+                    texts.insert(job.request.id, Vec::new());
+                    sched.submit(job.request);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        if !sched.has_work() {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            continue;
+        }
+        let now = clock.elapsed().as_secs_f64();
+        let report = match sched.step(engine.as_mut(), now) {
+            Ok(Some(r)) => r,
+            Ok(None) => {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+                continue;
+            }
+            Err(e) => {
+                crate::log_error!("server", "engine step failed: {e}");
+                break;
+            }
+        };
+        for (id, tok) in &report.tokens {
+            if let Some(tx) = watchers.get(id) {
+                texts.get_mut(id).unwrap().push(*tok);
+                let _ = tx.send(Json::obj(vec![
+                    ("type", Json::from("token")),
+                    ("id", Json::from(*id)),
+                    ("token", Json::from(*tok as i64)),
+                    ("text", Json::from(tokenizer::decode(&[*tok]))),
+                ]));
+            }
+        }
+        for id in &report.finished {
+            let toks = texts.remove(id).unwrap_or_default();
+            if let Some(tx) = watchers.remove(id) {
+                let fin = sched.finished().iter().rev().find(|r| r.id == *id);
+                let (ttft, e2e, n) = fin
+                    .map(|r| {
+                        (
+                            r.ttft().unwrap_or(0.0),
+                            r.e2e_latency().unwrap_or(0.0),
+                            r.generated,
+                        )
+                    })
+                    .unwrap_or((0.0, 0.0, 0));
+                let _ = tx.send(Json::obj(vec![
+                    ("type", Json::from("done")),
+                    ("id", Json::from(*id)),
+                    ("text", Json::from(tokenizer::decode(&toks))),
+                    ("n_tokens", Json::from(n as u64)),
+                    ("ttft_ms", Json::Num(ttft * 1e3)),
+                    ("e2e_ms", Json::Num(e2e * 1e3)),
+                ]));
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let out = Arc::new(Mutex::new(stream));
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let msg = match Json::parse(&line) {
+            Ok(m) => m,
+            Err(e) => {
+                write_json(&out, &Json::obj(vec![
+                    ("type", Json::from("error")),
+                    ("error", Json::from(format!("bad json: {e}"))),
+                ]))?;
+                continue;
+            }
+        };
+        match msg.get("op").as_str() {
+            Some("generate") => {
+                let prompt = msg.get("prompt").as_str().unwrap_or("");
+                let max_new =
+                    msg.get("max_new_tokens").as_u64().unwrap_or(16) as u32;
+                let id = server.next_id.fetch_add(1, Ordering::Relaxed);
+                let tokens = tokenizer::encode(prompt);
+                let req =
+                    Request::with_tokens(id, tokens, max_new.max(1), 0.0);
+                let (tx, rx) = std::sync::mpsc::channel();
+                server.submit_tx.send(Job { request: req, events: tx }).ok();
+                write_json(&out, &Json::obj(vec![
+                    ("type", Json::from("accepted")),
+                    ("id", Json::from(id)),
+                ]))?;
+                // Stream events until done.
+                for ev in rx {
+                    let done = ev.get("type").as_str() == Some("done");
+                    write_json(&out, &ev)?;
+                    if done {
+                        break;
+                    }
+                }
+            }
+            Some("shutdown") => {
+                write_json(&out,
+                           &Json::obj(vec![("type", Json::from("bye"))]))?;
+                server.shutdown();
+                break;
+            }
+            other => {
+                write_json(&out, &Json::obj(vec![
+                    ("type", Json::from("error")),
+                    ("error", Json::from(format!("unknown op {other:?}"))),
+                ]))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_json(out: &Arc<Mutex<TcpStream>>, j: &Json) -> Result<()> {
+    let mut s = out.lock().unwrap();
+    writeln!(s, "{}", j.to_string())?;
+    s.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::*;
+    use crate::config::{PolicyKind, SchedulerConfig};
+    use crate::engine::sim::SimEngine;
+    use crate::server::client::Client;
+
+    /// End-to-end over TCP with the simulated engine (virtual costs but a
+    /// real wall-clock serving loop).
+    #[test]
+    fn serve_and_generate_roundtrip() {
+        let model = tiny_real();
+        let hw = cpu_host();
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::Combined,
+            d_sla: Some(0.05),
+            ..SchedulerConfig::default()
+        };
+        let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+        let server = serve(
+            move || Ok(Box::new(SimEngine::new(&model, &hw)) as Box<dyn Engine>),
+            sched,
+            "127.0.0.1:0",
+        )
+        .unwrap();
+        let addr = server.local_addr;
+
+        let mut c = Client::connect(&addr.to_string()).unwrap();
+        let result = c.generate("hello world", 5).unwrap();
+        assert_eq!(result.n_tokens, 5);
+        assert!(result.e2e_ms >= 0.0);
+
+        // Concurrent clients batch together.
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let a = addr.to_string();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(&a).unwrap();
+                    c.generate("another prompt", 3).unwrap().n_tokens
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 3);
+        }
+        server.shutdown();
+    }
+}

@@ -1,0 +1,5 @@
+//! Simulation substrate: virtual time for discrete-event runs.
+
+pub mod clock;
+
+pub use clock::{Clock, RealClock, VirtualClock};

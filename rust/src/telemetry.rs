@@ -1,0 +1,221 @@
+//! Continuous system monitoring — the "real-time telemetry" feeding the
+//! batch-size controllers.
+//!
+//! Tracks the online length moments Algorithm 1 needs (`E[l_in]`,
+//! `E[l_out]`, their variances — Welford over observed requests), the
+//! recent decode latency `τ̄` and batch size `b̄` Algorithm 2 needs
+//! (sliding windows), and the memory gauge.
+
+use crate::util::stats::{SlidingWindow, Welford};
+
+/// Snapshot handed to a [`crate::batching::BatchPolicy`] each decision.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    /// Scheduler clock (seconds).
+    pub now: f64,
+    /// η — total KV token capacity.
+    pub eta_tokens: u64,
+    /// Tokens currently resident in KV.
+    pub used_tokens: u64,
+    /// E[l_in] — mean prompt length (tokens).
+    pub mean_in: f64,
+    /// E[l_out] — mean output length (tokens).
+    pub mean_out: f64,
+    /// Var(l_in).
+    pub var_in: f64,
+    /// Var(l_out).
+    pub var_out: f64,
+    /// How many length samples back the moments (0 → priors in use).
+    pub length_samples: u64,
+    /// τ̄ — recent mean decode step latency (seconds); None before first.
+    pub recent_decode_latency: Option<f64>,
+    /// b̄ — recent mean decode batch size.
+    pub recent_decode_batch: Option<f64>,
+    /// N^d_{t-1} — running decode requests.
+    pub running_decode: u32,
+    /// N^p_{t-1} — requests currently prefilling (or awaiting admission
+    /// with prefill pending).
+    pub pending_prefill: u32,
+    /// Waiting-queue depth.
+    pub waiting: u32,
+}
+
+/// Rolling telemetry store. One per scheduler.
+#[derive(Debug)]
+pub struct Telemetry {
+    in_len: Welford,
+    out_len: Welford,
+    /// Priors used until enough samples arrive (from workload config or
+    /// operator estimate; the paper assumes these are observable online).
+    prior_in: f64,
+    prior_out: f64,
+    prior_var_in: f64,
+    prior_var_out: f64,
+    min_samples: u64,
+    decode_lat: SlidingWindow,
+    decode_batch: SlidingWindow,
+    /// Memory-utilization time series (t, used, capacity) for Fig. 2.
+    pub mem_timeline: Vec<(f64, u64, u64)>,
+    record_timeline: bool,
+}
+
+impl Telemetry {
+    pub fn new(prior_in: f64, prior_out: f64, latency_window: usize) -> Self {
+        Telemetry {
+            in_len: Welford::new(),
+            out_len: Welford::new(),
+            prior_in,
+            prior_out,
+            prior_var_in: (prior_in / 2.0).powi(2),
+            prior_var_out: (prior_out / 2.0).powi(2),
+            min_samples: 8,
+            decode_lat: SlidingWindow::new(latency_window),
+            decode_batch: SlidingWindow::new(latency_window),
+            mem_timeline: Vec::new(),
+            record_timeline: false,
+        }
+    }
+
+    pub fn enable_timeline(&mut self) {
+        self.record_timeline = true;
+    }
+
+    /// Seed exact prior variances (e.g. from the workload spec) instead of
+    /// the default pessimistic std = mean/2 guess.
+    pub fn set_prior_variances(&mut self, var_in: f64, var_out: f64) {
+        self.prior_var_in = var_in;
+        self.prior_var_out = var_out;
+    }
+
+    /// Observe a request's prompt length at admission.
+    pub fn record_prompt(&mut self, len: u32) {
+        self.in_len.push(len as f64);
+    }
+
+    /// Observe a finished request's true output length.
+    pub fn record_output(&mut self, len: u32) {
+        self.out_len.push(len as f64);
+    }
+
+    /// Observe one decode step: latency + batch size.
+    pub fn record_decode_step(&mut self, latency: f64, batch: u32) {
+        self.decode_lat.push(latency);
+        self.decode_batch.push(batch as f64);
+    }
+
+    pub fn record_memory(&mut self, now: f64, used: u64, cap: u64) {
+        if self.record_timeline {
+            self.mem_timeline.push((now, used, cap));
+        }
+    }
+
+    pub fn mean_in(&self) -> f64 {
+        if self.in_len.count() >= self.min_samples {
+            self.in_len.mean()
+        } else {
+            self.prior_in
+        }
+    }
+
+    pub fn mean_out(&self) -> f64 {
+        if self.out_len.count() >= self.min_samples {
+            self.out_len.mean()
+        } else {
+            self.prior_out
+        }
+    }
+
+    pub fn var_in(&self) -> f64 {
+        if self.in_len.count() >= self.min_samples {
+            self.in_len.variance()
+        } else {
+            self.prior_var_in
+        }
+    }
+
+    pub fn var_out(&self) -> f64 {
+        if self.out_len.count() >= self.min_samples {
+            self.out_len.variance()
+        } else {
+            self.prior_var_out
+        }
+    }
+
+    pub fn observe(&self, now: f64, eta: u64, used: u64, running_decode: u32,
+                   pending_prefill: u32, waiting: u32) -> Observation {
+        Observation {
+            now,
+            eta_tokens: eta,
+            used_tokens: used,
+            mean_in: self.mean_in(),
+            mean_out: self.mean_out(),
+            var_in: self.var_in(),
+            var_out: self.var_out(),
+            length_samples: self.in_len.count().min(self.out_len.count()),
+            recent_decode_latency: if self.decode_lat.is_empty() {
+                None
+            } else {
+                Some(self.decode_lat.mean())
+            },
+            recent_decode_batch: if self.decode_batch.is_empty() {
+                None
+            } else {
+                Some(self.decode_batch.mean())
+            },
+            running_decode,
+            pending_prefill,
+            waiting,
+        }
+    }
+
+    pub fn decode_latency_p(&self, p: f64) -> f64 {
+        self.decode_lat.percentile(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priors_until_enough_samples() {
+        let mut t = Telemetry::new(100.0, 200.0, 8);
+        assert_eq!(t.mean_in(), 100.0);
+        assert_eq!(t.mean_out(), 200.0);
+        assert!((t.var_in() - 2500.0).abs() < 1e-9);
+        for _ in 0..8 {
+            t.record_prompt(50);
+            t.record_output(60);
+        }
+        assert_eq!(t.mean_in(), 50.0);
+        assert_eq!(t.mean_out(), 60.0);
+        assert_eq!(t.var_in(), 0.0);
+    }
+
+    #[test]
+    fn decode_window_tracks_recent() {
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        let obs0 = t.observe(0.0, 1000, 0, 0, 0, 0);
+        assert!(obs0.recent_decode_latency.is_none());
+        for i in 0..10 {
+            t.record_decode_step(0.01 * (i + 1) as f64, 8);
+        }
+        let obs = t.observe(1.0, 1000, 0, 10, 3, 5);
+        // window=4 → last 4 samples: 0.07,0.08,0.09,0.10
+        assert!((obs.recent_decode_latency.unwrap() - 0.085).abs() < 1e-9);
+        assert_eq!(obs.recent_decode_batch, Some(8.0));
+        assert_eq!(obs.running_decode, 10);
+        assert_eq!(obs.pending_prefill, 3);
+        assert_eq!(obs.waiting, 5);
+    }
+
+    #[test]
+    fn timeline_only_when_enabled() {
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        t.record_memory(0.0, 10, 100);
+        assert!(t.mem_timeline.is_empty());
+        t.enable_timeline();
+        t.record_memory(1.0, 20, 100);
+        assert_eq!(t.mem_timeline, vec![(1.0, 20, 100)]);
+    }
+}

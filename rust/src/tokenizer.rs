@@ -1,0 +1,64 @@
+//! Byte-level tokenizer for the real serving path: 256 raw byte tokens +
+//! BOS + PAD. Must stay in sync with python/compile/model.py (VOCAB_SIZE,
+//! BOS_ID, PAD_ID) — asserted against the artifact manifest at load.
+
+pub const VOCAB_SIZE: i32 = 258;
+pub const BOS_ID: i32 = 256;
+pub const PAD_ID: i32 = 257;
+
+/// Encode UTF-8 text as BOS + bytes.
+pub fn encode(text: &str) -> Vec<i32> {
+    let mut out = Vec::with_capacity(text.len() + 1);
+    out.push(BOS_ID);
+    out.extend(text.as_bytes().iter().map(|&b| b as i32));
+    out
+}
+
+/// Decode token ids back to text; non-byte tokens are dropped, invalid
+/// UTF-8 is replaced (lossy) — generation output from random weights is
+/// arbitrary bytes.
+pub fn decode(tokens: &[i32]) -> String {
+    let bytes: Vec<u8> = tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8)
+        .collect();
+    String::from_utf8_lossy(&bytes).into_owned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let toks = encode("hello");
+        assert_eq!(toks[0], BOS_ID);
+        assert_eq!(toks.len(), 6);
+        assert_eq!(decode(&toks), "hello");
+    }
+
+    #[test]
+    fn roundtrip_utf8() {
+        let s = "héllo 😀";
+        assert_eq!(decode(&encode(s)), s);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        assert_eq!(decode(&[BOS_ID, 104, 105, PAD_ID, 300, -1]), "hi");
+    }
+
+    #[test]
+    fn empty() {
+        assert_eq!(encode(""), vec![BOS_ID]);
+        assert_eq!(decode(&[]), "");
+    }
+
+    #[test]
+    fn ids_in_vocab() {
+        for t in encode("any text at all…") {
+            assert!((0..VOCAB_SIZE).contains(&t));
+        }
+    }
+}

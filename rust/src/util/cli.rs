@@ -1,0 +1,365 @@
+//! Command-line argument parsing (the offline registry has no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, positional
+//! arguments, defaults, and auto-generated `--help` text. Declarative
+//! enough for the launcher in `main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative command spec. Build with the fluent methods, then `parse`.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String)>, // (name, help)
+    subcommands: Vec<Command>,
+}
+
+/// Parse result: resolved options + positionals (+ chosen subcommand).
+#[derive(Debug, Clone, Default)]
+pub struct Matches {
+    pub opts: BTreeMap<String, String>,
+    pub flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+    pub subcommand: Option<(String, Box<Matches>)>,
+}
+
+impl Command {
+    pub fn new(name: &str, about: &str) -> Self {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            subcommands: Vec::new(),
+        }
+    }
+
+    /// `--name <value>` with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// `--name <value>` that is required (no default).
+    pub fn opt_required(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn positional(mut self, name: &str, help: &str) -> Self {
+        self.positionals.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn subcommand(mut self, cmd: Command) -> Self {
+        self.subcommands.push(cmd);
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about,
+                            self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str(" <SUBCOMMAND>");
+        }
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _) in &self.positionals {
+            s.push_str(&format!(" <{p}>"));
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h) in &self.positionals {
+                s.push_str(&format!("  <{p}>  {h}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut line = if o.is_flag {
+                    format!("  --{}", o.name)
+                } else {
+                    format!("  --{} <value>", o.name)
+                };
+                while line.len() < 28 {
+                    line.push(' ');
+                }
+                line.push_str(&o.help);
+                if let Some(d) = &o.default {
+                    line.push_str(&format!(" [default: {d}]"));
+                }
+                s.push_str(&line);
+                s.push('\n');
+            }
+        }
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for c in &self.subcommands {
+                let mut line = format!("  {}", c.name);
+                while line.len() < 20 {
+                    line.push(' ');
+                }
+                line.push_str(&c.about);
+                s.push_str(&line);
+                s.push('\n');
+            }
+        }
+        s
+    }
+
+    /// Parse `args` (NOT including argv[0]). Returns Err with a message on
+    /// bad input; the caller prints it (plus help) and exits.
+    pub fn parse(&self, args: &[String]) -> Result<Matches, CliError> {
+        let mut m = Matches::default();
+        for o in &self.opts {
+            if o.is_flag {
+                m.flags.insert(o.name.clone(), false);
+            } else if let Some(d) = &o.default {
+                m.opts.insert(o.name.clone(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(CliError(format!(
+                            "flag --{key} takes no value"
+                        )));
+                    }
+                    m.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| {
+                                    CliError(format!("--{key} needs a value"))
+                                })?
+                        }
+                    };
+                    m.opts.insert(key, val);
+                }
+            } else if !self.subcommands.is_empty() && m.subcommand.is_none()
+                && m.positionals.is_empty()
+            {
+                let sub = self
+                    .subcommands
+                    .iter()
+                    .find(|c| c.name == *a)
+                    .ok_or_else(|| {
+                        CliError(format!(
+                            "unknown subcommand '{a}'\n\n{}",
+                            self.help_text()
+                        ))
+                    })?;
+                let rest = sub.parse(&args[i + 1..])?;
+                m.subcommand = Some((a.clone(), Box::new(rest)));
+                return self.finish(m);
+            } else {
+                m.positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        self.finish(m)
+    }
+
+    fn finish(&self, m: Matches) -> Result<Matches, CliError> {
+        for o in &self.opts {
+            if !o.is_flag && o.default.is_none() && !m.opts.contains_key(&o.name)
+            {
+                return Err(CliError(format!("missing required --{}", o.name)));
+            }
+        }
+        if m.subcommand.is_none() && m.positionals.len() < self.positionals.len()
+        {
+            let missing = &self.positionals[m.positionals.len()].0;
+            return Err(CliError(format!("missing argument <{missing}>")));
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> &str {
+        self.opts
+            .get(name)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self
+            .flags
+            .get(name)
+            .unwrap_or_else(|| panic!("flag --{name} not declared"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be an integer")))
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} must be a number")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn cmd() -> Command {
+        Command::new("tool", "test tool")
+            .opt("count", "3", "how many")
+            .opt("name", "x", "a name")
+            .flag("verbose", "talk more")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let m = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(m.get("count"), "3");
+        assert!(!m.get_flag("verbose"));
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let m = cmd()
+            .parse(&argv(&["--count", "7", "--verbose", "--name=abc"]))
+            .unwrap();
+        assert_eq!(m.get_usize("count").unwrap(), 7);
+        assert_eq!(m.get("name"), "abc");
+        assert!(m.get_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cmd().parse(&argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cmd().parse(&argv(&["--count"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cmd().parse(&argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn required_opt() {
+        let c = Command::new("t", "").opt_required("path", "a path");
+        assert!(c.parse(&argv(&[])).is_err());
+        let m = c.parse(&argv(&["--path", "/x"])).unwrap();
+        assert_eq!(m.get("path"), "/x");
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let c = Command::new("t", "").positional("file", "input");
+        let m = c.parse(&argv(&["a.txt", "b.txt"])).unwrap();
+        assert_eq!(m.positionals, vec!["a.txt", "b.txt"]);
+        assert!(c.parse(&argv(&[])).is_err()); // missing required positional
+    }
+
+    #[test]
+    fn subcommands_dispatch() {
+        let c = Command::new("tool", "")
+            .subcommand(Command::new("run", "run it").opt("n", "1", ""))
+            .subcommand(Command::new("list", "list"));
+        let m = c.parse(&argv(&["run", "--n", "9"])).unwrap();
+        let (name, sub) = m.subcommand.unwrap();
+        assert_eq!(name, "run");
+        assert_eq!(sub.get_usize("n").unwrap(), 9);
+        assert!(c.parse(&argv(&["bogus"])).is_err());
+    }
+
+    #[test]
+    fn help_is_error_with_usage() {
+        let err = cmd().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("USAGE"));
+        assert!(err.0.contains("--count"));
+    }
+
+    #[test]
+    fn parse_numbers() {
+        let m = cmd().parse(&argv(&["--count", "abc"])).unwrap();
+        assert!(m.get_usize("count").is_err());
+        let m = cmd().parse(&argv(&["--count", "2.5"])).unwrap();
+        assert!((m.get_f64("count").unwrap() - 2.5).abs() < 1e-12);
+    }
+}

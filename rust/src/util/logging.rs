@@ -1,0 +1,142 @@
+//! Tiny leveled logger (no `log`/`env_logger` needed on the request path).
+//!
+//! Controlled by `DYNABATCH_LOG` (error|warn|info|debug|trace, default
+//! info). Timestamps are monotonic seconds since process start so log lines
+//! line up with simulator/virtual-clock output.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn from_str(s: &str) -> Level {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        }
+    }
+
+    pub fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(255); // 255 = uninitialized
+
+fn start_instant() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Current max level, initializing from the environment on first use.
+pub fn max_level() -> Level {
+    let raw = MAX_LEVEL.load(Ordering::Relaxed);
+    if raw != 255 {
+        return unsafe { std::mem::transmute::<u8, Level>(raw) };
+    }
+    let lvl = std::env::var("DYNABATCH_LOG")
+        .map(|s| Level::from_str(&s))
+        .unwrap_or(Level::Info);
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    lvl
+}
+
+pub fn set_max_level(lvl: Level) {
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= max_level()
+}
+
+pub fn log(lvl: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = start_instant().elapsed().as_secs_f64();
+    eprintln!("[{t:10.4}s {} {target}] {msg}", lvl.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error,
+                                   $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn,
+                                   $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info,
+                                   $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug,
+                                   $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Debug < Level::Trace);
+    }
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::from_str("error"), Level::Error);
+        assert_eq!(Level::from_str("WARN"), Level::Warn);
+        assert_eq!(Level::from_str("warning"), Level::Warn);
+        assert_eq!(Level::from_str("Debug"), Level::Debug);
+        assert_eq!(Level::from_str("trace"), Level::Trace);
+        assert_eq!(Level::from_str("bogus"), Level::Info);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_max_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_max_level(Level::Info);
+        assert!(enabled(Level::Info));
+    }
+}

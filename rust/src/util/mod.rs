@@ -1,0 +1,10 @@
+//! Self-contained substrates: the offline registry only vendors the `xla`
+//! crate's dependency closure, so rand/serde/clap/criterion equivalents
+//! live here (see DESIGN.md "Offline-dependency note").
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;

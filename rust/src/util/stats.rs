@@ -1,0 +1,359 @@
+//! Streaming statistics used throughout the control loop.
+//!
+//! * [`Welford`] — numerically stable running mean/variance (the online
+//!   estimators of `E[l_in]`, `E[l_out]`, `Var(l_in)`, `Var(l_out)` that
+//!   Algorithm 1 consumes).
+//! * [`Ewma`] — exponentially weighted latency tracker for Algorithm 2's
+//!   `τ̄` feedback signal.
+//! * [`SlidingWindow`] — bounded recent-sample buffer with percentiles.
+//! * [`normal_cdf`] / [`normal_quantile`] — `Θ(·)` and `Θ⁻¹(·)` for the
+//!   paper's CLT-based overflow bound (`θ = Θ⁻¹(1 − ε_M)`).
+
+use std::collections::VecDeque;
+
+/// Welford's online mean/variance.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance (n, not n-1 — matches the paper's moments usage).
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n;
+        self.mean += d * other.n as f64 / n;
+        self.n += other.n;
+    }
+}
+
+/// Exponentially weighted moving average with configurable smoothing.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn get_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Fixed-capacity window over recent samples with O(n log n) percentile
+/// queries (n is small — a few hundred latency samples).
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    cap: usize,
+    buf: VecDeque<f64>,
+}
+
+impl SlidingWindow {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        SlidingWindow { cap, buf: VecDeque::with_capacity(cap) }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(&mut self.buf.iter().copied().collect::<Vec<_>>(), p)
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+/// Percentile of an unsorted slice (sorts in place), p in [0, 100].
+pub fn percentile_of(xs: &mut [f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p = p.clamp(0.0, 100.0) / 100.0;
+    let idx = p * (xs.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        xs[lo]
+    } else {
+        let w = idx - lo as f64;
+        xs[lo] * (1.0 - w) + xs[hi] * w
+    }
+}
+
+/// Standard normal CDF Θ(x) via Abramowitz–Stegun 7.1.26 erf approximation
+/// (|err| < 1.5e-7 — far below the ε_M resolution the scheduler needs).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Inverse standard normal CDF Θ⁻¹(p) — Acklam's rational approximation
+/// refined with one Halley step (|rel err| < 1e-9).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "quantile of p={p}");
+    // Acklam coefficients.
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const PLOW: f64 = 0.02425;
+    let x = if p < PLOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - PLOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5])
+            * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r
+                + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    // One Halley refinement against the forward CDF.
+    let e = normal_cdf(x) - p;
+    let u = e * (2.0 * std::f64::consts::PI).sqrt() * (x * x / 2.0).exp();
+    x - u / (1.0 + x * u / 2.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        assert!((w.variance() - 4.0).abs() < 1e-12);
+        assert!((w.std() - 2.0).abs() < 1e-12);
+        assert_eq!(w.count(), 8);
+    }
+
+    #[test]
+    fn welford_empty_is_zero() {
+        let w = Welford::new();
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.variance(), 0.0);
+    }
+
+    #[test]
+    fn welford_merge_equals_concat() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 10.0).collect();
+        let mut all = Welford::new();
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        for (i, &x) in xs.iter().enumerate() {
+            all.push(x);
+            if i < 37 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ewma_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.get(), None);
+        e.push(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.push(0.0);
+        assert_eq!(e.get(), Some(5.0));
+        e.push(0.0);
+        assert_eq!(e.get(), Some(2.5));
+        e.reset();
+        assert_eq!(e.get(), None);
+    }
+
+    #[test]
+    fn sliding_window_evicts_oldest() {
+        let mut w = SlidingWindow::new(3);
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            w.push(x);
+        }
+        assert_eq!(w.len(), 3);
+        assert!((w.mean() - 3.0).abs() < 1e-12); // 2,3,4
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut w = SlidingWindow::new(100);
+        for i in 1..=100 {
+            w.push(i as f64);
+        }
+        assert!((w.percentile(0.0) - 1.0).abs() < 1e-9);
+        assert!((w.percentile(100.0) - 100.0).abs() < 1e-9);
+        assert!((w.percentile(50.0) - 50.5).abs() < 1e-9);
+        let p99 = w.percentile(99.0);
+        assert!(p99 > 98.9 && p99 <= 100.0, "p99={p99}");
+    }
+
+    #[test]
+    fn percentile_of_singleton_and_empty() {
+        assert_eq!(percentile_of(&mut [], 50.0), 0.0);
+        assert_eq!(percentile_of(&mut [7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn normal_cdf_known_values() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((normal_cdf(1.96) - 0.9750021).abs() < 1e-5);
+        assert!((normal_cdf(-1.96) - 0.0249979).abs() < 1e-5);
+        assert!(normal_cdf(8.0) > 0.999999);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        for &p in &[0.001, 0.01, 0.05, 0.2, 0.5, 0.8, 0.95, 0.99, 0.999] {
+            let x = normal_quantile(p);
+            assert!((normal_cdf(x) - p).abs() < 1e-8, "p={p} x={x}");
+        }
+        // The θ the paper's ε_M = 0.05 implies:
+        assert!((normal_quantile(0.95) - 1.6449).abs() < 1e-3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantile_rejects_out_of_range() {
+        normal_quantile(0.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! Workload generation: arrival processes × length distributions, with the
+//! exact settings of every row in the paper's Tables I and II, plus trace
+//! record/replay for reproducible comparisons.
+
+pub mod trace;
+
+use crate::request::Request;
+use crate::util::rng::Rng;
+
+/// When requests show up.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrival {
+    /// "Request arrival rate set to infinite": everything at t=0 (Table I).
+    AllAtOnce,
+    /// Poisson process at `rate` requests/second (Table II capacity runs).
+    Poisson { rate: f64 },
+    /// Markov-modulated on/off burst: `high`/`low` rates switched every
+    /// exponential(1/period) seconds — the λ(t) spikes of Section II.
+    Bursty { high: f64, low: f64, period: f64 },
+}
+
+/// Token-length distribution for prompts or outputs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LengthDist {
+    Fixed(u32),
+    /// Normal clamped to [min, max] (paper settings quote means; real
+    /// prompt sets have roughly bell-shaped lengths).
+    Normal { mean: f64, std: f64, min: u32, max: u32 },
+    /// Log-normal (long-tailed outputs), clamped.
+    LogNormal { mu: f64, sigma: f64, min: u32, max: u32 },
+    Uniform { min: u32, max: u32 },
+}
+
+impl LengthDist {
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        match *self {
+            LengthDist::Fixed(n) => n,
+            LengthDist::Normal { mean, std, min, max } => {
+                (rng.normal_with(mean, std).round() as i64)
+                    .clamp(min as i64, max as i64) as u32
+            }
+            LengthDist::LogNormal { mu, sigma, min, max } => {
+                (rng.lognormal(mu, sigma).round() as i64)
+                    .clamp(min as i64, max as i64) as u32
+            }
+            LengthDist::Uniform { min, max } => {
+                rng.range_u64(min as u64, max as u64) as u32
+            }
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(n) => n as f64,
+            LengthDist::Normal { mean, .. } => mean,
+            LengthDist::LogNormal { mu, sigma, .. } => {
+                (mu + sigma * sigma / 2.0).exp()
+            }
+            LengthDist::Uniform { min, max } => (min + max) as f64 / 2.0,
+        }
+    }
+
+    /// Analytic variance (pre-clamping) — used to seed the telemetry
+    /// priors; the paper assumes length moments are observable online.
+    pub fn variance(&self) -> f64 {
+        match *self {
+            LengthDist::Fixed(_) => 0.0,
+            LengthDist::Normal { std, .. } => std * std,
+            LengthDist::LogNormal { mu, sigma, .. } => {
+                let s2 = sigma * sigma;
+                (s2.exp() - 1.0) * (2.0 * mu + s2).exp()
+            }
+            LengthDist::Uniform { min, max } => {
+                let w = (max - min) as f64 + 1.0;
+                (w * w - 1.0) / 12.0
+            }
+        }
+    }
+
+    /// Normal around `mean` with a mild CV of 0.3 — the shape used for the
+    /// paper rows that quote fractional token means (real prompt sets).
+    pub fn around(mean: f64, max: u32) -> LengthDist {
+        LengthDist::Normal {
+            mean,
+            std: mean * 0.3,
+            min: 1,
+            max,
+        }
+    }
+}
+
+/// A full workload: arrival process + lengths + volume.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub arrival: Arrival,
+    pub prompt: LengthDist,
+    pub output: LengthDist,
+    pub n_requests: usize,
+    pub seed: u64,
+}
+
+impl Workload {
+    /// Materialize into (arrival_time, request) pairs, sorted by time.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed);
+        let mut arr_rng = rng.fork(1);
+        let mut len_rng = rng.fork(2);
+        let mut t = 0.0f64;
+        let mut burst_high = true;
+        let mut burst_switch = 0.0f64;
+        let mut out = Vec::with_capacity(self.n_requests);
+        for i in 0..self.n_requests {
+            let at = match self.arrival {
+                Arrival::AllAtOnce => 0.0,
+                Arrival::Poisson { rate } => {
+                    t += arr_rng.exp(rate);
+                    t
+                }
+                Arrival::Bursty { high, low, period } => {
+                    loop {
+                        if burst_switch <= t {
+                            burst_high = !burst_high;
+                            burst_switch = t + arr_rng.exp(1.0 / period);
+                        }
+                        let rate = if burst_high { high } else { low };
+                        let dt = arr_rng.exp(rate);
+                        if t + dt <= burst_switch || burst_switch <= t {
+                            t += dt;
+                            break;
+                        }
+                        t = burst_switch;
+                    }
+                    t
+                }
+            };
+            let prompt = self.prompt.sample(&mut len_rng).max(1);
+            let output = self.output.sample(&mut len_rng).max(1);
+            out.push(Request::new(i as u64, prompt, output, at));
+        }
+        out.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
+        out
+    }
+
+    /// Same lengths, different arrival process (capacity search re-rates
+    /// the identical request population).
+    pub fn with_arrival(&self, arrival: Arrival) -> Workload {
+        Workload { arrival, ..self.clone() }
+    }
+
+    pub fn with_seed(&self, seed: u64) -> Workload {
+        Workload { seed, ..self.clone() }
+    }
+}
+
+/// The six Table I rows: (model preset name, workload).
+pub fn table1_rows() -> Vec<(&'static str, Workload)> {
+    let row = |name: &str, model: &'static str, p_mean: f64, o_mean: f64,
+               n: usize, fixed: bool| {
+        let (prompt, output) = if fixed {
+            (LengthDist::Fixed(p_mean as u32), LengthDist::Fixed(o_mean as u32))
+        } else {
+            (LengthDist::around(p_mean, 1024),
+             LengthDist::around(o_mean, 1024))
+        };
+        (model, Workload {
+            name: name.to_string(),
+            arrival: Arrival::AllAtOnce,
+            prompt,
+            output,
+            n_requests: n,
+            seed: 42,
+        })
+    };
+    vec![
+        row("t1-llama65b", "llama-65b", 68.4, 344.5, 1319, false),
+        row("t1-llama3-70b-a", "llama3-70b", 68.4, 454.4, 1319, false),
+        row("t1-llama3-70b-b", "llama3-70b", 191.0, 381.9, 3000, false),
+        row("t1-pangu-7b", "pangu-7b", 128.0, 128.0, 1000, true),
+        row("t1-pangu-38b", "pangu-38b", 128.0, 128.0, 1000, true),
+        row("t1-pangu-135b", "pangu-135b", 128.0, 128.0, 1000, true),
+    ]
+}
+
+/// The three Table II rows: (model, D_SLA seconds, workload, pd_fusion).
+pub fn table2_rows() -> Vec<(&'static str, f64, Workload, bool)> {
+    let mk = |name: &str, p: f64, o: f64, n: usize| Workload {
+        name: name.to_string(),
+        arrival: Arrival::Poisson { rate: 1.0 }, // re-rated by the search
+        prompt: LengthDist::around(p, 2048),
+        output: LengthDist::around(o, 2048),
+        n_requests: n,
+        seed: 43,
+    };
+    vec![
+        ("llama-65b", 0.050, mk("t2-llama65b", 237.7, 416.2, 3000), false),
+        ("llama3-70b", 0.050, mk("t2-llama3-70b-short", 256.6, 61.5, 3000),
+         false),
+        ("llama3-70b", 0.050, mk("t2-llama3-70b-long", 256.6, 447.5, 3000),
+         true),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_at_once_arrives_at_zero() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(10),
+            output: LengthDist::Fixed(5),
+            n_requests: 100,
+            seed: 1,
+        };
+        let reqs = w.generate();
+        assert_eq!(reqs.len(), 100);
+        assert!(reqs.iter().all(|r| r.arrived_at == 0.0));
+        assert!(reqs.iter().all(|r| r.prompt_len == 10
+                                && r.max_new_tokens == 5));
+    }
+
+    #[test]
+    fn poisson_rate_roughly_matches() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Poisson { rate: 5.0 },
+            prompt: LengthDist::Fixed(1),
+            output: LengthDist::Fixed(1),
+            n_requests: 5000,
+            seed: 2,
+        };
+        let reqs = w.generate();
+        let span = reqs.last().unwrap().arrived_at;
+        let rate = 5000.0 / span;
+        assert!((rate - 5.0).abs() < 0.3, "rate={rate}");
+        // strictly sorted
+        for w in reqs.windows(2) {
+            assert!(w[0].arrived_at <= w[1].arrived_at);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Poisson { rate: 2.0 },
+            prompt: LengthDist::around(100.0, 500),
+            output: LengthDist::around(300.0, 1000),
+            n_requests: 50,
+            seed: 7,
+        };
+        let a = w.generate();
+        let b = w.generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.arrived_at, y.arrived_at);
+        }
+        let c = w.with_seed(8).generate();
+        assert!(a.iter().zip(&c).any(|(x, y)| x.prompt_len != y.prompt_len));
+    }
+
+    #[test]
+    fn normal_lengths_near_mean_and_clamped() {
+        let d = LengthDist::Normal { mean: 200.0, std: 60.0, min: 1,
+                                     max: 250 };
+        let mut rng = Rng::new(3);
+        let xs: Vec<u32> = (0..20_000).map(|_| d.sample(&mut rng)).collect();
+        assert!(xs.iter().all(|&x| (1..=250).contains(&x)));
+        let mean = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+        assert!((mean - 200.0).abs() < 15.0, "mean={mean}"); // clamp skews
+    }
+
+    #[test]
+    fn bursty_produces_monotone_times() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Bursty { high: 20.0, low: 1.0, period: 2.0 },
+            prompt: LengthDist::Fixed(1),
+            output: LengthDist::Fixed(1),
+            n_requests: 500,
+            seed: 9,
+        };
+        let reqs = w.generate();
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrived_at <= pair[1].arrived_at);
+        }
+        assert!(reqs.last().unwrap().arrived_at.is_finite());
+    }
+
+    #[test]
+    fn paper_rows_materialize() {
+        for (model, w) in table1_rows() {
+            assert!(crate::config::presets::model_by_name(model).is_some());
+            let reqs = w.generate();
+            assert_eq!(reqs.len(), w.n_requests);
+            let mean_p = reqs.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+                / reqs.len() as f64;
+            assert!((mean_p - w.prompt.mean()).abs() / w.prompt.mean() < 0.1,
+                    "{}: prompt mean {mean_p} vs {}", w.name,
+                    w.prompt.mean());
+        }
+        for (model, d_sla, w, _) in table2_rows() {
+            assert!(crate::config::presets::model_by_name(model).is_some());
+            assert!(d_sla > 0.0);
+            assert_eq!(w.generate().len(), w.n_requests);
+        }
+    }
+
+    #[test]
+    fn lognormal_mean_formula() {
+        let d = LengthDist::LogNormal { mu: 4.0, sigma: 0.5, min: 1,
+                                        max: 100_000 };
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng) as f64).sum::<f64>()
+            / n as f64;
+        assert!((mean - d.mean()).abs() / d.mean() < 0.05,
+                "sampled {mean} vs analytic {}", d.mean());
+    }
+}

@@ -1,0 +1,99 @@
+//! Trace record/replay: JSONL files of (arrival, prompt_len, output_len)
+//! so experiments can be re-run bit-identically or against captured
+//! production-like traces.
+
+use crate::request::Request;
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+/// Write requests as one JSON object per line.
+pub fn save(path: &Path, requests: &[Request]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    for r in requests {
+        let j = Json::obj(vec![
+            ("id", Json::from(r.id)),
+            ("arrived_at", Json::Num(r.arrived_at)),
+            ("prompt_len", Json::from(r.prompt_len as u64)),
+            ("max_new_tokens", Json::from(r.max_new_tokens as u64)),
+        ]);
+        writeln!(w, "{}", j.to_string())?;
+    }
+    Ok(())
+}
+
+/// Load a JSONL trace back into fresh requests.
+pub fn load(path: &Path) -> Result<Vec<Request>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow!("{}:{}: {e}", path.display(), lineno + 1))?;
+        let need = |k: &str| -> Result<u64> {
+            j.get(k)
+                .as_u64()
+                .with_context(|| format!("{}:{}: field {k}", path.display(),
+                                         lineno + 1))
+        };
+        out.push(Request::new(
+            need("id")?,
+            need("prompt_len")? as u32,
+            need("max_new_tokens")? as u32,
+            j.get("arrived_at")
+                .as_f64()
+                .with_context(|| format!("line {}: arrived_at", lineno + 1))?,
+        ));
+    }
+    out.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Arrival, LengthDist, Workload};
+
+    #[test]
+    fn roundtrip() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Poisson { rate: 3.0 },
+            prompt: LengthDist::around(64.0, 256),
+            output: LengthDist::around(128.0, 512),
+            n_requests: 200,
+            seed: 11,
+        };
+        let reqs = w.generate();
+        let dir = std::env::temp_dir().join("dynabatch_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save(&path, &reqs).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.prompt_len, b.prompt_len);
+            assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert!((a.arrived_at - b.arrived_at).abs() < 1e-9);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("dynabatch_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path, "{\"id\": 1}\nnot json\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,56 @@
+//! Smoke coverage of the experiment harnesses + CLI surfaces at tiny
+//! scales: every table/figure generator must run, render, and carry the
+//! qualitative shape the paper claims.
+
+use dynabatch::experiments::{ablations, figures, table2};
+
+#[test]
+fn fig3_sweep_renders_and_orders() {
+    let pts = figures::fig3(500.0, 120);
+    assert_eq!(pts.len(), 120);
+    let md = figures::render_fig3(&pts).to_markdown();
+    assert!(md.contains("Phi"));
+    let anchors = figures::fig3_anchors(&pts);
+    assert_eq!(anchors.len(), 2);
+    assert!(anchors[0].1 <= anchors[1].1, "larger SLA → larger batch");
+}
+
+#[test]
+fn fig2_render_has_sparkline_and_csv() {
+    let r = figures::fig2(80).unwrap();
+    let text = figures::render_fig2(&r);
+    assert!(text.contains("utilization"));
+    let csv = figures::fig2_csv(&r);
+    assert!(csv.starts_with("t_s,used_tokens,capacity_tokens"));
+    assert!(csv.lines().count() > 10);
+}
+
+#[test]
+fn fig4_small_probe_runs() {
+    let r = figures::fig4(80, &[]).unwrap();
+    assert!(r.static_qps >= 0.0 && r.dynamic_qps >= 0.0);
+    let txt = figures::render_fig4(&r);
+    assert!(txt.contains("Fig. 4"));
+}
+
+#[test]
+fn table2_render_shape() {
+    // Tiny probes keep this affordable; mechanism checks live in the
+    // driver/table tests.
+    let rows = table2::run(0.05).unwrap();
+    assert_eq!(rows.len(), 3);
+    assert!(rows[2].pd_fusion);
+    let md = table2::render(&rows).to_markdown();
+    assert!(md.contains("Cap dyn"));
+    for r in &rows {
+        assert!(r.dynamic_cap.capacity_qps >= 0.0);
+    }
+}
+
+#[test]
+fn ablation_interval_and_alpha_tables() {
+    let t = ablations::interval_sweep(60).unwrap();
+    assert!(t.to_markdown().lines().count() >= 8);
+    let t = ablations::alpha_delta_sweep(60).unwrap();
+    assert!(t.to_markdown().contains("alpha"));
+}

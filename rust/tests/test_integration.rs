@@ -1,0 +1,223 @@
+//! Cross-module integration tests over the simulated stack: scheduler ×
+//! policies × kv × workload × metrics, including failure injection and
+//! long-run invariants. (The PJRT path is covered in test_pjrt_engine.rs.)
+
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, PreemptMode, SchedulerConfig};
+use dynabatch::driver::{run_loop, run_sim, SimScenario};
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::Engine;
+use dynabatch::metrics::RunMetrics;
+use dynabatch::request::Request;
+use dynabatch::scheduler::Scheduler;
+use dynabatch::sim::{Clock, VirtualClock};
+use dynabatch::util::prop::check;
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+
+fn scenario(policy: PolicyKind) -> SimScenario {
+    let model = llama_65b();
+    let hardware = node_for(&model);
+    SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig { policy, ..SchedulerConfig::default() },
+        workload: Workload {
+            name: "it".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::around(68.4, 512),
+            output: LengthDist::around(200.0, 512),
+            n_requests: 150,
+            seed: 99,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    }
+}
+
+#[test]
+fn every_policy_completes_every_request() {
+    for policy in [
+        PolicyKind::StaticGreedy { max: 256 },
+        PolicyKind::StaticFixed { batch: 32 },
+        PolicyKind::MemoryAware,
+        PolicyKind::MemoryAwareExact,
+        PolicyKind::SlaFeedback,
+        PolicyKind::Combined,
+    ] {
+        let mut s = scenario(policy.clone());
+        s.sched.d_sla = Some(0.06);
+        let m = run_sim(&s).unwrap();
+        assert_eq!(m.n_requests, 150, "{policy:?}");
+        assert_eq!(m.n_finished, 150, "{policy:?}");
+        assert!(m.throughput > 0.0);
+    }
+}
+
+#[test]
+fn deterministic_replay_same_seed() {
+    let s = scenario(PolicyKind::Combined);
+    let a = run_sim(&s).unwrap();
+    let b = run_sim(&s).unwrap();
+    assert_eq!(a.output_tokens, b.output_tokens);
+    assert!((a.makespan - b.makespan).abs() < 1e-9);
+    assert!((a.throughput - b.throughput).abs() < 1e-6);
+    assert_eq!(a.preemptions, b.preemptions);
+}
+
+#[test]
+fn poisson_vs_bursty_load_both_stable() {
+    for arrival in [
+        Arrival::Poisson { rate: 2.0 },
+        Arrival::Bursty { high: 5.0, low: 0.5, period: 15.0 },
+    ] {
+        let mut s = scenario(PolicyKind::MemoryAware);
+        s.workload.arrival = arrival;
+        let m = run_sim(&s).unwrap();
+        assert_eq!(m.n_finished, 150);
+        assert!(m.ttft_mean >= 0.0);
+    }
+}
+
+#[test]
+fn swap_preemption_roundtrips_under_pressure() {
+    let mut s = scenario(PolicyKind::StaticGreedy { max: 256 });
+    s.sched.preempt = PreemptMode::Swap;
+    s.eta_tokens_override = Some(8_000);
+    s.swap_tokens = 1_000_000;
+    let m = run_sim(&s).unwrap();
+    assert_eq!(m.n_finished, 150);
+    assert!(m.swaps > 0, "pressure must trigger swapping");
+}
+
+#[test]
+fn zero_swap_space_falls_back_to_recompute() {
+    let mut s = scenario(PolicyKind::StaticGreedy { max: 256 });
+    s.sched.preempt = PreemptMode::Swap;
+    s.eta_tokens_override = Some(8_000);
+    s.swap_tokens = 0; // swap configured but no space
+    let m = run_sim(&s).unwrap();
+    assert_eq!(m.n_finished, 150);
+    assert!(m.preemptions > 0, "must fall back to recompute");
+}
+
+#[test]
+fn sla_feedback_controls_tbt_under_load() {
+    // With a 50 ms SLA and heavy load, the combined policy's p95 decode
+    // latency must sit near/below the SLA while static-greedy blows it.
+    let mk = |policy| {
+        let mut s = scenario(policy);
+        s.sched.d_sla = Some(0.05);
+        s.workload.n_requests = 400;
+        run_sim(&s).unwrap()
+    };
+    let dynamic = mk(PolicyKind::Combined);
+    let greedy = mk(PolicyKind::StaticGreedy { max: 256 });
+    // The feedback loop holds the bulk of steps at/below the SLA (the tail
+    // carries the binary search's exploration overshoot, cf. Alg. 2's ±α
+    // window and eps_D tolerance).
+    assert!(
+        dynamic.tbt_p50 <= 0.060,
+        "dynamic p50 {} must track the SLA within 20%",
+        dynamic.tbt_p50
+    );
+    assert!(
+        dynamic.tbt_mean <= 0.065,
+        "dynamic mean {} must hug the SLA",
+        dynamic.tbt_mean
+    );
+    assert!(
+        greedy.tbt_p95 > dynamic.tbt_p95,
+        "greedy ({}) should exceed dynamic ({})",
+        greedy.tbt_p95,
+        dynamic.tbt_p95
+    );
+}
+
+#[test]
+fn mid_run_burst_is_absorbed() {
+    // Failure-injection-style load spike: a second wave arrives mid-run.
+    let model = llama_65b();
+    let hardware = node_for(&model);
+    let eta = hardware.kv_budget(&model) / model.kv_bytes_per_token();
+    let mut sched = Scheduler::new(
+        SchedulerConfig {
+            policy: PolicyKind::MemoryAware,
+            ..SchedulerConfig::default()
+        },
+        eta, 0, 68.4, 200.0);
+    let mut engine = SimEngine::new(&model, &hardware);
+    let mut clock = VirtualClock::new();
+    let mut reqs: Vec<Request> =
+        (0..80).map(|i| Request::new(i, 64, 150, 0.0)).collect();
+    reqs.extend((80..160).map(|i| Request::new(i, 64, 150, 5.0)));
+    run_loop(&mut sched, &mut engine, &mut clock, reqs, 2_000_000).unwrap();
+    assert_eq!(sched.finished().len(), 160);
+    assert_eq!(sched.stats.preempt_recompute, 0,
+               "Alg.1 absorbs the spike without thrash");
+    sched.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn metrics_are_internally_consistent() {
+    let m = run_sim(&scenario(PolicyKind::Combined)).unwrap();
+    assert!(m.tbt_p50 <= m.tbt_p95 && m.tbt_p95 <= m.tbt_p99);
+    assert!(m.total_tokens >= m.output_tokens);
+    assert!(m.e2e_mean >= m.ttft_mean);
+    let j = m.to_json().to_string();
+    assert!(dynabatch::util::json::Json::parse(&j).is_ok());
+}
+
+/// Property: for random tight scenarios, (a) all requests finish, (b) KV
+/// accounting balances, (c) dynamic never preempts more than greedy.
+#[test]
+fn prop_scheduler_invariants_random_scenarios() {
+    check("scheduler invariants", 12, |g| {
+        let eta = g.u64(4_000..=40_000);
+        let n = g.usize(40..=120);
+        let out_mean = g.f64(50.0, 400.0);
+        let mk = |policy| {
+            let mut s = scenario(policy);
+            s.eta_tokens_override = Some(eta);
+            s.workload.n_requests = n;
+            s.workload.output = LengthDist::around(out_mean, 512);
+            s.workload.seed = g_seed(&eta, &n);
+            run_sim(&s).unwrap()
+        };
+        let dynamic = mk(PolicyKind::MemoryAware);
+        let greedy = mk(PolicyKind::StaticGreedy { max: 256 });
+        fn g_seed(a: &u64, b: &usize) -> u64 {
+            a.wrapping_mul(31).wrapping_add(*b as u64)
+        }
+        dynamic.n_finished == n
+            && greedy.n_finished == n
+            && dynamic.preemptions <= greedy.preemptions
+    });
+}
+
+#[test]
+fn run_metrics_compute_empty_run() {
+    let m = RunMetrics::compute("x".into(), &[],
+                                &dynabatch::scheduler::SchedStats::default(),
+                                &[], 0.0, None);
+    assert_eq!(m.throughput, 0.0);
+    assert_eq!(m.n_requests, 0);
+}
+
+#[test]
+fn engine_trait_object_works() {
+    // The scheduler must run over `dyn Engine` (the server path).
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    let mut engine: Box<dyn Engine> =
+        Box::new(SimEngine::new(&model, &hardware));
+    let mut sched = Scheduler::new(SchedulerConfig::default(), 50_000, 0,
+                                   32.0, 16.0);
+    sched.submit(Request::new(1, 32, 4, 0.0));
+    let mut now = 0.0;
+    while sched.has_work() {
+        if let Some(r) = sched.step(engine.as_mut(), now).unwrap() {
+            now += r.elapsed;
+        }
+    }
+    assert_eq!(sched.finished().len(), 1);
+}
