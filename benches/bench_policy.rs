@@ -21,6 +21,7 @@ fn obs() -> Observation {
         running_decode: 96,
         pending_prefill: 4,
         waiting: 12,
+        waiting_by_class: [2, 8, 2],
     }
 }
 

@@ -1,16 +1,19 @@
 //! END-TO-END driver (the required real-workload example): load the
-//! AOT-compiled TinyGPT artifacts, serve batched requests through the full
-//! rust stack — TCP frontend → continuous-batching scheduler (dynamic
-//! policy) → PJRT engine with device-resident KV state — and report
-//! latency/throughput.
+//! AOT-compiled TinyGPT artifacts and serve batched requests through the
+//! full rust stack — `ServiceBuilder` → TCP frontend (protocol v2) →
+//! continuous-batching scheduler (dynamic policy, class-weighted
+//! admission) → PJRT engine with device-resident KV state — and report
+//! latency/throughput per priority class.
 //!
 //!     make artifacts && cargo run --release --example serve_real_model
-use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::config::{presets, PolicyKind, SchedulerConfig};
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
+use dynabatch::request::PriorityClass;
 use dynabatch::runtime::manifest::Manifest;
-use dynabatch::scheduler::Scheduler;
-use dynabatch::server::{client::Client, serve};
+use dynabatch::server::client::{Client, GenOptions};
+use dynabatch::server::serve_service;
+use dynabatch::service::ServiceBuilder;
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -33,17 +36,22 @@ fn main() -> anyhow::Result<()> {
         ..SchedulerConfig::default()
     };
     let eta = max_batch as u64 * manifest.max_seq as u64;
-    let sched = Scheduler::new(cfg, eta, 0, 32.0, 24.0);
     let dir2 = dir.clone();
-    let server = serve(
-        move || Ok(Box::new(PjrtEngine::load(&dir2)?) as Box<dyn Engine>),
-        sched,
-        "127.0.0.1:0",
-    )?;
+    let service = ServiceBuilder::new(presets::tiny_real(),
+                                      presets::cpu_host())
+        .config(cfg)
+        .eta_tokens(eta)
+        .priors(32.0, 24.0)
+        .engine(move || {
+            Ok(Box::new(PjrtEngine::load(&dir2)?) as Box<dyn Engine>)
+        })
+        .build()?;
+    let server = serve_service(service, "127.0.0.1:0")?;
     let addr = server.local_addr.to_string();
     println!("serving on {addr} (PJRT CPU, python nowhere in sight)");
 
-    // Drive a small batched workload: 12 concurrent clients, 2 rounds.
+    // Drive a small batched workload: 12 concurrent clients, 2 rounds,
+    // interactive and batch classes interleaved.
     let prompts = [
         "the paper proposes a dynamic batching method",
         "memory-aware scheduling for LLM inference",
@@ -55,12 +63,18 @@ fn main() -> anyhow::Result<()> {
     for i in 0..12 {
         let addr = addr.clone();
         let prompt = prompts[i % prompts.len()].to_string();
+        let class = if i % 3 == 0 {
+            PriorityClass::Interactive
+        } else {
+            PriorityClass::Batch
+        };
         handles.push(std::thread::spawn(move || -> anyhow::Result<_> {
             let mut c = Client::connect(&addr)?;
+            let opts = GenOptions { class, ..Default::default() };
             let mut stats = Vec::new();
             for round in 0..2 {
-                let g = c.generate(&prompt, 24)?;
-                stats.push((g.n_tokens, g.ttft_ms, g.e2e_ms));
+                let g = c.generate_with(&prompt, 24, &opts)?;
+                stats.push((class, g.n_tokens, g.ttft_ms, g.e2e_ms));
                 if i == 0 && round == 0 {
                     println!("sample output bytes: {:?}…",
                              &g.tokens[..g.tokens.len().min(8)]);
@@ -72,11 +86,13 @@ fn main() -> anyhow::Result<()> {
     let mut total_tokens = 0u64;
     let mut ttfts = Vec::new();
     let mut e2es = Vec::new();
+    let mut by_class: Vec<(PriorityClass, f64)> = Vec::new();
     for h in handles {
-        for (n, ttft, e2e) in h.join().unwrap()? {
+        for (class, n, ttft, e2e) in h.join().unwrap()? {
             total_tokens += n as u64;
             ttfts.push(ttft);
             e2es.push(e2e);
+            by_class.push((class, ttft));
         }
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -91,6 +107,17 @@ fn main() -> anyhow::Result<()> {
         ttfts[ttfts.len() / 2], ttfts[(ttfts.len() * 95) / 100],
         e2es[e2es.len() / 2], e2es[(e2es.len() * 95) / 100]
     );
+    for class in [PriorityClass::Interactive, PriorityClass::Batch] {
+        let xs: Vec<f64> = by_class
+            .iter()
+            .filter(|(c, _)| *c == class)
+            .map(|(_, t)| *t)
+            .collect();
+        if !xs.is_empty() {
+            println!("mean TTFT [{}]: {:.0} ms", class.label(),
+                     xs.iter().sum::<f64>() / xs.len() as f64);
+        }
+    }
     println!("(recorded in EXPERIMENTS.md §End-to-end)");
     server.shutdown();
     Ok(())

@@ -1,0 +1,89 @@
+//! Embed the serving stack in-process through the `service` API — no TCP,
+//! no CLI: build a `Service`, submit typed requests across priority
+//! classes, stream events, cancel one mid-flight, and read the KV block
+//! accounting off the live snapshot.
+//!
+//!     cargo run --release --example service_quickstart
+use dynabatch::config::presets::*;
+use dynabatch::config::PolicyKind;
+use dynabatch::service::{
+    GenEvent, GenRequest, PriorityClass, ServiceBuilder,
+};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    // A simulated pangu-7B deployment; swap `.engine(...)` in for PJRT.
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    let service = ServiceBuilder::new(model, hardware)
+        .policy(PolicyKind::Combined)
+        .d_sla(0.05)
+        .priors(16.0, 32.0)
+        .build()?;
+
+    // 1. Two classes submitted concurrently: the interactive request
+    //    wins contended admission slots under the policy's b_t.
+    let interactive = service.submit(
+        GenRequest::from_text("tell me about dynamic batching", 32)
+            .with_class(PriorityClass::Interactive)
+            .with_deadline(5.0),
+    )?;
+    let batch = service.submit(
+        GenRequest::from_text("background summarization job", 32)
+            .with_class(PriorityClass::Batch),
+    )?;
+
+    // 2. A third request we will cancel mid-stream.
+    let mut doomed = service.submit(
+        GenRequest::from_text("this one gets cancelled", 512)
+            .with_class(PriorityClass::Batch),
+    )?;
+    let doomed_id = doomed.id();
+
+    // Stream the doomed request until its first token, then cancel.
+    let mut seen_tokens = 0;
+    while let Some(ev) = doomed.next_event_timeout(Duration::from_secs(10)) {
+        match ev {
+            GenEvent::Token { .. } => {
+                seen_tokens += 1;
+                if seen_tokens == 1 {
+                    println!("request {doomed_id}: first token streamed — \
+                              cancelling");
+                    doomed.cancel();
+                }
+            }
+            GenEvent::Cancelled { id } => {
+                println!("request {id}: cancelled, KV blocks freed");
+                break;
+            }
+            GenEvent::Done { id, n_tokens, .. } => {
+                println!("request {id}: finished ({n_tokens} tokens) \
+                          before the cancel landed");
+                break;
+            }
+            _ => {}
+        }
+    }
+
+    // 3. The other two run to completion; per-request latency comes back
+    //    on the handle.
+    for (label, handle) in [("interactive", interactive), ("batch", batch)] {
+        let c = handle.wait()?;
+        println!(
+            "{label:12} id={} tokens={} ttft={:.1}ms e2e={:.1}ms",
+            c.id, c.n_tokens, c.ttft * 1e3, c.e2e * 1e3
+        );
+    }
+
+    // 4. Introspection: the snapshot exposes queue depths per class and
+    //    the KV block accounting.
+    let snap = service.snapshot();
+    println!(
+        "snapshot: finished={} cancelled={} kv_used={} tokens \
+         (free blocks {}/{})",
+        snap.finished, snap.cancelled, snap.kv_used_tokens,
+        snap.kv_free_blocks, snap.kv_total_blocks
+    );
+    service.shutdown();
+    Ok(())
+}

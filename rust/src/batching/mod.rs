@@ -99,6 +99,7 @@ pub(crate) fn test_obs(eta: u64, used: u64, nd: u32, np: u32) -> Observation {
         running_decode: nd,
         pending_prefill: np,
         waiting: 10,
+        waiting_by_class: [0, 10, 0],
     }
 }
 

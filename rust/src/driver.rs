@@ -1,6 +1,12 @@
 //! Experiment driver: wires workload → scheduler → engine → metrics, in
 //! virtual time (simulation) or wall time (real engine), plus the capacity
 //! search used by Table II / Fig. 4.
+//!
+//! This is the offline twin of the [`crate::service`] layer: both drive
+//! the same priority-aware scheduler, so requests may carry classes and
+//! deadlines here too. Deadlines on this path are *absolute* scheduler
+//! clock values (the service converts relative deadlines at acceptance);
+//! shed/cancel/reject counts surface in [`RunMetrics`].
 
 use crate::config::{HardwareSpec, ModelSpec, SchedulerConfig};
 use crate::engine::sim::SimEngine;
@@ -278,6 +284,40 @@ mod tests {
             md.preemptions,
             mg.preemptions
         );
+    }
+
+    #[test]
+    fn run_loop_sheds_expired_deadlines_and_reports() {
+        // One slot: request 0 monopolizes it for hundreds of virtual ms,
+        // request 1's absolute deadline lapses while it waits, and the
+        // shed shows up in the metrics.
+        let model = pangu_7b();
+        let hardware = node_for(&model);
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::StaticFixed { batch: 1 },
+            ..SchedulerConfig::default()
+        };
+        let mut sched = Scheduler::new(cfg, 100_000, 0, 64.0, 64.0);
+        let mut engine = SimEngine::new(&model, &hardware);
+        let mut clock = VirtualClock::new();
+        let requests = vec![
+            Request::new(0, 64, 400, 0.0),
+            Request::new(1, 64, 8, 0.0).with_deadline(Some(0.05)),
+        ];
+        run_loop(&mut sched, &mut engine, &mut clock, requests, 1_000_000)
+            .unwrap();
+        let m = RunMetrics::compute(
+            sched.policy_label(),
+            sched.finished(),
+            &sched.stats,
+            &sched.decode_latencies,
+            clock.now(),
+            engine.utilization(),
+        );
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.n_requests, 2);
+        assert_eq!(m.n_finished, 1, "only the survivor generated tokens");
+        assert_eq!(m.output_tokens, 400);
     }
 
     #[test]

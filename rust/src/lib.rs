@@ -3,11 +3,25 @@
 //! Memory-aware and SLA-constrained dynamic batching for LLM inference
 //! serving — a full-stack reproduction of Pang, Li & Wang (CS.DC 2025).
 //!
-//! Three layers (see DESIGN.md): a rust coordinator (this crate) on the
-//! request path, a JAX TinyGPT model and Pallas attention kernels compiled
-//! once to HLO-text artifacts (`python/compile/`), and the PJRT runtime
-//! that executes them ([`runtime`]). The paper-scale models run through a
-//! calibrated discrete-event simulator ([`engine::sim`]).
+//! Three layers (see DESIGN.md for the full architecture): a rust
+//! coordinator (this crate) on the request path, a JAX TinyGPT model and
+//! Pallas attention kernels compiled once to HLO-text artifacts
+//! (`python/compile/`), and the PJRT runtime that executes them
+//! ([`runtime`]). The paper-scale models run through a calibrated
+//! discrete-event simulator ([`engine::sim`]).
+//!
+//! The public entry point for running inference is the [`service`] layer:
+//! a [`service::ServiceBuilder`]-built [`service::Service`] accepting
+//! typed [`service::GenRequest`]s (priority class, sampling parameters,
+//! deadline) and returning [`service::SubmissionHandle`]s that stream
+//! [`service::GenEvent`]s and support cancellation. The TCP frontend
+//! ([`server`]) and the examples are thin layers over it; the experiment
+//! driver ([`driver`]) exercises the same scheduler in virtual time.
+
+// Carried clippy allowances: the codebase predates these lints and keeps
+// its own idioms (inherent `to_string` on the vendored Json type, index
+// loops over tensor planes in the runtime).
+#![allow(clippy::inherent_to_string, clippy::needless_range_loop)]
 
 pub mod batching;
 pub mod benchkit;
@@ -21,6 +35,7 @@ pub mod request;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod service;
 pub mod sim;
 pub mod telemetry;
 pub mod tokenizer;

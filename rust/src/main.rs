@@ -7,8 +7,8 @@ use dynabatch::driver::{capacity_search, run_sim, SimScenario};
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
 use dynabatch::experiments::{ablations, figures, table1, table2};
-use dynabatch::scheduler::Scheduler;
 use dynabatch::server;
+use dynabatch::service::ServiceBuilder;
 use dynabatch::util::cli::Command;
 use dynabatch::workload::{trace, Arrival, LengthDist, Workload};
 use std::path::Path;
@@ -275,15 +275,24 @@ fn cmd_serve(m: &M) -> Result<()> {
     };
     // η for the real engine: slots × context window.
     let eta = max_batch as u64 * max_seq as u64;
-    let sched = Scheduler::new(cfg, eta, 0, 32.0, 32.0);
     let dir = dir.to_path_buf();
-    let server = server::serve(
-        move || Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>),
-        sched,
-        m.get("bind"),
-    )?;
-    println!("serving on {} — protocol: line-delimited JSON \
-              ({{\"op\":\"generate\",...}})", server.local_addr);
+    // The service is the one public API; the TCP server is a thin
+    // protocol adapter over it. Model/hardware specs only seed the
+    // estimators here — η and the engine come from the artifacts.
+    let service = ServiceBuilder::new(presets::tiny_real(),
+                                      presets::cpu_host())
+        .config(cfg)
+        .eta_tokens(eta)
+        .priors(32.0, 32.0)
+        .engine(move || {
+            Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>)
+        })
+        .build()?;
+    let server = server::serve_service(service, m.get("bind"))?;
+    println!("serving on {} — protocol v2: line-delimited JSON \
+              ({{\"op\":\"generate\"|\"cancel\"|\"shutdown\",...}}, \
+              per-request class/sampling/deadline_ms — see DESIGN.md)",
+             server.local_addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

@@ -32,6 +32,10 @@ pub struct RunMetrics {
     pub mean_batch: f64,
     pub preemptions: u64,
     pub swaps: u64,
+    /// Early terminations on the request path (service semantics).
+    pub rejected: u64,
+    pub shed: u64,
+    pub cancelled: u64,
     /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
     pub utilization: Option<f64>,
 }
@@ -82,6 +86,9 @@ impl RunMetrics {
             },
             preemptions: stats.preempt_recompute,
             swaps: stats.preempt_swap,
+            rejected: stats.rejected,
+            shed: stats.shed,
+            cancelled: stats.cancelled,
             utilization,
         }
     }
@@ -116,6 +123,9 @@ impl RunMetrics {
             ("mean_batch", Json::Num(self.mean_batch)),
             ("preemptions", Json::from(self.preemptions)),
             ("swaps", Json::from(self.swaps)),
+            ("rejected", Json::from(self.rejected)),
+            ("shed", Json::from(self.shed)),
+            ("cancelled", Json::from(self.cancelled)),
             (
                 "utilization",
                 self.utilization.map(Json::Num).unwrap_or(Json::Null),

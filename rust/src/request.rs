@@ -1,8 +1,122 @@
 //! Request lifecycle: the unit of work flowing router → queue → scheduler
 //! → engine, with the timestamps the metrics layer needs (TTFT, TBT, SLA
-//! attainment).
+//! attainment), plus the typed submission metadata the service layer
+//! carries (priority class, sampling parameters, deadline).
+
+use anyhow::{bail, Result};
 
 pub type RequestId = u64;
+
+/// Service priority class. Admission is class-weighted (smooth weighted
+/// round-robin over the per-class waiting queues), so higher classes win
+/// contended `b_t` slots without starving lower ones.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum PriorityClass {
+    /// Latency-sensitive, user-facing traffic.
+    Interactive,
+    /// Default class.
+    #[default]
+    Standard,
+    /// Throughput-oriented background work (e.g. eval or RLHF sampling).
+    Batch,
+}
+
+impl PriorityClass {
+    pub const COUNT: usize = 3;
+    pub const ALL: [PriorityClass; Self::COUNT] =
+        [PriorityClass::Interactive, PriorityClass::Standard,
+         PriorityClass::Batch];
+
+    /// Queue index: 0 = highest priority.
+    pub fn rank(self) -> usize {
+        match self {
+            PriorityClass::Interactive => 0,
+            PriorityClass::Standard => 1,
+            PriorityClass::Batch => 2,
+        }
+    }
+
+    /// Admission weight for the weighted round-robin (per contended slot,
+    /// Interactive gets ~8/12, Standard ~3/12, Batch ~1/12 of admissions
+    /// when every class is backlogged).
+    pub fn weight(self) -> u32 {
+        match self {
+            PriorityClass::Interactive => 8,
+            PriorityClass::Standard => 3,
+            PriorityClass::Batch => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            PriorityClass::Interactive => "interactive",
+            PriorityClass::Standard => "standard",
+            PriorityClass::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.trim() {
+            "interactive" | "high" => PriorityClass::Interactive,
+            "standard" | "normal" | "" => PriorityClass::Standard,
+            "batch" | "low" => PriorityClass::Batch,
+            other => bail!("unknown priority class '{other}' \
+                            (want interactive|standard|batch)"),
+        })
+    }
+}
+
+/// Why a request reached [`Phase::Finished`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full budget.
+    Completed,
+    /// Rejected at admission: prompt + budget exceeds the engine's
+    /// maximum sequence length.
+    Rejected,
+    /// Shed from the waiting queue after its deadline expired.
+    DeadlineExceeded,
+    /// Cancelled by the client; any KV blocks were freed mid-flight.
+    Cancelled,
+}
+
+/// Typed sampling parameters, carried end-to-end (service → wire →
+/// scheduler → engine). Current engines decode greedily; the parameters
+/// are validated, transported and recorded so engines that sample can
+/// honour them without another protocol change — see DESIGN.md.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy (the default).
+    pub temperature: f64,
+    /// 0 = disabled.
+    pub top_k: u32,
+    /// Nucleus mass in (0, 1]; 1.0 = disabled.
+    pub top_p: f64,
+    /// Per-request sampling seed.
+    pub seed: Option<u64>,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: None }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.temperature.is_finite() || self.temperature < 0.0 {
+            bail!("sampling.temperature must be finite and >= 0");
+        }
+        if !self.top_p.is_finite() || self.top_p <= 0.0 || self.top_p > 1.0 {
+            bail!("sampling.top_p must be in (0, 1]");
+        }
+        Ok(())
+    }
+}
 
 /// Where a request currently is in its lifecycle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -48,6 +162,17 @@ pub struct Request {
     pub prompt_tokens: Vec<i32>,
     /// Generated token ids (real-engine path only).
     pub output_tokens: Vec<i32>,
+
+    // ---- service metadata ----
+    /// Priority class for class-weighted admission.
+    pub class: PriorityClass,
+    /// Absolute scheduler-clock deadline (seconds) for the first token;
+    /// still-waiting requests are shed once it passes. None = no deadline.
+    pub deadline: Option<f64>,
+    /// Sampling parameters (plumbed through; engines decode greedily).
+    pub sampling: SamplingParams,
+    /// Set when the request reaches [`Phase::Finished`].
+    pub finish: Option<FinishReason>,
 }
 
 impl Request {
@@ -67,7 +192,26 @@ impl Request {
             slot: None,
             prompt_tokens: Vec::new(),
             output_tokens: Vec::new(),
+            class: PriorityClass::default(),
+            deadline: None,
+            sampling: SamplingParams::default(),
+            finish: None,
         }
+    }
+
+    pub fn with_class(mut self, class: PriorityClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Option<f64>) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
+        self
     }
 
     pub fn with_tokens(id: RequestId, prompt_tokens: Vec<i32>,
@@ -114,10 +258,19 @@ impl Request {
         if self.decode_done() {
             self.phase = Phase::Finished;
             self.finished_at = Some(now);
+            self.finish = Some(FinishReason::Completed);
             true
         } else {
             false
         }
+    }
+
+    /// Terminate without completing (reject / shed / cancel).
+    pub fn terminate(&mut self, reason: FinishReason, now: f64) {
+        self.phase = Phase::Finished;
+        self.finished_at = Some(now);
+        self.finish = Some(reason);
+        self.slot = None;
     }
 
     /// Reset to re-run from scratch after a recompute-preemption (vLLM
@@ -233,5 +386,68 @@ mod tests {
         let r = Request::with_tokens(5, vec![1, 2, 3], 4, 0.0);
         assert_eq!(r.prompt_len, 3);
         assert_eq!(r.prompt_tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn class_defaults_and_builders() {
+        let r = Request::new(6, 10, 2, 0.0);
+        assert_eq!(r.class, PriorityClass::Standard);
+        assert_eq!(r.deadline, None);
+        assert_eq!(r.sampling, SamplingParams::greedy());
+        let r = r
+            .with_class(PriorityClass::Interactive)
+            .with_deadline(Some(1.5));
+        assert_eq!(r.class, PriorityClass::Interactive);
+        assert_eq!(r.deadline, Some(1.5));
+    }
+
+    #[test]
+    fn priority_class_parse_label_roundtrip() {
+        for c in PriorityClass::ALL {
+            assert_eq!(PriorityClass::parse(c.label()).unwrap(), c);
+        }
+        assert_eq!(PriorityClass::parse("high").unwrap(),
+                   PriorityClass::Interactive);
+        assert!(PriorityClass::parse("vip").is_err());
+        // Ranks are dense and weights strictly ordered.
+        let ranks: Vec<usize> =
+            PriorityClass::ALL.iter().map(|c| c.rank()).collect();
+        assert_eq!(ranks, vec![0, 1, 2]);
+        assert!(PriorityClass::Interactive.weight()
+                > PriorityClass::Standard.weight());
+        assert!(PriorityClass::Standard.weight()
+                > PriorityClass::Batch.weight());
+    }
+
+    #[test]
+    fn sampling_validation() {
+        assert!(SamplingParams::greedy().validate().is_ok());
+        let bad = SamplingParams { temperature: -1.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = SamplingParams { top_p: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let ok = SamplingParams {
+            temperature: 0.7,
+            top_k: 40,
+            top_p: 0.9,
+            seed: Some(7),
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn finish_reasons_recorded() {
+        let mut r = Request::new(7, 4, 1, 0.0);
+        assert_eq!(r.finish, None);
+        r.phase = Phase::Decode;
+        r.prefilled = 4;
+        r.record_token(1.0);
+        assert_eq!(r.finish, Some(FinishReason::Completed));
+
+        let mut r = Request::new(8, 4, 1, 0.0);
+        r.terminate(FinishReason::Cancelled, 2.0);
+        assert_eq!(r.phase, Phase::Finished);
+        assert_eq!(r.finish, Some(FinishReason::Cancelled));
+        assert_eq!(r.finished_at, Some(2.0));
     }
 }

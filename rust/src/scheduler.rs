@@ -21,10 +21,12 @@ use crate::batching::{build_policy, BatchPolicy, ChunkController};
 use crate::config::{PreemptMode, SchedulerConfig};
 use crate::engine::{DecodeWork, Engine, PrefillWork, StepPlan};
 use crate::kv::KvBlockManager;
-use crate::request::{Phase, Request, RequestId};
+use crate::request::{FinishReason, Phase, PriorityClass, Request, RequestId};
 use crate::telemetry::{Observation, Telemetry};
 use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
+
+const N_CLASSES: usize = PriorityClass::COUNT;
 
 /// Aggregated counters the experiments read off after a run.
 #[derive(Debug, Clone, Default)]
@@ -37,6 +39,10 @@ pub struct SchedStats {
     pub preempt_swap: u64,
     pub admitted: u64,
     pub finished: u64,
+    /// Requests terminated early, by reason.
+    pub rejected: u64,
+    pub shed: u64,
+    pub cancelled: u64,
     /// Σ decode batch sizes (per decode step) — mean batch = /decode_steps.
     pub decode_batch_sum: u64,
     pub b_t_last: u32,
@@ -48,7 +54,11 @@ pub struct Scheduler {
     chunk_ctl: Option<ChunkController>,
     pub kv: KvBlockManager,
     pub telemetry: Telemetry,
-    waiting: VecDeque<RequestId>,
+    /// Per-class waiting queues, indexed by [`PriorityClass::rank`]
+    /// (FIFO within a class; classes interleaved by weighted round-robin).
+    waiting: [VecDeque<RequestId>; N_CLASSES],
+    /// Smooth-WRR credit per class (see [`Self::pick_waiting_class`]).
+    wrr_credit: [i64; N_CLASSES],
     /// Preempted requests waiting to resume (front = highest priority).
     resume_queue: VecDeque<RequestId>,
     /// Admission order of running requests (back = newest = first victim).
@@ -100,7 +110,8 @@ impl Scheduler {
             chunk_ctl,
             kv,
             telemetry,
-            waiting: VecDeque::new(),
+            waiting: std::array::from_fn(|_| VecDeque::new()),
+            wrr_credit: [0; N_CLASSES],
             resume_queue: VecDeque::new(),
             running_order: Vec::new(),
             requests: BTreeMap::new(),
@@ -117,22 +128,36 @@ impl Scheduler {
         self.policy.label()
     }
 
-    /// Submit a new request.
+    /// Submit a new request into its class queue.
     pub fn submit(&mut self, req: Request) {
         debug_assert_eq!(req.phase, Phase::Waiting);
         self.telemetry.record_prompt(req.prompt_len);
-        self.waiting.push_back(req.id);
+        self.waiting[req.class.rank()].push_back(req.id);
         self.requests.insert(req.id, req);
     }
 
     pub fn has_work(&self) -> bool {
-        !self.waiting.is_empty()
+        self.waiting.iter().any(|q| !q.is_empty())
             || !self.resume_queue.is_empty()
             || !self.running_order.is_empty()
     }
 
+    fn total_waiting(&self) -> usize {
+        self.waiting.iter().map(|q| q.len()).sum()
+    }
+
     pub fn waiting_len(&self) -> usize {
-        self.waiting.len() + self.resume_queue.len()
+        self.total_waiting() + self.resume_queue.len()
+    }
+
+    /// Waiting-queue depth per class (rank order: interactive first).
+    pub fn waiting_by_class(&self) -> [u32; N_CLASSES] {
+        std::array::from_fn(|i| self.waiting[i].len() as u32)
+    }
+
+    /// Preempted requests queued to resume.
+    pub fn resume_len(&self) -> usize {
+        self.resume_queue.len()
     }
 
     pub fn running_len(&self) -> usize {
@@ -152,7 +177,7 @@ impl Scheduler {
     }
 
     fn observe(&self, now: f64) -> Observation {
-        let pending_prefill = self.waiting.len()
+        let pending_prefill = self.total_waiting()
             + self.resume_queue.len()
             + self
                 .running_order
@@ -170,7 +195,7 @@ impl Scheduler {
             self.kv.used_tokens(),
             running_decode as u32,
             pending_prefill as u32,
-            self.waiting.len() as u32,
+            self.waiting_by_class(),
         )
     }
 
@@ -178,6 +203,9 @@ impl Scheduler {
     /// do (idle — the driver should sleep until the next arrival).
     pub fn step<E: Engine + ?Sized>(&mut self, engine: &mut E, now: f64)
                                     -> Result<Option<StepReport>> {
+        // ---- 0. shed expired waiters before they count as load ----
+        self.shed_expired(now);
+
         // ---- 1. policy decision every interval ----
         let obs = self.observe(now);
         if self.steps_since_decision >= self.cfg.interval_steps {
@@ -289,9 +317,70 @@ impl Scheduler {
         self.finished.push(r);
     }
 
-    /// Admission control: resume preempted first, then fresh arrivals.
-    /// Dynamic policies gate at `b_t`; the static-greedy baseline admits
-    /// while prompt blocks fit (vLLM semantics).
+    /// Drop still-waiting requests whose deadline (latest acceptable time
+    /// to remain unadmitted) has passed. Running and preempted requests
+    /// are never shed — they already hold progress worth keeping.
+    fn shed_expired(&mut self, now: f64) {
+        for q in self.waiting.iter_mut() {
+            // Common case: nothing expired — one scan, no allocation.
+            if !q.iter().any(|id| {
+                self.requests[id].deadline.is_some_and(|d| d < now)
+            }) {
+                continue;
+            }
+            let mut kept = VecDeque::with_capacity(q.len());
+            while let Some(id) = q.pop_front() {
+                if self.requests[&id].deadline.is_some_and(|d| d < now) {
+                    let mut r =
+                        self.requests.remove(&id).expect("queued req");
+                    r.terminate(FinishReason::DeadlineExceeded, now);
+                    self.stats.shed += 1;
+                    self.finished.push(r);
+                } else {
+                    kept.push_back(id);
+                }
+            }
+            *q = kept;
+        }
+    }
+
+    /// Smooth weighted round-robin pick over the non-empty class queues:
+    /// the class with the highest `credit + weight` wins (ties go to the
+    /// higher-priority class). Credits are only committed when the pick
+    /// leads to an actual admission, so a memory-blocked head does not
+    /// burn the class's turn.
+    fn pick_waiting_class(&self) -> Option<usize> {
+        let mut best: Option<(usize, i64)> = None;
+        for c in PriorityClass::ALL {
+            let i = c.rank();
+            if self.waiting[i].is_empty() {
+                continue;
+            }
+            let eff = self.wrr_credit[i] + c.weight() as i64;
+            if best.map(|(_, b)| eff > b).unwrap_or(true) {
+                best = Some((i, eff));
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Commit the WRR turn for `chosen` (call before popping its head).
+    fn commit_pick(&mut self, chosen: usize) {
+        let mut total = 0i64;
+        for c in PriorityClass::ALL {
+            let i = c.rank();
+            if !self.waiting[i].is_empty() {
+                self.wrr_credit[i] += c.weight() as i64;
+                total += c.weight() as i64;
+            }
+        }
+        self.wrr_credit[chosen] -= total;
+    }
+
+    /// Admission control: resume preempted first, then fresh arrivals
+    /// picked class-weighted. Dynamic policies gate at `b_t`; the
+    /// static-greedy baseline admits while prompt blocks fit (vLLM
+    /// semantics).
     fn resume_and_admit<E: Engine + ?Sized>(&mut self, engine: &mut E,
                                             now: f64, plan: &mut StepPlan)
                                             -> Result<()> {
@@ -305,13 +394,16 @@ impl Scheduler {
                 break;
             }
             let from_resume = !self.resume_queue.is_empty();
-            let id = match self
-                .resume_queue
-                .front()
-                .or_else(|| self.waiting.front())
-            {
-                Some(&id) => id,
-                None => break,
+            let (id, class_idx) = if from_resume {
+                (*self.resume_queue.front().expect("non-empty"), None)
+            } else {
+                match self.pick_waiting_class() {
+                    Some(c) => {
+                        (*self.waiting[c].front().expect("picked non-empty"),
+                         Some(c))
+                    }
+                    None => break,
+                }
             };
             let r = &self.requests[&id];
             // Swapped victim: bring blocks back instead of re-allocating.
@@ -342,25 +434,35 @@ impl Scheduler {
                 break;
             }
             if r.prompt_len.max(1) + r.max_new_tokens > engine.max_seq() {
-                // Cannot ever fit this request on this engine: reject it.
+                // Cannot ever fit this request on this engine: reject it
+                // (no WRR commit — rejection isn't an admission).
                 let mut r = self.requests.remove(&id).unwrap();
                 if from_resume {
                     self.resume_queue.pop_front();
                 } else {
-                    self.waiting.pop_front();
+                    self.waiting[class_idx.expect("waiting pick")]
+                        .pop_front();
                 }
-                r.phase = Phase::Finished;
-                r.finished_at = Some(now);
+                r.terminate(FinishReason::Rejected, now);
+                self.stats.rejected += 1;
                 self.finished.push(r);
                 continue;
             }
             self.kv.allocate(id, first_alloc).expect("can_grow checked");
             let r = self.requests.get_mut(&id).unwrap();
             r.phase = Phase::Prefill;
+            if r.prefill_done() {
+                // Zero-length prompt: nothing to prefill, so no prefill
+                // step will ever flip the phase — go straight to decode
+                // instead of wedging the slot.
+                r.phase = Phase::Decode;
+            }
             if from_resume {
                 self.resume_queue.pop_front();
             } else {
-                self.waiting.pop_front();
+                let c = class_idx.expect("waiting pick");
+                self.commit_pick(c);
+                self.waiting[c].pop_front();
                 self.stats.admitted += 1;
             }
             self.running_order.push(id);
@@ -493,6 +595,43 @@ impl Scheduler {
         self.resume_queue.push_front(victim);
         self.stats.preempt_recompute += 1;
     }
+
+    /// Cancel a request in any pre-finished state: it is pulled out of
+    /// whichever queue holds it, its KV blocks are freed mid-flight, the
+    /// engine slot is released, and a [`FinishReason::Cancelled`] record
+    /// lands in `finished`. Returns false for unknown / already-finished
+    /// ids (cancel is idempotent).
+    pub fn cancel<E: Engine + ?Sized>(&mut self, engine: &mut E,
+                                      id: RequestId, now: f64) -> bool {
+        let Some(phase) = self.requests.get(&id).map(|r| r.phase) else {
+            return false;
+        };
+        match phase {
+            Phase::Finished => return false,
+            Phase::Waiting => {
+                for q in self.waiting.iter_mut() {
+                    q.retain(|x| *x != id);
+                }
+            }
+            Phase::Preempted => {
+                self.resume_queue.retain(|x| *x != id);
+                // Swap victims still hold blocks (device or swap pool);
+                // recompute victims hold none — free is best-effort.
+                let _ = self.kv.free(id);
+                engine.release(id);
+            }
+            Phase::Prefill | Phase::Decode => {
+                self.running_order.retain(|x| *x != id);
+                let _ = self.kv.free(id);
+                engine.release(id);
+            }
+        }
+        let mut r = self.requests.remove(&id).expect("checked above");
+        r.terminate(FinishReason::Cancelled, now);
+        self.stats.cancelled += 1;
+        self.finished.push(r);
+        true
+    }
 }
 
 /// Token slice for the real engine (empty when the request carries no
@@ -529,6 +668,7 @@ impl PolicyCapExt for Box<dyn BatchPolicy> {
             running_decode: 0,
             pending_prefill: 0,
             waiting: 0,
+            waiting_by_class: [0; N_CLASSES],
         };
         self.decide(&obs)
     }
@@ -686,6 +826,135 @@ mod tests {
         for (_, b) in &s.bt_timeline {
             assert!(*b >= 1 && *b <= s.cfg.b_max);
         }
+    }
+
+    #[test]
+    fn priority_wins_contended_admission() {
+        // One slot (b_t = 1): the interactive request must be admitted —
+        // and therefore finish — before the batch request that arrived
+        // first.
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 1 }, 100_000);
+        s.submit(Request::new(1, 32, 8, 0.0)
+            .with_class(PriorityClass::Batch));
+        s.submit(Request::new(2, 32, 8, 0.0)
+            .with_class(PriorityClass::Interactive));
+        run_all(&mut s, &mut e, &mut c, 10_000);
+        assert_eq!(s.finished().len(), 2);
+        let batch = s.finished().iter().find(|r| r.id == 1).unwrap();
+        let inter = s.finished().iter().find(|r| r.id == 2).unwrap();
+        assert!(
+            inter.finished_at.unwrap() <= batch.first_token_at.unwrap(),
+            "interactive must fully drain before batch starts: {:?} vs {:?}",
+            inter.finished_at, batch.first_token_at
+        );
+    }
+
+    #[test]
+    fn wrr_interleaves_without_starvation() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 4 }, 100_000);
+        for i in 0..12 {
+            s.submit(Request::new(i, 32, 16, 0.0)
+                .with_class(PriorityClass::Batch));
+            s.submit(Request::new(100 + i, 32, 16, 0.0)
+                .with_class(PriorityClass::Interactive));
+        }
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 24, "no class is starved");
+        let mean_ttft = |lo: u64, hi: u64| {
+            let xs: Vec<f64> = s
+                .finished()
+                .iter()
+                .filter(|r| r.id >= lo && r.id < hi)
+                .map(|r| r.ttft().unwrap())
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean_ttft(100, 200) < mean_ttft(0, 100),
+            "interactive must see lower queueing delay than batch"
+        );
+    }
+
+    #[test]
+    fn cancel_frees_kv_mid_flight() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::MemoryAware, 100_000);
+        s.submit(Request::new(0, 64, 1000, 0.0));
+        s.submit(Request::new(1, 64, 16, 0.0));
+        // Step until request 0 is decoding with KV resident.
+        for _ in 0..50 {
+            if let Some(rep) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(rep.elapsed);
+            }
+            if s.kv.tokens_of(0).unwrap_or(0) > 64 {
+                break;
+            }
+        }
+        assert!(s.kv.tokens_of(0).unwrap_or(0) > 64, "req 0 mid-decode");
+        assert!(s.cancel(&mut e, 0, c.now()));
+        assert_eq!(s.kv.tokens_of(0), None, "cancel frees the block table");
+        s.kv.check_invariants().unwrap();
+        assert!(!s.cancel(&mut e, 0, c.now()), "cancel is idempotent");
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.kv.used_tokens(), 0, "all KV returned after drain");
+        let cancelled = s.finished().iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(cancelled.finish, Some(FinishReason::Cancelled));
+        assert!(cancelled.generated < 1000);
+        let done = s.finished().iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(done.finish, Some(FinishReason::Completed));
+        assert_eq!(done.generated, 16);
+        assert_eq!(s.stats.cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_waiting_request_before_admission() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 1 }, 100_000);
+        s.submit(Request::new(0, 32, 64, 0.0));
+        s.submit(Request::new(1, 32, 64, 0.0));
+        s.step(&mut e, c.now()).unwrap(); // admits only req 0
+        assert!(s.cancel(&mut e, 1, c.now()));
+        assert_eq!(s.waiting_len(), 0);
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        let r1 = s.finished().iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(r1.finish, Some(FinishReason::Cancelled));
+        assert_eq!(r1.generated, 0);
+        let r0 = s.finished().iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.finish, Some(FinishReason::Completed));
+    }
+
+    #[test]
+    fn zero_length_prompt_goes_straight_to_decode() {
+        // Nothing to prefill → no prefill step would ever flip the phase;
+        // admission must hand the request to decode, not wedge the slot.
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::MemoryAware, 100_000);
+        s.submit(Request::new(1, 0, 4, 0.0));
+        run_all(&mut s, &mut e, &mut c, 1_000);
+        assert_eq!(s.finished().len(), 1);
+        assert_eq!(s.finished()[0].generated, 4);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn deadline_expired_waiters_are_shed() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 1 }, 100_000);
+        // Req 0 occupies the single slot for hundreds of virtual ms;
+        // req 1's deadline expires while it waits.
+        s.submit(Request::new(0, 64, 500, 0.0));
+        s.submit(Request::new(1, 64, 8, 0.0).with_deadline(Some(0.05)));
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 2);
+        let shed = s.finished().iter().find(|r| r.id == 1).unwrap();
+        assert_eq!(shed.finish, Some(FinishReason::DeadlineExceeded));
+        assert_eq!(shed.generated, 0);
+        assert_eq!(s.stats.shed, 1);
+        let r0 = s.finished().iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.finish, Some(FinishReason::Completed));
+        assert_eq!(s.kv.used_tokens(), 0);
     }
 
     #[test]

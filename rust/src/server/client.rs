@@ -1,14 +1,24 @@
-//! Blocking client for the dynabatch serving protocol — used by examples,
-//! load generators and tests.
+//! Blocking client for the dynabatch serving protocol (v1 + v2) — used by
+//! examples, load generators and tests.
+//!
+//! Every server line is decoded into a typed [`ClientEvent`]; unknown or
+//! malformed event types surface as errors instead of being skipped (a
+//! v1 client talking to a newer server fails loudly, not by hanging).
 
+use crate::request::{PriorityClass, SamplingParams};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Events read past while waiting for a specific one (e.g. another
+    /// stream's tokens arriving before a `submit`'s `accepted`); drained
+    /// by [`Client::next_event`] before touching the socket.
+    pending: VecDeque<ClientEvent>,
 }
 
 /// Final result of one generation call.
@@ -23,6 +33,37 @@ pub struct Generation {
     pub tokens: Vec<i32>,
 }
 
+/// v2 submission options (all optional on the wire).
+#[derive(Debug, Clone, Default)]
+pub struct GenOptions {
+    pub class: PriorityClass,
+    /// Shed the request if still unadmitted after this many ms.
+    pub deadline_ms: Option<f64>,
+    pub sampling: Option<SamplingParams>,
+}
+
+/// One decoded server event.
+#[derive(Debug, Clone)]
+pub enum ClientEvent {
+    Accepted { id: u64, class: String },
+    Token { id: u64, token: i32, text: String },
+    Done {
+        id: u64,
+        text: String,
+        n_tokens: u32,
+        ttft_ms: f64,
+        e2e_ms: f64,
+    },
+    Cancelled { id: u64 },
+    /// `enqueued` = the cancel reached the service; it does NOT imply the
+    /// request existed or will end with `cancelled` — key off the
+    /// stream's terminal event.
+    CancelAck { id: u64, enqueued: bool },
+    /// Server-side error; `id` is absent for connection-level errors.
+    Error { id: Option<u64>, message: String },
+    Bye,
+}
+
 impl Client {
     pub fn connect(addr: &str) -> Result<Self> {
         let stream = TcpStream::connect(addr)
@@ -31,6 +72,7 @@ impl Client {
         Ok(Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            pending: VecDeque::new(),
         })
     }
 
@@ -55,44 +97,187 @@ impl Client {
         Json::parse(line.trim()).map_err(|e| anyhow!("bad server json: {e}"))
     }
 
-    /// Generate, blocking until done; token events are collected.
-    pub fn generate(&mut self, prompt: &str, max_new_tokens: u32)
-                    -> Result<Generation> {
-        self.send(&Json::obj(vec![
+    /// Next server event: buffered events first (see [`Self::submit`]),
+    /// then the socket. Unknown event types and type-less lines are
+    /// errors — they are never silently skipped.
+    pub fn next_event(&mut self) -> Result<ClientEvent> {
+        if let Some(ev) = self.pending.pop_front() {
+            return Ok(ev);
+        }
+        self.read_event()
+    }
+
+    /// Decode one event straight off the socket (bypasses `pending`).
+    fn read_event(&mut self) -> Result<ClientEvent> {
+        let ev = self.recv()?;
+        let id = || ev.get("id").as_u64();
+        let need_id = || {
+            ev.get("id")
+                .as_u64()
+                .ok_or_else(|| anyhow!("event missing id: {}", ev.to_string()))
+        };
+        Ok(match ev.get("type").as_str() {
+            Some("accepted") => ClientEvent::Accepted {
+                id: need_id()?,
+                class: ev.get("class").as_str().unwrap_or("standard").into(),
+            },
+            Some("token") => ClientEvent::Token {
+                id: need_id()?,
+                token: ev.get("token").as_i64().unwrap_or(0) as i32,
+                text: ev.get("text").as_str().unwrap_or("").into(),
+            },
+            Some("done") => ClientEvent::Done {
+                id: need_id()?,
+                text: ev.get("text").as_str().unwrap_or("").into(),
+                n_tokens: ev.get("n_tokens").as_u64().unwrap_or(0) as u32,
+                ttft_ms: ev.get("ttft_ms").as_f64().unwrap_or(0.0),
+                e2e_ms: ev.get("e2e_ms").as_f64().unwrap_or(0.0),
+            },
+            Some("cancelled") => ClientEvent::Cancelled { id: need_id()? },
+            Some("cancel_ack") => ClientEvent::CancelAck {
+                id: need_id()?,
+                enqueued: ev.get("enqueued").as_bool().unwrap_or(false),
+            },
+            Some("error") => ClientEvent::Error {
+                id: id(),
+                message: ev.get("error").as_str().unwrap_or("?").into(),
+            },
+            Some("bye") => ClientEvent::Bye,
+            other => bail!("unknown server event type {other:?}: {}",
+                           ev.to_string()),
+        })
+    }
+
+    fn generate_op(prompt: &str, max_new_tokens: u32, opts: &GenOptions)
+                   -> Json {
+        let mut j = Json::obj(vec![
             ("op", Json::from("generate")),
             ("prompt", Json::from(prompt)),
             ("max_new_tokens", Json::from(max_new_tokens as u64)),
-        ]))?;
-        let mut id = 0u64;
+            ("class", Json::from(opts.class.label())),
+        ]);
+        if let Some(ms) = opts.deadline_ms {
+            j.set("deadline_ms", Json::Num(ms));
+        }
+        if let Some(s) = &opts.sampling {
+            let mut sj = Json::obj(vec![
+                ("temperature", Json::Num(s.temperature)),
+                ("top_k", Json::from(s.top_k as u64)),
+                ("top_p", Json::Num(s.top_p)),
+            ]);
+            if let Some(seed) = s.seed {
+                sj.set("seed", Json::from(seed));
+            }
+            j.set("sampling", sj);
+        }
+        j
+    }
+
+    /// Generate, blocking until done; token events are collected.
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: u32)
+                    -> Result<Generation> {
+        self.generate_with(prompt, max_new_tokens, &GenOptions::default())
+    }
+
+    /// Generate with v2 options (class, deadline, sampling).
+    ///
+    /// Blocking helper for one request at a time: it follows only the
+    /// stream it initiated (the first `accepted` after the send) and
+    /// *drops* events belonging to other in-flight requests on this
+    /// connection. To multiplex streams, use [`Self::submit`] +
+    /// [`Self::next_event`] and demultiplex by id yourself.
+    pub fn generate_with(&mut self, prompt: &str, max_new_tokens: u32,
+                         opts: &GenOptions) -> Result<Generation> {
+        self.send(&Self::generate_op(prompt, max_new_tokens, opts))?;
+        let mut id: Option<u64> = None;
         let mut tokens = Vec::new();
         loop {
-            let ev = self.recv()?;
-            match ev.get("type").as_str() {
-                Some("accepted") => {
-                    id = ev.get("id").as_u64().unwrap_or(0);
+            match self.next_event()? {
+                ClientEvent::Accepted { id: i, .. } if id.is_none() => {
+                    id = Some(i);
                 }
-                Some("token") => {
-                    if let Some(t) = ev.get("token").as_i64() {
-                        tokens.push(t as i32);
-                    }
+                ClientEvent::Token { id: i, token, .. }
+                    if Some(i) == id =>
+                {
+                    tokens.push(token);
                 }
-                Some("done") => {
+                ClientEvent::Done { id: i, text, n_tokens, ttft_ms,
+                                    e2e_ms } if Some(i) == id => {
                     return Ok(Generation {
-                        id,
-                        text: ev.get("text").as_str().unwrap_or("").into(),
-                        n_tokens: ev.get("n_tokens").as_u64().unwrap_or(0)
-                            as u32,
-                        ttft_ms: ev.get("ttft_ms").as_f64().unwrap_or(0.0),
-                        e2e_ms: ev.get("e2e_ms").as_f64().unwrap_or(0.0),
+                        id: i,
+                        text,
+                        n_tokens,
+                        ttft_ms,
+                        e2e_ms,
                         tokens,
                     });
                 }
-                Some("error") => {
-                    bail!("server error: {}",
-                          ev.get("error").as_str().unwrap_or("?"));
+                ClientEvent::Cancelled { id: i } if Some(i) == id => {
+                    bail!("request {i} was cancelled");
                 }
-                other => bail!("unexpected event type {other:?}"),
+                ClientEvent::Error { id: eid, message }
+                    if eid.is_none() || eid == id =>
+                {
+                    match eid {
+                        Some(i) => {
+                            bail!("server error (request {i}): {message}")
+                        }
+                        None => bail!("server error: {message}"),
+                    }
+                }
+                ClientEvent::Bye => {
+                    bail!("server shut down mid-generation");
+                }
+                // Events of other in-flight streams (and stray acks).
+                _ => {}
             }
+        }
+    }
+
+    /// Submit without waiting for completion: returns the request id once
+    /// the server accepts it. Stream the rest via [`Self::next_event`].
+    /// Events of other in-flight streams arriving first are buffered, not
+    /// dropped — they come back in order from [`Self::next_event`].
+    pub fn submit(&mut self, prompt: &str, max_new_tokens: u32,
+                  opts: &GenOptions) -> Result<u64> {
+        self.send(&Self::generate_op(prompt, max_new_tokens, opts))?;
+        loop {
+            // Straight off the socket: popping `pending` here would loop
+            // on events this call itself just buffered.
+            match self.read_event()? {
+                ClientEvent::Accepted { id, .. } => return Ok(id),
+                ClientEvent::Error { id: None, message } => {
+                    bail!("server rejected submission: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                // Another stream's event; keep it for next_event.
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Ask the server to cancel request `id` (any connection's request).
+    /// The `cancel_ack` arrives via [`Self::next_event`]; the affected
+    /// stream still ends with its own terminal event — `cancelled` if the
+    /// cancel landed in flight, or `done` if the request finished first.
+    pub fn send_cancel(&mut self, id: u64) -> Result<()> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("cancel")),
+            ("id", Json::from(id)),
+        ]))
+    }
+
+    /// Send a raw protocol line and decode one response event;
+    /// connection-level `error` events become `Err`. Test helper.
+    pub fn roundtrip_raw(&mut self, line: &str) -> Result<ClientEvent> {
+        writeln!(self.writer, "{line}")?;
+        self.writer.flush()?;
+        match self.next_event()? {
+            ClientEvent::Error { id, message } => match id {
+                Some(i) => bail!("server error (request {i}): {message}"),
+                None => bail!("server error: {message}"),
+            },
+            ev => Ok(ev),
         }
     }
 

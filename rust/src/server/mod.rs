@@ -1,51 +1,75 @@
-//! TCP serving frontend: a threaded line-delimited-JSON protocol over the
-//! scheduler, streaming tokens as they decode. This is the "router →
-//! scheduler → engine" request path of the paper's Fig. 1, with no python
-//! anywhere near it.
+//! TCP serving frontend: a thin line-delimited-JSON protocol adapter over
+//! the [`crate::service`] layer (which owns the router → scheduler →
+//! engine path of the paper's Fig. 1). No python anywhere near it.
 //!
-//! Protocol (one JSON object per line):
-//!   → {"op":"generate", "prompt": "...", "max_new_tokens": 32}
-//!   ← {"type":"accepted", "id": 7}
-//!   ← {"type":"token", "id": 7, "token": 104, "text": "h"}   (× n)
-//!   ← {"type":"done", "id": 7, "text": "…", "n_tokens": 32,
-//!      "ttft_ms": 12.3, "e2e_ms": 210.0}
-//!   → {"op":"shutdown"}         ← {"type":"bye"}
+//! # Protocol v2 (one JSON object per line)
+//!
+//! Requests:
+//!
+//! ```text
+//! → {"op":"generate", "prompt":"...", "max_new_tokens":32}        (v1)
+//! → {"op":"generate", "prompt_tokens":[256,104,105],              (v2)
+//!    "max_new_tokens":32, "class":"interactive",
+//!    "deadline_ms":1500,
+//!    "sampling":{"temperature":0.7,"top_k":40,"top_p":0.9,"seed":1}}
+//! → {"op":"cancel", "id":7}
+//! → {"op":"shutdown"}
+//! ```
+//!
+//! `generate` accepts either `prompt` (UTF-8, byte-tokenized server-side)
+//! or `prompt_tokens` (raw ids). `class` is one of
+//! `interactive|standard|batch` (default `standard`); `deadline_ms` sheds
+//! the request if it is still unadmitted that many ms after acceptance;
+//! `sampling` is validated and plumbed through (engines decode greedily).
+//!
+//! Responses (per request, streamed; exactly one terminal event):
+//!
+//! ```text
+//! ← {"type":"accepted",  "id":7, "class":"standard"}
+//! ← {"type":"token",     "id":7, "token":104, "text":"h"}       (× n)
+//! ← {"type":"done",      "id":7, "text":"…", "n_tokens":32,
+//!    "ttft_ms":12.3, "e2e_ms":210.0}                          (terminal)
+//! ← {"type":"error",     "id":7, "error":"deadline exceeded…"} (terminal)
+//! ← {"type":"cancelled", "id":7}                              (terminal)
+//! ```
+//!
+//! Connection-level responses: `{"type":"cancel_ack","id":7,
+//! "enqueued":true}` for `cancel` — `enqueued` means the cancel was
+//! *delivered* to the service, not that the request existed. If the
+//! request is still in flight its stream ends with `cancelled`; if it
+//! already finished (or the id is unknown) no further event follows, so
+//! clients must key off the stream's terminal event (`done` or
+//! `cancelled`), never off the ack. `{"type":"bye"}` answers `shutdown`,
+//! and `{"type":"error","error":"…"}` (no `id`) reports malformed input.
+//!
+//! v1 compatibility: a bare `generate` behaves exactly as before —
+//! `accepted`, `token`… then `done`. v2 additionally allows several
+//! concurrent `generate`s per connection (streams are interleaved,
+//! disambiguated by `id`) and `cancel` by id from any connection.
 
 pub mod client;
 
 use crate::engine::Engine;
-use crate::request::{Request, RequestId};
+use crate::request::{PriorityClass, SamplingParams};
 use crate::scheduler::Scheduler;
+use crate::service::{GenEvent, GenRequest, Service, SubmissionHandle};
 use crate::tokenizer;
 use crate::util::json::Json;
-use anyhow::{Context, Result};
-use std::collections::BTreeMap;
+use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// A submitted generation job plus where to stream its events.
-struct Job {
-    request: Request,
-    events: Sender<Json>,
-}
-
-/// Shared server state.
+/// Shared server state: the service plus the bound address.
 pub struct Server {
-    submit_tx: Sender<Job>,
-    next_id: AtomicU64,
-    shutdown: Arc<AtomicBool>,
+    service: Arc<Service>,
     pub local_addr: std::net::SocketAddr,
 }
 
-/// Spawn the engine loop + TCP acceptor. Returns once the listener is
-/// bound; serving continues on background threads until `shutdown`.
-///
-/// The engine is constructed *inside* its thread via `engine_builder`
-/// because PJRT handles are not `Send` (Rc + raw pointers); single-thread
-/// ownership is exactly what the runtime wants anyway.
+/// Compatibility entry point: build a [`Service`] over an explicit
+/// scheduler and serve it. The engine is constructed *inside* the service
+/// thread via `engine_builder` because PJRT handles are not `Send`.
 pub fn serve<F>(
     engine_builder: F,
     sched: Scheduler,
@@ -54,50 +78,27 @@ pub fn serve<F>(
 where
     F: FnOnce() -> anyhow::Result<Box<dyn Engine>> + Send + 'static,
 {
+    serve_service(Service::with_scheduler(engine_builder, sched)?, bind)
+}
+
+/// Spawn the TCP acceptor over an already-built service. Returns once the
+/// listener is bound; serving continues on background threads until
+/// shutdown.
+pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
     let listener =
         TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let local_addr = listener.local_addr()?;
-    let (submit_tx, submit_rx): (Sender<Job>, Receiver<Job>) =
-        std::sync::mpsc::channel();
-    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = Arc::new(Server { service: Arc::new(service), local_addr });
 
-    let server = Arc::new(Server {
-        submit_tx,
-        next_id: AtomicU64::new(1),
-        shutdown: shutdown.clone(),
-        local_addr,
-    });
-
-    // ---- engine loop thread ----
-    {
-        let shutdown = shutdown.clone();
-        let mut sched = sched;
-        std::thread::Builder::new()
-            .name("dynabatch-engine".into())
-            .spawn(move || {
-                let engine = match engine_builder() {
-                    Ok(e) => e,
-                    Err(e) => {
-                        crate::log_error!("server", "engine init failed: {e}");
-                        shutdown.store(true, Ordering::Relaxed);
-                        return;
-                    }
-                };
-                engine_loop(engine, &mut sched, submit_rx, shutdown);
-            })?;
-    }
-
-    // ---- acceptor thread ----
     {
         let server = server.clone();
-        let shutdown = shutdown.clone();
         std::thread::Builder::new()
             .name("dynabatch-accept".into())
             .spawn(move || {
                 listener
                     .set_nonblocking(true)
                     .expect("nonblocking listener");
-                while !shutdown.load(Ordering::Relaxed) {
+                while !server.service.is_shutdown() {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let server = server.clone();
@@ -122,146 +123,203 @@ where
 }
 
 impl Server {
+    /// The underlying service (snapshot introspection, direct submits).
+    pub fn service(&self) -> &Service {
+        &self.service
+    }
+
     pub fn shutdown(&self) {
-        self.shutdown.store(true, Ordering::Relaxed);
+        self.service.shutdown();
     }
 }
 
-fn engine_loop(
-    mut engine: Box<dyn Engine>,
-    sched: &mut Scheduler,
-    submit_rx: Receiver<Job>,
-    shutdown: Arc<AtomicBool>,
-) {
-    let clock = std::time::Instant::now();
-    let mut watchers: BTreeMap<RequestId, Sender<Json>> = BTreeMap::new();
-    let mut texts: BTreeMap<RequestId, Vec<i32>> = BTreeMap::new();
-    while !shutdown.load(Ordering::Relaxed) {
-        // Drain submissions.
-        loop {
-            match submit_rx.try_recv() {
-                Ok(mut job) => {
-                    // Stamp arrival in the engine-loop clock domain.
-                    job.request.arrived_at = clock.elapsed().as_secs_f64();
-                    watchers.insert(job.request.id, job.events);
-                    texts.insert(job.request.id, Vec::new());
-                    sched.submit(job.request);
-                }
-                Err(TryRecvError::Empty) => break,
-                Err(TryRecvError::Disconnected) => return,
-            }
+fn sampling_from_json(j: &Json) -> SamplingParams {
+    SamplingParams {
+        temperature: j.get("temperature").as_f64().unwrap_or(0.0),
+        top_k: j.get("top_k").as_u64().unwrap_or(0) as u32,
+        top_p: j.get("top_p").as_f64().unwrap_or(1.0),
+        seed: j.get("seed").as_u64(),
+    }
+}
+
+/// Decode a `generate` op into a typed request (v1 and v2 forms).
+fn parse_generate(msg: &Json) -> Result<GenRequest> {
+    let prompt_tokens = match msg.get("prompt_tokens").as_arr() {
+        Some(arr) => arr
+            .iter()
+            .map(|t| t.as_i64().map(|x| x as i32))
+            .collect::<Option<Vec<i32>>>()
+            .ok_or_else(|| anyhow!("prompt_tokens must be integers"))?,
+        None => tokenizer::encode(msg.get("prompt").as_str().unwrap_or("")),
+    };
+    let max_new =
+        msg.get("max_new_tokens").as_u64().unwrap_or(16).max(1) as u32;
+    let mut req = GenRequest::new(prompt_tokens, max_new);
+    if let Some(c) = msg.get("class").as_str() {
+        req.class = PriorityClass::parse(c)?;
+    }
+    if let Some(ms) = msg.get("deadline_ms").as_f64() {
+        req.deadline = Some(ms / 1e3);
+    }
+    let sampling = msg.get("sampling");
+    if !sampling.is_null() {
+        req.sampling = sampling_from_json(sampling);
+    }
+    Ok(req)
+}
+
+fn event_to_json(ev: &GenEvent) -> Json {
+    match ev {
+        GenEvent::Accepted { id, class } => Json::obj(vec![
+            ("type", Json::from("accepted")),
+            ("id", Json::from(*id)),
+            ("class", Json::from(class.label())),
+        ]),
+        GenEvent::Token { id, token, text } => Json::obj(vec![
+            ("type", Json::from("token")),
+            ("id", Json::from(*id)),
+            ("token", Json::from(*token as i64)),
+            ("text", Json::from(text.clone())),
+        ]),
+        GenEvent::Done { id, text, n_tokens, ttft, e2e } => Json::obj(vec![
+            ("type", Json::from("done")),
+            ("id", Json::from(*id)),
+            ("text", Json::from(text.clone())),
+            ("n_tokens", Json::from(*n_tokens as u64)),
+            ("ttft_ms", Json::Num(ttft * 1e3)),
+            ("e2e_ms", Json::Num(e2e * 1e3)),
+        ]),
+        GenEvent::Error { id, message } => Json::obj(vec![
+            ("type", Json::from("error")),
+            ("id", Json::from(*id)),
+            ("error", Json::from(message.clone())),
+        ]),
+        GenEvent::Cancelled { id } => Json::obj(vec![
+            ("type", Json::from("cancelled")),
+            ("id", Json::from(*id)),
+        ]),
+    }
+}
+
+/// Forward one submission's events to the wire. Runs on its own thread so
+/// the connection's read loop keeps accepting `cancel` (and further
+/// `generate`) ops mid-stream. A dead client cancels its request so the
+/// scheduler frees the KV blocks.
+fn stream_events(mut handle: SubmissionHandle, out: Arc<Mutex<TcpStream>>) {
+    while let Some(ev) = handle.next_event() {
+        let terminal = ev.is_terminal();
+        if write_json(&out, &event_to_json(&ev)).is_err() {
+            handle.cancel();
+            return;
         }
-        if !sched.has_work() {
-            std::thread::sleep(std::time::Duration::from_millis(2));
-            continue;
-        }
-        let now = clock.elapsed().as_secs_f64();
-        let report = match sched.step(engine.as_mut(), now) {
-            Ok(Some(r)) => r,
-            Ok(None) => {
-                std::thread::sleep(std::time::Duration::from_millis(1));
-                continue;
-            }
-            Err(e) => {
-                crate::log_error!("server", "engine step failed: {e}");
-                break;
-            }
-        };
-        for (id, tok) in &report.tokens {
-            if let Some(tx) = watchers.get(id) {
-                texts.get_mut(id).unwrap().push(*tok);
-                let _ = tx.send(Json::obj(vec![
-                    ("type", Json::from("token")),
-                    ("id", Json::from(*id)),
-                    ("token", Json::from(*tok as i64)),
-                    ("text", Json::from(tokenizer::decode(&[*tok]))),
-                ]));
-            }
-        }
-        for id in &report.finished {
-            let toks = texts.remove(id).unwrap_or_default();
-            if let Some(tx) = watchers.remove(id) {
-                let fin = sched.finished().iter().rev().find(|r| r.id == *id);
-                let (ttft, e2e, n) = fin
-                    .map(|r| {
-                        (
-                            r.ttft().unwrap_or(0.0),
-                            r.e2e_latency().unwrap_or(0.0),
-                            r.generated,
-                        )
-                    })
-                    .unwrap_or((0.0, 0.0, 0));
-                let _ = tx.send(Json::obj(vec![
-                    ("type", Json::from("done")),
-                    ("id", Json::from(*id)),
-                    ("text", Json::from(tokenizer::decode(&toks))),
-                    ("n_tokens", Json::from(n as u64)),
-                    ("ttft_ms", Json::Num(ttft * 1e3)),
-                    ("e2e_ms", Json::Num(e2e * 1e3)),
-                ]));
-            }
+        if terminal {
+            return;
         }
     }
 }
+
+/// Hard bound on concurrently streaming requests per connection: a
+/// client writing `generate` ops without reading responses must not be
+/// able to spawn unbounded writer threads.
+const MAX_INFLIGHT_PER_CONN: usize = 64;
 
 fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let out = Arc::new(Mutex::new(stream));
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let msg = match Json::parse(&line) {
-            Ok(m) => m,
-            Err(e) => {
-                write_json(&out, &Json::obj(vec![
-                    ("type", Json::from("error")),
-                    ("error", Json::from(format!("bad json: {e}"))),
-                ]))?;
+    let inflight = Arc::new(AtomicUsize::new(0));
+    // Every id this connection submitted; cancelled when the read side
+    // closes so a dead client's requests stop holding KV blocks
+    // (cancel is idempotent, so already-finished ids are no-ops).
+    let mut submitted: Vec<u64> = Vec::new();
+    let result = (|| -> Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
                 continue;
             }
-        };
-        match msg.get("op").as_str() {
-            Some("generate") => {
-                let prompt = msg.get("prompt").as_str().unwrap_or("");
-                let max_new =
-                    msg.get("max_new_tokens").as_u64().unwrap_or(16) as u32;
-                let id = server.next_id.fetch_add(1, Ordering::Relaxed);
-                let tokens = tokenizer::encode(prompt);
-                let req =
-                    Request::with_tokens(id, tokens, max_new.max(1), 0.0);
-                let (tx, rx) = std::sync::mpsc::channel();
-                server.submit_tx.send(Job { request: req, events: tx }).ok();
-                write_json(&out, &Json::obj(vec![
-                    ("type", Json::from("accepted")),
-                    ("id", Json::from(id)),
-                ]))?;
-                // Stream events until done.
-                for ev in rx {
-                    let done = ev.get("type").as_str() == Some("done");
-                    write_json(&out, &ev)?;
-                    if done {
-                        break;
+            let msg = match Json::parse(&line) {
+                Ok(m) => m,
+                Err(e) => {
+                    write_json(&out,
+                               &conn_error(format!("bad json: {e}")))?;
+                    continue;
+                }
+            };
+            match msg.get("op").as_str() {
+                Some("generate") => {
+                    if inflight.load(Ordering::SeqCst)
+                        >= MAX_INFLIGHT_PER_CONN
+                    {
+                        write_json(&out, &conn_error(format!(
+                            "too many in-flight requests on this \
+                             connection (max {MAX_INFLIGHT_PER_CONN})"
+                        )))?;
+                        continue;
+                    }
+                    match parse_generate(&msg)
+                        .and_then(|req| server.service.submit(req))
+                    {
+                        Ok(handle) => {
+                            submitted.push(handle.id());
+                            inflight.fetch_add(1, Ordering::SeqCst);
+                            let out = out.clone();
+                            let inflight = inflight.clone();
+                            std::thread::spawn(move || {
+                                stream_events(handle, out);
+                                inflight.fetch_sub(1, Ordering::SeqCst);
+                            });
+                        }
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                        }
                     }
                 }
-            }
-            Some("shutdown") => {
-                write_json(&out,
-                           &Json::obj(vec![("type", Json::from("bye"))]))?;
-                server.shutdown();
-                break;
-            }
-            other => {
-                write_json(&out, &Json::obj(vec![
-                    ("type", Json::from("error")),
-                    ("error", Json::from(format!("unknown op {other:?}"))),
-                ]))?;
+                Some("cancel") => match msg.get("id").as_u64() {
+                    Some(id) => {
+                        let enqueued = server.service.cancel(id);
+                        write_json(&out, &Json::obj(vec![
+                            ("type", Json::from("cancel_ack")),
+                            ("id", Json::from(id)),
+                            ("enqueued", Json::from(enqueued)),
+                        ]))?;
+                    }
+                    None => {
+                        write_json(&out,
+                                   &conn_error("cancel needs a numeric id"
+                                       .into()))?;
+                    }
+                },
+                Some("shutdown") => {
+                    write_json(&out, &Json::obj(vec![
+                        ("type", Json::from("bye")),
+                    ]))?;
+                    server.shutdown();
+                    break;
+                }
+                other => {
+                    write_json(&out,
+                               &conn_error(format!("unknown op {other:?}")))?;
+                }
             }
         }
+        Ok(())
+    })();
+    // Read side closed (EOF, error, or shutdown): cancel everything this
+    // connection submitted so a dead client's requests release their KV
+    // blocks instead of running to completion unobserved.
+    for id in submitted {
+        server.service.cancel(id);
     }
-    Ok(())
+    result
+}
+
+fn conn_error(message: String) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("error")),
+        ("error", Json::from(message)),
+    ])
 }
 
 fn write_json(out: &Arc<Mutex<TcpStream>>, j: &Json) -> Result<()> {
@@ -277,12 +335,9 @@ mod tests {
     use crate::config::presets::*;
     use crate::config::{PolicyKind, SchedulerConfig};
     use crate::engine::sim::SimEngine;
-    use crate::server::client::Client;
+    use crate::server::client::{Client, GenOptions};
 
-    /// End-to-end over TCP with the simulated engine (virtual costs but a
-    /// real wall-clock serving loop).
-    #[test]
-    fn serve_and_generate_roundtrip() {
+    fn sim_server() -> Arc<Server> {
         let model = tiny_real();
         let hw = cpu_host();
         let cfg = SchedulerConfig {
@@ -291,12 +346,22 @@ mod tests {
             ..SchedulerConfig::default()
         };
         let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
-        let server = serve(
-            move || Ok(Box::new(SimEngine::new(&model, &hw)) as Box<dyn Engine>),
+        serve(
+            move || {
+                Ok(Box::new(SimEngine::new(&model, &hw)) as Box<dyn Engine>)
+            },
             sched,
             "127.0.0.1:0",
         )
-        .unwrap();
+        .unwrap()
+    }
+
+    /// End-to-end over TCP with the simulated engine (virtual costs but a
+    /// real wall-clock serving loop). The v1 `generate` op must behave
+    /// exactly as before against the v2 server.
+    #[test]
+    fn serve_and_generate_roundtrip() {
+        let server = sim_server();
         let addr = server.local_addr;
 
         let mut c = Client::connect(&addr.to_string()).unwrap();
@@ -316,6 +381,54 @@ mod tests {
             .collect();
         for h in handles {
             assert_eq!(h.join().unwrap(), 3);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn v2_class_and_sampling_fields_accepted() {
+        let server = sim_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        let opts = GenOptions {
+            class: PriorityClass::Interactive,
+            deadline_ms: Some(60_000.0),
+            sampling: Some(SamplingParams {
+                temperature: 0.5,
+                top_k: 20,
+                top_p: 0.95,
+                seed: Some(3),
+            }),
+        };
+        let g = c.generate_with("typed please", 4, &opts).unwrap();
+        assert_eq!(g.n_tokens, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_ops_get_connection_errors() {
+        let server = sim_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Unknown op surfaces as an error event, not a hang.
+        let err = c.roundtrip_raw("{\"op\":\"frobnicate\"}").unwrap_err();
+        assert!(err.to_string().contains("unknown op"), "{err}");
+        // Bad sampling is rejected at submission.
+        let err = c
+            .roundtrip_raw(
+                "{\"op\":\"generate\",\"prompt\":\"x\",\
+                 \"sampling\":{\"top_p\":5}}",
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("top_p"), "{err}");
+        // Cancel of an unknown id still acks.
+        c.send_cancel(999).unwrap();
+        loop {
+            match c.next_event().unwrap() {
+                client::ClientEvent::CancelAck { id, .. } => {
+                    assert_eq!(id, 999);
+                    break;
+                }
+                other => panic!("unexpected event {other:?}"),
+            }
         }
         server.shutdown();
     }

@@ -1,0 +1,678 @@
+//! First-class service API — the one public entry point for running
+//! inference (Fig. 1's router → scheduler → engine path, embeddable).
+//!
+//! ```text
+//! ServiceBuilder::new(model, hardware)   // or .engine(|| PjrtEngine…)
+//!     .policy(PolicyKind::Combined)
+//!     .d_sla(0.05)
+//!     .build()?                          // spawns the engine-loop thread
+//!     .submit(GenRequest::from_text("hello", 32)
+//!         .with_class(PriorityClass::Interactive)
+//!         .with_deadline(2.0))?          // → SubmissionHandle
+//! ```
+//!
+//! The [`SubmissionHandle`] streams [`GenEvent`]s (accepted → token* →
+//! done | error | cancelled) and supports [`SubmissionHandle::cancel`],
+//! which frees the request's KV blocks mid-flight. Admission inside the
+//! scheduler is priority-aware: per-class queues interleaved by smooth
+//! weighted round-robin under the policy's `b_t`, with deadline-based
+//! shedding of expired waiters. [`Service::snapshot`] exposes the live
+//! per-class queue depths and KV block accounting.
+//!
+//! The TCP frontend ([`crate::server`]) is a thin protocol adapter over
+//! this module; the wire format is documented there and in DESIGN.md.
+
+pub mod types;
+
+pub use crate::request::{PriorityClass, SamplingParams};
+pub use types::{Completion, GenEvent, GenRequest};
+
+use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
+use crate::engine::sim::SimEngine;
+use crate::engine::Engine;
+use crate::request::{FinishReason, Request, RequestId};
+use crate::scheduler::Scheduler;
+use crate::tokenizer;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+type EngineBuilderFn = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send>;
+
+/// Control messages into the engine-loop thread.
+enum Command {
+    Submit { request: Request, events: Sender<GenEvent> },
+    Cancel(RequestId),
+    Shutdown,
+}
+
+/// Builds a [`Service`]. `new(model, hardware)` defaults to the simulated
+/// engine over those specs with η derived from the hardware's KV budget;
+/// `.engine(...)` swaps in a real engine (the builder closure runs on the
+/// service thread because PJRT handles are not `Send`).
+pub struct ServiceBuilder {
+    model: ModelSpec,
+    hardware: HardwareSpec,
+    cfg: SchedulerConfig,
+    eta_tokens: Option<u64>,
+    swap_tokens: u64,
+    prior_in: f64,
+    prior_out: f64,
+    engine: Option<EngineBuilderFn>,
+    start_paused: bool,
+}
+
+impl ServiceBuilder {
+    pub fn new(model: ModelSpec, hardware: HardwareSpec) -> Self {
+        ServiceBuilder {
+            model,
+            hardware,
+            cfg: SchedulerConfig::default(),
+            eta_tokens: None,
+            swap_tokens: 0,
+            prior_in: 64.0,
+            prior_out: 64.0,
+            engine: None,
+            start_paused: false,
+        }
+    }
+
+    pub fn policy(mut self, policy: PolicyKind) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Replace the whole scheduler config (policy, b bounds, SLA, …).
+    pub fn config(mut self, cfg: SchedulerConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn d_sla(mut self, seconds: f64) -> Self {
+        self.cfg.d_sla = Some(seconds);
+        self
+    }
+
+    /// Use a custom engine instead of the default simulator.
+    pub fn engine<F>(mut self, engine_builder: F) -> Self
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        self.engine = Some(Box::new(engine_builder));
+        self
+    }
+
+    /// Override η (KV token capacity); the default derives it from the
+    /// hardware's KV budget for the model.
+    pub fn eta_tokens(mut self, eta: u64) -> Self {
+        self.eta_tokens = Some(eta);
+        self
+    }
+
+    pub fn swap_tokens(mut self, tokens: u64) -> Self {
+        self.swap_tokens = tokens;
+        self
+    }
+
+    /// Seed the length estimators until real samples arrive.
+    pub fn priors(mut self, prior_in: f64, prior_out: f64) -> Self {
+        self.prior_in = prior_in;
+        self.prior_out = prior_out;
+        self
+    }
+
+    /// Start with the stepping loop paused (submissions and cancels are
+    /// still processed); call [`Service::resume`] to begin serving. Useful
+    /// for deterministic tests and staged warm-up.
+    pub fn paused(mut self, paused: bool) -> Self {
+        self.start_paused = paused;
+        self
+    }
+
+    pub fn build(self) -> Result<Service> {
+        self.model.validate()?;
+        self.hardware.validate()?;
+        self.cfg.validate().context("service scheduler config")?;
+        let eta = self.eta_tokens.unwrap_or_else(|| {
+            self.hardware.kv_budget(&self.model)
+                / self.model.kv_bytes_per_token().max(1)
+        });
+        if eta < self.cfg.block_tokens as u64 {
+            bail!(
+                "KV budget of {eta} tokens cannot hold a single block — \
+                 hardware too small for '{}'",
+                self.model.name
+            );
+        }
+        let sched = Scheduler::new(
+            self.cfg,
+            eta,
+            self.swap_tokens,
+            self.prior_in,
+            self.prior_out,
+        );
+        let engine = match self.engine {
+            Some(f) => f,
+            None => {
+                let (m, h) = (self.model, self.hardware);
+                Box::new(move || {
+                    Ok(Box::new(SimEngine::new(&m, &h)) as Box<dyn Engine>)
+                })
+            }
+        };
+        Service::spawn(engine, sched, self.start_paused)
+    }
+}
+
+/// Point-in-time view of the serving loop, refreshed every iteration —
+/// per-class queue depths plus the KV block accounting tests assert
+/// against (e.g. "cancel freed its blocks").
+#[derive(Debug, Clone, Default)]
+pub struct ServiceSnapshot {
+    pub running: u32,
+    /// Fresh requests awaiting admission (== Σ `waiting_by_class`).
+    pub waiting: u32,
+    /// Waiting depth per class, indexed by [`PriorityClass::rank`].
+    pub waiting_by_class: [u32; PriorityClass::COUNT],
+    /// Preempted requests queued to resume (not part of `waiting`).
+    pub resuming: u32,
+    pub kv_used_tokens: u64,
+    pub kv_free_blocks: usize,
+    pub kv_total_blocks: usize,
+    pub b_t: u32,
+    pub steps: u64,
+    pub finished: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+}
+
+struct Shared {
+    shutdown: AtomicBool,
+    paused: AtomicBool,
+    snapshot: Mutex<ServiceSnapshot>,
+}
+
+/// A running inference service: one engine-loop thread owning the
+/// scheduler + engine, fed through an MPSC control channel. Cheap to
+/// share behind an `Arc`; dropped, it shuts the loop down and joins it.
+pub struct Service {
+    control: Sender<Command>,
+    next_id: AtomicU64,
+    shared: Arc<Shared>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Service {
+    pub fn builder(model: ModelSpec, hardware: HardwareSpec)
+                   -> ServiceBuilder {
+        ServiceBuilder::new(model, hardware)
+    }
+
+    /// Low-level constructor over an explicit scheduler (used by the
+    /// builder and by [`crate::server::serve`]). The engine is built on
+    /// the service thread because PJRT handles are not `Send`.
+    pub fn with_scheduler<F>(engine_builder: F, sched: Scheduler)
+                             -> Result<Service>
+    where
+        F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
+    {
+        Self::spawn(Box::new(engine_builder), sched, false)
+    }
+
+    fn spawn(engine_builder: EngineBuilderFn, sched: Scheduler,
+             paused: bool) -> Result<Service> {
+        let (control, commands) = std::sync::mpsc::channel();
+        let shared = Arc::new(Shared {
+            shutdown: AtomicBool::new(false),
+            paused: AtomicBool::new(paused),
+            snapshot: Mutex::new(ServiceSnapshot::default()),
+        });
+        let worker = {
+            let shared = shared.clone();
+            let mut sched = sched;
+            std::thread::Builder::new()
+                .name("dynabatch-service".into())
+                .spawn(move || {
+                    let engine = match engine_builder() {
+                        Ok(e) => e,
+                        Err(e) => {
+                            crate::log_error!("service",
+                                              "engine init failed: {e}");
+                            shared.shutdown.store(true, Ordering::SeqCst);
+                            fail_pending(&commands,
+                                         &format!("engine init failed: {e}"));
+                            return;
+                        }
+                    };
+                    engine_loop(engine, &mut sched, &commands, &shared);
+                })?
+        };
+        Ok(Service {
+            control,
+            next_id: AtomicU64::new(1),
+            shared,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a typed request; returns a handle streaming its events.
+    pub fn submit(&self, req: GenRequest) -> Result<SubmissionHandle> {
+        req.validate()?;
+        if self.is_shutdown() {
+            bail!("service is shut down");
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let request = Request::with_tokens(
+            id,
+            req.prompt_tokens,
+            req.max_new_tokens,
+            0.0, // stamped with the loop clock at acceptance
+        )
+        .with_class(req.class)
+        .with_sampling(req.sampling)
+        // Relative until the loop stamps arrival (see engine_loop).
+        .with_deadline(req.deadline);
+        let (events_tx, events_rx) = std::sync::mpsc::channel();
+        self.control
+            .send(Command::Submit { request, events: events_tx })
+            .map_err(|_| anyhow!("service worker is gone"))?;
+        Ok(SubmissionHandle {
+            id,
+            events: events_rx,
+            control: self.control.clone(),
+            terminal: false,
+        })
+    }
+
+    /// Request cancellation of any in-flight id (asynchronous; unknown or
+    /// already-finished ids are ignored). Returns false only when the
+    /// service worker is gone.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        self.control.send(Command::Cancel(id)).is_ok()
+    }
+
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        self.shared.snapshot.lock().unwrap().clone()
+    }
+
+    /// Pause the stepping loop (submissions/cancels still processed).
+    pub fn pause(&self) {
+        self.shared.paused.store(true, Ordering::SeqCst);
+    }
+
+    pub fn resume(&self) {
+        self.shared.paused.store(false, Ordering::SeqCst);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shared.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Stop the engine loop; any open streams end with an error event.
+    pub fn shutdown(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        let _ = self.control.send(Command::Shutdown);
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A submitted request: stream its [`GenEvent`]s, or [`cancel`] it.
+///
+/// [`cancel`]: SubmissionHandle::cancel
+pub struct SubmissionHandle {
+    id: RequestId,
+    events: Receiver<GenEvent>,
+    control: Sender<Command>,
+    terminal: bool,
+}
+
+impl SubmissionHandle {
+    pub fn id(&self) -> RequestId {
+        self.id
+    }
+
+    /// Ask the service to cancel this request. Asynchronous: unless the
+    /// request already finished, the stream ends with
+    /// [`GenEvent::Cancelled`] and its KV blocks are freed.
+    pub fn cancel(&self) {
+        let _ = self.control.send(Command::Cancel(self.id));
+    }
+
+    /// Next event, blocking. `None` once the stream is over (terminal
+    /// event already delivered, or the service died).
+    pub fn next_event(&mut self) -> Option<GenEvent> {
+        if self.terminal {
+            return None;
+        }
+        match self.events.recv() {
+            Ok(ev) => {
+                self.terminal = ev.is_terminal();
+                Some(ev)
+            }
+            Err(_) => {
+                self.terminal = true;
+                None
+            }
+        }
+    }
+
+    /// Like [`next_event`](Self::next_event) but gives up after
+    /// `timeout` (returning `None` without ending the stream).
+    pub fn next_event_timeout(&mut self, timeout: Duration)
+                              -> Option<GenEvent> {
+        if self.terminal {
+            return None;
+        }
+        match self.events.recv_timeout(timeout) {
+            Ok(ev) => {
+                self.terminal = ev.is_terminal();
+                Some(ev)
+            }
+            Err(RecvTimeoutError::Timeout) => None,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.terminal = true;
+                None
+            }
+        }
+    }
+
+    /// Block until the stream ends, collecting tokens. `Err` on error,
+    /// cancellation, or service death.
+    pub fn wait(mut self) -> Result<Completion> {
+        let mut tokens = Vec::new();
+        while let Some(ev) = self.next_event() {
+            match ev {
+                GenEvent::Accepted { .. } => {}
+                GenEvent::Token { token, .. } => tokens.push(token),
+                GenEvent::Done { id, text, n_tokens, ttft, e2e } => {
+                    return Ok(Completion {
+                        id,
+                        text,
+                        tokens,
+                        n_tokens,
+                        ttft,
+                        e2e,
+                    });
+                }
+                GenEvent::Error { id, message } => {
+                    bail!("request {id}: {message}");
+                }
+                GenEvent::Cancelled { id } => {
+                    bail!("request {id} was cancelled");
+                }
+            }
+        }
+        bail!("service terminated before request {} finished", self.id)
+    }
+}
+
+/// Fail queued submissions when the engine never came up.
+fn fail_pending(commands: &Receiver<Command>, message: &str) {
+    while let Ok(cmd) = commands.recv_timeout(Duration::from_millis(50)) {
+        if let Command::Submit { request, events } = cmd {
+            let _ = events.send(GenEvent::Error {
+                id: request.id,
+                message: message.to_string(),
+            });
+        }
+    }
+}
+
+fn publish(shared: &Shared, sched: &Scheduler) {
+    let mut snap = shared.snapshot.lock().unwrap();
+    let by_class = sched.waiting_by_class();
+    snap.running = sched.running_len() as u32;
+    snap.waiting = by_class.iter().sum();
+    snap.waiting_by_class = by_class;
+    snap.resuming = sched.resume_len() as u32;
+    snap.kv_used_tokens = sched.kv.used_tokens();
+    snap.kv_free_blocks = sched.kv.free_blocks();
+    snap.kv_total_blocks = sched.kv.total_blocks();
+    snap.b_t = sched.current_bt();
+    snap.steps = sched.stats.steps;
+    snap.finished = sched.stats.finished;
+    snap.rejected = sched.stats.rejected;
+    snap.shed = sched.stats.shed;
+    snap.cancelled = sched.stats.cancelled;
+}
+
+/// The serving loop: drain control commands, step the scheduler, stream
+/// tokens, emit terminal events from the scheduler's finish reasons, and
+/// publish a snapshot — every iteration.
+fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
+               commands: &Receiver<Command>, shared: &Shared) {
+    let clock = std::time::Instant::now();
+    let mut watchers: BTreeMap<RequestId, Sender<GenEvent>> = BTreeMap::new();
+    let mut texts: BTreeMap<RequestId, Vec<i32>> = BTreeMap::new();
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        let now = clock.elapsed().as_secs_f64();
+        // ---- 1. drain control commands ----
+        loop {
+            match commands.try_recv() {
+                Ok(Command::Submit { mut request, events }) => {
+                    request.arrived_at = now;
+                    // Deadline arrives relative; make it absolute in the
+                    // loop's clock domain.
+                    request.deadline = request.deadline.map(|d| now + d);
+                    let _ = events.send(GenEvent::Accepted {
+                        id: request.id,
+                        class: request.class,
+                    });
+                    watchers.insert(request.id, events);
+                    texts.insert(request.id, Vec::new());
+                    sched.submit(request);
+                }
+                Ok(Command::Cancel(id)) => {
+                    if sched.cancel(engine.as_mut(), id, now) {
+                        texts.remove(&id);
+                        if let Some(tx) = watchers.remove(&id) {
+                            let _ = tx.send(GenEvent::Cancelled { id });
+                        }
+                    }
+                }
+                Ok(Command::Shutdown) => {
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // Every Service handle dropped — nothing can submit
+                    // or cancel anymore; drain and stop.
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                }
+            }
+            if shared.shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+
+        // ---- 2. paused: keep the snapshot fresh, skip stepping ----
+        if shared.paused.load(Ordering::SeqCst) {
+            publish(shared, sched);
+            std::thread::sleep(Duration::from_millis(1));
+            continue;
+        }
+
+        // ---- 3. one scheduler iteration ----
+        if sched.has_work() {
+            let now = clock.elapsed().as_secs_f64();
+            match sched.step(engine.as_mut(), now) {
+                Ok(Some(report)) => {
+                    for (id, tok) in &report.tokens {
+                        if let Some(tx) = watchers.get(id) {
+                            if let Some(buf) = texts.get_mut(id) {
+                                buf.push(*tok);
+                            }
+                            let _ = tx.send(GenEvent::Token {
+                                id: *id,
+                                token: *tok,
+                                text: tokenizer::decode(&[*tok]),
+                            });
+                        }
+                    }
+                }
+                Ok(None) => std::thread::sleep(Duration::from_millis(1)),
+                Err(e) => {
+                    let message = format!("engine step failed: {e}");
+                    crate::log_error!("service", "{message}");
+                    for (id, tx) in std::mem::take(&mut watchers) {
+                        let _ = tx.send(GenEvent::Error {
+                            id,
+                            message: message.clone(),
+                        });
+                    }
+                    shared.shutdown.store(true, Ordering::SeqCst);
+                    break;
+                }
+            }
+        } else {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+
+        // ---- 4. terminal events from finish reasons ----
+        for r in sched.take_finished() {
+            let toks = texts.remove(&r.id).unwrap_or_default();
+            let Some(tx) = watchers.remove(&r.id) else {
+                continue; // cancelled (event already sent) or untracked
+            };
+            let ev = match r.finish {
+                Some(FinishReason::Completed) | None => GenEvent::Done {
+                    id: r.id,
+                    text: tokenizer::decode(&toks),
+                    n_tokens: r.generated,
+                    ttft: r.ttft().unwrap_or(0.0),
+                    e2e: r.e2e_latency().unwrap_or(0.0),
+                },
+                Some(FinishReason::Rejected) => GenEvent::Error {
+                    id: r.id,
+                    message: "rejected: prompt + generation budget exceeds \
+                              the engine's maximum sequence length"
+                        .into(),
+                },
+                Some(FinishReason::DeadlineExceeded) => GenEvent::Error {
+                    id: r.id,
+                    message: "deadline exceeded before the first token"
+                        .into(),
+                },
+                Some(FinishReason::Cancelled) => GenEvent::Cancelled {
+                    id: r.id,
+                },
+            };
+            let _ = tx.send(ev);
+        }
+        publish(shared, sched);
+    }
+    // Shutdown: fail submissions still queued in the control channel,
+    // then end any open stream, so callers never hang.
+    while let Ok(cmd) = commands.try_recv() {
+        if let Command::Submit { request, events } = cmd {
+            let _ = events.send(GenEvent::Error {
+                id: request.id,
+                message: "service shut down".into(),
+            });
+        }
+    }
+    for (id, tx) in watchers {
+        let _ = tx.send(GenEvent::Error {
+            id,
+            message: "service shut down".into(),
+        });
+    }
+    publish(shared, sched);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{cpu_host, tiny_real};
+
+    fn sim_service() -> Service {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn submit_stream_done() {
+        let service = sim_service();
+        let handle = service
+            .submit(GenRequest::from_text("hello service", 6))
+            .unwrap();
+        let c = handle.wait().unwrap();
+        assert_eq!(c.n_tokens, 6);
+        assert_eq!(c.tokens.len(), 6);
+        assert!(c.e2e >= c.ttft);
+        service.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_rejected_at_submit() {
+        let service = sim_service();
+        assert!(service.submit(GenRequest::new(vec![1], 0)).is_err());
+        let mut bad = GenRequest::new(vec![1], 4);
+        bad.sampling.temperature = f64::NAN;
+        assert!(service.submit(bad).is_err());
+    }
+
+    #[test]
+    fn snapshot_reflects_drained_state() {
+        let service = sim_service();
+        let h = service.submit(GenRequest::from_text("snap", 4)).unwrap();
+        h.wait().unwrap();
+        // The loop publishes after the finishing iteration.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let s = service.snapshot();
+            if s.finished >= 1 && s.kv_used_tokens == 0 {
+                assert_eq!(s.kv_free_blocks, s.kv_total_blocks);
+                assert_eq!(s.running, 0);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "snapshot stale");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn oversized_request_streams_error() {
+        // tiny_real's max_model_len is far below this budget.
+        let service = sim_service();
+        let handle = service
+            .submit(GenRequest::new(vec![0; 10], 1_000_000))
+            .unwrap();
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("maximum sequence length"),
+                "{err}");
+    }
+
+    #[test]
+    fn shutdown_fails_open_streams() {
+        let service = ServiceBuilder::new(tiny_real(), cpu_host())
+            .eta_tokens(100_000)
+            .paused(true)
+            .build()
+            .unwrap();
+        let handle =
+            service.submit(GenRequest::from_text("never runs", 4)).unwrap();
+        service.shutdown();
+        let err = handle.wait().unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Typed request/response surface of the service API: what callers build
+//! ([`GenRequest`]) and what they stream back ([`GenEvent`] /
+//! [`Completion`]).
+
+use crate::request::{PriorityClass, RequestId, SamplingParams};
+use crate::tokenizer;
+use anyhow::{bail, Result};
+
+/// A typed generation request, the one submission format for every entry
+/// point (embedded [`super::Service`], TCP server, examples, benches).
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    /// Prompt token ids. Use [`GenRequest::from_text`] to go through the
+    /// byte tokenizer.
+    pub prompt_tokens: Vec<i32>,
+    /// Generation budget; the request finishes after this many new tokens.
+    pub max_new_tokens: u32,
+    /// Sampling parameters, validated at submission and plumbed through
+    /// to the engine (current engines decode greedily — see DESIGN.md).
+    pub sampling: SamplingParams,
+    /// Priority class for class-weighted admission.
+    pub class: PriorityClass,
+    /// Relative deadline in seconds from acceptance: if the request is
+    /// still waiting for admission when it expires, it is shed and the
+    /// stream ends with [`GenEvent::Error`]. `None` = wait forever.
+    pub deadline: Option<f64>,
+}
+
+impl GenRequest {
+    pub fn new(prompt_tokens: Vec<i32>, max_new_tokens: u32) -> Self {
+        GenRequest {
+            prompt_tokens,
+            max_new_tokens,
+            sampling: SamplingParams::default(),
+            class: PriorityClass::default(),
+            deadline: None,
+        }
+    }
+
+    /// Build from UTF-8 text via the byte tokenizer.
+    pub fn from_text(prompt: &str, max_new_tokens: u32) -> Self {
+        Self::new(tokenizer::encode(prompt), max_new_tokens)
+    }
+
+    pub fn with_class(mut self, class: PriorityClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> Self {
+        self.sampling = sampling;
+        self
+    }
+
+    /// Shed the request if it is still unadmitted `seconds` after
+    /// acceptance.
+    pub fn with_deadline(mut self, seconds: f64) -> Self {
+        self.deadline = Some(seconds);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.prompt_tokens.is_empty() {
+            bail!("prompt_tokens must not be empty");
+        }
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens must be >= 1");
+        }
+        if let Some(d) = self.deadline {
+            if !d.is_finite() || d <= 0.0 {
+                bail!("deadline must be a positive number of seconds");
+            }
+        }
+        self.sampling.validate()
+    }
+}
+
+/// One event on a submission's stream. Exactly one terminal event
+/// ([`Done`](GenEvent::Done) / [`Error`](GenEvent::Error) /
+/// [`Cancelled`](GenEvent::Cancelled)) ends every stream.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    /// The request entered the scheduler's waiting queue.
+    Accepted { id: RequestId, class: PriorityClass },
+    /// One generated token.
+    Token { id: RequestId, token: i32, text: String },
+    /// Full budget generated. Latencies are seconds since acceptance.
+    Done {
+        id: RequestId,
+        text: String,
+        n_tokens: u32,
+        ttft: f64,
+        e2e: f64,
+    },
+    /// Terminal failure (rejected, deadline exceeded, engine error).
+    Error { id: RequestId, message: String },
+    /// The request was cancelled; its KV blocks were freed.
+    Cancelled { id: RequestId },
+}
+
+impl GenEvent {
+    pub fn id(&self) -> RequestId {
+        match self {
+            GenEvent::Accepted { id, .. }
+            | GenEvent::Token { id, .. }
+            | GenEvent::Done { id, .. }
+            | GenEvent::Error { id, .. }
+            | GenEvent::Cancelled { id } => *id,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            GenEvent::Done { .. }
+                | GenEvent::Error { .. }
+                | GenEvent::Cancelled { .. }
+        )
+    }
+}
+
+/// Collected result of a completed stream (see
+/// [`super::SubmissionHandle::wait`]).
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: RequestId,
+    pub text: String,
+    /// Streamed token ids in order.
+    pub tokens: Vec<i32>,
+    pub n_tokens: u32,
+    /// Time to first token, seconds since acceptance.
+    pub ttft: f64,
+    /// End-to-end latency, seconds since acceptance.
+    pub e2e: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_text_encodes_prompt() {
+        let r = GenRequest::from_text("hi", 4);
+        assert_eq!(r.prompt_tokens.len(), 3); // BOS + 2 bytes
+        assert_eq!(r.max_new_tokens, 4);
+        assert_eq!(r.class, PriorityClass::Standard);
+    }
+
+    #[test]
+    fn builders_and_validation() {
+        let r = GenRequest::new(vec![1, 2], 8)
+            .with_class(PriorityClass::Interactive)
+            .with_deadline(2.0);
+        assert!(r.validate().is_ok());
+        assert_eq!(r.class, PriorityClass::Interactive);
+        assert_eq!(r.deadline, Some(2.0));
+
+        assert!(GenRequest::new(vec![1], 0).validate().is_err());
+        assert!(GenRequest::new(vec![], 4).validate().is_err(),
+                "empty prompts are rejected at submission");
+        let mut bad = GenRequest::new(vec![1], 1);
+        bad.deadline = Some(-1.0);
+        assert!(bad.validate().is_err());
+        let mut bad = GenRequest::new(vec![1], 1);
+        bad.sampling.top_p = 2.0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn event_terminality() {
+        let done = GenEvent::Done {
+            id: 3,
+            text: String::new(),
+            n_tokens: 0,
+            ttft: 0.0,
+            e2e: 0.0,
+        };
+        assert!(done.is_terminal());
+        assert_eq!(done.id(), 3);
+        let tok = GenEvent::Token { id: 4, token: 1, text: String::new() };
+        assert!(!tok.is_terminal());
+        assert!(GenEvent::Cancelled { id: 5 }.is_terminal());
+        assert!(GenEvent::Error { id: 6, message: String::new() }
+            .is_terminal());
+        assert!(!GenEvent::Accepted { id: 7, class: PriorityClass::Batch }
+            .is_terminal());
+    }
+}

@@ -6,6 +6,7 @@
 //! recent decode latency `τ̄` and batch size `b̄` Algorithm 2 needs
 //! (sliding windows), and the memory gauge.
 
+use crate::request::PriorityClass;
 use crate::util::stats::{SlidingWindow, Welford};
 
 /// Snapshot handed to a [`crate::batching::BatchPolicy`] each decision.
@@ -36,8 +37,11 @@ pub struct Observation {
     /// N^p_{t-1} — requests currently prefilling (or awaiting admission
     /// with prefill pending).
     pub pending_prefill: u32,
-    /// Waiting-queue depth.
+    /// Waiting-queue depth (all classes).
     pub waiting: u32,
+    /// Waiting-queue depth per priority class, indexed by
+    /// [`PriorityClass::rank`] (0 = Interactive).
+    pub waiting_by_class: [u32; PriorityClass::COUNT],
 }
 
 /// Rolling telemetry store. One per scheduler.
@@ -142,7 +146,10 @@ impl Telemetry {
     }
 
     pub fn observe(&self, now: f64, eta: u64, used: u64, running_decode: u32,
-                   pending_prefill: u32, waiting: u32) -> Observation {
+                   pending_prefill: u32,
+                   waiting_by_class: [u32; PriorityClass::COUNT])
+                   -> Observation {
+        let waiting = waiting_by_class.iter().sum();
         Observation {
             now,
             eta_tokens: eta,
@@ -165,6 +172,7 @@ impl Telemetry {
             running_decode,
             pending_prefill,
             waiting,
+            waiting_by_class,
         }
     }
 
@@ -195,18 +203,19 @@ mod tests {
     #[test]
     fn decode_window_tracks_recent() {
         let mut t = Telemetry::new(1.0, 1.0, 4);
-        let obs0 = t.observe(0.0, 1000, 0, 0, 0, 0);
+        let obs0 = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
         assert!(obs0.recent_decode_latency.is_none());
         for i in 0..10 {
             t.record_decode_step(0.01 * (i + 1) as f64, 8);
         }
-        let obs = t.observe(1.0, 1000, 0, 10, 3, 5);
+        let obs = t.observe(1.0, 1000, 0, 10, 3, [1, 4, 0]);
         // window=4 → last 4 samples: 0.07,0.08,0.09,0.10
         assert!((obs.recent_decode_latency.unwrap() - 0.085).abs() < 1e-9);
         assert_eq!(obs.recent_decode_batch, Some(8.0));
         assert_eq!(obs.running_decode, 10);
         assert_eq!(obs.pending_prefill, 3);
-        assert_eq!(obs.waiting, 5);
+        assert_eq!(obs.waiting, 5, "total = Σ per-class");
+        assert_eq!(obs.waiting_by_class, [1, 4, 0]);
     }
 
     #[test]

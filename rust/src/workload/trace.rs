@@ -1,8 +1,8 @@
-//! Trace record/replay: JSONL files of (arrival, prompt_len, output_len)
-//! so experiments can be re-run bit-identically or against captured
-//! production-like traces.
+//! Trace record/replay: JSONL files of (arrival, prompt_len, output_len,
+//! priority class) so experiments can be re-run bit-identically or
+//! against captured production-like traces.
 
-use crate::request::Request;
+use crate::request::{PriorityClass, Request};
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, Write};
@@ -19,6 +19,7 @@ pub fn save(path: &Path, requests: &[Request]) -> Result<()> {
             ("arrived_at", Json::Num(r.arrived_at)),
             ("prompt_len", Json::from(r.prompt_len as u64)),
             ("max_new_tokens", Json::from(r.max_new_tokens as u64)),
+            ("class", Json::from(r.class.label())),
         ]);
         writeln!(w, "{}", j.to_string())?;
     }
@@ -43,14 +44,21 @@ pub fn load(path: &Path) -> Result<Vec<Request>> {
                 .with_context(|| format!("{}:{}: field {k}", path.display(),
                                          lineno + 1))
         };
-        out.push(Request::new(
+        let mut req = Request::new(
             need("id")?,
             need("prompt_len")? as u32,
             need("max_new_tokens")? as u32,
             j.get("arrived_at")
                 .as_f64()
                 .with_context(|| format!("line {}: arrived_at", lineno + 1))?,
-        ));
+        );
+        // Optional (pre-v2 traces omit it; default = standard).
+        if let Some(c) = j.get("class").as_str() {
+            req.class = PriorityClass::parse(c).with_context(|| {
+                format!("{}:{}: field class", path.display(), lineno + 1)
+            })?;
+        }
+        out.push(req);
     }
     out.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
     Ok(out)
@@ -71,7 +79,11 @@ mod tests {
             n_requests: 200,
             seed: 11,
         };
-        let reqs = w.generate();
+        let mut reqs = w.generate();
+        // Mixed classes must survive the roundtrip.
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.class = PriorityClass::ALL[i % PriorityClass::COUNT];
+        }
         let dir = std::env::temp_dir().join("dynabatch_trace_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("t.jsonl");
@@ -82,8 +94,25 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.prompt_len, b.prompt_len);
             assert_eq!(a.max_new_tokens, b.max_new_tokens);
+            assert_eq!(a.class, b.class);
             assert!((a.arrived_at - b.arrived_at).abs() < 1e-9);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pre_v2_traces_without_class_default_to_standard() {
+        let dir = std::env::temp_dir().join("dynabatch_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.jsonl");
+        std::fs::write(
+            &path,
+            "{\"id\":1,\"arrived_at\":0.5,\"prompt_len\":8,\
+             \"max_new_tokens\":4}\n",
+        )
+        .unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back[0].class, PriorityClass::Standard);
         std::fs::remove_file(&path).ok();
     }
 

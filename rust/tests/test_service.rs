@@ -1,0 +1,378 @@
+//! Integration tests for the first-class service API and the v2 TCP
+//! protocol over it: end-to-end submit → stream → done, priority-class
+//! admission under a constrained b_t, and cancellation that frees KV
+//! blocks mid-flight (asserted via the KvBlockManager accounting the
+//! service snapshot exposes).
+
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::{Engine, StepOutcome, StepPlan};
+use dynabatch::request::{PriorityClass, RequestId, SamplingParams};
+use dynabatch::scheduler::Scheduler;
+use dynabatch::server::client::{Client, ClientEvent, GenOptions};
+use dynabatch::server::serve;
+use dynabatch::service::{
+    GenEvent, GenRequest, Service, ServiceBuilder, ServiceSnapshot,
+};
+use std::time::{Duration, Instant};
+
+/// Simulated engine with a real wall-clock cost per step, so mid-flight
+/// control (cancel) has a deterministic window to land in.
+struct SlowEngine {
+    inner: SimEngine,
+    delay: Duration,
+}
+
+impl SlowEngine {
+    fn new(delay_ms: u64) -> Self {
+        let model = tiny_real();
+        let hw = cpu_host();
+        SlowEngine {
+            inner: SimEngine::new(&model, &hw),
+            delay: Duration::from_millis(delay_ms),
+        }
+    }
+}
+
+impl Engine for SlowEngine {
+    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome> {
+        std::thread::sleep(self.delay);
+        self.inner.step(plan)
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        format!("slow({})", self.inner.label())
+    }
+}
+
+fn poll_snapshot<F: Fn(&ServiceSnapshot) -> bool>(service: &Service, ok: F,
+                                                  what: &str)
+                                                  -> ServiceSnapshot {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let snap = service.snapshot();
+        if ok(&snap) {
+            return snap;
+        }
+        assert!(Instant::now() < deadline,
+                "timed out waiting for {what}: {snap:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ---------------------------------------------------------------- service
+
+#[test]
+fn service_submit_stream_done() {
+    let service = ServiceBuilder::new(tiny_real(), cpu_host())
+        .policy(PolicyKind::Combined)
+        .d_sla(0.05)
+        .eta_tokens(100_000)
+        .build()
+        .unwrap();
+    let mut handle = service
+        .submit(
+            GenRequest::from_text("stream me", 8)
+                .with_class(PriorityClass::Interactive)
+                .with_sampling(SamplingParams {
+                    temperature: 0.2,
+                    top_k: 16,
+                    top_p: 0.9,
+                    seed: Some(11),
+                }),
+        )
+        .unwrap();
+
+    // Event order: accepted, then tokens, then done — nothing else.
+    let mut tokens = 0;
+    let mut accepted = false;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        assert!(Instant::now() < deadline, "stream stalled");
+        let Some(ev) = handle.next_event_timeout(Duration::from_millis(100))
+        else {
+            continue;
+        };
+        match ev {
+            GenEvent::Accepted { class, .. } => {
+                assert!(!accepted && tokens == 0, "accepted comes first");
+                assert_eq!(class, PriorityClass::Interactive);
+                accepted = true;
+            }
+            GenEvent::Token { .. } => {
+                assert!(accepted);
+                tokens += 1;
+            }
+            GenEvent::Done { n_tokens, ttft, e2e, .. } => {
+                assert!(accepted);
+                assert_eq!(n_tokens, 8);
+                assert_eq!(tokens, 8, "every token was streamed");
+                assert!(e2e >= ttft && ttft >= 0.0);
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(handle.next_event_timeout(Duration::from_millis(50)).is_none(),
+            "stream is over after the terminal event");
+    service.shutdown();
+}
+
+#[test]
+fn cancel_mid_stream_frees_kv_blocks() {
+    let service = ServiceBuilder::new(tiny_real(), cpu_host())
+        .policy(PolicyKind::MemoryAware)
+        .eta_tokens(100_000)
+        .engine(move || Ok(Box::new(SlowEngine::new(3)) as Box<dyn Engine>))
+        .build()
+        .unwrap();
+    // 200 decode steps × 3 ms ≈ 600 ms of runway for the cancel.
+    let mut handle = service
+        .submit(GenRequest::from_text("cancel me", 200))
+        .unwrap();
+
+    // Wait until tokens are flowing (KV resident, decode in flight).
+    let mut seen = 0;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while seen < 2 {
+        assert!(Instant::now() < deadline, "no tokens streamed");
+        match handle.next_event_timeout(Duration::from_millis(100)) {
+            Some(GenEvent::Token { .. }) => seen += 1,
+            Some(GenEvent::Accepted { .. }) | None => {}
+            Some(other) => panic!("unexpected event {other:?}"),
+        }
+    }
+    let snap = service.snapshot();
+    assert!(snap.kv_used_tokens > 0, "KV must be resident mid-stream");
+
+    handle.cancel();
+    let mut cancelled = false;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !cancelled {
+        assert!(Instant::now() < deadline, "cancel never landed");
+        match handle.next_event_timeout(Duration::from_millis(100)) {
+            Some(GenEvent::Cancelled { .. }) => cancelled = true,
+            Some(GenEvent::Token { .. }) | None => {} // in-flight steps
+            Some(GenEvent::Done { .. }) => {
+                panic!("request completed before cancel — widen the runway")
+            }
+            Some(other) => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    // The acceptance check: KvBlockManager accounting shows the blocks
+    // came back.
+    let snap = poll_snapshot(
+        &service,
+        |s| s.cancelled == 1 && s.kv_used_tokens == 0,
+        "cancelled KV blocks to be freed",
+    );
+    assert_eq!(snap.kv_free_blocks, snap.kv_total_blocks);
+    assert_eq!(snap.running, 0);
+    service.shutdown();
+}
+
+#[test]
+fn priority_class_wins_admission_under_tight_bt() {
+    // b_t pinned to 1: whichever class wins admission runs alone. Start
+    // paused so both submissions are queued before the first step.
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: 1 },
+        ..SchedulerConfig::default()
+    };
+    let service = ServiceBuilder::new(tiny_real(), cpu_host())
+        .config(cfg)
+        .eta_tokens(100_000)
+        .paused(true)
+        .build()
+        .unwrap();
+    // Batch-class first — arrival order must NOT decide.
+    let low = service
+        .submit(GenRequest::from_text("low priority", 16)
+            .with_class(PriorityClass::Batch))
+        .unwrap();
+    let high = service
+        .submit(GenRequest::from_text("high priority", 16)
+            .with_class(PriorityClass::Interactive))
+        .unwrap();
+    poll_snapshot(&service, |s| s.waiting == 2, "both submissions queued");
+    assert_eq!(
+        poll_snapshot(&service, |s| s.waiting == 2, "queued").waiting_by_class,
+        [1, 0, 1]
+    );
+    service.resume();
+
+    let high_c = high.wait().unwrap();
+    let low_c = low.wait().unwrap();
+    assert_eq!(high_c.n_tokens, 16);
+    assert_eq!(low_c.n_tokens, 16);
+    // The interactive request drained completely before the batch one
+    // was even admitted: its whole e2e fits inside the batch TTFT
+    // (arrivals differ by at most the batch request's head start).
+    assert!(
+        low_c.ttft >= high_c.e2e,
+        "interactive must fully preempt the batch slot: low ttft {} \
+         vs high e2e {}",
+        low_c.ttft, high_c.e2e
+    );
+    service.shutdown();
+}
+
+#[test]
+fn deadline_shedding_surfaces_as_stream_error() {
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: 1 },
+        ..SchedulerConfig::default()
+    };
+    let service = ServiceBuilder::new(tiny_real(), cpu_host())
+        .config(cfg)
+        .eta_tokens(100_000)
+        .engine(move || Ok(Box::new(SlowEngine::new(3)) as Box<dyn Engine>))
+        .build()
+        .unwrap();
+    // Occupy the slot for ~600 ms; the second request only tolerates
+    // 50 ms of queueing.
+    let long = service
+        .submit(GenRequest::from_text("occupier", 200))
+        .unwrap();
+    let doomed = service
+        .submit(GenRequest::from_text("impatient", 4).with_deadline(0.05))
+        .unwrap();
+    let err = doomed.wait().unwrap_err();
+    assert!(err.to_string().contains("deadline"), "{err}");
+    poll_snapshot(&service, |s| s.shed == 1, "shed counter");
+    long.cancel();
+    service.shutdown();
+}
+
+// ------------------------------------------------------------------- TCP
+
+#[test]
+fn tcp_v1_generate_unchanged_and_v2_cancel_roundtrip() {
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::Combined,
+        d_sla: Some(0.05),
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+    let server = serve(
+        move || Ok(Box::new(SlowEngine::new(2)) as Box<dyn Engine>),
+        sched,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr.to_string();
+
+    // 1. The v1 `generate` op works unchanged against the v2 server.
+    let mut c1 = Client::connect(&addr).unwrap();
+    let g = c1.generate("old client", 5).unwrap();
+    assert_eq!(g.n_tokens, 5);
+    assert_eq!(g.tokens.len(), 5);
+    assert!(g.e2e_ms >= g.ttft_ms);
+
+    // 2. v2: typed submit (class + sampling + deadline), streamed, then
+    //    cancelled mid-flight from the same connection.
+    let mut c2 = Client::connect(&addr).unwrap();
+    let opts = GenOptions {
+        class: PriorityClass::Interactive,
+        deadline_ms: Some(60_000.0),
+        sampling: Some(SamplingParams {
+            temperature: 0.7,
+            top_k: 40,
+            top_p: 0.9,
+            seed: Some(1),
+        }),
+    };
+    let id = c2.submit("long running", 200, &opts).unwrap();
+    let mut toks = 0;
+    while toks < 2 {
+        match c2.next_event().unwrap() {
+            ClientEvent::Token { id: i, .. } => {
+                assert_eq!(i, id);
+                toks += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    c2.send_cancel(id).unwrap();
+    let (mut got_cancelled, mut got_ack) = (false, false);
+    while !(got_cancelled && got_ack) {
+        match c2.next_event().unwrap() {
+            ClientEvent::Cancelled { id: i } => {
+                assert_eq!(i, id);
+                got_cancelled = true;
+            }
+            ClientEvent::CancelAck { id: i, enqueued } => {
+                assert_eq!(i, id);
+                assert!(enqueued);
+                got_ack = true;
+            }
+            ClientEvent::Token { .. } => {} // steps already in flight
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    // 3. Server-side KV accounting confirms the cancel freed the blocks.
+    let snap = poll_snapshot(
+        server.service(),
+        |s| s.cancelled >= 1 && s.kv_used_tokens == 0,
+        "server-side KV release",
+    );
+    assert_eq!(snap.kv_free_blocks, snap.kv_total_blocks);
+    server.shutdown();
+}
+
+#[test]
+fn tcp_priority_classes_interleave() {
+    // Two classes over TCP under a tight b_t: interactive finishes with
+    // lower queueing delay than batch, and both complete.
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: 1 },
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+    let server = serve(
+        move || Ok(Box::new(SlowEngine::new(2)) as Box<dyn Engine>),
+        sched,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr.to_string();
+
+    let mut threads = Vec::new();
+    for (class, n) in [
+        (PriorityClass::Batch, 4),
+        (PriorityClass::Interactive, 4),
+    ] {
+        let addr = addr.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            let opts = GenOptions { class, ..Default::default() };
+            let mut ttfts = Vec::new();
+            for _ in 0..n {
+                let g = c.generate_with("fair share", 12, &opts).unwrap();
+                assert_eq!(g.n_tokens, 12);
+                ttfts.push(g.ttft_ms);
+            }
+            (class, ttfts)
+        }));
+    }
+    for t in threads {
+        let (_, ttfts) = t.join().unwrap();
+        assert_eq!(ttfts.len(), 4, "no class is starved");
+    }
+    server.shutdown();
+}

@@ -1,0 +1,132 @@
+//! No-op stand-in for the `xla` PJRT bindings, used when the real crate
+//! is not resolvable (offline registry). Mirrors the API surface the
+//! dynabatch runtime consumes; every constructor fails with a clear
+//! error, so callers gate cleanly ("PJRT runtime not available") while
+//! everything that doesn't touch PJRT — the simulator, scheduler,
+//! service and server — works unchanged.
+//!
+//! Swap in the real bindings via the root Cargo.toml to run the AOT
+//! TinyGPT artifacts for real.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching how the runtime consumes it (`Display` into
+/// `anyhow!`).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable() -> Error {
+    Error(
+        "PJRT runtime not available: dynabatch was built against the \
+         vendored xla stub (rust/xla-stub). Point the `xla` dependency \
+         at the real bindings to enable the real engine (see Cargo.toml \
+         and DESIGN.md)"
+            .to_string(),
+    )
+}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Parsed HLO module (stub: construction always fails).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        Err(unavailable())
+    }
+}
+
+/// XLA computation handle.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        // Unreachable in practice: no HloModuleProto can exist.
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer (stub: never constructible).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+/// Host-side literal.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unavailable())
+    }
+}
+
+/// Compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer])
+                     -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client (stub: `cpu()` always fails, which is the single gate —
+/// nothing downstream can be reached without one).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_gate_reports_unavailable() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("PJRT runtime not available"));
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+    }
+}
