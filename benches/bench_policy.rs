@@ -1,50 +1,80 @@
-//! Policy decision micro-bench: the paper's "barrier 2" concern is that
-//! frequent batch adjustment costs more than it gains. decide() must be
-//! effectively free next to a multi-ms engine step.
-use dynabatch::batching;
+//! Controller decision micro-bench: the paper's "barrier 2" concern is
+//! that frequent batch adjustment costs more than it gains. With API v2
+//! every decision also constructs a `Directive`, so this sweeps every
+//! `PolicyKind` — including the combinators and the chunked wrapper —
+//! through `Controller::decide` to keep directive-construction overhead
+//! visible in the bench trajectory. decide() must stay effectively free
+//! next to a multi-ms engine step.
+use dynabatch::batching::build_controller;
 use dynabatch::benchkit::Bench;
 use dynabatch::config::{PolicyKind, SchedulerConfig};
 use dynabatch::telemetry::Observation;
 
 fn obs() -> Observation {
-    Observation {
-        now: 1.0,
-        eta_tokens: 100_000,
-        used_tokens: 40_000,
-        mean_in: 128.0,
-        mean_out: 256.0,
-        var_in: 900.0,
-        var_out: 4000.0,
-        length_samples: 500,
-        recent_decode_latency: Some(0.045),
-        recent_decode_batch: Some(96.0),
-        running_decode: 96,
-        pending_prefill: 4,
-        waiting: 12,
-        waiting_by_class: [2, 8, 2],
-    }
+    let mut o = Observation::synthetic(100_000, 40_000, 96, 4);
+    o.now = 1.0;
+    o.mean_in = 128.0;
+    o.mean_out = 256.0;
+    o.var_in = 900.0;
+    o.var_out = 4000.0;
+    o.length_samples = 500;
+    o.recent_decode_latency = Some(0.045);
+    o.recent_decode_batch = Some(96.0);
+    o.waiting = 12;
+    o.waiting_by_class = [2, 8, 2];
+    o
 }
 
 fn main() {
-    let mut b = Bench::new("policy.decide()");
-    for kind in [
+    let mut b = Bench::new("controller.decide()");
+    let kinds = vec![
         PolicyKind::StaticGreedy { max: 256 },
+        PolicyKind::StaticFixed { batch: 64 },
         PolicyKind::MemoryAware,
         PolicyKind::MemoryAwareExact,
         PolicyKind::SlaFeedback,
         PolicyKind::Combined,
-    ] {
+        PolicyKind::Min(vec![
+            PolicyKind::MemoryAware,
+            PolicyKind::SlaFeedback,
+        ]),
+        PolicyKind::Max(vec![
+            PolicyKind::StaticFixed { batch: 32 },
+            PolicyKind::SlaFeedback,
+        ]),
+        PolicyKind::ClassWeighted(vec![
+            PolicyKind::SlaFeedback,
+            PolicyKind::MemoryAware,
+            PolicyKind::StaticFixed { batch: 16 },
+        ]),
+    ];
+    for kind in kinds {
         let cfg = SchedulerConfig {
             policy: kind,
             d_sla: Some(0.05),
             ..SchedulerConfig::default()
         };
-        let mut p = batching::build_policy(&cfg);
+        let mut c = build_controller(&cfg);
         let o = obs();
-        let label = p.label();
+        let label = c.label();
         b.bench(&label, || {
-            std::hint::black_box(p.decide(std::hint::black_box(&o)));
+            std::hint::black_box(c.decide(std::hint::black_box(&o)));
         });
     }
+    // The chunked wrapper adds the adaptive PD-fusion budget to every
+    // directive — the most work a single decision can do today.
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::Combined,
+        d_sla: Some(0.05),
+        chunk_tokens: Some(256),
+        adaptive_chunk: true,
+        ..SchedulerConfig::default()
+    };
+    let mut c = build_controller(&cfg);
+    let o = obs();
+    let label = c.label();
+    b.bench(&label, || {
+        std::hint::black_box(c.decide(std::hint::black_box(&o)));
+    });
     b.report();
 }

@@ -47,7 +47,7 @@ fn main() -> anyhow::Result<()> {
         use dynabatch::sim::Clock;
         let makespan = clock.now();
         let m = dynabatch::metrics::RunMetrics::compute(
-            sched.policy_label(), sched.finished(), &sched.stats,
+            sched.controller_label(), sched.finished(), &sched.stats,
             &sched.decode_latencies, makespan, engine.utilization());
         println!("  {:28} {:6.0} tok/s, preempts {:4}, tbt p95 {:5.1} ms",
                  m.policy, m.throughput, m.preemptions, m.tbt_p95 * 1e3);

@@ -7,6 +7,10 @@
 //! progress (TTFT) against step latency (TBT): bigger chunks inflate the
 //! step beyond `D_SLA`. This controller reuses the Algorithm 2 feedback
 //! structure with the chunk token budget as the decision variable.
+//!
+//! It is not a standalone [`super::Controller`]: chunk sizing reaches the
+//! scheduler only through [`super::Directive::prefill_chunk`], attached
+//! by the [`super::ChunkedController`] wrapper.
 
 use crate::config::SchedulerConfig;
 use crate::telemetry::Observation;
@@ -79,7 +83,6 @@ impl ChunkController {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::test_obs;
     use crate::telemetry::Observation;
 
     fn cfg(d_sla: Option<f64>) -> SchedulerConfig {
@@ -87,7 +90,7 @@ mod tests {
     }
 
     fn obs(tau: Option<f64>) -> Observation {
-        let mut o = test_obs(1_000_000, 0, 4, 1);
+        let mut o = Observation::synthetic(1_000_000, 0, 4, 1);
         o.recent_decode_latency = tau;
         o
     }

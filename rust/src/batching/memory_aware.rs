@@ -28,7 +28,7 @@
 //! (`N^p > 0`, otherwise no admission decision is needed); always return
 //! within `[max(b, N^d) … B_max]`.
 
-use super::BatchPolicy;
+use super::{Controller, Directive};
 use crate::config::SchedulerConfig;
 use crate::telemetry::Observation;
 use crate::util::stats::normal_quantile;
@@ -104,8 +104,8 @@ impl MemoryAwarePolicy {
     }
 }
 
-impl BatchPolicy for MemoryAwarePolicy {
-    fn decide(&mut self, obs: &Observation) -> u32 {
+impl Controller for MemoryAwarePolicy {
+    fn decide(&mut self, obs: &Observation) -> Directive {
         self.stat_decisions += 1;
         let mut b = self.b_prev;
         // Alg. 1 line 4: adjust only when N^d > 0 and N^p > 0.
@@ -123,7 +123,7 @@ impl BatchPolicy for MemoryAwarePolicy {
             .max(self.b_min)
             .min(self.b_max);
         self.b_prev = b;
-        b
+        Directive::gated(b)
     }
 
     fn label(&self) -> String {
@@ -137,16 +137,19 @@ impl BatchPolicy for MemoryAwarePolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::test_obs;
     use crate::util::prop::check;
 
     fn cfg() -> SchedulerConfig {
         SchedulerConfig::default()
     }
 
+    fn decide_b(p: &mut MemoryAwarePolicy, o: &Observation) -> u32 {
+        p.decide(o).target_batch
+    }
+
     fn obs_with(eta: u64, mean: f64, var: f64, nd: u32, np: u32)
                 -> Observation {
-        let mut o = test_obs(eta, 0, nd, np);
+        let mut o = Observation::synthetic(eta, 0, nd, np);
         o.mean_in = mean / 2.0;
         o.mean_out = mean / 2.0;
         o.var_in = var / 2.0;
@@ -160,7 +163,7 @@ mod tests {
         let cfg = cfg();
         let mut p = MemoryAwarePolicy::new(&cfg, MemoryAwareVariant::Exact);
         let o = obs_with(100_000, 400.0, 120.0 * 120.0, 8, 2);
-        let b = p.decide(&o) as f64;
+        let b = decide_b(&mut p, &o) as f64;
         let theta = normal_quantile(1.0 - cfg.eps_mem);
         let mu1 = 400.0;
         let sigma1 = 120.0;
@@ -177,10 +180,10 @@ mod tests {
         let mut lin = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Linear);
         let mut exa = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
         let o = obs_with(80_000, 300.0, 90.0 * 90.0, 4, 1);
-        let be = exa.decide(&o);
+        let be = decide_b(&mut exa, &o);
         let mut bl = 0;
         for _ in 0..50 {
-            bl = lin.decide(&o);
+            bl = decide_b(&mut lin, &o);
         }
         let rel = (bl as f64 - be as f64).abs() / be as f64;
         assert!(rel < 0.10, "linear {bl} vs exact {be}");
@@ -190,9 +193,9 @@ mod tests {
     fn holds_when_no_prefill_pending() {
         // Alg. 1 line 4: no adjustment without pending prefill.
         let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Linear);
-        let b1 = p.decide(&obs_with(50_000, 256.0, 32.0 * 32.0, 8, 3));
+        let b1 = decide_b(&mut p, &obs_with(50_000, 256.0, 32.0 * 32.0, 8, 3));
         let o2 = obs_with(500, 256.0, 32.0 * 32.0, 8, 0); // tiny eta now
-        let b2 = p.decide(&o2);
+        let b2 = decide_b(&mut p, &o2);
         assert_eq!(b2, b1.max(8), "must hold previous b when N^p == 0");
     }
 
@@ -201,7 +204,7 @@ mod tests {
         let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Exact);
         // eta so small the formula wants b≈1, but 40 decodes are running.
         let o = obs_with(600, 500.0, 100.0, 40, 5);
-        assert_eq!(p.decide(&o), 40);
+        assert_eq!(decide_b(&mut p, &o), 40);
     }
 
     #[test]
@@ -209,7 +212,7 @@ mod tests {
         let c = SchedulerConfig { b_max: 64, ..cfg() };
         let mut p = MemoryAwarePolicy::new(&c, MemoryAwareVariant::Exact);
         let o = obs_with(10_000_000, 100.0, 10.0, 8, 2);
-        assert_eq!(p.decide(&o), 64);
+        assert_eq!(decide_b(&mut p, &o), 64);
     }
 
     #[test]
@@ -219,14 +222,14 @@ mod tests {
         let mut pl = MemoryAwarePolicy::new(&loose, MemoryAwareVariant::Exact);
         let mut pt = MemoryAwarePolicy::new(&tight, MemoryAwareVariant::Exact);
         let o = obs_with(60_000, 300.0, 200.0 * 200.0, 4, 2);
-        assert!(pt.decide(&o) < pl.decide(&o));
+        assert!(decide_b(&mut pt, &o) < decide_b(&mut pl, &o));
     }
 
     #[test]
     fn zero_variance_uses_full_capacity() {
         let mut p = MemoryAwarePolicy::new(&cfg(), MemoryAwareVariant::Exact);
         let o = obs_with(25_600, 256.0, 0.0, 4, 2);
-        assert_eq!(p.decide(&o), 100); // exactly η/μ1
+        assert_eq!(decide_b(&mut p, &o), 100); // exactly η/μ1
     }
 
     #[test]
@@ -246,14 +249,14 @@ mod tests {
             };
             let mut p = MemoryAwarePolicy::new(&c, variant);
             for _ in 0..30 {
-                let mut o = test_obs(g.u64(100..=1_000_000), 0,
+                let mut o = Observation::synthetic(g.u64(100..=1_000_000), 0,
                                      g.u64(0..=300) as u32,
                                      g.u64(0..=20) as u32);
                 o.mean_in = g.f64(1.0, 2000.0);
                 o.mean_out = g.f64(1.0, 2000.0);
                 o.var_in = g.f64(0.0, 1e6);
                 o.var_out = g.f64(0.0, 1e6);
-                let b = p.decide(&o);
+                let b = decide_b(&mut p, &o);
                 if b < c.b_min || b > c.b_max {
                     return false;
                 }
@@ -277,7 +280,7 @@ mod tests {
             let var = g.f64(0.0, 1e5);
             let o1 = obs_with(eta, mean, var, 1, 1);
             let o2 = obs_with(eta + extra, mean, var, 1, 1);
-            p1.decide(&o1) <= p2.decide(&o2)
+            decide_b(&mut p1, &o1) <= decide_b(&mut p2, &o2)
         });
     }
 }

@@ -1,12 +1,26 @@
-//! Batch-size controllers — the paper's contribution, as pluggable
-//! policies consumed by the scheduler every decision interval.
+//! Control plane v2 — batch-size controllers as pluggable [`Controller`]s
+//! consumed by the scheduler every decision interval.
 //!
-//! * [`static_policy`] — the vLLM-style baselines (greedy cap / hard fixed).
+//! The paper's core claim is that batch size is a *runtime* control
+//! variable. API v2 makes the whole control decision structured: each
+//! interval the scheduler hands the controller an
+//! [`Observation`](crate::telemetry::Observation) and receives a
+//! [`Directive`] — target batch size, admission mode, prefill chunk
+//! budget, and a preemption hint — instead of a bare `u32`. What used to
+//! be side channels (`gates_admission()`, the PD-fusion
+//! [`ChunkController`] call-site in the scheduler) is folded into the one
+//! decision object.
+//!
+//! * [`static_policy`] — the vLLM-style baselines (greedy cap / hard
+//!   fixed).
 //! * [`memory_aware`] — Algorithm 1 (linear deployable form and the
 //!   rigorous eq. 12 closed form).
 //! * [`sla`] — Algorithm 2 (latency-feedback noisy binary search).
-//! * [`chunk`] — the PD-fusion adaptive chunk-size controller.
-//! * [`CombinedPolicy`] — `b*_t = min(b_mem, b_SLA)`.
+//! * [`chunk`] — the PD-fusion adaptive chunk-size controller, attached
+//!   to any controller via [`ChunkedController`].
+//! * combinators — [`MinOf`] (`b*_t = min(b_mem, b_SLA)`, the paper's
+//!   combined controller), [`MaxOf`], and [`ClassWeighted`] (blend by
+//!   priority-class backlog).
 
 pub mod chunk;
 pub mod memory_aware;
@@ -14,6 +28,7 @@ pub mod sla;
 pub mod static_policy;
 
 use crate::config::{PolicyKind, SchedulerConfig};
+use crate::request::PriorityClass;
 use crate::telemetry::Observation;
 
 pub use chunk::ChunkController;
@@ -21,22 +36,73 @@ pub use memory_aware::{MemoryAwarePolicy, MemoryAwareVariant};
 pub use sla::SlaFeedbackPolicy;
 pub use static_policy::{StaticFixedPolicy, StaticGreedyPolicy};
 
-/// A batch-size controller. `decide` returns the target concurrent batch
-/// size `b_t` for the next scheduling interval.
-pub trait BatchPolicy: Send {
-    fn decide(&mut self, obs: &Observation) -> u32;
-    fn label(&self) -> String;
-    /// Whether the scheduler should gate admissions strictly at `b_t`
-    /// (dynamic policies) or admit greedily while memory allows (the vLLM
-    /// static-greedy baseline).
-    fn gates_admission(&self) -> bool {
-        true
+/// How the scheduler should admit new requests this interval.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionMode {
+    /// Gate admissions strictly at the directive's `target_batch`
+    /// (dynamic policies).
+    Gated,
+    /// Admit while prompt KV blocks fit, up to `cap` concurrent requests
+    /// (the vLLM static-greedy baseline semantics).
+    Greedy { cap: u32 },
+}
+
+/// Preemption-mode hint for memory pressure during this interval.
+/// `Auto` defers to the configured [`crate::config::PreemptMode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SwapHint {
+    #[default]
+    Auto,
+    Swap,
+    Recompute,
+}
+
+/// One structured control decision — everything the scheduler needs for
+/// the next interval, produced by [`Controller::decide`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Directive {
+    /// `b_t` — target concurrent batch size.
+    pub target_batch: u32,
+    pub admission: AdmissionMode,
+    /// PD-fusion prefill token budget per step; `None` = segregated mode
+    /// (whole-prompt prefill steps).
+    pub prefill_chunk: Option<u32>,
+    pub swap_hint: SwapHint,
+}
+
+impl Directive {
+    /// The common dynamic-policy shape: gate admissions at `b_t`, no
+    /// chunking opinion, defer preemption mode to config.
+    pub fn gated(target_batch: u32) -> Self {
+        Directive {
+            target_batch,
+            admission: AdmissionMode::Gated,
+            prefill_chunk: None,
+            swap_hint: SwapHint::Auto,
+        }
     }
 }
 
-/// Instantiate the policy named by the config.
-pub fn build_policy(cfg: &SchedulerConfig) -> Box<dyn BatchPolicy> {
-    match &cfg.policy {
+/// A batch controller: one [`Directive`] per decision interval.
+pub trait Controller: Send {
+    fn decide(&mut self, obs: &Observation) -> Directive;
+    fn label(&self) -> String;
+}
+
+/// Instantiate the controller stack named by the config: the policy (or
+/// combinator tree) from `cfg.policy`, wrapped with chunked-prefill
+/// sizing when `cfg.chunk_tokens` is set.
+pub fn build_controller(cfg: &SchedulerConfig) -> Box<dyn Controller> {
+    let base = build_kind(cfg, &cfg.policy);
+    match cfg.chunk_tokens {
+        Some(c) => Box::new(ChunkedController::new(cfg, base, c)),
+        None => base,
+    }
+}
+
+fn build_kind(cfg: &SchedulerConfig, kind: &PolicyKind)
+              -> Box<dyn Controller> {
+    match kind {
         PolicyKind::StaticGreedy { max } => {
             Box::new(StaticGreedyPolicy::new(*max))
         }
@@ -52,54 +118,215 @@ pub fn build_policy(cfg: &SchedulerConfig) -> Box<dyn BatchPolicy> {
             MemoryAwareVariant::Exact,
         )),
         PolicyKind::SlaFeedback => Box::new(SlaFeedbackPolicy::new(cfg)),
-        PolicyKind::Combined => Box::new(CombinedPolicy::new(cfg)),
+        PolicyKind::Combined => Box::new(MinOf::labeled(
+            "combined(min(alg1,alg2))",
+            vec![
+                Box::new(MemoryAwarePolicy::new(cfg,
+                                                MemoryAwareVariant::Linear))
+                    as Box<dyn Controller>,
+                Box::new(SlaFeedbackPolicy::new(cfg)),
+            ],
+        )),
+        PolicyKind::Min(parts) => Box::new(MinOf::new(
+            parts.iter().map(|k| build_kind(cfg, k)).collect(),
+        )),
+        PolicyKind::Max(parts) => Box::new(MaxOf::new(
+            parts.iter().map(|k| build_kind(cfg, k)).collect(),
+        )),
+        PolicyKind::ClassWeighted(parts) => Box::new(ClassWeighted::new(
+            parts.iter().map(|k| build_kind(cfg, k)).collect(),
+        )),
     }
 }
 
-/// `b*_t = min(b^mem_t, b^SLA_t)` — Section III-B.
-pub struct CombinedPolicy {
-    mem: MemoryAwarePolicy,
-    sla: SlaFeedbackPolicy,
+/// Pointwise combination of part directives: `pick` resolves the batch
+/// target and chunk budget; admission is gated if *any* part gates
+/// (strictest wins — a greedy baseline combined with a dynamic policy
+/// must not bypass the gate); the first non-`Auto` swap hint wins.
+fn combine(parts: &[Directive], pick: fn(u32, u32) -> u32) -> Directive {
+    let mut it = parts.iter();
+    let mut out = *it.next().expect("combinators need >= 1 part");
+    for d in it {
+        out.target_batch = pick(out.target_batch, d.target_batch);
+        out.admission = match (out.admission, d.admission) {
+            (AdmissionMode::Greedy { cap: a }, AdmissionMode::Greedy { cap: b }) => {
+                AdmissionMode::Greedy { cap: pick(a, b) }
+            }
+            _ => AdmissionMode::Gated,
+        };
+        out.prefill_chunk = match (out.prefill_chunk, d.prefill_chunk) {
+            (Some(a), Some(b)) => Some(pick(a, b)),
+            (a, b) => a.or(b),
+        };
+        if out.swap_hint == SwapHint::Auto {
+            out.swap_hint = d.swap_hint;
+        }
+    }
+    out
 }
 
-impl CombinedPolicy {
-    pub fn new(cfg: &SchedulerConfig) -> Self {
-        CombinedPolicy {
-            mem: MemoryAwarePolicy::new(cfg, MemoryAwareVariant::Linear),
-            sla: SlaFeedbackPolicy::new(cfg),
+fn joined_labels(parts: &[Box<dyn Controller>]) -> String {
+    parts
+        .iter()
+        .map(|p| p.label())
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+/// `min` combinator — the strictest part wins every directive field.
+/// `PolicyKind::Combined` is exactly `min(alg1, alg2)` (Section III-B).
+pub struct MinOf {
+    parts: Vec<Box<dyn Controller>>,
+    label: Option<String>,
+}
+
+impl MinOf {
+    pub fn new(parts: Vec<Box<dyn Controller>>) -> Self {
+        assert!(!parts.is_empty(), "min combinator needs >= 1 part");
+        MinOf { parts, label: None }
+    }
+
+    /// `new` with a fixed display label (e.g. the canonical "combined").
+    pub fn labeled(label: &str, parts: Vec<Box<dyn Controller>>) -> Self {
+        let mut c = Self::new(parts);
+        c.label = Some(label.to_string());
+        c
+    }
+}
+
+impl Controller for MinOf {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let ds: Vec<Directive> =
+            self.parts.iter_mut().map(|p| p.decide(obs)).collect();
+        combine(&ds, u32::min)
+    }
+
+    fn label(&self) -> String {
+        match &self.label {
+            Some(l) => l.clone(),
+            None => format!("min({})", joined_labels(&self.parts)),
         }
     }
 }
 
-impl BatchPolicy for CombinedPolicy {
-    fn decide(&mut self, obs: &Observation) -> u32 {
-        let b_mem = self.mem.decide(obs);
-        let b_sla = self.sla.decide(obs);
-        b_mem.min(b_sla)
-    }
+/// `max` combinator — the most permissive part wins the batch target
+/// (admission still gates if any part gates).
+pub struct MaxOf {
+    parts: Vec<Box<dyn Controller>>,
+}
 
-    fn label(&self) -> String {
-        "combined(min(alg1,alg2))".into()
+impl MaxOf {
+    pub fn new(parts: Vec<Box<dyn Controller>>) -> Self {
+        assert!(!parts.is_empty(), "max combinator needs >= 1 part");
+        MaxOf { parts }
     }
 }
 
-#[cfg(test)]
-pub(crate) fn test_obs(eta: u64, used: u64, nd: u32, np: u32) -> Observation {
-    Observation {
-        now: 0.0,
-        eta_tokens: eta,
-        used_tokens: used,
-        mean_in: 128.0,
-        mean_out: 128.0,
-        var_in: 64.0 * 64.0,
-        var_out: 64.0 * 64.0,
-        length_samples: 100,
-        recent_decode_latency: Some(0.04),
-        recent_decode_batch: Some(nd as f64),
-        running_decode: nd,
-        pending_prefill: np,
-        waiting: 10,
-        waiting_by_class: [0, 10, 0],
+impl Controller for MaxOf {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let ds: Vec<Directive> =
+            self.parts.iter_mut().map(|p| p.decide(obs)).collect();
+        combine(&ds, u32::max)
+    }
+
+    fn label(&self) -> String {
+        format!("max({})", joined_labels(&self.parts))
+    }
+}
+
+/// Class-weighted blend: one part per priority class in rank order
+/// (interactive, standard, batch; when fewer parts are given the last
+/// one covers the remaining classes). The batch target is the weighted
+/// mean of the parts' targets, weighted by `class admission weight ×
+/// waiting depth` — a deep interactive backlog pulls `b_t` toward the
+/// latency-oriented part's decision, a batch backlog toward the
+/// throughput-oriented one. With no backlog at all, parts weigh equally.
+pub struct ClassWeighted {
+    parts: Vec<Box<dyn Controller>>,
+}
+
+impl ClassWeighted {
+    pub fn new(parts: Vec<Box<dyn Controller>>) -> Self {
+        assert!(!parts.is_empty(),
+                "class-weighted combinator needs >= 1 part");
+        ClassWeighted { parts }
+    }
+
+    fn part_for(&self, rank: usize) -> usize {
+        rank.min(self.parts.len() - 1)
+    }
+}
+
+impl Controller for ClassWeighted {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let ds: Vec<Directive> =
+            self.parts.iter_mut().map(|p| p.decide(obs)).collect();
+        // Strictest-field baseline for admission/chunk/swap...
+        let mut out = combine(&ds, u32::min);
+        // ...then the blended target.
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for c in PriorityClass::ALL {
+            let d = &ds[self.part_for(c.rank())];
+            let w = c.weight() as f64
+                * obs.waiting_by_class[c.rank()] as f64;
+            num += w * d.target_batch as f64;
+            den += w;
+        }
+        out.target_batch = if den > 0.0 {
+            (num / den).round().max(1.0) as u32
+        } else {
+            // Empty backlog: plain mean over the classes' parts.
+            let sum: u32 = PriorityClass::ALL
+                .iter()
+                .map(|c| ds[self.part_for(c.rank())].target_batch)
+                .sum();
+            (sum / PriorityClass::COUNT as u32).max(1)
+        };
+        out
+    }
+
+    fn label(&self) -> String {
+        format!("class-weighted({})", joined_labels(&self.parts))
+    }
+}
+
+/// Folds prefill chunk sizing into the directive stream: a static budget,
+/// or the adaptive PD-fusion [`ChunkController`] when
+/// `cfg.adaptive_chunk` is set. This replaces the scheduler's former
+/// bespoke `ChunkController` call-site — chunk sizing now flows only
+/// through [`Directive::prefill_chunk`].
+pub struct ChunkedController {
+    inner: Box<dyn Controller>,
+    adaptive: Option<ChunkController>,
+    static_chunk: u32,
+}
+
+impl ChunkedController {
+    pub fn new(cfg: &SchedulerConfig, inner: Box<dyn Controller>,
+               base_chunk: u32) -> Self {
+        ChunkedController {
+            inner,
+            adaptive: cfg
+                .adaptive_chunk
+                .then(|| ChunkController::new(cfg, base_chunk)),
+            static_chunk: base_chunk,
+        }
+    }
+}
+
+impl Controller for ChunkedController {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let mut d = self.inner.decide(obs);
+        d.prefill_chunk = Some(match &mut self.adaptive {
+            Some(ctl) => ctl.decide(obs),
+            None => self.static_chunk,
+        });
+        d
+    }
+
+    fn label(&self) -> String {
+        format!("{}+chunk", self.inner.label())
     }
 }
 
@@ -116,42 +343,170 @@ mod tests {
     }
 
     #[test]
-    fn factory_builds_each_kind() {
-        for (kind, gates) in [
-            (PolicyKind::StaticGreedy { max: 64 }, false),
-            (PolicyKind::StaticFixed { batch: 8 }, true),
-            (PolicyKind::MemoryAware, true),
-            (PolicyKind::MemoryAwareExact, true),
-            (PolicyKind::SlaFeedback, true),
-            (PolicyKind::Combined, true),
+    fn factory_builds_each_kind_with_expected_admission() {
+        for (kind, greedy) in [
+            (PolicyKind::StaticGreedy { max: 64 }, true),
+            (PolicyKind::StaticFixed { batch: 8 }, false),
+            (PolicyKind::MemoryAware, false),
+            (PolicyKind::MemoryAwareExact, false),
+            (PolicyKind::SlaFeedback, false),
+            (PolicyKind::Combined, false),
+            (
+                PolicyKind::Min(vec![
+                    PolicyKind::MemoryAware,
+                    PolicyKind::SlaFeedback,
+                ]),
+                false,
+            ),
+            (
+                PolicyKind::Max(vec![
+                    PolicyKind::StaticFixed { batch: 2 },
+                    PolicyKind::StaticFixed { batch: 5 },
+                ]),
+                false,
+            ),
+            (
+                PolicyKind::ClassWeighted(vec![
+                    PolicyKind::SlaFeedback,
+                    PolicyKind::MemoryAware,
+                ]),
+                false,
+            ),
         ] {
             let c = SchedulerConfig { policy: kind.clone(), ..cfg_with_sla() };
-            let p = build_policy(&c);
-            assert_eq!(p.gates_admission(), gates, "{}", p.label());
+            let mut p = build_controller(&c);
+            let d = p.decide(&Observation::synthetic(100_000, 0, 4, 1));
+            assert_eq!(
+                matches!(d.admission, AdmissionMode::Greedy { .. }),
+                greedy,
+                "{}",
+                p.label()
+            );
+            assert!(d.target_batch >= 1, "{}", p.label());
+            assert_eq!(d.prefill_chunk, None, "no chunk config → no chunk");
         }
     }
 
     #[test]
     fn combined_is_min_of_parts() {
         let cfg = cfg_with_sla();
-        let mut combined = CombinedPolicy::new(&cfg);
+        let mut combined = build_controller(&cfg); // default = Combined
         let mut mem =
             MemoryAwarePolicy::new(&cfg, MemoryAwareVariant::Linear);
         let mut sla = SlaFeedbackPolicy::new(&cfg);
-        let obs = test_obs(100_000, 10_000, 16, 2);
-        let b = combined.decide(&obs);
-        let m = mem.decide(&obs);
-        let s = sla.decide(&obs);
+        let obs = Observation::synthetic(100_000, 10_000, 16, 2);
+        let b = combined.decide(&obs).target_batch;
+        let m = mem.decide(&obs).target_batch;
+        let s = sla.decide(&obs).target_batch;
         assert_eq!(b, m.min(s));
+        assert_eq!(combined.label(), "combined(min(alg1,alg2))");
     }
 
     #[test]
     fn combined_respects_bounds_over_time() {
         let cfg = cfg_with_sla();
-        let mut p = CombinedPolicy::new(&cfg);
+        let mut p = build_controller(&cfg);
         for used in [0u64, 5_000, 20_000, 90_000, 99_000] {
-            let b = p.decide(&test_obs(100_000, used, 8, 1));
+            let b = p
+                .decide(&Observation::synthetic(100_000, used, 8, 1))
+                .target_batch;
             assert!(b >= cfg.b_min && b <= cfg.b_max, "b={b}");
         }
+    }
+
+    #[test]
+    fn min_max_combinators_on_fixed_parts() {
+        let cfg = SchedulerConfig::default();
+        let parts = vec![
+            PolicyKind::StaticFixed { batch: 6 },
+            PolicyKind::StaticFixed { batch: 24 },
+        ];
+        let obs = Observation::synthetic(100_000, 0, 4, 1);
+        let mut lo = build_kind(&cfg, &PolicyKind::Min(parts.clone()));
+        let mut hi = build_kind(&cfg, &PolicyKind::Max(parts));
+        assert_eq!(lo.decide(&obs).target_batch, 6);
+        assert_eq!(hi.decide(&obs).target_batch, 24);
+        assert_eq!(lo.label(), "min(static-fixed:6,static-fixed:24)");
+        assert_eq!(hi.label(), "max(static-fixed:6,static-fixed:24)");
+    }
+
+    #[test]
+    fn greedy_in_min_still_gates() {
+        // A greedy baseline combined with a gating policy must not let the
+        // composite bypass admission gating.
+        let cfg = SchedulerConfig::default();
+        let mut c = build_kind(
+            &cfg,
+            &PolicyKind::Min(vec![
+                PolicyKind::StaticGreedy { max: 64 },
+                PolicyKind::StaticFixed { batch: 8 },
+            ]),
+        );
+        let d = c.decide(&Observation::synthetic(100_000, 0, 4, 1));
+        assert_eq!(d.admission, AdmissionMode::Gated);
+        assert_eq!(d.target_batch, 8);
+    }
+
+    #[test]
+    fn all_greedy_min_keeps_greedy_cap() {
+        let cfg = SchedulerConfig::default();
+        let mut c = build_kind(
+            &cfg,
+            &PolicyKind::Min(vec![
+                PolicyKind::StaticGreedy { max: 64 },
+                PolicyKind::StaticGreedy { max: 16 },
+            ]),
+        );
+        let d = c.decide(&Observation::synthetic(100_000, 0, 4, 1));
+        assert_eq!(d.admission, AdmissionMode::Greedy { cap: 16 });
+    }
+
+    #[test]
+    fn class_weighted_follows_the_backlogged_class() {
+        let cfg = SchedulerConfig::default();
+        // interactive → 4, standard/batch → 32.
+        let mut c = build_kind(
+            &cfg,
+            &PolicyKind::ClassWeighted(vec![
+                PolicyKind::StaticFixed { batch: 4 },
+                PolicyKind::StaticFixed { batch: 32 },
+            ]),
+        );
+        let mut obs = Observation::synthetic(100_000, 0, 4, 1);
+        obs.waiting_by_class = [20, 0, 0]; // interactive-only backlog
+        assert_eq!(c.decide(&obs).target_batch, 4);
+        obs.waiting_by_class = [0, 0, 20]; // batch-only backlog
+        assert_eq!(c.decide(&obs).target_batch, 32);
+        obs.waiting_by_class = [0, 0, 0]; // idle: plain mean over classes
+        let b = c.decide(&obs).target_batch;
+        assert!(b > 4 && b < 32, "idle blend {b} between the parts");
+    }
+
+    #[test]
+    fn chunked_controller_attaches_budget() {
+        let cfg = SchedulerConfig {
+            chunk_tokens: Some(48),
+            ..SchedulerConfig::default()
+        };
+        let mut c = build_controller(&cfg);
+        let d = c.decide(&Observation::synthetic(100_000, 0, 4, 1));
+        assert_eq!(d.prefill_chunk, Some(48), "static chunk budget");
+        assert!(c.label().ends_with("+chunk"));
+
+        let cfg = SchedulerConfig {
+            chunk_tokens: Some(64),
+            adaptive_chunk: true,
+            d_sla: Some(0.05),
+            ..SchedulerConfig::default()
+        };
+        let mut c = build_controller(&cfg);
+        // Latency way over SLA → the adaptive budget must shrink.
+        let mut obs = Observation::synthetic(1_000_000, 0, 4, 1);
+        obs.recent_decode_latency = Some(0.150);
+        let mut last = 64;
+        for _ in 0..20 {
+            last = c.decide(&obs).prefill_chunk.expect("chunked");
+        }
+        assert!(last < 64, "chunk={last} must shrink under SLA pressure");
     }
 }

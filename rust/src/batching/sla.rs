@@ -8,7 +8,7 @@
 //! step so the window never collapses onto a noise artefact. The decision
 //! is the window midpoint, clamped per Alg. 2 line 15.
 
-use super::BatchPolicy;
+use super::{Controller, Directive};
 use crate::config::SchedulerConfig;
 use crate::telemetry::Observation;
 
@@ -28,7 +28,7 @@ pub struct SlaFeedbackPolicy {
 impl SlaFeedbackPolicy {
     pub fn new(cfg: &SchedulerConfig) -> Self {
         // A missing D_SLA means "unconstrained": the policy degenerates to
-        // B_max so that min(b_mem, b_sla) == b_mem in CombinedPolicy.
+        // B_max so that min(b_mem, b_sla) == b_mem in the min combinator.
         let d_sla = cfg.d_sla.unwrap_or(f64::INFINITY);
         SlaFeedbackPolicy {
             d_sla,
@@ -48,11 +48,11 @@ impl SlaFeedbackPolicy {
     }
 }
 
-impl BatchPolicy for SlaFeedbackPolicy {
-    fn decide(&mut self, obs: &Observation) -> u32 {
+impl Controller for SlaFeedbackPolicy {
+    fn decide(&mut self, obs: &Observation) -> Directive {
         self.stat_decisions += 1;
         if !self.d_sla.is_finite() {
-            return self.b_max;
+            return Directive::gated(self.b_max);
         }
         let (tau, b_bar) = match (obs.recent_decode_latency,
                                   obs.recent_decode_batch) {
@@ -60,8 +60,10 @@ impl BatchPolicy for SlaFeedbackPolicy {
             // No decode samples yet: start from the window midpoint.
             _ => {
                 let b = (self.b_low + self.b_high) / 2;
-                return b.max(obs.running_decode).max(self.b_min)
-                        .min(self.b_max);
+                return Directive::gated(
+                    b.max(obs.running_decode).max(self.b_min)
+                        .min(self.b_max),
+                );
             }
         };
         let b_bar = b_bar.round() as u32;
@@ -88,7 +90,9 @@ impl BatchPolicy for SlaFeedbackPolicy {
 
         let b = (self.b_low + self.b_high) / 2;
         // Alg. 2 line 15.
-        b.max(obs.running_decode).max(self.b_min).min(self.b_max)
+        Directive::gated(
+            b.max(obs.running_decode).max(self.b_min).min(self.b_max),
+        )
     }
 
     fn label(&self) -> String {
@@ -99,7 +103,6 @@ impl BatchPolicy for SlaFeedbackPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::test_obs;
     use crate::util::prop::check;
 
     fn cfg(d_sla: f64) -> SchedulerConfig {
@@ -113,8 +116,12 @@ mod tests {
         }
     }
 
+    fn decide_b(p: &mut SlaFeedbackPolicy, o: &Observation) -> u32 {
+        p.decide(o).target_batch
+    }
+
     fn obs(tau: f64, batch: f64, nd: u32) -> Observation {
-        let mut o = test_obs(1_000_000, 0, nd, 1);
+        let mut o = Observation::synthetic(1_000_000, 0, nd, 1);
         o.recent_decode_latency = Some(tau);
         o.recent_decode_batch = Some(batch);
         o
@@ -124,16 +131,16 @@ mod tests {
     fn no_sla_returns_bmax() {
         let c = SchedulerConfig { d_sla: None, ..SchedulerConfig::default() };
         let mut p = SlaFeedbackPolicy::new(&c);
-        assert_eq!(p.decide(&obs(1.0, 10.0, 0)), c.b_max);
+        assert_eq!(decide_b(&mut p, &obs(1.0, 10.0, 0)), c.b_max);
     }
 
     #[test]
     fn cold_start_uses_midpoint() {
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
-        let mut o = test_obs(1_000_000, 0, 0, 0);
+        let mut o = Observation::synthetic(1_000_000, 0, 0, 0);
         o.recent_decode_latency = None;
         o.recent_decode_batch = None;
-        assert_eq!(p.decide(&o), (1 + 256) / 2);
+        assert_eq!(decide_b(&mut p, &o), (1 + 256) / 2);
     }
 
     /// Closed-loop convergence: with a linear latency model
@@ -149,7 +156,7 @@ mod tests {
         let mut b = 128u32;
         for _ in 0..200 {
             let tau = c0 + c1 * b as f64;
-            b = p.decide(&obs(tau, b as f64, 0));
+            b = decide_b(&mut p, &obs(tau, b as f64, 0));
         }
         let err = (b as f64 - target).abs() / target;
         assert!(err < 0.20, "settled at b={b}, target {target:.0}");
@@ -162,19 +169,19 @@ mod tests {
     #[test]
     fn over_sla_shrinks_under_sla_grows() {
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
-        let b0 = p.decide(&obs(0.080, 128.0, 0)); // way over SLA
-        let b1 = p.decide(&obs(0.080, b0 as f64, 0));
+        let b0 = decide_b(&mut p, &obs(0.080, 128.0, 0)); // way over SLA
+        let b1 = decide_b(&mut p, &obs(0.080, b0 as f64, 0));
         assert!(b1 <= b0, "{b1} > {b0}");
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
-        let c = p.decide(&obs(0.010, 8.0, 0));
-        let c2 = p.decide(&obs(0.010, c as f64, 0));
+        let c = decide_b(&mut p, &obs(0.010, 8.0, 0));
+        let c2 = decide_b(&mut p, &obs(0.010, c as f64, 0));
         assert!(c2 >= c, "{c2} < {c}");
     }
 
     #[test]
     fn within_band_recentres_on_observed() {
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
-        let b = p.decide(&obs(0.050, 77.0, 0));
+        let b = decide_b(&mut p, &obs(0.050, 77.0, 0));
         // window = [77-8, 77+8] → midpoint 77
         assert_eq!(b, 77);
         assert_eq!(p.window(), (69, 85));
@@ -183,7 +190,7 @@ mod tests {
     #[test]
     fn never_below_running_decodes() {
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
-        let b = p.decide(&obs(0.090, 40.0, 120));
+        let b = decide_b(&mut p, &obs(0.090, 40.0, 120));
         assert!(b >= 120);
     }
 
@@ -202,7 +209,7 @@ mod tests {
             for _ in 0..50 {
                 let o = obs(g.f64(0.0, 0.3), g.f64(1.0, 512.0),
                             g.u64(0..=64) as u32);
-                let b = p.decide(&o);
+                let b = decide_b(&mut p, &o);
                 let (lo, hi) = p.window();
                 if !(c.b_min..=c.b_max).contains(&b) && o.running_decode <= c.b_max {
                     return false;

@@ -3,11 +3,12 @@
 //! * [`StaticGreedyPolicy`] — vLLM's default: the scheduler may run up to
 //!   `max_num_seqs` concurrent requests and admits new ones whenever KV
 //!   blocks are free at admission time. Batch size is a *cap*, not a
-//!   target; memory-pressure preemptions do the real regulation.
+//!   target; memory-pressure preemptions do the real regulation. Its
+//!   directives carry [`AdmissionMode::Greedy`].
 //! * [`StaticFixedPolicy`] — a hard operator-chosen batch size (the
 //!   conservative provisioning alternative).
 
-use super::BatchPolicy;
+use super::{AdmissionMode, Controller, Directive};
 use crate::telemetry::Observation;
 
 /// vLLM default behaviour (`max_num_seqs`, greedy admission).
@@ -22,19 +23,18 @@ impl StaticGreedyPolicy {
     }
 }
 
-impl BatchPolicy for StaticGreedyPolicy {
-    fn decide(&mut self, _obs: &Observation) -> u32 {
-        self.max
+impl Controller for StaticGreedyPolicy {
+    /// Admission is governed by free KV blocks only (the vLLM baseline
+    /// semantics the paper compares against), capped at `max`.
+    fn decide(&mut self, _obs: &Observation) -> Directive {
+        Directive {
+            admission: AdmissionMode::Greedy { cap: self.max },
+            ..Directive::gated(self.max)
+        }
     }
 
     fn label(&self) -> String {
         format!("static-greedy:{}", self.max)
-    }
-
-    /// Admission is governed by free KV blocks only (the vLLM baseline
-    /// semantics the paper compares against).
-    fn gates_admission(&self) -> bool {
-        false
     }
 }
 
@@ -50,9 +50,9 @@ impl StaticFixedPolicy {
     }
 }
 
-impl BatchPolicy for StaticFixedPolicy {
-    fn decide(&mut self, _obs: &Observation) -> u32 {
-        self.batch
+impl Controller for StaticFixedPolicy {
+    fn decide(&mut self, _obs: &Observation) -> Directive {
+        Directive::gated(self.batch)
     }
 
     fn label(&self) -> String {
@@ -63,23 +63,26 @@ impl BatchPolicy for StaticFixedPolicy {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::batching::test_obs;
 
     #[test]
     fn greedy_returns_cap_and_does_not_gate() {
         let mut p = StaticGreedyPolicy::new(256);
-        assert_eq!(p.decide(&test_obs(1000, 0, 0, 0)), 256);
-        assert_eq!(p.decide(&test_obs(1000, 999, 200, 50)), 256);
-        assert!(!p.gates_admission());
+        let d = p.decide(&Observation::synthetic(1000, 0, 0, 0));
+        assert_eq!(d.target_batch, 256);
+        assert_eq!(d.admission, AdmissionMode::Greedy { cap: 256 });
+        let d = p.decide(&Observation::synthetic(1000, 999, 200, 50));
+        assert_eq!(d.target_batch, 256, "cap ignores the observation");
     }
 
     #[test]
     fn fixed_is_fixed_and_gates() {
         let mut p = StaticFixedPolicy::new(32);
         for _ in 0..5 {
-            assert_eq!(p.decide(&test_obs(1000, 500, 10, 3)), 32);
+            let d = p.decide(&Observation::synthetic(1000, 500, 10, 3));
+            assert_eq!(d.target_batch, 32);
+            assert_eq!(d.admission, AdmissionMode::Gated);
+            assert_eq!(d.prefill_chunk, None);
         }
-        assert!(p.gates_admission());
     }
 
     #[test]

@@ -203,7 +203,9 @@ impl HardwareSpec {
     }
 }
 
-/// Which batch-size controller drives the scheduler.
+/// Which batch controller drives the scheduler. Combinator variants
+/// (`Min`/`Max`/`ClassWeighted`) compose other kinds into one controller
+/// tree — see `batching::build_controller`.
 #[derive(Debug, Clone, PartialEq)]
 pub enum PolicyKind {
     /// vLLM-style: admit greedily while KV blocks are free, cap at `max`.
@@ -218,6 +220,14 @@ pub enum PolicyKind {
     SlaFeedback,
     /// min(Algorithm 1, Algorithm 2) — the paper's combined controller.
     Combined,
+    /// Pointwise minimum over the parts' directives.
+    Min(Vec<PolicyKind>),
+    /// Pointwise maximum over the parts' directives.
+    Max(Vec<PolicyKind>),
+    /// Blend by priority-class backlog: one part per class in rank order
+    /// (interactive, standard, batch); the last part covers any
+    /// remaining classes.
+    ClassWeighted(Vec<PolicyKind>),
 }
 
 impl PolicyKind {
@@ -228,6 +238,25 @@ impl PolicyKind {
         }
         if let Some(rest) = s.strip_prefix("static-greedy:") {
             return Ok(PolicyKind::StaticGreedy { max: rest.parse()? });
+        }
+        for (prefix, build) in [
+            ("min(", PolicyKind::Min as fn(Vec<PolicyKind>) -> PolicyKind),
+            ("max(", PolicyKind::Max),
+            ("class-weighted(", PolicyKind::ClassWeighted),
+        ] {
+            if let Some(rest) = s.strip_prefix(prefix) {
+                let inner = rest
+                    .strip_suffix(')')
+                    .with_context(|| format!("unbalanced parens in '{s}'"))?;
+                let parts = split_top_level(inner)?
+                    .iter()
+                    .map(|p| PolicyKind::parse(p))
+                    .collect::<Result<Vec<_>>>()?;
+                if parts.is_empty() {
+                    bail!("combinator '{s}' needs at least one part");
+                }
+                return Ok(build(parts));
+            }
         }
         Ok(match s {
             "static-greedy" => PolicyKind::StaticGreedy { max: 256 },
@@ -240,6 +269,13 @@ impl PolicyKind {
     }
 
     pub fn label(&self) -> String {
+        let join = |parts: &[PolicyKind]| {
+            parts
+                .iter()
+                .map(|p| p.label())
+                .collect::<Vec<_>>()
+                .join(",")
+        };
         match self {
             PolicyKind::StaticGreedy { max } => format!("static-greedy:{max}"),
             PolicyKind::StaticFixed { batch } => format!("static-fixed:{batch}"),
@@ -247,8 +283,69 @@ impl PolicyKind {
             PolicyKind::MemoryAwareExact => "memory-aware-exact".into(),
             PolicyKind::SlaFeedback => "sla".into(),
             PolicyKind::Combined => "combined".into(),
+            PolicyKind::Min(p) => format!("min({})", join(p)),
+            PolicyKind::Max(p) => format!("max({})", join(p)),
+            PolicyKind::ClassWeighted(p) => {
+                format!("class-weighted({})", join(p))
+            }
         }
     }
+
+    /// Structural validation — combinator arity and positive static caps.
+    /// `set_policy` feeds wire input straight into the controller factory,
+    /// so invalid shapes must be rejected here, not by factory panics.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            PolicyKind::StaticGreedy { max: 0 } => {
+                bail!("static-greedy cap must be positive")
+            }
+            PolicyKind::StaticFixed { batch: 0 } => {
+                bail!("static-fixed batch must be positive")
+            }
+            PolicyKind::Min(parts)
+            | PolicyKind::Max(parts)
+            | PolicyKind::ClassWeighted(parts) => {
+                if parts.is_empty() {
+                    bail!("combinator needs at least one part");
+                }
+                for p in parts {
+                    p.validate()?;
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Split `a,b,c` on commas not nested inside parentheses.
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, ch) in s.char_indices() {
+        match ch {
+            '(' => depth += 1,
+            ')' => {
+                depth = depth
+                    .checked_sub(1)
+                    .with_context(|| format!("unbalanced parens in '{s}'"))?;
+            }
+            ',' if depth == 0 => {
+                parts.push(s[start..i].trim());
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if depth != 0 {
+        bail!("unbalanced parens in '{s}'");
+    }
+    let tail = s[start..].trim();
+    if !tail.is_empty() {
+        parts.push(tail);
+    }
+    Ok(parts)
 }
 
 /// Scheduler + policy knobs (paper notation in comments).
@@ -309,6 +406,7 @@ impl Default for SchedulerConfig {
 
 impl SchedulerConfig {
     pub fn validate(&self) -> Result<()> {
+        self.policy.validate()?;
         if self.b_min == 0 || self.b_min > self.b_max {
             bail!("need 0 < b_min <= b_max");
         }
@@ -401,9 +499,56 @@ mod tests {
             PolicyKind::MemoryAwareExact,
             PolicyKind::SlaFeedback,
             PolicyKind::Combined,
+            PolicyKind::Min(vec![
+                PolicyKind::MemoryAware,
+                PolicyKind::SlaFeedback,
+            ]),
+            PolicyKind::Max(vec![
+                PolicyKind::StaticFixed { batch: 4 },
+                PolicyKind::Min(vec![
+                    PolicyKind::SlaFeedback,
+                    PolicyKind::StaticGreedy { max: 32 },
+                ]),
+            ]),
+            PolicyKind::ClassWeighted(vec![
+                PolicyKind::SlaFeedback,
+                PolicyKind::MemoryAware,
+                PolicyKind::StaticFixed { batch: 16 },
+            ]),
         ] {
             assert_eq!(PolicyKind::parse(&p.label()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn policy_combinator_parse_and_validation() {
+        // Whitespace and nesting.
+        assert_eq!(
+            PolicyKind::parse("min( alg1 , max(alg2, static-fixed:8) )")
+                .unwrap(),
+            PolicyKind::Min(vec![
+                PolicyKind::MemoryAware,
+                PolicyKind::Max(vec![
+                    PolicyKind::SlaFeedback,
+                    PolicyKind::StaticFixed { batch: 8 },
+                ]),
+            ])
+        );
+        // Malformed shapes are errors, not panics.
+        assert!(PolicyKind::parse("min()").is_err());
+        assert!(PolicyKind::parse("min(alg1").is_err());
+        assert!(PolicyKind::parse("min(alg1))").is_err());
+        assert!(PolicyKind::parse("min(alg1,bogus)").is_err());
+        // Structural validation catches wire-supplied zero caps.
+        assert!(PolicyKind::StaticFixed { batch: 0 }.validate().is_err());
+        assert!(PolicyKind::Min(vec![]).validate().is_err());
+        assert!(PolicyKind::Min(vec![PolicyKind::StaticGreedy { max: 0 }])
+            .validate()
+            .is_err());
+        assert!(PolicyKind::parse("min(alg1,alg2)")
+            .unwrap()
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Experiment driver: wires workload → scheduler → engine → metrics, in
 //! virtual time (simulation) or wall time (real engine), plus the capacity
-//! search used by Table II / Fig. 4.
+//! search used by Table II / Fig. 4 and mid-run policy-switch scenarios
+//! (`run_sim_switched`) exercising the control plane's hot
+//! reconfiguration.
 //!
 //! This is the offline twin of the [`crate::service`] layer: both drive
 //! the same priority-aware scheduler, so requests may carry classes and
@@ -8,7 +10,7 @@
 //! clock values (the service converts relative deadlines at acceptance);
 //! shed/cancel/reject counts surface in [`RunMetrics`].
 
-use crate::config::{HardwareSpec, ModelSpec, SchedulerConfig};
+use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
 use crate::metrics::RunMetrics;
@@ -40,20 +42,49 @@ impl SimScenario {
     }
 }
 
+/// One scheduled controller hot-swap for [`run_loop_switched`] /
+/// [`run_sim_switched`]: at clock time `at`, reconfigure to `to`.
+#[derive(Debug, Clone)]
+pub struct PolicySwitch {
+    pub at: f64,
+    pub to: PolicyKind,
+}
+
 /// Run any engine+clock against a request list until completion (or
 /// `max_steps`, a safety net against livelock).
 pub fn run_loop<E: Engine + ?Sized, C: Clock>(
     sched: &mut Scheduler,
     engine: &mut E,
     clock: &mut C,
+    requests: Vec<Request>,
+    max_steps: u64,
+) -> Result<()> {
+    run_loop_switched(sched, engine, clock, requests, max_steps, &[])
+}
+
+/// [`run_loop`] with mid-run controller hot-swaps: each switch fires at
+/// the first iteration whose clock has reached its `at` time (switches
+/// must be sorted by `at`).
+pub fn run_loop_switched<E: Engine + ?Sized, C: Clock>(
+    sched: &mut Scheduler,
+    engine: &mut E,
+    clock: &mut C,
     mut requests: Vec<Request>,
     max_steps: u64,
+    switches: &[PolicySwitch],
 ) -> Result<()> {
     requests.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
     let mut next = 0usize;
+    let mut next_switch = 0usize;
     let mut steps = 0u64;
     while steps < max_steps {
         let now = clock.now();
+        while next_switch < switches.len()
+            && switches[next_switch].at <= now
+        {
+            sched.reconfigure(switches[next_switch].to.clone())?;
+            next_switch += 1;
+        }
         while next < requests.len() && requests[next].arrived_at <= now {
             let mut r = requests[next].clone();
             r.arrived_at = r.arrived_at.max(0.0);
@@ -88,6 +119,15 @@ pub fn run_loop<E: Engine + ?Sized, C: Clock>(
 
 /// Run one simulated scenario to completion and compute metrics.
 pub fn run_sim(scenario: &SimScenario) -> Result<RunMetrics> {
+    run_sim_switched(scenario, &[])
+}
+
+/// [`run_sim`] with mid-run controller hot-swaps (the policy-switch
+/// scenario behind the `dynabatch switch` subcommand): the scenario
+/// starts on `scenario.sched.policy` and reconfigures live at each
+/// switch point. The reported policy label is the final controller's.
+pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
+                        -> Result<RunMetrics> {
     let mut engine = SimEngine::new(&scenario.model, &scenario.hardware);
     let mut sched = Scheduler::new(
         scenario.sched.clone(),
@@ -106,10 +146,11 @@ pub fn run_sim(scenario: &SimScenario) -> Result<RunMetrics> {
     // Generous budget: every request needs ≲ prompt_chunks + outputs steps;
     // preemption storms can multiply it.
     let max_steps = (n * 4096).max(1_000_000);
-    run_loop(&mut sched, &mut engine, &mut clock, requests, max_steps)?;
+    run_loop_switched(&mut sched, &mut engine, &mut clock, requests,
+                      max_steps, switches)?;
     let makespan = clock.now();
     Ok(RunMetrics::compute(
-        sched.policy_label(),
+        sched.controller_label(),
         sched.finished(),
         &sched.stats,
         &sched.decode_latencies,
@@ -307,7 +348,7 @@ mod tests {
         run_loop(&mut sched, &mut engine, &mut clock, requests, 1_000_000)
             .unwrap();
         let m = RunMetrics::compute(
-            sched.policy_label(),
+            sched.controller_label(),
             sched.finished(),
             &sched.stats,
             &sched.decode_latencies,
@@ -318,6 +359,35 @@ mod tests {
         assert_eq!(m.n_requests, 2);
         assert_eq!(m.n_finished, 1, "only the survivor generated tokens");
         assert_eq!(m.output_tokens, 400);
+    }
+
+    #[test]
+    fn mid_run_policy_switch_completes_and_reconfigures() {
+        // Start on a throttled fixed batch, hot-swap to the paper's
+        // combined controller mid-run: every request still finishes, the
+        // reconfig is counted, and the b_t trace shows both regimes.
+        let mut s = scenario(PolicyKind::StaticFixed { batch: 2 }, 120,
+                             Arrival::Poisson { rate: 10.0 });
+        s.sched.d_sla = Some(0.05);
+        let switched = run_sim_switched(
+            &s,
+            &[PolicySwitch { at: 2.0, to: PolicyKind::Combined }],
+        )
+        .unwrap();
+        assert_eq!(switched.n_finished, 120);
+        assert_eq!(switched.reconfigs, 1);
+        assert_eq!(switched.policy, "combined(min(alg1,alg2))");
+        // The un-switched baseline stays throttled for the whole run and
+        // must be strictly slower end-to-end.
+        let fixed = run_sim(&s).unwrap();
+        assert_eq!(fixed.reconfigs, 0);
+        assert!(
+            switched.makespan < fixed.makespan,
+            "switching to the dynamic controller must relieve the \
+             throttle: {} vs {}",
+            switched.makespan,
+            fixed.makespan
+        );
     }
 
     #[test]

@@ -14,9 +14,14 @@
 //! a [`service::ServiceBuilder`]-built [`service::Service`] accepting
 //! typed [`service::GenRequest`]s (priority class, sampling parameters,
 //! deadline) and returning [`service::SubmissionHandle`]s that stream
-//! [`service::GenEvent`]s and support cancellation. The TCP frontend
+//! [`service::GenEvent`]s and support cancellation. The control plane is
+//! live: batching is a [`batching::Controller`] emitting structured
+//! [`batching::Directive`]s, hot-swappable at runtime via
+//! [`service::Service::reconfigure`] (`set_policy` over the wire), with
+//! [`service::Service::drain`] for graceful retirement. The TCP frontend
 //! ([`server`]) and the examples are thin layers over it; the experiment
-//! driver ([`driver`]) exercises the same scheduler in virtual time.
+//! driver ([`driver`]) exercises the same scheduler in virtual time,
+//! including mid-run policy switches (`driver::run_sim_switched`).
 
 // Carried clippy allowances: the codebase predates these lints and keeps
 // its own idioms (inherent `to_string` on the vendored Json type, index

@@ -3,7 +3,9 @@
 
 use anyhow::{anyhow, Result};
 use dynabatch::config::{presets, PolicyKind, SchedulerConfig};
-use dynabatch::driver::{capacity_search, run_sim, SimScenario};
+use dynabatch::driver::{
+    capacity_search, run_sim, run_sim_switched, PolicySwitch, SimScenario,
+};
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
 use dynabatch::experiments::{ablations, figures, table1, table2};
@@ -56,6 +58,21 @@ fn cli() -> Command {
                 .opt("d-sla", "0", "decode SLA in ms (0 = none)")
                 .opt("seed", "42", "workload seed")
                 .flag("json", "emit metrics as JSON"),
+        )
+        .subcommand(
+            Command::new("switch",
+                         "mid-run policy hot-swap under a load spike")
+                .opt("model", "llama-65b", "model preset")
+                .opt("from", "static-fixed:2", "policy before the switch")
+                .opt("to", "combined", "policy hot-swapped in at --at")
+                .opt("at", "5", "switch time (seconds into the run)")
+                .opt("requests", "300", "request count")
+                .opt("rate", "8", "Poisson arrival rate qps, or 'inf'")
+                .opt("prompt-mean", "128", "mean prompt tokens")
+                .opt("output-mean", "128", "mean output tokens")
+                .opt("d-sla", "50", "decode SLA in ms (0 = none)")
+                .opt("seed", "42", "workload seed")
+                .flag("json", "emit both runs' metrics as JSON"),
         )
         .subcommand(
             Command::new("capacity", "binary-search capacity under an SLA")
@@ -114,6 +131,7 @@ fn main() {
         "fig4" => cmd_fig4(&sub),
         "ablations" => cmd_ablations(&sub),
         "run" => cmd_run(&sub),
+        "switch" => cmd_switch(&sub),
         "capacity" => cmd_capacity(&sub),
         "serve" => cmd_serve(&sub),
         "workload" => cmd_workload(&sub),
@@ -237,6 +255,67 @@ fn cmd_run(m: &M) -> Result<()> {
     Ok(())
 }
 
+fn cmd_switch(m: &M) -> Result<()> {
+    let model = dynabatch::experiments::table_model(m.get("model"));
+    let hardware = presets::node_for(&model);
+    let d_sla_ms = m.get_f64("d-sla")?;
+    let s = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::parse(m.get("from"))?,
+            d_sla: if d_sla_ms > 0.0 { Some(d_sla_ms / 1e3) } else { None },
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "switch".into(),
+            arrival: parse_arrival(m.get("rate"))?,
+            prompt: LengthDist::around(m.get_f64("prompt-mean")?, 4096),
+            output: LengthDist::around(m.get_f64("output-mean")?, 4096),
+            n_requests: m.get_usize("requests")?,
+            seed: m.get_u64("seed")?,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    };
+    let at = m.get_f64("at")?;
+    let to = PolicyKind::parse(m.get("to"))?;
+    let baseline = run_sim(&s)?;
+    let switched =
+        run_sim_switched(&s, &[PolicySwitch { at, to: to.clone() }])?;
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::obj(vec![
+            ("baseline", baseline.to_json()),
+            ("switched", switched.to_json()),
+        ]);
+        println!("{}", j.to_string_pretty());
+    } else {
+        for (name, r) in [("baseline", &baseline), ("switched", &switched)]
+        {
+            println!(
+                "{name:9} policy={} throughput={:.0} tok/s  \
+                 makespan={:.1} s  tbt p95={:.1} ms  ttft p95={:.2} s  \
+                 reconfigs={}",
+                r.policy,
+                r.throughput,
+                r.makespan,
+                r.tbt_p95 * 1e3,
+                r.ttft_p95,
+                r.reconfigs,
+            );
+        }
+        println!(
+            "switching {} → {} at t={at}s: makespan {:+.1}%  \
+             tbt_p95 {:+.1}%",
+            m.get("from"),
+            to.label(),
+            (switched.makespan / baseline.makespan - 1.0) * 100.0,
+            (switched.tbt_p95 / baseline.tbt_p95.max(1e-9) - 1.0) * 100.0,
+        );
+    }
+    Ok(())
+}
+
 fn cmd_capacity(m: &M) -> Result<()> {
     let mut s = scenario_from(m)?;
     let d_sla = m.get_f64("d-sla")? / 1e3;
@@ -290,8 +369,9 @@ fn cmd_serve(m: &M) -> Result<()> {
         .build()?;
     let server = server::serve_service(service, m.get("bind"))?;
     println!("serving on {} — protocol v2: line-delimited JSON \
-              ({{\"op\":\"generate\"|\"cancel\"|\"shutdown\",...}}, \
-              per-request class/sampling/deadline_ms — see DESIGN.md)",
+              ({{\"op\":\"generate\"|\"cancel\"|\"stats\"|\"set_policy\"\
+              |\"drain\"|\"shutdown\",...}}, per-request \
+              class/sampling/deadline_ms — see DESIGN.md)",
              server.local_addr);
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

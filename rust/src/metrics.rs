@@ -36,6 +36,8 @@ pub struct RunMetrics {
     pub rejected: u64,
     pub shed: u64,
     pub cancelled: u64,
+    /// Controller hot-swaps during the run (`Scheduler::reconfigure`).
+    pub reconfigs: u64,
     /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
     pub utilization: Option<f64>,
 }
@@ -89,6 +91,7 @@ impl RunMetrics {
             rejected: stats.rejected,
             shed: stats.shed,
             cancelled: stats.cancelled,
+            reconfigs: stats.reconfigs,
             utilization,
         }
     }
@@ -126,6 +129,7 @@ impl RunMetrics {
             ("rejected", Json::from(self.rejected)),
             ("shed", Json::from(self.shed)),
             ("cancelled", Json::from(self.cancelled)),
+            ("reconfigs", Json::from(self.reconfigs)),
             (
                 "utilization",
                 self.utilization.map(Json::Num).unwrap_or(Json::Null),

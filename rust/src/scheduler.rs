@@ -1,24 +1,33 @@
 //! Continuous-batching scheduler — the control loop of Fig. 1.
 //!
-//! Every iteration: observe telemetry → (every `interval_steps`) let the
-//! batch policy pick `b_t` → admit / resume / preempt under the KV block
-//! manager → build a [`StepPlan`] → run the engine → account tokens and
-//! latencies. Two step-planning modes:
+//! Every iteration: observe telemetry → (every `interval_steps`) hand the
+//! [`Controller`] the observation and receive a [`Directive`] (target
+//! `b_t`, admission mode, prefill chunk budget, preemption hint) → admit /
+//! resume / preempt under the KV block manager → build a [`StepPlan`] →
+//! run the engine → account tokens and latencies. Two step-planning
+//! modes, selected by the directive:
 //!
-//! * **Segregated** (vLLM v0 default): a step is either a prefill batch or
-//!   a decode batch; prompts prefill whole.
-//! * **PD fusion** (`chunk_tokens` set): every step fuses the decode batch
-//!   with up to `chunk budget` prompt tokens (Sarathi-style chunked
-//!   prefill); the budget is static or driven by the adaptive
-//!   [`ChunkController`] (Table II row 3).
+//! * **Segregated** (`prefill_chunk: None`): a step is either a prefill
+//!   batch or a decode batch; prompts prefill whole.
+//! * **PD fusion** (`prefill_chunk: Some(budget)`): every step fuses the
+//!   decode batch with up to `budget` prompt tokens (Sarathi-style
+//!   chunked prefill); the budget is static or adapted by the PD-fusion
+//!   chunk controller folded into the directive (Table II row 3).
 //!
 //! Preemption (memory pressure during decode growth): victim = latest
 //! arrival, vLLM semantics — `Recompute` frees its blocks and re-queues it
 //! with prompt+generated re-prefilled on resume; `Swap` moves blocks to
-//! the CPU pool and back, costed over PCIe by the engine.
+//! the CPU pool and back, costed over PCIe by the engine. The mode comes
+//! from the config unless the directive's [`SwapHint`] overrides it.
+//!
+//! The controller is a *live* object: [`Scheduler::reconfigure`] hot-swaps
+//! it mid-run (telemetry, queues, KV and in-flight work carry over) — the
+//! mechanism behind `Service::reconfigure` and the v2 `set_policy` op.
 
-use crate::batching::{build_policy, BatchPolicy, ChunkController};
-use crate::config::{PreemptMode, SchedulerConfig};
+use crate::batching::{
+    build_controller, AdmissionMode, Controller, Directive, SwapHint,
+};
+use crate::config::{PolicyKind, PreemptMode, SchedulerConfig};
 use crate::engine::{DecodeWork, Engine, PrefillWork, StepPlan};
 use crate::kv::KvBlockManager;
 use crate::request::{FinishReason, Phase, PriorityClass, Request, RequestId};
@@ -27,6 +36,10 @@ use anyhow::Result;
 use std::collections::{BTreeMap, VecDeque};
 
 const N_CLASSES: usize = PriorityClass::COUNT;
+
+/// Most recent decisions kept in [`Scheduler::directive_log`] — ample for
+/// every experiment run while bounding the long-running serve path.
+pub const DIRECTIVE_LOG_CAP: usize = 4096;
 
 /// Aggregated counters the experiments read off after a run.
 #[derive(Debug, Clone, Default)]
@@ -46,12 +59,16 @@ pub struct SchedStats {
     /// Σ decode batch sizes (per decode step) — mean batch = /decode_steps.
     pub decode_batch_sum: u64,
     pub b_t_last: u32,
+    /// Controller hot-swaps (`reconfigure`/`install_controller`).
+    pub reconfigs: u64,
 }
 
 pub struct Scheduler {
     pub cfg: SchedulerConfig,
-    policy: Box<dyn BatchPolicy>,
-    chunk_ctl: Option<ChunkController>,
+    controller: Box<dyn Controller>,
+    /// Last directive issued; governs admission/chunking/preemption until
+    /// the next decision interval.
+    directive: Directive,
     pub kv: KvBlockManager,
     pub telemetry: Telemetry,
     /// Per-class waiting queues, indexed by [`PriorityClass::rank`]
@@ -66,11 +83,15 @@ pub struct Scheduler {
     requests: BTreeMap<RequestId, Request>,
     finished: Vec<Request>,
     b_t: u32,
-    chunk_budget: u32,
     steps_since_decision: u32,
     pub stats: SchedStats,
     /// (t, b_t) decision trace for plots.
     pub bt_timeline: Vec<(f64, u32)>,
+    /// Directive trace, one entry per decision — the control-plane
+    /// telemetry (chunk budgets, admission mode) behind `bt_timeline`.
+    /// Bounded: the serving path runs indefinitely, so only the most
+    /// recent [`DIRECTIVE_LOG_CAP`] decisions are retained.
+    pub directive_log: VecDeque<(f64, Directive)>,
     /// Every decode step latency (seconds) — the SLA attainment record.
     pub decode_latencies: Vec<f64>,
 }
@@ -91,23 +112,20 @@ impl Scheduler {
     pub fn new(cfg: SchedulerConfig, eta_tokens: u64, swap_tokens: u64,
                prior_in: f64, prior_out: f64) -> Self {
         cfg.validate().expect("invalid scheduler config");
-        let policy = build_policy(&cfg);
-        let chunk_ctl = match cfg.chunk_tokens {
-            Some(c) if cfg.adaptive_chunk => {
-                Some(ChunkController::new(&cfg, c))
-            }
-            _ => None,
-        };
+        let controller = build_controller(&cfg);
         let telemetry =
             Telemetry::new(prior_in, prior_out, cfg.latency_window);
         let kv = KvBlockManager::new(eta_tokens, cfg.block_tokens,
                                      swap_tokens);
         let b0 = cfg.b_min;
         Scheduler {
-            chunk_budget: cfg.chunk_tokens.unwrap_or(0),
+            // Placeholder until the first decision (taken on step 1).
+            directive: Directive {
+                prefill_chunk: cfg.chunk_tokens,
+                ..Directive::gated(b0)
+            },
             cfg,
-            policy,
-            chunk_ctl,
+            controller,
             kv,
             telemetry,
             waiting: std::array::from_fn(|_| VecDeque::new()),
@@ -120,12 +138,38 @@ impl Scheduler {
             steps_since_decision: u32::MAX, // decide on first step
             stats: SchedStats::default(),
             bt_timeline: Vec::new(),
+            directive_log: VecDeque::new(),
             decode_latencies: Vec::new(),
         }
     }
 
-    pub fn policy_label(&self) -> String {
-        self.policy.label()
+    pub fn controller_label(&self) -> String {
+        self.controller.label()
+    }
+
+    /// The directive currently governing admission/chunking/preemption.
+    pub fn current_directive(&self) -> Directive {
+        self.directive
+    }
+
+    /// Hot-swap the controller to the policy named by `kind`. Telemetry,
+    /// queues, KV accounting and in-flight requests all carry over; the
+    /// next step re-decides immediately (no stale interval).
+    pub fn reconfigure(&mut self, kind: PolicyKind) -> Result<()> {
+        let mut cfg = self.cfg.clone();
+        cfg.policy = kind;
+        cfg.validate()?;
+        self.install_controller(build_controller(&cfg));
+        self.cfg = cfg;
+        Ok(())
+    }
+
+    /// Install a custom [`Controller`] object directly (the
+    /// `PolicyKind`-independent path for library users).
+    pub fn install_controller(&mut self, controller: Box<dyn Controller>) {
+        self.controller = controller;
+        self.steps_since_decision = u32::MAX; // re-decide on next step
+        self.stats.reconfigs += 1;
     }
 
     /// Submit a new request into its class queue.
@@ -206,21 +250,22 @@ impl Scheduler {
         // ---- 0. shed expired waiters before they count as load ----
         self.shed_expired(now);
 
-        // ---- 1. policy decision every interval ----
+        // ---- 1. controller decision every interval ----
         let obs = self.observe(now);
         if self.steps_since_decision >= self.cfg.interval_steps {
-            self.b_t = self
-                .policy
-                .decide(&obs)
-                .min(engine.max_batch())
-                .max(1);
-            if let Some(ctl) = &mut self.chunk_ctl {
-                self.chunk_budget = ctl.decide(&obs);
-            }
+            let mut d = self.controller.decide(&obs);
+            d.target_batch =
+                d.target_batch.min(engine.max_batch()).max(1);
+            self.b_t = d.target_batch;
+            self.directive = d;
             self.steps_since_decision = 0;
             self.stats.decisions += 1;
             self.stats.b_t_last = self.b_t;
             self.bt_timeline.push((now, self.b_t));
+            if self.directive_log.len() >= DIRECTIVE_LOG_CAP {
+                self.directive_log.pop_front();
+            }
+            self.directive_log.push_back((now, d));
         } else {
             self.steps_since_decision += 1;
         }
@@ -230,7 +275,7 @@ impl Scheduler {
         self.resume_and_admit(engine, now, &mut plan)?;
 
         // ---- 3. plan the step ----
-        let fused = self.cfg.chunk_tokens.is_some();
+        let fused = self.directive.prefill_chunk.is_some();
         let prefill_ids: Vec<RequestId> = self
             .running_order
             .iter()
@@ -378,15 +423,17 @@ impl Scheduler {
     }
 
     /// Admission control: resume preempted first, then fresh arrivals
-    /// picked class-weighted. Dynamic policies gate at `b_t`; the
-    /// static-greedy baseline admits while prompt blocks fit (vLLM
-    /// semantics).
+    /// picked class-weighted. The directive decides the mode: `Gated`
+    /// admits strictly up to `b_t`, `Greedy` admits while prompt blocks
+    /// fit up to its cap (vLLM static-greedy semantics).
     fn resume_and_admit<E: Engine + ?Sized>(&mut self, engine: &mut E,
                                             now: f64, plan: &mut StepPlan)
                                             -> Result<()> {
-        let gate = self.policy.gates_admission();
-        let cap = if gate { self.b_t } else { self.policy.decide_cap() }
-            .min(engine.max_batch());
+        let cap = match self.directive.admission {
+            AdmissionMode::Gated => self.b_t,
+            AdmissionMode::Greedy { cap } => cap,
+        }
+        .min(engine.max_batch());
 
         loop {
             let running = self.running_order.len() as u32;
@@ -470,11 +517,13 @@ impl Scheduler {
         Ok(())
     }
 
-    /// PD fusion: take up to `chunk_budget` prompt tokens across the
-    /// requests still prefilling (FIFO over admission order).
+    /// PD fusion: take up to the directive's `prefill_chunk` prompt
+    /// tokens across the requests still prefilling (FIFO over admission
+    /// order).
     fn plan_chunked_prefills(&mut self, prefill_ids: &[RequestId],
                              plan: &mut StepPlan) {
-        let mut budget = self.chunk_budget.max(1);
+        let mut budget =
+            self.directive.prefill_chunk.unwrap_or(0).max(1);
         for &id in prefill_ids {
             if budget == 0 {
                 break;
@@ -561,7 +610,12 @@ impl Scheduler {
         // the engine neither runs nor reports tokens for it.
         plan.decodes.retain(|d| d.id != victim);
         plan.prefills.retain(|p| p.id != victim);
-        match self.cfg.preempt {
+        let mode = match self.directive.swap_hint {
+            SwapHint::Auto => self.cfg.preempt,
+            SwapHint::Swap => PreemptMode::Swap,
+            SwapHint::Recompute => PreemptMode::Recompute,
+        };
+        match mode {
             PreemptMode::Swap => {
                 match self.kv.swap_out(victim) {
                     Ok(tokens) => {
@@ -643,35 +697,6 @@ fn slice_tokens(r: &Request, start: u32, n: u32) -> Vec<i32> {
     let s = start as usize;
     let e = (start + n) as usize;
     r.prompt_tokens[s..e.min(r.prompt_tokens.len())].to_vec()
-}
-
-/// Extension for the greedy baseline: the cap it admits up to.
-trait PolicyCapExt {
-    fn decide_cap(&mut self) -> u32;
-}
-
-impl PolicyCapExt for Box<dyn BatchPolicy> {
-    fn decide_cap(&mut self) -> u32 {
-        // Greedy policies return their fixed cap regardless of observation;
-        // feed a neutral observation.
-        let obs = crate::telemetry::Observation {
-            now: 0.0,
-            eta_tokens: 0,
-            used_tokens: 0,
-            mean_in: 0.0,
-            mean_out: 0.0,
-            var_in: 0.0,
-            var_out: 0.0,
-            length_samples: 0,
-            recent_decode_latency: None,
-            recent_decode_batch: None,
-            running_decode: 0,
-            pending_prefill: 0,
-            waiting: 0,
-            waiting_by_class: [0; N_CLASSES],
-        };
-        self.decide(&obs)
-    }
 }
 
 #[cfg(test)]
@@ -955,6 +980,112 @@ mod tests {
         let r0 = s.finished().iter().find(|r| r.id == 0).unwrap();
         assert_eq!(r0.finish, Some(FinishReason::Completed));
         assert_eq!(s.kv.used_tokens(), 0);
+    }
+
+    #[test]
+    fn reconfigure_hot_swaps_controller_mid_run() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 2 }, 100_000);
+        for i in 0..30 {
+            s.submit(Request::new(i, 64, 64, 0.0));
+        }
+        // Run a while under the tight fixed batch…
+        for _ in 0..40 {
+            if let Some(rep) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(rep.elapsed);
+            }
+        }
+        assert_eq!(s.current_bt(), 2);
+        let finished_before = s.finished().len();
+        let prompts_seen = s.telemetry.mean_in();
+        // …then hot-swap to a wider fixed batch.
+        s.reconfigure(PolicyKind::StaticFixed { batch: 16 }).unwrap();
+        assert_eq!(s.stats.reconfigs, 1);
+        assert_eq!(s.controller_label(), "static-fixed:16");
+        // Telemetry carried over: the length estimator kept its samples.
+        assert_eq!(s.telemetry.mean_in(), prompts_seen);
+        // The swap re-decides immediately on the next step.
+        s.step(&mut e, c.now()).unwrap();
+        assert_eq!(s.current_bt(), 16);
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 30, "no request lost in the swap");
+        assert!(s.finished().len() > finished_before);
+        assert!(s.bt_timeline.iter().any(|(_, b)| *b == 2));
+        assert!(s.bt_timeline.iter().any(|(_, b)| *b == 16));
+        s.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn reconfigure_rejects_invalid_policy() {
+        let (mut s, ..) = sim_setup(PolicyKind::MemoryAware, 100_000);
+        assert!(s
+            .reconfigure(PolicyKind::StaticFixed { batch: 0 })
+            .is_err());
+        assert_eq!(s.stats.reconfigs, 0);
+        assert_eq!(s.controller_label(), "memory-aware(alg1-linear)");
+    }
+
+    /// A controller whose directives hint `Swap` even though the config
+    /// says `Recompute` — the directive must win.
+    struct SwapHinting {
+        cap: u32,
+    }
+
+    impl crate::batching::Controller for SwapHinting {
+        fn decide(&mut self, _obs: &Observation) -> Directive {
+            Directive {
+                admission: AdmissionMode::Greedy { cap: self.cap },
+                swap_hint: SwapHint::Swap,
+                ..Directive::gated(self.cap)
+            }
+        }
+
+        fn label(&self) -> String {
+            "swap-hinting".into()
+        }
+    }
+
+    #[test]
+    fn directive_swap_hint_overrides_preempt_mode() {
+        // Same pressure scenario as static_greedy_preempts_under_pressure,
+        // but the controller hints Swap while cfg.preempt = Recompute.
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::StaticGreedy { max: 256 },
+            preempt: PreemptMode::Recompute,
+            ..SchedulerConfig::default()
+        };
+        let m = pangu_7b();
+        let hw = node_for(&m);
+        let mut engine = SimEngine::new(&m, &hw);
+        let mut s = Scheduler::new(cfg, 2_000, 100_000, 64.0, 128.0);
+        s.install_controller(Box::new(SwapHinting { cap: 256 }));
+        let mut c = VirtualClock::new();
+        for i in 0..20 {
+            s.submit(Request::new(i, 64, 128, 0.0));
+        }
+        run_all(&mut s, &mut engine, &mut c, 200_000);
+        assert_eq!(s.finished().len(), 20);
+        assert!(s.stats.preempt_swap > 0, "hint must select swap");
+        assert_eq!(s.stats.preempt_recompute, 0);
+        assert_eq!(s.stats.reconfigs, 1);
+    }
+
+    #[test]
+    fn directive_log_records_decisions() {
+        let (mut s, mut e, mut c) = sim_setup(PolicyKind::Combined, 50_000);
+        for i in 0..20 {
+            s.submit(Request::new(i, 64, 32, 0.0));
+        }
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.directive_log.len(), s.bt_timeline.len());
+        for ((t1, d), (t2, b)) in
+            s.directive_log.iter().zip(s.bt_timeline.iter())
+        {
+            assert_eq!(t1, t2);
+            assert_eq!(d.target_batch, *b);
+            assert_eq!(d.admission, AdmissionMode::Gated);
+            assert_eq!(d.prefill_chunk, None, "no chunk config");
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! Every server line is decoded into a typed [`ClientEvent`]; unknown or
 //! malformed event types surface as errors instead of being skipped (a
 //! v1 client talking to a newer server fails loudly, not by hanging).
+//! The v2 admin ops have typed methods: [`Client::stats`],
+//! [`Client::set_policy`], [`Client::drain`].
 
 use crate::request::{PriorityClass, SamplingParams};
 use crate::util::json::Json;
@@ -42,6 +44,30 @@ pub struct GenOptions {
     pub sampling: Option<SamplingParams>,
 }
 
+/// Live serving-loop counters returned by the v2 `stats` op (the wire
+/// form of the service's `ServiceSnapshot`).
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub running: u32,
+    pub waiting: u32,
+    /// Waiting depth per priority class (rank order: interactive first).
+    pub waiting_by_class: Vec<u32>,
+    pub resuming: u32,
+    pub kv_used_tokens: u64,
+    pub kv_free_blocks: u64,
+    pub kv_total_blocks: u64,
+    pub b_t: u32,
+    /// Label of the live batching controller.
+    pub controller: String,
+    pub steps: u64,
+    pub finished: u64,
+    pub rejected: u64,
+    pub shed: u64,
+    pub cancelled: u64,
+    pub reconfigs: u64,
+    pub draining: bool,
+}
+
 /// One decoded server event.
 #[derive(Debug, Clone)]
 pub enum ClientEvent {
@@ -59,6 +85,15 @@ pub enum ClientEvent {
     /// request existed or will end with `cancelled` — key off the
     /// stream's terminal event.
     CancelAck { id: u64, enqueued: bool },
+    /// Reply to the `stats` admin op.
+    Stats(ServerStats),
+    /// Reply to `set_policy`: the new controller's label.
+    PolicySet { policy: String },
+    /// Immediate ack of `drain`: admissions have stopped.
+    Draining,
+    /// The drain resolved: every in-flight request reached a terminal
+    /// event.
+    Drained,
     /// Server-side error; `id` is absent for connection-level errors.
     Error { id: Option<u64>, message: String },
     Bye,
@@ -138,6 +173,42 @@ impl Client {
                 id: need_id()?,
                 enqueued: ev.get("enqueued").as_bool().unwrap_or(false),
             },
+            Some("stats") => ClientEvent::Stats(ServerStats {
+                running: ev.get("running").as_u64().unwrap_or(0) as u32,
+                waiting: ev.get("waiting").as_u64().unwrap_or(0) as u32,
+                waiting_by_class: ev
+                    .get("waiting_by_class")
+                    .as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|x| x.as_u64().unwrap_or(0) as u32)
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+                resuming: ev.get("resuming").as_u64().unwrap_or(0) as u32,
+                kv_used_tokens:
+                    ev.get("kv_used_tokens").as_u64().unwrap_or(0),
+                kv_free_blocks:
+                    ev.get("kv_free_blocks").as_u64().unwrap_or(0),
+                kv_total_blocks:
+                    ev.get("kv_total_blocks").as_u64().unwrap_or(0),
+                b_t: ev.get("b_t").as_u64().unwrap_or(0) as u32,
+                controller:
+                    ev.get("controller").as_str().unwrap_or("").into(),
+                steps: ev.get("steps").as_u64().unwrap_or(0),
+                finished: ev.get("finished").as_u64().unwrap_or(0),
+                rejected: ev.get("rejected").as_u64().unwrap_or(0),
+                shed: ev.get("shed").as_u64().unwrap_or(0),
+                cancelled: ev.get("cancelled").as_u64().unwrap_or(0),
+                reconfigs: ev.get("reconfigs").as_u64().unwrap_or(0),
+                draining:
+                    ev.get("draining").as_bool().unwrap_or(false),
+            }),
+            Some("policy_set") => ClientEvent::PolicySet {
+                policy: ev.get("policy").as_str().unwrap_or("").into(),
+            },
+            Some("draining") => ClientEvent::Draining,
+            Some("drained") => ClientEvent::Drained,
             Some("error") => ClientEvent::Error {
                 id: id(),
                 message: ev.get("error").as_str().unwrap_or("?").into(),
@@ -265,6 +336,63 @@ impl Client {
             ("op", Json::from("cancel")),
             ("id", Json::from(id)),
         ]))
+    }
+
+    /// Fetch the server's live stats (v2 `stats` op). Events belonging to
+    /// in-flight streams that arrive first are buffered for
+    /// [`Self::next_event`], not dropped.
+    pub fn stats(&mut self) -> Result<ServerStats> {
+        self.send(&Json::obj(vec![("op", Json::from("stats"))]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::Stats(s) => return Ok(s),
+                ClientEvent::Error { id: None, message } => {
+                    bail!("server error: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Hot-swap the server's batching controller (v2 `set_policy` op).
+    /// `policy` is any `PolicyKind` label, including combinators (e.g.
+    /// `"combined"`, `"min(alg1,alg2)"`). Returns the new controller's
+    /// label.
+    pub fn set_policy(&mut self, policy: &str) -> Result<String> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("set_policy")),
+            ("policy", Json::from(policy)),
+        ]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::PolicySet { policy } => return Ok(policy),
+                ClientEvent::Error { id: None, message } => {
+                    bail!("set_policy rejected: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Drain the server (v2 `drain` op): admissions stop immediately;
+    /// blocks until the server announces every in-flight request reached
+    /// a terminal event. Token/terminal events arriving meanwhile are
+    /// buffered for [`Self::next_event`].
+    pub fn drain(&mut self) -> Result<()> {
+        self.send(&Json::obj(vec![("op", Json::from("drain"))]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::Drained => return Ok(()),
+                ClientEvent::Draining => {}
+                ClientEvent::Error { id: None, message } => {
+                    bail!("drain failed: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
     }
 
     /// Send a raw protocol line and decode one response event;

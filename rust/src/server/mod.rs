@@ -13,6 +13,9 @@
 //!    "deadline_ms":1500,
 //!    "sampling":{"temperature":0.7,"top_k":40,"top_p":0.9,"seed":1}}
 //! → {"op":"cancel", "id":7}
+//! → {"op":"stats"}                                          (v2 admin)
+//! → {"op":"set_policy", "policy":"combined"}                (v2 admin)
+//! → {"op":"drain"}                                          (v2 admin)
 //! → {"op":"shutdown"}
 //! ```
 //!
@@ -42,6 +45,37 @@
 //! `cancelled`), never off the ack. `{"type":"bye"}` answers `shutdown`,
 //! and `{"type":"error","error":"…"}` (no `id`) reports malformed input.
 //!
+//! Admin ops (v2):
+//!
+//! ```text
+//! → {"op":"stats"}
+//! ← {"type":"stats", "running":2, "waiting":5,
+//!    "waiting_by_class":[1,4,0], "resuming":0,
+//!    "kv_used_tokens":4096, "kv_free_blocks":120,
+//!    "kv_total_blocks":376, "b_t":32,
+//!    "controller":"combined(min(alg1,alg2))", "steps":901,
+//!    "finished":40, "rejected":0, "shed":1, "cancelled":2,
+//!    "reconfigs":0, "draining":false}
+//!
+//! → {"op":"set_policy", "policy":"min(alg1,alg2)"}
+//! ← {"type":"policy_set", "policy":"min(memory-aware(alg1-linear),\
+//!    sla-feedback(D_SLA=50ms))"}          (new controller label; or a
+//!                                          connection-level error)
+//!
+//! → {"op":"drain"}
+//! ← {"type":"draining"}                   (immediately; admissions stop)
+//! ← {"type":"drained"}                    (once in-flight work finished)
+//! ```
+//!
+//! `stats` returns the live `ServiceSnapshot`. `set_policy` hot-swaps
+//! the batching controller (any `PolicyKind` label, including the
+//! combinators) with telemetry and in-flight work carried over. `drain`
+//! stops admissions — subsequent `generate`s on any connection fail with
+//! a connection-level error — and announces `drained` once every
+//! in-flight request has reached its terminal event; the connection's
+//! read loop keeps running in between, so `stats` (and `cancel`) still
+//! work while draining.
+//!
 //! v1 compatibility: a bare `generate` behaves exactly as before —
 //! `accepted`, `token`… then `done`. v2 additionally allows several
 //! concurrent `generate`s per connection (streams are interleaved,
@@ -49,16 +83,19 @@
 
 pub mod client;
 
+use crate::config::PolicyKind;
 use crate::engine::Engine;
 use crate::request::{PriorityClass, SamplingParams};
 use crate::scheduler::Scheduler;
-use crate::service::{GenEvent, GenRequest, Service, SubmissionHandle};
+use crate::service::{
+    GenEvent, GenRequest, Service, ServiceSnapshot, SubmissionHandle,
+};
 use crate::tokenizer;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Shared server state: the service plus the bound address.
@@ -168,6 +205,36 @@ fn parse_generate(msg: &Json) -> Result<GenRequest> {
     Ok(req)
 }
 
+fn stats_to_json(s: &ServiceSnapshot) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("stats")),
+        ("running", Json::from(s.running as u64)),
+        ("waiting", Json::from(s.waiting as u64)),
+        (
+            "waiting_by_class",
+            Json::Arr(
+                s.waiting_by_class
+                    .iter()
+                    .map(|c| Json::from(*c as u64))
+                    .collect(),
+            ),
+        ),
+        ("resuming", Json::from(s.resuming as u64)),
+        ("kv_used_tokens", Json::from(s.kv_used_tokens)),
+        ("kv_free_blocks", Json::from(s.kv_free_blocks)),
+        ("kv_total_blocks", Json::from(s.kv_total_blocks)),
+        ("b_t", Json::from(s.b_t as u64)),
+        ("controller", Json::from(s.controller.clone())),
+        ("steps", Json::from(s.steps)),
+        ("finished", Json::from(s.finished)),
+        ("rejected", Json::from(s.rejected)),
+        ("shed", Json::from(s.shed)),
+        ("cancelled", Json::from(s.cancelled)),
+        ("reconfigs", Json::from(s.reconfigs)),
+        ("draining", Json::from(s.draining)),
+    ])
+}
+
 fn event_to_json(ev: &GenEvent) -> Json {
     match ev {
         GenEvent::Accepted { id, class } => Json::obj(vec![
@@ -228,6 +295,10 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let out = Arc::new(Mutex::new(stream));
     let inflight = Arc::new(AtomicUsize::new(0));
+    // At most one drain-watcher thread per connection (see the `drain`
+    // op below); cleared before `drained` is written so a repeat op
+    // either shares the pending announcement or starts a fresh watcher.
+    let drain_inflight = Arc::new(AtomicBool::new(false));
     // Every id this connection submitted; cancelled when the read side
     // closes so a dead client's requests stop holding KV blocks
     // (cancel is idempotent, so already-finished ids are no-ops).
@@ -291,6 +362,59 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                                        .into()))?;
                     }
                 },
+                Some("stats") => {
+                    write_json(&out,
+                               &stats_to_json(&server.service.snapshot()))?;
+                }
+                Some("set_policy") => {
+                    let r = match msg.get("policy").as_str() {
+                        Some(p) => PolicyKind::parse(p)
+                            .and_then(|k| server.service.reconfigure(k)),
+                        None => Err(anyhow!(
+                            "set_policy needs a string 'policy' field"
+                        )),
+                    };
+                    match r {
+                        Ok(label) => write_json(&out, &Json::obj(vec![
+                            ("type", Json::from("policy_set")),
+                            ("policy", Json::from(label)),
+                        ]))?,
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                        }
+                    }
+                }
+                Some("drain") => {
+                    // Ack immediately (admissions stop now), announce
+                    // `drained` from a side thread so this connection's
+                    // read loop keeps serving stats/cancel meanwhile.
+                    write_json(&out, &Json::obj(vec![
+                        ("type", Json::from("draining")),
+                    ]))?;
+                    // One watcher thread per connection: a repeat op
+                    // while one is pending shares its `drained` line
+                    // instead of stacking blocked threads.
+                    if drain_inflight.swap(true, Ordering::SeqCst) {
+                        continue;
+                    }
+                    let service = server.service.clone();
+                    let out = out.clone();
+                    let drain_inflight = drain_inflight.clone();
+                    std::thread::spawn(move || {
+                        let j = match service.drain() {
+                            Ok(()) => Json::obj(vec![
+                                ("type", Json::from("drained")),
+                            ]),
+                            Err(e) => conn_error(format!("{e:#}")),
+                        };
+                        // Clear before writing: an op arriving after the
+                        // flag clears starts a fresh watcher, one racing
+                        // it still has this `drained` line to read.
+                        drain_inflight.store(false, Ordering::SeqCst);
+                        let _ = write_json(&out, &j);
+                    });
+                }
                 Some("shutdown") => {
                     write_json(&out, &Json::obj(vec![
                         ("type", Json::from("bye")),
@@ -401,6 +525,41 @@ mod tests {
         };
         let g = c.generate_with("typed please", 4, &opts).unwrap();
         assert_eq!(g.n_tokens, 4);
+        server.shutdown();
+    }
+
+    #[test]
+    fn admin_ops_roundtrip() {
+        let server = sim_server();
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // stats on an idle server: everything zero, controller labelled.
+        let s = c.stats().unwrap();
+        assert_eq!(s.running, 0);
+        assert_eq!(s.controller, "combined(min(alg1,alg2))");
+        assert_eq!(s.waiting_by_class.len(), 3);
+        assert!(!s.draining);
+        // set_policy round-trips through PolicyKind::parse, combinators
+        // included.
+        let label = c.set_policy("min(alg1,alg2)").unwrap();
+        assert_eq!(
+            label,
+            "min(memory-aware(alg1-linear),sla-feedback(D_SLA=50ms))"
+        );
+        // The snapshot is republished once per loop iteration; poll.
+        let deadline =
+            std::time::Instant::now() + std::time::Duration::from_secs(5);
+        loop {
+            let s = c.stats().unwrap();
+            if s.reconfigs == 1 {
+                assert_eq!(s.controller, label);
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "stale: {s:?}");
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // Missing field is a connection error, not a hang.
+        let err = c.roundtrip_raw("{\"op\":\"set_policy\"}").unwrap_err();
+        assert!(err.to_string().contains("policy"), "{err}");
         server.shutdown();
     }
 

@@ -15,17 +15,24 @@
 //! done | error | cancelled) and supports [`SubmissionHandle::cancel`],
 //! which frees the request's KV blocks mid-flight. Admission inside the
 //! scheduler is priority-aware: per-class queues interleaved by smooth
-//! weighted round-robin under the policy's `b_t`, with deadline-based
+//! weighted round-robin under the controller's `b_t`, with deadline-based
 //! shedding of expired waiters. [`Service::snapshot`] exposes the live
-//! per-class queue depths and KV block accounting.
+//! per-class queue depths, KV block accounting, and the controller label.
+//!
+//! The control plane is live: [`Service::reconfigure`] hot-swaps the
+//! batching controller under the scheduler loop (telemetry and in-flight
+//! work carry over), and [`Service::drain`] stops admissions — further
+//! submissions fail with [`SubmitError::Draining`] — and resolves once
+//! every in-flight request has reached its terminal event.
 //!
 //! The TCP frontend ([`crate::server`]) is a thin protocol adapter over
-//! this module; the wire format is documented there and in DESIGN.md.
+//! this module (including the v2 admin ops `stats` / `set_policy` /
+//! `drain`); the wire format is documented there and in DESIGN.md.
 
 pub mod types;
 
 pub use crate::request::{PriorityClass, SamplingParams};
-pub use types::{Completion, GenEvent, GenRequest};
+pub use types::{Completion, GenEvent, GenRequest, SubmitError};
 
 use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
 use crate::engine::sim::SimEngine;
@@ -46,6 +53,10 @@ type EngineBuilderFn = Box<dyn FnOnce() -> Result<Box<dyn Engine>> + Send>;
 enum Command {
     Submit { request: Request, events: Sender<GenEvent> },
     Cancel(RequestId),
+    /// Hot-swap the batching controller; `ack` carries the new label.
+    SetPolicy { kind: PolicyKind, ack: Sender<Result<String>> },
+    /// Register a drain waiter, resolved when in-flight work is done.
+    Drain { done: Sender<()> },
     Shutdown,
 }
 
@@ -183,16 +194,23 @@ pub struct ServiceSnapshot {
     pub kv_free_blocks: usize,
     pub kv_total_blocks: usize,
     pub b_t: u32,
+    /// Label of the live controller (changes on `reconfigure`).
+    pub controller: String,
     pub steps: u64,
     pub finished: u64,
     pub rejected: u64,
     pub shed: u64,
     pub cancelled: u64,
+    /// Controller hot-swaps applied so far.
+    pub reconfigs: u64,
+    /// True once `drain` has been requested.
+    pub draining: bool,
 }
 
 struct Shared {
     shutdown: AtomicBool,
     paused: AtomicBool,
+    draining: AtomicBool,
     snapshot: Mutex<ServiceSnapshot>,
 }
 
@@ -229,6 +247,7 @@ impl Service {
         let shared = Arc::new(Shared {
             shutdown: AtomicBool::new(false),
             paused: AtomicBool::new(paused),
+            draining: AtomicBool::new(false),
             snapshot: Mutex::new(ServiceSnapshot::default()),
         });
         let worker = {
@@ -260,10 +279,15 @@ impl Service {
     }
 
     /// Submit a typed request; returns a handle streaming its events.
+    /// Fails with a downcastable [`SubmitError`] when the service is
+    /// draining or shut down.
     pub fn submit(&self, req: GenRequest) -> Result<SubmissionHandle> {
         req.validate()?;
         if self.is_shutdown() {
-            bail!("service is shut down");
+            return Err(anyhow::Error::new(SubmitError::ShutDown));
+        }
+        if self.is_draining() {
+            return Err(anyhow::Error::new(SubmitError::Draining));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let request = Request::with_tokens(
@@ -297,6 +321,42 @@ impl Service {
 
     pub fn snapshot(&self) -> ServiceSnapshot {
         self.shared.snapshot.lock().unwrap().clone()
+    }
+
+    /// Hot-swap the batching controller on the live scheduler: telemetry,
+    /// queues, KV accounting and in-flight requests all carry over, and
+    /// the next scheduler step re-decides under the new controller.
+    /// Returns the new controller's label. Blocks briefly (one loop
+    /// iteration) for the swap to be applied.
+    pub fn reconfigure(&self, kind: PolicyKind) -> Result<String> {
+        let (ack, rx) = std::sync::mpsc::channel();
+        self.control
+            .send(Command::SetPolicy { kind, ack })
+            .map_err(|_| anyhow!("service worker is gone"))?;
+        match rx.recv_timeout(Duration::from_secs(10)) {
+            Ok(r) => r,
+            Err(_) => bail!("service worker did not apply the policy"),
+        }
+    }
+
+    /// Stop admitting new work and block until every in-flight request
+    /// has reached its terminal event. Once draining starts, `submit`
+    /// fails with [`SubmitError::Draining`]; cancels are still honored
+    /// (and count as terminal). Idempotent — concurrent callers all
+    /// resolve. Note: a paused service must be [`Service::resume`]d for
+    /// in-flight work (and therefore the drain) to make progress.
+    pub fn drain(&self) -> Result<()> {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        let (done, rx) = std::sync::mpsc::channel();
+        self.control
+            .send(Command::Drain { done })
+            .map_err(|_| anyhow!("service worker is gone"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("service shut down before drain resolved"))
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
     }
 
     /// Pause the stepping loop (submissions/cancels still processed).
@@ -418,10 +478,16 @@ impl SubmissionHandle {
     }
 }
 
-/// Fail queued submissions when the engine never came up.
+/// Fail queued submissions when the engine never came up. Accepted is
+/// sent before the terminal error so blocking clients waiting for the
+/// stream head do not hang.
 fn fail_pending(commands: &Receiver<Command>, message: &str) {
     while let Ok(cmd) = commands.recv_timeout(Duration::from_millis(50)) {
         if let Command::Submit { request, events } = cmd {
+            let _ = events.send(GenEvent::Accepted {
+                id: request.id,
+                class: request.class,
+            });
             let _ = events.send(GenEvent::Error {
                 id: request.id,
                 message: message.to_string(),
@@ -430,7 +496,23 @@ fn fail_pending(commands: &Receiver<Command>, message: &str) {
     }
 }
 
-fn publish(shared: &Shared, sched: &Scheduler) {
+/// Resolve drain waiters once nothing is in flight: no scheduler work
+/// and every stream has received its terminal event. (Waiters registered
+/// on an idle service resolve on the next iteration.)
+fn resolve_drains(waiters: &mut Vec<Sender<()>>, sched: &Scheduler,
+                  watchers: &BTreeMap<RequestId, Sender<GenEvent>>) {
+    if waiters.is_empty() || sched.has_work() || !watchers.is_empty() {
+        return;
+    }
+    for w in waiters.drain(..) {
+        let _ = w.send(());
+    }
+}
+
+/// `label` is the cached controller label — `controller_label()`
+/// allocates across the combinator tree, so the loop re-derives it only
+/// on `SetPolicy` instead of every iteration.
+fn publish(shared: &Shared, sched: &Scheduler, label: &str) {
     let mut snap = shared.snapshot.lock().unwrap();
     let by_class = sched.waiting_by_class();
     snap.running = sched.running_len() as u32;
@@ -441,27 +523,50 @@ fn publish(shared: &Shared, sched: &Scheduler) {
     snap.kv_free_blocks = sched.kv.free_blocks();
     snap.kv_total_blocks = sched.kv.total_blocks();
     snap.b_t = sched.current_bt();
+    if snap.controller != label {
+        snap.controller = label.to_string();
+    }
     snap.steps = sched.stats.steps;
     snap.finished = sched.stats.finished;
     snap.rejected = sched.stats.rejected;
     snap.shed = sched.stats.shed;
     snap.cancelled = sched.stats.cancelled;
+    snap.reconfigs = sched.stats.reconfigs;
+    snap.draining = shared.draining.load(Ordering::SeqCst);
 }
 
 /// The serving loop: drain control commands, step the scheduler, stream
-/// tokens, emit terminal events from the scheduler's finish reasons, and
-/// publish a snapshot — every iteration.
+/// tokens, emit terminal events from the scheduler's finish reasons,
+/// resolve drain waiters, and publish a snapshot — every iteration.
 fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
                commands: &Receiver<Command>, shared: &Shared) {
     let clock = std::time::Instant::now();
     let mut watchers: BTreeMap<RequestId, Sender<GenEvent>> = BTreeMap::new();
     let mut texts: BTreeMap<RequestId, Vec<i32>> = BTreeMap::new();
+    let mut drain_waiters: Vec<Sender<()>> = Vec::new();
+    let mut label = sched.controller_label();
     while !shared.shutdown.load(Ordering::SeqCst) {
         let now = clock.elapsed().as_secs_f64();
         // ---- 1. drain control commands ----
         loop {
             match commands.try_recv() {
                 Ok(Command::Submit { mut request, events }) => {
+                    // Submissions racing the drain flag are refused here,
+                    // so the drain set can only shrink once draining.
+                    // Accepted precedes the terminal error: every stream
+                    // keeps the `accepted → … → terminal` shape blocking
+                    // clients key off (see Client::submit).
+                    if shared.draining.load(Ordering::SeqCst) {
+                        let _ = events.send(GenEvent::Accepted {
+                            id: request.id,
+                            class: request.class,
+                        });
+                        let _ = events.send(GenEvent::Error {
+                            id: request.id,
+                            message: SubmitError::Draining.to_string(),
+                        });
+                        continue;
+                    }
                     request.arrived_at = now;
                     // Deadline arrives relative; make it absolute in the
                     // loop's clock domain.
@@ -481,6 +586,21 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
                             let _ = tx.send(GenEvent::Cancelled { id });
                         }
                     }
+                }
+                Ok(Command::SetPolicy { kind, ack }) => {
+                    let r = sched
+                        .reconfigure(kind)
+                        .map(|()| sched.controller_label());
+                    if let Ok(l) = &r {
+                        label = l.clone();
+                    }
+                    let _ = ack.send(r);
+                }
+                Ok(Command::Drain { done }) => {
+                    // Service::drain set the flag before sending; set it
+                    // again for callers driving the channel directly.
+                    shared.draining.store(true, Ordering::SeqCst);
+                    drain_waiters.push(done);
                 }
                 Ok(Command::Shutdown) => {
                     shared.shutdown.store(true, Ordering::SeqCst);
@@ -502,7 +622,8 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
 
         // ---- 2. paused: keep the snapshot fresh, skip stepping ----
         if shared.paused.load(Ordering::SeqCst) {
-            publish(shared, sched);
+            resolve_drains(&mut drain_waiters, sched, &watchers);
+            publish(shared, sched, &label);
             std::thread::sleep(Duration::from_millis(1));
             continue;
         }
@@ -574,12 +695,17 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
             };
             let _ = tx.send(ev);
         }
-        publish(shared, sched);
+        resolve_drains(&mut drain_waiters, sched, &watchers);
+        publish(shared, sched, &label);
     }
     // Shutdown: fail submissions still queued in the control channel,
     // then end any open stream, so callers never hang.
     while let Ok(cmd) = commands.try_recv() {
         if let Command::Submit { request, events } = cmd {
+            let _ = events.send(GenEvent::Accepted {
+                id: request.id,
+                class: request.class,
+            });
             let _ = events.send(GenEvent::Error {
                 id: request.id,
                 message: "service shut down".into(),
@@ -592,7 +718,7 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
             message: "service shut down".into(),
         });
     }
-    publish(shared, sched);
+    publish(shared, sched, &label);
 }
 
 #[cfg(test)]
@@ -607,6 +733,23 @@ mod tests {
             .eta_tokens(100_000)
             .build()
             .unwrap()
+    }
+
+    /// Poll until the published snapshot satisfies `ok` (the loop
+    /// publishes once per iteration) or a 5 s deadline trips.
+    fn snapshot_when(service: &Service,
+                     ok: impl Fn(&ServiceSnapshot) -> bool)
+                     -> ServiceSnapshot {
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            let s = service.snapshot();
+            if ok(&s) {
+                return s;
+            }
+            assert!(std::time::Instant::now() < deadline,
+                    "snapshot never converged: {s:?}");
+            std::thread::sleep(Duration::from_millis(2));
+        }
     }
 
     #[test]
@@ -660,6 +803,41 @@ mod tests {
         let err = handle.wait().unwrap_err();
         assert!(err.to_string().contains("maximum sequence length"),
                 "{err}");
+    }
+
+    #[test]
+    fn reconfigure_swaps_controller_label() {
+        let service = sim_service();
+        let snap = snapshot_when(&service, |s| !s.controller.is_empty());
+        assert_eq!(snap.controller, "combined(min(alg1,alg2))");
+        let label = service
+            .reconfigure(PolicyKind::StaticFixed { batch: 4 })
+            .unwrap();
+        assert_eq!(label, "static-fixed:4");
+        let snap =
+            snapshot_when(&service, |s| s.controller == "static-fixed:4");
+        assert_eq!(snap.reconfigs, 1);
+        // Invalid policies are rejected without killing the loop.
+        assert!(service
+            .reconfigure(PolicyKind::StaticFixed { batch: 0 })
+            .is_err());
+        let c = service.submit(GenRequest::from_text("still up", 3)).unwrap();
+        assert_eq!(c.wait().unwrap().n_tokens, 3);
+        service.shutdown();
+    }
+
+    #[test]
+    fn drain_on_idle_service_resolves_and_rejects_submits() {
+        let service = sim_service();
+        service.drain().unwrap();
+        assert!(service.is_draining());
+        let err = service
+            .submit(GenRequest::from_text("too late", 2))
+            .unwrap_err();
+        assert_eq!(err.downcast_ref::<SubmitError>(),
+                   Some(&SubmitError::Draining));
+        assert!(snapshot_when(&service, |s| s.draining).draining);
+        service.shutdown();
     }
 
     #[test]

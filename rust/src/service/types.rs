@@ -1,10 +1,45 @@
 //! Typed request/response surface of the service API: what callers build
-//! ([`GenRequest`]) and what they stream back ([`GenEvent`] /
-//! [`Completion`]).
+//! ([`GenRequest`]), what they stream back ([`GenEvent`] /
+//! [`Completion`]), and the typed submission-rejection reasons
+//! ([`SubmitError`]).
 
 use crate::request::{PriorityClass, RequestId, SamplingParams};
 use crate::tokenizer;
 use anyhow::{bail, Result};
+use std::fmt;
+
+/// Why a submission was refused at the service boundary. Carried inside
+/// the `anyhow::Error` returned by `Service::submit` — downcast to tell a
+/// drain-window rejection apart from a validation failure:
+///
+/// ```ignore
+/// match service.submit(req) {
+///     Err(e) if e.downcast_ref::<SubmitError>()
+///         == Some(&SubmitError::Draining) => { /* back off / reroute */ }
+///     other => { /* … */ }
+/// }
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The service is draining: in-flight work finishes, new work is
+    /// refused.
+    Draining,
+    /// The service has shut down (or its worker died).
+    ShutDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::Draining => {
+                write!(f, "service is draining — new submissions rejected")
+            }
+            SubmitError::ShutDown => write!(f, "service is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A typed generation request, the one submission format for every entry
 /// point (embedded [`super::Service`], TCP server, examples, benches).
@@ -164,6 +199,16 @@ mod tests {
         let mut bad = GenRequest::new(vec![1], 1);
         bad.sampling.top_p = 2.0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn submit_error_downcasts_from_anyhow() {
+        let e = anyhow::Error::new(SubmitError::Draining);
+        assert_eq!(e.downcast_ref::<SubmitError>(),
+                   Some(&SubmitError::Draining));
+        assert!(e.to_string().contains("draining"), "{e}");
+        let e = anyhow::Error::new(SubmitError::ShutDown);
+        assert!(e.to_string().contains("shut down"), "{e}");
     }
 
     #[test]

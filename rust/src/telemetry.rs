@@ -9,7 +9,7 @@
 use crate::request::PriorityClass;
 use crate::util::stats::{SlidingWindow, Welford};
 
-/// Snapshot handed to a [`crate::batching::BatchPolicy`] each decision.
+/// Snapshot handed to a [`crate::batching::Controller`] each decision.
 #[derive(Debug, Clone)]
 pub struct Observation {
     /// Scheduler clock (seconds).
@@ -42,6 +42,33 @@ pub struct Observation {
     /// Waiting-queue depth per priority class, indexed by
     /// [`PriorityClass::rank`] (0 = Interactive).
     pub waiting_by_class: [u32; PriorityClass::COUNT],
+}
+
+impl Observation {
+    /// A synthetic observation for tests and benches — the one canonical
+    /// stand-in (previously duplicated field-by-field as `test_obs` in the
+    /// policy modules, where it drifted when fields were added). Length
+    /// moments are a 128-token mean with std 64 on both sides; tweak
+    /// individual fields after construction where a scenario needs more.
+    pub fn synthetic(eta_tokens: u64, used_tokens: u64, running_decode: u32,
+                     pending_prefill: u32) -> Self {
+        Observation {
+            now: 0.0,
+            eta_tokens,
+            used_tokens,
+            mean_in: 128.0,
+            mean_out: 128.0,
+            var_in: 64.0 * 64.0,
+            var_out: 64.0 * 64.0,
+            length_samples: 100,
+            recent_decode_latency: Some(0.04),
+            recent_decode_batch: Some(running_decode as f64),
+            running_decode,
+            pending_prefill,
+            waiting: 10,
+            waiting_by_class: [0, 10, 0],
+        }
+    }
 }
 
 /// Rolling telemetry store. One per scheduler.

@@ -6,7 +6,7 @@ use dynabatch::config::presets::*;
 use dynabatch::config::{PolicyKind, PreemptMode, SchedulerConfig};
 use dynabatch::driver::{run_loop, run_sim, SimScenario};
 use dynabatch::engine::sim::SimEngine;
-use dynabatch::engine::Engine;
+use dynabatch::engine::{Engine, StepOutcome, StepPlan};
 use dynabatch::metrics::RunMetrics;
 use dynabatch::request::Request;
 use dynabatch::scheduler::Scheduler;
@@ -201,6 +201,117 @@ fn run_metrics_compute_empty_run() {
                                 &[], 0.0, None);
     assert_eq!(m.throughput, 0.0);
     assert_eq!(m.n_requests, 0);
+}
+
+/// Records each step's planned prefill tokens so tests can hold the
+/// scheduler to the directive's chunk budget.
+struct RecordingEngine {
+    inner: SimEngine,
+    last_prefill_tokens: u64,
+}
+
+impl Engine for RecordingEngine {
+    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome> {
+        self.last_prefill_tokens = plan.prefill_tokens();
+        self.inner.step(plan)
+    }
+
+    fn release(&mut self, id: u64) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        self.inner.label()
+    }
+}
+
+/// Satellite: the scheduler honors `Directive.prefill_chunk` end to end —
+/// every fused step's prefill tokens fit the live budget, budgets shrink
+/// under SLA pressure and grow when the engine has headroom.
+#[test]
+fn chunked_prefill_directives_adapt_and_are_honored() {
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    // Returns the drained scheduler for directive-log inspection.
+    let run = |d_sla: f64| {
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::MemoryAware,
+            chunk_tokens: Some(64),
+            adaptive_chunk: true,
+            d_sla: Some(d_sla),
+            interval_steps: 1, // re-decide every step: dense directive log
+            ..SchedulerConfig::default()
+        };
+        let mut engine = RecordingEngine {
+            inner: SimEngine::new(&model, &hardware),
+            last_prefill_tokens: 0,
+        };
+        let mut sched = Scheduler::new(cfg, 200_000, 0, 256.0, 64.0);
+        let mut clock = VirtualClock::new();
+        for i in 0..40 {
+            sched.submit(Request::new(i, 256, 64, 0.0));
+        }
+        let mut guard = 0;
+        while sched.has_work() && guard < 100_000 {
+            match sched.step(&mut engine, clock.now()).unwrap() {
+                Some(r) => {
+                    // The step that just ran was planned under the
+                    // directive decided at its top.
+                    let budget = sched
+                        .current_directive()
+                        .prefill_chunk
+                        .expect("fused mode carries a chunk budget")
+                        .max(1) as u64;
+                    assert!(
+                        engine.last_prefill_tokens <= budget,
+                        "step moved {} prefill tokens over budget {budget}",
+                        engine.last_prefill_tokens
+                    );
+                    clock.advance(r.elapsed);
+                }
+                None => break,
+            }
+            guard += 1;
+        }
+        assert_eq!(sched.finished().len(), 40);
+        sched.kv.check_invariants().unwrap();
+        sched
+    };
+
+    // Impossible SLA (1 ms): every decode sample is over budget, the
+    // adaptive controller must shrink the chunk below its base.
+    let tight = run(0.001);
+    let budgets = |s: &Scheduler| -> Vec<u32> {
+        s.directive_log
+            .iter()
+            .filter_map(|(_, d)| d.prefill_chunk)
+            .collect()
+    };
+    let tb = budgets(&tight);
+    assert!(!tb.is_empty());
+    assert!(
+        *tb.last().unwrap() < 64,
+        "budget must shrink under pressure: {:?}",
+        &tb[tb.len().saturating_sub(5)..]
+    );
+
+    // Unreachable SLA ceiling (10 s): constant headroom, the budget must
+    // grow past its base.
+    let loose = run(10.0);
+    let lb = budgets(&loose);
+    assert!(
+        *lb.iter().max().unwrap() > 64,
+        "budget must grow with headroom: max {:?}",
+        lb.iter().max()
+    );
 }
 
 #[test]

@@ -181,6 +181,73 @@ fn bucket_migration_preserves_generation() {
     assert_eq!(got, want, "migration corrupted the KV stream");
 }
 
+/// Chunked-prefill directives against the real engine: the scheduler
+/// splits prompts per `Directive.prefill_chunk`, and the engine's
+/// slot/bucket accounting (slot pinning on first chunk, migrations,
+/// shrink on release) must keep every stream byte-identical to a solo
+/// whole-prompt run.
+#[test]
+fn scheduler_over_pjrt_honors_chunked_prefill_directives() {
+    let Some(dir) = artifacts_dir() else { return };
+    // Reference: whole-prompt prefill, solo.
+    let prompts = ["chunked prefill probe", "second stream!", "third"];
+    let mut solo = PjrtEngine::load(&dir).unwrap();
+    let mut want = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        want.push(generate(&mut solo, i as u64, p, 5));
+        solo.release(i as u64);
+    }
+
+    // Scheduler path with a 4-token chunk budget: every prompt needs
+    // several prefill chunks before its first token.
+    let mut engine = PjrtEngine::load(&dir).unwrap();
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::MemoryAware,
+        b_max: engine.max_batch(),
+        chunk_tokens: Some(4),
+        ..SchedulerConfig::default()
+    };
+    let eta = engine.max_batch() as u64 * engine.max_seq() as u64;
+    let mut sched = Scheduler::new(cfg, eta, 0, 16.0, 8.0);
+    for (i, p) in prompts.iter().enumerate() {
+        sched.submit(Request::with_tokens(
+            i as u64,
+            tokenizer::encode(p),
+            5,
+            0.0,
+        ));
+    }
+    let mut now = 0.0;
+    let mut guard = 0;
+    while sched.has_work() && guard < 1000 {
+        if let Some(r) = sched.step(&mut engine, now).unwrap() {
+            now += r.elapsed;
+        }
+        guard += 1;
+    }
+    assert_eq!(sched.finished().len(), 3);
+    for (i, p) in prompts.iter().enumerate() {
+        let r = sched
+            .finished()
+            .iter()
+            .find(|r| r.id == i as u64)
+            .unwrap();
+        assert_eq!(
+            r.output_tokens, want[i],
+            "chunked prefill diverged from solo run for {p:?}"
+        );
+    }
+    // The directive stream drove real chunking: more prefill executions
+    // than prompts (each prompt split into >= 2 chunks of <= 4 tokens).
+    assert!(engine.stat_prefill_chunks > prompts.len() as u64,
+            "chunks={}", engine.stat_prefill_chunks);
+    // Slot/bucket accounting: all slots released, bucket shrunk back to
+    // its smallest compiled size, and KV balanced.
+    assert_eq!(engine.bucket(), 1, "release must shrink the bucket");
+    sched.kv.check_invariants().unwrap();
+    assert_eq!(sched.kv.used_tokens(), 0);
+}
+
 #[test]
 fn scheduler_over_pjrt_serves_batch() {
     // The full L3+runtime path in-process: scheduler drives the real

@@ -1,8 +1,9 @@
 //! Integration tests for the first-class service API and the v2 TCP
 //! protocol over it: end-to-end submit → stream → done, priority-class
-//! admission under a constrained b_t, and cancellation that frees KV
-//! blocks mid-flight (asserted via the KvBlockManager accounting the
-//! service snapshot exposes).
+//! admission under a constrained b_t, cancellation that frees KV blocks
+//! mid-flight (asserted via the KvBlockManager accounting the service
+//! snapshot exposes), and the live control plane — `set_policy` hot-swaps
+//! mid-stream, `stats`, and `drain`.
 
 use dynabatch::config::presets::*;
 use dynabatch::config::{PolicyKind, SchedulerConfig};
@@ -14,7 +15,10 @@ use dynabatch::server::client::{Client, ClientEvent, GenOptions};
 use dynabatch::server::serve;
 use dynabatch::service::{
     GenEvent, GenRequest, Service, ServiceBuilder, ServiceSnapshot,
+    SubmitError,
 };
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Simulated engine with a real wall-clock cost per step, so mid-flight
@@ -258,6 +262,74 @@ fn deadline_shedding_surfaces_as_stream_error() {
     service.shutdown();
 }
 
+// ---------------------------------------------------------- control plane
+
+#[test]
+fn drain_resolves_after_inflight_terminal_and_rejects_new() {
+    let service = ServiceBuilder::new(tiny_real(), cpu_host())
+        .policy(PolicyKind::MemoryAware)
+        .eta_tokens(100_000)
+        .engine(move || Ok(Box::new(SlowEngine::new(3)) as Box<dyn Engine>))
+        .build()
+        .unwrap();
+    let service = Arc::new(service);
+    // ~150 decode steps × 3 ms ≈ 450 ms of in-flight runway.
+    let mut handle = service
+        .submit(GenRequest::from_text("occupier", 150))
+        .unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut seen = 0;
+    while seen < 2 {
+        assert!(Instant::now() < deadline, "no tokens streamed");
+        match handle.next_event_timeout(Duration::from_millis(100)) {
+            Some(GenEvent::Token { .. }) => seen += 1,
+            Some(GenEvent::Accepted { .. }) | None => {}
+            Some(other) => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    let drained = Arc::new(AtomicBool::new(false));
+    let drainer = {
+        let service = service.clone();
+        let drained = drained.clone();
+        std::thread::spawn(move || {
+            let r = service.drain();
+            drained.store(true, Ordering::SeqCst);
+            r
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !service.is_draining() {
+        assert!(Instant::now() < deadline, "drain flag never set");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // New work is refused with the typed error while draining.
+    let err = service
+        .submit(GenRequest::from_text("too late", 4))
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<SubmitError>(),
+               Some(&SubmitError::Draining));
+    // The occupier is still mid-flight, so the drain cannot have
+    // resolved yet.
+    assert!(!drained.load(Ordering::SeqCst),
+            "drain resolved with a request still in flight");
+
+    // The in-flight request runs to its full budget — not dropped.
+    let c = handle.wait().unwrap();
+    assert_eq!(c.n_tokens, 150);
+    drainer.join().unwrap().unwrap();
+    assert!(drained.load(Ordering::SeqCst));
+    let snap = poll_snapshot(
+        &service,
+        |s| s.draining && s.finished >= 1 && s.kv_used_tokens == 0,
+        "post-drain snapshot",
+    );
+    assert_eq!(snap.running, 0);
+    assert_eq!(snap.waiting, 0);
+    service.shutdown();
+}
+
 // ------------------------------------------------------------------- TCP
 
 #[test]
@@ -332,6 +404,165 @@ fn tcp_v1_generate_unchanged_and_v2_cancel_roundtrip() {
         "server-side KV release",
     );
     assert_eq!(snap.kv_free_blocks, snap.kv_total_blocks);
+    server.shutdown();
+}
+
+/// Acceptance: hot-swap StaticFixed → Combined on a live service
+/// mid-stream via the v2 `set_policy` op. (a) the in-flight request is
+/// not dropped — it streams to its full budget; (b) the next `stats`
+/// snapshot reports the new controller label and a changed b_t.
+#[test]
+fn tcp_set_policy_hot_swaps_mid_stream() {
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: 7 },
+        d_sla: Some(0.05),
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+    let server = serve(
+        move || Ok(Box::new(SlowEngine::new(2)) as Box<dyn Engine>),
+        sched,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+
+    // One long-running stream: ~200 steps × 2 ms of runway.
+    let id = c.submit("stays alive across the swap", 200,
+                      &GenOptions::default()).unwrap();
+    let mut tokens = 0u32;
+    while tokens < 2 {
+        match c.next_event().unwrap() {
+            ClientEvent::Token { id: i, .. } => {
+                assert_eq!(i, id);
+                tokens += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    // Pre-swap stats: the fixed controller and its b_t.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = c.stats().unwrap();
+        if s.b_t == 7 {
+            assert_eq!(s.controller, "static-fixed:7");
+            assert_eq!(s.reconfigs, 0);
+            break;
+        }
+        assert!(Instant::now() < deadline, "b_t never reached 7: {s:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    // Hot-swap. The returned label is the new controller's.
+    let label = c.set_policy("combined").unwrap();
+    assert_eq!(label, "combined(min(alg1,alg2))");
+    // Unknown / invalid policies are rejected without killing anything.
+    assert!(c.set_policy("bogus").is_err());
+    assert!(c.set_policy("static-fixed:0").is_err());
+
+    // (b) the next stats report the new controller and a changed b_t
+    // (min(alg1,alg2) with one running decode settles at b_min = 1).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let stats = loop {
+        let s = c.stats().unwrap();
+        if s.controller == "combined(min(alg1,alg2))" && s.b_t != 7 {
+            break s;
+        }
+        assert!(Instant::now() < deadline, "swap never observed: {s:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    };
+    assert_eq!(stats.reconfigs, 1);
+
+    // (a) the stream survives the swap and completes its full budget.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "stream stalled after swap");
+        match c.next_event().unwrap() {
+            ClientEvent::Token { id: i, .. } => {
+                assert_eq!(i, id);
+                tokens += 1;
+            }
+            ClientEvent::Done { id: i, n_tokens, .. } => {
+                assert_eq!(i, id);
+                assert_eq!(n_tokens, 200, "request lost tokens in swap");
+                assert_eq!(tokens, 200, "every token was streamed");
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    server.shutdown();
+}
+
+/// Acceptance: `drain` stops admissions (typed connection error on any
+/// connection), keeps `stats` live meanwhile, and announces `drained`
+/// only after every in-flight request reached a terminal event.
+#[test]
+fn tcp_drain_rejects_new_work_and_resolves() {
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::MemoryAware,
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+    let server = serve(
+        move || Ok(Box::new(SlowEngine::new(2)) as Box<dyn Engine>),
+        sched,
+        "127.0.0.1:0",
+    )
+    .unwrap();
+    let addr = server.local_addr.to_string();
+    let mut c1 = Client::connect(&addr).unwrap();
+
+    let id = c1.submit("drain me gently", 100, &GenOptions::default())
+        .unwrap();
+    let mut tokens = 0u32;
+    while tokens < 2 {
+        match c1.next_event().unwrap() {
+            ClientEvent::Token { id: i, .. } => {
+                assert_eq!(i, id);
+                tokens += 1;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    // Drain from a second connection (blocks until resolved).
+    let drainer = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c2 = Client::connect(&addr).unwrap();
+            c2.drain()
+        })
+    };
+    // Admissions stop on every connection while the drain is pending.
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !c1.stats().unwrap().draining {
+        assert!(Instant::now() < deadline, "draining flag never seen");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let err = c1.submit("rejected", 4, &GenOptions::default()).unwrap_err();
+    assert!(err.to_string().contains("draining"), "{err}");
+
+    // The in-flight stream still completes its full budget.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "stream stalled during drain");
+        match c1.next_event().unwrap() {
+            ClientEvent::Token { id: i, .. } => assert_eq!(i, id),
+            ClientEvent::Done { id: i, n_tokens, .. } => {
+                assert_eq!(i, id);
+                assert_eq!(n_tokens, 100);
+                break;
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    drainer.join().unwrap().unwrap();
+    let stats = c1.stats().unwrap();
+    assert!(stats.draining);
+    assert_eq!(stats.running, 0);
+    assert_eq!(stats.kv_used_tokens, 0);
+    assert!(stats.finished >= 1);
     server.shutdown();
 }
 
