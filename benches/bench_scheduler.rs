@@ -1,0 +1,33 @@
+//! Scheduler hot-loop benchmark: steps/sec of the control loop at
+//! serving batch sizes, current slab/phase-indexed layout vs the
+//! preserved pre-overhaul baseline (`dynabatch::benchsched::legacy`).
+//!
+//! `DYNABATCH_BENCH_QUICK=1` shrinks the workload for CI smoke runs; the
+//! `dynabatch bench-sched` subcommand emits the same measurements as
+//! `BENCH_scheduler.json` for the checked-in perf trajectory.
+use dynabatch::benchkit::Table;
+use dynabatch::benchsched::bench_point;
+
+fn main() {
+    let quick = std::env::var("DYNABATCH_BENCH_QUICK").is_ok();
+    let n = if quick { 500 } else { 10_000 };
+    let mut t = Table::new(
+        &format!("scheduler hot loop — {n} requests, sim engine"),
+        &["b_t", "steps", "steps/s", "ns/step", "legacy steps/s",
+          "speedup"],
+    );
+    for b in [32u32, 256, 1024] {
+        let p = bench_point(b, n);
+        assert_eq!(p.finished, n, "b={b}: run must drain");
+        assert_eq!(p.legacy_finished, n, "b={b}: legacy must drain");
+        t.row(vec![
+            p.b_t.to_string(),
+            p.steps.to_string(),
+            format!("{:.0}", p.steps_per_sec()),
+            format!("{:.0}", p.ns_per_step()),
+            format!("{:.0}", p.legacy_steps_per_sec()),
+            format!("{:.1}x", p.speedup()),
+        ]);
+    }
+    t.print();
+}

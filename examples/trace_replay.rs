@@ -41,6 +41,7 @@ fn main() -> anyhow::Result<()> {
         let mut sched = dynabatch::scheduler::Scheduler::new(
             SchedulerConfig { policy, ..SchedulerConfig::default() },
             eta, 0, 128.0, 150.0);
+        sched.retain_full_traces(); // exact percentiles for the diff
         let mut clock = dynabatch::sim::VirtualClock::new();
         dynabatch::driver::run_loop(&mut sched, &mut engine, &mut clock,
                                     replayed.clone(), 10_000_000)?;
@@ -48,7 +49,8 @@ fn main() -> anyhow::Result<()> {
         let makespan = clock.now();
         let m = dynabatch::metrics::RunMetrics::compute(
             sched.controller_label(), sched.finished(), &sched.stats,
-            &sched.decode_latencies, makespan, engine.utilization());
+            &sched.decode_latencies.to_vec(), makespan,
+            engine.utilization());
         println!("  {:28} {:6.0} tok/s, preempts {:4}, tbt p95 {:5.1} ms",
                  m.policy, m.throughput, m.preemptions, m.tbt_p95 * 1e3);
     }

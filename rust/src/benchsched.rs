@@ -1,0 +1,543 @@
+//! Scheduler hot-loop benchmark: the perf regression record behind
+//! `dynabatch bench-sched` and `benches/bench_scheduler.rs`.
+//!
+//! Measures wall-clock steps/sec of the control loop itself (the engine
+//! is the virtual-time simulator, so engine cost is ~zero and the number
+//! isolates scheduler overhead — the quantity the paper requires to be
+//! negligible for "full compatibility with existing inference
+//! infrastructure").
+//!
+//! [`legacy`] preserves the pre-overhaul hot loop — `BTreeMap` request
+//! and KV-table stores, filter-scan `observe`, `retain` removals,
+//! per-step `Vec` allocations — so the speedup of the slab /
+//! phase-indexed / O(1)-accounting layout is measured, not asserted. Both
+//! loops run the identical algorithm over the identical workload and
+//! must agree on step and completion counts; the report includes both so
+//! any divergence is visible in `BENCH_scheduler.json`.
+
+use crate::config::presets::{node_for, pangu_7b};
+use crate::config::{PolicyKind, SchedulerConfig};
+use crate::engine::sim::SimEngine;
+use crate::request::Request;
+use crate::scheduler::Scheduler;
+use crate::sim::{Clock, VirtualClock};
+use crate::util::json::Json;
+use std::time::Instant;
+
+/// One measured batch point.
+#[derive(Debug, Clone)]
+pub struct BenchPoint {
+    pub b_t: u32,
+    pub steps: u64,
+    pub finished: usize,
+    pub wall_s: f64,
+    pub legacy_steps: u64,
+    pub legacy_finished: usize,
+    pub legacy_wall_s: f64,
+}
+
+impl BenchPoint {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.wall_s.max(1e-12)
+    }
+
+    pub fn ns_per_step(&self) -> f64 {
+        self.wall_s * 1e9 / self.steps.max(1) as f64
+    }
+
+    pub fn legacy_steps_per_sec(&self) -> f64 {
+        self.legacy_steps as f64 / self.legacy_wall_s.max(1e-12)
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.steps_per_sec() / self.legacy_steps_per_sec().max(1e-12)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("b_t", Json::from(self.b_t as u64)),
+            ("steps", Json::from(self.steps)),
+            ("finished", Json::from(self.finished)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("steps_per_sec", Json::Num(self.steps_per_sec())),
+            ("ns_per_step", Json::Num(self.ns_per_step())),
+            ("legacy_steps", Json::from(self.legacy_steps)),
+            ("legacy_finished", Json::from(self.legacy_finished)),
+            ("legacy_wall_s", Json::Num(self.legacy_wall_s)),
+            (
+                "legacy_steps_per_sec",
+                Json::Num(self.legacy_steps_per_sec()),
+            ),
+            ("speedup", Json::Num(self.speedup())),
+        ])
+    }
+}
+
+/// The benchmark scenario: `n` identical requests (128-token prompts, 64
+/// output tokens) offered all at once under `StaticFixed{b}` with η far
+/// above demand — a pure hot-loop workload with zero preemption, so both
+/// implementations execute the identical step sequence.
+fn workload(n: usize) -> Vec<Request> {
+    (0..n as u64).map(|i| Request::new(i, 128, 64, 0.0)).collect()
+}
+
+fn bench_cfg(b: u32) -> SchedulerConfig {
+    SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: b },
+        b_max: b.max(256),
+        ..SchedulerConfig::default()
+    }
+}
+
+const ETA_TOKENS: u64 = 100_000_000;
+
+/// Drive the current (slab / phase-indexed) scheduler to completion.
+pub fn run_current(b: u32, n: usize) -> (u64, usize, f64) {
+    let m = pangu_7b();
+    let hw = node_for(&m);
+    let mut engine = SimEngine::new(&m, &hw);
+    let mut sched =
+        Scheduler::new(bench_cfg(b), ETA_TOKENS, 0, 128.0, 64.0);
+    for r in workload(n) {
+        sched.submit(r);
+    }
+    let mut clock = VirtualClock::new();
+    let t0 = Instant::now();
+    while sched.has_work() {
+        match sched.step(&mut engine, clock.now()).unwrap() {
+            Some(elapsed) => clock.advance(elapsed),
+            None => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (sched.stats.steps, sched.finished().len(), wall)
+}
+
+/// Drive the preserved pre-overhaul loop to completion.
+pub fn run_legacy(b: u32, n: usize) -> (u64, usize, f64) {
+    let m = pangu_7b();
+    let hw = node_for(&m);
+    let mut engine = SimEngine::new(&m, &hw);
+    let mut sched = legacy::LegacySched::new(bench_cfg(b), ETA_TOKENS);
+    for r in workload(n) {
+        sched.submit(r);
+    }
+    let mut clock = VirtualClock::new();
+    let t0 = Instant::now();
+    while sched.has_work() {
+        match sched.step(&mut engine, clock.now()) {
+            Some(elapsed) => clock.advance(elapsed),
+            None => break,
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    (sched.steps, sched.finished.len(), wall)
+}
+
+/// Measure one batch point, current vs legacy, same workload.
+pub fn bench_point(b: u32, n: usize) -> BenchPoint {
+    let (steps, finished, wall_s) = run_current(b, n);
+    let (legacy_steps, legacy_finished, legacy_wall_s) = run_legacy(b, n);
+    BenchPoint {
+        b_t: b,
+        steps,
+        finished,
+        wall_s,
+        legacy_steps,
+        legacy_finished,
+        legacy_wall_s,
+    }
+}
+
+/// Full report over the standard batch points, as checked into
+/// `BENCH_scheduler.json`.
+pub fn report(batch_points: &[u32], n: usize, quick: bool) -> Json {
+    let points: Vec<Json> = batch_points
+        .iter()
+        .map(|&b| bench_point(b, n).to_json())
+        .collect();
+    Json::obj(vec![
+        ("bench", Json::from("scheduler-hot-loop")),
+        ("schema", Json::from(1u64)),
+        ("quick", Json::from(quick)),
+        ("requests", Json::from(n)),
+        ("prompt_tokens", Json::from(128u64)),
+        ("output_tokens", Json::from(64u64)),
+        (
+            "engine",
+            Json::from("sim(pangu-7b) — virtual time; wall clock \
+                        measures scheduler overhead only"),
+        ),
+        (
+            "baseline",
+            Json::from("legacy module in rust/src/benchsched.rs — the \
+                        pre-overhaul BTreeMap/scan/alloc hot loop, run \
+                        on the same workload in the same process"),
+        ),
+        (
+            "alloc_free_steady_state",
+            Json::from("asserted by rust/tests/test_alloc_free.rs \
+                        (counting global allocator: 0 allocations over \
+                        256 steady-state decode steps)"),
+        ),
+        ("points", Json::Arr(points)),
+    ])
+}
+
+/// The pre-overhaul scheduler hot loop, preserved verbatim in behavior
+/// (for the segregated-mode, no-deadline, no-preemption benchmark
+/// scenario) as the measured baseline:
+///
+/// * requests in a `BTreeMap<RequestId, Request>` — every per-step
+///   lookup is an ordered-map walk;
+/// * KV block tables in a `BTreeMap` with `used_tokens()` recomputed by
+///   a full walk (called twice per step, exactly like the old manager);
+/// * `observe()` filter-scans `running_order` twice with per-id map
+///   lookups;
+/// * `shed_expired` re-reads every waiting deadline every step;
+/// * planning collects fresh `Vec`s per step and the engine outcome is
+///   freshly allocated (`step_owned`);
+/// * `finish` removes from `running_order` via O(n) `retain`.
+pub mod legacy {
+    use crate::batching::{
+        build_controller, AdmissionMode, Controller, Directive,
+    };
+    use crate::config::SchedulerConfig;
+    use crate::engine::{DecodeWork, Engine, StepPlan};
+    use crate::request::{Phase, PriorityClass, Request, RequestId};
+    use crate::telemetry::Telemetry;
+    use std::collections::{BTreeMap, VecDeque};
+
+    /// The old `BTreeMap`-backed block-table accounting (token walk on
+    /// every `used_tokens` call).
+    struct LegacyKv {
+        block_tokens: u32,
+        total_blocks: usize,
+        free_blocks: usize,
+        tables: BTreeMap<RequestId, (usize, u32)>, // blocks, tokens
+    }
+
+    impl LegacyKv {
+        fn new(capacity_tokens: u64, block_tokens: u32) -> Self {
+            let total = (capacity_tokens / block_tokens as u64) as usize;
+            LegacyKv {
+                block_tokens,
+                total_blocks: total,
+                free_blocks: total,
+                tables: BTreeMap::new(),
+            }
+        }
+
+        fn capacity_tokens(&self) -> u64 {
+            self.total_blocks as u64 * self.block_tokens as u64
+        }
+
+        fn used_tokens(&self) -> u64 {
+            self.tables.values().map(|(_, t)| *t as u64).sum()
+        }
+
+        fn blocks_for(&self, tokens: u32) -> usize {
+            tokens.div_ceil(self.block_tokens) as usize
+        }
+
+        fn can_grow(&self, id: RequestId, tokens: u32) -> bool {
+            let (blocks, cur) =
+                self.tables.get(&id).copied().unwrap_or((0, 0));
+            self.blocks_for(cur + tokens) - blocks <= self.free_blocks
+        }
+
+        fn allocate(&mut self, id: RequestId, tokens: u32) {
+            let need = self.blocks_for(tokens);
+            assert!(need <= self.free_blocks, "bench scenario fits");
+            self.free_blocks -= need;
+            self.tables.insert(id, (need, tokens));
+        }
+
+        fn grow(&mut self, id: RequestId, tokens: u32) {
+            let free = self.free_blocks;
+            let block_tokens = self.block_tokens;
+            let e = self.tables.get_mut(&id).expect("legacy grow");
+            let new_tokens = e.1 + tokens;
+            let need =
+                new_tokens.div_ceil(block_tokens) as usize;
+            let extra = need.saturating_sub(e.0);
+            assert!(extra <= free, "bench scenario fits");
+            e.0 = need;
+            e.1 = new_tokens;
+            self.free_blocks -= extra;
+        }
+
+        fn free(&mut self, id: RequestId) {
+            if let Some((blocks, _)) = self.tables.remove(&id) {
+                self.free_blocks += blocks;
+            }
+        }
+    }
+
+    pub struct LegacySched {
+        cfg: SchedulerConfig,
+        controller: Box<dyn Controller>,
+        directive: Directive,
+        kv: LegacyKv,
+        telemetry: Telemetry,
+        waiting: [VecDeque<RequestId>; PriorityClass::COUNT],
+        wrr_credit: [i64; PriorityClass::COUNT],
+        running_order: Vec<RequestId>,
+        requests: BTreeMap<RequestId, Request>,
+        pub finished: Vec<Request>,
+        b_t: u32,
+        steps_since_decision: u32,
+        pub steps: u64,
+    }
+
+    impl LegacySched {
+        pub fn new(cfg: SchedulerConfig, eta_tokens: u64) -> Self {
+            let controller = build_controller(&cfg);
+            let telemetry =
+                Telemetry::new(128.0, 64.0, cfg.latency_window);
+            let kv = LegacyKv::new(eta_tokens, cfg.block_tokens);
+            let b0 = cfg.b_min;
+            LegacySched {
+                directive: Directive {
+                    prefill_chunk: cfg.chunk_tokens,
+                    ..Directive::gated(b0)
+                },
+                cfg,
+                controller,
+                kv,
+                telemetry,
+                waiting: std::array::from_fn(|_| VecDeque::new()),
+                wrr_credit: [0; PriorityClass::COUNT],
+                running_order: Vec::new(),
+                requests: BTreeMap::new(),
+                finished: Vec::new(),
+                b_t: b0,
+                steps_since_decision: u32::MAX,
+                steps: 0,
+            }
+        }
+
+        pub fn submit(&mut self, req: Request) {
+            self.telemetry.record_prompt(req.prompt_len);
+            self.waiting[req.class.rank()].push_back(req.id);
+            self.requests.insert(req.id, req);
+        }
+
+        pub fn has_work(&self) -> bool {
+            self.waiting.iter().any(|q| !q.is_empty())
+                || !self.running_order.is_empty()
+        }
+
+        fn pick_waiting_class(&self) -> Option<usize> {
+            let mut best: Option<(usize, i64)> = None;
+            for c in PriorityClass::ALL {
+                let i = c.rank();
+                if self.waiting[i].is_empty() {
+                    continue;
+                }
+                let eff = self.wrr_credit[i] + c.weight() as i64;
+                if best.map(|(_, b)| eff > b).unwrap_or(true) {
+                    best = Some((i, eff));
+                }
+            }
+            best.map(|(i, _)| i)
+        }
+
+        fn commit_pick(&mut self, chosen: usize) {
+            let mut total = 0i64;
+            for c in PriorityClass::ALL {
+                let i = c.rank();
+                if !self.waiting[i].is_empty() {
+                    self.wrr_credit[i] += c.weight() as i64;
+                    total += c.weight() as i64;
+                }
+            }
+            self.wrr_credit[chosen] -= total;
+        }
+
+        /// One iteration of the old hot loop (segregated planning; the
+        /// benchmark scenario never preempts, swaps, cancels or sheds —
+        /// but the old code's per-step *scans* for those cases run).
+        pub fn step<E: Engine + ?Sized>(&mut self, engine: &mut E,
+                                        now: f64) -> Option<f64> {
+            // Old shed pass: re-reads every waiting deadline, per step.
+            for q in self.waiting.iter() {
+                if q.iter().any(|id| {
+                    self.requests[id].deadline.is_some_and(|d| d < now)
+                }) {
+                    unreachable!("bench scenario has no deadlines");
+                }
+            }
+            // Old observe: two filter-scans over running_order with
+            // per-id map lookups, plus the O(n) KV token walk.
+            let pending_prefill = self
+                .waiting
+                .iter()
+                .map(|q| q.len())
+                .sum::<usize>()
+                + self
+                    .running_order
+                    .iter()
+                    .filter(|id| !self.requests[id].prefill_done())
+                    .count();
+            let running_decode = self
+                .running_order
+                .iter()
+                .filter(|id| self.requests[id].prefill_done())
+                .count();
+            let obs = self.telemetry.observe(
+                now,
+                self.kv.capacity_tokens(),
+                self.kv.used_tokens(),
+                running_decode as u32,
+                pending_prefill as u32,
+                std::array::from_fn(|i| self.waiting[i].len() as u32),
+            );
+            if self.steps_since_decision >= self.cfg.interval_steps {
+                let mut d = self.controller.decide(&obs);
+                d.target_batch =
+                    d.target_batch.min(engine.max_batch()).max(1);
+                self.b_t = d.target_batch;
+                self.directive = d;
+                self.steps_since_decision = 0;
+            } else {
+                self.steps_since_decision += 1;
+            }
+
+            // Admission (fresh arrivals only; bench has no resumes).
+            let cap = match self.directive.admission {
+                AdmissionMode::Gated => self.b_t,
+                AdmissionMode::Greedy { cap } => cap,
+            }
+            .min(engine.max_batch());
+            loop {
+                if self.running_order.len() as u32 >= cap {
+                    break;
+                }
+                let Some(c) = self.pick_waiting_class() else { break };
+                let id = *self.waiting[c].front().expect("non-empty");
+                let prompt_len = self.requests[&id].prompt_len;
+                if !self.kv.can_grow(id, prompt_len) {
+                    break;
+                }
+                self.kv.allocate(id, prompt_len);
+                let r = self.requests.get_mut(&id).unwrap();
+                r.phase = Phase::Prefill;
+                if r.prefill_done() {
+                    r.phase = Phase::Decode;
+                }
+                self.commit_pick(c);
+                self.waiting[c].pop_front();
+                self.running_order.push(id);
+            }
+
+            // Old planning: fresh Vec collections every step.
+            let mut plan = StepPlan::default();
+            let prefill_ids: Vec<RequestId> = self
+                .running_order
+                .iter()
+                .copied()
+                .filter(|id| !self.requests[id].prefill_done())
+                .collect();
+            if !prefill_ids.is_empty() {
+                for id in prefill_ids {
+                    let r = &self.requests[&id];
+                    let remaining = r.prompt_len - r.prefilled;
+                    plan.push_prefill(id, &[], remaining, r.prefilled,
+                                      true);
+                }
+            } else {
+                let decoding: Vec<RequestId> = self
+                    .running_order
+                    .iter()
+                    .copied()
+                    .filter(|id| {
+                        let r = &self.requests[id];
+                        r.prefill_done() && r.phase == Phase::Decode
+                    })
+                    .collect();
+                for id in decoding {
+                    assert!(self.kv.can_grow(id, 1), "bench fits");
+                    self.kv.grow(id, 1);
+                    let r = &self.requests[&id];
+                    plan.decodes.push(DecodeWork {
+                        id,
+                        position: r.prefilled + r.generated,
+                    });
+                }
+            }
+            if plan.is_empty() {
+                return None;
+            }
+
+            // Old execution: a fresh outcome allocation per step.
+            let outcome = engine.step_owned(&plan).expect("sim engine");
+            let end = now + outcome.elapsed;
+            self.steps += 1;
+            if !plan.decodes.is_empty() {
+                self.telemetry.record_decode_step(
+                    outcome.elapsed,
+                    plan.decodes.len() as u32,
+                );
+            }
+            for p in &plan.prefills {
+                let r = self.requests.get_mut(&p.id).expect("prefill req");
+                r.prefilled += p.n_tokens;
+                if r.prefill_done() {
+                    r.phase = Phase::Decode;
+                }
+            }
+            for (id, tok) in &outcome.tokens {
+                let r =
+                    self.requests.get_mut(id).expect("token for known req");
+                if r.phase == Phase::Finished {
+                    continue;
+                }
+                if !r.prompt_tokens.is_empty() {
+                    r.output_tokens.push(*tok);
+                }
+                if r.record_token(end) {
+                    // Old finish: map remove + O(n) retain.
+                    let r = self.requests.remove(id).expect("finishing");
+                    self.telemetry.record_output(r.generated);
+                    self.kv.free(*id);
+                    engine.release(*id);
+                    self.running_order.retain(|x| x != id);
+                    self.finished.push(r);
+                }
+            }
+            // Old memory gauge: second KV token walk this step.
+            let _ = self.kv.used_tokens();
+            Some(outcome.elapsed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The legacy baseline and the current scheduler execute the same
+    /// algorithm: identical step and completion counts on the shared
+    /// benchmark workload (keeps the speedup comparison honest).
+    #[test]
+    fn legacy_and_current_agree_on_work_done() {
+        for b in [4u32, 16] {
+            let (steps, finished, _) = run_current(b, 64);
+            let (lsteps, lfinished, _) = run_legacy(b, 64);
+            assert_eq!(finished, 64, "b={b}");
+            assert_eq!(lfinished, 64, "b={b}");
+            assert_eq!(steps, lsteps, "b={b}: step counts diverged");
+        }
+    }
+
+    #[test]
+    fn report_shape() {
+        let j = report(&[4], 32, true);
+        let s = j.to_string();
+        assert!(s.contains("scheduler-hot-loop"));
+        assert!(s.contains("steps_per_sec"));
+        assert!(s.contains("speedup"));
+        crate::util::json::Json::parse(&s).unwrap();
+    }
+}

@@ -99,7 +99,7 @@ pub fn run_loop_switched<E: Engine + ?Sized, C: Clock>(
             continue;
         }
         match sched.step(engine, clock.now())? {
-            Some(report) => clock.advance(report.elapsed),
+            Some(elapsed) => clock.advance(elapsed),
             None => {
                 // Work exists but nothing runnable (e.g. queue gated behind
                 // b_t while batch drains): advance to the next event.
@@ -136,6 +136,9 @@ pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
         scenario.workload.prompt.mean(),
         scenario.workload.output.mean(),
     );
+    // Experiment path: keep exact full-run traces (the serve path keeps
+    // the bounded rings instead).
+    sched.retain_full_traces();
     sched.telemetry.set_prior_variances(
         scenario.workload.prompt.variance(),
         scenario.workload.output.variance(),
@@ -153,7 +156,7 @@ pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
         sched.controller_label(),
         sched.finished(),
         &sched.stats,
-        &sched.decode_latencies,
+        &sched.decode_latencies.to_vec(),
         makespan,
         engine.utilization(),
     ))
@@ -351,7 +354,7 @@ mod tests {
             sched.controller_label(),
             sched.finished(),
             &sched.stats,
-            &sched.decode_latencies,
+            &sched.decode_latencies.to_vec(),
             clock.now(),
             engine.utilization(),
         );

@@ -5,6 +5,20 @@
 //!   model (how the paper-scale models are evaluated).
 //! * [`pjrt::PjrtEngine`] — the real path: AOT-compiled TinyGPT executed
 //!   through the PJRT CPU client with a device-resident KV state.
+//!
+//! ## Buffer-reuse contract (hot-path overhaul)
+//!
+//! The scheduler owns one [`StepPlan`] and one [`StepOutcome`] for its
+//! whole lifetime and recycles them every iteration, so the steady-state
+//! step performs no heap allocation. The rules engines must honor:
+//!
+//! * [`Engine::step`] receives the plan immutably and an `out` buffer it
+//!   must [`StepOutcome::reset`] before filling — never append to stale
+//!   contents, never keep references past the call.
+//! * Prefill chunk token ids live in the plan's shared token arena
+//!   ([`StepPlan::chunk_tokens`] resolves a [`PrefillWork`] to its
+//!   slice); per-chunk `Vec` copies are gone. An empty slice with
+//!   `n_tokens > 0` means the simulation path (counts suffice).
 
 pub mod pjrt;
 pub mod sim;
@@ -12,18 +26,25 @@ pub mod sim;
 use crate::request::RequestId;
 
 /// A slice of prefill work for one request within a step.
-#[derive(Debug, Clone)]
+///
+/// Token ids (real-engine path) are a range into the owning
+/// [`StepPlan`]'s token arena — resolve with [`StepPlan::chunk_tokens`].
+/// On the simulation path the range is empty and only `n_tokens` counts.
+#[derive(Debug, Clone, Copy)]
 pub struct PrefillWork {
     pub id: RequestId,
-    /// Token ids of this chunk (empty in simulation — counts suffice).
-    pub tokens: Vec<i32>,
-    /// Chunk length in tokens (== tokens.len() on the real path).
+    /// Chunk length in tokens (== chunk_tokens(..).len() on the real
+    /// path).
     pub n_tokens: u32,
     /// Absolute position of the chunk's first token.
     pub start: u32,
     /// True when this chunk completes the prompt: the engine then emits
     /// the request's first generated token.
     pub is_last: bool,
+    /// Offset of this chunk's token ids in the plan's token arena.
+    tok_off: u32,
+    /// Token ids available in the arena (0 on the simulation path).
+    tok_len: u32,
 }
 
 /// One decode slot in a step.
@@ -35,11 +56,16 @@ pub struct DecodeWork {
     pub position: u32,
 }
 
-/// Everything the engine must do in one scheduler iteration.
+/// Everything the engine must do in one scheduler iteration. Reused
+/// across steps by the scheduler ([`StepPlan::clear`] between
+/// iterations); build prefill entries with [`StepPlan::push_prefill`] so
+/// chunk token ids land in the shared arena.
 #[derive(Debug, Clone, Default)]
 pub struct StepPlan {
     pub prefills: Vec<PrefillWork>,
     pub decodes: Vec<DecodeWork>,
+    /// Backing store for every prefill chunk's token ids this step.
+    tok_arena: Vec<i32>,
     /// KV tokens moved out to host / back in this step (swap preemption);
     /// engines only cost these, the block manager owns the accounting.
     pub swap_out_tokens: u64,
@@ -50,6 +76,39 @@ pub struct StepPlan {
 }
 
 impl StepPlan {
+    /// Reset for reuse; keeps every buffer's capacity.
+    pub fn clear(&mut self) {
+        self.prefills.clear();
+        self.decodes.clear();
+        self.tok_arena.clear();
+        self.swap_out_tokens = 0;
+        self.swap_in_tokens = 0;
+        self.preempt_events = 0;
+    }
+
+    /// Append a prefill chunk, copying `tokens` (empty on the simulation
+    /// path) into the shared arena — no per-chunk allocation once the
+    /// arena's capacity is warm.
+    pub fn push_prefill(&mut self, id: RequestId, tokens: &[i32],
+                        n_tokens: u32, start: u32, is_last: bool) {
+        let tok_off = self.tok_arena.len() as u32;
+        self.tok_arena.extend_from_slice(tokens);
+        self.prefills.push(PrefillWork {
+            id,
+            n_tokens,
+            start,
+            is_last,
+            tok_off,
+            tok_len: tokens.len() as u32,
+        });
+    }
+
+    /// The token ids of `p`'s chunk (empty on the simulation path).
+    pub fn chunk_tokens(&self, p: &PrefillWork) -> &[i32] {
+        let s = p.tok_off as usize;
+        &self.tok_arena[s..s + p.tok_len as usize]
+    }
+
     pub fn is_empty(&self) -> bool {
         self.prefills.is_empty()
             && self.decodes.is_empty()
@@ -64,6 +123,8 @@ impl StepPlan {
 }
 
 /// What happened: elapsed time plus every token emitted this step.
+/// Owned and recycled by the caller; engines must [`Self::reset`] it at
+/// the top of [`Engine::step`].
 #[derive(Debug, Clone, Default)]
 pub struct StepOutcome {
     /// Step duration in seconds — virtual for the simulator, measured
@@ -74,10 +135,31 @@ pub struct StepOutcome {
     pub tokens: Vec<(RequestId, i32)>,
 }
 
+impl StepOutcome {
+    /// Reset for reuse; keeps the token buffer's capacity.
+    pub fn reset(&mut self) {
+        self.elapsed = 0.0;
+        self.tokens.clear();
+    }
+}
+
 pub trait Engine {
-    /// Execute one step. The plan's decode positions and prefill chunks
-    /// are assumed valid (the scheduler enforces memory limits).
-    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome>;
+    /// Execute one step into `out`. The plan's decode positions and
+    /// prefill chunks are assumed valid (the scheduler enforces memory
+    /// limits). `out` is a recycled buffer: implementations must call
+    /// [`StepOutcome::reset`] on it before filling (the buffer-reuse
+    /// contract — see the module docs).
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()>;
+
+    /// Convenience wrapper for tests and tools that want an owned
+    /// outcome per call (allocates; not for the hot loop).
+    fn step_owned(&mut self, plan: &StepPlan)
+                  -> anyhow::Result<StepOutcome> {
+        let mut out = StepOutcome::default();
+        self.step(plan, &mut out)?;
+        Ok(out)
+    }
 
     /// The request finished or was preempted: release engine-side
     /// resources (real engine frees its batch slot; simulator is a no-op).
@@ -96,5 +178,39 @@ pub trait Engine {
     /// (the "GPU utilization" proxy reported alongside Table I).
     fn utilization(&self) -> Option<f64> {
         None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_arena_round_trips_chunks() {
+        let mut plan = StepPlan::default();
+        plan.push_prefill(1, &[10, 11, 12], 3, 0, false);
+        plan.push_prefill(2, &[], 5, 0, true); // sim path: counts only
+        plan.push_prefill(1, &[13, 14], 2, 3, true);
+        assert_eq!(plan.chunk_tokens(&plan.prefills[0]), &[10, 11, 12]);
+        assert_eq!(plan.chunk_tokens(&plan.prefills[1]), &[] as &[i32]);
+        assert_eq!(plan.chunk_tokens(&plan.prefills[2]), &[13, 14]);
+        assert_eq!(plan.prefill_tokens(), 10);
+        assert!(!plan.is_empty());
+        let arena_cap = plan.tok_arena.capacity();
+        plan.clear();
+        assert!(plan.is_empty());
+        assert_eq!(plan.tok_arena.capacity(), arena_cap, "capacity kept");
+    }
+
+    #[test]
+    fn outcome_reset_keeps_capacity() {
+        let mut out = StepOutcome::default();
+        out.elapsed = 1.5;
+        out.tokens.extend((0..64).map(|i| (i as u64, 0i32)));
+        let cap = out.tokens.capacity();
+        out.reset();
+        assert_eq!(out.elapsed, 0.0);
+        assert!(out.tokens.is_empty());
+        assert_eq!(out.tokens.capacity(), cap);
     }
 }

@@ -169,28 +169,32 @@ impl PjrtEngine {
 }
 
 impl Engine for PjrtEngine {
-    fn step(&mut self, plan: &StepPlan) -> Result<StepOutcome> {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> Result<()> {
+        out.reset();
         if plan.is_empty() {
-            return Ok(StepOutcome::default());
+            return Ok(());
         }
         let t0 = Instant::now();
 
         // 1. Prefill chunks (each its own execution; engine re-chunks to
-        //    the compiled sizes).
+        //    the compiled sizes). Chunk token ids live in the plan's
+        //    shared arena (no per-chunk copies).
         for p in &plan.prefills {
-            if p.tokens.len() != p.n_tokens as usize {
+            let toks = plan.chunk_tokens(p);
+            if toks.len() != p.n_tokens as usize {
                 bail!("real engine needs prompt tokens for request {}", p.id);
             }
             let slot = self.assign_slot(p.id)? as u32;
             let max_chunk = self.rt.max_chunk() as usize;
             let mut offset = 0usize;
-            while offset < p.tokens.len() {
-                let end = (offset + max_chunk).min(p.tokens.len());
+            while offset < toks.len() {
+                let end = (offset + max_chunk).min(toks.len());
                 let state = self.state.take().expect("state");
                 let new_state = self.rt.prefill_chunk(
                     self.bucket,
                     state,
-                    &p.tokens[offset..end],
+                    &toks[offset..end],
                     slot,
                     p.start + offset as u32,
                 )?;
@@ -224,7 +228,6 @@ impl Engine for PjrtEngine {
         }
 
         // 3. One token read covers decode outputs and completed prefills.
-        let mut tokens = Vec::new();
         let needs_read = !decode_slots.is_empty()
             || plan.prefills.iter().any(|p| p.is_last);
         if needs_read {
@@ -232,17 +235,18 @@ impl Engine for PjrtEngine {
                 .rt
                 .read_tokens(self.bucket, self.state.as_ref().unwrap())?;
             for (slot, id) in &decode_slots {
-                tokens.push((*id, toks[*slot]));
+                out.tokens.push((*id, toks[*slot]));
             }
             for p in &plan.prefills {
                 if p.is_last {
                     let slot = self.by_request[&p.id];
-                    tokens.push((p.id, toks[slot]));
+                    out.tokens.push((p.id, toks[slot]));
                 }
             }
         }
 
-        Ok(StepOutcome { elapsed: t0.elapsed().as_secs_f64(), tokens })
+        out.elapsed = t0.elapsed().as_secs_f64();
+        Ok(())
     }
 
     fn release(&mut self, id: RequestId) {

@@ -90,12 +90,14 @@ impl CostModel {
 
 /// Discrete-event engine: returns virtual elapsed time per step and
 /// synthetic tokens (token ids carry no meaning in simulation).
+///
+/// Holds no per-request state: the live decode context of every slot is
+/// already in the plan (`DecodeWork::position` + 1), so the per-step
+/// cost folds straight off the plan — no map maintenance, no allocation.
 pub struct SimEngine {
     model_name: String,
     cost: CostModel,
     max_seq: u32,
-    /// Live decode context per request (tokens currently attended over).
-    ctx: std::collections::BTreeMap<RequestId, u64>,
     pub stat_steps: u64,
     pub stat_busy_time: f64,
     /// Time the step pipeline spent on prefill+decode compute only — the
@@ -109,7 +111,6 @@ impl SimEngine {
             model_name: model.name.clone(),
             cost: CostModel::new(model, hw),
             max_seq: model.max_model_len,
-            ctx: Default::default(),
             stat_steps: 0,
             stat_busy_time: 0.0,
             stat_compute_time: 0.0,
@@ -122,28 +123,23 @@ impl SimEngine {
 }
 
 impl Engine for SimEngine {
-    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome> {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
+        out.reset();
         if plan.is_empty() {
-            return Ok(StepOutcome::default());
+            return Ok(());
         }
-        // Track per-request context growth so the KV term reflects live
-        // tokens: prefill chunks extend context; each decode adds one.
-        for p in &plan.prefills {
-            let e = self.ctx.entry(p.id).or_insert(0);
-            *e = (p.start + p.n_tokens) as u64;
-        }
+        // The KV term reflects live tokens: each decode slot attends over
+        // its whole context (position + 1); each prefill chunk streams the
+        // growing context up to its end.
         let mut decode_ctx = 0u64;
         for d in &plan.decodes {
-            let e = self.ctx.entry(d.id).or_insert(0);
-            *e = d.position as u64 + 1;
-            decode_ctx += *e;
+            decode_ctx += d.position as u64 + 1;
         }
-        // Prefill attention streams the growing context of each chunk.
-        let prefill_ctx: u64 = plan
-            .prefills
-            .iter()
-            .map(|p| (p.start + p.n_tokens) as u64)
-            .sum();
+        let mut prefill_ctx = 0u64;
+        for p in &plan.prefills {
+            prefill_ctx += (p.start + p.n_tokens) as u64;
+        }
 
         let compute = self
             .cost
@@ -156,25 +152,22 @@ impl Engine for SimEngine {
             + self.cost.swap_time(plan.swap_in_tokens)
             + self.cost.preempt_overhead * plan.preempt_events as f64;
 
-        let mut tokens =
-            Vec::with_capacity(plan.decodes.len() + plan.prefills.len());
         for d in &plan.decodes {
-            tokens.push((d.id, 0i32));
+            out.tokens.push((d.id, 0i32));
         }
         for p in &plan.prefills {
             if p.is_last {
-                tokens.push((p.id, 0i32));
+                out.tokens.push((p.id, 0i32));
             }
         }
         self.stat_steps += 1;
         self.stat_busy_time += elapsed;
         self.stat_compute_time += compute;
-        Ok(StepOutcome { elapsed, tokens })
+        out.elapsed = elapsed;
+        Ok(())
     }
 
-    fn release(&mut self, id: RequestId) {
-        self.ctx.remove(&id);
-    }
+    fn release(&mut self, _id: RequestId) {}
 
     fn max_batch(&self) -> u32 {
         u32::MAX
@@ -201,7 +194,7 @@ impl Engine for SimEngine {
 mod tests {
     use super::*;
     use crate::config::presets::*;
-    use crate::engine::{DecodeWork, PrefillWork};
+    use crate::engine::DecodeWork;
 
     fn engine() -> SimEngine {
         let m = llama3_70b();
@@ -221,9 +214,9 @@ mod tests {
     #[test]
     fn decode_latency_linear_in_batch() {
         let mut e = engine();
-        let t32 = e.step(&decode_plan(32, 100)).unwrap().elapsed;
-        let t64 = e.step(&decode_plan(64, 100)).unwrap().elapsed;
-        let t128 = e.step(&decode_plan(128, 100)).unwrap().elapsed;
+        let t32 = e.step_owned(&decode_plan(32, 100)).unwrap().elapsed;
+        let t64 = e.step_owned(&decode_plan(64, 100)).unwrap().elapsed;
+        let t128 = e.step_owned(&decode_plan(128, 100)).unwrap().elapsed;
         // Linear: equal increments.
         let d1 = t64 - t32;
         let d2 = (t128 - t64) / 2.0;
@@ -265,20 +258,12 @@ mod tests {
     #[test]
     fn prefill_costs_compute() {
         let mut e = engine();
-        let plan = StepPlan {
-            prefills: vec![PrefillWork {
-                id: 1,
-                tokens: vec![],
-                n_tokens: 512,
-                start: 0,
-                is_last: true,
-            }],
-            ..Default::default()
-        };
-        let out = e.step(&plan).unwrap();
+        let mut plan = StepPlan::default();
+        plan.push_prefill(1, &[], 512, 0, true);
+        let out = e.step_owned(&plan).unwrap();
         // 512-token prefill must dominate a 1-token decode step.
         let mut e2 = engine();
-        let t1 = e2.step(&decode_plan(1, 0)).unwrap().elapsed;
+        let t1 = e2.step_owned(&decode_plan(1, 0)).unwrap().elapsed;
         assert!(out.elapsed > t1 * 2.0);
         // Completed prompt emits exactly one token.
         assert_eq!(out.tokens.len(), 1);
@@ -289,9 +274,9 @@ mod tests {
     fn swap_traffic_costs_time() {
         let mut e = engine();
         let mut plan = decode_plan(8, 50);
-        let base = e.step(&plan).unwrap().elapsed;
+        let base = e.step_owned(&plan).unwrap().elapsed;
         plan.swap_out_tokens = 10_000;
-        let with_swap = e.step(&plan).unwrap().elapsed;
+        let with_swap = e.step_owned(&plan).unwrap().elapsed;
         // 10k tokens × ~0.33 MB over 25 GB/s PCIe ≈ 130 ms extra.
         assert!(with_swap > base + 0.1,
                 "swap not costed: {base} vs {with_swap}");
@@ -300,7 +285,9 @@ mod tests {
     #[test]
     fn empty_plan_is_free() {
         let mut e = engine();
-        let out = e.step(&StepPlan::default()).unwrap();
+        // A dirty reused buffer must come back reset.
+        let mut out = StepOutcome { elapsed: 9.0, tokens: vec![(1, 1)] };
+        e.step(&StepPlan::default(), &mut out).unwrap();
         assert_eq!(out.elapsed, 0.0);
         assert!(out.tokens.is_empty());
     }
@@ -308,16 +295,21 @@ mod tests {
     #[test]
     fn non_last_chunk_emits_no_token() {
         let mut e = engine();
-        let plan = StepPlan {
-            prefills: vec![PrefillWork {
-                id: 3,
-                tokens: vec![],
-                n_tokens: 64,
-                start: 0,
-                is_last: false,
-            }],
-            ..Default::default()
-        };
-        assert!(e.step(&plan).unwrap().tokens.is_empty());
+        let mut plan = StepPlan::default();
+        plan.push_prefill(3, &[], 64, 0, false);
+        assert!(e.step_owned(&plan).unwrap().tokens.is_empty());
+    }
+
+    #[test]
+    fn reused_outcome_buffer_is_reset_each_step() {
+        // The buffer-reuse contract: stale tokens must not leak across
+        // steps when the same outcome is recycled.
+        let mut e = engine();
+        let mut out = StepOutcome::default();
+        e.step(&decode_plan(4, 10), &mut out).unwrap();
+        assert_eq!(out.tokens.len(), 4);
+        e.step(&decode_plan(2, 10), &mut out).unwrap();
+        assert_eq!(out.tokens.len(), 2);
+        assert!(out.elapsed > 0.0);
     }
 }

@@ -116,6 +116,7 @@ pub fn fig2(n_requests: usize) -> Result<Fig2Result> {
         crate::engine::sim::SimEngine::new(&s.model, &s.hardware);
     let mut sched = Scheduler::new(s.sched.clone(), s.eta_tokens(),
                                    s.swap_tokens, 191.0, 381.9);
+    sched.retain_full_traces();
     sched.telemetry.enable_timeline();
     let mut clock = VirtualClock::new();
     let requests = s.workload.generate();
@@ -124,7 +125,7 @@ pub fn fig2(n_requests: usize) -> Result<Fig2Result> {
     let _ = clock.now();
     Ok(Fig2Result {
         timeline: sched.telemetry.mem_timeline.clone(),
-        bt_timeline: sched.bt_timeline.clone(),
+        bt_timeline: sched.bt_timeline.to_vec(),
     })
 }
 

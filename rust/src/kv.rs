@@ -7,9 +7,31 @@
 //! engine — but its numbers *are* the memory constraint `M(b_t) ≤ M_max`
 //! the paper's Algorithm 1 manages, so its invariants are property-tested
 //! hard (no leaks, no double-free, exact token↔block arithmetic).
+//!
+//! ## Data layout (hot-path overhaul)
+//!
+//! Block tables live in a slab: a dense `Vec<Option<Allocation>>` plus a
+//! free-list, with a `RequestId → slot` map consulted only at the
+//! admission boundary. The scheduler caches each running request's
+//! [`KvSlot`] and drives the per-step path through the `*_at` methods,
+//! so decode-growth checks are a single array index. Aggregates the
+//! telemetry reads every step — [`KvBlockManager::used_tokens`],
+//! [`KvBlockManager::resident_requests`] — are maintained incrementally
+//! on every allocate/grow/free/swap and are O(1) reads; they used to be
+//! full `BTreeMap` walks, twice per scheduler step.
+//! [`KvBlockManager::check_invariants`] still recomputes everything from
+//! scratch and cross-checks the cached counters.
 
 use crate::request::RequestId;
-use std::collections::BTreeMap;
+use std::collections::HashMap;
+
+/// Dense slab handle for a live block table. Valid from `allocate` until
+/// `free`; the owner (the scheduler) must drop it at free time. Survives
+/// swap-out/swap-in (the allocation record stays in place).
+pub type KvSlot = u32;
+
+/// Sentinel for "no KV slot cached".
+pub const KV_NO_SLOT: KvSlot = u32::MAX;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum KvError {
@@ -38,8 +60,9 @@ impl std::fmt::Display for KvError {
 
 impl std::error::Error for KvError {}
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 struct Allocation {
+    id: RequestId,
     blocks: usize,
     tokens: u32,
     swapped: bool,
@@ -54,7 +77,15 @@ pub struct KvBlockManager {
     /// CPU swap pool capacity in blocks (0 disables swapping).
     swap_blocks_total: usize,
     swap_blocks_free: usize,
-    tables: BTreeMap<RequestId, Allocation>,
+    /// Slab of live block tables + free-list of vacated slots.
+    slots: Vec<Option<Allocation>>,
+    free_slots: Vec<KvSlot>,
+    /// Admission-boundary index; the per-step path uses [`KvSlot`]s.
+    by_id: HashMap<RequestId, KvSlot>,
+    /// Cached Σ tokens of on-device (non-swapped) tables — O(1) reads.
+    used_tokens_device: u64,
+    /// Cached count of on-device (non-swapped) tables — O(1) reads.
+    resident: usize,
     /// Cumulative counters for telemetry.
     pub stat_allocs: u64,
     pub stat_frees: u64,
@@ -76,7 +107,11 @@ impl KvBlockManager {
             free_blocks: total_blocks,
             swap_blocks_total: swap_blocks,
             swap_blocks_free: swap_blocks,
-            tables: BTreeMap::new(),
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            by_id: HashMap::new(),
+            used_tokens_device: 0,
+            resident: 0,
             stat_allocs: 0,
             stat_frees: 0,
             stat_swap_outs: 0,
@@ -105,14 +140,15 @@ impl KvBlockManager {
         self.total_blocks as u64 * self.block_tokens as u64
     }
 
-    /// Tokens currently resident on device (counts whole blocks' reserved
-    /// space — the number the utilization gauge reports).
+    /// Tokens currently resident on device. O(1): maintained
+    /// incrementally, cross-checked by [`Self::check_invariants`].
     pub fn used_tokens(&self) -> u64 {
-        self.tables
-            .values()
-            .filter(|a| !a.swapped)
-            .map(|a| a.tokens as u64)
-            .sum()
+        self.used_tokens_device
+    }
+
+    /// Live on-device (non-swapped) block tables. O(1).
+    pub fn resident_requests(&self) -> usize {
+        self.resident
     }
 
     pub fn utilization(&self) -> f64 {
@@ -126,19 +162,47 @@ impl KvBlockManager {
         tokens.div_ceil(self.block_tokens) as usize
     }
 
+    fn alloc_at(&self, slot: KvSlot) -> &Allocation {
+        self.slots[slot as usize].as_ref().expect("live KV slot")
+    }
+
+    fn alloc_at_mut(&mut self, slot: KvSlot) -> &mut Allocation {
+        self.slots[slot as usize].as_mut().expect("live KV slot")
+    }
+
+    /// The slab slot backing `id`'s block table, for the `*_at` fast
+    /// path. Cache it at admission; it stays valid until `free`.
+    pub fn slot_of(&self, id: RequestId) -> Option<KvSlot> {
+        self.by_id.get(&id).copied()
+    }
+
     /// Can `tokens` more tokens be appended for `id` (or allocated fresh)
     /// without exceeding capacity?
     pub fn can_grow(&self, id: RequestId, tokens: u32) -> bool {
-        let cur = self.tables.get(&id).map(|a| (a.blocks, a.tokens));
+        let cur = self
+            .by_id
+            .get(&id)
+            .map(|&s| {
+                let a = self.alloc_at(s);
+                (a.blocks, a.tokens)
+            });
         let (blocks, cur_tokens) = cur.unwrap_or((0, 0));
         let need = self.blocks_for(cur_tokens + tokens) - blocks;
+        need <= self.free_blocks
+    }
+
+    /// [`Self::can_grow`] over a cached slot: one array index, no map
+    /// lookup — the per-decode-token path.
+    pub fn can_grow_at(&self, slot: KvSlot, tokens: u32) -> bool {
+        let a = self.alloc_at(slot);
+        let need = self.blocks_for(a.tokens + tokens) - a.blocks;
         need <= self.free_blocks
     }
 
     /// Allocate the initial table for a request's first `tokens` tokens.
     pub fn allocate(&mut self, id: RequestId, tokens: u32)
                     -> Result<(), KvError> {
-        if self.tables.contains_key(&id) {
+        if self.by_id.contains_key(&id) {
             return Err(KvError::AlreadyAllocated(id));
         }
         let need = self.blocks_for(tokens);
@@ -146,9 +210,23 @@ impl KvBlockManager {
             return Err(KvError::OutOfBlocks { needed: need,
                                               free: self.free_blocks });
         }
+        let alloc =
+            Allocation { id, blocks: need, tokens, swapped: false };
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(alloc);
+                s
+            }
+            None => {
+                self.slots.push(Some(alloc));
+                (self.slots.len() - 1) as KvSlot
+            }
+        };
+        self.by_id.insert(id, slot);
         self.free_blocks -= need;
-        self.tables.insert(id, Allocation { blocks: need, tokens,
-                                            swapped: false });
+        self.used_tokens_device += tokens as u64;
+        self.resident += 1;
         self.stat_allocs += 1;
         Ok(())
     }
@@ -156,34 +234,48 @@ impl KvBlockManager {
     /// Append `tokens` tokens to an existing table (decode growth or the
     /// next prefill chunk), acquiring new blocks as needed.
     pub fn grow(&mut self, id: RequestId, tokens: u32) -> Result<(), KvError> {
-        let alloc = self
-            .tables
-            .get_mut(&id)
+        let slot = *self
+            .by_id
+            .get(&id)
             .ok_or(KvError::UnknownRequest(id))?;
+        self.grow_at(slot, tokens)
+    }
+
+    /// [`Self::grow`] over a cached slot (per-step fast path).
+    pub fn grow_at(&mut self, slot: KvSlot, tokens: u32)
+                   -> Result<(), KvError> {
+        let free = self.free_blocks;
+        let block_tokens = self.block_tokens;
+        let alloc = self.alloc_at_mut(slot);
         debug_assert!(!alloc.swapped, "grow on swapped request");
         let new_tokens = alloc.tokens + tokens;
-        let need_total = new_tokens.div_ceil(self.block_tokens) as usize;
+        let need_total = new_tokens.div_ceil(block_tokens) as usize;
         let extra = need_total.saturating_sub(alloc.blocks);
-        if extra > self.free_blocks {
-            return Err(KvError::OutOfBlocks { needed: extra,
-                                              free: self.free_blocks });
+        if extra > free {
+            return Err(KvError::OutOfBlocks { needed: extra, free });
         }
         alloc.blocks = need_total;
         alloc.tokens = new_tokens;
         self.free_blocks -= extra;
+        self.used_tokens_device += tokens as u64;
         Ok(())
     }
 
     /// Release a request's blocks (finish or recompute-preemption).
     pub fn free(&mut self, id: RequestId) -> Result<u32, KvError> {
-        let alloc = self
-            .tables
+        let slot = self
+            .by_id
             .remove(&id)
             .ok_or(KvError::UnknownRequest(id))?;
+        let alloc =
+            self.slots[slot as usize].take().expect("indexed KV slot");
+        self.free_slots.push(slot);
         if alloc.swapped {
             self.swap_blocks_free += alloc.blocks;
         } else {
             self.free_blocks += alloc.blocks;
+            self.used_tokens_device -= alloc.tokens as u64;
+            self.resident -= 1;
         }
         self.stat_frees += 1;
         debug_assert!(self.free_blocks <= self.total_blocks);
@@ -193,89 +285,138 @@ impl KvBlockManager {
     /// Move a request's blocks to the CPU pool. Returns the bytes-worth of
     /// blocks moved (in tokens) so the engine can cost the transfer.
     pub fn swap_out(&mut self, id: RequestId) -> Result<u32, KvError> {
-        let alloc = self
-            .tables
-            .get_mut(&id)
+        let slot = *self
+            .by_id
+            .get(&id)
             .ok_or(KvError::UnknownRequest(id))?;
+        let swap_free = self.swap_blocks_free;
+        let alloc = self.alloc_at_mut(slot);
         debug_assert!(!alloc.swapped);
-        if alloc.blocks > self.swap_blocks_free {
+        if alloc.blocks > swap_free {
             return Err(KvError::SwapSpaceExhausted {
                 needed: alloc.blocks,
-                free: self.swap_blocks_free,
+                free: swap_free,
             });
         }
-        self.swap_blocks_free -= alloc.blocks;
-        self.free_blocks += alloc.blocks;
         alloc.swapped = true;
+        let (blocks, tokens) = (alloc.blocks, alloc.tokens);
+        self.swap_blocks_free -= blocks;
+        self.free_blocks += blocks;
+        self.used_tokens_device -= tokens as u64;
+        self.resident -= 1;
         self.stat_swap_outs += 1;
-        Ok(alloc.tokens)
+        Ok(tokens)
     }
 
     /// Bring a swapped request back to the device.
     pub fn swap_in(&mut self, id: RequestId) -> Result<u32, KvError> {
-        let alloc = self
-            .tables
-            .get_mut(&id)
+        let slot = *self
+            .by_id
+            .get(&id)
             .ok_or(KvError::UnknownRequest(id))?;
+        let free = self.free_blocks;
+        let alloc = self.alloc_at_mut(slot);
         debug_assert!(alloc.swapped);
-        if alloc.blocks > self.free_blocks {
+        if alloc.blocks > free {
             return Err(KvError::OutOfBlocks { needed: alloc.blocks,
-                                              free: self.free_blocks });
+                                              free });
         }
-        self.free_blocks -= alloc.blocks;
-        self.swap_blocks_free += alloc.blocks;
         alloc.swapped = false;
+        let (blocks, tokens) = (alloc.blocks, alloc.tokens);
+        self.free_blocks -= blocks;
+        self.swap_blocks_free += blocks;
+        self.used_tokens_device += tokens as u64;
+        self.resident += 1;
         self.stat_swap_ins += 1;
-        Ok(alloc.tokens)
+        Ok(tokens)
     }
 
     pub fn is_swapped(&self, id: RequestId) -> bool {
-        self.tables.get(&id).map(|a| a.swapped).unwrap_or(false)
+        self.by_id
+            .get(&id)
+            .map(|&s| self.alloc_at(s).swapped)
+            .unwrap_or(false)
     }
 
     pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
-        self.tables.get(&id).map(|a| a.tokens)
-    }
-
-    pub fn resident_requests(&self) -> usize {
-        self.tables.values().filter(|a| !a.swapped).count()
+        self.by_id.get(&id).map(|&s| self.alloc_at(s).tokens)
     }
 
     /// Internal consistency check (used by tests and debug assertions):
-    /// free + Σ tables(on-device) == total, same for swap pool.
+    /// free + Σ tables(on-device) == total, same for swap pool, block
+    /// arithmetic exact per table, and the O(1) cached aggregates equal
+    /// their from-scratch recomputation.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let dev: usize = self
-            .tables
-            .values()
-            .filter(|a| !a.swapped)
-            .map(|a| a.blocks)
-            .sum();
+        let live = || self.slots.iter().flatten();
+        let dev: usize =
+            live().filter(|a| !a.swapped).map(|a| a.blocks).sum();
         if dev + self.free_blocks != self.total_blocks {
             return Err(format!(
                 "device leak: used {dev} + free {} != total {}",
                 self.free_blocks, self.total_blocks
             ));
         }
-        let swp: usize = self
-            .tables
-            .values()
-            .filter(|a| a.swapped)
-            .map(|a| a.blocks)
-            .sum();
+        let swp: usize =
+            live().filter(|a| a.swapped).map(|a| a.blocks).sum();
         if swp + self.swap_blocks_free != self.swap_blocks_total {
             return Err(format!(
                 "swap leak: used {swp} + free {} != total {}",
                 self.swap_blocks_free, self.swap_blocks_total
             ));
         }
-        for (id, a) in &self.tables {
+        for a in live() {
             let want = a.tokens.div_ceil(self.block_tokens) as usize;
-            if a.blocks != want.max(if a.tokens == 0 { 0 } else { 1 }) {
+            if a.blocks != want {
                 return Err(format!(
-                    "req {id}: {} tokens in {} blocks (want {want})",
-                    a.tokens, a.blocks
+                    "req {}: {} tokens in {} blocks (want {want})",
+                    a.id, a.tokens, a.blocks
                 ));
             }
+        }
+        // Cached aggregates vs full recomputation.
+        let used: u64 = live()
+            .filter(|a| !a.swapped)
+            .map(|a| a.tokens as u64)
+            .sum();
+        if used != self.used_tokens_device {
+            return Err(format!(
+                "used_tokens cache drift: cached {} != recomputed {used}",
+                self.used_tokens_device
+            ));
+        }
+        let res = live().filter(|a| !a.swapped).count();
+        if res != self.resident {
+            return Err(format!(
+                "resident cache drift: cached {} != recomputed {res}",
+                self.resident
+            ));
+        }
+        // Index ↔ slab coherence.
+        let n_live = live().count();
+        if n_live != self.by_id.len() {
+            return Err(format!(
+                "index drift: {} live slots vs {} index entries",
+                n_live,
+                self.by_id.len()
+            ));
+        }
+        for (&id, &slot) in &self.by_id {
+            match self.slots.get(slot as usize).and_then(|s| s.as_ref()) {
+                Some(a) if a.id == id => {}
+                _ => {
+                    return Err(format!(
+                        "index drift: request {id} maps to dead slot {slot}"
+                    ))
+                }
+            }
+        }
+        if self.free_slots.len() + n_live != self.slots.len() {
+            return Err(format!(
+                "free-list drift: {} free + {} live != {} slots",
+                self.free_slots.len(),
+                n_live,
+                self.slots.len()
+            ));
         }
         Ok(())
     }
@@ -297,12 +438,15 @@ mod tests {
         m.allocate(1, 20).unwrap(); // 2 blocks
         assert_eq!(m.free_blocks(), 62);
         assert_eq!(m.used_tokens(), 20);
+        assert_eq!(m.resident_requests(), 1);
         m.grow(1, 12).unwrap(); // 32 tokens → 2 blocks, no extra
         assert_eq!(m.free_blocks(), 62);
         m.grow(1, 1).unwrap(); // 33 tokens → 3 blocks
         assert_eq!(m.free_blocks(), 61);
         assert_eq!(m.free(1).unwrap(), 33);
         assert_eq!(m.free_blocks(), 64);
+        assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.resident_requests(), 0);
         m.check_invariants().unwrap();
     }
 
@@ -337,6 +481,46 @@ mod tests {
     }
 
     #[test]
+    fn slot_fast_path_matches_id_path() {
+        let mut m = mgr(256); // 16 blocks
+        m.allocate(5, 30).unwrap();
+        let s = m.slot_of(5).expect("slot for live table");
+        assert_eq!(m.slot_of(99), None);
+        assert_eq!(m.can_grow_at(s, 2), m.can_grow(5, 2));
+        m.grow_at(s, 34).unwrap(); // 64 tokens → 4 blocks
+        assert_eq!(m.tokens_of(5), Some(64));
+        assert_eq!(m.used_tokens(), 64);
+        // Slot survives a swap cycle.
+        m.swap_out(5).unwrap();
+        assert_eq!(m.slot_of(5), Some(s));
+        m.swap_in(5).unwrap();
+        assert!(m.can_grow_at(s, 1));
+        // Exhaustion through the slot path reports exact need.
+        assert!(matches!(m.grow_at(s, 10_000),
+                         Err(KvError::OutOfBlocks { .. })));
+        m.free(5).unwrap();
+        assert_eq!(m.slot_of(5), None);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut m = mgr(10_240);
+        for id in 0..8u64 {
+            m.allocate(id, 16).unwrap();
+        }
+        let slots_high = m.slots.len();
+        for id in 0..8u64 {
+            m.free(id).unwrap();
+        }
+        for id in 100..108u64 {
+            m.allocate(id, 16).unwrap();
+        }
+        assert_eq!(m.slots.len(), slots_high, "freed slots are reused");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
     fn swap_out_in_cycle() {
         let mut m = KvBlockManager::new(256, 16, 128);
         m.allocate(1, 40).unwrap(); // 3 blocks
@@ -346,9 +530,12 @@ mod tests {
         assert_eq!(m.free_blocks(), before_free + 3);
         assert!(m.is_swapped(1));
         assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.resident_requests(), 0);
         m.swap_in(1).unwrap();
         assert!(!m.is_swapped(1));
         assert_eq!(m.free_blocks(), before_free);
+        assert_eq!(m.used_tokens(), 40);
+        assert_eq!(m.resident_requests(), 1);
         m.check_invariants().unwrap();
         // Freeing a swapped request returns blocks to the swap pool.
         m.swap_out(1).unwrap();
@@ -428,7 +615,88 @@ mod tests {
                 m.free(id).unwrap();
             }
             m.free_blocks() == m.total_blocks()
+                && m.used_tokens() == 0
+                && m.resident_requests() == 0
                 && m.check_invariants().is_ok()
+        });
+    }
+
+    /// Property: the O(1) cached aggregates (`used_tokens`,
+    /// `resident_requests`) equal a from-scratch recomputation over the
+    /// live ids after every random alloc/grow/free/swap-out/swap-in —
+    /// including the mixed slot-handle fast path.
+    #[test]
+    fn prop_cached_counters_match_recompute() {
+        check("kv cached counters", 300, |g| {
+            let cap = g.u64(128..=4096);
+            let block = *g.choose(&[8u32, 16, 64]);
+            let mut m = KvBlockManager::new(cap, block, cap / 2);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..=150) {
+                match g.u64(0..=5) {
+                    0 => {
+                        if m.allocate(next_id, g.u64(1..=200) as u32)
+                            .is_ok()
+                        {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            // Exercise the slot fast path half the time.
+                            let t = g.u64(1..=48) as u32;
+                            if g.u64(0..=1) == 0 {
+                                let s = m.slot_of(id).unwrap();
+                                let _ = m.grow_at(s, t);
+                            } else {
+                                let _ = m.grow(id, t);
+                            }
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.usize(0..=live.len() - 1);
+                        m.free(live.swap_remove(i)).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.swap_out(id);
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if m.is_swapped(id) {
+                            let _ = m.swap_in(id);
+                        }
+                    }
+                    _ => {}
+                }
+                // Recompute from scratch via the public id-keyed API.
+                let want_used: u64 = live
+                    .iter()
+                    .filter(|&&id| !m.is_swapped(id))
+                    .map(|&id| m.tokens_of(id).unwrap() as u64)
+                    .sum();
+                let want_res = live
+                    .iter()
+                    .filter(|&&id| !m.is_swapped(id))
+                    .count();
+                if m.used_tokens() != want_used
+                    || m.resident_requests() != want_res
+                {
+                    eprintln!(
+                        "cache drift: used {} vs {want_used}, resident {} \
+                         vs {want_res}",
+                        m.used_tokens(),
+                        m.resident_requests()
+                    );
+                    return false;
+                }
+            }
+            m.check_invariants().is_ok()
         });
     }
 

@@ -30,6 +30,7 @@
 
 pub mod batching;
 pub mod benchkit;
+pub mod benchsched;
 pub mod config;
 pub mod driver;
 pub mod engine;

@@ -91,6 +91,16 @@ fn cli() -> Command {
                 .opt("d-sla", "0", "decode SLA in ms (0 = none)"),
         )
         .subcommand(
+            Command::new("bench-sched",
+                         "scheduler hot-loop benchmark (steps/sec vs the \
+                          pre-overhaul baseline) → BENCH_scheduler.json")
+                .opt("requests", "10000", "requests per batch point")
+                .opt("batches", "32,256,1024", "comma-separated b_t points")
+                .opt("out", "BENCH_scheduler.json",
+                     "output path ('' = stdout only)")
+                .flag("quick", "smoke mode: 500 requests (CI)"),
+        )
+        .subcommand(
             Command::new("workload", "generate a workload trace (JSONL)")
                 .opt("out", "trace.jsonl", "output path")
                 .opt("requests", "1000", "request count")
@@ -134,6 +144,7 @@ fn main() {
         "switch" => cmd_switch(&sub),
         "capacity" => cmd_capacity(&sub),
         "serve" => cmd_serve(&sub),
+        "bench-sched" => cmd_bench_sched(&sub),
         "workload" => cmd_workload(&sub),
         _ => unreachable!(),
     };
@@ -376,6 +387,40 @@ fn cmd_serve(m: &M) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_bench_sched(m: &M) -> Result<()> {
+    let quick = m.get_flag("quick");
+    let n = if quick { 500 } else { m.get_usize("requests")? };
+    let batches: Vec<u32> = m
+        .get("batches")
+        .split(',')
+        .map(|s| s.trim().parse::<u32>())
+        .collect::<std::result::Result<_, _>>()?;
+    if batches.is_empty() {
+        return Err(anyhow!("need at least one b_t point"));
+    }
+    let report = dynabatch::benchsched::report(&batches, n, quick);
+    println!("{}", report.to_string_pretty());
+    if let Some(points) = report.get("points").as_arr() {
+        for p in points {
+            println!(
+                "b_t={:>5}: {:>12.0} steps/s ({:>8.0} ns/step), legacy \
+                 {:>10.0} steps/s → {:.1}x",
+                p.get("b_t").as_f64().unwrap_or(0.0),
+                p.get("steps_per_sec").as_f64().unwrap_or(0.0),
+                p.get("ns_per_step").as_f64().unwrap_or(0.0),
+                p.get("legacy_steps_per_sec").as_f64().unwrap_or(0.0),
+                p.get("speedup").as_f64().unwrap_or(0.0),
+            );
+        }
+    }
+    let out = m.get("out");
+    if !out.is_empty() {
+        std::fs::write(out, report.to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
 }
 
 fn cmd_workload(m: &M) -> Result<()> {

@@ -23,22 +23,50 @@
 //! The controller is a *live* object: [`Scheduler::reconfigure`] hot-swaps
 //! it mid-run (telemetry, queues, KV and in-flight work carry over) — the
 //! mechanism behind `Service::reconfigure` and the v2 `set_policy` op.
+//!
+//! ## Hot path & data layout
+//!
+//! The per-step path is O(batch) work with O(1) overhead in the number of
+//! running requests (see DESIGN.md "Hot path & data layout"):
+//!
+//! * Requests live in a **slab** (`Vec<Option<SlotEntry>>` + free-list);
+//!   queues hold slot indices, so every per-step lookup is an array
+//!   index. The `RequestId → slot` map is consulted only at boundaries
+//!   (submit / cancel / engine token routing).
+//! * The running set is an **intrusive doubly-linked list** in admission
+//!   order (O(1) push/remove preserving victim = newest semantics), with
+//!   a second intrusive list over the subset still prefilling. Phase
+//!   counts fall out of the list lengths, so [`Scheduler::observe`] is
+//!   O(1) — it used to filter-scan the running set twice per step.
+//! * [`StepPlan`] / [`StepOutcome`] / the decode scratch / [`StepReport`]
+//!   are owned by the scheduler and recycled, and prefill chunks are
+//!   ranges into the plan's token arena — the steady-state step performs
+//!   no heap allocation.
+//! * Traces (`bt_timeline`, `directive_log`, `decode_latencies`) are
+//!   bounded rings on the serve path; experiment drivers opt into full
+//!   traces via [`Scheduler::retain_full_traces`].
 
 use crate::batching::{
     build_controller, AdmissionMode, Controller, Directive, SwapHint,
 };
 use crate::config::{PolicyKind, PreemptMode, SchedulerConfig};
-use crate::engine::{DecodeWork, Engine, PrefillWork, StepPlan};
-use crate::kv::KvBlockManager;
+use crate::engine::{DecodeWork, Engine, StepOutcome, StepPlan};
+use crate::kv::{KvBlockManager, KvSlot, KV_NO_SLOT};
 use crate::request::{FinishReason, Phase, PriorityClass, Request, RequestId};
 use crate::telemetry::{Observation, Telemetry};
+use crate::util::stats::RingLog;
 use anyhow::Result;
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{HashMap, VecDeque};
 
 const N_CLASSES: usize = PriorityClass::COUNT;
 
-/// Most recent decisions kept in [`Scheduler::directive_log`] — ample for
-/// every experiment run while bounding the long-running serve path.
+/// Sentinel slot index ("null" link in the intrusive lists).
+const NIL: u32 = u32::MAX;
+
+/// Most recent entries kept in each bounded trace
+/// ([`Scheduler::directive_log`], [`Scheduler::bt_timeline`],
+/// [`Scheduler::decode_latencies`]) — ample for every experiment run
+/// while bounding the long-running serve path.
 pub const DIRECTIVE_LOG_CAP: usize = 4096;
 
 /// Aggregated counters the experiments read off after a run.
@@ -63,6 +91,21 @@ pub struct SchedStats {
     pub reconfigs: u64,
 }
 
+/// One slab entry: the request plus its intrusive-list links and cached
+/// KV slot. Links are only meaningful while the request is running.
+struct SlotEntry {
+    req: Request,
+    /// Running list (admission order; back = newest = first victim).
+    run_prev: u32,
+    run_next: u32,
+    /// Prefill list (running subset with prompt tokens still to prefill).
+    pf_prev: u32,
+    pf_next: u32,
+    in_pf: bool,
+    /// Cached KV slab slot (valid between allocate and free).
+    kv: KvSlot,
+}
+
 pub struct Scheduler {
     pub cfg: SchedulerConfig,
     controller: Box<dyn Controller>,
@@ -71,32 +114,53 @@ pub struct Scheduler {
     directive: Directive,
     pub kv: KvBlockManager,
     pub telemetry: Telemetry,
-    /// Per-class waiting queues, indexed by [`PriorityClass::rank`]
-    /// (FIFO within a class; classes interleaved by weighted round-robin).
-    waiting: [VecDeque<RequestId>; N_CLASSES],
+    /// Request slab + vacated-slot free-list + boundary index.
+    slots: Vec<Option<SlotEntry>>,
+    free_slots: Vec<u32>,
+    by_id: HashMap<RequestId, u32>,
+    /// Per-class waiting queues of slot indices, indexed by
+    /// [`PriorityClass::rank`] (FIFO within a class; classes interleaved
+    /// by weighted round-robin).
+    waiting: [VecDeque<u32>; N_CLASSES],
     /// Smooth-WRR credit per class (see [`Self::pick_waiting_class`]).
     wrr_credit: [i64; N_CLASSES],
+    /// Waiting requests carrying a deadline; `shed_expired` is a no-op
+    /// while this is zero (the common serving case).
+    waiting_deadlines: usize,
     /// Preempted requests waiting to resume (front = highest priority).
-    resume_queue: VecDeque<RequestId>,
-    /// Admission order of running requests (back = newest = first victim).
-    running_order: Vec<RequestId>,
-    requests: BTreeMap<RequestId, Request>,
+    resume_queue: VecDeque<u32>,
+    /// Intrusive running list (admission order).
+    run_head: u32,
+    run_tail: u32,
+    run_len: usize,
+    /// Intrusive prefill list (running subset, admission order).
+    pf_head: u32,
+    pf_tail: u32,
+    pf_len: usize,
     finished: Vec<Request>,
     b_t: u32,
     steps_since_decision: u32,
     pub stats: SchedStats,
-    /// (t, b_t) decision trace for plots.
-    pub bt_timeline: Vec<(f64, u32)>,
+    // ---- recycled step buffers (allocation-free steady state) ----
+    plan: StepPlan,
+    outcome: StepOutcome,
+    scratch_decode: Vec<u32>,
+    report: StepReport,
+    /// (t, b_t) decision trace for plots. Bounded ring on the serve
+    /// path; see [`Self::retain_full_traces`].
+    pub bt_timeline: RingLog<(f64, u32)>,
     /// Directive trace, one entry per decision — the control-plane
     /// telemetry (chunk budgets, admission mode) behind `bt_timeline`.
-    /// Bounded: the serving path runs indefinitely, so only the most
-    /// recent [`DIRECTIVE_LOG_CAP`] decisions are retained.
-    pub directive_log: VecDeque<(f64, Directive)>,
-    /// Every decode step latency (seconds) — the SLA attainment record.
-    pub decode_latencies: Vec<f64>,
+    pub directive_log: RingLog<(f64, Directive)>,
+    /// Decode step latencies (seconds) — the SLA attainment record.
+    pub decode_latencies: RingLog<f64>,
+    /// Cross-check the incremental accounting against full rescans at
+    /// the top of every step (parity-test instrumentation).
+    shadow_checks: bool,
 }
 
-/// What one scheduler iteration did (driver/server hooks).
+/// What one scheduler iteration did (driver/server hooks). Owned and
+/// recycled by the scheduler; read it via [`Scheduler::last_report`].
 #[derive(Debug, Clone, Default)]
 pub struct StepReport {
     pub elapsed: f64,
@@ -128,18 +192,31 @@ impl Scheduler {
             controller,
             kv,
             telemetry,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            by_id: HashMap::new(),
             waiting: std::array::from_fn(|_| VecDeque::new()),
             wrr_credit: [0; N_CLASSES],
+            waiting_deadlines: 0,
             resume_queue: VecDeque::new(),
-            running_order: Vec::new(),
-            requests: BTreeMap::new(),
+            run_head: NIL,
+            run_tail: NIL,
+            run_len: 0,
+            pf_head: NIL,
+            pf_tail: NIL,
+            pf_len: 0,
             finished: Vec::new(),
             b_t: b0,
             steps_since_decision: u32::MAX, // decide on first step
             stats: SchedStats::default(),
-            bt_timeline: Vec::new(),
-            directive_log: VecDeque::new(),
-            decode_latencies: Vec::new(),
+            plan: StepPlan::default(),
+            outcome: StepOutcome::default(),
+            scratch_decode: Vec::new(),
+            report: StepReport::default(),
+            bt_timeline: RingLog::bounded(DIRECTIVE_LOG_CAP),
+            directive_log: RingLog::bounded(DIRECTIVE_LOG_CAP),
+            decode_latencies: RingLog::bounded(DIRECTIVE_LOG_CAP),
+            shadow_checks: false,
         }
     }
 
@@ -150,6 +227,24 @@ impl Scheduler {
     /// The directive currently governing admission/chunking/preemption.
     pub fn current_directive(&self) -> Directive {
         self.directive
+    }
+
+    /// Lift the caps on `bt_timeline`, `directive_log` and
+    /// `decode_latencies` so a full-run trace is retained — experiment
+    /// drivers call this for exact percentiles and plots; the
+    /// long-running serve path keeps the bounded rings.
+    pub fn retain_full_traces(&mut self) {
+        self.bt_timeline.set_unbounded();
+        self.directive_log.set_unbounded();
+        self.decode_latencies.set_unbounded();
+    }
+
+    /// Cross-check the O(1) incremental accounting (phase lists, counts,
+    /// cached KV aggregates) against full recomputation at the top of
+    /// every step. Panics on divergence — parity-test instrumentation,
+    /// not for production loops.
+    pub fn enable_shadow_checks(&mut self) {
+        self.shadow_checks = true;
     }
 
     /// Hot-swap the controller to the policy named by `kind`. Telemetry,
@@ -172,18 +267,166 @@ impl Scheduler {
         self.stats.reconfigs += 1;
     }
 
+    // ---- slab + intrusive-list plumbing -----------------------------
+
+    fn entry(&self, slot: u32) -> &SlotEntry {
+        self.slots[slot as usize].as_ref().expect("live request slot")
+    }
+
+    fn entry_mut(&mut self, slot: u32) -> &mut SlotEntry {
+        self.slots[slot as usize].as_mut().expect("live request slot")
+    }
+
+    fn alloc_slot(&mut self, req: Request) -> u32 {
+        let entry = SlotEntry {
+            req,
+            run_prev: NIL,
+            run_next: NIL,
+            pf_prev: NIL,
+            pf_next: NIL,
+            in_pf: false,
+            kv: KV_NO_SLOT,
+        };
+        match self.free_slots.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(entry);
+                s
+            }
+            None => {
+                self.slots.push(Some(entry));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Drop a slab entry, returning the request (boundary operation).
+    fn free_slot(&mut self, slot: u32) -> Request {
+        let e = self.slots[slot as usize].take().expect("live request slot");
+        self.by_id.remove(&e.req.id);
+        self.free_slots.push(slot);
+        e.req
+    }
+
+    fn run_push_back(&mut self, slot: u32) {
+        let tail = self.run_tail;
+        {
+            let e = self.entry_mut(slot);
+            e.run_prev = tail;
+            e.run_next = NIL;
+        }
+        if tail == NIL {
+            self.run_head = slot;
+        } else {
+            self.entry_mut(tail).run_next = slot;
+        }
+        self.run_tail = slot;
+        self.run_len += 1;
+    }
+
+    fn run_remove(&mut self, slot: u32) {
+        let (prev, next) = {
+            let e = self.entry(slot);
+            (e.run_prev, e.run_next)
+        };
+        if prev == NIL {
+            self.run_head = next;
+        } else {
+            self.entry_mut(prev).run_next = next;
+        }
+        if next == NIL {
+            self.run_tail = prev;
+        } else {
+            self.entry_mut(next).run_prev = prev;
+        }
+        let e = self.entry_mut(slot);
+        e.run_prev = NIL;
+        e.run_next = NIL;
+        self.run_len -= 1;
+    }
+
+    fn pf_push_back(&mut self, slot: u32) {
+        let tail = self.pf_tail;
+        {
+            let e = self.entry_mut(slot);
+            debug_assert!(!e.in_pf);
+            e.pf_prev = tail;
+            e.pf_next = NIL;
+            e.in_pf = true;
+        }
+        if tail == NIL {
+            self.pf_head = slot;
+        } else {
+            self.entry_mut(tail).pf_next = slot;
+        }
+        self.pf_tail = slot;
+        self.pf_len += 1;
+    }
+
+    fn pf_remove(&mut self, slot: u32) {
+        let (prev, next) = {
+            let e = self.entry(slot);
+            debug_assert!(e.in_pf);
+            (e.pf_prev, e.pf_next)
+        };
+        if prev == NIL {
+            self.pf_head = next;
+        } else {
+            self.entry_mut(prev).pf_next = next;
+        }
+        if next == NIL {
+            self.pf_tail = prev;
+        } else {
+            self.entry_mut(next).pf_prev = prev;
+        }
+        let e = self.entry_mut(slot);
+        e.pf_prev = NIL;
+        e.pf_next = NIL;
+        e.in_pf = false;
+        self.pf_len -= 1;
+    }
+
+    /// Add an admitted/resumed request to the running set, maintaining
+    /// the phase index: requests with prompt tokens left to prefill join
+    /// the prefill list as well.
+    fn enter_running(&mut self, slot: u32) {
+        self.run_push_back(slot);
+        if !self.entry(slot).req.prefill_done() {
+            self.pf_push_back(slot);
+        }
+    }
+
+    /// Remove a request from the running set and its phase index.
+    fn leave_running(&mut self, slot: u32) {
+        self.run_remove(slot);
+        if self.entry(slot).in_pf {
+            self.pf_remove(slot);
+        }
+    }
+
+    // ---- public queue/introspection API -----------------------------
+
     /// Submit a new request into its class queue.
     pub fn submit(&mut self, req: Request) {
         debug_assert_eq!(req.phase, Phase::Waiting);
+        debug_assert!(!self.by_id.contains_key(&req.id),
+                      "duplicate request id {}", req.id);
         self.telemetry.record_prompt(req.prompt_len);
-        self.waiting[req.class.rank()].push_back(req.id);
-        self.requests.insert(req.id, req);
+        let id = req.id;
+        let rank = req.class.rank();
+        let has_deadline = req.deadline.is_some();
+        let slot = self.alloc_slot(req);
+        self.by_id.insert(id, slot);
+        self.waiting[rank].push_back(slot);
+        if has_deadline {
+            self.waiting_deadlines += 1;
+        }
     }
 
     pub fn has_work(&self) -> bool {
         self.waiting.iter().any(|q| !q.is_empty())
             || !self.resume_queue.is_empty()
-            || !self.running_order.is_empty()
+            || self.run_len > 0
     }
 
     fn total_waiting(&self) -> usize {
@@ -205,7 +448,7 @@ impl Scheduler {
     }
 
     pub fn running_len(&self) -> usize {
-        self.running_order.len()
+        self.run_len
     }
 
     pub fn finished(&self) -> &[Request] {
@@ -220,19 +463,24 @@ impl Scheduler {
         self.b_t
     }
 
+    /// The in-flight request with this id, if any (boundary lookup —
+    /// tests and introspection).
+    pub fn request(&self, id: RequestId) -> Option<&Request> {
+        self.by_id.get(&id).map(|&s| &self.entry(s).req)
+    }
+
+    /// What the most recent non-idle [`Self::step`] did. Contents are
+    /// overwritten by the next non-idle step (recycled buffer).
+    pub fn last_report(&self) -> &StepReport {
+        &self.report
+    }
+
+    /// O(1): phase counts are maintained incrementally at phase
+    /// transitions — no scan over the running set.
     fn observe(&self, now: f64) -> Observation {
-        let pending_prefill = self.total_waiting()
-            + self.resume_queue.len()
-            + self
-                .running_order
-                .iter()
-                .filter(|id| !self.requests[id].prefill_done())
-                .count();
-        let running_decode = self
-            .running_order
-            .iter()
-            .filter(|id| self.requests[id].prefill_done())
-            .count();
+        let pending_prefill =
+            self.total_waiting() + self.resume_queue.len() + self.pf_len;
+        let running_decode = self.run_len - self.pf_len;
         self.telemetry.observe(
             now,
             self.kv.capacity_tokens(),
@@ -243,10 +491,15 @@ impl Scheduler {
         )
     }
 
-    /// One scheduler iteration. Returns `None` when there was nothing to
-    /// do (idle — the driver should sleep until the next arrival).
+    /// One scheduler iteration. Returns the step's elapsed engine time,
+    /// or `None` when there was nothing to do (idle — the driver should
+    /// sleep until the next arrival). Details of what ran are in
+    /// [`Self::last_report`].
     pub fn step<E: Engine + ?Sized>(&mut self, engine: &mut E, now: f64)
-                                    -> Result<Option<StepReport>> {
+                                    -> Result<Option<f64>> {
+        if self.shadow_checks {
+            self.verify_hot_state();
+        }
         // ---- 0. shed expired waiters before they count as load ----
         self.shed_expired(now);
 
@@ -262,54 +515,42 @@ impl Scheduler {
             self.stats.decisions += 1;
             self.stats.b_t_last = self.b_t;
             self.bt_timeline.push((now, self.b_t));
-            if self.directive_log.len() >= DIRECTIVE_LOG_CAP {
-                self.directive_log.pop_front();
-            }
-            self.directive_log.push_back((now, d));
+            self.directive_log.push((now, d));
         } else {
             self.steps_since_decision += 1;
         }
 
-        // ---- 2. resume + admission ----
-        let mut plan = StepPlan::default();
-        self.resume_and_admit(engine, now, &mut plan)?;
+        // ---- 2. resume + admission (into the recycled plan) ----
+        let mut plan = std::mem::take(&mut self.plan);
+        plan.clear();
+        self.resume_and_admit(engine, now, &mut plan);
 
         // ---- 3. plan the step ----
         let fused = self.directive.prefill_chunk.is_some();
-        let prefill_ids: Vec<RequestId> = self
-            .running_order
-            .iter()
-            .copied()
-            .filter(|id| !self.requests[id].prefill_done())
-            .collect();
-
         if fused {
-            self.plan_chunked_prefills(&prefill_ids, &mut plan);
-            self.plan_decodes(engine, &mut plan)?;
-        } else if !prefill_ids.is_empty() {
+            self.plan_chunked_prefills(&mut plan);
+            self.plan_decodes(engine, &mut plan);
+        } else if self.pf_len > 0 {
             // Segregated mode: prefill-only step, whole prompts.
-            for id in prefill_ids {
-                let r = &self.requests[&id];
-                let remaining = r.prompt_len - r.prefilled;
-                plan.prefills.push(PrefillWork {
-                    id,
-                    tokens: slice_tokens(r, r.prefilled, remaining),
-                    n_tokens: remaining,
-                    start: r.prefilled,
-                    is_last: true,
-                });
-            }
+            self.plan_whole_prefills(&mut plan);
         } else {
-            self.plan_decodes(engine, &mut plan)?;
+            self.plan_decodes(engine, &mut plan);
         }
 
         if plan.is_empty() {
+            self.plan = plan;
             return Ok(None);
         }
 
-        // ---- 4. execute ----
-        let outcome = engine.step(&plan)?;
-        let end = now + outcome.elapsed;
+        // ---- 4. execute (into the recycled outcome buffer) ----
+        let mut outcome = std::mem::take(&mut self.outcome);
+        if let Err(e) = engine.step(&plan, &mut outcome) {
+            self.plan = plan;
+            self.outcome = outcome;
+            return Err(e);
+        }
+        let elapsed = outcome.elapsed;
+        let end = now + elapsed;
 
         // ---- 5. account ----
         self.stats.steps += 1;
@@ -317,75 +558,110 @@ impl Scheduler {
             self.stats.decode_steps += 1;
             self.stats.decode_batch_sum += plan.decodes.len() as u64;
             self.telemetry
-                .record_decode_step(outcome.elapsed, plan.decodes.len() as u32);
-            self.decode_latencies.push(outcome.elapsed);
+                .record_decode_step(elapsed, plan.decodes.len() as u32);
+            self.decode_latencies.push(elapsed);
         }
         if !plan.prefills.is_empty() {
             self.stats.prefill_steps += 1;
             for p in &plan.prefills {
-                let r = self.requests.get_mut(&p.id).expect("prefill req");
-                r.prefilled += p.n_tokens;
-                if r.prefill_done() {
-                    r.phase = Phase::Decode;
+                let slot = *self.by_id.get(&p.id).expect("prefill req");
+                let done = {
+                    let e = self.entry_mut(slot);
+                    e.req.prefilled += p.n_tokens;
+                    if e.req.prefill_done() {
+                        e.req.phase = Phase::Decode;
+                        true
+                    } else {
+                        false
+                    }
+                };
+                if done {
+                    // Phase transition: leave the prefill index.
+                    self.pf_remove(slot);
                 }
             }
         }
-        let mut report = StepReport { elapsed: outcome.elapsed,
-                                      ..Default::default() };
-        for (id, tok) in &outcome.tokens {
-            let r = self.requests.get_mut(id).expect("token for known req");
-            if r.phase == Phase::Finished {
-                continue;
-            }
-            if !r.prompt_tokens.is_empty() {
-                r.output_tokens.push(*tok);
-            }
-            report.tokens.push((*id, *tok));
-            let done = r.record_token(end);
+        self.report.elapsed = elapsed;
+        self.report.tokens.clear();
+        self.report.finished.clear();
+        for &(id, tok) in &outcome.tokens {
+            let slot =
+                *self.by_id.get(&id).expect("token for known req");
+            let done = {
+                let e = self.entry_mut(slot);
+                if e.req.phase == Phase::Finished {
+                    continue;
+                }
+                if !e.req.prompt_tokens.is_empty() {
+                    e.req.output_tokens.push(tok);
+                }
+                e.req.record_token(end)
+            };
+            self.report.tokens.push((id, tok));
             if done {
-                self.finish(*id, engine);
-                report.finished.push(*id);
+                self.finish(slot, engine);
+                self.report.finished.push(id);
             }
         }
         self.telemetry.record_memory(end, self.kv.used_tokens(),
                                      self.kv.capacity_tokens());
-        Ok(Some(report))
+        self.plan = plan;
+        self.outcome = outcome;
+        Ok(Some(elapsed))
     }
 
-    fn finish<E: Engine + ?Sized>(&mut self, id: RequestId, engine: &mut E) {
-        let r = self.requests.remove(&id).expect("finishing known request");
-        self.telemetry.record_output(r.generated);
-        let _ = self.kv.free(id);
-        engine.release(id);
-        self.running_order.retain(|x| *x != id);
+    fn finish<E: Engine + ?Sized>(&mut self, slot: u32, engine: &mut E) {
+        self.leave_running(slot);
+        let req = self.free_slot(slot);
+        self.telemetry.record_output(req.generated);
+        let _ = self.kv.free(req.id);
+        engine.release(req.id);
         self.stats.finished += 1;
-        self.finished.push(r);
+        self.finished.push(req);
     }
 
     /// Drop still-waiting requests whose deadline (latest acceptable time
     /// to remain unadmitted) has passed. Running and preempted requests
     /// are never shed — they already hold progress worth keeping.
+    ///
+    /// O(1) when no waiter carries a deadline (tracked incrementally);
+    /// otherwise a single retain pass per class queue, reading each
+    /// deadline once, with no allocation.
     fn shed_expired(&mut self, now: f64) {
-        for q in self.waiting.iter_mut() {
-            // Common case: nothing expired — one scan, no allocation.
-            if !q.iter().any(|id| {
-                self.requests[id].deadline.is_some_and(|d| d < now)
-            }) {
-                continue;
-            }
-            let mut kept = VecDeque::with_capacity(q.len());
-            while let Some(id) = q.pop_front() {
-                if self.requests[&id].deadline.is_some_and(|d| d < now) {
-                    let mut r =
-                        self.requests.remove(&id).expect("queued req");
-                    r.terminate(FinishReason::DeadlineExceeded, now);
-                    self.stats.shed += 1;
-                    self.finished.push(r);
-                } else {
-                    kept.push_back(id);
+        if self.waiting_deadlines == 0 {
+            return;
+        }
+        let Scheduler {
+            waiting,
+            slots,
+            free_slots,
+            by_id,
+            finished,
+            stats,
+            waiting_deadlines,
+            ..
+        } = self;
+        for q in waiting.iter_mut() {
+            q.retain(|&slot| {
+                let expired = slots[slot as usize]
+                    .as_ref()
+                    .expect("queued request slot")
+                    .req
+                    .deadline
+                    .is_some_and(|d| d < now);
+                if !expired {
+                    return true;
                 }
-            }
-            *q = kept;
+                let e = slots[slot as usize].take().expect("queued slot");
+                let mut req = e.req;
+                by_id.remove(&req.id);
+                free_slots.push(slot);
+                req.terminate(FinishReason::DeadlineExceeded, now);
+                stats.shed += 1;
+                *waiting_deadlines -= 1;
+                finished.push(req);
+                false
+            });
         }
     }
 
@@ -427,8 +703,7 @@ impl Scheduler {
     /// admits strictly up to `b_t`, `Greedy` admits while prompt blocks
     /// fit up to its cap (vLLM static-greedy semantics).
     fn resume_and_admit<E: Engine + ?Sized>(&mut self, engine: &mut E,
-                                            now: f64, plan: &mut StepPlan)
-                                            -> Result<()> {
+                                            now: f64, plan: &mut StepPlan) {
         let cap = match self.directive.admission {
             AdmissionMode::Gated => self.b_t,
             AdmissionMode::Greedy { cap } => cap,
@@ -436,12 +711,11 @@ impl Scheduler {
         .min(engine.max_batch());
 
         loop {
-            let running = self.running_order.len() as u32;
-            if running >= cap {
+            if self.run_len as u32 >= cap {
                 break;
             }
             let from_resume = !self.resume_queue.is_empty();
-            let (id, class_idx) = if from_resume {
+            let (slot, class_idx) = if from_resume {
                 (*self.resume_queue.front().expect("non-empty"), None)
             } else {
                 match self.pick_waiting_class() {
@@ -452,7 +726,11 @@ impl Scheduler {
                     None => break,
                 }
             };
-            let r = &self.requests[&id];
+            let (id, prompt_len, max_new, resume_tokens, has_deadline) = {
+                let r = &self.entry(slot).req;
+                (r.id, r.prompt_len, r.max_new_tokens,
+                 r.resume_prefill_tokens(), r.deadline.is_some())
+            };
             // Swapped victim: bring blocks back instead of re-allocating.
             if from_resume && self.kv.is_swapped(id) {
                 let tokens = self.kv.tokens_of(id).unwrap_or(0);
@@ -463,46 +741,54 @@ impl Scheduler {
                 }
                 let moved = self.kv.swap_in(id).expect("swap_in checked");
                 plan.swap_in_tokens += moved as u64;
-                let r = self.requests.get_mut(&id).unwrap();
-                r.phase = Phase::Decode; // cache intact, continue decoding
+                // Cache intact, continue decoding (a half-prefilled
+                // victim re-enters the prefill index via enter_running).
+                self.entry_mut(slot).req.phase = Phase::Decode;
                 self.resume_queue.pop_front();
-                self.running_order.push(id);
+                self.enter_running(slot);
                 continue;
             }
             // Fresh admission / recompute resume: allocate prompt(+context).
             let first_alloc = if from_resume {
-                r.resume_prefill_tokens()
+                resume_tokens
             } else {
-                r.prompt_len
+                prompt_len
             };
             // Admission headroom: leave one block spare per running request
             // would be ideal; vLLM uses a small watermark.
             if !self.kv.can_grow(id, first_alloc) {
                 break;
             }
-            if r.prompt_len.max(1) + r.max_new_tokens > engine.max_seq() {
+            if prompt_len.max(1) + max_new > engine.max_seq() {
                 // Cannot ever fit this request on this engine: reject it
                 // (no WRR commit — rejection isn't an admission).
-                let mut r = self.requests.remove(&id).unwrap();
                 if from_resume {
                     self.resume_queue.pop_front();
                 } else {
                     self.waiting[class_idx.expect("waiting pick")]
                         .pop_front();
+                    if has_deadline {
+                        self.waiting_deadlines -= 1;
+                    }
                 }
-                r.terminate(FinishReason::Rejected, now);
+                let mut req = self.free_slot(slot);
+                req.terminate(FinishReason::Rejected, now);
                 self.stats.rejected += 1;
-                self.finished.push(r);
+                self.finished.push(req);
                 continue;
             }
             self.kv.allocate(id, first_alloc).expect("can_grow checked");
-            let r = self.requests.get_mut(&id).unwrap();
-            r.phase = Phase::Prefill;
-            if r.prefill_done() {
-                // Zero-length prompt: nothing to prefill, so no prefill
-                // step will ever flip the phase — go straight to decode
-                // instead of wedging the slot.
-                r.phase = Phase::Decode;
+            let kv_slot = self.kv.slot_of(id).expect("just allocated");
+            {
+                let e = self.entry_mut(slot);
+                e.kv = kv_slot;
+                e.req.phase = Phase::Prefill;
+                if e.req.prefill_done() {
+                    // Zero-length prompt: nothing to prefill, so no
+                    // prefill step will ever flip the phase — go straight
+                    // to decode instead of wedging the slot.
+                    e.req.phase = Phase::Decode;
+                }
             }
             if from_resume {
                 self.resume_queue.pop_front();
@@ -510,106 +796,118 @@ impl Scheduler {
                 let c = class_idx.expect("waiting pick");
                 self.commit_pick(c);
                 self.waiting[c].pop_front();
+                if has_deadline {
+                    self.waiting_deadlines -= 1;
+                }
                 self.stats.admitted += 1;
             }
-            self.running_order.push(id);
+            self.enter_running(slot);
         }
-        Ok(())
+    }
+
+    /// Segregated mode: whole remaining prompts for every request in the
+    /// prefill index (admission order).
+    fn plan_whole_prefills(&mut self, plan: &mut StepPlan) {
+        let mut cur = self.pf_head;
+        while cur != NIL {
+            let e = self.entry(cur);
+            let r = &e.req;
+            let remaining = r.prompt_len - r.prefilled;
+            plan.push_prefill(r.id, chunk_slice(r, r.prefilled, remaining),
+                              remaining, r.prefilled, true);
+            cur = e.pf_next;
+        }
     }
 
     /// PD fusion: take up to the directive's `prefill_chunk` prompt
     /// tokens across the requests still prefilling (FIFO over admission
-    /// order).
-    fn plan_chunked_prefills(&mut self, prefill_ids: &[RequestId],
-                             plan: &mut StepPlan) {
+    /// order via the prefill index).
+    fn plan_chunked_prefills(&mut self, plan: &mut StepPlan) {
         let mut budget =
             self.directive.prefill_chunk.unwrap_or(0).max(1);
-        for &id in prefill_ids {
-            if budget == 0 {
-                break;
-            }
-            let r = &self.requests[&id];
+        let mut cur = self.pf_head;
+        while cur != NIL && budget > 0 {
+            let e = self.entry(cur);
+            let r = &e.req;
             let remaining = r.prompt_len - r.prefilled;
             let take = remaining.min(budget);
-            if take == 0 {
-                continue;
+            if take > 0 {
+                plan.push_prefill(r.id, chunk_slice(r, r.prefilled, take),
+                                  take, r.prefilled, take == remaining);
+                budget -= take;
             }
-            plan.prefills.push(PrefillWork {
-                id,
-                tokens: slice_tokens(r, r.prefilled, take),
-                n_tokens: take,
-                start: r.prefilled,
-                is_last: take == remaining,
-            });
-            budget -= take;
+            cur = e.pf_next;
         }
     }
 
     /// Decode planning: grow each decoding request by one token, preempting
-    /// victims on memory pressure.
+    /// victims on memory pressure. Work is O(decode batch); the snapshot
+    /// lives in a recycled scratch buffer (preemption mutates the running
+    /// list mid-loop, so iteration runs over the snapshot, exactly like
+    /// the collect-then-iterate path this replaced).
     fn plan_decodes<E: Engine + ?Sized>(&mut self, engine: &mut E,
-                                        plan: &mut StepPlan) -> Result<()> {
-        let decoding: Vec<RequestId> = self
-            .running_order
-            .iter()
-            .copied()
-            .filter(|id| {
-                let r = &self.requests[id];
-                r.prefill_done() && r.phase == Phase::Decode
-            })
-            .collect();
+                                        plan: &mut StepPlan) {
+        let mut scratch = std::mem::take(&mut self.scratch_decode);
+        scratch.clear();
+        let mut cur = self.run_head;
+        while cur != NIL {
+            let e = self.entry(cur);
+            if e.req.prefill_done() && e.req.phase == Phase::Decode {
+                scratch.push(cur);
+            }
+            cur = e.run_next;
+        }
         // If b_t shrank below the running decode count we do NOT evict
         // (the paper clamps b_t ≥ N^d); the batch drains naturally.
-        for id in decoding {
+        for &slot in scratch.iter() {
             // A preemption triggered by an earlier iteration may have
-            // evicted this request already. Checking the phase is O(log n)
-            // vs the O(n) running_order scan this replaced (§Perf: the
-            // scan was 2×O(n) per decode → O(n²) per step at b=256).
-            if self.requests[&id].phase != Phase::Decode {
+            // evicted this request already; its phase says so (preempted
+            // requests stay in the slab, so the slot is still live).
+            let (phase, kv_slot, id, position) = {
+                let e = self.entry(slot);
+                (e.req.phase, e.kv, e.req.id,
+                 e.req.prefilled + e.req.generated)
+            };
+            if phase != Phase::Decode {
                 continue;
             }
             // Ensure one more token fits; preempt victims if not.
-            while !self.kv.can_grow(id, 1) {
-                if !self.preempt_victim(engine, id, plan) {
+            while !self.kv.can_grow_at(kv_slot, 1) {
+                if !self.preempt_victim(engine, slot, plan) {
                     break; // nothing left to preempt; skip this decode
                 }
             }
-            if self.requests[&id].phase != Phase::Decode
-                || !self.kv.can_grow(id, 1)
+            if self.entry(slot).req.phase != Phase::Decode
+                || !self.kv.can_grow_at(kv_slot, 1)
             {
                 continue;
             }
-            self.kv.grow(id, 1).expect("can_grow checked");
-            let r = &self.requests[&id];
-            plan.decodes.push(DecodeWork {
-                id,
-                position: r.prefilled + r.generated,
-            });
+            self.kv.grow_at(kv_slot, 1).expect("can_grow checked");
+            plan.decodes.push(DecodeWork { id, position });
         }
-        Ok(())
+        self.scratch_decode = scratch;
     }
 
-    /// Preempt the newest running request other than `protect`.
+    /// Preempt the newest running request other than `protect` (the tail
+    /// of the admission-ordered running list — O(1) to find and unlink).
     /// Returns false when no victim exists.
     fn preempt_victim<E: Engine + ?Sized>(&mut self, engine: &mut E,
-                                          protect: RequestId,
+                                          protect: u32,
                                           plan: &mut StepPlan) -> bool {
-        let victim = match self
-            .running_order
-            .iter()
-            .rev()
-            .copied()
-            .find(|&id| id != protect)
-        {
-            Some(v) => v,
-            None => return false,
-        };
-        self.running_order.retain(|x| *x != victim);
+        let mut victim = self.run_tail;
+        if victim == protect && victim != NIL {
+            victim = self.entry(victim).run_prev;
+        }
+        if victim == NIL {
+            return false;
+        }
+        let victim_id = self.entry(victim).req.id;
+        self.leave_running(victim);
         plan.preempt_events += 1;
         // The victim may already have work in this step's plan; drop it so
         // the engine neither runs nor reports tokens for it.
-        plan.decodes.retain(|d| d.id != victim);
-        plan.prefills.retain(|p| p.id != victim);
+        plan.decodes.retain(|d| d.id != victim_id);
+        plan.prefills.retain(|p| p.id != victim_id);
         let mode = match self.directive.swap_hint {
             SwapHint::Auto => self.cfg.preempt,
             SwapHint::Swap => PreemptMode::Swap,
@@ -617,13 +915,13 @@ impl Scheduler {
         };
         match mode {
             PreemptMode::Swap => {
-                match self.kv.swap_out(victim) {
+                match self.kv.swap_out(victim_id) {
                     Ok(tokens) => {
                         plan.swap_out_tokens += tokens as u64;
-                        let r = self.requests.get_mut(&victim).unwrap();
-                        r.preemptions += 1;
-                        r.phase = Phase::Preempted;
-                        engine.release(victim);
+                        let e = self.entry_mut(victim);
+                        e.req.preemptions += 1;
+                        e.req.phase = Phase::Preempted;
+                        engine.release(victim_id);
                         self.resume_queue.push_front(victim);
                         self.stats.preempt_swap += 1;
                     }
@@ -641,11 +939,13 @@ impl Scheduler {
     }
 
     fn recompute_victim<E: Engine + ?Sized>(&mut self, engine: &mut E,
-                                            victim: RequestId) {
-        let _ = self.kv.free(victim);
-        engine.release(victim);
-        let r = self.requests.get_mut(&victim).unwrap();
-        r.preempt_recompute();
+                                            victim: u32) {
+        let id = self.entry(victim).req.id;
+        let _ = self.kv.free(id);
+        engine.release(id);
+        let e = self.entry_mut(victim);
+        e.kv = KV_NO_SLOT;
+        e.req.preempt_recompute();
         self.resume_queue.push_front(victim);
         self.stats.preempt_recompute += 1;
     }
@@ -657,46 +957,116 @@ impl Scheduler {
     /// ids (cancel is idempotent).
     pub fn cancel<E: Engine + ?Sized>(&mut self, engine: &mut E,
                                       id: RequestId, now: f64) -> bool {
-        let Some(phase) = self.requests.get(&id).map(|r| r.phase) else {
+        let Some(&slot) = self.by_id.get(&id) else {
             return false;
+        };
+        let (phase, rank, has_deadline) = {
+            let r = &self.entry(slot).req;
+            (r.phase, r.class.rank(), r.deadline.is_some())
         };
         match phase {
             Phase::Finished => return false,
             Phase::Waiting => {
-                for q in self.waiting.iter_mut() {
-                    q.retain(|x| *x != id);
+                self.waiting[rank].retain(|&x| x != slot);
+                if has_deadline {
+                    self.waiting_deadlines -= 1;
                 }
             }
             Phase::Preempted => {
-                self.resume_queue.retain(|x| *x != id);
+                self.resume_queue.retain(|&x| x != slot);
                 // Swap victims still hold blocks (device or swap pool);
                 // recompute victims hold none — free is best-effort.
                 let _ = self.kv.free(id);
                 engine.release(id);
             }
             Phase::Prefill | Phase::Decode => {
-                self.running_order.retain(|x| *x != id);
+                self.leave_running(slot);
                 let _ = self.kv.free(id);
                 engine.release(id);
             }
         }
-        let mut r = self.requests.remove(&id).expect("checked above");
-        r.terminate(FinishReason::Cancelled, now);
+        let mut req = self.free_slot(slot);
+        req.terminate(FinishReason::Cancelled, now);
         self.stats.cancelled += 1;
-        self.finished.push(r);
+        self.finished.push(req);
         true
+    }
+
+    /// Recompute every incrementally-maintained quantity from a full
+    /// scan — the exact per-step scans the old hot path performed — and
+    /// panic on any divergence. See [`Self::enable_shadow_checks`].
+    fn verify_hot_state(&self) {
+        // Running list: links sound, members running, phase index exact.
+        let mut n_run = 0usize;
+        let mut n_pf = 0usize;
+        let mut prev = NIL;
+        let mut cur = self.run_head;
+        while cur != NIL {
+            let e = self.entry(cur);
+            assert_eq!(e.run_prev, prev, "run list back-link broken");
+            assert!(
+                matches!(e.req.phase, Phase::Prefill | Phase::Decode),
+                "run list holds non-running request {} ({:?})",
+                e.req.id, e.req.phase
+            );
+            assert_eq!(
+                e.in_pf,
+                !e.req.prefill_done(),
+                "prefill-index membership wrong for request {}",
+                e.req.id
+            );
+            if e.in_pf {
+                n_pf += 1;
+            }
+            n_run += 1;
+            prev = cur;
+            cur = e.run_next;
+        }
+        assert_eq!(self.run_tail, prev, "run tail stale");
+        assert_eq!(n_run, self.run_len, "run_len drift");
+        assert_eq!(n_pf, self.pf_len, "pf_len drift");
+        let mut n = 0usize;
+        let mut prev = NIL;
+        let mut cur = self.pf_head;
+        while cur != NIL {
+            let e = self.entry(cur);
+            assert_eq!(e.pf_prev, prev, "pf list back-link broken");
+            assert!(e.in_pf && !e.req.prefill_done());
+            n += 1;
+            prev = cur;
+            cur = e.pf_next;
+        }
+        assert_eq!(self.pf_tail, prev, "pf tail stale");
+        assert_eq!(n, self.pf_len, "pf list length drift");
+        // Waiting-deadline gate.
+        let wd = self
+            .waiting
+            .iter()
+            .flat_map(|q| q.iter())
+            .filter(|&&s| self.entry(s).req.deadline.is_some())
+            .count();
+        assert_eq!(wd, self.waiting_deadlines, "deadline count drift");
+        // Slab ↔ index coherence.
+        let live = self.slots.iter().flatten().count();
+        assert_eq!(live, self.by_id.len(), "slab/index drift");
+        assert_eq!(live + self.free_slots.len(), self.slots.len(),
+                   "slab free-list drift");
+        // KV cached aggregates vs full recomputation.
+        if let Err(e) = self.kv.check_invariants() {
+            panic!("kv invariant violated: {e}");
+        }
     }
 }
 
-/// Token slice for the real engine (empty when the request carries no
-/// concrete tokens — simulation).
-fn slice_tokens(r: &Request, start: u32, n: u32) -> Vec<i32> {
+/// Token-id slice of a prompt chunk, for the plan's arena (empty when
+/// the request carries no concrete tokens — simulation).
+fn chunk_slice(r: &Request, start: u32, n: u32) -> &[i32] {
     if r.prompt_tokens.is_empty() {
-        return Vec::new();
+        return &[];
     }
     let s = start as usize;
-    let e = (start + n) as usize;
-    r.prompt_tokens[s..e.min(r.prompt_tokens.len())].to_vec()
+    let e = (s + n as usize).min(r.prompt_tokens.len());
+    &r.prompt_tokens[s..e]
 }
 
 #[cfg(test)]
@@ -713,7 +1083,10 @@ mod tests {
         let m = pangu_7b();
         let hw = node_for(&m);
         let engine = SimEngine::new(&m, &hw);
-        let sched = Scheduler::new(cfg, eta, eta, 128.0, 128.0);
+        let mut sched = Scheduler::new(cfg, eta, eta, 128.0, 128.0);
+        // Every unit-test run cross-checks the incremental hot-path
+        // accounting against full rescans.
+        sched.enable_shadow_checks();
         (sched, engine, VirtualClock::new())
     }
 
@@ -722,8 +1095,8 @@ mod tests {
         let mut steps = 0;
         while sched.has_work() && steps < max_steps {
             let rep = sched.step(engine, clock.now()).unwrap();
-            if let Some(rep) = rep {
-                clock.advance(rep.elapsed);
+            if let Some(elapsed) = rep {
+                clock.advance(elapsed);
             } else {
                 break;
             }
@@ -789,6 +1162,7 @@ mod tests {
         let hw = node_for(&m);
         let mut engine = SimEngine::new(&m, &hw);
         let mut s = Scheduler::new(cfg, 2_000, 100_000, 64.0, 128.0);
+        s.enable_shadow_checks();
         let mut c = VirtualClock::new();
         for i in 0..20 {
             s.submit(Request::new(i, 64, 128, 0.0));
@@ -825,6 +1199,7 @@ mod tests {
         let hw = node_for(&m);
         let mut engine = SimEngine::new(&m, &hw);
         let mut s = Scheduler::new(cfg, 100_000, 0, 128.0, 16.0);
+        s.enable_shadow_checks();
         let mut c = VirtualClock::new();
         for i in 0..4 {
             s.submit(Request::new(i, 128, 16, 0.0));
@@ -832,7 +1207,7 @@ mod tests {
         // First step: chunk budget 32 means at most 32 prompt tokens move.
         s.step(&mut engine, c.now()).unwrap();
         let prefilled: u32 = (0..4)
-            .filter_map(|i| s.requests.get(&i))
+            .filter_map(|i| s.request(i))
             .map(|r| r.prefilled)
             .sum();
         assert!(prefilled <= 32, "prefilled {prefilled} > budget");
@@ -910,8 +1285,8 @@ mod tests {
         s.submit(Request::new(1, 64, 16, 0.0));
         // Step until request 0 is decoding with KV resident.
         for _ in 0..50 {
-            if let Some(rep) = s.step(&mut e, c.now()).unwrap() {
-                c.advance(rep.elapsed);
+            if let Some(elapsed) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(elapsed);
             }
             if s.kv.tokens_of(0).unwrap_or(0) > 64 {
                 break;
@@ -991,8 +1366,8 @@ mod tests {
         }
         // Run a while under the tight fixed batch…
         for _ in 0..40 {
-            if let Some(rep) = s.step(&mut e, c.now()).unwrap() {
-                c.advance(rep.elapsed);
+            if let Some(elapsed) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(elapsed);
             }
         }
         assert_eq!(s.current_bt(), 2);
@@ -1058,6 +1433,7 @@ mod tests {
         let hw = node_for(&m);
         let mut engine = SimEngine::new(&m, &hw);
         let mut s = Scheduler::new(cfg, 2_000, 100_000, 64.0, 128.0);
+        s.enable_shadow_checks();
         s.install_controller(Box::new(SwapHinting { cap: 256 }));
         let mut c = VirtualClock::new();
         for i in 0..20 {
@@ -1097,5 +1473,81 @@ mod tests {
         assert!(r.ttft().unwrap() > 0.0);
         assert!(r.mean_tbt().unwrap() > 0.0);
         assert!(r.e2e_latency().unwrap() >= r.ttft().unwrap());
+    }
+
+    #[test]
+    fn last_report_exposes_step_tokens_and_finishes() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::MemoryAware, 100_000);
+        s.submit(Request::new(7, 8, 1, 0.0));
+        let mut saw_finish = false;
+        while s.has_work() {
+            match s.step(&mut e, c.now()).unwrap() {
+                Some(elapsed) => {
+                    assert_eq!(s.last_report().elapsed, elapsed);
+                    if s.last_report().finished.contains(&7) {
+                        assert!(s
+                            .last_report()
+                            .tokens
+                            .iter()
+                            .any(|(id, _)| *id == 7));
+                        saw_finish = true;
+                    }
+                    c.advance(elapsed);
+                }
+                None => break,
+            }
+        }
+        assert!(saw_finish, "finish must surface in the step report");
+    }
+
+    #[test]
+    fn slab_recycles_slots_across_generations() {
+        // Churn many generations of requests through the scheduler: the
+        // slab must reuse vacated slots instead of growing without bound.
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::MemoryAware, 100_000);
+        for gen in 0..6u64 {
+            for i in 0..10 {
+                s.submit(Request::new(gen * 100 + i, 32, 4, 0.0));
+            }
+            run_all(&mut s, &mut e, &mut c, 10_000);
+            assert_eq!(s.finished().len() as u64, (gen + 1) * 10);
+        }
+        assert!(
+            s.slots.len() <= 10,
+            "slab grew to {} slots for 10 concurrent requests",
+            s.slots.len()
+        );
+        assert_eq!(s.by_id.len(), 0);
+        assert_eq!(s.free_slots.len(), s.slots.len());
+    }
+
+    #[test]
+    fn step_buffers_are_recycled_not_regrown() {
+        // After warmup the recycled plan/report buffers must keep their
+        // capacity across steps (the allocation-free contract; the
+        // counting-allocator integration test asserts the strong form).
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 8 }, 100_000);
+        for i in 0..8 {
+            s.submit(Request::new(i, 16, 400, 0.0));
+        }
+        for _ in 0..50 {
+            if let Some(el) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(el);
+            }
+        }
+        let cap_decodes = s.plan.decodes.capacity();
+        let cap_tokens = s.report.tokens.capacity();
+        let cap_scratch = s.scratch_decode.capacity();
+        for _ in 0..200 {
+            if let Some(el) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(el);
+            }
+        }
+        assert_eq!(s.plan.decodes.capacity(), cap_decodes);
+        assert_eq!(s.report.tokens.capacity(), cap_tokens);
+        assert_eq!(s.scratch_decode.capacity(), cap_scratch);
     }
 }

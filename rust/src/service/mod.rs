@@ -41,7 +41,7 @@ use crate::request::{FinishReason, Request, RequestId};
 use crate::scheduler::Scheduler;
 use crate::tokenizer;
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -500,7 +500,7 @@ fn fail_pending(commands: &Receiver<Command>, message: &str) {
 /// and every stream has received its terminal event. (Waiters registered
 /// on an idle service resolve on the next iteration.)
 fn resolve_drains(waiters: &mut Vec<Sender<()>>, sched: &Scheduler,
-                  watchers: &BTreeMap<RequestId, Sender<GenEvent>>) {
+                  watchers: &HashMap<RequestId, Sender<GenEvent>>) {
     if waiters.is_empty() || sched.has_work() || !watchers.is_empty() {
         return;
     }
@@ -541,8 +541,9 @@ fn publish(shared: &Shared, sched: &Scheduler, label: &str) {
 fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
                commands: &Receiver<Command>, shared: &Shared) {
     let clock = std::time::Instant::now();
-    let mut watchers: BTreeMap<RequestId, Sender<GenEvent>> = BTreeMap::new();
-    let mut texts: BTreeMap<RequestId, Vec<i32>> = BTreeMap::new();
+    // Hot-path maps: looked up per emitted token, so hashed not ordered.
+    let mut watchers: HashMap<RequestId, Sender<GenEvent>> = HashMap::new();
+    let mut texts: HashMap<RequestId, Vec<i32>> = HashMap::new();
     let mut drain_waiters: Vec<Sender<()>> = Vec::new();
     let mut label = sched.controller_label();
     while !shared.shutdown.load(Ordering::SeqCst) {
@@ -632,8 +633,8 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
         if sched.has_work() {
             let now = clock.elapsed().as_secs_f64();
             match sched.step(engine.as_mut(), now) {
-                Ok(Some(report)) => {
-                    for (id, tok) in &report.tokens {
+                Ok(Some(_elapsed)) => {
+                    for (id, tok) in &sched.last_report().tokens {
                         if let Some(tx) = watchers.get(id) {
                             if let Some(buf) = texts.get_mut(id) {
                                 buf.push(*tok);

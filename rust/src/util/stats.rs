@@ -106,22 +106,98 @@ impl Ewma {
 }
 
 /// Fixed-capacity window over recent samples with O(n log n) percentile
-/// queries (n is small — a few hundred latency samples).
+/// queries (n is small — a few hundred latency samples). The sum is
+/// maintained incrementally so [`SlidingWindow::mean`] is O(1) — it sits
+/// on the scheduler's per-step path via `Telemetry::observe`.
 #[derive(Debug, Clone)]
 pub struct SlidingWindow {
     cap: usize,
     buf: VecDeque<f64>,
+    sum: f64,
 }
 
 impl SlidingWindow {
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
-        SlidingWindow { cap, buf: VecDeque::with_capacity(cap) }
+        SlidingWindow { cap, buf: VecDeque::with_capacity(cap), sum: 0.0 }
     }
 
     pub fn push(&mut self, x: f64) {
         if self.buf.len() == self.cap {
+            if let Some(old) = self.buf.pop_front() {
+                self.sum -= old;
+            }
+        }
+        self.sum += x;
+        self.buf.push_back(x);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// O(1): running sum / len (the sum is updated on push/evict).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.sum / self.buf.len() as f64
+        }
+    }
+
+    /// Linear-interpolated percentile, p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(&mut self.buf.iter().copied().collect::<Vec<_>>(), p)
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.sum = 0.0;
+    }
+}
+
+/// Bounded append-only trace: a ring that keeps the most recent `cap`
+/// entries (storage preallocated, so pushes never allocate) and counts
+/// what it dropped. The long-running serve path uses the bounded form;
+/// experiment drivers lift the cap with [`RingLog::set_unbounded`] to
+/// keep exact full-run traces (percentiles over every sample).
+#[derive(Debug, Clone)]
+pub struct RingLog<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl<T> RingLog<T> {
+    pub fn bounded(cap: usize) -> Self {
+        assert!(cap > 0);
+        // Preallocate the whole ring (bounded pushes never allocate —
+        // part of the scheduler's allocation-free steady-state story),
+        // clamped so a huge cap cannot demand a huge upfront buffer.
+        RingLog {
+            buf: VecDeque::with_capacity(cap.min(65_536)),
+            cap,
+            dropped: 0,
+        }
+    }
+
+    /// Lift the cap: retain every entry from now on (experiment mode).
+    pub fn set_unbounded(&mut self) {
+        self.cap = usize::MAX;
+    }
+
+    pub fn is_bounded(&self) -> bool {
+        self.cap != usize::MAX
+    }
+
+    pub fn push(&mut self, x: T) {
+        if self.buf.len() >= self.cap {
             self.buf.pop_front();
+            self.dropped += 1;
         }
         self.buf.push_back(x);
     }
@@ -134,21 +210,32 @@ impl SlidingWindow {
         self.buf.is_empty()
     }
 
-    pub fn mean(&self) -> f64 {
-        if self.buf.is_empty() {
-            0.0
-        } else {
-            self.buf.iter().sum::<f64>() / self.buf.len() as f64
-        }
+    /// Entries evicted by the cap so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
     }
 
-    /// Linear-interpolated percentile, p in [0, 100].
-    pub fn percentile(&self, p: f64) -> f64 {
-        percentile_of(&mut self.buf.iter().copied().collect::<Vec<_>>(), p)
+    pub fn last(&self) -> Option<&T> {
+        self.buf.back()
     }
 
-    pub fn clear(&mut self) {
-        self.buf.clear();
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.buf.iter()
+    }
+}
+
+impl<T: Clone> RingLog<T> {
+    pub fn to_vec(&self) -> Vec<T> {
+        self.buf.iter().cloned().collect()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a RingLog<T> {
+    type Item = &'a T;
+    type IntoIter = std::collections::vec_deque::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.buf.iter()
     }
 }
 
@@ -312,6 +399,50 @@ mod tests {
         }
         assert_eq!(w.len(), 3);
         assert!((w.mean() - 3.0).abs() < 1e-12); // 2,3,4
+    }
+
+    #[test]
+    fn sliding_window_running_sum_matches_recompute() {
+        // The O(1) mean must track a from-scratch recomputation through
+        // heavy eviction churn (drift would skew the SLA controller).
+        let mut w = SlidingWindow::new(7);
+        for i in 0..5_000 {
+            w.push(((i as f64) * 0.37).sin() * 0.05 + 0.05);
+            let exact =
+                w.buf.iter().sum::<f64>() / w.buf.len() as f64;
+            assert!((w.mean() - exact).abs() < 1e-12,
+                    "drift at i={i}: {} vs {exact}", w.mean());
+        }
+        w.clear();
+        assert_eq!(w.mean(), 0.0);
+        w.push(2.0);
+        assert_eq!(w.mean(), 2.0);
+    }
+
+    #[test]
+    fn ring_log_caps_and_counts_drops() {
+        let mut r: RingLog<u32> = RingLog::bounded(3);
+        assert!(r.is_empty());
+        for i in 0..5 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.to_vec(), vec![2, 3, 4]);
+        assert_eq!(r.last(), Some(&4));
+        assert_eq!(r.iter().copied().collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ring_log_unbounded_keeps_everything() {
+        let mut r: RingLog<u32> = RingLog::bounded(2);
+        r.set_unbounded();
+        assert!(!r.is_bounded());
+        for i in 0..100 {
+            r.push(i);
+        }
+        assert_eq!(r.len(), 100);
+        assert_eq!(r.dropped(), 0);
     }
 
     #[test]

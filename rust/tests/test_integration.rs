@@ -211,9 +211,10 @@ struct RecordingEngine {
 }
 
 impl Engine for RecordingEngine {
-    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome> {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
         self.last_prefill_tokens = plan.prefill_tokens();
-        self.inner.step(plan)
+        self.inner.step(plan, out)
     }
 
     fn release(&mut self, id: u64) {
@@ -262,7 +263,7 @@ fn chunked_prefill_directives_adapt_and_are_honored() {
         let mut guard = 0;
         while sched.has_work() && guard < 100_000 {
             match sched.step(&mut engine, clock.now()).unwrap() {
-                Some(r) => {
+                Some(elapsed) => {
                     // The step that just ran was planned under the
                     // directive decided at its top.
                     let budget = sched
@@ -275,7 +276,7 @@ fn chunked_prefill_directives_adapt_and_are_honored() {
                         "step moved {} prefill tokens over budget {budget}",
                         engine.last_prefill_tokens
                     );
-                    clock.advance(r.elapsed);
+                    clock.advance(elapsed);
                 }
                 None => break,
             }
@@ -326,8 +327,8 @@ fn engine_trait_object_works() {
     sched.submit(Request::new(1, 32, 4, 0.0));
     let mut now = 0.0;
     while sched.has_work() {
-        if let Some(r) = sched.step(engine.as_mut(), now).unwrap() {
-            now += r.elapsed;
+        if let Some(elapsed) = sched.step(engine.as_mut(), now).unwrap() {
+            now += elapsed;
         }
     }
     assert_eq!(sched.finished().len(), 1);

@@ -9,7 +9,7 @@
 
 use dynabatch::config::{PolicyKind, SchedulerConfig};
 use dynabatch::engine::pjrt::PjrtEngine;
-use dynabatch::engine::{DecodeWork, Engine, PrefillWork, StepPlan};
+use dynabatch::engine::{DecodeWork, Engine, StepPlan};
 use dynabatch::request::Request;
 use dynabatch::scheduler::Scheduler;
 use dynabatch::tokenizer;
@@ -25,32 +25,32 @@ fn artifacts_dir() -> Option<PathBuf> {
     }
 }
 
+/// Decode-only plan over (id, position) pairs. (`StepPlan` carries a
+/// private token arena now, so struct-update construction is reserved
+/// for in-crate code; build through the public fields/API instead.)
+fn decode_only(items: &[(u64, u32)]) -> StepPlan {
+    let mut p = StepPlan::default();
+    for &(id, position) in items {
+        p.decodes.push(DecodeWork { id, position });
+    }
+    p
+}
+
 /// Drive one prompt through prefill + n decode steps, returning tokens.
 fn generate(engine: &mut PjrtEngine, id: u64, prompt: &str, n: u32)
             -> Vec<i32> {
     let tokens = tokenizer::encode(prompt);
     let prompt_len = tokens.len() as u32;
-    let plan = StepPlan {
-        prefills: vec![PrefillWork {
-            id,
-            n_tokens: prompt_len,
-            tokens,
-            start: 0,
-            is_last: true,
-        }],
-        ..Default::default()
-    };
-    let out = engine.step(&plan).unwrap();
+    let mut plan = StepPlan::default();
+    plan.push_prefill(id, &tokens, prompt_len, 0, true);
+    let out = engine.step_owned(&plan).unwrap();
     let mut got: Vec<i32> =
         out.tokens.iter().filter(|(i, _)| *i == id).map(|(_, t)| *t)
             .collect();
     assert_eq!(got.len(), 1, "prefill must emit the first token");
     for k in 1..n {
-        let plan = StepPlan {
-            decodes: vec![DecodeWork { id, position: prompt_len + k - 1 }],
-            ..Default::default()
-        };
-        let out = engine.step(&plan).unwrap();
+        let plan = decode_only(&[(id, prompt_len + k - 1)]);
+        let out = engine.step_owned(&plan).unwrap();
         got.extend(out.tokens.iter().filter(|(i, _)| *i == id)
                       .map(|(_, t)| *t));
     }
@@ -86,29 +86,18 @@ fn batched_equals_solo_generation() {
     let ta = tokenizer::encode("first prompt");
     let tb = tokenizer::encode("a different prompt!");
     let (la, lb) = (ta.len() as u32, tb.len() as u32);
-    let plan = StepPlan {
-        prefills: vec![
-            PrefillWork { id: 10, n_tokens: la, tokens: ta, start: 0,
-                          is_last: true },
-            PrefillWork { id: 20, n_tokens: lb, tokens: tb, start: 0,
-                          is_last: true },
-        ],
-        ..Default::default()
-    };
-    let out = eng.step(&plan).unwrap();
+    let mut plan = StepPlan::default();
+    plan.push_prefill(10, &ta, la, 0, true);
+    plan.push_prefill(20, &tb, lb, 0, true);
+    let out = eng.step_owned(&plan).unwrap();
     let mut got_a: Vec<i32> = out.tokens.iter()
         .filter(|(i, _)| *i == 10).map(|(_, t)| *t).collect();
     let mut got_b: Vec<i32> = out.tokens.iter()
         .filter(|(i, _)| *i == 20).map(|(_, t)| *t).collect();
     for k in 1..6u32 {
-        let plan = StepPlan {
-            decodes: vec![
-                DecodeWork { id: 10, position: la + k - 1 },
-                DecodeWork { id: 20, position: lb + k - 1 },
-            ],
-            ..Default::default()
-        };
-        let out = eng.step(&plan).unwrap();
+        let plan =
+            decode_only(&[(10, la + k - 1), (20, lb + k - 1)]);
+        let out = eng.step_owned(&plan).unwrap();
         got_a.extend(out.tokens.iter().filter(|(i, _)| *i == 10)
                         .map(|(_, t)| *t));
         got_b.extend(out.tokens.iter().filter(|(i, _)| *i == 20)
@@ -130,52 +119,36 @@ fn bucket_migration_preserves_generation() {
     let mut eng = PjrtEngine::load(&dir).unwrap();
     let toks = tokenizer::encode("migration probe");
     let l = toks.len() as u32;
-    let plan = StepPlan {
-        prefills: vec![PrefillWork { id: 1, n_tokens: l, tokens: toks,
-                                     start: 0, is_last: true }],
-        ..Default::default()
-    };
-    let out = eng.step(&plan).unwrap();
+    let mut plan = StepPlan::default();
+    plan.push_prefill(1, &toks, l, 0, true);
+    let out = eng.step_owned(&plan).unwrap();
     assert_eq!(eng.bucket(), 1);
     let mut got: Vec<i32> =
         out.tokens.iter().map(|(_, t)| *t).collect();
     // 4 decodes solo…
     for k in 1..5u32 {
-        let plan = StepPlan {
-            decodes: vec![DecodeWork { id: 1, position: l + k - 1 }],
-            ..Default::default()
-        };
-        got.extend(eng.step(&plan).unwrap().tokens.iter()
+        let plan = decode_only(&[(1, l + k - 1)]);
+        got.extend(eng.step_owned(&plan).unwrap().tokens.iter()
                       .map(|(_, t)| *t));
     }
     // …admit two more requests → slot demand 3 → migrate to bucket 4.
     let t2 = tokenizer::encode("noise A");
     let t3 = tokenizer::encode("noise BB");
     let (l2, l3) = (t2.len() as u32, t3.len() as u32);
-    let plan = StepPlan {
-        prefills: vec![
-            PrefillWork { id: 2, n_tokens: l2, tokens: t2, start: 0,
-                          is_last: true },
-            PrefillWork { id: 3, n_tokens: l3, tokens: t3, start: 0,
-                          is_last: true },
-        ],
-        decodes: vec![DecodeWork { id: 1, position: l + 4 }],
-        ..Default::default()
-    };
-    let out = eng.step(&plan).unwrap();
+    let mut plan = decode_only(&[(1, l + 4)]);
+    plan.push_prefill(2, &t2, l2, 0, true);
+    plan.push_prefill(3, &t3, l3, 0, true);
+    let out = eng.step_owned(&plan).unwrap();
     assert!(eng.bucket() >= 4, "bucket should have grown");
     got.extend(out.tokens.iter().filter(|(i, _)| *i == 1)
                   .map(|(_, t)| *t));
     for k in 6..10u32 {
-        let plan = StepPlan {
-            decodes: vec![
-                DecodeWork { id: 1, position: l + k - 1 },
-                DecodeWork { id: 2, position: l2 + (k - 6) },
-                DecodeWork { id: 3, position: l3 + (k - 6) },
-            ],
-            ..Default::default()
-        };
-        got.extend(eng.step(&plan).unwrap().tokens.iter()
+        let plan = decode_only(&[
+            (1, l + k - 1),
+            (2, l2 + (k - 6)),
+            (3, l3 + (k - 6)),
+        ]);
+        got.extend(eng.step_owned(&plan).unwrap().tokens.iter()
                       .filter(|(i, _)| *i == 1).map(|(_, t)| *t));
     }
     assert_eq!(got, want, "migration corrupted the KV stream");
@@ -220,8 +193,8 @@ fn scheduler_over_pjrt_honors_chunked_prefill_directives() {
     let mut now = 0.0;
     let mut guard = 0;
     while sched.has_work() && guard < 1000 {
-        if let Some(r) = sched.step(&mut engine, now).unwrap() {
-            now += r.elapsed;
+        if let Some(elapsed) = sched.step(&mut engine, now).unwrap() {
+            now += elapsed;
         }
         guard += 1;
     }
@@ -276,8 +249,8 @@ fn scheduler_over_pjrt_serves_batch() {
     let mut now = 0.0;
     let mut guard = 0;
     while sched.has_work() && guard < 1000 {
-        if let Some(r) = sched.step(&mut engine, now).unwrap() {
-            now += r.elapsed;
+        if let Some(elapsed) = sched.step(&mut engine, now).unwrap() {
+            now += elapsed;
         }
         guard += 1;
     }

@@ -1,0 +1,231 @@
+//! Data-layout parity suite for the hot-path overhaul.
+//!
+//! The slab + phase-index + O(1)-accounting scheduler must be
+//! *behavior-preserving*: the quantities it maintains incrementally are
+//! exactly what the old per-step scans computed. Three angles:
+//!
+//! 1. **Shadow parity** — `Scheduler::enable_shadow_checks` recomputes
+//!    every incremental quantity (phase lists and counts, waiting
+//!    deadlines, slab/index coherence, cached KV aggregates) from a full
+//!    rescan at the top of *every* step — the scan-based semantics of
+//!    the pre-overhaul hot path — and panics on any divergence. A run
+//!    with shadow checks on must also produce metrics identical to the
+//!    same run with them off (the instrumentation is read-only).
+//! 2. **Fixed-seed determinism** — identical scenarios produce
+//!    bit-identical `RunMetrics` JSON across repeated runs. This pins
+//!    the golden regression record and guards against iteration-order
+//!    leaks from the hashed boundary indexes (nothing on the step path
+//!    may depend on `HashMap` iteration order).
+//! 3. **Structural goldens** — invariant outcomes (every request
+//!    finishes, exact token counts, preemption presence/absence per
+//!    policy) that the old path satisfied by construction.
+
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, PreemptMode, SchedulerConfig};
+use dynabatch::driver::{run_loop, run_sim, SimScenario};
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::Engine;
+use dynabatch::metrics::RunMetrics;
+use dynabatch::request::{PriorityClass, Request};
+use dynabatch::scheduler::Scheduler;
+use dynabatch::sim::{Clock, VirtualClock};
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+
+fn scenario(policy: PolicyKind, n: usize) -> SimScenario {
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy,
+            d_sla: Some(0.05),
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "parity".into(),
+            arrival: Arrival::Poisson { rate: 20.0 },
+            prompt: LengthDist::around(128.0, 1024),
+            output: LengthDist::around(96.0, 1024),
+            n_requests: n,
+            seed: 7,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    }
+}
+
+/// Run a scenario through the same wiring as `run_sim`, but on a
+/// caller-configured scheduler (shadow checks, trace bounds).
+fn run_manual(s: &SimScenario, shadow: bool) -> RunMetrics {
+    let mut engine = SimEngine::new(&s.model, &s.hardware);
+    let mut sched = Scheduler::new(
+        s.sched.clone(),
+        s.eta_tokens(),
+        s.swap_tokens,
+        s.workload.prompt.mean(),
+        s.workload.output.mean(),
+    );
+    sched.retain_full_traces();
+    if shadow {
+        sched.enable_shadow_checks();
+    }
+    sched.telemetry.set_prior_variances(
+        s.workload.prompt.variance(),
+        s.workload.output.variance(),
+    );
+    let mut clock = VirtualClock::new();
+    let requests = s.workload.generate();
+    let max_steps = (requests.len() as u64 * 4096).max(1_000_000);
+    run_loop(&mut sched, &mut engine, &mut clock, requests, max_steps)
+        .unwrap();
+    RunMetrics::compute(
+        sched.controller_label(),
+        sched.finished(),
+        &sched.stats,
+        &sched.decode_latencies.to_vec(),
+        clock.now(),
+        engine.utilization(),
+    )
+}
+
+fn policies_under_test() -> Vec<(PolicyKind, &'static str)> {
+    vec![
+        (PolicyKind::MemoryAware, "alg1"),
+        (PolicyKind::StaticGreedy { max: 256 }, "greedy"),
+        (PolicyKind::SlaFeedback, "alg2"),
+        (PolicyKind::Combined, "combined"),
+    ]
+}
+
+#[test]
+fn shadow_checked_run_matches_unshadowed() {
+    for (policy, name) in policies_under_test() {
+        let s = scenario(policy, 150);
+        let plain = run_manual(&s, false);
+        // Shadow mode re-derives the O(1) state from full scans every
+        // step and panics on divergence; reaching the end means every
+        // step's incremental accounting matched the rescan.
+        let shadowed = run_manual(&s, true);
+        assert_eq!(plain.to_json().to_string(),
+                   shadowed.to_json().to_string(),
+                   "{name}: shadow instrumentation changed behavior");
+    }
+}
+
+#[test]
+fn fixed_seed_runs_are_bit_identical() {
+    for (policy, name) in policies_under_test() {
+        let s = scenario(policy, 200);
+        let a = run_sim(&s).unwrap().to_json().to_string();
+        let b = run_sim(&s).unwrap().to_json().to_string();
+        assert_eq!(a, b, "{name}: fixed-seed run not reproducible");
+    }
+}
+
+#[test]
+fn chunked_prefill_parity_under_shadow() {
+    // PD-fusion mode exercises the prefill index hardest: partial
+    // chunks, same-step fusion with decodes, phase flips mid-run.
+    let mut s = scenario(PolicyKind::MemoryAware, 120);
+    s.sched.chunk_tokens = Some(64);
+    s.sched.adaptive_chunk = true;
+    let plain = run_manual(&s, false);
+    let shadowed = run_manual(&s, true);
+    assert_eq!(plain.to_json().to_string(),
+               shadowed.to_json().to_string());
+    assert_eq!(shadowed.n_finished, 120, "every request completes");
+}
+
+#[test]
+fn preemption_storm_parity_under_shadow() {
+    // Tight η with greedy admission: constant recompute-preemption churn
+    // (the worst case for run-list bookkeeping), plus the swap flavor.
+    for preempt in [PreemptMode::Recompute, PreemptMode::Swap] {
+        let mut s = scenario(PolicyKind::StaticGreedy { max: 256 }, 40);
+        s.sched.preempt = preempt;
+        s.workload.arrival = Arrival::AllAtOnce;
+        // Same pressure ratio as the scheduler's own preemption tests:
+        // peak demand ≈ 2× η, guaranteed thrash, guaranteed drain.
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::Fixed(128);
+        s.eta_tokens_override = Some(4_000);
+        s.swap_tokens = if preempt == PreemptMode::Swap { 100_000 } else { 0 };
+        let plain = run_manual(&s, false);
+        let shadowed = run_manual(&s, true);
+        assert_eq!(plain.to_json().to_string(),
+                   shadowed.to_json().to_string(),
+                   "{preempt:?}");
+        assert_eq!(shadowed.n_finished, 40, "{preempt:?}");
+        assert!(shadowed.preemptions + shadowed.swaps > 0,
+                "{preempt:?}: scenario must actually preempt");
+    }
+}
+
+#[test]
+fn mixed_lifecycle_stress_under_shadow() {
+    // Everything at once: priority classes, deadlines that expire (shed),
+    // an oversized reject, a zero-length prompt, and cancels mid-flight —
+    // with shadow rescans validating every step.
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::StaticFixed { batch: 4 },
+        ..SchedulerConfig::default()
+    };
+    let mut engine = SimEngine::new(&model, &hardware);
+    let mut sched = Scheduler::new(cfg, 100_000, 0, 64.0, 64.0);
+    sched.enable_shadow_checks();
+    let mut clock = VirtualClock::new();
+    for i in 0..24u64 {
+        let class = match i % 3 {
+            0 => PriorityClass::Interactive,
+            1 => PriorityClass::Standard,
+            _ => PriorityClass::Batch,
+        };
+        let deadline = if i % 5 == 0 { Some(0.02) } else { None };
+        sched.submit(Request::new(i, 64, 32, 0.0)
+            .with_class(class)
+            .with_deadline(deadline));
+    }
+    sched.submit(Request::new(100, 0, 4, 0.0)); // zero-length prompt
+    sched.submit(Request::new(101, 4000, 10, 0.0)); // oversized → reject
+    let mut steps = 0u64;
+    while sched.has_work() && steps < 100_000 {
+        if steps == 10 {
+            sched.cancel(&mut engine, 3, clock.now());
+            sched.cancel(&mut engine, 999, clock.now()); // unknown: no-op
+        }
+        match sched.step(&mut engine, clock.now()).unwrap() {
+            Some(elapsed) => clock.advance(elapsed),
+            None => break,
+        }
+        steps += 1;
+    }
+    assert_eq!(sched.finished().len(), 26, "every submission terminal");
+    assert_eq!(sched.stats.rejected, 1);
+    assert!(sched.stats.shed >= 1, "expired deadlines must shed");
+    assert_eq!(sched.stats.cancelled, 1);
+    assert_eq!(sched.kv.used_tokens(), 0);
+    sched.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn structural_goldens_fixed_workload() {
+    // Fixed-distribution scenario with exact, derivable outcomes — the
+    // invariants any behavior-preserving layout must reproduce.
+    let mut s = scenario(PolicyKind::MemoryAware, 100);
+    s.workload.arrival = Arrival::AllAtOnce;
+    s.workload.prompt = LengthDist::Fixed(128);
+    s.workload.output = LengthDist::Fixed(64);
+    let m = run_sim(&s).unwrap();
+    assert_eq!(m.n_requests, 100);
+    assert_eq!(m.n_finished, 100);
+    assert_eq!(m.output_tokens, 100 * 64);
+    assert_eq!(m.total_tokens, 100 * (64 + 128));
+    assert_eq!(m.preemptions, 0, "Alg.1 must respect the memory bound");
+    assert_eq!(m.rejected, 0);
+    assert_eq!(m.shed, 0);
+    assert!(m.throughput > 0.0);
+    assert!(m.tbt_p99 >= m.tbt_p50);
+}

@@ -40,9 +40,10 @@ impl SlowEngine {
 }
 
 impl Engine for SlowEngine {
-    fn step(&mut self, plan: &StepPlan) -> anyhow::Result<StepOutcome> {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
         std::thread::sleep(self.delay);
-        self.inner.step(plan)
+        self.inner.step(plan, out)
     }
 
     fn release(&mut self, id: RequestId) {
