@@ -26,6 +26,7 @@ pub mod chunk;
 pub mod memory_aware;
 pub mod sla;
 pub mod static_policy;
+pub mod swap_policy;
 
 use crate::config::{PolicyKind, SchedulerConfig};
 use crate::request::PriorityClass;
@@ -35,6 +36,7 @@ pub use chunk::ChunkController;
 pub use memory_aware::{MemoryAwarePolicy, MemoryAwareVariant};
 pub use sla::SlaFeedbackPolicy;
 pub use static_policy::{StaticFixedPolicy, StaticGreedyPolicy};
+pub use swap_policy::SwapPressureController;
 
 /// How the scheduler should admit new requests this interval.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -91,12 +93,20 @@ pub trait Controller: Send {
 
 /// Instantiate the controller stack named by the config: the policy (or
 /// combinator tree) from `cfg.policy`, wrapped with chunked-prefill
-/// sizing when `cfg.chunk_tokens` is set.
+/// sizing when `cfg.chunk_tokens` is set, and with the memory-pressure
+/// swap heuristic when `cfg.swap_pressure` is set.
 pub fn build_controller(cfg: &SchedulerConfig) -> Box<dyn Controller> {
     let base = build_kind(cfg, &cfg.policy);
-    match cfg.chunk_tokens {
-        Some(c) => Box::new(ChunkedController::new(cfg, base, c)),
+    let base = match cfg.chunk_tokens {
+        Some(c) => {
+            Box::new(ChunkedController::new(cfg, base, c)) as Box<dyn Controller>
+        }
         None => base,
+    };
+    if cfg.swap_pressure {
+        Box::new(SwapPressureController::from_cfg(cfg, base))
+    } else {
+        base
     }
 }
 
@@ -480,6 +490,31 @@ mod tests {
         obs.waiting_by_class = [0, 0, 0]; // idle: plain mean over classes
         let b = c.decide(&obs).target_batch;
         assert!(b > 4 && b < 32, "idle blend {b} between the parts");
+    }
+
+    #[test]
+    fn factory_wraps_swap_pressure() {
+        let cfg = SchedulerConfig {
+            swap_pressure: true,
+            ..SchedulerConfig::default()
+        };
+        let mut c = build_controller(&cfg);
+        assert!(c.label().ends_with("+swap-pressure"), "{}", c.label());
+        // High utilization + big decode batches → the stack hints Swap.
+        let mut obs = Observation::synthetic(100_000, 95_000, 64, 0);
+        obs.recent_decode_batch = Some(64.0);
+        assert_eq!(c.decide(&obs).swap_hint, SwapHint::Swap);
+        // Composes with the chunk wrapper.
+        let cfg = SchedulerConfig {
+            swap_pressure: true,
+            chunk_tokens: Some(32),
+            ..SchedulerConfig::default()
+        };
+        let mut c = build_controller(&cfg);
+        let d = c.decide(&Observation::synthetic(100_000, 0, 4, 1));
+        assert_eq!(d.prefill_chunk, Some(32));
+        assert_eq!(d.swap_hint, SwapHint::Auto, "no pressure → Auto");
+        assert!(c.label().contains("+chunk"), "{}", c.label());
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Memory-pressure swap heuristic — the shipped [`SwapHint`] emitter.
+//!
+//! The scheduler has honored per-interval [`SwapHint`]s since control
+//! plane v2, but no stock controller emitted them. This wrapper decides
+//! the preemption *mode* from telemetry: when KV utilization crosses a
+//! high-water mark, preemptions are imminent — if decode is
+//! compute-bound (big recent batches keep the ALUs busy while PCIe sits
+//! idle) a swap is nearly free and preserves the victim's cache, so hint
+//! `Swap`; if decode is small/bandwidth-bound, the PCIe copy would
+//! contend with the very resource under pressure, so hint `Recompute`
+//! (re-prefill rides the underused compute). Below the pressure band
+//! the hint stays `Auto` (defer to the configured `PreemptMode` —
+//! preemption is unlikely anyway).
+//!
+//! Engagement is hysteretic: on at `high_water`, off at `low_water`, so
+//! utilization noise around one threshold cannot flap the preemption
+//! mode between consecutive decisions.
+
+use super::{Controller, Directive, SwapHint};
+use crate::config::SchedulerConfig;
+use crate::telemetry::Observation;
+
+/// Recent mean decode batch at/above which decode is treated as
+/// compute-bound (roofline knee for the deployments the paper sizes;
+/// override with [`SwapPressureController::compute_bound_batch`]).
+pub const DEFAULT_COMPUTE_BOUND_BATCH: f64 = 16.0;
+
+/// Wraps any [`Controller`] and fills in `Directive::swap_hint` from the
+/// memory-pressure heuristic above. An inner controller that already
+/// set a non-`Auto` hint wins — the wrapper only fills the gap.
+pub struct SwapPressureController {
+    inner: Box<dyn Controller>,
+    high_water: f64,
+    low_water: f64,
+    compute_bound_batch: f64,
+    engaged: bool,
+}
+
+impl SwapPressureController {
+    pub fn new(inner: Box<dyn Controller>, high_water: f64,
+               low_water: f64) -> Self {
+        assert!(
+            0.0 < low_water && low_water < high_water && high_water <= 1.0,
+            "swap-pressure watermarks need 0 < low < high <= 1 \
+             (low={low_water}, high={high_water})"
+        );
+        SwapPressureController {
+            inner,
+            high_water,
+            low_water,
+            compute_bound_batch: DEFAULT_COMPUTE_BOUND_BATCH,
+            engaged: false,
+        }
+    }
+
+    /// Watermarks from the config (`swap_high_water` / `swap_low_water`).
+    pub fn from_cfg(cfg: &SchedulerConfig, inner: Box<dyn Controller>)
+                    -> Self {
+        Self::new(inner, cfg.swap_high_water, cfg.swap_low_water)
+    }
+
+    /// Override the compute-bound batch threshold.
+    pub fn compute_bound_batch(mut self, batch: f64) -> Self {
+        self.compute_bound_batch = batch;
+        self
+    }
+
+    /// Currently inside the pressure band (between crossing high and
+    /// falling back below low)?
+    pub fn engaged(&self) -> bool {
+        self.engaged
+    }
+}
+
+impl Controller for SwapPressureController {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let mut d = self.inner.decide(obs);
+        let util = if obs.eta_tokens > 0 {
+            obs.used_tokens as f64 / obs.eta_tokens as f64
+        } else {
+            0.0
+        };
+        if self.engaged {
+            if util <= self.low_water {
+                self.engaged = false;
+            }
+        } else if util >= self.high_water {
+            self.engaged = true;
+        }
+        if d.swap_hint == SwapHint::Auto && self.engaged {
+            let compute_bound = obs
+                .recent_decode_batch
+                .is_some_and(|b| b >= self.compute_bound_batch);
+            d.swap_hint = if compute_bound {
+                SwapHint::Swap
+            } else {
+                SwapHint::Recompute
+            };
+        }
+        d
+    }
+
+    fn label(&self) -> String {
+        format!("{}+swap-pressure", self.inner.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::StaticFixedPolicy;
+
+    fn ctl() -> SwapPressureController {
+        SwapPressureController::new(
+            Box::new(StaticFixedPolicy::new(8)),
+            0.90,
+            0.70,
+        )
+    }
+
+    fn obs(util_pct: u64, decode_batch: f64) -> Observation {
+        let mut o = Observation::synthetic(1_000, util_pct * 10, 4, 0);
+        o.recent_decode_batch = Some(decode_batch);
+        o
+    }
+
+    #[test]
+    fn engages_at_high_water_only() {
+        let mut c = ctl();
+        assert_eq!(c.decide(&obs(50, 32.0)).swap_hint, SwapHint::Auto);
+        assert_eq!(c.decide(&obs(89, 32.0)).swap_hint, SwapHint::Auto,
+                   "just below high water stays Auto");
+        assert_eq!(c.decide(&obs(90, 32.0)).swap_hint, SwapHint::Swap,
+                   "high water + compute-bound decode → Swap");
+        assert!(c.engaged());
+    }
+
+    #[test]
+    fn hysteresis_holds_between_watermarks() {
+        let mut c = ctl();
+        c.decide(&obs(95, 32.0)); // engage
+        // Dropping into the band does NOT disengage…
+        assert_eq!(c.decide(&obs(80, 32.0)).swap_hint, SwapHint::Swap);
+        assert_eq!(c.decide(&obs(71, 32.0)).swap_hint, SwapHint::Swap);
+        // …only crossing the low-water mark does.
+        assert_eq!(c.decide(&obs(70, 32.0)).swap_hint, SwapHint::Auto);
+        assert!(!c.engaged());
+        // And re-entering the band from below stays disengaged.
+        assert_eq!(c.decide(&obs(80, 32.0)).swap_hint, SwapHint::Auto);
+    }
+
+    #[test]
+    fn recompute_when_decode_is_not_compute_bound() {
+        let mut c = ctl();
+        assert_eq!(c.decide(&obs(95, 2.0)).swap_hint, SwapHint::Recompute,
+                   "small decode batches → PCIe contends → recompute");
+        // Batch grows mid-pressure → the hint follows the bottleneck.
+        assert_eq!(c.decide(&obs(95, 32.0)).swap_hint, SwapHint::Swap);
+        // No decode telemetry yet counts as not compute-bound.
+        let mut o = obs(95, 0.0);
+        o.recent_decode_batch = None;
+        assert_eq!(c.decide(&o).swap_hint, SwapHint::Recompute);
+    }
+
+    #[test]
+    fn inner_non_auto_hint_wins() {
+        struct Hinting;
+        impl Controller for Hinting {
+            fn decide(&mut self, _o: &Observation) -> Directive {
+                Directive {
+                    swap_hint: SwapHint::Recompute,
+                    ..Directive::gated(4)
+                }
+            }
+            fn label(&self) -> String {
+                "hinting".into()
+            }
+        }
+        let mut c =
+            SwapPressureController::new(Box::new(Hinting), 0.9, 0.7);
+        let d = c.decide(&obs(99, 128.0));
+        assert_eq!(d.swap_hint, SwapHint::Recompute,
+                   "wrapper must not override an explicit inner hint");
+    }
+
+    #[test]
+    fn label_and_target_pass_through() {
+        let mut c = ctl();
+        assert_eq!(c.label(), "static-fixed:8+swap-pressure");
+        assert_eq!(c.decide(&obs(10, 1.0)).target_batch, 8);
+    }
+}

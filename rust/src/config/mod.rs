@@ -374,6 +374,15 @@ pub struct SchedulerConfig {
     pub adaptive_chunk: bool,
     /// Latency window for τ̄ (samples).
     pub latency_window: usize,
+    /// Wrap the controller with the memory-pressure swap heuristic
+    /// (`batching::SwapPressureController`): hint `Swap` when KV
+    /// utilization is past the high-water mark and decode is
+    /// compute-bound (PCIe idle), `Recompute` under pressure otherwise.
+    pub swap_pressure: bool,
+    /// KV-utilization high-water mark that engages the swap heuristic.
+    pub swap_high_water: f64,
+    /// Low-water mark that disengages it (hysteresis band).
+    pub swap_low_water: f64,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -400,6 +409,9 @@ impl Default for SchedulerConfig {
             chunk_tokens: None,
             adaptive_chunk: false,
             latency_window: 64,
+            swap_pressure: false,
+            swap_high_water: 0.90,
+            swap_low_water: 0.70,
         }
     }
 }
@@ -420,6 +432,18 @@ impl SchedulerConfig {
             if d <= 0.0 {
                 bail!("d_sla must be positive");
             }
+        }
+        if self.swap_pressure
+            && !(0.0 < self.swap_low_water
+                && self.swap_low_water < self.swap_high_water
+                && self.swap_high_water <= 1.0)
+        {
+            bail!(
+                "swap-pressure watermarks need \
+                 0 < low ({}) < high ({}) <= 1",
+                self.swap_low_water,
+                self.swap_high_water
+            );
         }
         Ok(())
     }
@@ -563,6 +587,14 @@ mod tests {
         let mut c = SchedulerConfig::default();
         c.d_sla = Some(-0.1);
         assert!(c.validate().is_err());
+        // Swap-pressure watermarks only gate when the wrapper is on.
+        let mut c = SchedulerConfig::default();
+        c.swap_low_water = 0.95; // >= high
+        c.validate().unwrap();
+        c.swap_pressure = true;
+        assert!(c.validate().is_err());
+        c.swap_low_water = 0.6;
+        c.validate().unwrap();
     }
 
     #[test]

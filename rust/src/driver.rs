@@ -1,8 +1,12 @@
 //! Experiment driver: wires workload → scheduler → engine → metrics, in
 //! virtual time (simulation) or wall time (real engine), plus the capacity
-//! search used by Table II / Fig. 4 and mid-run policy-switch scenarios
-//! (`run_sim_switched`) exercising the control plane's hot
-//! reconfiguration.
+//! search used by Table II / Fig. 4, mid-run policy-switch scenarios
+//! (`run_sim_switched`, swept over switch time × spike magnitude by
+//! [`switch_sweep`]), and the multi-replica co-simulation
+//! ([`run_replica_sim`]) behind the `dynabatch route` subcommand — N
+//! independent scheduler+engine replicas in virtual time with arrivals
+//! dispatched by a [`RoutePolicy`], reporting per-replica and aggregate
+//! [`RunMetrics`] so router overhead and scaling regress deterministically.
 //!
 //! This is the offline twin of the [`crate::service`] layer: both drive
 //! the same priority-aware scheduler, so requests may carry classes and
@@ -13,12 +17,14 @@
 use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
-use crate::metrics::RunMetrics;
+use crate::metrics::{ReplicaSetMetrics, RunMetrics};
 use crate::request::Request;
-use crate::scheduler::Scheduler;
+use crate::scheduler::{SchedStats, Scheduler};
+use crate::service::replica::{ReplicaLoad, RoutePolicy};
 use crate::sim::{Clock, VirtualClock};
+use crate::util::json::Json;
 use crate::workload::{Arrival, Workload};
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// A fully-specified simulation scenario.
 #[derive(Debug, Clone)]
@@ -128,6 +134,16 @@ pub fn run_sim(scenario: &SimScenario) -> Result<RunMetrics> {
 /// switch point. The reported policy label is the final controller's.
 pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
                         -> Result<RunMetrics> {
+    run_sim_with_requests(scenario, scenario.workload.generate(), switches)
+}
+
+/// [`run_sim_switched`] over an explicit request list instead of the
+/// scenario's generated workload — the hook for composed populations
+/// (e.g. [`switch_sweep`]'s base traffic + injected spike burst).
+pub fn run_sim_with_requests(scenario: &SimScenario,
+                             requests: Vec<Request>,
+                             switches: &[PolicySwitch])
+                             -> Result<RunMetrics> {
     let mut engine = SimEngine::new(&scenario.model, &scenario.hardware);
     let mut sched = Scheduler::new(
         scenario.sched.clone(),
@@ -144,7 +160,6 @@ pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
         scenario.workload.output.variance(),
     );
     let mut clock = VirtualClock::new();
-    let requests = scenario.workload.generate();
     let n = requests.len() as u64;
     // Generous budget: every request needs ≲ prompt_chunks + outputs steps;
     // preemption storms can multiply it.
@@ -160,6 +175,282 @@ pub fn run_sim_switched(scenario: &SimScenario, switches: &[PolicySwitch])
         makespan,
         engine.utilization(),
     ))
+}
+
+/// One replica of the virtual-time co-simulation: its own scheduler,
+/// engine and clock — the offline twin of a `Service` replica.
+struct SimReplica {
+    sched: Scheduler,
+    engine: SimEngine,
+    clock: VirtualClock,
+}
+
+impl SimReplica {
+    fn load(&self) -> ReplicaLoad {
+        ReplicaLoad {
+            waiting: self.sched.waiting_by_class().iter().sum(),
+            running: self.sched.running_len() as u32,
+            resuming: self.sched.resume_len() as u32,
+            // Queue depths are read synchronously here — there is no
+            // published-snapshot lag to correct for.
+            in_flight_to: 0,
+            kv_free_blocks: self.sched.kv.free_blocks(),
+            draining: false,
+        }
+    }
+}
+
+/// Route the next request by `route` over the replicas' live loads and
+/// submit it. An idle target's clock is pulled forward to the arrival
+/// so latencies never run backwards.
+fn route_one(reps: &mut [SimReplica], requests: &[Request],
+             next: &mut usize, route: &RoutePolicy, rr: &mut usize) {
+    let loads: Vec<ReplicaLoad> = reps.iter().map(|r| r.load()).collect();
+    let i = route
+        .pick(requests[*next].class, &loads, *rr)
+        .unwrap_or(0); // sim replicas never drain
+    *rr += 1;
+    let mut req = requests[*next].clone();
+    req.arrived_at = req.arrived_at.max(0.0);
+    reps[i].clock.sleep_until(req.arrived_at);
+    reps[i].sched.submit(req);
+    *next += 1;
+}
+
+/// Run `scenario`'s workload through `n_replicas` independently
+/// scheduled replicas in virtual time, dispatching each arrival with
+/// `route` (the same [`RoutePolicy`] object the live
+/// [`crate::service::ReplicaSet`] uses, fed from scheduler queue depths
+/// instead of service snapshots). Event order: the replica with work and
+/// the earliest clock steps next; arrivals are routed when the
+/// simulation time front reaches them. Fully deterministic for a fixed
+/// workload seed — the regression base for router scaling and overhead.
+///
+/// Returns per-replica [`RunMetrics`] plus the set aggregate (tokens
+/// summed, makespan = the slowest replica, percentiles over the
+/// concatenated decode-latency records).
+pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
+                       route: &RoutePolicy) -> Result<ReplicaSetMetrics> {
+    if n_replicas == 0 {
+        bail!("run_replica_sim needs at least one replica");
+    }
+    route.validate(n_replicas)?;
+    let mut reps: Vec<SimReplica> = (0..n_replicas)
+        .map(|_| {
+            let mut sched = Scheduler::new(
+                scenario.sched.clone(),
+                scenario.eta_tokens(),
+                scenario.swap_tokens,
+                scenario.workload.prompt.mean(),
+                scenario.workload.output.mean(),
+            );
+            sched.retain_full_traces();
+            sched.telemetry.set_prior_variances(
+                scenario.workload.prompt.variance(),
+                scenario.workload.output.variance(),
+            );
+            SimReplica {
+                sched,
+                engine: SimEngine::new(&scenario.model,
+                                       &scenario.hardware),
+                clock: VirtualClock::new(),
+            }
+        })
+        .collect();
+    let requests = scenario.workload.generate();
+    let mut next = 0usize;
+    let mut rr = 0usize;
+    let max_steps = (requests.len() as u64 * 4096).max(1_000_000);
+    let mut steps = 0u64;
+    loop {
+        // The replica with work and the earliest clock steps next.
+        let mut active: Option<usize> = None;
+        for (i, r) in reps.iter().enumerate() {
+            if !r.sched.has_work() {
+                continue;
+            }
+            let earlier = match active {
+                None => true,
+                Some(b) => r.clock.now() < reps[b].clock.now(),
+            };
+            if earlier {
+                active = Some(i);
+            }
+        }
+        match active {
+            Some(i) => {
+                let now = reps[i].clock.now();
+                if next < requests.len()
+                    && requests[next].arrived_at <= now
+                {
+                    // Dispatch everything the time front has reached,
+                    // then re-pick — routing may wake an earlier clock.
+                    while next < requests.len()
+                        && requests[next].arrived_at <= now
+                    {
+                        route_one(&mut reps, &requests, &mut next, route,
+                                  &mut rr);
+                    }
+                    continue;
+                }
+                let r = &mut reps[i];
+                match r.sched.step(&mut r.engine, now)? {
+                    Some(elapsed) => r.clock.advance(elapsed),
+                    None => {
+                        // Work exists but nothing runnable: advance to
+                        // the next event.
+                        if next < requests.len() {
+                            let t = requests[next].arrived_at;
+                            r.clock.sleep_until(t.max(now + 1e-3));
+                        } else {
+                            r.clock.advance(1e-3);
+                        }
+                    }
+                }
+                steps += 1;
+                if steps >= max_steps {
+                    break;
+                }
+            }
+            None => {
+                if next >= requests.len() {
+                    break; // drained everywhere
+                }
+                // Every replica idle: route the next arrival (its
+                // target's clock jumps to the arrival time).
+                route_one(&mut reps, &requests, &mut next, route, &mut rr);
+            }
+        }
+    }
+
+    let mut all_finished: Vec<Request> = Vec::new();
+    let mut all_lat: Vec<f64> = Vec::new();
+    let mut agg_stats = SchedStats::default();
+    let mut per_replica = Vec::with_capacity(n_replicas);
+    let mut agg_makespan = 0.0f64;
+    let mut util_sum = 0.0f64;
+    let mut util_n = 0usize;
+    for r in &reps {
+        let makespan = r.clock.now();
+        agg_makespan = agg_makespan.max(makespan);
+        let lat = r.sched.decode_latencies.to_vec();
+        let m = RunMetrics::compute(
+            r.sched.controller_label(),
+            r.sched.finished(),
+            &r.sched.stats,
+            &lat,
+            makespan,
+            r.engine.utilization(),
+        );
+        if let Some(u) = m.utilization {
+            util_sum += u;
+            util_n += 1;
+        }
+        agg_stats.absorb(&r.sched.stats);
+        all_finished.extend_from_slice(r.sched.finished());
+        all_lat.extend_from_slice(&lat);
+        per_replica.push(m);
+    }
+    let aggregate = RunMetrics::compute(
+        reps[0].sched.controller_label(),
+        &all_finished,
+        &agg_stats,
+        &all_lat,
+        agg_makespan,
+        if util_n > 0 {
+            Some(util_sum / util_n as f64)
+        } else {
+            None
+        },
+    );
+    Ok(ReplicaSetMetrics {
+        route_policy: route.label(),
+        n_replicas,
+        per_replica,
+        aggregate,
+    })
+}
+
+/// One cell of the policy-switch sweep table (see [`switch_sweep`]).
+#[derive(Debug, Clone)]
+pub struct SwitchSweepRow {
+    pub switch_at: f64,
+    /// Extra requests injected all-at-once at the spike time.
+    pub spike_requests: usize,
+    /// The run that stays on the scenario's starting policy.
+    pub baseline: RunMetrics,
+    /// The run that hot-swaps to the target policy at `switch_at`.
+    pub switched: RunMetrics,
+}
+
+impl SwitchSweepRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("switch_at_s", Json::Num(self.switch_at)),
+            ("spike_requests", Json::from(self.spike_requests)),
+            ("baseline", self.baseline.to_json()),
+            ("switched", self.switched.to_json()),
+        ])
+    }
+}
+
+/// Sweep the policy-switch scenario over switch time × spike magnitude:
+/// for each spike size, the scenario's base workload is augmented with
+/// that many extra requests arriving all at once at `spike_at` (lengths
+/// drawn from the base distributions under a seed derived from the
+/// workload seed), then run once without switching and once hot-swapping
+/// to `to` at each switch time. Every cell is deterministic for fixed
+/// seeds — the regression table behind `dynabatch switch --sweep`.
+pub fn switch_sweep(scenario: &SimScenario, to: PolicyKind,
+                    switch_ats: &[f64], spike_at: f64,
+                    spike_magnitudes: &[usize])
+                    -> Result<Vec<SwitchSweepRow>> {
+    if switch_ats.is_empty() || spike_magnitudes.is_empty() {
+        bail!("switch_sweep needs at least one switch time and one \
+               spike magnitude");
+    }
+    let base = scenario.workload.generate();
+    let mut rows = Vec::new();
+    for &spike_n in spike_magnitudes {
+        let mut requests = base.clone();
+        if spike_n > 0 {
+            let spike_w = Workload {
+                name: format!("{}-spike{spike_n}", scenario.workload.name),
+                arrival: Arrival::AllAtOnce,
+                prompt: scenario.workload.prompt.clone(),
+                output: scenario.workload.output.clone(),
+                n_requests: spike_n,
+                seed: scenario
+                    .workload
+                    .seed
+                    .wrapping_mul(0x9e37_79b9)
+                    .wrapping_add(spike_n as u64),
+            };
+            let base_n = requests.len() as u64;
+            let mut spike = spike_w.generate();
+            for (j, r) in spike.iter_mut().enumerate() {
+                r.id = base_n + j as u64; // keep ids disjoint
+                r.arrived_at = spike_at;
+            }
+            requests.extend(spike);
+        }
+        let baseline =
+            run_sim_with_requests(scenario, requests.clone(), &[])?;
+        for &at in switch_ats {
+            let switched = run_sim_with_requests(
+                scenario,
+                requests.clone(),
+                &[PolicySwitch { at, to: to.clone() }],
+            )?;
+            rows.push(SwitchSweepRow {
+                switch_at: at,
+                spike_requests: spike_n,
+                baseline: baseline.clone(),
+                switched,
+            });
+        }
+    }
+    Ok(rows)
 }
 
 /// Outcome of a capacity search (Table II / Fig. 4).
@@ -391,6 +682,87 @@ mod tests {
             switched.makespan,
             fixed.makespan
         );
+    }
+
+    #[test]
+    fn replica_sim_single_replica_completes_like_run_sim() {
+        let s = scenario(PolicyKind::MemoryAware, 80, Arrival::AllAtOnce);
+        let single = run_sim(&s).unwrap();
+        let set =
+            run_replica_sim(&s, 1, &RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(set.n_replicas, 1);
+        assert_eq!(set.per_replica.len(), 1);
+        assert_eq!(set.aggregate.n_requests, 80);
+        assert_eq!(set.aggregate.output_tokens, single.output_tokens);
+        // One replica routed through the set is the same simulation.
+        assert!((set.aggregate.makespan - single.makespan).abs() < 1e-9,
+                "{} vs {}", set.aggregate.makespan, single.makespan);
+    }
+
+    #[test]
+    fn replica_sim_two_replicas_split_and_speed_up() {
+        // Batch-bound regime: a fixed b_t throttles each replica, so a
+        // second replica should nearly double aggregate throughput.
+        let s = scenario(PolicyKind::StaticFixed { batch: 8 }, 200,
+                         Arrival::AllAtOnce);
+        let one =
+            run_replica_sim(&s, 1, &RoutePolicy::LeastLoaded).unwrap();
+        let two =
+            run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(two.aggregate.n_requests, 200, "no request lost");
+        assert_eq!(two.aggregate.output_tokens, one.aggregate.output_tokens);
+        assert!(two.max_token_share() < 0.65,
+                "least-loaded must split the load: share {}",
+                two.max_token_share());
+        assert!(
+            two.aggregate.throughput >= 1.8 * one.aggregate.throughput,
+            "2 replicas must scale: {} vs {}",
+            two.aggregate.throughput,
+            one.aggregate.throughput
+        );
+    }
+
+    #[test]
+    fn replica_sim_is_deterministic() {
+        let s = scenario(PolicyKind::Combined, 60,
+                         Arrival::Poisson { rate: 20.0 });
+        let a = run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+        let b = run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
+                   "same seed → bit-identical replica-set metrics");
+        assert_eq!(a.aggregate.n_requests, 60);
+    }
+
+    #[test]
+    fn switch_sweep_is_deterministic_and_complete() {
+        let mut s = scenario(PolicyKind::StaticFixed { batch: 2 }, 60,
+                             Arrival::Poisson { rate: 10.0 });
+        s.sched.d_sla = Some(0.05);
+        let ats = [1.0, 3.0];
+        let spikes = [0usize, 30];
+        let rows = switch_sweep(&s, PolicyKind::Combined, &ats, 2.0,
+                                &spikes)
+            .unwrap();
+        assert_eq!(rows.len(), ats.len() * spikes.len());
+        for row in &rows {
+            let total = 60 + row.spike_requests;
+            assert_eq!(row.baseline.n_requests, total,
+                       "baseline finished everything");
+            assert_eq!(row.switched.n_requests, total,
+                       "switched finished everything");
+            assert_eq!(row.baseline.reconfigs, 0);
+            assert_eq!(row.switched.reconfigs, 1);
+        }
+        // The spike actually loads the system: the spiked baseline runs
+        // longer than the unspiked one.
+        assert!(rows[2].baseline.makespan > rows[0].baseline.makespan);
+        // Regression property: fixed seeds → bit-identical tables.
+        let again = switch_sweep(&s, PolicyKind::Combined, &ats, 2.0,
+                                 &spikes)
+            .unwrap();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
     }
 
     #[test]

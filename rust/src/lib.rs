@@ -18,10 +18,15 @@
 //! live: batching is a [`batching::Controller`] emitting structured
 //! [`batching::Directive`]s, hot-swappable at runtime via
 //! [`service::Service::reconfigure`] (`set_policy` over the wire), with
-//! [`service::Service::drain`] for graceful retirement. The TCP frontend
-//! ([`server`]) and the examples are thin layers over it; the experiment
-//! driver ([`driver`]) exercises the same scheduler in virtual time,
-//! including mid-run policy switches (`driver::run_sim_switched`).
+//! [`service::Service::drain`] for graceful retirement. Horizontal
+//! scale is the replica tier ([`service::replica`]): a
+//! [`service::ReplicaSet`] front door over N `Service` replicas with
+//! pluggable routing ([`service::RoutePolicy`]) and first-class rolling
+//! restarts. The TCP frontend ([`server`]) and the examples are thin
+//! layers over it; the experiment driver ([`driver`]) exercises the
+//! same scheduler in virtual time, including mid-run policy switches
+//! (`driver::run_sim_switched`) and the multi-replica co-simulation
+//! (`driver::run_replica_sim`).
 
 // Carried clippy allowances: the codebase predates these lints and keeps
 // its own idioms (inherent `to_string` on the vendored Json type, index

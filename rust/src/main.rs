@@ -4,13 +4,14 @@
 use anyhow::{anyhow, Result};
 use dynabatch::config::{presets, PolicyKind, SchedulerConfig};
 use dynabatch::driver::{
-    capacity_search, run_sim, run_sim_switched, PolicySwitch, SimScenario,
+    capacity_search, run_replica_sim, run_sim, run_sim_switched,
+    switch_sweep, PolicySwitch, SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
 use dynabatch::experiments::{ablations, figures, table1, table2};
 use dynabatch::server;
-use dynabatch::service::ServiceBuilder;
+use dynabatch::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
 use dynabatch::util::cli::Command;
 use dynabatch::workload::{trace, Arrival, LengthDist, Workload};
 use std::path::Path;
@@ -72,7 +73,33 @@ fn cli() -> Command {
                 .opt("output-mean", "128", "mean output tokens")
                 .opt("d-sla", "50", "decode SLA in ms (0 = none)")
                 .opt("seed", "42", "workload seed")
-                .flag("json", "emit both runs' metrics as JSON"),
+                .flag("json", "emit both runs' metrics as JSON")
+                .flag("sweep",
+                      "sweep switch-time × spike-magnitude into a \
+                       deterministic regression table")
+                .opt("sweep-at", "2,4,6",
+                     "comma-separated switch times for --sweep (s)")
+                .opt("spikes", "0,50,150",
+                     "comma-separated spike sizes for --sweep (extra \
+                      requests injected at --spike-at)")
+                .opt("spike-at", "3", "spike injection time (s)"),
+        )
+        .subcommand(
+            Command::new("route",
+                         "N-replica routing comparison on the simulated \
+                          engine (per-replica + aggregate metrics)")
+                .opt("model", "llama-65b", "model preset")
+                .opt("policy", "dynamic", "batching policy per replica")
+                .opt("route", "least-loaded",
+                     "round-robin | least-loaded | class-pinned:R")
+                .opt("replicas", "1,2,4", "comma-separated replica counts")
+                .opt("requests", "400", "request count")
+                .opt("rate", "inf", "arrival rate qps, or 'inf'")
+                .opt("prompt-mean", "128", "mean prompt tokens")
+                .opt("output-mean", "128", "mean output tokens")
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)")
+                .opt("seed", "42", "workload seed")
+                .flag("json", "emit every run's metrics as JSON"),
         )
         .subcommand(
             Command::new("capacity", "binary-search capacity under an SLA")
@@ -88,7 +115,10 @@ fn cli() -> Command {
                 .opt("artifacts", "artifacts", "AOT artifacts directory")
                 .opt("bind", "127.0.0.1:7077", "listen address")
                 .opt("policy", "dynamic", "batching policy")
-                .opt("d-sla", "0", "decode SLA in ms (0 = none)"),
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)")
+                .opt("replicas", "1", "service replicas behind the router")
+                .opt("route", "least-loaded",
+                     "round-robin | least-loaded | class-pinned:R"),
         )
         .subcommand(
             Command::new("bench-sched",
@@ -142,6 +172,7 @@ fn main() {
         "ablations" => cmd_ablations(&sub),
         "run" => cmd_run(&sub),
         "switch" => cmd_switch(&sub),
+        "route" => cmd_route(&sub),
         "capacity" => cmd_capacity(&sub),
         "serve" => cmd_serve(&sub),
         "bench-sched" => cmd_bench_sched(&sub),
@@ -291,6 +322,9 @@ fn cmd_switch(m: &M) -> Result<()> {
     };
     let at = m.get_f64("at")?;
     let to = PolicyKind::parse(m.get("to"))?;
+    if m.get_flag("sweep") {
+        return cmd_switch_sweep(m, &s, to);
+    }
     let baseline = run_sim(&s)?;
     let switched =
         run_sim_switched(&s, &[PolicySwitch { at, to: to.clone() }])?;
@@ -325,6 +359,111 @@ fn cmd_switch(m: &M) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// `dynabatch switch --sweep`: switch-time × spike-magnitude regression
+/// table (fixed seeds → bit-identical cells across runs).
+fn cmd_switch_sweep(m: &M, s: &SimScenario, to: PolicyKind) -> Result<()> {
+    let ats: Vec<f64> = parse_list(m.get("sweep-at"))?;
+    let spikes: Vec<usize> = parse_list(m.get("spikes"))?;
+    let spike_at = m.get_f64("spike-at")?;
+    let rows = switch_sweep(s, to.clone(), &ats, spike_at, &spikes)?;
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::Arr(
+            rows.iter().map(|r| r.to_json()).collect(),
+        );
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "policy switch sweep: {} → {} (spike at t={spike_at}s, seed {})",
+        s.sched.policy.label(),
+        to.label(),
+        s.workload.seed
+    );
+    for r in &rows {
+        println!(
+            "at={:>4.1}s spike={:<4} baseline makespan={:>6.1}s \
+             tbt_p95={:>5.1}ms | switched makespan={:>6.1}s ({:+5.1}%) \
+             tbt_p95={:>5.1}ms ({:+5.1}%)",
+            r.switch_at,
+            r.spike_requests,
+            r.baseline.makespan,
+            r.baseline.tbt_p95 * 1e3,
+            r.switched.makespan,
+            (r.switched.makespan / r.baseline.makespan.max(1e-9) - 1.0)
+                * 100.0,
+            r.switched.tbt_p95 * 1e3,
+            (r.switched.tbt_p95 / r.baseline.tbt_p95.max(1e-9) - 1.0)
+                * 100.0,
+        );
+    }
+    Ok(())
+}
+
+/// `dynabatch route`: run the same workload through N-replica sets and
+/// report per-replica + aggregate metrics (scaling and balance).
+fn cmd_route(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    s.workload.name = "route".into();
+    s.workload.n_requests = m.get_usize("requests")?;
+    s.workload.seed = m.get_u64("seed")?;
+    s.workload.arrival = parse_arrival(m.get("rate"))?;
+    let route = RoutePolicy::parse(m.get("route"))?;
+    let ns: Vec<usize> = parse_list(m.get("replicas"))?;
+    if ns.is_empty() {
+        return Err(anyhow!("need at least one replica count"));
+    }
+    let mut results = Vec::new();
+    for &n in &ns {
+        results.push(run_replica_sim(&s, n, &route)?);
+    }
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::Arr(
+            results.iter().map(|r| r.to_json()).collect(),
+        );
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    let base = results[0].aggregate.throughput;
+    println!(
+        "route comparison [{}] policy={} requests={} seed={}",
+        route.label(),
+        s.sched.policy.label(),
+        s.workload.n_requests,
+        s.workload.seed
+    );
+    for r in &results {
+        println!(
+            "N={:<2} agg throughput={:>8.0} tok/s  speedup={:>4.2}x  \
+             makespan={:>6.1}s  tbt p95={:>5.1}ms  max token share={:.2}",
+            r.n_replicas,
+            r.aggregate.throughput,
+            r.aggregate.throughput / base.max(1e-9),
+            r.aggregate.makespan,
+            r.aggregate.tbt_p95 * 1e3,
+            r.max_token_share(),
+        );
+        for (i, p) in r.per_replica.iter().enumerate() {
+            println!(
+                "      replica {i}: {:>8} tokens  makespan={:>6.1}s  \
+                 preempts={}",
+                p.output_tokens, p.makespan, p.preemptions
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Parse a comma-separated list of numbers.
+fn parse_list<T: std::str::FromStr>(s: &str) -> Result<Vec<T>>
+where
+    T::Err: std::error::Error + Send + Sync + 'static,
+{
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| Ok(p.trim().parse::<T>()?))
+        .collect()
 }
 
 fn cmd_capacity(m: &M) -> Result<()> {
@@ -366,22 +505,29 @@ fn cmd_serve(m: &M) -> Result<()> {
     // η for the real engine: slots × context window.
     let eta = max_batch as u64 * max_seq as u64;
     let dir = dir.to_path_buf();
-    // The service is the one public API; the TCP server is a thin
+    let n = m.get_usize("replicas")?;
+    let route = RoutePolicy::parse(m.get("route"))?;
+    let route_label = route.label();
+    // The replica set is the front door; the TCP server is a thin
     // protocol adapter over it. Model/hardware specs only seed the
-    // estimators here — η and the engine come from the artifacts.
-    let service = ServiceBuilder::new(presets::tiny_real(),
-                                      presets::cpu_host())
-        .config(cfg)
-        .eta_tokens(eta)
-        .priors(32.0, 32.0)
-        .engine(move || {
-            Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>)
-        })
-        .build()?;
-    let server = server::serve_service(service, m.get("bind"))?;
-    println!("serving on {} — protocol v2: line-delimited JSON \
-              ({{\"op\":\"generate\"|\"cancel\"|\"stats\"|\"set_policy\"\
-              |\"drain\"|\"shutdown\",...}}, per-request \
+    // estimators here — η and the engine come from the artifacts. Each
+    // replica builds its own engine on its own service thread (PJRT
+    // handles are not Send).
+    let set = ReplicaSet::build(n, route, |_| {
+        let dir = dir.clone();
+        ServiceBuilder::new(presets::tiny_real(), presets::cpu_host())
+            .config(cfg.clone())
+            .eta_tokens(eta)
+            .priors(32.0, 32.0)
+            .engine(move || {
+                Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>)
+            })
+    })?;
+    let server = server::serve_replicas(set, m.get("bind"))?;
+    println!("serving {n} replica(s) [{route_label}] on {} — protocol \
+              v2: line-delimited JSON ({{\"op\":\"generate\"|\"cancel\"\
+              |\"stats\"|\"set_policy\"|\"drain\"|\"reopen\"\
+              |\"rolling_restart\"|\"shutdown\",...}}, per-request \
               class/sampling/deadline_ms — see DESIGN.md)",
              server.local_addr);
     loop {
@@ -392,11 +538,7 @@ fn cmd_serve(m: &M) -> Result<()> {
 fn cmd_bench_sched(m: &M) -> Result<()> {
     let quick = m.get_flag("quick");
     let n = if quick { 500 } else { m.get_usize("requests")? };
-    let batches: Vec<u32> = m
-        .get("batches")
-        .split(',')
-        .map(|s| s.trim().parse::<u32>())
-        .collect::<std::result::Result<_, _>>()?;
+    let batches: Vec<u32> = parse_list(m.get("batches"))?;
     if batches.is_empty() {
         return Err(anyhow!("need at least one b_t point"));
     }

@@ -1,5 +1,7 @@
 //! Run-level metrics: the numbers the paper's tables report, computed from
-//! finished requests + the scheduler's step log.
+//! finished requests + the scheduler's step log — per run, and aggregated
+//! across a replica set ([`ReplicaSetMetrics`]) so the capacity experiment
+//! reruns at N = 1, 2, 4 regress router overhead.
 
 use crate::request::Request;
 use crate::scheduler::SchedStats;
@@ -138,6 +140,52 @@ impl RunMetrics {
     }
 }
 
+/// One multi-replica run: per-replica [`RunMetrics`] plus the set-level
+/// aggregate (tokens summed, makespan = the slowest replica, latency
+/// percentiles over the concatenated per-step records). Produced by
+/// `driver::run_replica_sim`.
+#[derive(Debug, Clone)]
+pub struct ReplicaSetMetrics {
+    /// Route policy label (`round-robin` | `least-loaded` |
+    /// `class-pinned:R`).
+    pub route_policy: String,
+    pub n_replicas: usize,
+    /// Index-aligned with the replicas.
+    pub per_replica: Vec<RunMetrics>,
+    pub aggregate: RunMetrics,
+}
+
+impl ReplicaSetMetrics {
+    /// Largest per-replica share of the set's output tokens (0.5 = a
+    /// perfectly balanced pair; 1.0 = one replica did everything) — the
+    /// router-balance number the route experiment regresses on.
+    pub fn max_token_share(&self) -> f64 {
+        let total = self.aggregate.output_tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        self.per_replica
+            .iter()
+            .map(|m| m.output_tokens as f64 / total as f64)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("route_policy", Json::from(self.route_policy.clone())),
+            ("n_replicas", Json::from(self.n_replicas)),
+            (
+                "per_replica",
+                Json::Arr(
+                    self.per_replica.iter().map(|m| m.to_json()).collect(),
+                ),
+            ),
+            ("aggregate", self.aggregate.to_json()),
+            ("max_token_share", Json::Num(self.max_token_share())),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +233,35 @@ mod tests {
         assert!(!m.meets_sla(0.050, 0.0, 95.0));
         assert!(m.meets_sla(0.051, 0.0, 50.0));
         assert!(!m.meets_sla(0.090, 0.0, 99.0));
+    }
+
+    #[test]
+    fn replica_set_metrics_share_and_json() {
+        let mk = |tokens: u64| {
+            let mut m = RunMetrics::compute("t".into(), &[],
+                                            &SchedStats::default(), &[],
+                                            1.0, None);
+            m.output_tokens = tokens;
+            m
+        };
+        let set = ReplicaSetMetrics {
+            route_policy: "least-loaded".into(),
+            n_replicas: 2,
+            per_replica: vec![mk(300), mk(100)],
+            aggregate: mk(400),
+        };
+        assert!((set.max_token_share() - 0.75).abs() < 1e-12);
+        let j = set.to_json();
+        assert_eq!(j.get("n_replicas").as_u64(), Some(2));
+        assert_eq!(j.get("per_replica").as_arr().unwrap().len(), 2);
+        assert!(Json::parse(&j.to_string()).is_ok());
+        let empty = ReplicaSetMetrics {
+            route_policy: "rr".into(),
+            n_replicas: 1,
+            per_replica: vec![mk(0)],
+            aggregate: mk(0),
+        };
+        assert_eq!(empty.max_token_share(), 0.0);
     }
 
     #[test]

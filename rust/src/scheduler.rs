@@ -91,6 +91,28 @@ pub struct SchedStats {
     pub reconfigs: u64,
 }
 
+impl SchedStats {
+    /// Fold another scheduler's counters into this one — the replica-set
+    /// aggregation (`driver::run_replica_sim`). Counters sum;
+    /// `b_t_last` sums too (the set's total concurrency target).
+    pub fn absorb(&mut self, o: &SchedStats) {
+        self.steps += o.steps;
+        self.decode_steps += o.decode_steps;
+        self.prefill_steps += o.prefill_steps;
+        self.decisions += o.decisions;
+        self.preempt_recompute += o.preempt_recompute;
+        self.preempt_swap += o.preempt_swap;
+        self.admitted += o.admitted;
+        self.finished += o.finished;
+        self.rejected += o.rejected;
+        self.shed += o.shed;
+        self.cancelled += o.cancelled;
+        self.decode_batch_sum += o.decode_batch_sum;
+        self.b_t_last += o.b_t_last;
+        self.reconfigs += o.reconfigs;
+    }
+}
+
 /// One slab entry: the request plus its intrusive-list links and cached
 /// KV slot. Links are only meaningful while the request is running.
 struct SlotEntry {

@@ -45,7 +45,10 @@ pub struct GenOptions {
 }
 
 /// Live serving-loop counters returned by the v2 `stats` op (the wire
-/// form of the service's `ServiceSnapshot`).
+/// form of the service's `ServiceSnapshot`). With a replica set behind
+/// the server the top-level numbers are the set aggregate and
+/// `replicas` carries the per-replica attribution (their own `replicas`
+/// lists are empty).
 #[derive(Debug, Clone, Default)]
 pub struct ServerStats {
     pub running: u32,
@@ -66,6 +69,13 @@ pub struct ServerStats {
     pub cancelled: u64,
     pub reconfigs: u64,
     pub draining: bool,
+    /// Set size (1 for a single-service server; 0 from pre-replica
+    /// servers that do not send the field).
+    pub n_replicas: u64,
+    /// Route policy label (empty from pre-replica servers).
+    pub route_policy: String,
+    /// Per-replica snapshots, index-aligned with the replicas.
+    pub replicas: Vec<ServerStats>,
 }
 
 /// One decoded server event.
@@ -89,14 +99,61 @@ pub enum ClientEvent {
     Stats(ServerStats),
     /// Reply to `set_policy`: the new controller's label.
     PolicySet { policy: String },
-    /// Immediate ack of `drain`: admissions have stopped.
-    Draining,
+    /// Immediate ack of `drain`: admissions have stopped. `replica` is
+    /// set for a single-replica drain, `None` for the whole set.
+    Draining { replica: Option<u64> },
     /// The drain resolved: every in-flight request reached a terminal
-    /// event.
-    Drained,
+    /// event (on the named replica, or set-wide when `None`).
+    Drained { replica: Option<u64> },
+    /// Reply to `reopen`: the replica (or whole set) admits work again.
+    Reopened { replica: Option<u64> },
+    /// Immediate ack of `rolling_restart`: the rotation started.
+    Rolling,
+    /// The rolling restart finished over `replicas` replicas; `policy`
+    /// is the post-rotation controller label when one was applied.
+    RollingDone { replicas: u64, policy: Option<String> },
     /// Server-side error; `id` is absent for connection-level errors.
     Error { id: Option<u64>, message: String },
     Bye,
+}
+
+/// Decode a stats object — the top-level aggregate and, recursively,
+/// each per-replica entry (whose own `replicas` list is empty).
+fn parse_stats(ev: &Json) -> ServerStats {
+    ServerStats {
+        running: ev.get("running").as_u64().unwrap_or(0) as u32,
+        waiting: ev.get("waiting").as_u64().unwrap_or(0) as u32,
+        waiting_by_class: ev
+            .get("waiting_by_class")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|x| x.as_u64().unwrap_or(0) as u32)
+                    .collect()
+            })
+            .unwrap_or_default(),
+        resuming: ev.get("resuming").as_u64().unwrap_or(0) as u32,
+        kv_used_tokens: ev.get("kv_used_tokens").as_u64().unwrap_or(0),
+        kv_free_blocks: ev.get("kv_free_blocks").as_u64().unwrap_or(0),
+        kv_total_blocks: ev.get("kv_total_blocks").as_u64().unwrap_or(0),
+        b_t: ev.get("b_t").as_u64().unwrap_or(0) as u32,
+        controller: ev.get("controller").as_str().unwrap_or("").into(),
+        steps: ev.get("steps").as_u64().unwrap_or(0),
+        finished: ev.get("finished").as_u64().unwrap_or(0),
+        rejected: ev.get("rejected").as_u64().unwrap_or(0),
+        shed: ev.get("shed").as_u64().unwrap_or(0),
+        cancelled: ev.get("cancelled").as_u64().unwrap_or(0),
+        reconfigs: ev.get("reconfigs").as_u64().unwrap_or(0),
+        draining: ev.get("draining").as_bool().unwrap_or(false),
+        n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
+        route_policy:
+            ev.get("route_policy").as_str().unwrap_or("").into(),
+        replicas: ev
+            .get("replicas")
+            .as_arr()
+            .map(|a| a.iter().map(parse_stats).collect())
+            .unwrap_or_default(),
+    }
 }
 
 impl Client {
@@ -173,42 +230,24 @@ impl Client {
                 id: need_id()?,
                 enqueued: ev.get("enqueued").as_bool().unwrap_or(false),
             },
-            Some("stats") => ClientEvent::Stats(ServerStats {
-                running: ev.get("running").as_u64().unwrap_or(0) as u32,
-                waiting: ev.get("waiting").as_u64().unwrap_or(0) as u32,
-                waiting_by_class: ev
-                    .get("waiting_by_class")
-                    .as_arr()
-                    .map(|a| {
-                        a.iter()
-                            .map(|x| x.as_u64().unwrap_or(0) as u32)
-                            .collect()
-                    })
-                    .unwrap_or_default(),
-                resuming: ev.get("resuming").as_u64().unwrap_or(0) as u32,
-                kv_used_tokens:
-                    ev.get("kv_used_tokens").as_u64().unwrap_or(0),
-                kv_free_blocks:
-                    ev.get("kv_free_blocks").as_u64().unwrap_or(0),
-                kv_total_blocks:
-                    ev.get("kv_total_blocks").as_u64().unwrap_or(0),
-                b_t: ev.get("b_t").as_u64().unwrap_or(0) as u32,
-                controller:
-                    ev.get("controller").as_str().unwrap_or("").into(),
-                steps: ev.get("steps").as_u64().unwrap_or(0),
-                finished: ev.get("finished").as_u64().unwrap_or(0),
-                rejected: ev.get("rejected").as_u64().unwrap_or(0),
-                shed: ev.get("shed").as_u64().unwrap_or(0),
-                cancelled: ev.get("cancelled").as_u64().unwrap_or(0),
-                reconfigs: ev.get("reconfigs").as_u64().unwrap_or(0),
-                draining:
-                    ev.get("draining").as_bool().unwrap_or(false),
-            }),
+            Some("stats") => ClientEvent::Stats(parse_stats(&ev)),
             Some("policy_set") => ClientEvent::PolicySet {
                 policy: ev.get("policy").as_str().unwrap_or("").into(),
             },
-            Some("draining") => ClientEvent::Draining,
-            Some("drained") => ClientEvent::Drained,
+            Some("draining") => ClientEvent::Draining {
+                replica: ev.get("replica").as_u64(),
+            },
+            Some("drained") => ClientEvent::Drained {
+                replica: ev.get("replica").as_u64(),
+            },
+            Some("reopened") => ClientEvent::Reopened {
+                replica: ev.get("replica").as_u64(),
+            },
+            Some("rolling") => ClientEvent::Rolling,
+            Some("rolling_done") => ClientEvent::RollingDone {
+                replicas: ev.get("replicas").as_u64().unwrap_or(0),
+                policy: ev.get("policy").as_str().map(|s| s.to_string()),
+            },
             Some("error") => ClientEvent::Error {
                 id: id(),
                 message: ev.get("error").as_str().unwrap_or("?").into(),
@@ -376,18 +415,82 @@ impl Client {
         }
     }
 
-    /// Drain the server (v2 `drain` op): admissions stop immediately;
+    /// Drain the whole set (v2 `drain` op): admissions stop immediately;
     /// blocks until the server announces every in-flight request reached
     /// a terminal event. Token/terminal events arriving meanwhile are
     /// buffered for [`Self::next_event`].
     pub fn drain(&mut self) -> Result<()> {
         self.send(&Json::obj(vec![("op", Json::from("drain"))]))?;
+        self.wait_drained(None)
+    }
+
+    /// Drain one replica (rotation building block): the router stops
+    /// sending it work, its in-flight requests finish. Blocks until the
+    /// server announces *that replica* drained (a `drained` line for a
+    /// different target — e.g. an earlier whole-set drain — is buffered,
+    /// not mistaken for this one).
+    pub fn drain_replica(&mut self, replica: u64) -> Result<()> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("drain")),
+            ("replica", Json::from(replica)),
+        ]))?;
+        self.wait_drained(Some(replica))
+    }
+
+    fn wait_drained(&mut self, want: Option<u64>) -> Result<()> {
         loop {
             match self.read_event()? {
-                ClientEvent::Drained => return Ok(()),
-                ClientEvent::Draining => {}
+                ClientEvent::Drained { replica } if replica == want => {
+                    return Ok(())
+                }
+                ClientEvent::Draining { replica } if replica == want => {}
                 ClientEvent::Error { id: None, message } => {
                     bail!("drain failed: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Reopen a drained replica for admissions (`None` = whole set).
+    pub fn reopen(&mut self, replica: Option<u64>) -> Result<()> {
+        let mut j = Json::obj(vec![("op", Json::from("reopen"))]);
+        if let Some(r) = replica {
+            j.set("replica", Json::from(r));
+        }
+        self.send(&j)?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::Reopened { replica: r } if r == replica => {
+                    return Ok(())
+                }
+                ClientEvent::Error { id: None, message } => {
+                    bail!("reopen failed: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Rolling restart over the whole set (drain → reconfigure → reopen,
+    /// one replica at a time). Blocks until the rotation completes;
+    /// returns the number of replicas rotated.
+    pub fn rolling_restart(&mut self, policy: Option<&str>) -> Result<u64> {
+        let mut j = Json::obj(vec![("op", Json::from("rolling_restart"))]);
+        if let Some(p) = policy {
+            j.set("policy", Json::from(p));
+        }
+        self.send(&j)?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::RollingDone { replicas, .. } => {
+                    return Ok(replicas)
+                }
+                ClientEvent::Rolling => {}
+                ClientEvent::Error { id: None, message } => {
+                    bail!("rolling restart failed: {message}")
                 }
                 ClientEvent::Bye => bail!("server shut down"),
                 other => self.pending.push_back(other),

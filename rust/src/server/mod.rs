@@ -16,6 +16,9 @@
 //! → {"op":"stats"}                                          (v2 admin)
 //! → {"op":"set_policy", "policy":"combined"}                (v2 admin)
 //! → {"op":"drain"}                                          (v2 admin)
+//! → {"op":"drain", "replica":0}                  (v2 admin, single r.)
+//! → {"op":"reopen", "replica":0}                            (v2 admin)
+//! → {"op":"rolling_restart", "policy":"combined"}           (v2 admin)
 //! → {"op":"shutdown"}
 //! ```
 //!
@@ -55,26 +58,41 @@
 //!    "kv_total_blocks":376, "b_t":32,
 //!    "controller":"combined(min(alg1,alg2))", "steps":901,
 //!    "finished":40, "rejected":0, "shed":1, "cancelled":2,
-//!    "reconfigs":0, "draining":false}
+//!    "reconfigs":0, "draining":false,
+//!    "n_replicas":2, "route_policy":"least-loaded",
+//!    "replicas":[{"replica":0, …same fields…}, {"replica":1, …}]}
 //!
 //! → {"op":"set_policy", "policy":"min(alg1,alg2)"}
 //! ← {"type":"policy_set", "policy":"min(memory-aware(alg1-linear),\
 //!    sla-feedback(D_SLA=50ms))"}          (new controller label; or a
 //!                                          connection-level error)
 //!
-//! → {"op":"drain"}
+//! → {"op":"drain"}                        (whole set)
 //! ← {"type":"draining"}                   (immediately; admissions stop)
 //! ← {"type":"drained"}                    (once in-flight work finished)
+//! → {"op":"drain", "replica":1}           (single replica — rotation)
+//! ← {"type":"draining", "replica":1}
+//! ← {"type":"drained", "replica":1}
+//!
+//! → {"op":"reopen", "replica":1}          (rejoin after a drain; no
+//! ← {"type":"reopened", "replica":1}       replica field = whole set)
+//!
+//! → {"op":"rolling_restart", "policy":"combined"}   (policy optional)
+//! ← {"type":"rolling"}                    (immediately)
+//! ← {"type":"rolling_done", "replicas":2, "policy":"…"}  (or an error)
 //! ```
 //!
-//! `stats` returns the live `ServiceSnapshot`. `set_policy` hot-swaps
-//! the batching controller (any `PolicyKind` label, including the
-//! combinators) with telemetry and in-flight work carried over. `drain`
-//! stops admissions — subsequent `generate`s on any connection fail with
-//! a connection-level error — and announces `drained` once every
-//! in-flight request has reached its terminal event; the connection's
-//! read loop keeps running in between, so `stats` (and `cancel`) still
-//! work while draining.
+//! `stats` returns the set-level aggregate (counters summed, `b_t`
+//! summed, `draining` = the whole set refuses work) plus one entry per
+//! replica under `"replicas"` for attribution. `set_policy` fans the
+//! controller hot-swap out to every replica. `drain` without a
+//! `replica` stops admissions on the whole set; with one it drains a
+//! single replica for rotation while the router keeps dispatching to
+//! the rest. `reopen` rejoins a drained replica. `rolling_restart`
+//! performs the full rotation (drain → reconfigure → reopen, one
+//! replica at a time) on a side thread and announces `rolling_done`.
+//! The connection's read loop keeps running through all of these, so
+//! `stats` (and `cancel`) still work while draining.
 //!
 //! v1 compatibility: a bare `generate` behaves exactly as before —
 //! `accepted`, `token`… then `done`. v2 additionally allows several
@@ -88,19 +106,21 @@ use crate::engine::Engine;
 use crate::request::{PriorityClass, SamplingParams};
 use crate::scheduler::Scheduler;
 use crate::service::{
-    GenEvent, GenRequest, Service, ServiceSnapshot, SubmissionHandle,
+    GenEvent, GenRequest, ReplicaSet, RoutePolicy, Service,
+    ServiceSnapshot, SubmissionHandle,
 };
 use crate::tokenizer;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Shared server state: the service plus the bound address.
+/// Shared server state: the replica set plus the bound address.
 pub struct Server {
-    service: Arc<Service>,
+    set: Arc<ReplicaSet>,
     pub local_addr: std::net::SocketAddr,
 }
 
@@ -118,14 +138,21 @@ where
     serve_service(Service::with_scheduler(engine_builder, sched)?, bind)
 }
 
-/// Spawn the TCP acceptor over an already-built service. Returns once the
-/// listener is bound; serving continues on background threads until
-/// shutdown.
+/// Serve a single already-built service (a one-replica set).
 pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
+    serve_replicas(
+        ReplicaSet::from_services(vec![service], RoutePolicy::RoundRobin)?,
+        bind,
+    )
+}
+
+/// Spawn the TCP acceptor over a replica set. Returns once the listener
+/// is bound; serving continues on background threads until shutdown.
+pub fn serve_replicas(set: ReplicaSet, bind: &str) -> Result<Arc<Server>> {
     let listener =
         TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let local_addr = listener.local_addr()?;
-    let server = Arc::new(Server { service: Arc::new(service), local_addr });
+    let server = Arc::new(Server { set: Arc::new(set), local_addr });
 
     {
         let server = server.clone();
@@ -135,7 +162,7 @@ pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
                 listener
                     .set_nonblocking(true)
                     .expect("nonblocking listener");
-                while !server.service.is_shutdown() {
+                while !server.set.is_shutdown() {
                     match listener.accept() {
                         Ok((stream, _)) => {
                             let server = server.clone();
@@ -160,13 +187,19 @@ pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
 }
 
 impl Server {
-    /// The underlying service (snapshot introspection, direct submits).
+    /// The first replica's service — the whole service when serving a
+    /// single replica (snapshot introspection, direct submits in tests).
     pub fn service(&self) -> &Service {
-        &self.service
+        self.set.replica(0)
+    }
+
+    /// The replica set behind this server.
+    pub fn replica_set(&self) -> &ReplicaSet {
+        &self.set
     }
 
     pub fn shutdown(&self) {
-        self.service.shutdown();
+        self.set.shutdown();
     }
 }
 
@@ -205,9 +238,10 @@ fn parse_generate(msg: &Json) -> Result<GenRequest> {
     Ok(req)
 }
 
-fn stats_to_json(s: &ServiceSnapshot) -> Json {
-    Json::obj(vec![
-        ("type", Json::from("stats")),
+/// The snapshot fields shared by the set-level aggregate and each
+/// per-replica attribution entry.
+fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
+    vec![
         ("running", Json::from(s.running as u64)),
         ("waiting", Json::from(s.waiting as u64)),
         (
@@ -232,7 +266,33 @@ fn stats_to_json(s: &ServiceSnapshot) -> Json {
         ("cancelled", Json::from(s.cancelled)),
         ("reconfigs", Json::from(s.reconfigs)),
         ("draining", Json::from(s.draining)),
-    ])
+    ]
+}
+
+/// The `stats` reply: aggregate fields at the top level (wire-compatible
+/// with the single-replica v2 shape) plus per-replica attribution.
+fn stats_to_json(set: &ReplicaSet) -> Json {
+    let snaps = set.snapshots();
+    let agg = ReplicaSet::aggregate(&snaps);
+    let mut fields = vec![("type", Json::from("stats"))];
+    fields.extend(snapshot_fields(&agg));
+    fields.push(("n_replicas", Json::from(set.len())));
+    fields.push(("route_policy", Json::from(set.route_policy().label())));
+    fields.push((
+        "replicas",
+        Json::Arr(
+            snaps
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let mut f = vec![("replica", Json::from(i))];
+                    f.extend(snapshot_fields(s));
+                    Json::obj(f)
+                })
+                .collect(),
+        ),
+    ));
+    Json::obj(fields)
 }
 
 fn event_to_json(ev: &GenEvent) -> Json {
@@ -295,10 +355,18 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
     let reader = BufReader::new(stream.try_clone()?);
     let out = Arc::new(Mutex::new(stream));
     let inflight = Arc::new(AtomicUsize::new(0));
-    // At most one drain-watcher thread per connection (see the `drain`
-    // op below); cleared before `drained` is written so a repeat op
-    // either shares the pending announcement or starts a fresh watcher.
-    let drain_inflight = Arc::new(AtomicBool::new(false));
+    // At most one drain-watcher thread per (connection, target): a
+    // repeat of the SAME target (a replica index, or None = whole set)
+    // shares the pending `drained` announcement; distinct targets each
+    // get their own watcher, so the thread count is bounded by
+    // n_replicas + 1. Entries clear before `drained` is written so a
+    // later op starts a fresh watcher.
+    let drains_pending: Arc<Mutex<HashSet<Option<u64>>>> =
+        Arc::new(Mutex::new(HashSet::new()));
+    // Likewise one pending rolling-restart watcher per connection — a
+    // repeat op shares its `rolling_done` (rotations are serialized
+    // set-side anyway; this just avoids stacking blocked threads).
+    let rolling_pending = Arc::new(AtomicBool::new(false));
     // Every id this connection submitted; cancelled when the read side
     // closes so a dead client's requests stop holding KV blocks
     // (cancel is idempotent, so already-finished ids are no-ops).
@@ -329,7 +397,7 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                         continue;
                     }
                     match parse_generate(&msg)
-                        .and_then(|req| server.service.submit(req))
+                        .and_then(|req| server.set.submit(req))
                     {
                         Ok(handle) => {
                             submitted.push(handle.id());
@@ -349,7 +417,7 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                 }
                 Some("cancel") => match msg.get("id").as_u64() {
                     Some(id) => {
-                        let enqueued = server.service.cancel(id);
+                        let enqueued = server.set.cancel(id);
                         write_json(&out, &Json::obj(vec![
                             ("type", Json::from("cancel_ack")),
                             ("id", Json::from(id)),
@@ -363,13 +431,12 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                     }
                 },
                 Some("stats") => {
-                    write_json(&out,
-                               &stats_to_json(&server.service.snapshot()))?;
+                    write_json(&out, &stats_to_json(&server.set))?;
                 }
                 Some("set_policy") => {
                     let r = match msg.get("policy").as_str() {
                         Some(p) => PolicyKind::parse(p)
-                            .and_then(|k| server.service.reconfigure(k)),
+                            .and_then(|k| server.set.reconfigure(k)),
                         None => Err(anyhow!(
                             "set_policy needs a string 'policy' field"
                         )),
@@ -386,32 +453,127 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                     }
                 }
                 Some("drain") => {
+                    // Optional `replica` selects a single-replica drain
+                    // (the rotation building block); absent = whole set.
+                    let replica = msg.get("replica").as_u64();
+                    if let Some(r) = replica {
+                        if r as usize >= server.set.len() {
+                            write_json(&out, &conn_error(format!(
+                                "replica {r} out of range (set has {})",
+                                server.set.len()
+                            )))?;
+                            continue;
+                        }
+                    }
                     // Ack immediately (admissions stop now), announce
                     // `drained` from a side thread so this connection's
                     // read loop keeps serving stats/cancel meanwhile.
-                    write_json(&out, &Json::obj(vec![
-                        ("type", Json::from("draining")),
-                    ]))?;
-                    // One watcher thread per connection: a repeat op
-                    // while one is pending shares its `drained` line
-                    // instead of stacking blocked threads.
-                    if drain_inflight.swap(true, Ordering::SeqCst) {
+                    let with_replica = |ty: &str| {
+                        let mut f = vec![("type", Json::from(ty))];
+                        if let Some(r) = replica {
+                            f.push(("replica", Json::from(r)));
+                        }
+                        Json::obj(f)
+                    };
+                    write_json(&out, &with_replica("draining"))?;
+                    // A repeat op for the same target while its watcher
+                    // is pending shares that `drained` line instead of
+                    // stacking blocked threads; a different target gets
+                    // its own watcher (its drain must actually run).
+                    if !drains_pending.lock().unwrap().insert(replica) {
                         continue;
                     }
-                    let service = server.service.clone();
+                    let set = server.set.clone();
+                    let drained = with_replica("drained");
                     let out = out.clone();
-                    let drain_inflight = drain_inflight.clone();
+                    let drains_pending = drains_pending.clone();
                     std::thread::spawn(move || {
-                        let j = match service.drain() {
-                            Ok(()) => Json::obj(vec![
-                                ("type", Json::from("drained")),
-                            ]),
+                        let r = match replica {
+                            Some(i) => set.drain_replica(i as usize),
+                            None => set.drain(),
+                        };
+                        let j = match r {
+                            Ok(()) => drained,
                             Err(e) => conn_error(format!("{e:#}")),
                         };
                         // Clear before writing: an op arriving after the
-                        // flag clears starts a fresh watcher, one racing
+                        // entry clears starts a fresh watcher, one racing
                         // it still has this `drained` line to read.
-                        drain_inflight.store(false, Ordering::SeqCst);
+                        drains_pending.lock().unwrap().remove(&replica);
+                        let _ = write_json(&out, &j);
+                    });
+                }
+                Some("reopen") => {
+                    let r = match msg.get("replica").as_u64() {
+                        Some(i) => server
+                            .set
+                            .reopen_replica(i as usize)
+                            .map(|()| Some(i)),
+                        None => server.set.reopen().map(|()| None),
+                    };
+                    match r {
+                        Ok(i) => {
+                            let mut f =
+                                vec![("type", Json::from("reopened"))];
+                            if let Some(i) = i {
+                                f.push(("replica", Json::from(i)));
+                            }
+                            write_json(&out, &Json::obj(f))?;
+                        }
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                        }
+                    }
+                }
+                Some("rolling_restart") => {
+                    // Parse (and reject) up front; the rotation itself
+                    // runs on a side thread — it blocks on each
+                    // replica's drain — and announces `rolling_done`.
+                    let policy = match msg.get("policy").as_str() {
+                        Some(p) => match PolicyKind::parse(p) {
+                            Ok(k) => Some(k),
+                            Err(e) => {
+                                write_json(&out,
+                                           &conn_error(format!("{e:#}")))?;
+                                continue;
+                            }
+                        },
+                        None => None,
+                    };
+                    write_json(&out, &Json::obj(vec![
+                        ("type", Json::from("rolling")),
+                    ]))?;
+                    if rolling_pending.swap(true, Ordering::SeqCst) {
+                        continue; // share the pending rolling_done
+                    }
+                    let set = server.set.clone();
+                    let out = out.clone();
+                    let rolling_pending = rolling_pending.clone();
+                    std::thread::spawn(move || {
+                        let j = match set.rolling_restart(policy.as_ref())
+                        {
+                            Ok(labels) => {
+                                let mut f = vec![
+                                    ("type", Json::from("rolling_done")),
+                                    ("replicas",
+                                     Json::from(labels.len())),
+                                ];
+                                // Only when a controller swap was
+                                // actually requested — consumers use
+                                // the field's presence to tell a swap
+                                // rotation from a plain one.
+                                if policy.is_some() {
+                                    if let Some(l) = labels.last() {
+                                        f.push(("policy",
+                                                Json::from(l.clone())));
+                                    }
+                                }
+                                Json::obj(f)
+                            }
+                            Err(e) => conn_error(format!("{e:#}")),
+                        };
+                        rolling_pending.store(false, Ordering::SeqCst);
                         let _ = write_json(&out, &j);
                     });
                 }
@@ -434,7 +596,7 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
     // connection submitted so a dead client's requests release their KV
     // blocks instead of running to completion unobserved.
     for id in submitted {
-        server.service.cancel(id);
+        server.set.cancel(id);
     }
     result
 }
@@ -478,6 +640,93 @@ mod tests {
             "127.0.0.1:0",
         )
         .unwrap()
+    }
+
+    fn sim_replica_server(n: usize) -> Arc<Server> {
+        let set = ReplicaSet::build(n, RoutePolicy::LeastLoaded, |_| {
+            crate::service::ServiceBuilder::new(tiny_real(), cpu_host())
+                .policy(PolicyKind::Combined)
+                .d_sla(0.05)
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        serve_replicas(set, "127.0.0.1:0").unwrap()
+    }
+
+    fn poll_stats(c: &mut Client, what: &str,
+                  ok: impl Fn(&client::ServerStats) -> bool)
+                  -> client::ServerStats {
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(10);
+        loop {
+            let s = c.stats().unwrap();
+            if ok(&s) {
+                return s;
+            }
+            assert!(std::time::Instant::now() < deadline,
+                    "timed out waiting for {what}: {s:?}");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+
+    #[test]
+    fn replica_stats_attribution_and_policy_fanout() {
+        let server = sim_replica_server(2);
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Wait for every replica loop's first snapshot publish.
+        let s = poll_stats(&mut c, "first publish", |s| {
+            s.replicas.iter().all(|r| !r.controller.is_empty())
+        });
+        assert_eq!(s.n_replicas, 2);
+        assert_eq!(s.route_policy, "least-loaded");
+        assert_eq!(s.replicas.len(), 2);
+        assert_eq!(s.controller, "combined(min(alg1,alg2))",
+                   "uniform labels collapse in the aggregate");
+        for r in &s.replicas {
+            assert_eq!(r.controller, "combined(min(alg1,alg2))");
+            assert!(r.replicas.is_empty());
+        }
+        // set_policy fans out to every replica.
+        let label = c.set_policy("static-fixed:4").unwrap();
+        assert_eq!(label, "static-fixed:4");
+        let s = poll_stats(&mut c, "policy fan-out", |s| {
+            s.replicas.iter().all(|r| r.controller == "static-fixed:4")
+        });
+        assert_eq!(s.reconfigs, 2, "one reconfig per replica");
+        // Work still flows after the swap.
+        assert_eq!(c.generate("hi", 3).unwrap().n_tokens, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn single_replica_drain_reopen_and_rolling_restart_over_wire() {
+        let server = sim_replica_server(2);
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Bad index is an error, not a hang.
+        let err =
+            c.roundtrip_raw("{\"op\":\"drain\",\"replica\":9}").unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        c.drain_replica(0).unwrap();
+        // The set keeps serving through replica 1 while 0 is drained.
+        let g = c.generate("routed around", 4).unwrap();
+        assert_eq!(g.n_tokens, 4);
+        assert_eq!(server.replica_set().replica_of(g.id), 1,
+                   "draining replica must not receive work");
+        let s = poll_stats(&mut c, "replica 0 draining",
+                           |s| s.replicas[0].draining);
+        assert!(!s.draining, "one live replica keeps the set serving");
+        // Rejoin.
+        c.reopen(Some(0)).unwrap();
+        poll_stats(&mut c, "replica 0 reopened",
+                   |s| !s.replicas[0].draining);
+        // Full rotation over the wire, hot-swapping the controller.
+        assert_eq!(c.rolling_restart(Some("static-fixed:3")).unwrap(), 2);
+        let s = poll_stats(&mut c, "rotation applied", |s| {
+            s.replicas.iter().all(|r| r.controller == "static-fixed:3")
+        });
+        assert!(!s.draining);
+        assert_eq!(c.generate("after rotation", 2).unwrap().n_tokens, 2);
+        server.shutdown();
     }
 
     /// End-to-end over TCP with the simulated engine (virtual costs but a

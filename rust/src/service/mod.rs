@@ -25,13 +25,20 @@
 //! submissions fail with [`SubmitError::Draining`] — and resolves once
 //! every in-flight request has reached its terminal event.
 //!
+//! Scale-out lives one layer up: [`replica::ReplicaSet`] puts one
+//! submission front door over N `Service` replicas with pluggable
+//! routing ([`replica::RoutePolicy`]) and first-class rolling restarts
+//! built on [`Service::drain`] + [`Service::reopen`].
+//!
 //! The TCP frontend ([`crate::server`]) is a thin protocol adapter over
 //! this module (including the v2 admin ops `stats` / `set_policy` /
 //! `drain`); the wire format is documented there and in DESIGN.md.
 
+pub mod replica;
 pub mod types;
 
 pub use crate::request::{PriorityClass, SamplingParams};
+pub use replica::{ReplicaLoad, ReplicaSet, RoutePolicy};
 pub use types::{Completion, GenEvent, GenRequest, SubmitError};
 
 use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
@@ -74,6 +81,8 @@ pub struct ServiceBuilder {
     prior_out: f64,
     engine: Option<EngineBuilderFn>,
     start_paused: bool,
+    id_start: u64,
+    id_stride: u64,
 }
 
 impl ServiceBuilder {
@@ -88,6 +97,8 @@ impl ServiceBuilder {
             prior_out: 64.0,
             engine: None,
             start_paused: false,
+            id_start: 1,
+            id_stride: 1,
         }
     }
 
@@ -143,6 +154,20 @@ impl ServiceBuilder {
         self
     }
 
+    /// Carve this service's request-id namespace out of a shared id
+    /// space: ids are `start, start+stride, start+2·stride, …`. A
+    /// [`replica::ReplicaSet`] gives replica `k` of `n` the namespace
+    /// `(k+1, n)`, so ids are disjoint across the set and a cancel
+    /// routes to its replica in O(1) (`(id-1) mod n`). The default
+    /// `(1, 1)` is the standalone single-service id space.
+    pub fn request_ids(mut self, start: u64, stride: u64) -> Self {
+        assert!(start >= 1 && stride >= 1,
+                "request-id namespace needs start >= 1 and stride >= 1");
+        self.id_start = start;
+        self.id_stride = stride;
+        self
+    }
+
     pub fn build(self) -> Result<Service> {
         self.model.validate()?;
         self.hardware.validate()?;
@@ -174,7 +199,8 @@ impl ServiceBuilder {
                 })
             }
         };
-        Service::spawn(engine, sched, self.start_paused)
+        Service::spawn(engine, sched, self.start_paused, self.id_start,
+                       self.id_stride)
     }
 }
 
@@ -211,6 +237,13 @@ struct Shared {
     shutdown: AtomicBool,
     paused: AtomicBool,
     draining: AtomicBool,
+    /// Submissions past the draining gate but not yet in the control
+    /// channel. Raised *before* the gate check and dropped after the
+    /// send, so a drain can never resolve in the window between a
+    /// submitter passing the gate and its command landing — drain
+    /// resolution requires this to be zero (strict quiescence) while
+    /// the gated-then-sent submission is still admitted (zero loss).
+    pending_submits: AtomicU64,
     snapshot: Mutex<ServiceSnapshot>,
 }
 
@@ -220,6 +253,8 @@ struct Shared {
 pub struct Service {
     control: Sender<Command>,
     next_id: AtomicU64,
+    /// Request-id namespace step (see [`ServiceBuilder::request_ids`]).
+    id_stride: u64,
     shared: Arc<Shared>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
@@ -238,16 +273,18 @@ impl Service {
     where
         F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
     {
-        Self::spawn(Box::new(engine_builder), sched, false)
+        Self::spawn(Box::new(engine_builder), sched, false, 1, 1)
     }
 
     fn spawn(engine_builder: EngineBuilderFn, sched: Scheduler,
-             paused: bool) -> Result<Service> {
+             paused: bool, id_start: u64, id_stride: u64)
+             -> Result<Service> {
         let (control, commands) = std::sync::mpsc::channel();
         let shared = Arc::new(Shared {
             shutdown: AtomicBool::new(false),
             paused: AtomicBool::new(paused),
             draining: AtomicBool::new(false),
+            pending_submits: AtomicU64::new(0),
             snapshot: Mutex::new(ServiceSnapshot::default()),
         });
         let worker = {
@@ -272,7 +309,8 @@ impl Service {
         };
         Ok(Service {
             control,
-            next_id: AtomicU64::new(1),
+            next_id: AtomicU64::new(id_start),
+            id_stride,
             shared,
             worker: Some(worker),
         })
@@ -286,10 +324,17 @@ impl Service {
         if self.is_shutdown() {
             return Err(anyhow::Error::new(SubmitError::ShutDown));
         }
+        // Raise the pending counter BEFORE the draining check: a drain
+        // that flips the flag right after we pass the gate observes the
+        // counter and waits for this submission to land in the channel,
+        // so drain-resolved strictly implies nothing in flight — while
+        // the gated submission is still admitted, never failed.
+        self.shared.pending_submits.fetch_add(1, Ordering::SeqCst);
         if self.is_draining() {
+            self.shared.pending_submits.fetch_sub(1, Ordering::SeqCst);
             return Err(anyhow::Error::new(SubmitError::Draining));
         }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(self.id_stride, Ordering::Relaxed);
         let request = Request::with_tokens(
             id,
             req.prompt_tokens,
@@ -301,9 +346,11 @@ impl Service {
         // Relative until the loop stamps arrival (see engine_loop).
         .with_deadline(req.deadline);
         let (events_tx, events_rx) = std::sync::mpsc::channel();
-        self.control
-            .send(Command::Submit { request, events: events_tx })
-            .map_err(|_| anyhow!("service worker is gone"))?;
+        let sent = self
+            .control
+            .send(Command::Submit { request, events: events_tx });
+        self.shared.pending_submits.fetch_sub(1, Ordering::SeqCst);
+        sent.map_err(|_| anyhow!("service worker is gone"))?;
         Ok(SubmissionHandle {
             id,
             events: events_rx,
@@ -353,6 +400,26 @@ impl Service {
             .map_err(|_| anyhow!("service worker is gone"))?;
         rx.recv()
             .map_err(|_| anyhow!("service shut down before drain resolved"))
+    }
+
+    /// Flip the draining flag without waiting for in-flight work —
+    /// `submit` starts failing with [`SubmitError::Draining`] right
+    /// away. [`Service::drain`] does this and then blocks; a
+    /// [`replica::ReplicaSet`] uses `begin_drain` to stop admissions on
+    /// every replica before waiting them out one by one.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Rejoin after a drain: clear the draining flag so `submit` accepts
+    /// work again. The scheduler, telemetry and controller all carried
+    /// over (a drained service is quiesced, not torn down), so
+    /// drain → [`Service::reconfigure`] → reopen is a full replica
+    /// rotation. Call only once a pending [`Service::drain`] has
+    /// resolved — reopening under a still-blocked drain lets new work
+    /// postpone it indefinitely.
+    pub fn reopen(&self) {
+        self.shared.draining.store(false, Ordering::SeqCst);
     }
 
     pub fn is_draining(&self) -> bool {
@@ -496,16 +563,34 @@ fn fail_pending(commands: &Receiver<Command>, message: &str) {
     }
 }
 
-/// Resolve drain waiters once nothing is in flight: no scheduler work
-/// and every stream has received its terminal event. (Waiters registered
-/// on an idle service resolve on the next iteration.)
-fn resolve_drains(waiters: &mut Vec<Sender<()>>, sched: &Scheduler,
+/// Resolve drain waiters once nothing is in flight: no scheduler work,
+/// every stream has received its terminal event, and no submitter sits
+/// between the draining gate and the control channel.
+///
+/// Resolution is two-phase: the quiescent condition (including
+/// `no_pending_submits`, read at the top of the iteration, before the
+/// channel drain) must hold on two consecutive iterations — `armed`
+/// carries the first observation. This closes both gate races: a
+/// submitter that passed the gate before the drain flag flipped has,
+/// by the second iteration's top, either landed in the channel (the
+/// intermediate channel drain processes it — its watcher, or its
+/// terminal completion, is visible here) or still holds the pending
+/// counter, failing the second check. (Waiters registered on an idle
+/// service therefore resolve after two iterations.)
+fn resolve_drains(no_pending_submits: bool, armed: &mut bool,
+                  waiters: &mut Vec<Sender<()>>, sched: &Scheduler,
                   watchers: &HashMap<RequestId, Sender<GenEvent>>) {
-    if waiters.is_empty() || sched.has_work() || !watchers.is_empty() {
-        return;
-    }
-    for w in waiters.drain(..) {
-        let _ = w.send(());
+    let quiet = no_pending_submits
+        && !waiters.is_empty()
+        && !sched.has_work()
+        && watchers.is_empty();
+    if quiet && *armed {
+        for w in waiters.drain(..) {
+            let _ = w.send(());
+        }
+        *armed = false;
+    } else {
+        *armed = quiet;
     }
 }
 
@@ -545,29 +630,28 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
     let mut watchers: HashMap<RequestId, Sender<GenEvent>> = HashMap::new();
     let mut texts: HashMap<RequestId, Vec<i32>> = HashMap::new();
     let mut drain_waiters: Vec<Sender<()>> = Vec::new();
+    // First-of-two quiescence observation for drain resolution (see
+    // resolve_drains).
+    let mut drain_armed = false;
     let mut label = sched.controller_label();
     while !shared.shutdown.load(Ordering::SeqCst) {
         let now = clock.elapsed().as_secs_f64();
+        // Read BEFORE draining the channel (see resolve_drains): zero
+        // here + an empty channel below = no submission anywhere
+        // between the draining gate and the scheduler.
+        let no_pending_submits =
+            shared.pending_submits.load(Ordering::SeqCst) == 0;
         // ---- 1. drain control commands ----
         loop {
             match commands.try_recv() {
                 Ok(Command::Submit { mut request, events }) => {
-                    // Submissions racing the drain flag are refused here,
-                    // so the drain set can only shrink once draining.
-                    // Accepted precedes the terminal error: every stream
-                    // keeps the `accepted → … → terminal` shape blocking
-                    // clients key off (see Client::submit).
-                    if shared.draining.load(Ordering::SeqCst) {
-                        let _ = events.send(GenEvent::Accepted {
-                            id: request.id,
-                            class: request.class,
-                        });
-                        let _ = events.send(GenEvent::Error {
-                            id: request.id,
-                            message: SubmitError::Draining.to_string(),
-                        });
-                        continue;
-                    }
+                    // The draining gate lives in Service::submit (before
+                    // the send), so anything already in the channel was
+                    // accepted pre-drain: admit it and let the drain wait
+                    // for it. The drain set may grow by this in-channel
+                    // handful, never by new submissions — accepted work
+                    // is never failed by a drain (the replica-rotation
+                    // zero-loss guarantee builds on this).
                     request.arrived_at = now;
                     // Deadline arrives relative; make it absolute in the
                     // loop's clock domain.
@@ -623,7 +707,8 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
 
         // ---- 2. paused: keep the snapshot fresh, skip stepping ----
         if shared.paused.load(Ordering::SeqCst) {
-            resolve_drains(&mut drain_waiters, sched, &watchers);
+            resolve_drains(no_pending_submits, &mut drain_armed,
+                           &mut drain_waiters, sched, &watchers);
             publish(shared, sched, &label);
             std::thread::sleep(Duration::from_millis(1));
             continue;
@@ -696,7 +781,8 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
             };
             let _ = tx.send(ev);
         }
-        resolve_drains(&mut drain_waiters, sched, &watchers);
+        resolve_drains(no_pending_submits, &mut drain_armed,
+                       &mut drain_waiters, sched, &watchers);
         publish(shared, sched, &label);
     }
     // Shutdown: fail submissions still queued in the control channel,
@@ -838,6 +924,42 @@ mod tests {
         assert_eq!(err.downcast_ref::<SubmitError>(),
                    Some(&SubmitError::Draining));
         assert!(snapshot_when(&service, |s| s.draining).draining);
+        service.shutdown();
+    }
+
+    #[test]
+    fn reopen_after_drain_serves_again() {
+        let service = sim_service();
+        let h = service.submit(GenRequest::from_text("before", 3)).unwrap();
+        assert_eq!(h.wait().unwrap().n_tokens, 3);
+        service.drain().unwrap();
+        assert!(service.is_draining());
+        assert!(service.submit(GenRequest::from_text("no", 2)).is_err());
+        // Rejoin: the same scheduler/controller serve again.
+        service.reopen();
+        assert!(!service.is_draining());
+        let h = service.submit(GenRequest::from_text("after", 4)).unwrap();
+        assert_eq!(h.wait().unwrap().n_tokens, 4);
+        service.shutdown();
+    }
+
+    #[test]
+    fn request_id_namespace_start_and_stride() {
+        let service = ServiceBuilder::new(tiny_real(), cpu_host())
+            .eta_tokens(100_000)
+            .request_ids(3, 4) // replica 2 of a 4-wide set
+            .paused(true)
+            .build()
+            .unwrap();
+        let ids: Vec<u64> = (0..3)
+            .map(|_| {
+                service
+                    .submit(GenRequest::from_text("ns", 1))
+                    .unwrap()
+                    .id()
+            })
+            .collect();
+        assert_eq!(ids, vec![3, 7, 11]);
         service.shutdown();
     }
 

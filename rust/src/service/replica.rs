@@ -1,0 +1,762 @@
+//! Replica tier — one submission front door over N independently
+//! scheduled [`Service`] replicas.
+//!
+//! The paper's capacity story is measured on one engine; this module is
+//! the horizontal-scale layer above it (the standard split in serving
+//! systems: instance-level request routing over iteration-level
+//! batching). Each replica is a full `Service` — its own engine-loop
+//! thread, scheduler, KV pool and controller — and the [`ReplicaSet`]
+//! routes typed submissions across them with a pluggable
+//! [`RoutePolicy`]:
+//!
+//! * **round-robin** — cheapest; ignores load.
+//! * **least-loaded** — per-replica backlog (waiting + running +
+//!   resuming, off the live snapshot), KV headroom as the tie-break.
+//! * **class-pinned:R** — interactive traffic pinned to the first `R`
+//!   replicas (its reserved latency partition), standard/batch traffic
+//!   least-loaded over the rest; each class falls back to the other
+//!   partition only when its own is entirely draining.
+//!
+//! Request ids are namespaced per replica (replica `k` of `n` allocates
+//! `k+1, k+1+n, …` — see [`super::ServiceBuilder::request_ids`]), so a
+//! [`ReplicaSet::cancel`] routes by `(id-1) mod n` without any shared
+//! map, and per-request replica attribution is [`ReplicaSet::replica_of`].
+//!
+//! Rolling restart is a first-class op built on the drain primitive:
+//! [`ReplicaSet::rolling_restart`] walks the set draining one replica at
+//! a time (the router keeps dispatching to the others — a draining
+//! replica is skipped, so accepted work is never failed), hot-swaps its
+//! controller, reopens it, and advances. Zero requests are lost or hung
+//! across the rotation; `rust/tests/test_replica.rs` asserts it.
+
+use super::{
+    GenRequest, Service, ServiceBuilder, ServiceSnapshot, SubmissionHandle,
+    SubmitError,
+};
+use crate::config::PolicyKind;
+use crate::request::{PriorityClass, RequestId};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// How the front door picks a replica for each submission.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate over the replicas in index order.
+    RoundRobin,
+    /// Smallest backlog wins (waiting + running + resuming off the live
+    /// snapshot); ties go to the replica with more free KV blocks, then
+    /// the lower index.
+    LeastLoaded,
+    /// Interactive requests go least-loaded over replicas
+    /// `[0, reserved)`; standard/batch go least-loaded over
+    /// `[reserved, n)`. A class falls back to the other partition only
+    /// when its own is entirely draining.
+    ClassPinned { reserved: usize },
+}
+
+impl RoutePolicy {
+    /// Parse a CLI/wire label: `round-robin` | `least-loaded` |
+    /// `class-pinned:R`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("class-pinned:") {
+            return Ok(RoutePolicy::ClassPinned { reserved: rest.parse()? });
+        }
+        Ok(match s {
+            "round-robin" | "rr" => RoutePolicy::RoundRobin,
+            "least-loaded" | "ll" => RoutePolicy::LeastLoaded,
+            other => bail!(
+                "unknown route policy '{other}' \
+                 (want round-robin|least-loaded|class-pinned:R)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin".into(),
+            RoutePolicy::LeastLoaded => "least-loaded".into(),
+            RoutePolicy::ClassPinned { reserved } => {
+                format!("class-pinned:{reserved}")
+            }
+        }
+    }
+
+    /// Structural validation against a set size (wire input reaches
+    /// this, so bad shapes must be errors, not panics downstream).
+    pub fn validate(&self, n_replicas: usize) -> Result<()> {
+        if let RoutePolicy::ClassPinned { reserved } = self {
+            if *reserved == 0 || *reserved >= n_replicas {
+                bail!(
+                    "class-pinned needs 0 < reserved < n_replicas \
+                     (reserved={reserved}, n_replicas={n_replicas})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Dispatch preference for one request: replica indices, best first,
+    /// draining/down replicas excluded (empty = nowhere to route). `rr`
+    /// is the caller's monotone submission counter (consumed by
+    /// round-robin, ignored otherwise). Pure over the load snapshot so
+    /// the live router and the virtual-time driver share one policy.
+    pub fn order(&self, class: PriorityClass, loads: &[ReplicaLoad],
+                 rr: usize) -> Vec<usize> {
+        match self {
+            RoutePolicy::RoundRobin => {
+                if loads.is_empty() {
+                    return Vec::new();
+                }
+                let n = loads.len();
+                let start = rr % n;
+                (0..n)
+                    .map(|k| (start + k) % n)
+                    .filter(|&i| !loads[i].draining)
+                    .collect()
+            }
+            RoutePolicy::LeastLoaded => {
+                let up: Vec<usize> = (0..loads.len())
+                    .filter(|&i| !loads[i].draining)
+                    .collect();
+                least_loaded(&up, loads)
+            }
+            RoutePolicy::ClassPinned { reserved } => {
+                let (own, other): (Vec<usize>, Vec<usize>) =
+                    (0..loads.len())
+                        .filter(|&i| !loads[i].draining)
+                        .partition(|&i| {
+                            (i < *reserved)
+                                == (class == PriorityClass::Interactive)
+                        });
+                let mut out = least_loaded(&own, loads);
+                out.extend(least_loaded(&other, loads));
+                out
+            }
+        }
+    }
+
+    /// First choice of [`Self::order`], if any replica is routable.
+    pub fn pick(&self, class: PriorityClass, loads: &[ReplicaLoad],
+                rr: usize) -> Option<usize> {
+        self.order(class, loads, rr).first().copied()
+    }
+}
+
+fn least_loaded(idx: &[usize], loads: &[ReplicaLoad]) -> Vec<usize> {
+    let mut v = idx.to_vec();
+    v.sort_by(|&a, &b| {
+        loads[a]
+            .backlog()
+            .cmp(&loads[b].backlog())
+            .then(loads[b].kv_free_blocks.cmp(&loads[a].kv_free_blocks))
+            .then(a.cmp(&b))
+    });
+    v
+}
+
+/// Point-in-time load view of one replica, as the route policies consume
+/// it. Built from [`ServiceSnapshot`]s on the live path and from
+/// scheduler queue lengths on the virtual-time driver path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaLoad {
+    pub waiting: u32,
+    pub running: u32,
+    pub resuming: u32,
+    /// Submissions the router dispatched to this replica that are not
+    /// yet visible in its published snapshot (the snapshot refreshes
+    /// once per engine-loop iteration; without this correction a burst
+    /// inside one refresh window would herd onto one replica). Zero on
+    /// the virtual-time driver path, which reads queues synchronously.
+    pub in_flight_to: u32,
+    pub kv_free_blocks: usize,
+    /// Draining or shut down: not a routing candidate.
+    pub draining: bool,
+}
+
+impl ReplicaLoad {
+    /// Requests somewhere inside the replica (including dispatches the
+    /// snapshot has not caught up with) — the least-loaded score.
+    pub fn backlog(&self) -> u64 {
+        self.waiting as u64
+            + self.running as u64
+            + self.resuming as u64
+            + self.in_flight_to as u64
+    }
+}
+
+/// N `Service` replicas behind one submission front door. Cheap to share
+/// behind an `Arc`; dropping it shuts every replica down (via the
+/// `Service` drops).
+pub struct ReplicaSet {
+    replicas: Vec<Arc<Service>>,
+    route: RoutePolicy,
+    /// Monotone submission counter feeding round-robin.
+    rr: AtomicUsize,
+    /// Cumulative submissions this router dispatched per replica —
+    /// compared against the snapshot's cumulative seen count to credit
+    /// not-yet-published dispatches to a replica's load
+    /// ([`ReplicaLoad::in_flight_to`]), so a burst inside one snapshot
+    /// refresh window spreads instead of herding. Known limit: a
+    /// replica that also receives *direct* submissions (bypassing the
+    /// router) inflates the seen count permanently, saturating its
+    /// credit to zero — routing degrades to the snapshot-only view for
+    /// that replica, never below it. Production traffic goes through
+    /// the router; direct submits are a test/embedding convenience.
+    routed: Vec<AtomicU64>,
+    /// Serializes drain/reopen/rotation ops: a concurrent rolling
+    /// restart must not interleave its drain/reopen sequence with
+    /// another rotation or an operator drain — an unsynchronized
+    /// `reopen` under a still-blocked `drain` lets new work postpone
+    /// that drain indefinitely, and two interleaved rotations can have
+    /// every replica draining at once. Late callers queue.
+    rotation: Mutex<()>,
+}
+
+impl ReplicaSet {
+    /// Build `n` replicas from a per-replica [`ServiceBuilder`] factory.
+    /// The factory's builder is namespaced automatically (replica `k` →
+    /// ids `k+1, k+1+n, …`), so cancel routing and per-request replica
+    /// attribution work out of the box.
+    pub fn build<F>(n: usize, route: RoutePolicy, mut mk: F)
+                    -> Result<ReplicaSet>
+    where
+        F: FnMut(usize) -> ServiceBuilder,
+    {
+        if n == 0 {
+            bail!("a replica set needs at least one replica");
+        }
+        route.validate(n)?;
+        let mut replicas = Vec::with_capacity(n);
+        for i in 0..n {
+            let svc = mk(i)
+                .request_ids(i as u64 + 1, n as u64)
+                .build()
+                .map_err(|e| anyhow!("building replica {i}: {e:#}"))?;
+            replicas.push(Arc::new(svc));
+        }
+        let routed = (0..n).map(|_| AtomicU64::new(0)).collect();
+        Ok(ReplicaSet {
+            replicas,
+            route,
+            rr: AtomicUsize::new(0),
+            routed,
+            rotation: Mutex::new(()),
+        })
+    }
+
+    /// Wrap already-built services. Callers are responsible for id
+    /// namespacing ([`ServiceBuilder::request_ids`]) when `n > 1`; the
+    /// single-service case (the compat server path) needs none.
+    pub fn from_services(services: Vec<Service>, route: RoutePolicy)
+                         -> Result<ReplicaSet> {
+        if services.is_empty() {
+            bail!("a replica set needs at least one replica");
+        }
+        route.validate(services.len())?;
+        let replicas: Vec<Arc<Service>> =
+            services.into_iter().map(Arc::new).collect();
+        let routed =
+            (0..replicas.len()).map(|_| AtomicU64::new(0)).collect();
+        Ok(ReplicaSet {
+            replicas,
+            route,
+            rr: AtomicUsize::new(0),
+            routed,
+            rotation: Mutex::new(()),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.replicas.is_empty()
+    }
+
+    pub fn route_policy(&self) -> &RoutePolicy {
+        &self.route
+    }
+
+    /// Direct access to one replica (introspection, targeted submits in
+    /// tests). Panics when out of range.
+    pub fn replica(&self, i: usize) -> &Service {
+        &self.replicas[i]
+    }
+
+    /// Which replica owns request id `id` (the id-namespace inverse).
+    pub fn replica_of(&self, id: RequestId) -> usize {
+        (id.wrapping_sub(1) % self.replicas.len() as u64) as usize
+    }
+
+    /// Live load view across the set, index-aligned with the replicas.
+    /// Reads only the scalar fields out of each published snapshot (no
+    /// heap clones — this runs per submission) and credits this
+    /// router's not-yet-published dispatches, so consecutive picks
+    /// within one snapshot refresh window spread by real load.
+    pub fn loads(&self) -> Vec<ReplicaLoad> {
+        self.replicas
+            .iter()
+            .zip(self.routed.iter())
+            .map(|(s, routed)| {
+                let snap = s.shared.snapshot.lock().unwrap();
+                // Everything the snapshot has ever seen (live +
+                // terminal); router dispatches beyond it are in flight
+                // toward the replica. Direct (non-router) submissions
+                // make `seen` run ahead — saturate to zero, falling
+                // back to the snapshot-only view.
+                let seen = snap.finished
+                    + snap.rejected
+                    + snap.shed
+                    + snap.cancelled
+                    + snap.waiting as u64
+                    + snap.running as u64
+                    + snap.resuming as u64;
+                let in_flight_to = routed
+                    .load(Ordering::SeqCst)
+                    .saturating_sub(seen)
+                    .min(u32::MAX as u64) as u32;
+                ReplicaLoad {
+                    waiting: snap.waiting,
+                    running: snap.running,
+                    resuming: snap.resuming,
+                    in_flight_to,
+                    kv_free_blocks: snap.kv_free_blocks,
+                    // The snapshot's flag is published once per loop
+                    // iteration; read the authoritative flags so
+                    // routing reacts to begin_drain/shutdown
+                    // immediately.
+                    draining: s.is_draining() || s.is_shutdown(),
+                }
+            })
+            .collect()
+    }
+
+    /// Route and submit. Skips draining replicas; when the routed
+    /// replica refuses with a typed [`SubmitError`] (a drain race), the
+    /// remaining candidates are tried in preference order. Fails with
+    /// [`SubmitError::Draining`] only when the whole set is draining.
+    pub fn submit(&self, req: GenRequest) -> Result<SubmissionHandle> {
+        self.submit_routed(req).map(|(_, h)| h)
+    }
+
+    /// [`Self::submit`] plus the chosen replica index. Validation
+    /// happens once, inside `Service::submit`. When a whole candidate
+    /// pass is refused by drain races (a rotation can reopen one
+    /// replica and start draining another between our load read and
+    /// the submit landing), the loads are re-read and the pass retried
+    /// — bounded, so a pathological flag flutter cannot livelock the
+    /// submitter.
+    pub fn submit_routed(&self, req: GenRequest)
+                         -> Result<(usize, SubmissionHandle)> {
+        const MAX_ROUTE_PASSES: usize = 8;
+        let mut last_err: Option<anyhow::Error> = None;
+        for _pass in 0..MAX_ROUTE_PASSES {
+            let loads = self.loads();
+            let rr = self.rr.fetch_add(1, Ordering::Relaxed);
+            let order = self.route.order(req.class, &loads, rr);
+            if order.is_empty() {
+                break; // the whole set is draining
+            }
+            for &i in &order {
+                // The clone (one prompt-token Vec copy) buys the
+                // bounded retry passes above — a refused submit cannot
+                // hand the request back through the anyhow error path.
+                match self.replicas[i].submit(req.clone()) {
+                    Ok(h) => {
+                        self.routed[i].fetch_add(1, Ordering::SeqCst);
+                        return Ok((i, h));
+                    }
+                    Err(e) => {
+                        let retryable = matches!(
+                            e.downcast_ref::<SubmitError>(),
+                            Some(SubmitError::Draining)
+                                | Some(SubmitError::ShutDown)
+                        );
+                        if !retryable {
+                            return Err(e);
+                        }
+                        last_err = Some(e);
+                    }
+                }
+            }
+            // Every candidate of this pass hit a drain race; the set
+            // may have rotated under us — re-read and go again.
+        }
+        Err(last_err
+            .unwrap_or_else(|| anyhow::Error::new(SubmitError::Draining)))
+    }
+
+    /// Cancel any in-flight id — routed to its owning replica by the id
+    /// namespace. Returns false only when the id is outside every
+    /// namespace (`0`) or the owning replica's worker is gone.
+    pub fn cancel(&self, id: RequestId) -> bool {
+        if id == 0 {
+            return false;
+        }
+        self.replicas[self.replica_of(id)].cancel(id)
+    }
+
+    /// Per-replica snapshots, index-aligned with the replicas.
+    pub fn snapshots(&self) -> Vec<ServiceSnapshot> {
+        self.replicas.iter().map(|s| s.snapshot()).collect()
+    }
+
+    /// Fold per-replica snapshots into one set-level view: counters and
+    /// KV accounting sum, `b_t` sums (total concurrency target),
+    /// `controller` is the replicas' common label (distinct labels join
+    /// with `|`), and `draining` means *every* replica is draining —
+    /// i.e. the whole set refuses work.
+    pub fn aggregate(snaps: &[ServiceSnapshot]) -> ServiceSnapshot {
+        let mut agg = ServiceSnapshot {
+            draining: !snaps.is_empty(),
+            ..ServiceSnapshot::default()
+        };
+        let mut labels: Vec<&str> = Vec::new();
+        for s in snaps {
+            agg.running += s.running;
+            agg.waiting += s.waiting;
+            for (a, b) in agg
+                .waiting_by_class
+                .iter_mut()
+                .zip(s.waiting_by_class.iter())
+            {
+                *a += *b;
+            }
+            agg.resuming += s.resuming;
+            agg.kv_used_tokens += s.kv_used_tokens;
+            agg.kv_free_blocks += s.kv_free_blocks;
+            agg.kv_total_blocks += s.kv_total_blocks;
+            agg.b_t += s.b_t;
+            agg.steps += s.steps;
+            agg.finished += s.finished;
+            agg.rejected += s.rejected;
+            agg.shed += s.shed;
+            agg.cancelled += s.cancelled;
+            agg.reconfigs += s.reconfigs;
+            agg.draining &= s.draining;
+            if !labels.contains(&s.controller.as_str()) {
+                labels.push(s.controller.as_str());
+            }
+        }
+        agg.controller = labels.join("|");
+        agg
+    }
+
+    /// [`Self::aggregate`] over the live [`Self::snapshots`].
+    pub fn aggregate_snapshot(&self) -> ServiceSnapshot {
+        Self::aggregate(&self.snapshots())
+    }
+
+    /// Fan a controller hot-swap out to every replica. The kind is
+    /// validated up front so an invalid policy swaps nothing; a
+    /// mid-fan-out failure (a dead replica worker) leaves earlier
+    /// replicas on the new controller and surfaces the error. Returns
+    /// the (common) new controller label.
+    pub fn reconfigure(&self, kind: PolicyKind) -> Result<String> {
+        kind.validate()?;
+        let mut label = String::new();
+        for (i, s) in self.replicas.iter().enumerate() {
+            label = s
+                .reconfigure(kind.clone())
+                .map_err(|e| anyhow!("reconfigure replica {i}: {e:#}"))?;
+        }
+        Ok(label)
+    }
+
+    /// Whole-set drain: stop admissions on *every* replica first (so the
+    /// router cannot shuffle rejected work between half-drained
+    /// replicas), then wait each out. Resolves when no replica holds
+    /// in-flight work. Serialized against rotations (see `rotation`);
+    /// the admission flags flip *before* queueing behind an in-progress
+    /// rotation — admissions stop immediately, except that the rotation
+    /// may briefly re-admit on a replica it reopens until it finishes,
+    /// after which the flags are re-asserted under the lock.
+    pub fn drain(&self) -> Result<()> {
+        for s in &self.replicas {
+            s.begin_drain();
+        }
+        let _turn = self.rotation.lock().unwrap();
+        // A rotation that finished between the flip above and taking
+        // the lock may have reopened replicas — re-assert.
+        for s in &self.replicas {
+            s.begin_drain();
+        }
+        for (i, s) in self.replicas.iter().enumerate() {
+            s.drain().map_err(|e| anyhow!("drain replica {i}: {e:#}"))?;
+        }
+        Ok(())
+    }
+
+    /// Drain a single replica (the router stops routing to it
+    /// immediately; in-flight work finishes). Blocks until drained.
+    /// Serialized against rotations and other drains, with the same
+    /// flag-before-lock behavior as [`Self::drain`].
+    pub fn drain_replica(&self, i: usize) -> Result<()> {
+        let s = self.checked(i)?;
+        s.begin_drain();
+        let _turn = self.rotation.lock().unwrap();
+        s.begin_drain(); // re-assert if a rotation reopened it meanwhile
+        s.drain()
+    }
+
+    /// Reopen a drained replica for admissions (the rejoin half of a
+    /// rotation). Refuses (instead of blocking) while a drain or
+    /// rotation holds the rotation lock — reopening mid-drain would
+    /// let new work postpone that drain indefinitely, and callers
+    /// (e.g. the server's connection read loop) must not block on it.
+    pub fn reopen_replica(&self, i: usize) -> Result<()> {
+        let s = self.checked(i)?;
+        let _turn = self.try_rotation_turn()?;
+        s.reopen();
+        Ok(())
+    }
+
+    /// Reopen every replica (refuses while a drain/rotation is in
+    /// progress, like [`Self::reopen_replica`]).
+    pub fn reopen(&self) -> Result<()> {
+        let _turn = self.try_rotation_turn()?;
+        for s in &self.replicas {
+            s.reopen();
+        }
+        Ok(())
+    }
+
+    fn try_rotation_turn(&self) -> Result<std::sync::MutexGuard<'_, ()>> {
+        self.rotation.try_lock().map_err(|_| {
+            anyhow!("a drain or rolling restart is in progress — \
+                     reopen refused")
+        })
+    }
+
+    /// Rolling restart — the first-class rotation op: for each replica
+    /// in index order, drain it (the router keeps serving from the
+    /// others; accepted work always finishes), hot-swap its controller
+    /// when `policy` is given, reopen it, advance. Returns each
+    /// replica's post-rotation controller label. With a single replica
+    /// the set refuses submissions during its own window — run ≥ 2
+    /// replicas for a zero-downtime rotation.
+    pub fn rolling_restart(&self, policy: Option<&PolicyKind>)
+                           -> Result<Vec<String>> {
+        if let Some(k) = policy {
+            k.validate()?;
+        }
+        // One rotation at a time: a concurrent rotation or drain waits
+        // here instead of interleaving drain/reopen on live replicas.
+        let _turn = self.rotation.lock().unwrap();
+        let mut labels = Vec::with_capacity(self.replicas.len());
+        for (i, s) in self.replicas.iter().enumerate() {
+            s.drain()
+                .map_err(|e| anyhow!("rolling drain replica {i}: {e:#}"))?;
+            let label = match policy {
+                Some(k) => s.reconfigure(k.clone()).map_err(|e| {
+                    anyhow!("rolling reconfigure replica {i}: {e:#}")
+                })?,
+                None => s.snapshot().controller,
+            };
+            s.reopen();
+            labels.push(label);
+        }
+        Ok(labels)
+    }
+
+    /// Pause/resume every replica's stepping loop (deterministic tests).
+    pub fn pause(&self) {
+        for s in &self.replicas {
+            s.pause();
+        }
+    }
+
+    pub fn resume(&self) {
+        for s in &self.replicas {
+            s.resume();
+        }
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.replicas.iter().all(|s| s.is_shutdown())
+    }
+
+    pub fn shutdown(&self) {
+        for s in &self.replicas {
+            s.shutdown();
+        }
+    }
+
+    fn checked(&self, i: usize) -> Result<&Arc<Service>> {
+        self.replicas.get(i).ok_or_else(|| {
+            anyhow!("replica {i} out of range (set has {})",
+                    self.replicas.len())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(waiting: u32, running: u32, free: usize) -> ReplicaLoad {
+        ReplicaLoad {
+            waiting,
+            running,
+            resuming: 0,
+            in_flight_to: 0,
+            kv_free_blocks: free,
+            draining: false,
+        }
+    }
+
+    #[test]
+    fn parse_label_roundtrip_and_validation() {
+        for p in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::ClassPinned { reserved: 2 },
+        ] {
+            assert_eq!(RoutePolicy::parse(&p.label()).unwrap(), p);
+        }
+        assert_eq!(RoutePolicy::parse("rr").unwrap(),
+                   RoutePolicy::RoundRobin);
+        assert_eq!(RoutePolicy::parse("ll").unwrap(),
+                   RoutePolicy::LeastLoaded);
+        assert!(RoutePolicy::parse("bogus").is_err());
+        assert!(RoutePolicy::parse("class-pinned:x").is_err());
+        // Reserved partition must leave at least one unreserved replica.
+        assert!(RoutePolicy::ClassPinned { reserved: 0 }
+            .validate(2)
+            .is_err());
+        assert!(RoutePolicy::ClassPinned { reserved: 2 }
+            .validate(2)
+            .is_err());
+        assert!(RoutePolicy::ClassPinned { reserved: 1 }
+            .validate(2)
+            .is_ok());
+        assert!(RoutePolicy::LeastLoaded.validate(1).is_ok());
+    }
+
+    #[test]
+    fn round_robin_rotates_and_skips_draining() {
+        let p = RoutePolicy::RoundRobin;
+        let mut loads = vec![load(0, 0, 10); 3];
+        let c = PriorityClass::Standard;
+        assert_eq!(p.order(c, &loads, 0), vec![0, 1, 2]);
+        assert_eq!(p.order(c, &loads, 1), vec![1, 2, 0]);
+        assert_eq!(p.order(c, &loads, 5), vec![2, 0, 1]);
+        loads[1].draining = true;
+        assert_eq!(p.order(c, &loads, 1), vec![2, 0], "skips draining");
+        loads[0].draining = true;
+        loads[2].draining = true;
+        assert!(p.order(c, &loads, 0).is_empty(), "whole set draining");
+    }
+
+    #[test]
+    fn least_loaded_sorts_by_backlog_then_headroom() {
+        let p = RoutePolicy::LeastLoaded;
+        let loads = vec![
+            load(4, 2, 50), // backlog 6
+            load(1, 1, 10), // backlog 2, low headroom
+            load(2, 0, 99), // backlog 2, high headroom → wins the tie
+        ];
+        assert_eq!(p.order(PriorityClass::Standard, &loads, 0),
+                   vec![2, 1, 0]);
+        assert_eq!(p.pick(PriorityClass::Standard, &loads, 0), Some(2));
+    }
+
+    #[test]
+    fn class_pinned_partitions_and_falls_back() {
+        let p = RoutePolicy::ClassPinned { reserved: 1 };
+        let mut loads = vec![load(5, 0, 10), load(0, 0, 10), load(1, 0, 10)];
+        // Interactive sticks to its reserved replica even when busier.
+        assert_eq!(p.order(PriorityClass::Interactive, &loads, 0),
+                   vec![0, 1, 2]);
+        // Other classes avoid the reserved partition.
+        assert_eq!(p.order(PriorityClass::Batch, &loads, 0), vec![1, 2, 0]);
+        assert_eq!(p.order(PriorityClass::Standard, &loads, 0),
+                   vec![1, 2, 0]);
+        // Fallback: reserved replica draining → interactive goes to the
+        // unreserved partition rather than nowhere.
+        loads[0].draining = true;
+        assert_eq!(p.order(PriorityClass::Interactive, &loads, 0),
+                   vec![1, 2]);
+    }
+
+    #[test]
+    fn aggregate_folds_counters_and_labels() {
+        let mk = |controller: &str, draining: bool| ServiceSnapshot {
+            running: 2,
+            waiting: 3,
+            waiting_by_class: [1, 2, 0],
+            resuming: 1,
+            kv_used_tokens: 100,
+            kv_free_blocks: 5,
+            kv_total_blocks: 10,
+            b_t: 8,
+            controller: controller.to_string(),
+            steps: 7,
+            finished: 4,
+            rejected: 1,
+            shed: 1,
+            cancelled: 1,
+            reconfigs: 1,
+            draining,
+        };
+        let a = ReplicaSet::aggregate(&[mk("x", true), mk("x", false)]);
+        assert_eq!(a.running, 4);
+        assert_eq!(a.waiting, 6);
+        assert_eq!(a.waiting_by_class, [2, 4, 0]);
+        assert_eq!(a.kv_total_blocks, 20);
+        assert_eq!(a.b_t, 16);
+        assert_eq!(a.finished, 8);
+        assert_eq!(a.controller, "x", "common label collapses");
+        assert!(!a.draining, "one live replica keeps the set serving");
+        let b = ReplicaSet::aggregate(&[mk("x", true), mk("y", true)]);
+        assert_eq!(b.controller, "x|y");
+        assert!(b.draining, "every replica draining → set draining");
+    }
+
+    #[test]
+    fn burst_spreads_without_waiting_for_snapshots() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        // Paused replicas: snapshots may lag arbitrarily, yet the
+        // routed-count credit keeps per-replica backlog exact
+        // (snapshot backlog + in_flight_to ≡ requests routed), so a
+        // back-to-back burst alternates instead of herding.
+        let set = ReplicaSet::build(2, RoutePolicy::LeastLoaded, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+                .paused(true)
+        })
+        .unwrap();
+        let mut per = [0usize; 2];
+        for _ in 0..6 {
+            let (i, _h) = set
+                .submit_routed(GenRequest::from_text("burst", 1))
+                .unwrap();
+            per[i] += 1;
+        }
+        assert_eq!(per, [3, 3], "in-flight credit must spread the burst");
+        set.shutdown();
+    }
+
+    #[test]
+    fn replica_of_inverts_the_id_namespace() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(3, RoutePolicy::RoundRobin, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+                .paused(true)
+        })
+        .unwrap();
+        for k in 0..6 {
+            let (i, h) = set
+                .submit_routed(GenRequest::from_text("ns", 1))
+                .unwrap();
+            assert_eq!(i, k % 3, "round-robin order");
+            assert_eq!(set.replica_of(h.id()), i,
+                       "id {} must map back to replica {i}", h.id());
+        }
+        set.shutdown();
+    }
+}

@@ -1,0 +1,339 @@
+//! Replica-tier integration tests: routing policies balance load and pin
+//! classes on live `Service` replicas, cancels and streams reach the
+//! replica that owns them, a rolling restart (drain → reconfigure →
+//! reopen, one replica at a time) completes with zero lost or hung
+//! requests, and — on the virtual-time co-simulation behind `dynabatch
+//! route` — N=2 least-loaded routing delivers ≥ 1.8× the aggregate
+//! throughput of a single replica.
+
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::{run_replica_sim, SimScenario};
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::{Engine, StepOutcome, StepPlan};
+use dynabatch::request::{PriorityClass, RequestId};
+use dynabatch::service::{
+    GenEvent, GenRequest, ReplicaSet, RoutePolicy, ServiceBuilder,
+    SubmissionHandle,
+};
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Simulated engine with a real wall-clock cost per step, so mid-flight
+/// control (cancel, rolling drains) has a deterministic window to land.
+struct SlowEngine {
+    inner: SimEngine,
+    delay: Duration,
+}
+
+impl SlowEngine {
+    fn new(delay_ms: u64) -> Self {
+        let model = tiny_real();
+        let hw = cpu_host();
+        SlowEngine {
+            inner: SimEngine::new(&model, &hw),
+            delay: Duration::from_millis(delay_ms),
+        }
+    }
+}
+
+impl Engine for SlowEngine {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.step(plan, out)
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        format!("slow({})", self.inner.label())
+    }
+}
+
+fn sim_set(n: usize, route: RoutePolicy, paused: bool) -> ReplicaSet {
+    ReplicaSet::build(n, route, |_| {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+            .paused(paused)
+    })
+    .unwrap()
+}
+
+fn slow_set(n: usize, route: RoutePolicy, delay_ms: u64) -> ReplicaSet {
+    ReplicaSet::build(n, route, |_| {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+            .engine(move || {
+                Ok(Box::new(SlowEngine::new(delay_ms)) as Box<dyn Engine>)
+            })
+    })
+    .unwrap()
+}
+
+fn wait_until(what: &str, ok: impl Fn() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !ok() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Drain a handle to its terminal event with a bounded wait — a hung
+/// stream fails the test instead of wedging it.
+fn wait_done(mut h: SubmissionHandle) -> GenEvent {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "stream {} hung", h.id());
+        match h.next_event_timeout(Duration::from_millis(250)) {
+            Some(ev) if ev.is_terminal() => return ev,
+            Some(_) | None => {}
+        }
+    }
+}
+
+#[test]
+fn least_loaded_balances_a_skewed_backlog() {
+    let set = sim_set(2, RoutePolicy::LeastLoaded, true);
+    let mut handles = Vec::new();
+    // Skew: four requests straight onto replica 0, bypassing the router.
+    for _ in 0..4 {
+        handles.push(
+            set.replica(0)
+                .submit(GenRequest::from_text("skew", 2))
+                .unwrap(),
+        );
+    }
+    wait_until("skew visible in the snapshot",
+               || set.replica(0).snapshot().waiting == 4);
+    // Routed submissions all land on the lighter replica until the
+    // backlogs equalize (waiting for the published snapshot between
+    // submissions, as the live router does).
+    for k in 0..4u32 {
+        let (i, h) = set
+            .submit_routed(GenRequest::from_text("routed", 2))
+            .unwrap();
+        assert_eq!(i, 1, "least-loaded must pick the lighter replica");
+        assert_eq!(set.replica_of(h.id()), 1);
+        handles.push(h);
+        wait_until("routed submission visible",
+                   || set.replica(1).snapshot().waiting == k + 1);
+    }
+    assert_eq!(set.replica(0).snapshot().waiting, 4);
+    assert_eq!(set.replica(1).snapshot().waiting, 4);
+    // Everything completes once the loops run.
+    set.resume();
+    for h in handles {
+        assert!(matches!(wait_done(h), GenEvent::Done { n_tokens: 2, .. }));
+    }
+    set.shutdown();
+}
+
+#[test]
+fn class_pinning_reserves_replicas_for_interactive() {
+    let set =
+        sim_set(2, RoutePolicy::ClassPinned { reserved: 1 }, true);
+    let mut handles = Vec::new();
+    for _ in 0..3 {
+        let (i, h) = set
+            .submit_routed(
+                GenRequest::from_text("chat", 2)
+                    .with_class(PriorityClass::Interactive),
+            )
+            .unwrap();
+        assert_eq!(i, 0, "interactive is pinned to the reserved replica");
+        assert_eq!(set.replica_of(h.id()), 0);
+        handles.push(h);
+    }
+    for class in [PriorityClass::Standard, PriorityClass::Batch] {
+        let (i, h) = set
+            .submit_routed(
+                GenRequest::from_text("bulk", 2).with_class(class),
+            )
+            .unwrap();
+        assert_eq!(i, 1, "{class:?} must avoid the reserved replica");
+        assert_eq!(set.replica_of(h.id()), 1);
+        handles.push(h);
+    }
+    // Fallback: with the unreserved replica draining, batch traffic
+    // crosses into the reserved partition instead of failing.
+    set.replica(1).begin_drain();
+    let (i, h) = set
+        .submit_routed(
+            GenRequest::from_text("spill", 2)
+                .with_class(PriorityClass::Batch),
+        )
+        .unwrap();
+    assert_eq!(i, 0, "draining partition must spill to the other");
+    handles.push(h);
+    set.replica(1).reopen();
+    set.resume();
+    for h in handles {
+        assert!(matches!(wait_done(h), GenEvent::Done { n_tokens: 2, .. }));
+    }
+    set.shutdown();
+}
+
+#[test]
+fn cancel_and_stream_events_reach_the_owning_replica() {
+    let set = slow_set(2, RoutePolicy::RoundRobin, 2);
+    // A long-running stream (~500 steps × 2 ms of runway) and a short
+    // one, landing on different replicas by round-robin.
+    let (long_replica, mut long) = set
+        .submit_routed(GenRequest::from_text("cancel me", 500))
+        .unwrap();
+    let (short_replica, short) = set
+        .submit_routed(GenRequest::from_text("finish me", 4))
+        .unwrap();
+    assert_ne!(long_replica, short_replica, "round-robin alternates");
+    assert_eq!(set.replica_of(long.id()), long_replica);
+    assert_eq!(set.replica_of(short.id()), short_replica);
+
+    // The short stream completes with its own id on every event.
+    let short_id = short.id();
+    match wait_done(short) {
+        GenEvent::Done { id, n_tokens, .. } => {
+            assert_eq!(id, short_id);
+            assert_eq!(n_tokens, 4);
+        }
+        other => panic!("unexpected terminal {other:?}"),
+    }
+
+    // Wait until the long stream is decoding, then cancel through the
+    // set front door — the cancel must route to its owning replica.
+    let mut seen = 0;
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while seen < 2 {
+        assert!(Instant::now() < deadline, "no tokens streamed");
+        match long.next_event_timeout(Duration::from_millis(100)) {
+            Some(GenEvent::Token { id, .. }) => {
+                assert_eq!(id, long.id());
+                seen += 1;
+            }
+            Some(GenEvent::Accepted { .. }) | None => {}
+            Some(other) => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert!(set.cancel(long.id()), "cancel must reach the replica");
+    match wait_done(long) {
+        GenEvent::Cancelled { id } => {
+            assert_eq!(set.replica_of(id), long_replica);
+        }
+        other => panic!("expected cancellation, got {other:?}"),
+    }
+    // The owning replica's accounting shows the freed blocks; the other
+    // replica was never involved.
+    wait_until("cancel accounted", || {
+        let s = set.replica(long_replica).snapshot();
+        s.cancelled == 1 && s.kv_used_tokens == 0
+    });
+    assert_eq!(set.replica(short_replica).snapshot().cancelled, 0);
+    set.shutdown();
+}
+
+/// The rotation acceptance test: a rolling restart under live traffic
+/// completes with zero lost or hung requests — every submission the set
+/// accepted reaches `Done` with its full budget, while the rotation
+/// drains, reconfigures and reopens each replica in turn.
+#[test]
+fn rolling_restart_loses_and_hangs_nothing() {
+    let set = Arc::new(slow_set(2, RoutePolicy::LeastLoaded, 1));
+    let producer = {
+        let set = set.clone();
+        std::thread::spawn(move || {
+            let mut handles = Vec::new();
+            for k in 0..40 {
+                // The router skips the draining replica, so submissions
+                // keep succeeding throughout the rotation.
+                let h = set
+                    .submit(GenRequest::from_text(&format!("req {k}"), 4))
+                    .expect("set must accept work during the rotation");
+                handles.push(h);
+                std::thread::sleep(Duration::from_millis(3));
+            }
+            handles
+        })
+    };
+    // Let traffic build, then rotate the whole set onto a new
+    // controller while the producer keeps submitting.
+    std::thread::sleep(Duration::from_millis(25));
+    let labels = set
+        .rolling_restart(Some(&PolicyKind::StaticFixed { batch: 4 }))
+        .unwrap();
+    assert_eq!(labels, vec!["static-fixed:4", "static-fixed:4"]);
+
+    let handles = producer.join().unwrap();
+    assert_eq!(handles.len(), 40, "every submission was accepted");
+    for h in handles {
+        match wait_done(h) {
+            GenEvent::Done { n_tokens, .. } => assert_eq!(n_tokens, 4),
+            other => panic!("request lost in rotation: {other:?}"),
+        }
+    }
+    // Post-rotation: both replicas reopened on the new controller and
+    // the set still serves.
+    for snap in set.snapshots() {
+        assert!(!snap.draining, "rotation must reopen every replica");
+        assert_eq!(snap.controller, "static-fixed:4");
+        assert_eq!(snap.reconfigs, 1);
+    }
+    let h = set.submit(GenRequest::from_text("after", 3)).unwrap();
+    assert!(matches!(wait_done(h), GenEvent::Done { n_tokens: 3, .. }));
+    set.shutdown();
+}
+
+/// The scaling acceptance test, on the deterministic virtual-time
+/// co-simulation behind `dynabatch route`: two replicas under
+/// least-loaded routing deliver ≥ 1.8× the aggregate throughput of one,
+/// with the load split evenly.
+#[test]
+fn route_two_replicas_reach_1_8x_aggregate_throughput() {
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+    let s = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::StaticFixed { batch: 8 },
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "route-acceptance".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(64),
+            output: LengthDist::Fixed(64),
+            n_requests: 208,
+            seed: 7,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    };
+    let one = run_replica_sim(&s, 1, &RoutePolicy::LeastLoaded).unwrap();
+    let two = run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+    assert_eq!(one.aggregate.n_requests, 208);
+    assert_eq!(two.aggregate.n_requests, 208, "no request lost in routing");
+    assert_eq!(two.aggregate.output_tokens, 208 * 64);
+    assert!(two.max_token_share() < 0.55,
+            "least-loaded must split evenly: share {}",
+            two.max_token_share());
+    let speedup = two.aggregate.throughput / one.aggregate.throughput;
+    assert!(speedup >= 1.8,
+            "aggregate throughput must scale: {:.0} vs {:.0} tok/s \
+             ({speedup:.2}x)",
+            two.aggregate.throughput, one.aggregate.throughput);
+}
