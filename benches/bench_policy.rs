@@ -22,6 +22,7 @@ fn obs() -> Observation {
     o.recent_decode_batch = Some(96.0);
     o.waiting = 12;
     o.waiting_by_class = [2, 8, 2];
+    o.decode_latency_by_class = [Some(0.051), Some(0.045), Some(0.040)];
     o
 }
 
@@ -46,6 +47,11 @@ fn main() {
             PolicyKind::SlaFeedback,
             PolicyKind::MemoryAware,
             PolicyKind::StaticFixed { batch: 16 },
+        ]),
+        PolicyKind::PerClassSla([Some(0.05), None, Some(0.5)]),
+        PolicyKind::Min(vec![
+            PolicyKind::MemoryAware,
+            PolicyKind::PerClassSla([Some(0.05), None, None]),
         ]),
     ];
     for kind in kinds {

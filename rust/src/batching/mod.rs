@@ -15,7 +15,10 @@
 //!   fixed).
 //! * [`memory_aware`] — Algorithm 1 (linear deployable form and the
 //!   rigorous eq. 12 closed form).
-//! * [`sla`] — Algorithm 2 (latency-feedback noisy binary search).
+//! * [`sla`] — Algorithm 2 (latency-feedback noisy binary search), both
+//!   the global loop and the per-class variant ([`PerClassSlaPolicy`]:
+//!   one loop per priority class against per-class targets, resolved as
+//!   the min over binding classes).
 //! * [`chunk`] — the PD-fusion adaptive chunk-size controller, attached
 //!   to any controller via [`ChunkedController`].
 //! * combinators — [`MinOf`] (`b*_t = min(b_mem, b_SLA)`, the paper's
@@ -34,7 +37,7 @@ use crate::telemetry::Observation;
 
 pub use chunk::ChunkController;
 pub use memory_aware::{MemoryAwarePolicy, MemoryAwareVariant};
-pub use sla::SlaFeedbackPolicy;
+pub use sla::{PerClassSlaPolicy, SlaFeedbackPolicy};
 pub use static_policy::{StaticFixedPolicy, StaticGreedyPolicy};
 pub use swap_policy::SwapPressureController;
 
@@ -70,6 +73,13 @@ pub struct Directive {
     /// (whole-prompt prefill steps).
     pub prefill_chunk: Option<u32>,
     pub swap_hint: SwapHint,
+    /// Per-class admission-weight override for the scheduler's smooth
+    /// weighted round-robin, indexed by [`PriorityClass::rank`]; `None`
+    /// keeps the base [`PriorityClass::weight`]s. Emitted by
+    /// [`PerClassSlaPolicy`] to shrink a violating class's admission
+    /// share without touching the others. Weights are clamped to ≥ 1 at
+    /// the consumer, so no class can be starved outright.
+    pub class_weights: Option<[u32; PriorityClass::COUNT]>,
 }
 
 impl Directive {
@@ -81,6 +91,7 @@ impl Directive {
             admission: AdmissionMode::Gated,
             prefill_chunk: None,
             swap_hint: SwapHint::Auto,
+            class_weights: None,
         }
     }
 }
@@ -146,13 +157,18 @@ fn build_kind(cfg: &SchedulerConfig, kind: &PolicyKind)
         PolicyKind::ClassWeighted(parts) => Box::new(ClassWeighted::new(
             parts.iter().map(|k| build_kind(cfg, k)).collect(),
         )),
+        PolicyKind::PerClassSla(targets) => {
+            Box::new(PerClassSlaPolicy::new(cfg, *targets))
+        }
     }
 }
 
 /// Pointwise combination of part directives: `pick` resolves the batch
 /// target and chunk budget; admission is gated if *any* part gates
 /// (strictest wins — a greedy baseline combined with a dynamic policy
-/// must not bypass the gate); the first non-`Auto` swap hint wins.
+/// must not bypass the gate); the first non-`Auto` swap hint wins; class
+/// admission weights resolve elementwise with `pick` when two parts both
+/// emit them (the only emitting part wins otherwise).
 fn combine(parts: &[Directive], pick: fn(u32, u32) -> u32) -> Directive {
     let mut it = parts.iter();
     let mut out = *it.next().expect("combinators need >= 1 part");
@@ -171,6 +187,12 @@ fn combine(parts: &[Directive], pick: fn(u32, u32) -> u32) -> Directive {
         if out.swap_hint == SwapHint::Auto {
             out.swap_hint = d.swap_hint;
         }
+        out.class_weights = match (out.class_weights, d.class_weights) {
+            (Some(a), Some(b)) => {
+                Some(std::array::from_fn(|i| pick(a[i], b[i])))
+            }
+            (a, b) => a.or(b),
+        };
     }
     out
 }
@@ -382,6 +404,10 @@ mod tests {
                 ]),
                 false,
             ),
+            (
+                PolicyKind::PerClassSla([Some(0.05), None, None]),
+                false,
+            ),
         ] {
             let c = SchedulerConfig { policy: kind.clone(), ..cfg_with_sla() };
             let mut p = build_controller(&c);
@@ -490,6 +516,30 @@ mod tests {
         obs.waiting_by_class = [0, 0, 0]; // idle: plain mean over classes
         let b = c.decide(&obs).target_batch;
         assert!(b > 4 && b < 32, "idle blend {b} between the parts");
+    }
+
+    #[test]
+    fn class_weights_survive_the_min_combinator() {
+        // min(alg1, per-class-sla): the per-class node is the only
+        // weight emitter, so its admission weights must reach the
+        // resolved directive alongside the min'd batch target.
+        let cfg = cfg_with_sla();
+        let mut c = build_kind(
+            &cfg,
+            &PolicyKind::Min(vec![
+                PolicyKind::MemoryAware,
+                PolicyKind::PerClassSla([Some(0.05), None, None]),
+            ]),
+        );
+        let mut obs = Observation::synthetic(1_000_000, 0, 16, 2);
+        obs.decode_latency_by_class = [Some(0.2), None, None];
+        let d = c.decide(&obs);
+        let w = d.class_weights.expect("per-class weights propagate");
+        assert!(w[0] < 8 * 16, "violating interactive share shrank");
+        assert_eq!(w[1], 3 * 16);
+        assert_eq!(d.admission, AdmissionMode::Gated);
+        assert!(c.label().contains("per-class-sla(interactive=50)"),
+                "{}", c.label());
     }
 
     #[test]

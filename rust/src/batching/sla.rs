@@ -7,9 +7,26 @@
 //! re-centres on `b̄` with width α. `δ` relaxes the opposite bound each
 //! step so the window never collapses onto a noise artefact. The decision
 //! is the window midpoint, clamped per Alg. 2 line 15.
+//!
+//! Two controllers share that search core
+//! ([`SlaFeedbackPolicy::decide_target`]):
+//!
+//! * [`SlaFeedbackPolicy`] — the paper's single global `D_SLA` loop,
+//!   driven by the global latency window.
+//! * [`PerClassSlaPolicy`] — one independent loop per priority class
+//!   against a per-class target map
+//!   ([`PolicyKind::PerClassSla`](crate::config::PolicyKind)), each
+//!   driven by that class's attributed latency window
+//!   ([`Observation::decode_latency_by_class`]). The per-class target
+//!   batches resolve into one [`Directive`] as the minimum over the
+//!   constrained ("binding") classes, and a class currently violating
+//!   its target gets its weighted-round-robin admission share shrunk via
+//!   [`Directive::class_weights`] — only the violating class's share
+//!   moves.
 
 use super::{Controller, Directive};
-use crate::config::SchedulerConfig;
+use crate::config::{format_sla_targets, SchedulerConfig};
+use crate::request::PriorityClass;
 use crate::telemetry::Observation;
 
 pub struct SlaFeedbackPolicy {
@@ -46,24 +63,27 @@ impl SlaFeedbackPolicy {
     pub fn window(&self) -> (u32, u32) {
         (self.b_low, self.b_high)
     }
-}
 
-impl Controller for SlaFeedbackPolicy {
-    fn decide(&mut self, obs: &Observation) -> Directive {
+    /// One noisy-binary-search update + decision — the Algorithm-2 core,
+    /// shared by the global loop ([`Controller::decide`] below, fed the
+    /// global `τ̄`) and the per-class loops ([`PerClassSlaPolicy`], fed
+    /// each class's attributed `τ̄`). Returns the target batch, clamped
+    /// per Alg. 2 line 15 (`≥ N^d_{t-1}`, inside `[B_min, B_max]`).
+    pub fn decide_target(&mut self, tau: Option<f64>, b_bar: Option<f64>,
+                         running_decode: u32) -> u32 {
         self.stat_decisions += 1;
         if !self.d_sla.is_finite() {
-            return Directive::gated(self.b_max);
+            return self.b_max;
         }
-        let (tau, b_bar) = match (obs.recent_decode_latency,
-                                  obs.recent_decode_batch) {
+        let (tau, b_bar) = match (tau, b_bar) {
             (Some(t), Some(b)) => (t, b),
             // No decode samples yet: start from the window midpoint.
             _ => {
                 let b = (self.b_low + self.b_high) / 2;
-                return Directive::gated(
-                    b.max(obs.running_decode).max(self.b_min)
-                        .min(self.b_max),
-                );
+                return b
+                    .max(running_decode)
+                    .max(self.b_min)
+                    .min(self.b_max);
             }
         };
         let b_bar = b_bar.round() as u32;
@@ -90,13 +110,127 @@ impl Controller for SlaFeedbackPolicy {
 
         let b = (self.b_low + self.b_high) / 2;
         // Alg. 2 line 15.
-        Directive::gated(
-            b.max(obs.running_decode).max(self.b_min).min(self.b_max),
-        )
+        b.max(running_decode).max(self.b_min).min(self.b_max)
+    }
+}
+
+impl Controller for SlaFeedbackPolicy {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        Directive::gated(self.decide_target(
+            obs.recent_decode_latency,
+            obs.recent_decode_batch,
+            obs.running_decode,
+        ))
     }
 
     fn label(&self) -> String {
         format!("sla-feedback(D_SLA={:.0}ms)", self.d_sla * 1e3)
+    }
+}
+
+/// Scale applied to the base [`PriorityClass::weight`]s when
+/// [`PerClassSlaPolicy`] emits admission weights, so a violating class's
+/// share can shrink in sub-unit steps (the batch class's base weight is
+/// already 1).
+const WEIGHT_SCALE: u32 = 16;
+
+/// Per-class SLA feedback: one independent Algorithm-2 loop per priority
+/// class, each against its own decode-latency target and driven by that
+/// class's **attributed** latency window
+/// ([`Observation::decode_latency_by_class`]).
+///
+/// Resolution into one [`Directive`]:
+///
+/// * `target_batch` = the minimum over the *binding* classes — classes
+///   with a target and a **live** attributed latency window. A class
+///   with no target, no traffic yet, or whose traffic has left (the
+///   telemetry reports `None` once a class has been absent from a full
+///   latency window of decode steps) never constrains the batch — a
+///   frozen last-seen mean cannot keep ratcheting `b_t` down.
+/// * [`Directive::class_weights`] shrinks the weighted-round-robin
+///   admission share of a class currently violating its target
+///   (`τ̄_c > d_c + ε_D`), proportionally to its loop's target batch —
+///   only the violating class's share moves; the others keep their base
+///   ratios.
+///
+/// Built from [`PolicyKind::PerClassSla`](crate::config::PolicyKind)
+/// (`per-class-sla(interactive=50,batch=none)`); compose it with
+/// Algorithm 1 as `min(alg1,per-class-sla(...))` for the paper's combined
+/// controller with per-class targets.
+pub struct PerClassSlaPolicy {
+    targets: [Option<f64>; PriorityClass::COUNT],
+    /// One Algorithm-2 search window per class, index-aligned with
+    /// [`PriorityClass::rank`]; unconstrained classes hold a degenerate
+    /// loop that always returns `B_max`.
+    loops: Vec<SlaFeedbackPolicy>,
+    eps_d: f64,
+    b_max: u32,
+}
+
+impl PerClassSlaPolicy {
+    pub fn new(cfg: &SchedulerConfig,
+               targets: [Option<f64>; PriorityClass::COUNT]) -> Self {
+        let loops = targets
+            .iter()
+            .map(|t| {
+                let mut class_cfg = cfg.clone();
+                class_cfg.d_sla = *t;
+                SlaFeedbackPolicy::new(&class_cfg)
+            })
+            .collect();
+        PerClassSlaPolicy {
+            targets,
+            loops,
+            eps_d: cfg.eps_d,
+            b_max: cfg.b_max,
+        }
+    }
+
+    /// The decode-latency target for the class with rank `rank`, if any.
+    pub fn class_target(&self, rank: usize) -> Option<f64> {
+        self.targets[rank]
+    }
+}
+
+impl Controller for PerClassSlaPolicy {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let mut target = self.b_max;
+        let mut weights = [0u32; PriorityClass::COUNT];
+        for c in PriorityClass::ALL {
+            let rank = c.rank();
+            let base = c.weight() * WEIGHT_SCALE;
+            weights[rank] = base;
+            let Some(d_c) = self.targets[rank] else {
+                continue; // unconstrained class: never binds
+            };
+            // No attributed samples yet (the class has not decoded):
+            // nothing to control against — leave the loop's cold-start
+            // state untouched until real signal arrives.
+            let Some(tau) = obs.decode_latency_by_class[rank] else {
+                continue;
+            };
+            let b_c = self.loops[rank].decide_target(
+                Some(tau),
+                obs.recent_decode_batch,
+                obs.running_decode,
+            );
+            target = target.min(b_c);
+            if tau > d_c + self.eps_d {
+                // Violating: shrink only this class's admission share,
+                // proportionally to how far its loop pulled the batch.
+                weights[rank] = ((base as u64 * b_c as u64
+                    / self.b_max.max(1) as u64)
+                    as u32)
+                    .max(1);
+            }
+        }
+        let mut d = Directive::gated(target.max(1));
+        d.class_weights = Some(weights);
+        d
+    }
+
+    fn label(&self) -> String {
+        format!("per-class-sla({})", format_sla_targets(&self.targets))
     }
 }
 
@@ -192,6 +326,103 @@ mod tests {
         let mut p = SlaFeedbackPolicy::new(&cfg(0.05));
         let b = decide_b(&mut p, &obs(0.090, 40.0, 120));
         assert!(b >= 120);
+    }
+
+    fn per_class(targets: [Option<f64>; 3]) -> PerClassSlaPolicy {
+        PerClassSlaPolicy::new(&cfg(0.05), targets)
+    }
+
+    /// An observation with per-class attributed latencies.
+    fn obs_classed(by_class: [Option<f64>; 3], batch: f64)
+                   -> Observation {
+        let mut o = Observation::synthetic(1_000_000, 0, 0, 1);
+        o.recent_decode_batch = Some(batch);
+        o.decode_latency_by_class = by_class;
+        o
+    }
+
+    #[test]
+    fn per_class_no_samples_is_unconstrained() {
+        let mut p = per_class([Some(0.05), None, None]);
+        let d = p.decide(&obs_classed([None, None, None], 64.0));
+        assert_eq!(d.target_batch, 256, "no attributed samples → B_max");
+        let w = d.class_weights.unwrap();
+        assert_eq!(w, [8 * 16, 3 * 16, 16], "base shares, scaled");
+    }
+
+    #[test]
+    fn per_class_min_of_binding_classes() {
+        // Interactive violates its 50 ms target hard; batch is
+        // unconstrained even though its latency is huge.
+        let mut p = per_class([Some(0.05), None, None]);
+        let d =
+            p.decide(&obs_classed([Some(0.2), None, Some(0.4)], 128.0));
+        assert!(d.target_batch < 256,
+                "violating binding class must pull the batch down: {}",
+                d.target_batch);
+        // Driving only the batch class's latency leaves an
+        // interactive-only policy untouched.
+        let mut p = per_class([Some(0.05), None, None]);
+        let d = p.decide(&obs_classed([None, None, Some(0.4)], 128.0));
+        assert_eq!(d.target_batch, 256,
+                   "unconstrained class latency must not bind");
+    }
+
+    #[test]
+    fn per_class_shrinks_only_the_violating_class_share() {
+        let mut p = per_class([Some(0.05), None, Some(0.05)]);
+        // Interactive comfortably under target, batch way over.
+        let d = p.decide(&obs_classed(
+            [Some(0.02), None, Some(0.2)],
+            64.0,
+        ));
+        let w = d.class_weights.unwrap();
+        assert_eq!(w[0], 8 * 16, "non-violating class keeps its share");
+        assert_eq!(w[1], 3 * 16, "unconstrained class keeps its share");
+        assert!(w[2] < 16, "violating class's share must shrink: {w:?}");
+        assert!(w[2] >= 1, "never starved outright");
+        // Symmetric case: interactive violating, batch fine.
+        let mut p = per_class([Some(0.05), None, Some(0.05)]);
+        let d = p.decide(&obs_classed(
+            [Some(0.2), None, Some(0.02)],
+            64.0,
+        ));
+        let w = d.class_weights.unwrap();
+        assert!(w[0] < 8 * 16, "violating interactive shrinks: {w:?}");
+        assert_eq!(w[2], 16, "non-violating batch keeps its share");
+    }
+
+    #[test]
+    fn per_class_converges_each_loop_independently() {
+        // Interactive target 50 ms, batch 80 ms, same linear model:
+        // the resolved (min) target must settle near the *tighter*
+        // class's SLA batch.
+        let c0 = 0.0269;
+        let c1 = 0.000231;
+        let mut p = per_class([Some(0.050), None, Some(0.080)]);
+        let mut b = 128u32;
+        for _ in 0..200 {
+            let tau = c0 + c1 * b as f64;
+            let d = p.decide(&obs_classed(
+                [Some(tau), None, Some(tau)],
+                b as f64,
+            ));
+            b = d.target_batch;
+        }
+        let target = (0.050 - c0) / c1; // ≈ 100
+        let err = (b as f64 - target).abs() / target;
+        assert!(err < 0.20, "settled at b={b}, want ≈{target:.0}");
+    }
+
+    #[test]
+    fn per_class_label_roundtrips_through_policy_kind() {
+        use crate::config::PolicyKind;
+        let p = per_class([Some(0.05), None, Some(0.5)]);
+        assert_eq!(p.label(), "per-class-sla(interactive=50,batch=500)");
+        assert_eq!(PolicyKind::parse(&p.label()).unwrap(),
+                   PolicyKind::PerClassSla([Some(0.05), None, Some(0.5)]));
+        assert_eq!(p.class_target(0), Some(0.05));
+        assert_eq!(p.class_target(1), None);
     }
 
     #[test]

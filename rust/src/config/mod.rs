@@ -6,6 +6,7 @@
 
 pub mod presets;
 
+use crate::request::PriorityClass;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 
@@ -228,6 +229,56 @@ pub enum PolicyKind {
     /// (interactive, standard, batch); the last part covers any
     /// remaining classes.
     ClassWeighted(Vec<PolicyKind>),
+    /// One Algorithm-2 feedback loop per priority class against a
+    /// per-class decode-latency target (seconds, indexed by
+    /// [`PriorityClass::rank`]; `None` = that class is unconstrained).
+    /// Targets parse/label in milliseconds:
+    /// `per-class-sla(interactive=50,batch=500)`. See
+    /// `batching::PerClassSlaPolicy`.
+    PerClassSla([Option<f64>; PriorityClass::COUNT]),
+}
+
+/// Parse a per-class SLA target list — `class=ms` entries separated by
+/// commas, `none` for an explicitly unconstrained class, unnamed classes
+/// unconstrained. Shared by [`PolicyKind::parse`] and the
+/// `dynabatch sla --targets` CLI.
+pub fn parse_sla_targets(s: &str)
+                         -> Result<[Option<f64>; PriorityClass::COUNT]> {
+    let mut targets = [None; PriorityClass::COUNT];
+    for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+        let (class, value) = part
+            .split_once('=')
+            .with_context(|| format!("want class=ms in '{part}'"))?;
+        let rank = PriorityClass::parse(class)?.rank();
+        let value = value.trim();
+        targets[rank] = if value.eq_ignore_ascii_case("none")
+            || value == "inf"
+        {
+            None
+        } else {
+            let ms: f64 = value
+                .parse()
+                .with_context(|| format!("bad SLA target '{value}' ms"))?;
+            Some(ms / 1e3)
+        };
+    }
+    Ok(targets)
+}
+
+/// Render per-class SLA targets as the canonical `class=ms` list (only
+/// constrained classes appear; values in milliseconds at µs precision so
+/// labels round-trip through [`parse_sla_targets`]).
+pub fn format_sla_targets(targets: &[Option<f64>; PriorityClass::COUNT])
+                          -> String {
+    PriorityClass::ALL
+        .iter()
+        .filter_map(|c| {
+            targets[c.rank()].map(|d| {
+                format!("{}={}", c.label(), (d * 1e6).round() / 1e3)
+            })
+        })
+        .collect::<Vec<_>>()
+        .join(",")
 }
 
 impl PolicyKind {
@@ -238,6 +289,12 @@ impl PolicyKind {
         }
         if let Some(rest) = s.strip_prefix("static-greedy:") {
             return Ok(PolicyKind::StaticGreedy { max: rest.parse()? });
+        }
+        if let Some(rest) = s.strip_prefix("per-class-sla(") {
+            let inner = rest
+                .strip_suffix(')')
+                .with_context(|| format!("unbalanced parens in '{s}'"))?;
+            return Ok(PolicyKind::PerClassSla(parse_sla_targets(inner)?));
         }
         for (prefix, build) in [
             ("min(", PolicyKind::Min as fn(Vec<PolicyKind>) -> PolicyKind),
@@ -288,6 +345,51 @@ impl PolicyKind {
             PolicyKind::ClassWeighted(p) => {
                 format!("class-weighted({})", join(p))
             }
+            PolicyKind::PerClassSla(t) => {
+                format!("per-class-sla({})", format_sla_targets(t))
+            }
+        }
+    }
+
+    /// The per-class decode-latency targets this policy tree enforces,
+    /// indexed by [`PriorityClass::rank`]: the first `PerClassSla` node
+    /// found anywhere in the tree wins (it is the most specific
+    /// statement of per-class intent, even when combined with a global
+    /// SLA policy); otherwise a global SLA policy (`sla`/`combined`)
+    /// anywhere in the tree applies `global` to every class;
+    /// throughput-only policies constrain nothing. Used to compute
+    /// per-class SLA-violation rates in `metrics::RunMetrics`.
+    pub fn sla_targets(&self, global: Option<f64>)
+                       -> [Option<f64>; PriorityClass::COUNT] {
+        self.find_per_class_targets().unwrap_or(if self.has_global_sla() {
+            [global; PriorityClass::COUNT]
+        } else {
+            [None; PriorityClass::COUNT]
+        })
+    }
+
+    fn find_per_class_targets(&self)
+                              -> Option<[Option<f64>; PriorityClass::COUNT]> {
+        match self {
+            PolicyKind::PerClassSla(t) => Some(*t),
+            PolicyKind::Min(parts)
+            | PolicyKind::Max(parts)
+            | PolicyKind::ClassWeighted(parts) => {
+                parts.iter().find_map(|p| p.find_per_class_targets())
+            }
+            _ => None,
+        }
+    }
+
+    fn has_global_sla(&self) -> bool {
+        match self {
+            PolicyKind::SlaFeedback | PolicyKind::Combined => true,
+            PolicyKind::Min(parts)
+            | PolicyKind::Max(parts)
+            | PolicyKind::ClassWeighted(parts) => {
+                parts.iter().any(|p| p.has_global_sla())
+            }
+            _ => false,
         }
     }
 
@@ -310,6 +412,22 @@ impl PolicyKind {
                 }
                 for p in parts {
                     p.validate()?;
+                }
+                Ok(())
+            }
+            PolicyKind::PerClassSla(targets) => {
+                if targets.iter().all(|t| t.is_none()) {
+                    bail!("per-class-sla needs at least one \
+                           constrained class");
+                }
+                for (c, t) in PriorityClass::ALL.iter().zip(targets) {
+                    if let Some(d) = t {
+                        if !d.is_finite() || *d <= 0.0 {
+                            bail!("per-class-sla target for {} must be a \
+                                   positive number of ms",
+                                  c.label());
+                        }
+                    }
                 }
                 Ok(())
             }
@@ -539,9 +657,72 @@ mod tests {
                 PolicyKind::MemoryAware,
                 PolicyKind::StaticFixed { batch: 16 },
             ]),
+            PolicyKind::PerClassSla([Some(0.05), None, Some(0.5)]),
+            PolicyKind::Min(vec![
+                PolicyKind::MemoryAware,
+                PolicyKind::PerClassSla([Some(0.0805), None, None]),
+            ]),
         ] {
             assert_eq!(PolicyKind::parse(&p.label()).unwrap(), p);
         }
+    }
+
+    #[test]
+    fn per_class_sla_parse_label_and_validation() {
+        let p = PolicyKind::parse(
+            "per-class-sla(interactive=50, batch=none)",
+        )
+        .unwrap();
+        assert_eq!(p, PolicyKind::PerClassSla([Some(0.05), None, None]));
+        assert_eq!(p.label(), "per-class-sla(interactive=50)",
+                   "unconstrained classes drop out of the label");
+        p.validate().unwrap();
+        // Sub-ms targets keep µs precision through the label.
+        let q = PolicyKind::PerClassSla([Some(0.0005), None, None]);
+        assert_eq!(q.label(), "per-class-sla(interactive=0.5)");
+        assert_eq!(PolicyKind::parse(&q.label()).unwrap(), q);
+        // Malformed shapes are errors, not panics.
+        assert!(PolicyKind::parse("per-class-sla(interactive=50").is_err());
+        assert!(PolicyKind::parse("per-class-sla(vip=50)").is_err());
+        assert!(PolicyKind::parse("per-class-sla(interactive)").is_err());
+        assert!(PolicyKind::parse("per-class-sla(interactive=x)").is_err());
+        // All-unconstrained and non-positive targets fail validation.
+        assert!(PolicyKind::PerClassSla([None, None, None])
+            .validate()
+            .is_err());
+        assert!(PolicyKind::PerClassSla([Some(-0.05), None, None])
+            .validate()
+            .is_err());
+    }
+
+    #[test]
+    fn sla_targets_resolve_through_the_policy_tree() {
+        let per = [Some(0.05), None, Some(0.5)];
+        assert_eq!(PolicyKind::PerClassSla(per).sla_targets(None), per);
+        assert_eq!(
+            PolicyKind::Min(vec![
+                PolicyKind::MemoryAware,
+                PolicyKind::PerClassSla(per),
+            ])
+            .sla_targets(Some(0.08)),
+            per,
+            "the per-class node wins inside a combinator"
+        );
+        assert_eq!(PolicyKind::Combined.sla_targets(Some(0.08)),
+                   [Some(0.08); 3],
+                   "global policies apply the global target everywhere");
+        assert_eq!(PolicyKind::MemoryAware.sla_targets(Some(0.08)),
+                   [None; 3]);
+        // A global SLA part must not shadow a per-class sibling: the
+        // per-class node is the more specific statement of intent.
+        assert_eq!(
+            PolicyKind::Min(vec![
+                PolicyKind::SlaFeedback,
+                PolicyKind::PerClassSla(per),
+            ])
+            .sla_targets(Some(0.08)),
+            per
+        );
     }
 
     #[test]

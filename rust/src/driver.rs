@@ -18,7 +18,7 @@ use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
 use crate::metrics::{ReplicaSetMetrics, RunMetrics};
-use crate::request::Request;
+use crate::request::{PriorityClass, Request};
 use crate::scheduler::{SchedStats, Scheduler};
 use crate::service::replica::{ReplicaLoad, RoutePolicy};
 use crate::sim::{Clock, VirtualClock};
@@ -167,14 +167,37 @@ pub fn run_sim_with_requests(scenario: &SimScenario,
     run_loop_switched(&mut sched, &mut engine, &mut clock, requests,
                       max_steps, switches)?;
     let makespan = clock.now();
-    Ok(RunMetrics::compute(
+    let mut m = RunMetrics::compute(
         sched.controller_label(),
         sched.finished(),
         &sched.stats,
         &sched.decode_latencies.to_vec(),
         makespan,
         engine.utilization(),
-    ))
+    );
+    // Per-class SLA targets follow the policy that *ended* the run —
+    // the same convention as the reported policy label (mid-run
+    // switches re-govern the loop, so violation rates are measured
+    // against the final controller's targets).
+    let final_policy = switches
+        .last()
+        .map(|s| &s.to)
+        .unwrap_or(&scenario.sched.policy);
+    m.attach_class_stats(
+        class_latency_traces(&sched),
+        sched.finished(),
+        &final_policy.sla_targets(scenario.sched.d_sla),
+        scenario.sched.eps_d,
+    );
+    Ok(m)
+}
+
+/// The telemetry's per-class attributed decode-latency traces, rank
+/// order (the per-class half of `RunMetrics`).
+fn class_latency_traces(sched: &Scheduler) -> Vec<Vec<f64>> {
+    (0..PriorityClass::COUNT)
+        .map(|rank| sched.telemetry.class_latencies(rank).to_vec())
+        .collect()
 }
 
 /// One replica of the virtual-time co-simulation: its own scheduler,
@@ -195,6 +218,11 @@ impl SimReplica {
             // published-snapshot lag to correct for.
             in_flight_to: 0,
             kv_free_blocks: self.sched.kv.free_blocks(),
+            // Same per-class SLA headroom signal the live router reads
+            // off replica snapshots.
+            class_p95: std::array::from_fn(|rank| {
+                self.sched.telemetry.decode_latency_class_p(rank, 95.0)
+            }),
             draining: false,
         }
     }
@@ -323,8 +351,11 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
         }
     }
 
+    let targets = scenario.sched.policy.sla_targets(scenario.sched.d_sla);
     let mut all_finished: Vec<Request> = Vec::new();
     let mut all_lat: Vec<f64> = Vec::new();
+    let mut all_class_lat: Vec<Vec<f64>> =
+        vec![Vec::new(); PriorityClass::COUNT];
     let mut agg_stats = SchedStats::default();
     let mut per_replica = Vec::with_capacity(n_replicas);
     let mut agg_makespan = 0.0f64;
@@ -334,7 +365,8 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
         let makespan = r.clock.now();
         agg_makespan = agg_makespan.max(makespan);
         let lat = r.sched.decode_latencies.to_vec();
-        let m = RunMetrics::compute(
+        let class_lat = class_latency_traces(&r.sched);
+        let mut m = RunMetrics::compute(
             r.sched.controller_label(),
             r.sched.finished(),
             &r.sched.stats,
@@ -342,6 +374,11 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
             makespan,
             r.engine.utilization(),
         );
+        for (acc, trace) in all_class_lat.iter_mut().zip(&class_lat) {
+            acc.extend_from_slice(trace);
+        }
+        m.attach_class_stats(class_lat, r.sched.finished(), &targets,
+                             scenario.sched.eps_d);
         if let Some(u) = m.utilization {
             util_sum += u;
             util_n += 1;
@@ -351,7 +388,7 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
         all_lat.extend_from_slice(&lat);
         per_replica.push(m);
     }
-    let aggregate = RunMetrics::compute(
+    let mut aggregate = RunMetrics::compute(
         reps[0].sched.controller_label(),
         &all_finished,
         &agg_stats,
@@ -363,6 +400,8 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
             None
         },
     );
+    aggregate.attach_class_stats(all_class_lat, &all_finished, &targets,
+                                 scenario.sched.eps_d);
     Ok(ReplicaSetMetrics {
         route_policy: route.label(),
         n_replicas,
@@ -449,6 +488,86 @@ pub fn switch_sweep(scenario: &SimScenario, to: PolicyKind,
                 switched,
             });
         }
+    }
+    Ok(rows)
+}
+
+/// Deterministically assign priority classes to a request list by the
+/// traffic mix `[interactive, standard, batch]` (fractions, normalized
+/// over their sum). The assignment hashes the request index — fixed for
+/// a fixed list, independent of arrival order, and interleaved rather
+/// than blocked, so every window of the run carries the mix.
+pub fn assign_classes(requests: &mut [Request],
+                      mix: [f64; PriorityClass::COUNT]) {
+    let total: f64 = mix.iter().sum();
+    if total <= 0.0 {
+        return;
+    }
+    for (i, r) in requests.iter_mut().enumerate() {
+        // splitmix-style index hash → uniform u in [0, 1).
+        let h = (i as u64)
+            .wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            .rotate_left(31)
+            .wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64 * total;
+        r.class = if u < mix[0] {
+            PriorityClass::Interactive
+        } else if u < mix[0] + mix[1] {
+            PriorityClass::Standard
+        } else {
+            PriorityClass::Batch
+        };
+    }
+}
+
+/// One row of the per-class SLA sweep (see [`sla_sweep`]).
+#[derive(Debug, Clone)]
+pub struct SlaSweepRow {
+    /// `baseline(<policy>)` for row 0, the `per-class-sla(...)` label
+    /// for target rows.
+    pub label: String,
+    pub metrics: RunMetrics,
+}
+
+impl SlaSweepRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::from(self.label.clone())),
+            ("metrics", self.metrics.to_json()),
+        ])
+    }
+}
+
+/// The per-class SLA sweep behind `dynabatch sla`: the scenario's
+/// workload gets classes assigned by `mix`, then runs once on the
+/// scenario's base policy (the unconstrained baseline) and once per
+/// target set under `min(<base policy>, per-class-sla(<targets>))` — the
+/// paper's combined-controller shape with Algorithm 2 split per class.
+/// Fixed seeds → bit-identical rows; the regression property (tightening
+/// only the interactive target keeps aggregate throughput within the
+/// capacity trade-off) is asserted in this module's tests.
+pub fn sla_sweep(scenario: &SimScenario,
+                 target_sets: &[[Option<f64>; PriorityClass::COUNT]],
+                 mix: [f64; PriorityClass::COUNT])
+                 -> Result<Vec<SlaSweepRow>> {
+    let mut requests = scenario.workload.generate();
+    assign_classes(&mut requests, mix);
+    let mut rows = vec![SlaSweepRow {
+        label: format!("baseline({})", scenario.sched.policy.label()),
+        metrics: run_sim_with_requests(scenario, requests.clone(), &[])?,
+    }];
+    for targets in target_sets {
+        let kind = PolicyKind::PerClassSla(*targets);
+        kind.validate()?;
+        let mut s = scenario.clone();
+        s.sched.policy = PolicyKind::Min(vec![
+            scenario.sched.policy.clone(),
+            kind.clone(),
+        ]);
+        rows.push(SlaSweepRow {
+            label: kind.label(),
+            metrics: run_sim_with_requests(&s, requests.clone(), &[])?,
+        });
     }
     Ok(rows)
 }
@@ -763,6 +882,145 @@ mod tests {
         for (a, b) in rows.iter().zip(&again) {
             assert_eq!(a.to_json().to_string(), b.to_json().to_string());
         }
+    }
+
+    #[test]
+    fn assign_classes_is_deterministic_and_interleaved() {
+        let mut a: Vec<Request> =
+            (0..600).map(|i| Request::new(i, 32, 8, 0.0)).collect();
+        let mut b = a.clone();
+        assign_classes(&mut a, [0.3, 0.2, 0.5]);
+        assign_classes(&mut b, [0.3, 0.2, 0.5]);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.class, y.class, "same index → same class");
+        }
+        let count = |c: PriorityClass| {
+            a.iter().filter(|r| r.class == c).count()
+        };
+        let (i, s, bt) = (count(PriorityClass::Interactive),
+                          count(PriorityClass::Standard),
+                          count(PriorityClass::Batch));
+        assert_eq!(i + s + bt, 600);
+        // Roughly the requested mix (hash-uniform, wide tolerance).
+        assert!((120..=240).contains(&i), "interactive {i}");
+        assert!((60..=180).contains(&s), "standard {s}");
+        assert!((210..=390).contains(&bt), "batch {bt}");
+        // Interleaved: the first 50 requests already carry ≥ 2 classes.
+        let head: std::collections::HashSet<_> =
+            a[..50].iter().map(|r| r.class.rank()).collect();
+        assert!(head.len() >= 2, "classes must interleave, got {head:?}");
+        // Zero mix is a no-op.
+        let mut c = b.clone();
+        assign_classes(&mut c, [0.0, 0.0, 0.0]);
+        assert!(c.iter().all(|r| r.class == PriorityClass::Standard));
+    }
+
+    /// The `dynabatch sla` acceptance regression: under mixed Poisson
+    /// load on the Fig. 3 model, tightening ONLY the interactive target
+    /// to 50 ms (batch unconstrained) must bring the
+    /// interactive-attributed decode p95 to the target (the baseline
+    /// violates it) while aggregate throughput stays within the paper's
+    /// capacity trade-off envelope — and the sweep must be bit-identical
+    /// across runs.
+    #[test]
+    fn per_class_sla_sweep_meets_interactive_target_within_envelope() {
+        let model = llama3_70b();
+        let hardware = node_for(&model);
+        let scenario = SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig {
+                policy: PolicyKind::MemoryAware,
+                // A short latency window keeps the feedback lag (and so
+                // the admission-ramp overshoot past the target) small —
+                // the operator knob the OPERATIONS runbook documents
+                // for tight interactive targets.
+                latency_window: 16,
+                ..SchedulerConfig::default()
+            },
+            workload: Workload {
+                name: "sla-mixed".into(),
+                arrival: Arrival::Poisson { rate: 20.0 },
+                prompt: LengthDist::Fixed(256),
+                output: LengthDist::Fixed(128),
+                n_requests: 300,
+                seed: 11,
+            },
+            eta_tokens_override: None,
+            swap_tokens: 0,
+        };
+        let d = 0.050;
+        let targets = [[Some(d), None, None]];
+        let mix = [0.3, 0.2, 0.5];
+        let rows = sla_sweep(&scenario, &targets, mix).unwrap();
+        assert_eq!(rows.len(), 2);
+        let base = &rows[0].metrics;
+        let tight = &rows[1].metrics;
+        assert_eq!(rows[1].label, "per-class-sla(interactive=50)");
+        assert_eq!(base.n_requests, 300);
+        assert_eq!(tight.n_requests, 300, "no request lost to the cap");
+
+        let base_ic = &base.per_class[0];
+        let tight_ic = &tight.per_class[0];
+        assert!(base_ic.n_requests > 0 && tight.per_class[2].n_requests > 0,
+                "mixed load carries both ends of the class range");
+        // The baseline saturates past the 50 ms point…
+        assert!(base_ic.tbt_p95 > d + scenario.sched.eps_d,
+                "baseline must violate for the target to bind: p95={}",
+                base_ic.tbt_p95);
+        // …the per-class controller pulls interactive back to the
+        // target envelope. The offered rate is above the 50 ms SLA
+        // capacity, so Alg. 2's line-15 clamp (`b ≥ N^d`) legitimately
+        // pins slightly past the target by the admission-ramp overshoot
+        // (window lag × arrival rate) — the 25% envelope covers that
+        // pin; the paper's capacity definition makes exact attainment
+        // above capacity impossible by construction.
+        assert!(tight_ic.tbt_p95 <= d * 1.25,
+                "interactive p95 {} misses the 50ms target envelope",
+                tight_ic.tbt_p95);
+        assert!(tight_ic.tbt_p95 < 0.9 * base_ic.tbt_p95,
+                "tightening must visibly move interactive latency: {} vs {}",
+                tight_ic.tbt_p95, base_ic.tbt_p95);
+        assert_eq!(tight_ic.sla_target, Some(d));
+        assert!(tight_ic.sla_violation_rate.unwrap()
+                    < 0.8,
+                "violation accounting present and bounded");
+        assert_eq!(tight.per_class[2].sla_target, None,
+                   "batch stays unconstrained");
+        // Throughput envelope: the paper's Fig. 3 capacity trade-off
+        // (≈ 0.7× at a 50 ms SLA on this model), with slack.
+        assert!(tight.throughput >= 0.55 * base.throughput,
+                "throughput collapsed beyond the capacity trade-off: \
+                 {} vs {}",
+                tight.throughput, base.throughput);
+        // Batch traffic keeps flowing under the interactive cap.
+        assert!(tight.per_class[2].output_tokens > 0);
+
+        // Fixed seeds → bit-identical sweep tables.
+        let again = sla_sweep(&scenario, &targets, mix).unwrap();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        }
+    }
+
+    #[test]
+    fn replica_sim_attaches_per_class_metrics() {
+        let mut s = scenario(PolicyKind::MemoryAware, 80,
+                             Arrival::AllAtOnce);
+        s.sched.policy =
+            PolicyKind::PerClassSla([Some(0.5), None, None]);
+        let set =
+            run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+        assert_eq!(set.aggregate.per_class.len(), 3);
+        for m in &set.per_replica {
+            assert_eq!(m.per_class.len(), 3);
+        }
+        // All workload-generated requests are Standard; the aggregate
+        // per-class rows must reflect that.
+        assert_eq!(set.aggregate.per_class[1].n_requests, 80);
+        assert_eq!(set.aggregate.per_class[0].n_requests, 0);
+        assert!(set.aggregate.per_class[1].tbt_p95 > 0.0);
+        assert_eq!(set.aggregate.per_class[0].sla_target, Some(0.5));
     }
 
     #[test]

@@ -22,11 +22,22 @@
 //! scale is the replica tier ([`service::replica`]): a
 //! [`service::ReplicaSet`] front door over N `Service` replicas with
 //! pluggable routing ([`service::RoutePolicy`]) and first-class rolling
-//! restarts. The TCP frontend ([`server`]) and the examples are thin
-//! layers over it; the experiment driver ([`driver`]) exercises the
-//! same scheduler in virtual time, including mid-run policy switches
-//! (`driver::run_sim_switched`) and the multi-replica co-simulation
-//! (`driver::run_replica_sim`).
+//! restarts. The SLA loop is class-aware end to end: [`telemetry`]
+//! attributes decode latency per priority class,
+//! [`batching::PerClassSlaPolicy`] runs one feedback loop per class
+//! against per-class targets (`per-class-sla(interactive=50)` over the
+//! wire), and the router tie-breaks on per-class SLA headroom. The TCP
+//! frontend ([`server`]) and the examples are thin layers over it; the
+//! experiment driver ([`driver`]) exercises the same scheduler in
+//! virtual time, including mid-run policy switches
+//! (`driver::run_sim_switched`), the multi-replica co-simulation
+//! (`driver::run_replica_sim`), and the per-class SLA sweep
+//! (`driver::sla_sweep`).
+//!
+//! Operating a running server — every protocol-v2 admin op, every
+//! `dynabatch` subcommand, and the rolling-restart / hot-policy-switch
+//! / per-class-SLA runbooks — is documented in `docs/OPERATIONS.md`;
+//! the architecture reference is `DESIGN.md`.
 
 // Carried clippy allowances: the codebase predates these lints and keeps
 // its own idioms (inherent `to_string` on the vendored Json type, index

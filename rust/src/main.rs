@@ -2,9 +2,11 @@
 //! the live PJRT-backed serving frontend.
 
 use anyhow::{anyhow, Result};
-use dynabatch::config::{presets, PolicyKind, SchedulerConfig};
+use dynabatch::config::{
+    parse_sla_targets, presets, PolicyKind, SchedulerConfig,
+};
 use dynabatch::driver::{
-    capacity_search, run_replica_sim, run_sim, run_sim_switched,
+    capacity_search, run_replica_sim, run_sim, run_sim_switched, sla_sweep,
     switch_sweep, PolicySwitch, SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
@@ -102,6 +104,34 @@ fn cli() -> Command {
                 .flag("json", "emit every run's metrics as JSON"),
         )
         .subcommand(
+            Command::new("sla",
+                         "per-class SLA sweep: baseline vs \
+                          min(policy, per-class-sla(targets)) under a \
+                          mixed-class workload (per-class percentiles + \
+                          violation rates; fixed seeds → bit-identical \
+                          tables)")
+                .opt("model", "llama3-70b", "model preset")
+                .opt("policy", "alg1", "base (throughput) policy")
+                .opt("targets", "interactive=50,batch=none",
+                     "per-class decode SLA targets in ms ('none' = \
+                      unconstrained); ';' separates sweep points, e.g. \
+                      'interactive=50;interactive=80'")
+                .opt("mix", "0.3,0.2,0.5",
+                     "traffic fractions interactive,standard,batch")
+                .opt("requests", "300", "request count")
+                .opt("rate", "20", "Poisson arrival rate qps, or 'inf'")
+                .opt("prompt-mean", "256", "mean prompt tokens")
+                .opt("output-mean", "128", "mean output tokens")
+                .opt("d-sla", "0",
+                     "global decode SLA in ms for the baseline policy \
+                      (0 = none)")
+                .opt("latency-window", "16",
+                     "τ̄ window in samples (short = fast per-class \
+                      feedback)")
+                .opt("seed", "42", "workload seed")
+                .flag("json", "emit every row's metrics as JSON"),
+        )
+        .subcommand(
             Command::new("capacity", "binary-search capacity under an SLA")
                 .opt("model", "llama3-70b", "model preset")
                 .opt("policy", "dynamic", "batching policy")
@@ -173,6 +203,7 @@ fn main() {
         "run" => cmd_run(&sub),
         "switch" => cmd_switch(&sub),
         "route" => cmd_route(&sub),
+        "sla" => cmd_sla(&sub),
         "capacity" => cmd_capacity(&sub),
         "serve" => cmd_serve(&sub),
         "bench-sched" => cmd_bench_sched(&sub),
@@ -464,6 +495,77 @@ where
         .filter(|p| !p.trim().is_empty())
         .map(|p| Ok(p.trim().parse::<T>()?))
         .collect()
+}
+
+/// `dynabatch sla`: per-class SLA sweep — the baseline policy vs
+/// `min(policy, per-class-sla(...))` per target set, on one mixed-class
+/// workload, reporting per-class decode percentiles, violation rates and
+/// the aggregate-throughput cost of each target tightening.
+fn cmd_sla(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    s.workload.name = "sla".into();
+    s.workload.n_requests = m.get_usize("requests")?;
+    s.workload.seed = m.get_u64("seed")?;
+    s.workload.arrival = parse_arrival(m.get("rate"))?;
+    s.sched.latency_window = m.get_usize("latency-window")?;
+    let target_sets: Vec<[Option<f64>; 3]> = m
+        .get("targets")
+        .split(';')
+        .filter(|t| !t.trim().is_empty())
+        .map(parse_sla_targets)
+        .collect::<Result<Vec<_>>>()?;
+    if target_sets.is_empty() {
+        return Err(anyhow!("need at least one --targets set"));
+    }
+    let mix_list: Vec<f64> = parse_list(m.get("mix"))?;
+    let mix: [f64; 3] = mix_list
+        .as_slice()
+        .try_into()
+        .map_err(|_| anyhow!("--mix needs exactly 3 fractions"))?;
+    let rows = sla_sweep(&s, &target_sets, mix)?;
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::Arr(
+            rows.iter().map(|r| r.to_json()).collect(),
+        );
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "per-class SLA sweep [{}] requests={} mix={:?} seed={}",
+        s.sched.policy.label(),
+        s.workload.n_requests,
+        mix,
+        s.workload.seed
+    );
+    for r in &rows {
+        let a = &r.metrics;
+        println!(
+            "{:<44} throughput={:>7.0} tok/s  makespan={:>6.1}s",
+            r.label, a.throughput, a.makespan
+        );
+        for c in &a.per_class {
+            let target = c
+                .sla_target
+                .map(|d| format!("{:.0}ms", d * 1e3))
+                .unwrap_or_else(|| "-".into());
+            let viol = c
+                .sla_violation_rate
+                .map(|v| format!("{:>5.1}%", v * 100.0))
+                .unwrap_or_else(|| "    -".into());
+            println!(
+                "    {:<11} n={:<4} tbt p50/p95/p99 = \
+                 {:>5.1}/{:>5.1}/{:>5.1} ms  target={:<5} viol={}",
+                c.class,
+                c.n_requests,
+                c.tbt_p50 * 1e3,
+                c.tbt_p95 * 1e3,
+                c.tbt_p99 * 1e3,
+                target,
+                viol,
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_capacity(m: &M) -> Result<()> {

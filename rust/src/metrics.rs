@@ -3,10 +3,64 @@
 //! across a replica set ([`ReplicaSetMetrics`]) so the capacity experiment
 //! reruns at N = 1, 2, 4 regress router overhead.
 
-use crate::request::Request;
+use crate::request::{PriorityClass, Request};
 use crate::scheduler::SchedStats;
 use crate::util::json::Json;
 use crate::util::stats::percentile_of;
+
+/// Per-priority-class latency/SLA attribution for one run: decode-step
+/// percentiles over the steps that included the class (the same
+/// attribution the live `Telemetry` keeps), request counts/tokens from
+/// the finished requests of the class, and the SLA-violation rate
+/// against the class's target when the run's policy carries one
+/// (`PolicyKind::sla_targets`). Produced by
+/// [`RunMetrics::attach_class_stats`].
+#[derive(Debug, Clone)]
+pub struct ClassMetrics {
+    /// Class label (`interactive` | `standard` | `batch`).
+    pub class: &'static str,
+    /// Finished requests of this class (any finish reason).
+    pub n_requests: usize,
+    pub output_tokens: u64,
+    /// Decode-step latency percentiles over steps that included ≥ 1
+    /// request of this class (seconds; 0.0 with no samples).
+    pub tbt_p50: f64,
+    pub tbt_p95: f64,
+    pub tbt_p99: f64,
+    pub ttft_p95: f64,
+    /// The class's decode-latency target (seconds), if the policy set
+    /// one.
+    pub sla_target: Option<f64>,
+    /// Fraction of the class's attributed decode steps above
+    /// `sla_target + ε_D`; `None` when the class is unconstrained OR
+    /// has no attributed samples — "no data" must not read as "no
+    /// violations".
+    pub sla_violation_rate: Option<f64>,
+}
+
+impl ClassMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("class", Json::from(self.class)),
+            ("n_requests", Json::from(self.n_requests)),
+            ("output_tokens", Json::from(self.output_tokens)),
+            ("tbt_p50_s", Json::Num(self.tbt_p50)),
+            ("tbt_p95_s", Json::Num(self.tbt_p95)),
+            ("tbt_p99_s", Json::Num(self.tbt_p99)),
+            ("ttft_p95_s", Json::Num(self.ttft_p95)),
+            (
+                "sla_target_s",
+                self.sla_target.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "sla_violation_rate",
+                self.sla_violation_rate
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
 
 /// Everything a single experiment run yields.
 #[derive(Debug, Clone)]
@@ -42,6 +96,10 @@ pub struct RunMetrics {
     pub reconfigs: u64,
     /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
     pub utilization: Option<f64>,
+    /// Per-class latency/SLA attribution (rank order; empty until
+    /// [`Self::attach_class_stats`] runs — the sim drivers always attach
+    /// it).
+    pub per_class: Vec<ClassMetrics>,
 }
 
 impl RunMetrics {
@@ -95,7 +153,68 @@ impl RunMetrics {
             cancelled: stats.cancelled,
             reconfigs: stats.reconfigs,
             utilization,
+            per_class: Vec::new(),
         }
+    }
+
+    /// Fill [`Self::per_class`] from the run's class-attributed decode
+    /// latencies (`class_lat[rank]` — the scheduler telemetry's
+    /// per-class traces, taken by value: full-run traces can hold one
+    /// sample per decode step and the percentile sort mutates them in
+    /// place, so passing ownership avoids a second full copy), the
+    /// finished requests, and the per-class SLA targets the policy
+    /// enforced (`PolicyKind::sla_targets`); `eps_d` is the SLA
+    /// tolerance band ε_D used for the violation rate.
+    pub fn attach_class_stats(&mut self, mut class_lat: Vec<Vec<f64>>,
+                              finished: &[Request],
+                              targets: &[Option<f64>; PriorityClass::COUNT],
+                              eps_d: f64) {
+        // One pass over the finished requests, bucketed by class rank.
+        let mut n_requests = [0usize; PriorityClass::COUNT];
+        let mut output_tokens = [0u64; PriorityClass::COUNT];
+        let mut ttfts: [Vec<f64>; PriorityClass::COUNT] =
+            std::array::from_fn(|_| Vec::new());
+        for r in finished {
+            let rank = r.class.rank();
+            n_requests[rank] += 1;
+            output_tokens[rank] += r.generated as u64;
+            if let Some(t) = r.ttft() {
+                ttfts[rank].push(t);
+            }
+        }
+        self.per_class = PriorityClass::ALL
+            .iter()
+            .map(|c| {
+                let rank = c.rank();
+                let mut lat = class_lat
+                    .get_mut(rank)
+                    .map(std::mem::take)
+                    .unwrap_or_default();
+                let sla_violation_rate = targets[rank].and_then(|d| {
+                    if lat.is_empty() {
+                        None // no data ≠ no violations
+                    } else {
+                        Some(
+                            lat.iter()
+                                .filter(|&&x| x > d + eps_d)
+                                .count() as f64
+                                / lat.len() as f64,
+                        )
+                    }
+                });
+                ClassMetrics {
+                    class: c.label(),
+                    n_requests: n_requests[rank],
+                    output_tokens: output_tokens[rank],
+                    tbt_p50: percentile_of(&mut lat, 50.0),
+                    tbt_p95: percentile_of(&mut lat, 95.0),
+                    tbt_p99: percentile_of(&mut lat, 99.0),
+                    ttft_p95: percentile_of(&mut ttfts[rank], 95.0),
+                    sla_target: targets[rank],
+                    sla_violation_rate,
+                }
+            })
+            .collect();
     }
 
     /// Does this run meet an SLA on decode latency at percentile `pct`?
@@ -135,6 +254,12 @@ impl RunMetrics {
             (
                 "utilization",
                 self.utilization.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "per_class",
+                Json::Arr(
+                    self.per_class.iter().map(|c| c.to_json()).collect(),
+                ),
             ),
         ])
     }
@@ -262,6 +387,51 @@ mod tests {
             aggregate: mk(0),
         };
         assert_eq!(empty.max_token_share(), 0.0);
+    }
+
+    #[test]
+    fn class_stats_attach_and_serialize() {
+        let mut inter = finished_req(0, 100, 50, 0.0, 10.0);
+        inter.class = PriorityClass::Interactive;
+        let batch = finished_req(1, 100, 30, 0.0, 10.0); // Standard
+        let reqs = vec![inter, batch];
+        let mut m = RunMetrics::compute("t".into(), &reqs,
+                                        &SchedStats::default(), &[], 10.0,
+                                        None);
+        assert!(m.per_class.is_empty(), "not attached yet");
+        // Interactive saw 40–60 ms steps, standard nothing.
+        let class_lat = vec![
+            (40..=60).map(|i| i as f64 / 1000.0).collect::<Vec<f64>>(),
+            Vec::new(),
+            Vec::new(),
+        ];
+        m.attach_class_stats(class_lat, &reqs,
+                             &[Some(0.05), None, Some(0.1)], 0.0);
+        assert_eq!(m.per_class.len(), 3);
+        let ic = &m.per_class[0];
+        assert_eq!(ic.class, "interactive");
+        assert_eq!(ic.n_requests, 1);
+        assert_eq!(ic.output_tokens, 50);
+        assert!((ic.tbt_p50 - 0.05).abs() < 1e-9);
+        // 10 of 21 samples exceed 50 ms.
+        assert!((ic.sla_violation_rate.unwrap() - 10.0 / 21.0).abs()
+                    < 1e-9);
+        let st = &m.per_class[1];
+        assert_eq!(st.n_requests, 1);
+        assert_eq!(st.tbt_p95, 0.0, "no attributed samples");
+        assert_eq!(st.sla_target, None);
+        assert_eq!(st.sla_violation_rate, None);
+        // Constrained but sample-less: "no data" must not read as
+        // perfect attainment.
+        let bc = &m.per_class[2];
+        assert_eq!(bc.sla_target, Some(0.1));
+        assert_eq!(bc.sla_violation_rate, None);
+        let j = m.to_json();
+        let pc = j.get("per_class").as_arr().unwrap();
+        assert_eq!(pc.len(), 3);
+        assert_eq!(pc[0].get("class").as_str(), Some("interactive"));
+        assert!(pc[1].get("sla_target_s").is_null());
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -36,8 +36,9 @@
 //! * The running set is an **intrusive doubly-linked list** in admission
 //!   order (O(1) push/remove preserving victim = newest semantics), with
 //!   a second intrusive list over the subset still prefilling. Phase
-//!   counts fall out of the list lengths, so [`Scheduler::observe`] is
-//!   O(1) — it used to filter-scan the running set twice per step.
+//!   counts fall out of the list lengths, so the scheduler's per-step
+//!   `observe` is O(1) — it used to filter-scan the running set twice
+//!   per step.
 //! * [`StepPlan`] / [`StepOutcome`] / the decode scratch / [`StepReport`]
 //!   are owned by the scheduler and recycled, and prefill chunks are
 //!   ranges into the plan's token arena — the steady-state step performs
@@ -167,6 +168,12 @@ pub struct Scheduler {
     plan: StepPlan,
     outcome: StepOutcome,
     scratch_decode: Vec<u32>,
+    /// Class composition of the current plan's decode batch, maintained
+    /// by `plan_decodes` (incremented per planned decode, decremented
+    /// when a preemption drops a victim's planned decode) — feeds the
+    /// per-class latency attribution without re-resolving classes
+    /// through the `by_id` map on the hot path.
+    decode_class_scratch: [u32; N_CLASSES],
     report: StepReport,
     /// (t, b_t) decision trace for plots. Bounded ring on the serve
     /// path; see [`Self::retain_full_traces`].
@@ -234,6 +241,7 @@ impl Scheduler {
             plan: StepPlan::default(),
             outcome: StepOutcome::default(),
             scratch_decode: Vec::new(),
+            decode_class_scratch: [0; N_CLASSES],
             report: StepReport::default(),
             bt_timeline: RingLog::bounded(DIRECTIVE_LOG_CAP),
             directive_log: RingLog::bounded(DIRECTIVE_LOG_CAP),
@@ -251,14 +259,16 @@ impl Scheduler {
         self.directive
     }
 
-    /// Lift the caps on `bt_timeline`, `directive_log` and
-    /// `decode_latencies` so a full-run trace is retained — experiment
-    /// drivers call this for exact percentiles and plots; the
-    /// long-running serve path keeps the bounded rings.
+    /// Lift the caps on `bt_timeline`, `directive_log`,
+    /// `decode_latencies` and the telemetry's per-class latency traces
+    /// so a full-run trace is retained — experiment drivers call this
+    /// for exact percentiles and plots; the long-running serve path
+    /// keeps the bounded rings.
     pub fn retain_full_traces(&mut self) {
         self.bt_timeline.set_unbounded();
         self.directive_log.set_unbounded();
         self.decode_latencies.set_unbounded();
+        self.telemetry.retain_full_traces();
     }
 
     /// Cross-check the O(1) incremental accounting (phase lists, counts,
@@ -579,8 +589,21 @@ impl Scheduler {
         if !plan.decodes.is_empty() {
             self.stats.decode_steps += 1;
             self.stats.decode_batch_sum += plan.decodes.len() as u64;
-            self.telemetry
-                .record_decode_step(elapsed, plan.decodes.len() as u32);
+            // Class composition of the decode batch, maintained by
+            // plan_decodes/preempt_victim while the plan was built: the
+            // step's latency is attributed to every class present
+            // (cancelled / shed requests never reach a plan, so they
+            // cannot pollute any class's latency window).
+            debug_assert_eq!(
+                self.decode_class_scratch.iter().sum::<u32>() as usize,
+                plan.decodes.len(),
+                "decode class counts out of sync with the plan"
+            );
+            self.telemetry.record_decode_step_classed(
+                elapsed,
+                plan.decodes.len() as u32,
+                self.decode_class_scratch,
+            );
             self.decode_latencies.push(elapsed);
         }
         if !plan.prefills.is_empty() {
@@ -687,6 +710,18 @@ impl Scheduler {
         }
     }
 
+    /// The class's admission weight for this interval: the directive's
+    /// per-class override when the controller emitted one (e.g.
+    /// [`crate::batching::PerClassSlaPolicy`] shrinking a violating
+    /// class's share), the base [`PriorityClass::weight`] otherwise.
+    /// Clamped to ≥ 1 so no override can starve a class outright.
+    fn admission_weight(&self, c: PriorityClass) -> i64 {
+        match self.directive.class_weights {
+            Some(w) => w[c.rank()].max(1) as i64,
+            None => c.weight() as i64,
+        }
+    }
+
     /// Smooth weighted round-robin pick over the non-empty class queues:
     /// the class with the highest `credit + weight` wins (ties go to the
     /// higher-priority class). Credits are only committed when the pick
@@ -699,7 +734,7 @@ impl Scheduler {
             if self.waiting[i].is_empty() {
                 continue;
             }
-            let eff = self.wrr_credit[i] + c.weight() as i64;
+            let eff = self.wrr_credit[i] + self.admission_weight(c);
             if best.map(|(_, b)| eff > b).unwrap_or(true) {
                 best = Some((i, eff));
             }
@@ -713,8 +748,9 @@ impl Scheduler {
         for c in PriorityClass::ALL {
             let i = c.rank();
             if !self.waiting[i].is_empty() {
-                self.wrr_credit[i] += c.weight() as i64;
-                total += c.weight() as i64;
+                let w = self.admission_weight(c);
+                self.wrr_credit[i] += w;
+                total += w;
             }
         }
         self.wrr_credit[chosen] -= total;
@@ -871,6 +907,7 @@ impl Scheduler {
                                         plan: &mut StepPlan) {
         let mut scratch = std::mem::take(&mut self.scratch_decode);
         scratch.clear();
+        self.decode_class_scratch = [0; N_CLASSES];
         let mut cur = self.run_head;
         while cur != NIL {
             let e = self.entry(cur);
@@ -885,10 +922,10 @@ impl Scheduler {
             // A preemption triggered by an earlier iteration may have
             // evicted this request already; its phase says so (preempted
             // requests stay in the slab, so the slot is still live).
-            let (phase, kv_slot, id, position) = {
+            let (phase, kv_slot, id, position, rank) = {
                 let e = self.entry(slot);
                 (e.req.phase, e.kv, e.req.id,
-                 e.req.prefilled + e.req.generated)
+                 e.req.prefilled + e.req.generated, e.req.class.rank())
             };
             if phase != Phase::Decode {
                 continue;
@@ -906,6 +943,7 @@ impl Scheduler {
             }
             self.kv.grow_at(kv_slot, 1).expect("can_grow checked");
             plan.decodes.push(DecodeWork { id, position });
+            self.decode_class_scratch[rank] += 1;
         }
         self.scratch_decode = scratch;
     }
@@ -923,12 +961,20 @@ impl Scheduler {
         if victim == NIL {
             return false;
         }
-        let victim_id = self.entry(victim).req.id;
+        let (victim_id, victim_rank) = {
+            let r = &self.entry(victim).req;
+            (r.id, r.class.rank())
+        };
         self.leave_running(victim);
         plan.preempt_events += 1;
         // The victim may already have work in this step's plan; drop it so
-        // the engine neither runs nor reports tokens for it.
+        // the engine neither runs nor reports tokens for it (and keep the
+        // decode class counts in step with the plan).
+        let had_decode = plan.decodes.len();
         plan.decodes.retain(|d| d.id != victim_id);
+        if plan.decodes.len() < had_decode {
+            self.decode_class_scratch[victim_rank] -= 1;
+        }
         plan.prefills.retain(|p| p.id != victim_id);
         let mode = match self.directive.swap_hint {
             SwapHint::Auto => self.cfg.preempt,
@@ -1296,6 +1342,106 @@ mod tests {
         assert!(
             mean_ttft(100, 200) < mean_ttft(0, 100),
             "interactive must see lower queueing delay than batch"
+        );
+    }
+
+    #[test]
+    fn per_class_latency_attribution_skips_cancelled_and_shed() {
+        // Only classes that actually decode earn latency samples: a
+        // cancelled interactive waiter and a deadline-shed batch waiter
+        // must leave their class windows empty while the running
+        // standard request fills its own.
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 1 }, 100_000);
+        s.submit(Request::new(0, 32, 20, 0.0));
+        s.submit(Request::new(1, 32, 20, 0.0)
+            .with_class(PriorityClass::Interactive));
+        s.submit(Request::new(2, 32, 8, 0.0)
+            .with_class(PriorityClass::Batch)
+            .with_deadline(Some(0.001)));
+        // Cancel the interactive request before anything is admitted.
+        assert!(s.cancel(&mut e, 1, c.now()));
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 3);
+        assert_eq!(s.stats.shed, 1, "batch waiter shed on deadline");
+        let t = &s.telemetry;
+        assert!(t.class_latencies(0).is_empty(),
+                "cancelled interactive request must not pollute");
+        assert!(t.class_latencies(2).is_empty(),
+                "shed batch request must not pollute");
+        assert_eq!(t.class_latencies(1).len() as u64,
+                   s.stats.decode_steps,
+                   "every decode step had the standard request");
+        let obs = s.observe(c.now());
+        assert!(obs.decode_latency_by_class[1].is_some());
+        assert_eq!(obs.decode_latency_by_class[0], None);
+        assert!(t.decode_latency_class_p(1, 50.0) > 0.0);
+    }
+
+    #[test]
+    fn mixed_batch_attributes_to_every_present_class() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 4 }, 100_000);
+        s.submit(Request::new(0, 16, 32, 0.0)
+            .with_class(PriorityClass::Interactive));
+        s.submit(Request::new(1, 16, 32, 0.0)
+            .with_class(PriorityClass::Batch));
+        run_all(&mut s, &mut e, &mut c, 10_000);
+        let t = &s.telemetry;
+        // Both requests share every decode step (same budget, admitted
+        // together under b_t = 4), so both windows match the global log.
+        assert_eq!(t.class_latencies(0).len() as u64,
+                   s.stats.decode_steps);
+        assert_eq!(t.class_latencies(2).len() as u64,
+                   s.stats.decode_steps);
+        assert!(t.class_latencies(1).is_empty(), "no standard traffic");
+    }
+
+    /// A controller overriding the WRR admission weights to invert the
+    /// class ratios — the scheduler half of the per-class SLA share
+    /// mechanism.
+    struct InvertedWeights;
+
+    impl crate::batching::Controller for InvertedWeights {
+        fn decide(&mut self, _obs: &Observation) -> Directive {
+            let mut d = Directive::gated(4);
+            d.class_weights = Some([1, 1, 32]); // batch dominates
+            d
+        }
+
+        fn label(&self) -> String {
+            "inverted-weights".into()
+        }
+    }
+
+    #[test]
+    fn directive_class_weights_override_admission_shares() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 4 }, 100_000);
+        s.install_controller(Box::new(InvertedWeights));
+        for i in 0..12 {
+            s.submit(Request::new(i, 32, 16, 0.0)
+                .with_class(PriorityClass::Batch));
+            s.submit(Request::new(100 + i, 32, 16, 0.0)
+                .with_class(PriorityClass::Interactive));
+        }
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 24, "no class is starved");
+        let mean_ttft = |lo: u64, hi: u64| {
+            let xs: Vec<f64> = s
+                .finished()
+                .iter()
+                .filter(|r| r.id >= lo && r.id < hi)
+                .map(|r| r.ttft().unwrap())
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean_ttft(0, 100) < mean_ttft(100, 200),
+            "overridden weights must invert the admission preference: \
+             batch {} vs interactive {}",
+            mean_ttft(0, 100),
+            mean_ttft(100, 200)
         );
     }
 

@@ -4,8 +4,12 @@
 //! Every server line is decoded into a typed [`ClientEvent`]; unknown or
 //! malformed event types surface as errors instead of being skipped (a
 //! v1 client talking to a newer server fails loudly, not by hanging).
-//! The v2 admin ops have typed methods: [`Client::stats`],
-//! [`Client::set_policy`], [`Client::drain`].
+//! Every v2 admin op has a typed method: [`Client::stats`] (including
+//! per-class latency percentiles and per-replica attribution),
+//! [`Client::set_policy`] / [`Client::set_policy_replica`],
+//! [`Client::drain`] / [`Client::drain_replica`], [`Client::reopen`],
+//! and [`Client::rolling_restart`]. The operator-facing walkthrough of
+//! these ops lives in `docs/OPERATIONS.md`.
 
 use crate::request::{PriorityClass, SamplingParams};
 use crate::util::json::Json;
@@ -69,6 +73,13 @@ pub struct ServerStats {
     pub cancelled: u64,
     pub reconfigs: u64,
     pub draining: bool,
+    /// Recent decode-latency p50 per priority class, milliseconds (rank
+    /// order: interactive, standard, batch; 0 until the class decoded;
+    /// empty from pre-per-class servers). With replicas behind the
+    /// server the top-level values are the worst replica per class.
+    pub class_p50_ms: Vec<f64>,
+    /// Recent per-class decode-latency p95, milliseconds.
+    pub class_p95_ms: Vec<f64>,
     /// Set size (1 for a single-service server; 0 from pre-replica
     /// servers that do not send the field).
     pub n_replicas: u64,
@@ -145,6 +156,16 @@ fn parse_stats(ev: &Json) -> ServerStats {
         cancelled: ev.get("cancelled").as_u64().unwrap_or(0),
         reconfigs: ev.get("reconfigs").as_u64().unwrap_or(0),
         draining: ev.get("draining").as_bool().unwrap_or(false),
+        class_p50_ms: ev
+            .get("class_p50_ms")
+            .as_arr()
+            .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+            .unwrap_or_default(),
+        class_p95_ms: ev
+            .get("class_p95_ms")
+            .as_arr()
+            .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+            .unwrap_or_default(),
         n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
         route_policy:
             ev.get("route_policy").as_str().unwrap_or("").into(),
@@ -394,15 +415,34 @@ impl Client {
         }
     }
 
-    /// Hot-swap the server's batching controller (v2 `set_policy` op).
-    /// `policy` is any `PolicyKind` label, including combinators (e.g.
-    /// `"combined"`, `"min(alg1,alg2)"`). Returns the new controller's
-    /// label.
+    /// Hot-swap the server's batching controller (v2 `set_policy` op,
+    /// fanned out to every replica). `policy` is any `PolicyKind` label,
+    /// including combinators and per-class SLA targets (e.g.
+    /// `"combined"`, `"min(alg1,alg2)"`,
+    /// `"per-class-sla(interactive=50,batch=none)"`). Returns the new
+    /// controller's label.
     pub fn set_policy(&mut self, policy: &str) -> Result<String> {
-        self.send(&Json::obj(vec![
+        self.set_policy_msg(policy, None)
+    }
+
+    /// Hot-swap the controller on a single replica (`set_policy` with a
+    /// `replica` field) — tune one class-pinned partition's controller
+    /// without touching the rest of the set.
+    pub fn set_policy_replica(&mut self, replica: u64, policy: &str)
+                              -> Result<String> {
+        self.set_policy_msg(policy, Some(replica))
+    }
+
+    fn set_policy_msg(&mut self, policy: &str, replica: Option<u64>)
+                      -> Result<String> {
+        let mut j = Json::obj(vec![
             ("op", Json::from("set_policy")),
             ("policy", Json::from(policy)),
-        ]))?;
+        ]);
+        if let Some(r) = replica {
+            j.set("replica", Json::from(r));
+        }
+        self.send(&j)?;
         loop {
             match self.read_event()? {
                 ClientEvent::PolicySet { policy } => return Ok(policy),

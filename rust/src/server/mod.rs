@@ -59,13 +59,25 @@
 //!    "controller":"combined(min(alg1,alg2))", "steps":901,
 //!    "finished":40, "rejected":0, "shed":1, "cancelled":2,
 //!    "reconfigs":0, "draining":false,
+//!    "class_p50_ms":[12.1,0.0,14.9], "class_p95_ms":[48.0,0.0,61.2],
 //!    "n_replicas":2, "route_policy":"least-loaded",
 //!    "replicas":[{"replica":0, …same fields…}, {"replica":1, …}]}
+//!
+//! `class_p50_ms`/`class_p95_ms` are recent decode-latency percentiles
+//! attributed per priority class (rank order: interactive, standard,
+//! batch; 0 until a class has decoded). Per-replica entries carry their
+//! own values; the top-level aggregate takes the worst replica per
+//! class (the conservative set-level SLA read).
 //!
 //! → {"op":"set_policy", "policy":"min(alg1,alg2)"}
 //! ← {"type":"policy_set", "policy":"min(memory-aware(alg1-linear),\
 //!    sla-feedback(D_SLA=50ms))"}          (new controller label; or a
 //!                                          connection-level error)
+//!
+//! → {"op":"set_policy", "policy":"per-class-sla(interactive=50)",
+//!    "replica":0}                         (single-replica swap — tune a
+//! ← {"type":"policy_set", "policy":"…",    class-pinned partition's
+//!    "replica":0}                          controller independently)
 //!
 //! → {"op":"drain"}                        (whole set)
 //! ← {"type":"draining"}                   (immediately; admissions stop)
@@ -266,6 +278,24 @@ fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
         ("cancelled", Json::from(s.cancelled)),
         ("reconfigs", Json::from(s.reconfigs)),
         ("draining", Json::from(s.draining)),
+        (
+            "class_p50_ms",
+            Json::Arr(
+                s.class_lat_p50
+                    .iter()
+                    .map(|&v| Json::Num(v * 1e3))
+                    .collect(),
+            ),
+        ),
+        (
+            "class_p95_ms",
+            Json::Arr(
+                s.class_lat_p95
+                    .iter()
+                    .map(|&v| Json::Num(v * 1e3))
+                    .collect(),
+            ),
+        ),
     ]
 }
 
@@ -434,18 +464,42 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                     write_json(&out, &stats_to_json(&server.set))?;
                 }
                 Some("set_policy") => {
+                    // Optional `replica` targets a single replica (the
+                    // partition-tuning building block); absent = fan out
+                    // to the whole set.
+                    let replica = match parse_replica(&msg) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                            continue;
+                        }
+                    };
                     let r = match msg.get("policy").as_str() {
-                        Some(p) => PolicyKind::parse(p)
-                            .and_then(|k| server.set.reconfigure(k)),
+                        Some(p) => {
+                            PolicyKind::parse(p).and_then(|k| match replica
+                            {
+                                Some(i) => server
+                                    .set
+                                    .reconfigure_replica(i as usize, k),
+                                None => server.set.reconfigure(k),
+                            })
+                        }
                         None => Err(anyhow!(
                             "set_policy needs a string 'policy' field"
                         )),
                     };
                     match r {
-                        Ok(label) => write_json(&out, &Json::obj(vec![
-                            ("type", Json::from("policy_set")),
-                            ("policy", Json::from(label)),
-                        ]))?,
+                        Ok(label) => {
+                            let mut f = vec![
+                                ("type", Json::from("policy_set")),
+                                ("policy", Json::from(label)),
+                            ];
+                            if let Some(i) = replica {
+                                f.push(("replica", Json::from(i)));
+                            }
+                            write_json(&out, &Json::obj(f))?;
+                        }
                         Err(e) => {
                             write_json(&out,
                                        &conn_error(format!("{e:#}")))?;
@@ -455,7 +509,14 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                 Some("drain") => {
                     // Optional `replica` selects a single-replica drain
                     // (the rotation building block); absent = whole set.
-                    let replica = msg.get("replica").as_u64();
+                    let replica = match parse_replica(&msg) {
+                        Ok(r) => r,
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                            continue;
+                        }
+                    };
                     if let Some(r) = replica {
                         if r as usize >= server.set.len() {
                             write_json(&out, &conn_error(format!(
@@ -504,13 +565,15 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                     });
                 }
                 Some("reopen") => {
-                    let r = match msg.get("replica").as_u64() {
-                        Some(i) => server
-                            .set
-                            .reopen_replica(i as usize)
-                            .map(|()| Some(i)),
-                        None => server.set.reopen().map(|()| None),
-                    };
+                    let r = parse_replica(&msg).and_then(|replica| {
+                        match replica {
+                            Some(i) => server
+                                .set
+                                .reopen_replica(i as usize)
+                                .map(|()| Some(i)),
+                            None => server.set.reopen().map(|()| None),
+                        }
+                    });
                     match r {
                         Ok(i) => {
                             let mut f =
@@ -608,6 +671,20 @@ fn conn_error(message: String) -> Json {
     ])
 }
 
+/// Decode an op's optional `replica` field. A present-but-malformed
+/// value (string, negative, fractional) is an error, not a silent
+/// fall-through to the whole-set form of the op.
+fn parse_replica(msg: &Json) -> Result<Option<u64>> {
+    let field = msg.get("replica");
+    if field.is_null() {
+        return Ok(None);
+    }
+    field
+        .as_u64()
+        .map(Some)
+        .ok_or_else(|| anyhow!("'replica' must be a non-negative integer"))
+}
+
 fn write_json(out: &Arc<Mutex<TcpStream>>, j: &Json) -> Result<()> {
     let mut s = out.lock().unwrap();
     writeln!(s, "{}", j.to_string())?;
@@ -685,7 +762,11 @@ mod tests {
         for r in &s.replicas {
             assert_eq!(r.controller, "combined(min(alg1,alg2))");
             assert!(r.replicas.is_empty());
+            assert_eq!(r.class_p95_ms.len(), 3,
+                       "per-class percentiles attributed per replica");
         }
+        assert_eq!(s.class_p50_ms.len(), 3);
+        assert_eq!(s.class_p95_ms.len(), 3);
         // set_policy fans out to every replica.
         let label = c.set_policy("static-fixed:4").unwrap();
         assert_eq!(label, "static-fixed:4");
@@ -695,6 +776,69 @@ mod tests {
         assert_eq!(s.reconfigs, 2, "one reconfig per replica");
         // Work still flows after the swap.
         assert_eq!(c.generate("hi", 3).unwrap().n_tokens, 3);
+        server.shutdown();
+    }
+
+    #[test]
+    fn per_replica_set_policy_and_per_class_targets_over_wire() {
+        let server = sim_replica_server(2);
+        let mut c = Client::connect(&server.local_addr.to_string()).unwrap();
+        // Per-class SLA targets ride the existing set_policy op.
+        let label =
+            c.set_policy("per-class-sla(interactive=50,batch=none)")
+                .unwrap();
+        assert_eq!(label, "per-class-sla(interactive=50)");
+        poll_stats(&mut c, "per-class fan-out", |s| {
+            s.replicas.iter().all(|r| r.controller == label)
+        });
+        // Single-replica swap leaves the other replica untouched.
+        let l = c.set_policy_replica(1, "static-fixed:6").unwrap();
+        assert_eq!(l, "static-fixed:6");
+        let s = poll_stats(&mut c, "replica 1 swapped", |s| {
+            s.replicas[1].controller == "static-fixed:6"
+        });
+        assert_eq!(s.replicas[0].controller, label);
+        // Work flows after per-class traffic: classed generates land
+        // latency samples in the per-class stats.
+        let opts = GenOptions {
+            class: PriorityClass::Interactive,
+            ..GenOptions::default()
+        };
+        assert_eq!(c.generate_with("classed", 4, &opts).unwrap().n_tokens,
+                   4);
+        let s = poll_stats(&mut c, "interactive p95 attributed", |s| {
+            s.class_p95_ms[0] > 0.0
+        });
+        assert_eq!(s.class_p95_ms[1], 0.0,
+                   "no standard traffic → no standard samples");
+        // Out-of-range replica is an error, not a hang.
+        let err = c
+            .roundtrip_raw(
+                "{\"op\":\"set_policy\",\"policy\":\"alg1\",\
+                 \"replica\":9}",
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // A malformed replica field must error, not silently fan out
+        // to the whole set.
+        let err = c
+            .roundtrip_raw(
+                "{\"op\":\"set_policy\",\"policy\":\"alg1\",\
+                 \"replica\":\"1\"}",
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("replica"), "{err}");
+        let s = c.stats().unwrap();
+        assert_eq!(s.replicas[1].controller, "static-fixed:6",
+                   "malformed replica must not have reconfigured anything");
+        // Invalid per-class targets are rejected structurally.
+        let err = c
+            .roundtrip_raw(
+                "{\"op\":\"set_policy\",\
+                 \"policy\":\"per-class-sla(batch=none)\"}",
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("constrained"), "{err}");
         server.shutdown();
     }
 

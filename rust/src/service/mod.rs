@@ -71,6 +71,22 @@ enum Command {
 /// engine over those specs with η derived from the hardware's KV budget;
 /// `.engine(...)` swaps in a real engine (the builder closure runs on the
 /// service thread because PJRT handles are not `Send`).
+///
+/// ```
+/// use dynabatch::config::presets::{cpu_host, tiny_real};
+/// use dynabatch::service::{GenRequest, PriorityClass, ServiceBuilder};
+///
+/// let service = ServiceBuilder::new(tiny_real(), cpu_host())
+///     .eta_tokens(100_000)
+///     .build()?; // spawns the engine-loop thread (simulated engine)
+/// let done = service
+///     .submit(GenRequest::from_text("hello", 4)
+///         .with_class(PriorityClass::Interactive))?
+///     .wait()?;
+/// assert_eq!(done.n_tokens, 4);
+/// service.shutdown();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ServiceBuilder {
     model: ModelSpec,
     hardware: HardwareSpec,
@@ -231,6 +247,13 @@ pub struct ServiceSnapshot {
     pub reconfigs: u64,
     /// True once `drain` has been requested.
     pub draining: bool,
+    /// Recent decode-latency p50 attributed per class (seconds, indexed
+    /// by [`PriorityClass::rank`]; 0.0 until the class has decoded). A
+    /// step's latency is attributed to every class in its decode batch.
+    pub class_lat_p50: [f64; PriorityClass::COUNT],
+    /// Recent per-class decode-latency p95 (seconds) — the router's
+    /// per-class SLA headroom signal and the v2 `stats` payload.
+    pub class_lat_p95: [f64; PriorityClass::COUNT],
 }
 
 struct Shared {
@@ -594,10 +617,40 @@ fn resolve_drains(no_pending_submits: bool, armed: &mut bool,
     }
 }
 
+/// Cached per-class decode-latency percentiles for the published
+/// snapshot: `SlidingWindow::percentile` clones and sorts the window,
+/// so the loop recomputes only when a decode step actually landed
+/// (`decode_steps` moved) instead of on every iteration — idle and
+/// prefill-only iterations publish the cached values.
+#[derive(Default)]
+struct ClassLatCache {
+    decode_steps: u64,
+    fresh: bool,
+    p50: [f64; PriorityClass::COUNT],
+    p95: [f64; PriorityClass::COUNT],
+}
+
+impl ClassLatCache {
+    fn refresh(&mut self, sched: &Scheduler) {
+        if self.fresh && sched.stats.decode_steps == self.decode_steps {
+            return;
+        }
+        self.decode_steps = sched.stats.decode_steps;
+        self.fresh = true;
+        self.p50 = std::array::from_fn(|rank| {
+            sched.telemetry.decode_latency_class_p(rank, 50.0)
+        });
+        self.p95 = std::array::from_fn(|rank| {
+            sched.telemetry.decode_latency_class_p(rank, 95.0)
+        });
+    }
+}
+
 /// `label` is the cached controller label — `controller_label()`
 /// allocates across the combinator tree, so the loop re-derives it only
 /// on `SetPolicy` instead of every iteration.
-fn publish(shared: &Shared, sched: &Scheduler, label: &str) {
+fn publish(shared: &Shared, sched: &Scheduler, label: &str,
+           lat_cache: &mut ClassLatCache) {
     let mut snap = shared.snapshot.lock().unwrap();
     let by_class = sched.waiting_by_class();
     snap.running = sched.running_len() as u32;
@@ -618,6 +671,9 @@ fn publish(shared: &Shared, sched: &Scheduler, label: &str) {
     snap.cancelled = sched.stats.cancelled;
     snap.reconfigs = sched.stats.reconfigs;
     snap.draining = shared.draining.load(Ordering::SeqCst);
+    lat_cache.refresh(sched);
+    snap.class_lat_p50 = lat_cache.p50;
+    snap.class_lat_p95 = lat_cache.p95;
 }
 
 /// The serving loop: drain control commands, step the scheduler, stream
@@ -634,6 +690,7 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
     // resolve_drains).
     let mut drain_armed = false;
     let mut label = sched.controller_label();
+    let mut lat_cache = ClassLatCache::default();
     while !shared.shutdown.load(Ordering::SeqCst) {
         let now = clock.elapsed().as_secs_f64();
         // Read BEFORE draining the channel (see resolve_drains): zero
@@ -709,7 +766,7 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
         if shared.paused.load(Ordering::SeqCst) {
             resolve_drains(no_pending_submits, &mut drain_armed,
                            &mut drain_waiters, sched, &watchers);
-            publish(shared, sched, &label);
+            publish(shared, sched, &label, &mut lat_cache);
             std::thread::sleep(Duration::from_millis(1));
             continue;
         }
@@ -783,7 +840,7 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
         }
         resolve_drains(no_pending_submits, &mut drain_armed,
                        &mut drain_waiters, sched, &watchers);
-        publish(shared, sched, &label);
+        publish(shared, sched, &label, &mut lat_cache);
     }
     // Shutdown: fail submissions still queued in the control channel,
     // then end any open stream, so callers never hang.
@@ -805,7 +862,7 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
             message: "service shut down".into(),
         });
     }
-    publish(shared, sched, &label);
+    publish(shared, sched, &label, &mut lat_cache);
 }
 
 #[cfg(test)]

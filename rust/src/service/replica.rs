@@ -11,11 +11,18 @@
 //!
 //! * **round-robin** — cheapest; ignores load.
 //! * **least-loaded** — per-replica backlog (waiting + running +
-//!   resuming, off the live snapshot), KV headroom as the tie-break.
+//!   resuming, off the live snapshot); backlog ties break on the
+//!   submitting class's **per-class SLA budget** (the replica with the
+//!   lowest attributed decode p95 for that class wins — see
+//!   [`ReplicaLoad::class_p95`]), then KV headroom.
 //! * **class-pinned:R** — interactive traffic pinned to the first `R`
 //!   replicas (its reserved latency partition), standard/batch traffic
 //!   least-loaded over the rest; each class falls back to the other
-//!   partition only when its own is entirely draining.
+//!   partition only when its own is entirely draining. Each partition's
+//!   controller tunes independently via
+//!   [`ReplicaSet::reconfigure_partitions`] (e.g. a tight
+//!   `per-class-sla(interactive=50)` on the reserved partition, plain
+//!   Algorithm 1 on the rest).
 //!
 //! Request ids are namespaced per replica (replica `k` of `n` allocates
 //! `k+1, k+1+n, …` — see [`super::ServiceBuilder::request_ids`]), so a
@@ -45,8 +52,10 @@ pub enum RoutePolicy {
     /// Rotate over the replicas in index order.
     RoundRobin,
     /// Smallest backlog wins (waiting + running + resuming off the live
-    /// snapshot); ties go to the replica with more free KV blocks, then
-    /// the lower index.
+    /// snapshot); ties go to the replica with the most per-class SLA
+    /// headroom for the submitting class (lowest attributed decode p95
+    /// from the replica snapshots), then more free KV blocks, then the
+    /// lower index.
     LeastLoaded,
     /// Interactive requests go least-loaded over replicas
     /// `[0, reserved)`; standard/batch go least-loaded over
@@ -120,7 +129,7 @@ impl RoutePolicy {
                 let up: Vec<usize> = (0..loads.len())
                     .filter(|&i| !loads[i].draining)
                     .collect();
-                least_loaded(&up, loads)
+                least_loaded(&up, loads, class.rank())
             }
             RoutePolicy::ClassPinned { reserved } => {
                 let (own, other): (Vec<usize>, Vec<usize>) =
@@ -130,8 +139,8 @@ impl RoutePolicy {
                             (i < *reserved)
                                 == (class == PriorityClass::Interactive)
                         });
-                let mut out = least_loaded(&own, loads);
-                out.extend(least_loaded(&other, loads));
+                let mut out = least_loaded(&own, loads, class.rank());
+                out.extend(least_loaded(&other, loads, class.rank()));
                 out
             }
         }
@@ -144,12 +153,18 @@ impl RoutePolicy {
     }
 }
 
-fn least_loaded(idx: &[usize], loads: &[ReplicaLoad]) -> Vec<usize> {
+/// Sort candidate replicas best-first for a request of class rank
+/// `rank`: backlog, then per-class SLA headroom (lower attributed decode
+/// p95 for that class = more headroom), then free KV blocks, then index.
+fn least_loaded(idx: &[usize], loads: &[ReplicaLoad], rank: usize)
+                -> Vec<usize> {
     let mut v = idx.to_vec();
     v.sort_by(|&a, &b| {
         loads[a]
             .backlog()
             .cmp(&loads[b].backlog())
+            .then(loads[a].class_p95[rank]
+                .total_cmp(&loads[b].class_p95[rank]))
             .then(loads[b].kv_free_blocks.cmp(&loads[a].kv_free_blocks))
             .then(a.cmp(&b))
     });
@@ -171,6 +186,11 @@ pub struct ReplicaLoad {
     /// the virtual-time driver path, which reads queues synchronously.
     pub in_flight_to: u32,
     pub kv_free_blocks: usize,
+    /// Recent decode-latency p95 attributed per class (seconds, indexed
+    /// by [`PriorityClass::rank`]; 0.0 until that class has decoded on
+    /// the replica) — the per-class SLA budget signal `least-loaded`
+    /// tie-breaks on.
+    pub class_p95: [f64; PriorityClass::COUNT],
     /// Draining or shut down: not a routing candidate.
     pub draining: bool,
 }
@@ -189,6 +209,23 @@ impl ReplicaLoad {
 /// N `Service` replicas behind one submission front door. Cheap to share
 /// behind an `Arc`; dropping it shuts every replica down (via the
 /// `Service` drops).
+///
+/// ```
+/// use dynabatch::config::presets::{cpu_host, tiny_real};
+/// use dynabatch::service::{
+///     GenRequest, ReplicaSet, RoutePolicy, ServiceBuilder,
+/// };
+///
+/// let set = ReplicaSet::build(2, RoutePolicy::LeastLoaded, |_replica| {
+///     ServiceBuilder::new(tiny_real(), cpu_host()).eta_tokens(100_000)
+/// })?;
+/// let (replica, handle) =
+///     set.submit_routed(GenRequest::from_text("hi", 2))?;
+/// assert!(replica < set.len());
+/// assert_eq!(handle.wait()?.n_tokens, 2);
+/// set.shutdown();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct ReplicaSet {
     replicas: Vec<Arc<Service>>,
     route: RoutePolicy,
@@ -324,6 +361,7 @@ impl ReplicaSet {
                     resuming: snap.resuming,
                     in_flight_to,
                     kv_free_blocks: snap.kv_free_blocks,
+                    class_p95: snap.class_lat_p95,
                     // The snapshot's flag is published once per loop
                     // iteration; read the authoritative flags so
                     // routing reacts to begin_drain/shutdown
@@ -407,8 +445,12 @@ impl ReplicaSet {
     /// Fold per-replica snapshots into one set-level view: counters and
     /// KV accounting sum, `b_t` sums (total concurrency target),
     /// `controller` is the replicas' common label (distinct labels join
-    /// with `|`), and `draining` means *every* replica is draining —
-    /// i.e. the whole set refuses work.
+    /// with `|`), `draining` means *every* replica is draining — i.e.
+    /// the whole set refuses work — and the per-class latency
+    /// percentiles take the worst (max) replica, the conservative
+    /// set-level SLA read (exact percentiles cannot be folded from
+    /// per-replica ones; per-replica values stay attributed under
+    /// `stats.replicas`).
     pub fn aggregate(snaps: &[ServiceSnapshot]) -> ServiceSnapshot {
         let mut agg = ServiceSnapshot {
             draining: !snaps.is_empty(),
@@ -437,6 +479,12 @@ impl ReplicaSet {
             agg.cancelled += s.cancelled;
             agg.reconfigs += s.reconfigs;
             agg.draining &= s.draining;
+            for rank in 0..PriorityClass::COUNT {
+                agg.class_lat_p50[rank] =
+                    agg.class_lat_p50[rank].max(s.class_lat_p50[rank]);
+                agg.class_lat_p95[rank] =
+                    agg.class_lat_p95[rank].max(s.class_lat_p95[rank]);
+            }
             if !labels.contains(&s.controller.as_str()) {
                 labels.push(s.controller.as_str());
             }
@@ -464,6 +512,56 @@ impl ReplicaSet {
                 .map_err(|e| anyhow!("reconfigure replica {i}: {e:#}"))?;
         }
         Ok(label)
+    }
+
+    /// Hot-swap the controller on a single replica (the wire op
+    /// `set_policy` with a `replica` field). The building block for
+    /// tuning `class-pinned` partitions independently — see
+    /// [`Self::reconfigure_partitions`]. Returns the replica's new
+    /// controller label.
+    pub fn reconfigure_replica(&self, i: usize, kind: PolicyKind)
+                               -> Result<String> {
+        kind.validate()?;
+        self.checked(i)?
+            .reconfigure(kind)
+            .map_err(|e| anyhow!("reconfigure replica {i}: {e:#}"))
+    }
+
+    /// Tune each `class-pinned` partition's controller independently via
+    /// the per-replica reconfigure fan-out: the reserved interactive
+    /// partition `[0, R)` gets `interactive`, the unreserved rest gets
+    /// `others` (e.g. a tight `per-class-sla(interactive=50)` on the
+    /// latency partition and plain `alg1` on the throughput partition).
+    /// Fails unless the route policy is `class-pinned`. Returns the two
+    /// partitions' new controller labels.
+    pub fn reconfigure_partitions(&self, interactive: PolicyKind,
+                                  others: PolicyKind)
+                                  -> Result<(String, String)> {
+        let RoutePolicy::ClassPinned { reserved } = &self.route else {
+            bail!(
+                "partition tuning needs the class-pinned route policy \
+                 (current: {})",
+                self.route.label()
+            );
+        };
+        let reserved = *reserved;
+        interactive.validate()?;
+        others.validate()?;
+        let mut labels = (String::new(), String::new());
+        for i in 0..self.replicas.len() {
+            let kind = if i < reserved {
+                interactive.clone()
+            } else {
+                others.clone()
+            };
+            let label = self.reconfigure_replica(i, kind)?;
+            if i < reserved {
+                labels.0 = label;
+            } else {
+                labels.1 = label;
+            }
+        }
+        Ok(labels)
     }
 
     /// Whole-set drain: stop admissions on *every* replica first (so the
@@ -601,10 +699,8 @@ mod tests {
         ReplicaLoad {
             waiting,
             running,
-            resuming: 0,
-            in_flight_to: 0,
             kv_free_blocks: free,
-            draining: false,
+            ..ReplicaLoad::default()
         }
     }
 
@@ -665,6 +761,30 @@ mod tests {
     }
 
     #[test]
+    fn least_loaded_tie_breaks_on_per_class_sla_headroom() {
+        let p = RoutePolicy::LeastLoaded;
+        // Equal backlog and KV headroom; replica 1 has more interactive
+        // SLA headroom (lower attributed p95), replica 0 more batch
+        // headroom — the tie-break is class-directed.
+        let mut a = load(1, 1, 10);
+        a.class_p95 = [0.080, 0.0, 0.020];
+        let mut b = load(1, 1, 10);
+        b.class_p95 = [0.030, 0.0, 0.090];
+        let loads = vec![a, b];
+        assert_eq!(p.pick(PriorityClass::Interactive, &loads, 0), Some(1),
+                   "interactive routes to the low-p95 replica");
+        assert_eq!(p.pick(PriorityClass::Batch, &loads, 0), Some(0),
+                   "batch sees the opposite headroom");
+        // No samples for standard on either → falls through to index.
+        assert_eq!(p.pick(PriorityClass::Standard, &loads, 0), Some(0));
+        // Backlog still dominates the headroom tie-break.
+        let mut busy = load(5, 2, 10);
+        busy.class_p95 = [0.001, 0.0, 0.0];
+        let loads = vec![busy, b];
+        assert_eq!(p.pick(PriorityClass::Interactive, &loads, 0), Some(1));
+    }
+
+    #[test]
     fn class_pinned_partitions_and_falls_back() {
         let p = RoutePolicy::ClassPinned { reserved: 1 };
         let mut loads = vec![load(5, 0, 10), load(0, 0, 10), load(1, 0, 10)];
@@ -701,11 +821,19 @@ mod tests {
             cancelled: 1,
             reconfigs: 1,
             draining,
+            class_lat_p50: [0.01, 0.0, 0.0],
+            class_lat_p95: if draining {
+                [0.05, 0.0, 0.2]
+            } else {
+                [0.08, 0.0, 0.1]
+            },
         };
         let a = ReplicaSet::aggregate(&[mk("x", true), mk("x", false)]);
         assert_eq!(a.running, 4);
         assert_eq!(a.waiting, 6);
         assert_eq!(a.waiting_by_class, [2, 4, 0]);
+        assert_eq!(a.class_lat_p95, [0.08, 0.0, 0.2],
+                   "set-level per-class p95 is the worst replica");
         assert_eq!(a.kv_total_blocks, 20);
         assert_eq!(a.b_t, 16);
         assert_eq!(a.finished, 8);
@@ -738,6 +866,67 @@ mod tests {
         }
         assert_eq!(per, [3, 3], "in-flight credit must spread the burst");
         set.shutdown();
+    }
+
+    #[test]
+    fn partition_tuning_reconfigures_each_partition() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(
+            3,
+            RoutePolicy::ClassPinned { reserved: 1 },
+            |_| {
+                ServiceBuilder::new(tiny_real(), cpu_host())
+                    .eta_tokens(100_000)
+            },
+        )
+        .unwrap();
+        let (hot, bulk) = set
+            .reconfigure_partitions(
+                PolicyKind::PerClassSla([Some(0.05), None, None]),
+                PolicyKind::MemoryAware,
+            )
+            .unwrap();
+        assert_eq!(hot, "per-class-sla(interactive=50)");
+        assert_eq!(bulk, "memory-aware(alg1-linear)");
+        // Snapshots republish once per loop iteration; poll for the
+        // labels to land.
+        let controller_is = |i: usize, want: &str| {
+            let deadline = std::time::Instant::now()
+                + std::time::Duration::from_secs(5);
+            loop {
+                let got = set.replica(i).snapshot().controller;
+                if got == want {
+                    return;
+                }
+                assert!(std::time::Instant::now() < deadline,
+                        "replica {i} stuck on '{got}', want '{want}'");
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        };
+        controller_is(0, &hot);
+        controller_is(1, &bulk);
+        controller_is(2, &bulk);
+        // Single-replica override also works…
+        let l = set
+            .reconfigure_replica(2, PolicyKind::StaticFixed { batch: 4 })
+            .unwrap();
+        assert_eq!(l, "static-fixed:4");
+        controller_is(2, "static-fixed:4");
+        controller_is(1, &bulk);
+        // …and partition tuning refuses without class-pinned routing.
+        let rr = ReplicaSet::build(2, RoutePolicy::RoundRobin, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        assert!(rr
+            .reconfigure_partitions(
+                PolicyKind::MemoryAware,
+                PolicyKind::MemoryAware,
+            )
+            .is_err());
+        set.shutdown();
+        rr.shutdown();
     }
 
     #[test]
