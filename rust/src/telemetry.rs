@@ -5,9 +5,26 @@
 //! `E[l_out]`, their variances — Welford over observed requests), the
 //! recent decode latency `τ̄` and batch size `b̄` Algorithm 2 needs
 //! (sliding windows), and the memory gauge.
+//!
+//! Decode latency is tracked both globally and **attributed per priority
+//! class**: every decode step's latency lands in the window of each class
+//! with at least one request in that step's decode batch
+//! ([`Telemetry::record_decode_step_classed`]). The per-class windows feed
+//! the per-class SLA feedback loops
+//! ([`crate::batching::PerClassSlaPolicy`]) through
+//! [`Observation::decode_latency_by_class`], and the per-class percentile
+//! queries ([`Telemetry::decode_latency_class_p`]) feed the replica
+//! router's per-class SLA budgets and the v2 `stats` op. Only decode
+//! steps are attributed — cancelled or shed requests never contribute a
+//! latency sample, so a class's window reflects work it actually ran.
 
 use crate::request::PriorityClass;
-use crate::util::stats::{SlidingWindow, Welford};
+use crate::util::stats::{RingLog, SlidingWindow, Welford};
+
+/// Entries kept per class in the bounded latency traces on the serve
+/// path; experiment drivers lift the cap via
+/// [`Telemetry::retain_full_traces`].
+const CLASS_LAT_CAP: usize = 4096;
 
 /// Snapshot handed to a [`crate::batching::Controller`] each decision.
 #[derive(Debug, Clone)]
@@ -42,6 +59,13 @@ pub struct Observation {
     /// Waiting-queue depth per priority class, indexed by
     /// [`PriorityClass::rank`] (0 = Interactive).
     pub waiting_by_class: [u32; PriorityClass::COUNT],
+    /// Recent mean decode latency attributed per class (seconds), indexed
+    /// by [`PriorityClass::rank`]; `None` until the class has appeared in
+    /// a decode batch — and again once it has been absent from a full
+    /// latency window of decode steps (a stale mean must not keep
+    /// driving the class's SLA loop after its traffic left). A step's
+    /// latency is attributed to every class present in its decode batch.
+    pub decode_latency_by_class: [Option<f64>; PriorityClass::COUNT],
 }
 
 impl Observation {
@@ -67,6 +91,7 @@ impl Observation {
             pending_prefill,
             waiting: 10,
             waiting_by_class: [0, 10, 0],
+            decode_latency_by_class: [None; PriorityClass::COUNT],
         }
     }
 }
@@ -85,6 +110,24 @@ pub struct Telemetry {
     min_samples: u64,
     decode_lat: SlidingWindow,
     decode_batch: SlidingWindow,
+    /// Per-class decode-latency windows (O(1) running mean), indexed by
+    /// [`PriorityClass::rank`]. A step's latency lands in the window of
+    /// every class present in its decode batch.
+    class_lat: [SlidingWindow; PriorityClass::COUNT],
+    /// Per-class bounded latency traces (percentiles / SLA-violation
+    /// accounting); experiment drivers lift the caps via
+    /// [`Self::retain_full_traces`].
+    class_lat_log: [RingLog<f64>; PriorityClass::COUNT],
+    /// Classed decode steps seen in total, and per class the count at
+    /// its last attribution — the staleness gauge: a class absent from
+    /// the last `latency_window` decode steps reports `None` on
+    /// [`Observation::decode_latency_by_class`] instead of a frozen
+    /// window mean, so a per-class SLA loop cannot keep ratcheting the
+    /// batch down on the last latencies of traffic that has left.
+    classed_steps: u64,
+    class_last_seen: [u64; PriorityClass::COUNT],
+    /// Staleness horizon in decode steps (== the latency window).
+    class_stale_after: u64,
     /// Memory-utilization time series (t, used, capacity) for Fig. 2.
     pub mem_timeline: Vec<(f64, u64, u64)>,
     record_timeline: bool,
@@ -102,8 +145,27 @@ impl Telemetry {
             min_samples: 8,
             decode_lat: SlidingWindow::new(latency_window),
             decode_batch: SlidingWindow::new(latency_window),
+            class_lat: std::array::from_fn(|_| {
+                SlidingWindow::new(latency_window)
+            }),
+            class_lat_log: std::array::from_fn(|_| {
+                RingLog::bounded(CLASS_LAT_CAP)
+            }),
+            classed_steps: 0,
+            class_last_seen: [0; PriorityClass::COUNT],
+            class_stale_after: latency_window.max(1) as u64,
             mem_timeline: Vec::new(),
             record_timeline: false,
+        }
+    }
+
+    /// Lift the caps on the per-class latency traces so a full-run record
+    /// is retained — experiment drivers call this (via
+    /// [`crate::scheduler::Scheduler::retain_full_traces`]) for exact
+    /// per-class percentiles; the serve path keeps the bounded rings.
+    pub fn retain_full_traces(&mut self) {
+        for log in &mut self.class_lat_log {
+            log.set_unbounded();
         }
     }
 
@@ -128,10 +190,40 @@ impl Telemetry {
         self.out_len.push(len as f64);
     }
 
-    /// Observe one decode step: latency + batch size.
+    /// Observe one decode step: latency + batch size (global windows
+    /// only — the pre-attribution path kept for callers without class
+    /// composition, e.g. the preserved legacy benchmark loop).
     pub fn record_decode_step(&mut self, latency: f64, batch: u32) {
         self.decode_lat.push(latency);
         self.decode_batch.push(batch as f64);
+    }
+
+    /// Observe one decode step with its class composition: the global
+    /// windows advance as in [`Self::record_decode_step`], and the
+    /// latency is additionally attributed to every class with at least
+    /// one request in the batch (`by_class` counts indexed by
+    /// [`PriorityClass::rank`]). O(1) per class; no allocation.
+    pub fn record_decode_step_classed(&mut self, latency: f64, batch: u32,
+                                      by_class: [u32; PriorityClass::COUNT]) {
+        self.record_decode_step(latency, batch);
+        self.classed_steps += 1;
+        for (rank, &n) in by_class.iter().enumerate() {
+            if n > 0 {
+                self.class_lat[rank].push(latency);
+                self.class_lat_log[rank].push(latency);
+                self.class_last_seen[rank] = self.classed_steps;
+            }
+        }
+    }
+
+    /// Is the class's latency window live — any samples, and attributed
+    /// within the last `latency_window` decode steps? A stale window
+    /// (the class left the system) must not keep driving its SLA loop.
+    fn class_window_live(&self, rank: usize) -> bool {
+        self.class_last_seen[rank] != 0
+            && !self.class_lat[rank].is_empty()
+            && self.classed_steps - self.class_last_seen[rank]
+                < self.class_stale_after
     }
 
     pub fn record_memory(&mut self, now: f64, used: u64, cap: u64) {
@@ -200,11 +292,36 @@ impl Telemetry {
             pending_prefill,
             waiting,
             waiting_by_class,
+            decode_latency_by_class: std::array::from_fn(|rank| {
+                if self.class_window_live(rank) {
+                    Some(self.class_lat[rank].mean())
+                } else {
+                    None
+                }
+            }),
         }
     }
 
     pub fn decode_latency_p(&self, p: f64) -> f64 {
         self.decode_lat.percentile(p)
+    }
+
+    /// Percentile of the recent decode latencies attributed to the class
+    /// with [`PriorityClass::rank`] `rank` (0.0 before any sample) — the
+    /// per-class p50/p95 surfaced in [`ServiceSnapshot`] and the replica
+    /// router's per-class SLA headroom signal.
+    ///
+    /// [`ServiceSnapshot`]: crate::service::ServiceSnapshot
+    pub fn decode_latency_class_p(&self, rank: usize, p: f64) -> f64 {
+        self.class_lat[rank].percentile(p)
+    }
+
+    /// The bounded (or, after [`Self::retain_full_traces`], full) trace
+    /// of decode latencies attributed to class `rank` — the per-class SLA
+    /// attainment record consumed by
+    /// [`RunMetrics`](crate::metrics::RunMetrics).
+    pub fn class_latencies(&self, rank: usize) -> &RingLog<f64> {
+        &self.class_lat_log[rank]
     }
 }
 
@@ -243,6 +360,84 @@ mod tests {
         assert_eq!(obs.pending_prefill, 3);
         assert_eq!(obs.waiting, 5, "total = Σ per-class");
         assert_eq!(obs.waiting_by_class, [1, 4, 0]);
+        assert_eq!(obs.decode_latency_by_class, [None; 3],
+                   "class-blind records attribute nothing");
+    }
+
+    #[test]
+    fn class_attribution_lands_in_the_right_window() {
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        // Step 1: interactive + batch present, standard absent.
+        t.record_decode_step_classed(0.05, 8, [2, 0, 6]);
+        // Step 2: batch only.
+        t.record_decode_step_classed(0.07, 8, [0, 0, 8]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert_eq!(obs.decode_latency_by_class[0], Some(0.05));
+        assert_eq!(obs.decode_latency_by_class[1], None,
+                   "absent class gets no sample");
+        assert!((obs.decode_latency_by_class[2].unwrap() - 0.06).abs()
+                    < 1e-12);
+        // Global window saw both steps regardless of composition.
+        assert!((obs.recent_decode_latency.unwrap() - 0.06).abs() < 1e-12);
+        // Per-class percentiles and traces line up with the attribution.
+        assert_eq!(t.decode_latency_class_p(0, 100.0), 0.05);
+        assert_eq!(t.decode_latency_class_p(1, 100.0), 0.0);
+        assert_eq!(t.decode_latency_class_p(2, 100.0), 0.07);
+        assert_eq!(t.class_latencies(0).len(), 1);
+        assert_eq!(t.class_latencies(1).len(), 0);
+        assert_eq!(t.class_latencies(2).to_vec(), vec![0.05, 0.07]);
+    }
+
+    #[test]
+    fn class_traces_bounded_until_lifted() {
+        // Serve-path default: per-class traces cap at 4096 entries.
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        for i in 0..5000 {
+            t.record_decode_step_classed(i as f64, 1, [1, 0, 0]);
+        }
+        assert_eq!(t.class_latencies(0).len(), 4096,
+                   "serve path keeps the bounded ring");
+        assert_eq!(t.class_latencies(0).dropped(), 904);
+        // Experiment mode lifts the cap.
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        t.retain_full_traces();
+        for i in 0..5000 {
+            t.record_decode_step_classed(i as f64, 1, [1, 0, 0]);
+        }
+        assert_eq!(t.class_latencies(0).len(), 5000,
+                   "experiment mode keeps the full per-class record");
+        assert_eq!(t.class_latencies(0).dropped(), 0);
+    }
+
+    #[test]
+    fn stale_class_window_stops_reporting() {
+        // latency_window = 4 → a class absent from 4 consecutive decode
+        // steps goes back to None: its frozen mean must not keep
+        // driving a per-class SLA loop after the traffic left.
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        t.record_decode_step_classed(0.2, 4, [1, 0, 1]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert_eq!(obs.decode_latency_by_class[0], Some(0.2));
+        // Three batch-only steps: interactive still within the horizon.
+        for _ in 0..3 {
+            t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
+        }
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert_eq!(obs.decode_latency_by_class[0], Some(0.2),
+                   "brief absence keeps the window live");
+        // A fourth absent step crosses the staleness horizon.
+        t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert_eq!(obs.decode_latency_by_class[0], None,
+                   "stale window stops reporting");
+        assert!(obs.decode_latency_by_class[2].is_some(),
+                "the live class keeps its signal");
+        // The percentile record is unaffected (history, not freshness).
+        assert_eq!(t.decode_latency_class_p(0, 100.0), 0.2);
+        // Returning traffic revives the window immediately.
+        t.record_decode_step_classed(0.05, 4, [2, 0, 2]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert!(obs.decode_latency_by_class[0].is_some());
     }
 
     #[test]
