@@ -567,6 +567,325 @@ impl SchedulerConfig {
     }
 }
 
+/// How one fleet replica differs from the deployment baseline —
+/// heterogeneous capability instead of a clone of one spec. The scales
+/// are multipliers on quantities derived from the anchoring
+/// [`ModelSpec`]/[`HardwareSpec`] pair, so a fleet stays described by
+/// one model + one node type plus a profile per replica.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaProfile {
+    /// Short name surfaced in snapshots, `stats`, and directive logs.
+    pub name: String,
+    /// KV block capacity: multiplies the hardware-derived η token
+    /// budget (> 1 = more KV headroom).
+    pub kv_scale: f64,
+    /// Per-token decode latency curve: divides the decode-path step time
+    /// (weights pass + decode compute + KV traffic); > 1 = faster.
+    pub decode_speed: f64,
+    /// Prefill throughput: divides prefill compute time; > 1 = faster.
+    pub prefill_speed: f64,
+    /// Cost units per replica-second — the denominator of the fleet
+    /// cost/SLA frontier.
+    pub cost_unit: f64,
+}
+
+impl ReplicaProfile {
+    /// The neutral profile: timing and capacity identical to the bare
+    /// model+hardware pair, cost 1/replica-second.
+    pub fn baseline() -> Self {
+        ReplicaProfile {
+            name: "baseline".into(),
+            kv_scale: 1.0,
+            decode_speed: 1.0,
+            prefill_speed: 1.0,
+            cost_unit: 1.0,
+        }
+    }
+
+    /// All scales neutral — the engine keeps its exact unscaled timing
+    /// path in this case (bit-identical to a profile-free build).
+    pub fn is_neutral(&self) -> bool {
+        self.kv_scale == 1.0
+            && self.decode_speed == 1.0
+            && self.prefill_speed == 1.0
+    }
+
+    /// Parse a preset name (`turbo`, `big-kv`, …; see
+    /// [`presets::profile_by_name`]) or a full spec of the form
+    /// `name:kv=2,decode=0.9,prefill=0.9,cost=1.4` (unnamed keys keep
+    /// their baseline value of 1).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let Some((name, rest)) = s.split_once(':') else {
+            return presets::profile_by_name(s).with_context(|| {
+                format!("unknown replica profile '{s}' (want a preset \
+                         name or name:kv=..,decode=..,prefill=..,cost=..)")
+            });
+        };
+        let mut p = ReplicaProfile {
+            name: name.trim().to_string(),
+            ..ReplicaProfile::baseline()
+        };
+        if p.name.is_empty() {
+            bail!("replica profile needs a name before ':' in '{s}'");
+        }
+        for part in rest.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("want key=value in '{part}'"))?;
+            let v: f64 = v
+                .trim()
+                .parse()
+                .with_context(|| format!("bad profile value in '{part}'"))?;
+            match k.trim() {
+                "kv" => p.kv_scale = v,
+                "decode" => p.decode_speed = v,
+                "prefill" => p.prefill_speed = v,
+                "cost" => p.cost_unit = v,
+                other => bail!("unknown profile key '{other}' in '{s}'"),
+            }
+        }
+        p.validate()?;
+        Ok(p)
+    }
+
+    /// Display name (what snapshots and logs show).
+    pub fn label(&self) -> String {
+        self.name.clone()
+    }
+
+    /// Canonical full spec; round-trips through [`Self::parse`].
+    pub fn spec(&self) -> String {
+        format!(
+            "{}:kv={},decode={},prefill={},cost={}",
+            self.name, self.kv_scale, self.decode_speed,
+            self.prefill_speed, self.cost_unit
+        )
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("replica profile needs a non-empty name");
+        }
+        for (what, v) in [
+            ("kv_scale", self.kv_scale),
+            ("decode_speed", self.decode_speed),
+            ("prefill_speed", self.prefill_speed),
+            ("cost_unit", self.cost_unit),
+        ] {
+            if !v.is_finite() || v <= 0.0 {
+                bail!("profile '{}': {what}={v} must be positive",
+                      self.name);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Knobs of the SLA-driven fleet autoscaler
+/// (`service::fleet::SlaAutoscaler`). The spawn/retire backlog bands
+/// form a hysteresis gap, and actions additionally require a dwell (the
+/// signal persisting over consecutive decisions) and respect a cooldown,
+/// so a load step produces one action rather than a flap.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetConfig {
+    /// Waiting+resuming backlog per live replica that arms scale-up.
+    pub spawn_backlog: f64,
+    /// Backlog per live replica under which scale-down arms; must sit
+    /// strictly below `spawn_backlog` (the hysteresis band).
+    pub retire_backlog: f64,
+    /// Aggregate KV-block utilization that arms scale-up regardless of
+    /// backlog.
+    pub spawn_kv_pressure: f64,
+    /// Per-class live TTFT p95 targets (seconds, indexed by
+    /// [`PriorityClass::rank`]); `None` = unconstrained. Scale-up arms
+    /// when a constrained class's live TTFT p95 exceeds
+    /// `spawn_sla_frac × target`; scale-down requires every constrained
+    /// class under `retire_sla_frac × target`.
+    pub ttft_targets: [Option<f64>; PriorityClass::COUNT],
+    pub spawn_sla_frac: f64,
+    pub retire_sla_frac: f64,
+    /// Consecutive decisions a signal must persist before acting.
+    pub dwell_decisions: u32,
+    /// Seconds between autoscaler decisions.
+    pub decide_interval: f64,
+    /// Seconds after any spawn/retire before the next action may fire.
+    pub cooldown: f64,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            spawn_backlog: 12.0,
+            retire_backlog: 2.0,
+            spawn_kv_pressure: 0.85,
+            ttft_targets: [None; PriorityClass::COUNT],
+            spawn_sla_frac: 0.9,
+            retire_sla_frac: 0.5,
+            dwell_decisions: 2,
+            decide_interval: 0.25,
+            cooldown: 1.0,
+            min_replicas: 1,
+            max_replicas: 4,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0 <= self.retire_backlog
+            && self.retire_backlog < self.spawn_backlog)
+        {
+            bail!(
+                "fleet backlog bands need 0 <= retire ({}) < spawn ({})",
+                self.retire_backlog, self.spawn_backlog
+            );
+        }
+        if !(0.0 < self.spawn_kv_pressure && self.spawn_kv_pressure <= 1.0) {
+            bail!("spawn_kv_pressure must be in (0,1]");
+        }
+        if !(0.0 < self.retire_sla_frac
+            && self.retire_sla_frac < self.spawn_sla_frac
+            && self.spawn_sla_frac <= 1.0)
+        {
+            bail!(
+                "fleet SLA fractions need 0 < retire ({}) < spawn ({}) <= 1",
+                self.retire_sla_frac, self.spawn_sla_frac
+            );
+        }
+        for (c, t) in PriorityClass::ALL.iter().zip(&self.ttft_targets) {
+            if let Some(d) = t {
+                if !d.is_finite() || *d <= 0.0 {
+                    bail!("fleet TTFT target for {} must be positive",
+                          c.label());
+                }
+            }
+        }
+        if self.dwell_decisions == 0 {
+            bail!("dwell_decisions must be >= 1");
+        }
+        if self.decide_interval <= 0.0 || self.cooldown < 0.0 {
+            bail!("decide_interval must be positive, cooldown >= 0");
+        }
+        if self.min_replicas == 0 || self.min_replicas > self.max_replicas {
+            bail!("need 1 <= min_replicas <= max_replicas");
+        }
+        Ok(())
+    }
+}
+
+/// Which fleet controller governs scaling — the fleet-level analogue of
+/// [`PolicyKind`], parsed from the `set_fleet_policy` admin op and the
+/// `dynabatch fleet` CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetPolicyKind {
+    /// No automatic scaling: only manual `scale` ops move the fleet.
+    Manual,
+    /// The hysteretic SLA-driven autoscaler.
+    Autoscale(FleetConfig),
+}
+
+impl FleetPolicyKind {
+    /// Parse `manual`, `autoscale` (defaults), or
+    /// `autoscale(spawn=12,retire=2,kv=0.85,dwell=2,interval=0.25,
+    /// cool=1,min=1,max=4,sla-up=0.9,sla-down=0.5,
+    /// ttft-interactive=250)` — any key subset over the defaults; TTFT
+    /// targets are per class, in milliseconds, `none` to clear.
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s == "manual" {
+            return Ok(FleetPolicyKind::Manual);
+        }
+        if s == "autoscale" {
+            return Ok(FleetPolicyKind::Autoscale(FleetConfig::default()));
+        }
+        let Some(rest) = s.strip_prefix("autoscale(") else {
+            bail!("unknown fleet policy '{s}' (want manual or \
+                   autoscale(...))");
+        };
+        let inner = rest
+            .strip_suffix(')')
+            .with_context(|| format!("unbalanced parens in '{s}'"))?;
+        let mut cfg = FleetConfig::default();
+        for part in inner.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = part
+                .split_once('=')
+                .with_context(|| format!("want key=value in '{part}'"))?;
+            let v = v.trim();
+            let num = |what: &str| -> Result<f64> {
+                v.parse::<f64>().with_context(|| {
+                    format!("bad fleet {what} value '{v}'")
+                })
+            };
+            match k.trim() {
+                "spawn" => cfg.spawn_backlog = num("spawn")?,
+                "retire" => cfg.retire_backlog = num("retire")?,
+                "kv" => cfg.spawn_kv_pressure = num("kv")?,
+                "dwell" => cfg.dwell_decisions = num("dwell")? as u32,
+                "interval" => cfg.decide_interval = num("interval")?,
+                "cool" => cfg.cooldown = num("cool")?,
+                "min" => cfg.min_replicas = num("min")? as usize,
+                "max" => cfg.max_replicas = num("max")? as usize,
+                "sla-up" => cfg.spawn_sla_frac = num("sla-up")?,
+                "sla-down" => cfg.retire_sla_frac = num("sla-down")?,
+                key => {
+                    let Some(class) = key.strip_prefix("ttft-") else {
+                        bail!("unknown fleet policy key '{key}' in '{s}'");
+                    };
+                    let rank = PriorityClass::parse(class)?.rank();
+                    cfg.ttft_targets[rank] =
+                        if v.eq_ignore_ascii_case("none") {
+                            None
+                        } else {
+                            Some(num("ttft target (ms)")? / 1e3)
+                        };
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(FleetPolicyKind::Autoscale(cfg))
+    }
+
+    /// Canonical label; round-trips through [`Self::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            FleetPolicyKind::Manual => "manual".into(),
+            FleetPolicyKind::Autoscale(c) => {
+                let mut parts = vec![
+                    format!("spawn={}", c.spawn_backlog),
+                    format!("retire={}", c.retire_backlog),
+                    format!("kv={}", c.spawn_kv_pressure),
+                    format!("dwell={}", c.dwell_decisions),
+                    format!("interval={}", c.decide_interval),
+                    format!("cool={}", c.cooldown),
+                    format!("min={}", c.min_replicas),
+                    format!("max={}", c.max_replicas),
+                    format!("sla-up={}", c.spawn_sla_frac),
+                    format!("sla-down={}", c.retire_sla_frac),
+                ];
+                for (cl, t) in
+                    PriorityClass::ALL.iter().zip(&c.ttft_targets)
+                {
+                    if let Some(d) = t {
+                        parts.push(format!("ttft-{}={}", cl.label(),
+                                           (d * 1e6).round() / 1e3));
+                    }
+                }
+                format!("autoscale({})", parts.join(","))
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            FleetPolicyKind::Manual => Ok(()),
+            FleetPolicyKind::Autoscale(c) => c.validate(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -776,6 +1095,90 @@ mod tests {
         assert!(c.validate().is_err());
         c.swap_low_water = 0.6;
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn replica_profile_parse_label_and_validation() {
+        // Preset names resolve; full specs round-trip.
+        let p = ReplicaProfile::parse("turbo").unwrap();
+        assert_eq!(p.label(), "turbo");
+        assert_eq!(ReplicaProfile::parse(&p.spec()).unwrap(), p);
+        let custom =
+            ReplicaProfile::parse("mid:kv=1.5,decode=1.2,cost=1.3").unwrap();
+        assert_eq!(custom.kv_scale, 1.5);
+        assert_eq!(custom.decode_speed, 1.2);
+        assert_eq!(custom.prefill_speed, 1.0, "unnamed keys stay baseline");
+        assert_eq!(custom.cost_unit, 1.3);
+        assert_eq!(ReplicaProfile::parse(&custom.spec()).unwrap(), custom);
+        // Malformed shapes are errors, not panics.
+        assert!(ReplicaProfile::parse("nope").is_err());
+        assert!(ReplicaProfile::parse(":kv=1").is_err());
+        assert!(ReplicaProfile::parse("x:bogus=1").is_err());
+        assert!(ReplicaProfile::parse("x:kv").is_err());
+        assert!(ReplicaProfile::parse("x:kv=-1").is_err());
+        assert!(ReplicaProfile::parse("x:decode=0").is_err());
+    }
+
+    #[test]
+    fn fleet_config_validation() {
+        let c = FleetConfig::default();
+        c.validate().unwrap();
+        let mut c = FleetConfig::default();
+        c.retire_backlog = c.spawn_backlog; // band collapsed
+        assert!(c.validate().is_err());
+        let mut c = FleetConfig::default();
+        c.spawn_kv_pressure = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = FleetConfig::default();
+        c.retire_sla_frac = 0.95; // >= spawn frac
+        assert!(c.validate().is_err());
+        let mut c = FleetConfig::default();
+        c.ttft_targets[0] = Some(-0.1);
+        assert!(c.validate().is_err());
+        let mut c = FleetConfig::default();
+        c.dwell_decisions = 0;
+        assert!(c.validate().is_err());
+        let mut c = FleetConfig::default();
+        c.min_replicas = 5; // > max
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_policy_parse_and_label_round_trip() {
+        assert_eq!(FleetPolicyKind::parse("manual").unwrap(),
+                   FleetPolicyKind::Manual);
+        assert_eq!(
+            FleetPolicyKind::parse("autoscale").unwrap(),
+            FleetPolicyKind::Autoscale(FleetConfig::default())
+        );
+        let p = FleetPolicyKind::parse(
+            "autoscale(spawn=20,retire=3,max=6,ttft-interactive=250)",
+        )
+        .unwrap();
+        let FleetPolicyKind::Autoscale(c) = &p else { panic!() };
+        assert_eq!(c.spawn_backlog, 20.0);
+        assert_eq!(c.retire_backlog, 3.0);
+        assert_eq!(c.max_replicas, 6);
+        assert_eq!(c.ttft_targets, [Some(0.25), None, None]);
+        assert_eq!(c.dwell_decisions,
+                   FleetConfig::default().dwell_decisions,
+                   "unnamed keys keep defaults");
+        // Labels round-trip, including the TTFT target in ms.
+        assert_eq!(FleetPolicyKind::parse(&p.label()).unwrap(), p);
+        assert_eq!(
+            FleetPolicyKind::parse(&FleetPolicyKind::Manual.label())
+                .unwrap(),
+            FleetPolicyKind::Manual
+        );
+        // Malformed shapes are errors, not panics.
+        assert!(FleetPolicyKind::parse("bogus").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(spawn=20").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(spawn)").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(spawn=x)").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(bogus=1)").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(ttft-vip=9)").is_err());
+        assert!(FleetPolicyKind::parse("autoscale(retire=20)").is_err(),
+                "validation runs on the parsed config");
     }
 
     #[test]

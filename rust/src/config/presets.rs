@@ -9,7 +9,7 @@
 //! the smallest tensor-parallel group whose KV budget clears a usable
 //! floor. See DESIGN.md "Substitutions".
 
-use super::{HardwareSpec, ModelSpec};
+use super::{HardwareSpec, ModelSpec, ReplicaProfile};
 
 const GIB: u64 = 1 << 30;
 
@@ -184,6 +184,41 @@ pub fn node_for(model: &ModelSpec) -> HardwareSpec {
     make(64)
 }
 
+/// The replica-profile presets the fleet layer ships with. Scales are
+/// relative to the anchoring model+node pair: `turbo` trades KV headroom
+/// for per-token speed (higher-bin silicon), `big-kv` the reverse
+/// (memory-heavy node), `economy` is slower but much cheaper per second.
+pub fn fleet_profiles() -> Vec<ReplicaProfile> {
+    vec![
+        ReplicaProfile::baseline(),
+        ReplicaProfile {
+            name: "turbo".into(),
+            kv_scale: 0.75,
+            decode_speed: 1.5,
+            prefill_speed: 1.3,
+            cost_unit: 1.5,
+        },
+        ReplicaProfile {
+            name: "big-kv".into(),
+            kv_scale: 2.0,
+            decode_speed: 0.9,
+            prefill_speed: 0.9,
+            cost_unit: 1.4,
+        },
+        ReplicaProfile {
+            name: "economy".into(),
+            kv_scale: 0.75,
+            decode_speed: 0.7,
+            prefill_speed: 0.7,
+            cost_unit: 0.55,
+        },
+    ]
+}
+
+pub fn profile_by_name(name: &str) -> Option<ReplicaProfile> {
+    fleet_profiles().into_iter().find(|p| p.name == name)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -241,5 +276,16 @@ mod tests {
     fn model_lookup() {
         assert!(model_by_name("llama-65b").is_some());
         assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn profile_presets_validate_and_look_up() {
+        for p in fleet_profiles() {
+            p.validate().unwrap();
+        }
+        assert!(profile_by_name("turbo").is_some());
+        assert!(profile_by_name("nope").is_none());
+        assert!(ReplicaProfile::baseline().is_neutral());
+        assert!(!profile_by_name("economy").unwrap().is_neutral());
     }
 }

@@ -8,19 +8,29 @@
 //! dispatched by a [`RoutePolicy`], reporting per-replica and aggregate
 //! [`RunMetrics`] so router overhead and scaling regress deterministically.
 //!
+//! On top of the replica co-simulation sits the fleet co-simulation
+//! ([`run_fleet_sim`], behind `dynabatch fleet`): heterogeneous
+//! [`ReplicaProfile`]s, a [`FleetController`](crate::service::fleet)
+//! ticked in virtual time that spawns and retires replicas mid-run, and
+//! cost accounting in cost units (replica-seconds × profile cost) —
+//! swept into a deterministic cost/SLA frontier by [`fleet_frontier`].
+//!
 //! This is the offline twin of the [`crate::service`] layer: both drive
 //! the same priority-aware scheduler, so requests may carry classes and
 //! deadlines here too. Deadlines on this path are *absolute* scheduler
 //! clock values (the service converts relative deadlines at acceptance);
 //! shed/cancel/reject counts surface in [`RunMetrics`].
 
-use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
+use crate::config::{FleetPolicyKind, HardwareSpec, ModelSpec, PolicyKind,
+                    ReplicaProfile, SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
-use crate::metrics::{ReplicaSetMetrics, RunMetrics};
+use crate::metrics::{FleetMetrics, ReplicaSetMetrics, RunMetrics};
 use crate::request::{PriorityClass, Request};
 use crate::scheduler::{SchedStats, Scheduler};
-use crate::service::replica::{ReplicaLoad, RoutePolicy};
+use crate::service::fleet::{build_fleet_controller, FleetController,
+                            FleetDirective, FleetObservation};
+use crate::service::replica::{ReplicaLoad, RouteKey, RoutePolicy};
 use crate::sim::{Clock, VirtualClock};
 use crate::util::json::Json;
 use crate::workload::{Arrival, Workload};
@@ -218,12 +228,18 @@ impl SimReplica {
             // published-snapshot lag to correct for.
             in_flight_to: 0,
             kv_free_blocks: self.sched.kv.free_blocks(),
-            // Same per-class SLA headroom signal the live router reads
+            kv_total_blocks: self.sched.kv.total_blocks(),
+            // Same per-class SLA headroom signals the live router reads
             // off replica snapshots.
             class_p95: std::array::from_fn(|rank| {
                 self.sched.telemetry.decode_latency_class_p(rank, 95.0)
             }),
-            draining: false,
+            class_ttft_p95: std::array::from_fn(|rank| {
+                self.sched.telemetry.ttft_class_p(rank, 95.0)
+            }),
+            // decode_speed / cost_unit keep their neutral defaults; the
+            // fleet sim overlays its per-replica profile on top.
+            ..ReplicaLoad::default()
         }
     }
 }
@@ -234,11 +250,11 @@ impl SimReplica {
 fn route_one(reps: &mut [SimReplica], requests: &[Request],
              next: &mut usize, route: &RoutePolicy, rr: &mut usize) {
     let loads: Vec<ReplicaLoad> = reps.iter().map(|r| r.load()).collect();
-    let i = route
-        .pick(requests[*next].class, &loads, *rr)
-        .unwrap_or(0); // sim replicas never drain
+    let req = &requests[*next];
+    let key = RouteKey::new(req.class, req.prompt_len as usize);
+    let i = route.pick(key, &loads, *rr).unwrap_or(0); // never drains
     *rr += 1;
-    let mut req = requests[*next].clone();
+    let mut req = req.clone();
     req.arrived_at = req.arrived_at.max(0.0);
     reps[i].clock.sleep_until(req.arrived_at);
     reps[i].sched.submit(req);
@@ -351,17 +367,27 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
         }
     }
 
+    let sims: Vec<&SimReplica> = reps.iter().collect();
+    Ok(fold_replica_set(&sims, scenario, route.label()))
+}
+
+/// Fold N finished simulated replicas into per-replica [`RunMetrics`]
+/// plus the set aggregate (tokens summed, makespan = the slowest
+/// replica, percentiles over the concatenated records) — shared by
+/// [`run_replica_sim`] and [`run_fleet_sim`].
+fn fold_replica_set(reps: &[&SimReplica], scenario: &SimScenario,
+                    route_label: String) -> ReplicaSetMetrics {
     let targets = scenario.sched.policy.sla_targets(scenario.sched.d_sla);
     let mut all_finished: Vec<Request> = Vec::new();
     let mut all_lat: Vec<f64> = Vec::new();
     let mut all_class_lat: Vec<Vec<f64>> =
         vec![Vec::new(); PriorityClass::COUNT];
     let mut agg_stats = SchedStats::default();
-    let mut per_replica = Vec::with_capacity(n_replicas);
+    let mut per_replica = Vec::with_capacity(reps.len());
     let mut agg_makespan = 0.0f64;
     let mut util_sum = 0.0f64;
     let mut util_n = 0usize;
-    for r in &reps {
+    for r in reps {
         let makespan = r.clock.now();
         agg_makespan = agg_makespan.max(makespan);
         let lat = r.sched.decode_latencies.to_vec();
@@ -402,12 +428,481 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
     );
     aggregate.attach_class_stats(all_class_lat, &all_finished, &targets,
                                  scenario.sched.eps_d);
-    Ok(ReplicaSetMetrics {
-        route_policy: route.label(),
-        n_replicas,
+    ReplicaSetMetrics {
+        route_policy: route_label,
+        n_replicas: reps.len(),
         per_replica,
         aggregate,
+    }
+}
+
+/// A fleet co-simulation scenario: the base scenario plus the fleet
+/// composition and control policy (see [`run_fleet_sim`]).
+#[derive(Debug, Clone)]
+pub struct FleetScenario {
+    pub base: SimScenario,
+    /// Profiles of the replicas live at t = 0.
+    pub initial: Vec<ReplicaProfile>,
+    /// Profiles the controller may spawn mid-run (the provisioning
+    /// catalogue). An autoscaler spawns the cheapest of pool+initial;
+    /// a spawn directive for a name not in the pool falls back to the
+    /// directive's own profile.
+    pub pool: Vec<ReplicaProfile>,
+    pub route: RoutePolicy,
+    pub policy: FleetPolicyKind,
+    /// Traffic mix for [`assign_classes`], `[interactive, standard,
+    /// batch]`.
+    pub mix: [f64; PriorityClass::COUNT],
+}
+
+/// One profiled replica of the fleet co-simulation.
+struct FleetReplica {
+    rep: SimReplica,
+    profile: ReplicaProfile,
+    spawned_at: f64,
+    /// Set when the controller retired it: it stops taking new routes
+    /// and drains its in-flight work to completion (zero-loss).
+    retired_at: Option<f64>,
+}
+
+impl FleetReplica {
+    fn load(&self) -> ReplicaLoad {
+        let mut l = self.rep.load();
+        l.decode_speed = self.profile.decode_speed;
+        l.cost_unit = self.profile.cost_unit;
+        l.draining = self.retired_at.is_some();
+        l
+    }
+}
+
+/// Build one profiled sim replica at virtual time `at`: η scaled by the
+/// profile's `kv_scale` and the engine timing by its speed factors —
+/// the same deployment rules [`crate::service::ServiceBuilder`] applies
+/// on the live path. A neutral profile takes the exact profile-free
+/// code path (bit-identical to [`run_replica_sim`]'s replicas).
+fn mk_fleet_replica(scenario: &SimScenario, profile: &ReplicaProfile,
+                    at: f64) -> FleetReplica {
+    let eta = ((scenario.eta_tokens() as f64) * profile.kv_scale).round()
+        as u64;
+    let mut sched = Scheduler::new(
+        scenario.sched.clone(),
+        eta,
+        scenario.swap_tokens,
+        scenario.workload.prompt.mean(),
+        scenario.workload.output.mean(),
+    );
+    sched.retain_full_traces();
+    sched.telemetry.set_prior_variances(
+        scenario.workload.prompt.variance(),
+        scenario.workload.output.variance(),
+    );
+    let engine = if profile.is_neutral() {
+        SimEngine::new(&scenario.model, &scenario.hardware)
+    } else {
+        SimEngine::with_profile(&scenario.model, &scenario.hardware,
+                                profile)
+    };
+    let mut clock = VirtualClock::new();
+    clock.sleep_until(at);
+    FleetReplica {
+        rep: SimReplica { sched, engine, clock },
+        profile: profile.clone(),
+        spawned_at: at,
+        retired_at: None,
+    }
+}
+
+/// The controller's view at virtual time `now`: index-aligned loads and
+/// the worst-live-replica per-class TTFT p95.
+fn fleet_observe(reps: &[FleetReplica], now: f64) -> FleetObservation {
+    let loads: Vec<ReplicaLoad> = reps.iter().map(|r| r.load()).collect();
+    let mut ttft = [0.0f64; PriorityClass::COUNT];
+    for r in reps.iter().filter(|r| r.retired_at.is_none()) {
+        for (rank, t) in ttft.iter_mut().enumerate() {
+            *t = t.max(r.rep.sched.telemetry.ttft_class_p(rank, 95.0));
+        }
+    }
+    FleetObservation { now, loads, class_ttft_p95: ttft }
+}
+
+/// The fleet co-simulation's mutable state: replicas, router, the
+/// controller and its decision clock, and the directive log.
+struct FleetSim<'a> {
+    fs: &'a FleetScenario,
+    reps: Vec<FleetReplica>,
+    route: RoutePolicy,
+    controller: Option<Box<dyn FleetController>>,
+    interval: f64,
+    next_decide: f64,
+    /// Monotone virtual-time front: the max time any replica or arrival
+    /// has reached — what the controller's decision clock follows.
+    front: f64,
+    directives: Vec<String>,
+    n_spawned: usize,
+    n_retired: usize,
+}
+
+impl FleetSim<'_> {
+    /// Advance the time front and run every controller tick it crossed.
+    fn advance_front(&mut self, t: f64) {
+        if t > self.front {
+            self.front = t;
+        }
+        if self.controller.is_none() || self.interval <= 0.0 {
+            return;
+        }
+        while self.next_decide <= self.front {
+            let at = self.next_decide;
+            self.next_decide += self.interval;
+            // Take the controller out so deciding (needs &mut it) and
+            // executing (needs &mut the replicas) don't fight.
+            let Some(mut c) = self.controller.take() else { return };
+            let obs = fleet_observe(&self.reps, at);
+            let d = c.decide(&obs);
+            self.controller = Some(c);
+            if d == FleetDirective::Hold {
+                continue;
+            }
+            let applied = self.execute(&d, at);
+            self.directives.push(format!(
+                "t={at:.2} {}{}",
+                d.label(),
+                if applied { "" } else { " (noop)" }
+            ));
+        }
+    }
+
+    fn execute(&mut self, d: &FleetDirective, at: f64) -> bool {
+        match d {
+            FleetDirective::Hold => true,
+            FleetDirective::Spawn { profile } => {
+                let p = self
+                    .fs
+                    .pool
+                    .iter()
+                    .find(|q| q.name == profile.name)
+                    .unwrap_or(profile);
+                self.reps.push(mk_fleet_replica(&self.fs.base, p, at));
+                self.n_spawned += 1;
+                true
+            }
+            FleetDirective::Retire { replica } => {
+                let ok = *replica < self.reps.len()
+                    && self.reps[*replica].retired_at.is_none();
+                if ok {
+                    self.reps[*replica].retired_at = Some(at);
+                    self.n_retired += 1;
+                }
+                ok
+            }
+            // The sim owns its router, so repinning applies directly.
+            FleetDirective::Repin { route } => {
+                self.route = route.clone();
+                true
+            }
+        }
+    }
+
+    /// Route the next arrival; a retired replica is skipped by the
+    /// router (its load reads as draining).
+    fn route_one(&mut self, requests: &[Request], next: &mut usize,
+                 rr: &mut usize) -> Result<()> {
+        let loads: Vec<ReplicaLoad> =
+            self.reps.iter().map(|r| r.load()).collect();
+        let req = &requests[*next];
+        let key = RouteKey::new(req.class, req.prompt_len as usize);
+        let i = match self.route.pick(key, &loads, *rr) {
+            Some(i) => i,
+            None => match self
+                .reps
+                .iter()
+                .position(|r| r.retired_at.is_none())
+            {
+                Some(i) => i,
+                None => bail!("fleet sim has no live replica to route to"),
+            },
+        };
+        *rr += 1;
+        let mut req = req.clone();
+        req.arrived_at = req.arrived_at.max(0.0);
+        self.reps[i].rep.clock.sleep_until(req.arrived_at);
+        self.reps[i].rep.sched.submit(req);
+        *next += 1;
+        Ok(())
+    }
+}
+
+/// [`run_replica_sim`] generalized to a controlled heterogeneous fleet:
+/// replicas deployed under [`ReplicaProfile`]s (η scaled by `kv_scale`,
+/// engine timing by the speed factors), arrivals dispatched by the
+/// scenario's route policy over profile-aware loads, and the fleet
+/// policy's controller ticked on the monotone virtual-time front —
+/// spawns add replicas mid-run (clock pulled to the spawn time),
+/// retires drain them zero-loss. The run is priced in cost units:
+/// replica-seconds × profile `cost_unit`, retired replicas billed to
+/// drain completion, live ones to the fleet makespan. Fully
+/// deterministic for a fixed workload seed.
+pub fn run_fleet_sim(fs: &FleetScenario) -> Result<FleetMetrics> {
+    let mut requests = fs.base.workload.generate();
+    assign_classes(&mut requests, fs.mix);
+    run_fleet_sim_with_requests(fs, requests)
+}
+
+/// [`run_fleet_sim`] over an explicit request list (classes already
+/// assigned) — the hook for composed populations such as a burst head
+/// with a long sparse tail.
+pub fn run_fleet_sim_with_requests(fs: &FleetScenario,
+                                   mut requests: Vec<Request>)
+                                   -> Result<FleetMetrics> {
+    if fs.initial.is_empty() {
+        bail!("fleet sim needs at least one initial replica");
+    }
+    for p in fs.initial.iter().chain(&fs.pool) {
+        p.validate()?;
+    }
+    fs.route.validate(fs.initial.len())?;
+    fs.policy.validate()?;
+    // What an autoscaler brings up: the cheapest profile on offer —
+    // burst capacity should cost as little as possible.
+    let spawn_choice = fs
+        .pool
+        .iter()
+        .chain(&fs.initial)
+        .min_by(|a, b| a.cost_unit.total_cmp(&b.cost_unit))
+        .cloned()
+        .unwrap_or_else(ReplicaProfile::baseline);
+    let interval = match &fs.policy {
+        FleetPolicyKind::Autoscale(cfg) => cfg.decide_interval,
+        FleetPolicyKind::Manual => 0.0,
+    };
+    let mut sim = FleetSim {
+        fs,
+        reps: fs
+            .initial
+            .iter()
+            .map(|p| mk_fleet_replica(&fs.base, p, 0.0))
+            .collect(),
+        route: fs.route.clone(),
+        controller: build_fleet_controller(&fs.policy, &spawn_choice)?,
+        interval,
+        next_decide: interval,
+        front: 0.0,
+        directives: Vec::new(),
+        n_spawned: 0,
+        n_retired: 0,
+    };
+    requests.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
+    let mut next = 0usize;
+    let mut rr = 0usize;
+    let max_steps = (requests.len() as u64 * 4096).max(1_000_000);
+    let mut steps = 0u64;
+    loop {
+        // The replica with work and the earliest clock steps next
+        // (retired replicas keep stepping — that is the drain).
+        let mut active: Option<usize> = None;
+        for (i, r) in sim.reps.iter().enumerate() {
+            if !r.rep.sched.has_work() {
+                continue;
+            }
+            let earlier = match active {
+                None => true,
+                Some(b) => {
+                    r.rep.clock.now() < sim.reps[b].rep.clock.now()
+                }
+            };
+            if earlier {
+                active = Some(i);
+            }
+        }
+        match active {
+            Some(i) => {
+                let now = sim.reps[i].rep.clock.now();
+                sim.advance_front(now);
+                if next < requests.len()
+                    && requests[next].arrived_at <= now
+                {
+                    // Dispatch everything the time front has reached,
+                    // then re-pick — routing may wake an earlier clock.
+                    while next < requests.len()
+                        && requests[next].arrived_at <= now
+                    {
+                        sim.route_one(&requests, &mut next, &mut rr)?;
+                    }
+                    continue;
+                }
+                let r = &mut sim.reps[i];
+                match r.rep.sched.step(&mut r.rep.engine, now)? {
+                    Some(elapsed) => r.rep.clock.advance(elapsed),
+                    None => {
+                        // Work exists but nothing runnable: advance to
+                        // the next event.
+                        if next < requests.len() {
+                            let t = requests[next].arrived_at;
+                            r.rep.clock.sleep_until(t.max(now + 1e-3));
+                        } else {
+                            r.rep.clock.advance(1e-3);
+                        }
+                    }
+                }
+                steps += 1;
+                if steps >= max_steps {
+                    break;
+                }
+            }
+            None => {
+                if next >= requests.len() {
+                    break; // drained everywhere
+                }
+                // Every replica idle: the front jumps to the arrival
+                // (pending controller ticks fire in the gap first).
+                sim.advance_front(requests[next].arrived_at);
+                sim.route_one(&requests, &mut next, &mut rr)?;
+            }
+        }
+    }
+
+    let sims: Vec<&SimReplica> =
+        sim.reps.iter().map(|r| &r.rep).collect();
+    let set = fold_replica_set(&sims, &fs.base, sim.route.label());
+    // Price the run: a retired replica bills to the later of its drain
+    // completion and the retire decision; a live one to the fleet
+    // makespan (provisioned capacity costs while it is on call).
+    let agg_makespan = set.aggregate.makespan;
+    let mut cost_units = 0.0f64;
+    for r in &sim.reps {
+        let end = match r.retired_at {
+            Some(at) => r.rep.clock.now().max(at),
+            None => agg_makespan.max(r.spawned_at),
+        };
+        cost_units += (end - r.spawned_at) * r.profile.cost_unit;
+    }
+    Ok(FleetMetrics {
+        controller: fs.policy.label(),
+        profiles: sim
+            .reps
+            .iter()
+            .map(|r| r.profile.name.clone())
+            .collect(),
+        n_spawned: sim.n_spawned,
+        n_retired: sim.n_retired,
+        cost_units,
+        directives: sim.directives,
+        set,
     })
+}
+
+/// One row of the cost/SLA frontier swept by [`fleet_frontier`].
+#[derive(Debug, Clone)]
+pub struct FleetFrontierRow {
+    pub rate: f64,
+    /// `static:<profile>*N` for the homogeneous references, the fleet
+    /// scenario's own label for the controlled fleet.
+    pub label: String,
+    pub cost_units: f64,
+    /// Aggregate interactive TTFT p95 over the run (seconds).
+    pub ttft_p95_interactive: f64,
+    /// Interactive TTFT p95 within target, every request finished,
+    /// nothing shed.
+    pub meets: bool,
+    /// Cheapest configuration meeting the target at this rate.
+    pub cheapest_meeting: bool,
+    pub fleet: FleetMetrics,
+}
+
+impl FleetFrontierRow {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rate_qps", Json::Num(self.rate)),
+            ("label", Json::from(self.label.clone())),
+            ("cost_units", Json::Num(self.cost_units)),
+            (
+                "ttft_p95_interactive_s",
+                Json::Num(self.ttft_p95_interactive),
+            ),
+            ("meets", Json::from(self.meets)),
+            ("cheapest_meeting", Json::from(self.cheapest_meeting)),
+            ("fleet", self.fleet.to_json()),
+        ])
+    }
+}
+
+/// Sweep arrival rate × fleet configuration into the cost/SLA frontier
+/// behind `dynabatch fleet`: at each Poisson rate the same class-mixed
+/// workload runs against static homogeneous baseline fleets of
+/// 1..=`max_static` replicas and against the scenario's own (typically
+/// heterogeneous, autoscaled) fleet; each row reports cost units and
+/// whether the interactive TTFT p95 target was met, and the cheapest
+/// meeting row per rate is flagged. Fixed seeds → bit-identical tables.
+pub fn fleet_frontier(fs: &FleetScenario, rates: &[f64],
+                      ttft_target: f64, max_static: usize)
+                      -> Result<Vec<FleetFrontierRow>> {
+    if rates.is_empty() || max_static == 0 {
+        bail!("fleet_frontier needs at least one rate and one static \
+               fleet size");
+    }
+    if ttft_target <= 0.0 {
+        bail!("fleet_frontier needs a positive interactive TTFT target");
+    }
+    let mut rows = Vec::new();
+    for &rate in rates {
+        let mut base = fs.base.clone();
+        base.workload =
+            base.workload.with_arrival(Arrival::Poisson { rate });
+        let mut requests = base.workload.generate();
+        assign_classes(&mut requests, fs.mix);
+        let n_total = requests.len();
+        let row = |label: String, fleet: FleetMetrics| {
+            let ttft = fleet.set.aggregate.per_class
+                [PriorityClass::Interactive.rank()]
+            .ttft_p95;
+            let meets = ttft <= ttft_target
+                && fleet.set.aggregate.n_finished == n_total
+                && fleet.set.aggregate.shed == 0;
+            FleetFrontierRow {
+                rate,
+                label,
+                cost_units: fleet.cost_units,
+                ttft_p95_interactive: ttft,
+                meets,
+                cheapest_meeting: false,
+                fleet,
+            }
+        };
+        let mut rate_rows = Vec::new();
+        let reference = ReplicaProfile::baseline();
+        for n in 1..=max_static {
+            let static_fs = FleetScenario {
+                base: base.clone(),
+                initial: vec![reference.clone(); n],
+                pool: Vec::new(),
+                route: fs.route.clone(),
+                policy: FleetPolicyKind::Manual,
+                mix: fs.mix,
+            };
+            let m =
+                run_fleet_sim_with_requests(&static_fs, requests.clone())?;
+            rate_rows
+                .push(row(format!("static:{}*{n}", reference.name), m));
+        }
+        let auto_fs = FleetScenario { base, ..fs.clone() };
+        let m = run_fleet_sim_with_requests(&auto_fs, requests.clone())?;
+        let names: Vec<&str> =
+            fs.initial.iter().map(|p| p.name.as_str()).collect();
+        rate_rows.push(row(format!("fleet:{}", names.join("+")), m));
+        if let Some(best) = rate_rows
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| r.meets)
+            .min_by(|(ai, a), (bi, b)| {
+                a.cost_units.total_cmp(&b.cost_units).then(ai.cmp(bi))
+            })
+            .map(|(i, _)| i)
+        {
+            rate_rows[best].cheapest_meeting = true;
+        }
+        rows.extend(rate_rows);
+    }
+    Ok(rows)
 }
 
 /// One cell of the policy-switch sweep table (see [`switch_sweep`]).
@@ -656,7 +1151,7 @@ pub fn capacity_search(
 mod tests {
     use super::*;
     use crate::config::presets::*;
-    use crate::config::PolicyKind;
+    use crate::config::{FleetConfig, PolicyKind};
     use crate::workload::LengthDist;
 
     fn scenario(policy: PolicyKind, n: usize, arrival: Arrival)
@@ -850,6 +1345,258 @@ mod tests {
         assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
                    "same seed → bit-identical replica-set metrics");
         assert_eq!(a.aggregate.n_requests, 60);
+    }
+
+    /// A manual fleet of one neutral baseline replica is the replica
+    /// co-simulation: the fleet layer must add nothing to the numbers,
+    /// only the cost/controller wrapper around them.
+    #[test]
+    fn fleet_sim_manual_neutral_matches_replica_sim() {
+        let s = scenario(PolicyKind::Combined, 60,
+                         Arrival::Poisson { rate: 20.0 });
+        let plain = run_replica_sim(&s, 1, &RoutePolicy::LeastLoaded)
+            .unwrap();
+        let fs = FleetScenario {
+            base: s,
+            initial: vec![ReplicaProfile::baseline()],
+            pool: Vec::new(),
+            route: RoutePolicy::LeastLoaded,
+            policy: FleetPolicyKind::Manual,
+            // Zero mix = the no-op class assignment, matching the
+            // class-blind replica path.
+            mix: [0.0; PriorityClass::COUNT],
+        };
+        let fleet = run_fleet_sim(&fs).unwrap();
+        assert_eq!(fleet.set.to_json().to_string(),
+                   plain.to_json().to_string(),
+                   "neutral manual fleet must be bit-identical to \
+                    run_replica_sim");
+        assert_eq!(fleet.controller, "manual");
+        assert_eq!(fleet.profiles, vec!["baseline".to_string()]);
+        assert_eq!((fleet.n_spawned, fleet.n_retired), (0, 0));
+        assert!(fleet.directives.is_empty());
+        // Baseline costs 1.0/s held for the whole makespan.
+        assert!((fleet.cost_units - fleet.set.aggregate.makespan).abs()
+                    < 1e-9,
+                "cost {} vs makespan {}", fleet.cost_units,
+                fleet.set.aggregate.makespan);
+    }
+
+    /// The autoscaler's full cycle in virtual time: a hard burst on one
+    /// baseline replica trips the backlog band → spawn(s); the sparse
+    /// tail drops under the retire band → retire(s); nothing accepted
+    /// is ever lost (retired replicas drain), and the run is
+    /// bit-identical across invocations.
+    #[test]
+    fn fleet_sim_spawns_on_burst_and_retires_in_tail_without_loss() {
+        let mut s = scenario(PolicyKind::MemoryAware, 0,
+                             Arrival::AllAtOnce);
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::Fixed(128);
+        // 3 s @ 60/s (≈ 3× one replica's rate), then 30 s @ 1/s.
+        let mut requests: Vec<Request> = (0..180)
+            .map(|i| Request::new(i, 64, 128, i as f64 / 60.0))
+            .collect();
+        for k in 0..30u64 {
+            requests.push(Request::new(180 + k, 64, 128, 3.0 + k as f64));
+        }
+        assign_classes(&mut requests, [0.5, 0.25, 0.25]);
+        let total = requests.len();
+        let fs = FleetScenario {
+            base: s,
+            initial: vec![ReplicaProfile::baseline()],
+            pool: vec![profile_by_name("economy").unwrap()],
+            route: RoutePolicy::LeastLoaded,
+            policy: FleetPolicyKind::Autoscale(FleetConfig {
+                spawn_backlog: 30.0,
+                retire_backlog: 2.0,
+                spawn_kv_pressure: 0.95,
+                ttft_targets: [None; PriorityClass::COUNT],
+                spawn_sla_frac: 0.9,
+                retire_sla_frac: 0.5,
+                dwell_decisions: 2,
+                decide_interval: 0.5,
+                cooldown: 2.0,
+                min_replicas: 1,
+                max_replicas: 3,
+            }),
+            mix: [0.5, 0.25, 0.25],
+        };
+        let m = run_fleet_sim_with_requests(&fs, requests.clone())
+            .unwrap();
+        assert!(m.n_spawned >= 1, "burst must trip a spawn: {:?}",
+                m.directives);
+        assert!(m.n_retired >= 1, "tail must trip a retire: {:?}",
+                m.directives);
+        assert_eq!(m.profiles.len(), m.set.n_replicas,
+                   "one profile per replica row");
+        assert_eq!(m.profiles[0], "baseline");
+        assert!(m.profiles[1..].iter().all(|p| p == "economy"),
+                "autoscaler spawns the cheapest profile: {:?}",
+                m.profiles);
+        // Zero-loss: every accepted request finishes even though
+        // replicas were retired mid-run.
+        assert_eq!(m.set.aggregate.n_finished, total);
+        assert_eq!(m.set.aggregate.shed, 0);
+        assert!(m.cost_units > 0.0);
+        let again = run_fleet_sim_with_requests(&fs, requests).unwrap();
+        assert_eq!(m.to_json().to_string(), again.to_json().to_string(),
+                   "fleet sim must be deterministic");
+    }
+
+    /// Capability routing on a heterogeneous pair: interactive work
+    /// lands on the fastest decoder (turbo), long-prompt work on the
+    /// biggest KV pool (big-kv).
+    #[test]
+    fn fleet_sim_capability_routes_by_profile() {
+        let mut s = scenario(PolicyKind::MemoryAware, 0,
+                             Arrival::AllAtOnce);
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::Fixed(128);
+        // 20 short interactive + 20 long batch, interleaved arrivals.
+        let mut requests: Vec<Request> = Vec::new();
+        for i in 0..20u64 {
+            let mut a = Request::new(2 * i, 64, 128, i as f64 * 0.1);
+            a.class = PriorityClass::Interactive;
+            requests.push(a);
+            let mut b =
+                Request::new(2 * i + 1, 1024, 128, i as f64 * 0.1 + 0.05);
+            b.class = PriorityClass::Batch;
+            requests.push(b);
+        }
+        let fs = FleetScenario {
+            base: s,
+            initial: vec![profile_by_name("turbo").unwrap(),
+                          profile_by_name("big-kv").unwrap()],
+            pool: Vec::new(),
+            route: RoutePolicy::Capability { long_prompt: 512 },
+            policy: FleetPolicyKind::Manual,
+            mix: [0.0; PriorityClass::COUNT],
+        };
+        let m = run_fleet_sim_with_requests(&fs, requests).unwrap();
+        assert_eq!(m.set.aggregate.n_finished, 40);
+        let turbo = &m.set.per_replica[0];
+        let bigkv = &m.set.per_replica[1];
+        assert_eq!(turbo.per_class[0].n_requests, 20,
+                   "all interactive on the fast decoder");
+        assert_eq!(bigkv.per_class[2].n_requests, 20,
+                   "all long prompts on the big KV pool");
+        assert_eq!(turbo.per_class[2].n_requests, 0);
+        assert_eq!(bigkv.per_class[0].n_requests, 0);
+    }
+
+    /// The ISSUE acceptance regression: under a bursty mixed-class
+    /// workload, the heterogeneous autoscaled fleet must meet the
+    /// interactive TTFT target at ≥ 20% lower cost than the cheapest
+    /// static homogeneous fleet that also meets it, and the mid-run
+    /// scale-down must lose nothing. Arrivals are constructed
+    /// arithmetically (no RNG) so the shape is exact: two
+    /// [5 s @ 80/s + 5 s @ 2/s] cycles, then a 100 s tail @ 2/s.
+    #[test]
+    fn fleet_autoscaler_beats_static_fleets_on_cost_at_sla() {
+        let mut s = scenario(PolicyKind::MemoryAware, 0,
+                             Arrival::AllAtOnce);
+        s.workload.prompt = LengthDist::Fixed(64);
+        s.workload.output = LengthDist::Fixed(128);
+        let mut requests: Vec<Request> = Vec::new();
+        let mut id = 0u64;
+        let mut push = |reqs: &mut Vec<Request>, t: f64| {
+            reqs.push(Request::new(id, 64, 128, t));
+            id += 1;
+        };
+        for cycle in 0..2 {
+            let t0 = cycle as f64 * 10.0;
+            for i in 0..400 {
+                push(&mut requests, t0 + i as f64 / 80.0);
+            }
+            for j in 0..10 {
+                push(&mut requests, t0 + 5.0 + j as f64 * 0.5);
+            }
+        }
+        for k in 0..200 {
+            push(&mut requests, 20.0 + k as f64 * 0.5);
+        }
+        let mix = [0.5, 0.25, 0.25];
+        assign_classes(&mut requests, mix);
+        let total = requests.len();
+        let target = 0.75; // interactive TTFT p95, seconds
+
+        let run = |initial: Vec<ReplicaProfile>,
+                   pool: Vec<ReplicaProfile>,
+                   policy: FleetPolicyKind| {
+            let fs = FleetScenario {
+                base: s.clone(),
+                initial,
+                pool,
+                route: RoutePolicy::LeastLoaded,
+                policy,
+                mix,
+            };
+            run_fleet_sim_with_requests(&fs, requests.clone()).unwrap()
+        };
+        let meets = |m: &FleetMetrics| {
+            m.set.aggregate.per_class[0].ttft_p95 <= target
+                && m.set.aggregate.n_finished == total
+                && m.set.aggregate.shed == 0
+        };
+
+        // Static homogeneous references at N = 1..3.
+        let statics: Vec<FleetMetrics> = (1..=3)
+            .map(|n| {
+                run(vec![ReplicaProfile::baseline(); n], Vec::new(),
+                    FleetPolicyKind::Manual)
+            })
+            .collect();
+        // Burst interactive demand (≈ 40/s) alone exceeds one
+        // baseline replica, so N=1 must violate the target.
+        assert!(!meets(&statics[0]),
+                "N=1 must violate: ttft_p95={}",
+                statics[0].set.aggregate.per_class[0].ttft_p95);
+        let best_static = statics
+            .iter()
+            .filter(|m| meets(m))
+            .map(|m| m.cost_units)
+            .fold(f64::INFINITY, f64::min);
+        assert!(best_static.is_finite(),
+                "some static size must meet the target");
+
+        // The autoscaled fleet starts provisioned for the burst and
+        // sheds capacity in the tail. Spawning is disabled (the burst
+        // head is covered); the test exercises the scale-down half.
+        let auto = run(
+            vec![ReplicaProfile::baseline(),
+                 profile_by_name("economy").unwrap(),
+                 profile_by_name("economy").unwrap()],
+            vec![profile_by_name("economy").unwrap()],
+            FleetPolicyKind::Autoscale(FleetConfig {
+                spawn_backlog: 1e6,
+                retire_backlog: 3.0,
+                spawn_kv_pressure: 1.0,
+                ttft_targets: [None; PriorityClass::COUNT],
+                spawn_sla_frac: 0.9,
+                retire_sla_frac: 0.5,
+                // Dwell × interval outlasts the 5 s low phases inside
+                // the head, so retires only fire in the long tail.
+                dwell_decisions: 8,
+                decide_interval: 1.0,
+                cooldown: 5.0,
+                min_replicas: 1,
+                max_replicas: 3,
+            }),
+        );
+        assert!(meets(&auto),
+                "autoscaled fleet must meet the target: ttft_p95={} \
+                 finished={} shed={}",
+                auto.set.aggregate.per_class[0].ttft_p95,
+                auto.set.aggregate.n_finished, auto.set.aggregate.shed);
+        assert!(auto.n_retired >= 1,
+                "the tail must trigger scale-down: {:?}", auto.directives);
+        assert_eq!(auto.set.aggregate.n_finished, total,
+                   "zero-loss scale-down");
+        assert_eq!(auto.set.aggregate.shed, 0);
+        assert!(auto.cost_units <= 0.8 * best_static,
+                "autoscaled cost {} must be ≥ 20% under best static {}",
+                auto.cost_units, best_static);
     }
 
     #[test]

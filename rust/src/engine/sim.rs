@@ -17,7 +17,7 @@
 //! by `dynabatch fig3`).
 
 use super::{Engine, StepOutcome, StepPlan};
-use crate::config::{HardwareSpec, ModelSpec};
+use crate::config::{HardwareSpec, ModelSpec, ReplicaProfile};
 use crate::request::RequestId;
 
 /// Analytic per-step cost model. Also used directly by the Fig. 3 sweep.
@@ -98,6 +98,10 @@ pub struct SimEngine {
     model_name: String,
     cost: CostModel,
     max_seq: u32,
+    /// Heterogeneous-profile speed factors `(decode_speed,
+    /// prefill_speed)`; `None` keeps the exact unscaled timing
+    /// expression (bit-identical to a profile-free engine).
+    profile: Option<(f64, f64)>,
     pub stat_steps: u64,
     pub stat_busy_time: f64,
     /// Time the step pipeline spent on prefill+decode compute only — the
@@ -111,10 +115,28 @@ impl SimEngine {
             model_name: model.name.clone(),
             cost: CostModel::new(model, hw),
             max_seq: model.max_model_len,
+            profile: None,
             stat_steps: 0,
             stat_busy_time: 0.0,
             stat_compute_time: 0.0,
         }
+    }
+
+    /// [`Self::new`] with a heterogeneous [`ReplicaProfile`]: the
+    /// decode-path step time (weights pass + decode compute + decode KV
+    /// traffic) is divided by `decode_speed` and the prefill path
+    /// (prompt compute + prefill context traffic) by `prefill_speed`.
+    /// KV *capacity* (`kv_scale`) is the deployment layer's business —
+    /// the scheduler's η budget — not the engine's. A neutral profile
+    /// takes the exact unscaled code path.
+    pub fn with_profile(model: &ModelSpec, hw: &HardwareSpec,
+                        profile: &ReplicaProfile) -> Self {
+        let mut e = SimEngine::new(model, hw);
+        e.model_name = format!("{}@{}", model.name, profile.name);
+        if !profile.is_neutral() {
+            e.profile = Some((profile.decode_speed, profile.prefill_speed));
+        }
+        e
     }
 
     pub fn cost_model(&self) -> &CostModel {
@@ -141,13 +163,35 @@ impl Engine for SimEngine {
             prefill_ctx += (p.start + p.n_tokens) as u64;
         }
 
-        let compute = self
-            .cost
-            .compute_time(plan.decodes.len() as u64 + plan.prefill_tokens());
-        let mut elapsed = self.cost.overhead
-            + self.cost.t_weights()
-            + compute
-            + self.cost.kv_time(decode_ctx + prefill_ctx);
+        let decode_tokens = plan.decodes.len() as u64;
+        let compute;
+        let mut elapsed = match self.profile {
+            None => {
+                compute = self
+                    .cost
+                    .compute_time(decode_tokens + plan.prefill_tokens());
+                self.cost.overhead
+                    + self.cost.t_weights()
+                    + compute
+                    + self.cost.kv_time(decode_ctx + prefill_ctx)
+            }
+            Some((decode_speed, prefill_speed)) => {
+                // Heterogeneous profile: decode path and prefill path
+                // scale independently; the fixed overhead does not.
+                let dc = self.cost.compute_time(decode_tokens)
+                    / decode_speed;
+                let pc = self.cost.compute_time(plan.prefill_tokens())
+                    / prefill_speed;
+                compute = dc + pc;
+                self.cost.overhead
+                    + (self.cost.t_weights()
+                        + self.cost.kv_time(decode_ctx))
+                        / decode_speed
+                    + dc
+                    + self.cost.kv_time(prefill_ctx) / prefill_speed
+                    + pc
+            }
+        };
         elapsed += self.cost.swap_time(plan.swap_out_tokens)
             + self.cost.swap_time(plan.swap_in_tokens)
             + self.cost.preempt_overhead * plan.preempt_events as f64;
@@ -298,6 +342,52 @@ mod tests {
         let mut plan = StepPlan::default();
         plan.push_prefill(3, &[], 64, 0, false);
         assert!(e.step_owned(&plan).unwrap().tokens.is_empty());
+    }
+
+    #[test]
+    fn profile_scales_decode_and_prefill_independently() {
+        let m = llama3_70b();
+        let hw = node_for(&m);
+        // Neutral profile: the exact unscaled code path.
+        let mut base = engine();
+        let mut neutral =
+            SimEngine::with_profile(&m, &hw, &ReplicaProfile::baseline());
+        let plan = decode_plan(64, 200);
+        let tb = base.step_owned(&plan).unwrap().elapsed;
+        assert_eq!(neutral.step_owned(&plan).unwrap().elapsed, tb,
+                   "neutral profile must be bit-identical");
+        assert_eq!(neutral.label(), "sim(llama3-70b@baseline)");
+        // 2× decode speed: everything but the fixed overhead halves on a
+        // decode-only plan.
+        let fast = ReplicaProfile {
+            name: "fast".into(),
+            kv_scale: 1.0,
+            decode_speed: 2.0,
+            prefill_speed: 1.0,
+            cost_unit: 2.0,
+        };
+        let mut f = SimEngine::with_profile(&m, &hw, &fast);
+        let tf = f.step_owned(&plan).unwrap().elapsed;
+        let want = hw.step_overhead_s + (tb - hw.step_overhead_s) / 2.0;
+        assert!((tf - want).abs() / want < 1e-9, "tf={tf} want={want}");
+        // Prefill speed moves prefill-only plans, not decode-only ones.
+        let pfast = ReplicaProfile {
+            name: "pf".into(),
+            kv_scale: 1.0,
+            decode_speed: 1.0,
+            prefill_speed: 2.0,
+            cost_unit: 1.0,
+        };
+        let mut p = SimEngine::with_profile(&m, &hw, &pfast);
+        let td = p.step_owned(&plan).unwrap().elapsed;
+        assert!((td - tb).abs() / tb < 1e-9,
+                "decode-only unaffected by prefill_speed: {td} vs {tb}");
+        let mut pre = StepPlan::default();
+        pre.push_prefill(1, &[], 512, 0, true);
+        let t_pre_base = engine().step_owned(&pre).unwrap().elapsed;
+        let t_pre_fast = p.step_owned(&pre).unwrap().elapsed;
+        assert!(t_pre_fast < t_pre_base,
+                "{t_pre_fast} !< {t_pre_base}");
     }
 
     #[test]

@@ -22,7 +22,14 @@
 //! scale is the replica tier ([`service::replica`]): a
 //! [`service::ReplicaSet`] front door over N `Service` replicas with
 //! pluggable routing ([`service::RoutePolicy`]) and first-class rolling
-//! restarts. The SLA loop is class-aware end to end: [`telemetry`]
+//! restarts. Above it sits the fleet layer ([`service::fleet`]):
+//! heterogeneous [`config::ReplicaProfile`]s (KV scale, decode/prefill
+//! speed, cost) deployed per replica, capability-aware routing, and a
+//! [`service::Fleet`] whose [`service::FleetController`] (the stock
+//! [`service::SlaAutoscaler`]) parks and reopens replicas on backlog,
+//! KV-pressure and TTFT bands — zero-loss by construction, since
+//! scale-down is a drain. The SLA loop is class-aware end to end:
+//! [`telemetry`]
 //! attributes decode latency per priority class,
 //! [`batching::PerClassSlaPolicy`] runs one feedback loop per class
 //! against per-class targets (`per-class-sla(interactive=50)` over the
@@ -31,8 +38,9 @@
 //! experiment driver ([`driver`]) exercises the same scheduler in
 //! virtual time, including mid-run policy switches
 //! (`driver::run_sim_switched`), the multi-replica co-simulation
-//! (`driver::run_replica_sim`), and the per-class SLA sweep
-//! (`driver::sla_sweep`).
+//! (`driver::run_replica_sim`), the per-class SLA sweep
+//! (`driver::sla_sweep`), and the fleet cost/SLA frontier
+//! (`driver::fleet_frontier`).
 //!
 //! Operating a running server — every protocol-v2 admin op, every
 //! `dynabatch` subcommand, and the rolling-restart / hot-policy-switch

@@ -3,20 +3,23 @@
 
 use anyhow::{anyhow, Result};
 use dynabatch::config::{
-    parse_sla_targets, presets, PolicyKind, SchedulerConfig,
+    parse_sla_targets, presets, FleetPolicyKind, PolicyKind, ReplicaProfile,
+    SchedulerConfig,
 };
 use dynabatch::driver::{
-    capacity_search, run_replica_sim, run_sim, run_sim_switched, sla_sweep,
-    switch_sweep, PolicySwitch, SimScenario,
+    capacity_search, fleet_frontier, run_replica_sim, run_sim,
+    run_sim_switched, sla_sweep, switch_sweep, FleetScenario, PolicySwitch,
+    SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
 use dynabatch::experiments::{ablations, figures, table1, table2};
 use dynabatch::server;
-use dynabatch::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
+use dynabatch::service::{Fleet, ReplicaSet, RoutePolicy, ServiceBuilder};
 use dynabatch::util::cli::Command;
 use dynabatch::workload::{trace, Arrival, LengthDist, Workload};
 use std::path::Path;
+use std::sync::Arc;
 
 fn cli() -> Command {
     Command::new("dynabatch",
@@ -104,6 +107,41 @@ fn cli() -> Command {
                 .flag("json", "emit every run's metrics as JSON"),
         )
         .subcommand(
+            Command::new("fleet",
+                         "cost/SLA frontier on the simulated engine: \
+                          static homogeneous baseline fleets vs a \
+                          (typically heterogeneous, autoscaled) fleet, \
+                          per arrival rate (fixed seeds → bit-identical \
+                          tables)")
+                .opt("model", "pangu-7b", "model preset")
+                .opt("policy", "dynamic", "batching policy per replica")
+                .opt("profiles", "baseline,economy,economy",
+                     "initial fleet: comma-separated profile presets \
+                      (baseline|turbo|big-kv|economy)")
+                .opt("pool", "economy",
+                     "profiles the autoscaler may spawn mid-run")
+                .opt("route", "least-loaded",
+                     "round-robin | least-loaded | class-pinned:R | \
+                      capability[:LONG]")
+                .opt("fleet-policy", "autoscale",
+                     "manual | autoscale | autoscale(spawn=12,\
+                      retire=2,…)")
+                .opt("rates", "5,15,25",
+                     "comma-separated Poisson arrival rates (qps)")
+                .opt("requests", "400", "request count per rate point")
+                .opt("ttft-target", "750",
+                     "interactive TTFT p95 target (ms)")
+                .opt("max-static", "3",
+                     "largest static baseline fleet to compare against")
+                .opt("mix", "0.5,0.25,0.25",
+                     "traffic fractions interactive,standard,batch")
+                .opt("prompt-mean", "64", "mean prompt tokens")
+                .opt("output-mean", "128", "mean output tokens")
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)")
+                .opt("seed", "42", "workload seed")
+                .flag("json", "emit every row's metrics as JSON"),
+        )
+        .subcommand(
             Command::new("sla",
                          "per-class SLA sweep: baseline vs \
                           min(policy, per-class-sla(targets)) under a \
@@ -148,7 +186,14 @@ fn cli() -> Command {
                 .opt("d-sla", "0", "decode SLA in ms (0 = none)")
                 .opt("replicas", "1", "service replicas behind the router")
                 .opt("route", "least-loaded",
-                     "round-robin | least-loaded | class-pinned:R"),
+                     "round-robin | least-loaded | class-pinned:R | \
+                      capability[:LONG]")
+                .opt("profiles", "",
+                     "comma-separated replica profile presets (one per \
+                      replica; enables the fleet admin ops)")
+                .opt("fleet-policy", "manual",
+                     "manual | autoscale[(…)] — fleet controller when \
+                      --profiles is set"),
         )
         .subcommand(
             Command::new("bench-sched",
@@ -203,6 +248,7 @@ fn main() {
         "run" => cmd_run(&sub),
         "switch" => cmd_switch(&sub),
         "route" => cmd_route(&sub),
+        "fleet" => cmd_fleet(&sub),
         "sla" => cmd_sla(&sub),
         "capacity" => cmd_capacity(&sub),
         "serve" => cmd_serve(&sub),
@@ -497,6 +543,99 @@ where
         .collect()
 }
 
+/// Parse a comma-separated list of replica-profile preset names.
+fn parse_profiles(s: &str) -> Result<Vec<ReplicaProfile>> {
+    s.split(',')
+        .filter(|p| !p.trim().is_empty())
+        .map(|p| {
+            presets::profile_by_name(p.trim()).ok_or_else(|| {
+                let known: Vec<String> = presets::fleet_profiles()
+                    .into_iter()
+                    .map(|q| q.name)
+                    .collect();
+                anyhow!("unknown replica profile '{}' (presets: {})",
+                        p.trim(),
+                        known.join(", "))
+            })
+        })
+        .collect()
+}
+
+/// `dynabatch fleet`: cost/SLA frontier — static homogeneous baseline
+/// fleets (`baseline*1..=max-static`) vs the configured, typically
+/// heterogeneous and autoscaled, fleet, at each arrival rate. A row
+/// "meets" when interactive TTFT p95 is within target AND every request
+/// finished AND nothing was shed; the cheapest meeting row per rate is
+/// flagged. Fixed seeds → bit-identical tables.
+fn cmd_fleet(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    s.workload.name = "fleet".into();
+    s.workload.n_requests = m.get_usize("requests")?;
+    s.workload.seed = m.get_u64("seed")?;
+    let initial = parse_profiles(m.get("profiles"))?;
+    if initial.is_empty() {
+        return Err(anyhow!("--profiles needs at least one profile"));
+    }
+    let pool = parse_profiles(m.get("pool"))?;
+    let route = RoutePolicy::parse(m.get("route"))?;
+    let policy = FleetPolicyKind::parse(m.get("fleet-policy"))?;
+    let mix_list: Vec<f64> = parse_list(m.get("mix"))?;
+    let mix: [f64; 3] = mix_list
+        .as_slice()
+        .try_into()
+        .map_err(|_| anyhow!("--mix needs exactly 3 fractions"))?;
+    let rates: Vec<f64> = parse_list(m.get("rates"))?;
+    let target = m.get_f64("ttft-target")? / 1e3;
+    let max_static = m.get_usize("max-static")?;
+    let fs = FleetScenario { base: s, initial, pool, route, policy, mix };
+    let rows = fleet_frontier(&fs, &rates, target, max_static)?;
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::Arr(
+            rows.iter().map(|r| r.to_json()).collect(),
+        );
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "fleet frontier [{}] route={} policy={} requests={} mix={:?} \
+         seed={}",
+        fs.policy.label(),
+        fs.route.label(),
+        fs.base.sched.policy.label(),
+        fs.base.workload.n_requests,
+        mix,
+        fs.base.workload.seed,
+    );
+    println!(
+        "target: interactive ttft p95 ≤ {:.0} ms, zero shed, all \
+         finished",
+        target * 1e3
+    );
+    let mut last = f64::NAN;
+    for r in &rows {
+        if r.rate != last {
+            println!("rate={:.1} qps", r.rate);
+            last = r.rate;
+        }
+        let scaling = if r.fleet.n_spawned + r.fleet.n_retired > 0 {
+            format!("  +{}/-{} replicas",
+                    r.fleet.n_spawned, r.fleet.n_retired)
+        } else {
+            String::new()
+        };
+        println!(
+            "  {:<30} cost={:>8.1}  ttft p95={:>8.1}ms  {:<8}{}{}",
+            r.label,
+            r.cost_units,
+            r.ttft_p95_interactive * 1e3,
+            if r.meets { "meets" } else { "VIOLATES" },
+            scaling,
+            if r.cheapest_meeting { "  <- cheapest" } else { "" },
+        );
+    }
+    Ok(())
+}
+
 /// `dynabatch sla`: per-class SLA sweep — the baseline policy vs
 /// `min(policy, per-class-sla(...))` per target set, on one mixed-class
 /// workload, reporting per-class decode percentiles, violation rates and
@@ -610,22 +749,45 @@ fn cmd_serve(m: &M) -> Result<()> {
     let n = m.get_usize("replicas")?;
     let route = RoutePolicy::parse(m.get("route"))?;
     let route_label = route.label();
+    let profiles = parse_profiles(m.get("profiles"))?;
+    if !profiles.is_empty() && profiles.len() != n {
+        return Err(anyhow!(
+            "--profiles needs exactly {n} entries to match --replicas \
+             (got {})",
+            profiles.len()
+        ));
+    }
     // The replica set is the front door; the TCP server is a thin
     // protocol adapter over it. Model/hardware specs only seed the
     // estimators here — η and the engine come from the artifacts. Each
     // replica builds its own engine on its own service thread (PJRT
     // handles are not Send).
-    let set = ReplicaSet::build(n, route, |_| {
+    let set = ReplicaSet::build(n, route, |i| {
         let dir = dir.clone();
-        ServiceBuilder::new(presets::tiny_real(), presets::cpu_host())
+        let b = ServiceBuilder::new(presets::tiny_real(),
+                                    presets::cpu_host())
             .config(cfg.clone())
             .eta_tokens(eta)
             .priors(32.0, 32.0)
             .engine(move || {
                 Ok(Box::new(PjrtEngine::load(&dir)?) as Box<dyn Engine>)
-            })
+            });
+        match profiles.get(i) {
+            Some(p) => b.profile(p.clone()),
+            None => b,
+        }
     })?;
-    let server = server::serve_replicas(set, m.get("bind"))?;
+    let server = if profiles.is_empty() {
+        server::serve_replicas(set, m.get("bind"))?
+    } else {
+        let policy = FleetPolicyKind::parse(m.get("fleet-policy"))?;
+        let policy_label = policy.label();
+        let fleet = Fleet::new(Arc::new(set), profiles, policy)?;
+        let server = server::serve_fleet(fleet, m.get("bind"))?;
+        println!("fleet ops live [{policy_label}]: fleet_stats / \
+                  set_fleet_policy / scale");
+        server
+    };
     println!("serving {n} replica(s) [{route_label}] on {} — protocol \
               v2: line-delimited JSON ({{\"op\":\"generate\"|\"cancel\"\
               |\"stats\"|\"set_policy\"|\"drain\"|\"reopen\"\

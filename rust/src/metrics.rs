@@ -311,6 +311,60 @@ impl ReplicaSetMetrics {
     }
 }
 
+/// One fleet run: the replica-set metrics plus the fleet-control story
+/// — per-replica profiles, the controller's directive log, and the
+/// run's price in cost units (live replica-seconds × profile
+/// `cost_unit`, the denominator of the cost/SLA frontier the
+/// `dynabatch fleet` experiment sweeps). Produced by
+/// `driver::run_fleet_sim`.
+#[derive(Debug, Clone)]
+pub struct FleetMetrics {
+    /// Fleet policy label (`manual` or the autoscale band spec).
+    pub controller: String,
+    /// Per-replica profile names, index-aligned with
+    /// [`ReplicaSetMetrics::per_replica`] (spawned replicas append).
+    pub profiles: Vec<String>,
+    /// Replicas the controller spawned mid-run.
+    pub n_spawned: usize,
+    /// Replicas the controller retired mid-run (zero-loss drains).
+    pub n_retired: usize,
+    /// Σ over replicas of live-seconds × profile cost.
+    pub cost_units: f64,
+    /// Rendered directive log (`t=12.50 spawn(economy)`), actions only.
+    pub directives: Vec<String>,
+    pub set: ReplicaSetMetrics,
+}
+
+impl FleetMetrics {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("controller", Json::from(self.controller.clone())),
+            (
+                "profiles",
+                Json::Arr(
+                    self.profiles
+                        .iter()
+                        .map(|p| Json::from(p.clone()))
+                        .collect(),
+                ),
+            ),
+            ("n_spawned", Json::from(self.n_spawned)),
+            ("n_retired", Json::from(self.n_retired)),
+            ("cost_units", Json::Num(self.cost_units)),
+            (
+                "directives",
+                Json::Arr(
+                    self.directives
+                        .iter()
+                        .map(|d| Json::from(d.clone()))
+                        .collect(),
+                ),
+            ),
+            ("set", self.set.to_json()),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -387,6 +441,41 @@ mod tests {
             aggregate: mk(0),
         };
         assert_eq!(empty.max_token_share(), 0.0);
+    }
+
+    #[test]
+    fn fleet_metrics_serialize() {
+        let mk = |tokens: u64| {
+            let mut m = RunMetrics::compute("t".into(), &[],
+                                            &SchedStats::default(), &[],
+                                            1.0, None);
+            m.output_tokens = tokens;
+            m
+        };
+        let fleet = FleetMetrics {
+            controller: "sla-autoscaler".into(),
+            profiles: vec!["baseline".into(), "economy".into()],
+            n_spawned: 1,
+            n_retired: 1,
+            cost_units: 42.5,
+            directives: vec!["t=1.00 spawn(economy)".into(),
+                             "t=9.00 retire(1)".into()],
+            set: ReplicaSetMetrics {
+                route_policy: "capability:512".into(),
+                n_replicas: 2,
+                per_replica: vec![mk(300), mk(100)],
+                aggregate: mk(400),
+            },
+        };
+        let j = fleet.to_json();
+        assert_eq!(j.get("controller").as_str(), Some("sla-autoscaler"));
+        assert_eq!(j.get("n_spawned").as_u64(), Some(1));
+        assert_eq!(j.get("profiles").as_arr().unwrap().len(), 2);
+        assert_eq!(j.get("directives").as_arr().unwrap().len(), 2);
+        assert!((j.get("cost_units").as_f64().unwrap() - 42.5).abs()
+                    < 1e-12);
+        assert_eq!(j.get("set").get("n_replicas").as_u64(), Some(2));
+        assert!(Json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

@@ -632,7 +632,7 @@ impl Scheduler {
         for &(id, tok) in &outcome.tokens {
             let slot =
                 *self.by_id.get(&id).expect("token for known req");
-            let done = {
+            let (done, first) = {
                 let e = self.entry_mut(slot);
                 if e.req.phase == Phase::Finished {
                     continue;
@@ -640,8 +640,17 @@ impl Scheduler {
                 if !e.req.prompt_tokens.is_empty() {
                     e.req.output_tokens.push(tok);
                 }
-                e.req.record_token(end)
+                // A first token closes the request's TTFT interval:
+                // attribute it to the class live, so TTFT p95 is
+                // observable before the request finishes.
+                let first = e.req.first_token_at.is_none().then(|| {
+                    (e.req.class.rank(), end - e.req.arrived_at)
+                });
+                (e.req.record_token(end), first)
             };
+            if let Some((rank, ttft)) = first {
+                self.telemetry.record_ttft(rank, ttft.max(0.0));
+            }
             self.report.tokens.push((id, tok));
             if done {
                 self.finish(slot, engine);

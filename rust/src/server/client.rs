@@ -8,8 +8,10 @@
 //! per-class latency percentiles and per-replica attribution),
 //! [`Client::set_policy`] / [`Client::set_policy_replica`],
 //! [`Client::drain`] / [`Client::drain_replica`], [`Client::reopen`],
-//! and [`Client::rolling_restart`]. The operator-facing walkthrough of
-//! these ops lives in `docs/OPERATIONS.md`.
+//! [`Client::rolling_restart`], and — against fleet servers —
+//! [`Client::fleet_stats`], [`Client::set_fleet_policy`] and
+//! [`Client::scale`]. The operator-facing walkthrough of these ops
+//! lives in `docs/OPERATIONS.md`.
 
 use crate::request::{PriorityClass, SamplingParams};
 use crate::util::json::Json;
@@ -80,6 +82,18 @@ pub struct ServerStats {
     pub class_p50_ms: Vec<f64>,
     /// Recent per-class decode-latency p95, milliseconds.
     pub class_p95_ms: Vec<f64>,
+    /// Live per-class TTFT p95, milliseconds (0 until the class saw a
+    /// first token; empty from pre-fleet servers).
+    pub class_ttft_p95_ms: Vec<f64>,
+    /// Replica-profile name ("baseline" when none; aggregates join
+    /// distinct names with `|`; empty from pre-fleet servers).
+    pub profile: String,
+    /// Profile decode-speed factor (aggregate: max across replicas; 0
+    /// from pre-fleet servers).
+    pub decode_speed: f64,
+    /// Profile cost per replica-second (aggregate: sum; 0 from
+    /// pre-fleet servers).
+    pub cost_unit: f64,
     /// Set size (1 for a single-service server; 0 from pre-replica
     /// servers that do not send the field).
     pub n_replicas: u64,
@@ -87,6 +101,37 @@ pub struct ServerStats {
     pub route_policy: String,
     /// Per-replica snapshots, index-aligned with the replicas.
     pub replicas: Vec<ServerStats>,
+}
+
+/// Operator view of a fleet server's provisioned pool (the wire form
+/// of the service layer's `FleetStats`; `fleet_stats` op).
+#[derive(Debug, Clone, Default)]
+pub struct FleetStats {
+    /// Total provisioned pool size (live + parked).
+    pub n_replicas: u64,
+    /// Replicas currently serving.
+    pub live: u64,
+    /// Per-replica profile names, index-aligned.
+    pub profiles: Vec<String>,
+    /// Per-replica parked flags, index-aligned.
+    pub parked: Vec<bool>,
+    /// Fleet policy label (`manual` or the autoscale band spec).
+    pub policy: String,
+    /// Controller decision ticks taken so far.
+    pub ticks: u64,
+    /// Directive log (actions only; `hold` ticks are not logged).
+    pub log: Vec<FleetLogLine>,
+}
+
+/// One fleet directive-log line.
+#[derive(Debug, Clone, Default)]
+pub struct FleetLogLine {
+    /// Seconds since serve start; `None` for manual `scale` entries.
+    pub at_s: Option<f64>,
+    pub directive: String,
+    /// False when the directive could not be carried out (e.g. a spawn
+    /// with nothing parked).
+    pub applied: bool,
 }
 
 /// One decoded server event.
@@ -123,6 +168,12 @@ pub enum ClientEvent {
     /// The rolling restart finished over `replicas` replicas; `policy`
     /// is the post-rotation controller label when one was applied.
     RollingDone { replicas: u64, policy: Option<String> },
+    /// Reply to the `fleet_stats` admin op (fleet servers only).
+    FleetStats(FleetStats),
+    /// Reply to `set_fleet_policy`: the new fleet policy's label.
+    FleetPolicySet { policy: String },
+    /// Reply to `scale`: the live replica count after scaling.
+    Scaled { live: u64 },
     /// Server-side error; `id` is absent for connection-level errors.
     Error { id: Option<u64>, message: String },
     Bye,
@@ -166,6 +217,14 @@ fn parse_stats(ev: &Json) -> ServerStats {
             .as_arr()
             .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
             .unwrap_or_default(),
+        class_ttft_p95_ms: ev
+            .get("class_ttft_p95_ms")
+            .as_arr()
+            .map(|a| a.iter().map(|x| x.as_f64().unwrap_or(0.0)).collect())
+            .unwrap_or_default(),
+        profile: ev.get("profile").as_str().unwrap_or("").into(),
+        decode_speed: ev.get("decode_speed").as_f64().unwrap_or(0.0),
+        cost_unit: ev.get("cost_unit").as_f64().unwrap_or(0.0),
         n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
         route_policy:
             ev.get("route_policy").as_str().unwrap_or("").into(),
@@ -173,6 +232,51 @@ fn parse_stats(ev: &Json) -> ServerStats {
             .get("replicas")
             .as_arr()
             .map(|a| a.iter().map(parse_stats).collect())
+            .unwrap_or_default(),
+    }
+}
+
+fn parse_fleet_stats(ev: &Json) -> FleetStats {
+    FleetStats {
+        n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
+        live: ev.get("live").as_u64().unwrap_or(0),
+        profiles: ev
+            .get("profiles")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|x| x.as_str().unwrap_or("").to_string())
+                    .collect()
+            })
+            .unwrap_or_default(),
+        parked: ev
+            .get("parked")
+            .as_arr()
+            .map(|a| {
+                a.iter().map(|x| x.as_bool().unwrap_or(false)).collect()
+            })
+            .unwrap_or_default(),
+        policy: ev.get("policy").as_str().unwrap_or("").into(),
+        ticks: ev.get("ticks").as_u64().unwrap_or(0),
+        log: ev
+            .get("log")
+            .as_arr()
+            .map(|a| {
+                a.iter()
+                    .map(|e| FleetLogLine {
+                        at_s: e.get("at_s").as_f64(),
+                        directive: e
+                            .get("directive")
+                            .as_str()
+                            .unwrap_or("")
+                            .into(),
+                        applied: e
+                            .get("applied")
+                            .as_bool()
+                            .unwrap_or(false),
+                    })
+                    .collect()
+            })
             .unwrap_or_default(),
     }
 }
@@ -268,6 +372,15 @@ impl Client {
             Some("rolling_done") => ClientEvent::RollingDone {
                 replicas: ev.get("replicas").as_u64().unwrap_or(0),
                 policy: ev.get("policy").as_str().map(|s| s.to_string()),
+            },
+            Some("fleet_stats") => {
+                ClientEvent::FleetStats(parse_fleet_stats(&ev))
+            }
+            Some("fleet_policy_set") => ClientEvent::FleetPolicySet {
+                policy: ev.get("policy").as_str().unwrap_or("").into(),
+            },
+            Some("scaled") => ClientEvent::Scaled {
+                live: ev.get("live").as_u64().unwrap_or(0),
             },
             Some("error") => ClientEvent::Error {
                 id: id(),
@@ -531,6 +644,67 @@ impl Client {
                 ClientEvent::Rolling => {}
                 ClientEvent::Error { id: None, message } => {
                     bail!("rolling restart failed: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Fetch the fleet layer's operator view (v2 `fleet_stats` op;
+    /// errors against servers started without a fleet).
+    pub fn fleet_stats(&mut self) -> Result<FleetStats> {
+        self.send(&Json::obj(vec![("op", Json::from("fleet_stats"))]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::FleetStats(s) => return Ok(s),
+                ClientEvent::Error { id: None, message } => {
+                    bail!("fleet_stats failed: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Hot-swap the fleet controller (v2 `set_fleet_policy` op).
+    /// `policy` is any `FleetPolicyKind` label — `"manual"`,
+    /// `"autoscale"`, or a band spec like
+    /// `"autoscale(spawn=20,retire=1,max=3)"`. Autoscaler streaks and
+    /// cooldowns reset fresh. Returns the new policy's label.
+    pub fn set_fleet_policy(&mut self, policy: &str) -> Result<String> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("set_fleet_policy")),
+            ("policy", Json::from(policy)),
+        ]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::FleetPolicySet { policy } => {
+                    return Ok(policy)
+                }
+                ClientEvent::Error { id: None, message } => {
+                    bail!("set_fleet_policy rejected: {message}")
+                }
+                ClientEvent::Bye => bail!("server shut down"),
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Scale the fleet's live replica count to `target` (v2 `scale`
+    /// op): parked replicas reopen cheapest-first, live ones park
+    /// most-expensive-first; parking only stops admissions, in-flight
+    /// work finishes. Returns the live count after scaling.
+    pub fn scale(&mut self, target: u64) -> Result<u64> {
+        self.send(&Json::obj(vec![
+            ("op", Json::from("scale")),
+            ("target", Json::from(target)),
+        ]))?;
+        loop {
+            match self.read_event()? {
+                ClientEvent::Scaled { live } => return Ok(live),
+                ClientEvent::Error { id: None, message } => {
+                    bail!("scale rejected: {message}")
                 }
                 ClientEvent::Bye => bail!("server shut down"),
                 other => self.pending.push_back(other),

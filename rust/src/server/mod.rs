@@ -19,6 +19,9 @@
 //! → {"op":"drain", "replica":0}                  (v2 admin, single r.)
 //! → {"op":"reopen", "replica":0}                            (v2 admin)
 //! → {"op":"rolling_restart", "policy":"combined"}           (v2 admin)
+//! → {"op":"fleet_stats"}                              (v2 admin, fleet)
+//! → {"op":"set_fleet_policy", "policy":"autoscale"}   (v2 admin, fleet)
+//! → {"op":"scale", "target":2}                        (v2 admin, fleet)
 //! → {"op":"shutdown"}
 //! ```
 //!
@@ -65,9 +68,14 @@
 //!
 //! `class_p50_ms`/`class_p95_ms` are recent decode-latency percentiles
 //! attributed per priority class (rank order: interactive, standard,
-//! batch; 0 until a class has decoded). Per-replica entries carry their
-//! own values; the top-level aggregate takes the worst replica per
-//! class (the conservative set-level SLA read).
+//! batch; 0 until a class has decoded). `class_ttft_p95_ms` is the live
+//! per-class TTFT p95 the same way (fed the moment a first token
+//! lands). Per-replica entries carry their own values; the top-level
+//! aggregate takes the worst replica per class (the conservative
+//! set-level SLA read). `profile`/`decode_speed`/`cost_unit` identify
+//! the [`crate::config::ReplicaProfile`] each replica was deployed
+//! under (the aggregate folds cost as the sum, speed as the max, and
+//! joins distinct profile names with `|`).
 //!
 //! → {"op":"set_policy", "policy":"min(alg1,alg2)"}
 //! ← {"type":"policy_set", "policy":"min(memory-aware(alg1-linear),\
@@ -106,6 +114,34 @@
 //! The connection's read loop keeps running through all of these, so
 //! `stats` (and `cancel`) still work while draining.
 //!
+//! Fleet ops (v2, servers started via [`serve_fleet`] only — others
+//! answer a connection-level error):
+//!
+//! ```text
+//! → {"op":"fleet_stats"}
+//! ← {"type":"fleet_stats", "n_replicas":2, "live":1,
+//!    "profiles":["baseline","economy"], "parked":[false,true],
+//!    "policy":"manual", "ticks":4,
+//!    "log":[{"at_s":1.25,"directive":"retire(0)","applied":true}]}
+//!
+//! → {"op":"set_fleet_policy", "policy":"autoscale"}
+//! ← {"type":"fleet_policy_set", "policy":"autoscale(spawn=12,…)"}
+//!
+//! → {"op":"scale", "target":2}
+//! ← {"type":"scaled", "live":2}
+//! ```
+//!
+//! `fleet_stats` is the operator view of the provisioned pool: one
+//! profile name and parked flag per replica, the fleet policy label,
+//! decision-tick count, and the directive log (`at_s` is seconds since
+//! serve start; `null` for manual `scale` entries). `set_fleet_policy`
+//! hot-swaps the fleet controller (autoscaler bands reset fresh);
+//! `scale` brings the live count to `target` by reopening parked
+//! replicas cheapest-first or parking live ones most-expensive-first —
+//! parking only stops admissions, in-flight work finishes (zero loss).
+//! The server ticks an autoscaled fleet's controller on its
+//! `decide_interval` from a background thread.
+//!
 //! v1 compatibility: a bare `generate` behaves exactly as before —
 //! `accepted`, `token`… then `done`. v2 additionally allows several
 //! concurrent `generate`s per connection (streams are interleaved,
@@ -113,13 +149,13 @@
 
 pub mod client;
 
-use crate::config::PolicyKind;
+use crate::config::{FleetPolicyKind, PolicyKind};
 use crate::engine::Engine;
 use crate::request::{PriorityClass, SamplingParams};
 use crate::scheduler::Scheduler;
 use crate::service::{
-    GenEvent, GenRequest, ReplicaSet, RoutePolicy, Service,
-    ServiceSnapshot, SubmissionHandle,
+    Fleet, FleetStats, GenEvent, GenRequest, ReplicaSet, RoutePolicy,
+    Service, ServiceSnapshot, SubmissionHandle,
 };
 use crate::tokenizer;
 use crate::util::json::Json;
@@ -130,9 +166,11 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-/// Shared server state: the replica set plus the bound address.
+/// Shared server state: the replica set, the optional fleet layer over
+/// it, and the bound address.
 pub struct Server {
     set: Arc<ReplicaSet>,
+    fleet: Option<Arc<Fleet>>,
     pub local_addr: std::net::SocketAddr,
 }
 
@@ -161,10 +199,48 @@ pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
 /// Spawn the TCP acceptor over a replica set. Returns once the listener
 /// is bound; serving continues on background threads until shutdown.
 pub fn serve_replicas(set: ReplicaSet, bind: &str) -> Result<Arc<Server>> {
+    serve_set(Arc::new(set), None, bind)
+}
+
+/// Serve a [`Fleet`]: the fleet's replica set takes the traffic, the
+/// three fleet admin ops come live, and (for an autoscale policy) a
+/// background thread ticks the controller every `decide_interval`
+/// seconds of wall time. Manual fleets skip the ticker's decisions —
+/// [`Fleet::tick`] holds — but the thread keeps watching for a runtime
+/// policy swap.
+pub fn serve_fleet(fleet: Fleet, bind: &str) -> Result<Arc<Server>> {
+    let set = fleet.set().clone();
+    let fleet = Arc::new(fleet);
+    let server = serve_set(set, Some(fleet.clone()), bind)?;
+    {
+        let set = server.set.clone();
+        std::thread::Builder::new()
+            .name("dynabatch-fleet-tick".into())
+            .spawn(move || {
+                let start = std::time::Instant::now();
+                while !set.is_shutdown() {
+                    // Re-read each lap so a runtime policy swap changes
+                    // the cadence; manual fleets idle at a slow poll.
+                    let iv = fleet.decide_interval().unwrap_or(0.25);
+                    std::thread::sleep(std::time::Duration::from_secs_f64(
+                        iv.clamp(0.01, 5.0),
+                    ));
+                    if set.is_shutdown() {
+                        break;
+                    }
+                    let _ = fleet.tick(start.elapsed().as_secs_f64());
+                }
+            })?;
+    }
+    Ok(server)
+}
+
+fn serve_set(set: Arc<ReplicaSet>, fleet: Option<Arc<Fleet>>,
+             bind: &str) -> Result<Arc<Server>> {
     let listener =
         TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let local_addr = listener.local_addr()?;
-    let server = Arc::new(Server { set: Arc::new(set), local_addr });
+    let server = Arc::new(Server { set, fleet, local_addr });
 
     {
         let server = server.clone();
@@ -208,6 +284,12 @@ impl Server {
     /// The replica set behind this server.
     pub fn replica_set(&self) -> &ReplicaSet {
         &self.set
+    }
+
+    /// The fleet layer, when this server was started via
+    /// [`serve_fleet`].
+    pub fn fleet(&self) -> Option<&Arc<Fleet>> {
+        self.fleet.as_ref()
     }
 
     pub fn shutdown(&self) {
@@ -296,6 +378,18 @@ fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
                     .collect(),
             ),
         ),
+        (
+            "class_ttft_p95_ms",
+            Json::Arr(
+                s.class_ttft_p95
+                    .iter()
+                    .map(|&v| Json::Num(v * 1e3))
+                    .collect(),
+            ),
+        ),
+        ("profile", Json::from(s.profile.clone())),
+        ("decode_speed", Json::Num(s.decode_speed)),
+        ("cost_unit", Json::Num(s.cost_unit)),
     ]
 }
 
@@ -323,6 +417,51 @@ fn stats_to_json(set: &ReplicaSet) -> Json {
         ),
     ));
     Json::obj(fields)
+}
+
+/// The `fleet_stats` reply: the operator view of the provisioned pool.
+fn fleet_stats_to_json(s: &FleetStats) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("fleet_stats")),
+        ("n_replicas", Json::from(s.n_replicas)),
+        ("live", Json::from(s.live)),
+        (
+            "profiles",
+            Json::Arr(
+                s.profiles.iter().map(|p| Json::from(p.clone())).collect(),
+            ),
+        ),
+        (
+            "parked",
+            Json::Arr(s.parked.iter().map(|&p| Json::from(p)).collect()),
+        ),
+        ("policy", Json::from(s.policy.clone())),
+        ("ticks", Json::from(s.ticks)),
+        (
+            "log",
+            Json::Arr(
+                s.log
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            // Manual `scale` entries carry no tick time.
+                            (
+                                "at_s",
+                                if e.at.is_finite() {
+                                    Json::Num(e.at)
+                                } else {
+                                    Json::Null
+                                },
+                            ),
+                            ("directive",
+                             Json::from(e.directive.clone())),
+                            ("applied", Json::from(e.applied)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
 }
 
 fn event_to_json(ev: &GenEvent) -> Json {
@@ -640,6 +779,73 @@ fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
                         let _ = write_json(&out, &j);
                     });
                 }
+                Some("fleet_stats") => {
+                    match &server.fleet {
+                        Some(fleet) => {
+                            write_json(&out,
+                                       &fleet_stats_to_json(&fleet.stats()))?;
+                        }
+                        None => {
+                            write_json(&out, &conn_error(
+                                "no fleet configured on this server".into(),
+                            ))?;
+                        }
+                    }
+                }
+                Some("set_fleet_policy") => {
+                    let r = match &server.fleet {
+                        Some(fleet) => match msg.get("policy").as_str() {
+                            Some(p) => FleetPolicyKind::parse(p)
+                                .and_then(|k| fleet.set_policy(k)),
+                            None => Err(anyhow!(
+                                "set_fleet_policy needs a string \
+                                 'policy' field"
+                            )),
+                        },
+                        None => Err(anyhow!(
+                            "no fleet configured on this server"
+                        )),
+                    };
+                    match r {
+                        Ok(label) => {
+                            write_json(&out, &Json::obj(vec![
+                                ("type",
+                                 Json::from("fleet_policy_set")),
+                                ("policy", Json::from(label)),
+                            ]))?;
+                        }
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                        }
+                    }
+                }
+                Some("scale") => {
+                    let r = match &server.fleet {
+                        Some(fleet) => match msg.get("target").as_u64() {
+                            Some(t) => fleet.scale(t as usize),
+                            None => Err(anyhow!(
+                                "scale needs a non-negative integer \
+                                 'target' field"
+                            )),
+                        },
+                        None => Err(anyhow!(
+                            "no fleet configured on this server"
+                        )),
+                    };
+                    match r {
+                        Ok(live) => {
+                            write_json(&out, &Json::obj(vec![
+                                ("type", Json::from("scaled")),
+                                ("live", Json::from(live)),
+                            ]))?;
+                        }
+                        Err(e) => {
+                            write_json(&out,
+                                       &conn_error(format!("{e:#}")))?;
+                        }
+                    }
+                }
                 Some("shutdown") => {
                     write_json(&out, &Json::obj(vec![
                         ("type", Json::from("bye")),
@@ -728,6 +934,27 @@ mod tests {
         })
         .unwrap();
         serve_replicas(set, "127.0.0.1:0").unwrap()
+    }
+
+    fn sim_fleet_server() -> Arc<Server> {
+        let profiles = vec![profile_by_name("baseline").unwrap(),
+                           profile_by_name("economy").unwrap()];
+        let mk = {
+            let profiles = profiles.clone();
+            move |i: usize| {
+                crate::service::ServiceBuilder::new(tiny_real(),
+                                                    cpu_host())
+                    .policy(PolicyKind::Combined)
+                    .eta_tokens(100_000)
+                    .profile(profiles[i].clone())
+            }
+        };
+        let set = std::sync::Arc::new(
+            ReplicaSet::build(2, RoutePolicy::LeastLoaded, mk).unwrap(),
+        );
+        let fleet =
+            Fleet::new(set, profiles, FleetPolicyKind::Manual).unwrap();
+        serve_fleet(fleet, "127.0.0.1:0").unwrap()
     }
 
     fn poll_stats(c: &mut Client, what: &str,
@@ -870,6 +1097,72 @@ mod tests {
         });
         assert!(!s.draining);
         assert_eq!(c.generate("after rotation", 2).unwrap().n_tokens, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_ops_over_wire() {
+        let server = sim_fleet_server();
+        let mut c =
+            Client::connect(&server.local_addr.to_string()).unwrap();
+        let fs = c.fleet_stats().unwrap();
+        assert_eq!(fs.n_replicas, 2);
+        assert_eq!(fs.live, 2);
+        assert_eq!(fs.profiles,
+                   vec!["baseline".to_string(), "economy".to_string()]);
+        assert_eq!(fs.parked, vec![false, false]);
+        assert_eq!(fs.policy, "manual");
+        // Manual scale-down parks the pricier baseline (zero-loss: only
+        // admissions stop); the economy replica keeps serving.
+        assert_eq!(c.scale(1).unwrap(), 1);
+        let fs = c.fleet_stats().unwrap();
+        assert_eq!(fs.live, 1);
+        assert_eq!(fs.parked, vec![true, false],
+                   "most expensive parks first");
+        assert!(fs.log.iter().any(|e| {
+            e.directive == "scale:park(0)" && e.applied && e.at_s.is_none()
+        }), "scale actions are logged: {:?}", fs.log);
+        assert_eq!(c.generate("still serving", 3).unwrap().n_tokens, 3);
+        // Scale back up reopens it.
+        assert_eq!(c.scale(2).unwrap(), 2);
+        poll_stats(&mut c, "replica 0 reopened",
+                   |s| !s.replicas[0].draining);
+        // Profile attribution rides the plain stats op too.
+        let s = poll_stats(&mut c, "profiles published",
+                           |s| !s.profile.is_empty());
+        assert_eq!(s.profile, "baseline|economy");
+        assert_eq!(s.replicas[0].profile, "baseline");
+        assert_eq!(s.replicas[1].profile, "economy");
+        assert!((s.cost_unit - 1.55).abs() < 1e-9,
+                "aggregate cost sums the pool: {}", s.cost_unit);
+        assert_eq!(s.class_ttft_p95_ms.len(), 3);
+        // Swap the fleet policy over the wire; the label round-trips.
+        let label = c
+            .set_fleet_policy(
+                "autoscale(spawn=50,retire=0.1,interval=0.05,max=2)",
+            )
+            .unwrap();
+        assert!(label.starts_with("autoscale(spawn=50"), "{label}");
+        assert_eq!(c.fleet_stats().unwrap().policy, label);
+        // Errors are typed, not hangs.
+        let err = c.scale(0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let err = c.set_fleet_policy("frobnicate").unwrap_err();
+        assert!(err.to_string().contains("fleet policy"), "{err}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_ops_error_without_fleet() {
+        let server = sim_server();
+        let mut c =
+            Client::connect(&server.local_addr.to_string()).unwrap();
+        let err = c.fleet_stats().unwrap_err();
+        assert!(err.to_string().contains("no fleet"), "{err}");
+        let err = c.scale(1).unwrap_err();
+        assert!(err.to_string().contains("no fleet"), "{err}");
+        let err = c.set_fleet_policy("manual").unwrap_err();
+        assert!(err.to_string().contains("no fleet"), "{err}");
         server.shutdown();
     }
 

@@ -1,0 +1,902 @@
+//! Fleet layer — heterogeneous replica profiles and an SLA-driven
+//! autoscaler over the replica tier.
+//!
+//! The replica tier ([`super::replica`]) assumes someone decided how
+//! many replicas to run; this module is that someone. It adds three
+//! pieces on top of a [`ReplicaSet`]:
+//!
+//! * **Profiles** — each replica is deployed under a
+//!   [`ReplicaProfile`](crate::config::ReplicaProfile) (KV pool scale,
+//!   decode/prefill speed, cost per replica-second) instead of being a
+//!   clone of one spec; the profile shows up in every snapshot and
+//!   load view, so routing and scaling can tell replicas apart.
+//! * **[`FleetController`]** — the fleet-level analogue of the batch
+//!   controller: it watches a [`FleetObservation`] (backlog, KV
+//!   pressure, live per-class TTFT p95) and emits a
+//!   [`FleetDirective`]. The shipped [`SlaAutoscaler`] uses hysteresis
+//!   bands with dwell counters and a cooldown so a load step produces
+//!   one action, not a flap.
+//! * **[`Fleet`]** — the executor: a fixed provisioned pool of
+//!   replicas where scale-down parks a replica via the zero-loss
+//!   `begin_drain` primitive (in-flight work finishes; the router
+//!   skips it immediately) and scale-up reopens a parked replica
+//!   matching the requested profile. No replica is ever torn down, so
+//!   scaling is loss-free by construction and spawn latency is one
+//!   `reopen`.
+//!
+//! The virtual-time twin is [`crate::driver::run_fleet_sim`], which
+//! replays the same controller against simulated replicas and prices
+//! the run in cost units (replica-seconds × profile cost).
+
+use super::replica::{ReplicaLoad, ReplicaSet, RoutePolicy};
+use crate::config::{FleetConfig, FleetPolicyKind, ReplicaProfile};
+use crate::request::PriorityClass;
+use anyhow::{bail, Result};
+use std::sync::{Arc, Mutex};
+
+/// What a [`FleetController`] sees each decision tick: the per-replica
+/// load views (draining replicas included — they are the parked pool)
+/// plus the fleet-level per-class TTFT p95 (worst live replica, the
+/// conservative SLA read).
+#[derive(Debug, Clone)]
+pub struct FleetObservation {
+    /// Decision clock (wall time on the live path, virtual time in the
+    /// driver).
+    pub now: f64,
+    /// Index-aligned with the fleet's replicas.
+    pub loads: Vec<ReplicaLoad>,
+    /// Live per-class TTFT p95 (seconds, worst live replica; 0.0 until
+    /// a class has seen first tokens), indexed by
+    /// [`PriorityClass::rank`].
+    pub class_ttft_p95: [f64; PriorityClass::COUNT],
+}
+
+impl FleetObservation {
+    /// Replicas currently serving (not draining/parked).
+    pub fn live(&self) -> usize {
+        self.loads.iter().filter(|l| !l.draining).count()
+    }
+
+    /// Mean backlog per live replica — the primary scale signal (a
+    /// fleet-size-invariant load measure).
+    pub fn backlog_per_live(&self) -> f64 {
+        let live = self.live();
+        if live == 0 {
+            return 0.0;
+        }
+        let backlog: u64 = self
+            .loads
+            .iter()
+            .filter(|l| !l.draining)
+            .map(|l| l.backlog())
+            .sum();
+        backlog as f64 / live as f64
+    }
+
+    /// Fraction of the live fleet's KV blocks in use, in `[0, 1]`.
+    pub fn kv_pressure(&self) -> f64 {
+        let (mut free, mut total) = (0usize, 0usize);
+        for l in self.loads.iter().filter(|l| !l.draining) {
+            free += l.kv_free_blocks;
+            total += l.kv_total_blocks;
+        }
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - free as f64 / total as f64
+    }
+}
+
+/// What a [`FleetController`] wants done. The executor ([`Fleet`] live,
+/// [`crate::driver::run_fleet_sim`] in virtual time) carries it out via
+/// the zero-loss drain/reopen primitives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetDirective {
+    /// Nothing this tick.
+    Hold,
+    /// Bring up one more replica of `profile` (live: reopen a parked
+    /// replica matching it; sim: add a fresh simulated replica).
+    Spawn { profile: ReplicaProfile },
+    /// Park replica `replica`: stop routing to it now, let in-flight
+    /// work finish (zero-loss scale-down).
+    Retire { replica: usize },
+    /// Switch the routing policy (e.g. drop to plain least-loaded when
+    /// the fleet became homogeneous). The sim driver applies it to its
+    /// router; the live [`Fleet`] records it for the embedding layer,
+    /// whose router owns the policy.
+    Repin { route: RoutePolicy },
+}
+
+impl FleetDirective {
+    /// Compact render for directive logs and the wire.
+    pub fn label(&self) -> String {
+        match self {
+            FleetDirective::Hold => "hold".into(),
+            FleetDirective::Spawn { profile } => {
+                format!("spawn({})", profile.name)
+            }
+            FleetDirective::Retire { replica } => {
+                format!("retire({replica})")
+            }
+            FleetDirective::Repin { route } => {
+                format!("repin({})", route.label())
+            }
+        }
+    }
+}
+
+/// Fleet-level analogue of the batch-controller trait: one decision per
+/// tick over the aggregate observation. Implementations are stateful
+/// (hysteresis needs memory) and run under the fleet's lock.
+pub trait FleetController: Send {
+    fn decide(&mut self, obs: &FleetObservation) -> FleetDirective;
+    fn label(&self) -> String;
+}
+
+/// The shipped autoscaler: scale up when the fleet is overloaded
+/// (backlog per live replica above the spawn band, KV pressure above
+/// the spawn threshold, or a class's live TTFT p95 eating past
+/// `spawn_sla_frac` of its target), scale down when it is comfortably
+/// under every band. Hysteresis is three-fold — the up/down bands are
+/// separated, a condition must hold `dwell_decisions` consecutive
+/// ticks, and every action starts a cooldown — so a load step produces
+/// exactly one action instead of a flap (asserted in this module's
+/// tests).
+///
+/// Retirement prefers the most expensive live replica (highest profile
+/// `cost_unit`, ties to the highest index), so burst capacity pays for
+/// itself only while needed.
+pub struct SlaAutoscaler {
+    cfg: FleetConfig,
+    /// What to spawn on scale-up.
+    spawn_profile: ReplicaProfile,
+    up_streak: u32,
+    down_streak: u32,
+    cooldown_until: f64,
+}
+
+impl SlaAutoscaler {
+    pub fn new(cfg: FleetConfig, spawn_profile: ReplicaProfile)
+               -> Result<Self> {
+        cfg.validate()?;
+        spawn_profile.validate()?;
+        Ok(SlaAutoscaler {
+            cfg,
+            spawn_profile,
+            up_streak: 0,
+            down_streak: 0,
+            cooldown_until: f64::NEG_INFINITY,
+        })
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Any spawn trigger tripped?
+    fn overloaded(&self, obs: &FleetObservation) -> bool {
+        if obs.backlog_per_live() > self.cfg.spawn_backlog {
+            return true;
+        }
+        if obs.kv_pressure() > self.cfg.spawn_kv_pressure {
+            return true;
+        }
+        self.cfg.ttft_targets.iter().enumerate().any(|(rank, t)| {
+            t.is_some_and(|t| {
+                obs.class_ttft_p95[rank] > self.cfg.spawn_sla_frac * t
+            })
+        })
+    }
+
+    /// Comfortably under *every* band (the retire side of the
+    /// hysteresis gap)?
+    fn underloaded(&self, obs: &FleetObservation) -> bool {
+        obs.backlog_per_live() < self.cfg.retire_backlog
+            && obs.kv_pressure() < self.cfg.spawn_kv_pressure
+            && self.cfg.ttft_targets.iter().enumerate().all(|(rank, t)| {
+                !t.is_some_and(|t| {
+                    obs.class_ttft_p95[rank]
+                        >= self.cfg.retire_sla_frac * t
+                })
+            })
+    }
+
+    /// The live replica to park: highest profile cost first, ties to
+    /// the highest index (LIFO over equal-cost replicas).
+    fn retire_pick(obs: &FleetObservation) -> Option<usize> {
+        (0..obs.loads.len())
+            .filter(|&i| !obs.loads[i].draining)
+            .max_by(|&a, &b| {
+                obs.loads[a]
+                    .cost_unit
+                    .total_cmp(&obs.loads[b].cost_unit)
+                    .then(a.cmp(&b))
+            })
+    }
+}
+
+impl FleetController for SlaAutoscaler {
+    fn decide(&mut self, obs: &FleetObservation) -> FleetDirective {
+        if obs.now < self.cooldown_until {
+            // Streaks do not accumulate through a cooldown — the fleet
+            // is still absorbing the last action.
+            self.up_streak = 0;
+            self.down_streak = 0;
+            return FleetDirective::Hold;
+        }
+        let live = obs.live();
+        if self.overloaded(obs) {
+            self.down_streak = 0;
+            self.up_streak += 1;
+            if self.up_streak >= self.cfg.dwell_decisions
+                && live < self.cfg.max_replicas
+            {
+                self.up_streak = 0;
+                self.cooldown_until = obs.now + self.cfg.cooldown;
+                return FleetDirective::Spawn {
+                    profile: self.spawn_profile.clone(),
+                };
+            }
+        } else if self.underloaded(obs) {
+            self.up_streak = 0;
+            self.down_streak += 1;
+            if self.down_streak >= self.cfg.dwell_decisions
+                && live > self.cfg.min_replicas
+            {
+                if let Some(replica) = Self::retire_pick(obs) {
+                    self.down_streak = 0;
+                    self.cooldown_until = obs.now + self.cfg.cooldown;
+                    return FleetDirective::Retire { replica };
+                }
+            }
+        } else {
+            // Inside the hysteresis gap: decay both streaks so only
+            // consecutive evidence triggers an action.
+            self.up_streak = 0;
+            self.down_streak = 0;
+        }
+        FleetDirective::Hold
+    }
+
+    fn label(&self) -> String {
+        FleetPolicyKind::Autoscale(self.cfg.clone()).label()
+    }
+}
+
+/// Build the controller a [`FleetPolicyKind`] names. `spawn_profile` is
+/// what an autoscaler brings up on scale-up (`Manual` needs none and
+/// yields `None`).
+pub fn build_fleet_controller(policy: &FleetPolicyKind,
+                              spawn_profile: &ReplicaProfile)
+                              -> Result<Option<Box<dyn FleetController>>> {
+    match policy {
+        FleetPolicyKind::Manual => Ok(None),
+        FleetPolicyKind::Autoscale(cfg) => {
+            let c = SlaAutoscaler::new(cfg.clone(), spawn_profile.clone())?;
+            Ok(Some(Box::new(c)))
+        }
+    }
+}
+
+/// One rendered directive-log entry: when, what, and whether the
+/// executor could carry it out.
+#[derive(Debug, Clone)]
+pub struct FleetLogEntry {
+    pub at: f64,
+    pub directive: String,
+    /// False when the directive could not be executed (e.g. a spawn
+    /// with no parked replica of the requested profile).
+    pub applied: bool,
+}
+
+/// Point-in-time fleet view for operators (the v2 `fleet_stats` op).
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    /// Total provisioned pool size (live + parked).
+    pub n_replicas: usize,
+    /// Replicas currently serving.
+    pub live: usize,
+    /// Per-replica profile names, index-aligned.
+    pub profiles: Vec<String>,
+    /// Per-replica parked flags (draining or shut down), index-aligned.
+    pub parked: Vec<bool>,
+    /// Fleet policy label (`manual` or the autoscale band spec).
+    pub policy: String,
+    /// Decision ticks taken so far.
+    pub ticks: u64,
+    /// The directive log (actions only — `hold` ticks are not logged).
+    pub log: Vec<FleetLogEntry>,
+}
+
+struct FleetInner {
+    policy: FleetPolicyKind,
+    controller: Option<Box<dyn FleetController>>,
+    ticks: u64,
+    log: Vec<FleetLogEntry>,
+}
+
+/// The live fleet executor: a provisioned pool of profiled replicas
+/// where the controller's spawn/retire directives map onto the
+/// zero-loss `reopen`/`begin_drain` primitives. Drive it by calling
+/// [`Fleet::tick`] on a timer (the server does) or manually via
+/// [`Fleet::scale`].
+///
+/// ```
+/// use dynabatch::config::presets::{cpu_host, profile_by_name,
+///                                  tiny_real};
+/// use dynabatch::config::FleetPolicyKind;
+/// use dynabatch::service::{Fleet, ReplicaSet, RoutePolicy,
+///                          ServiceBuilder};
+/// use std::sync::Arc;
+///
+/// let profiles = vec![
+///     profile_by_name("baseline").unwrap(),
+///     profile_by_name("economy").unwrap(),
+/// ];
+/// let mk = {
+///     let profiles = profiles.clone();
+///     move |i: usize| {
+///         ServiceBuilder::new(tiny_real(), cpu_host())
+///             .eta_tokens(100_000)
+///             .profile(profiles[i].clone())
+///     }
+/// };
+/// let set = Arc::new(ReplicaSet::build(
+///     2,
+///     RoutePolicy::Capability { long_prompt: 512 },
+///     mk,
+/// )?);
+/// let fleet =
+///     Fleet::new(set.clone(), profiles, FleetPolicyKind::Manual)?;
+/// fleet.scale(1)?; // parks the pricier baseline; economy serves
+/// assert_eq!(fleet.stats().live, 1);
+/// set.shutdown();
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct Fleet {
+    set: Arc<ReplicaSet>,
+    /// Index-aligned with the set's replicas; immutable after build
+    /// (the pool is provisioned, not grown).
+    profiles: Vec<ReplicaProfile>,
+    inner: Mutex<FleetInner>,
+}
+
+impl Fleet {
+    /// Wrap a built [`ReplicaSet`] whose replica `i` was deployed under
+    /// `profiles[i]` (via [`super::ServiceBuilder::profile`]). All
+    /// replicas start live; park the reserve with [`Fleet::scale`].
+    pub fn new(set: Arc<ReplicaSet>, profiles: Vec<ReplicaProfile>,
+               policy: FleetPolicyKind) -> Result<Fleet> {
+        if profiles.len() != set.len() {
+            bail!(
+                "fleet needs one profile per replica ({} profiles, {} \
+                 replicas)",
+                profiles.len(),
+                set.len()
+            );
+        }
+        for p in &profiles {
+            p.validate()?;
+        }
+        policy.validate()?;
+        let controller =
+            build_fleet_controller(&policy, &Self::spawn_choice(&profiles))?;
+        Ok(Fleet {
+            set,
+            profiles,
+            inner: Mutex::new(FleetInner {
+                policy,
+                controller,
+                ticks: 0,
+                log: Vec::new(),
+            }),
+        })
+    }
+
+    /// The profile an autoscaler spawns: the cheapest in the pool
+    /// (burst capacity should cost as little as possible; capability
+    /// routing keeps latency-bound work on the fast replicas).
+    fn spawn_choice(profiles: &[ReplicaProfile]) -> ReplicaProfile {
+        profiles
+            .iter()
+            .min_by(|a, b| a.cost_unit.total_cmp(&b.cost_unit))
+            .cloned()
+            .unwrap_or_else(ReplicaProfile::baseline)
+    }
+
+    pub fn set(&self) -> &Arc<ReplicaSet> {
+        &self.set
+    }
+
+    pub fn profiles(&self) -> &[ReplicaProfile] {
+        &self.profiles
+    }
+
+    /// Swap the fleet policy (controller state resets — bands and
+    /// streaks start fresh). Returns the new policy's label.
+    pub fn set_policy(&self, policy: FleetPolicyKind) -> Result<String> {
+        policy.validate()?;
+        let controller = build_fleet_controller(
+            &policy,
+            &Self::spawn_choice(&self.profiles),
+        )?;
+        let mut inner = self.inner.lock().unwrap();
+        let label = policy.label();
+        inner.policy = policy;
+        inner.controller = controller;
+        Ok(label)
+    }
+
+    pub fn policy_label(&self) -> String {
+        self.inner.lock().unwrap().policy.label()
+    }
+
+    /// Seconds between decision ticks under the current policy (`None`
+    /// for manual fleets) — what the server's ticker thread sleeps.
+    pub fn decide_interval(&self) -> Option<f64> {
+        match &self.inner.lock().unwrap().policy {
+            FleetPolicyKind::Manual => None,
+            FleetPolicyKind::Autoscale(c) => Some(c.decide_interval),
+        }
+    }
+
+    /// Build the controller's view: the set's live load vector plus the
+    /// worst-live-replica per-class TTFT p95.
+    pub fn observation(&self, now: f64) -> FleetObservation {
+        let loads = self.set.loads();
+        let mut ttft = [0.0f64; PriorityClass::COUNT];
+        for (snap, load) in
+            self.set.snapshots().iter().zip(loads.iter())
+        {
+            if load.draining {
+                continue;
+            }
+            for rank in 0..PriorityClass::COUNT {
+                ttft[rank] = ttft[rank].max(snap.class_ttft_p95[rank]);
+            }
+        }
+        FleetObservation { now, loads, class_ttft_p95: ttft }
+    }
+
+    /// One decision tick: observe, ask the controller, execute the
+    /// directive, log it. Manual fleets hold. Returns the directive
+    /// (executed or not — see [`FleetLogEntry::applied`]).
+    pub fn tick(&self, now: f64) -> Result<FleetDirective> {
+        let obs = self.observation(now);
+        let mut inner = self.inner.lock().unwrap();
+        inner.ticks += 1;
+        let Some(controller) = inner.controller.as_mut() else {
+            return Ok(FleetDirective::Hold);
+        };
+        let directive = controller.decide(&obs);
+        if directive == FleetDirective::Hold {
+            return Ok(directive);
+        }
+        let applied = self.execute(&directive, &obs);
+        inner.log.push(FleetLogEntry {
+            at: now,
+            directive: directive.label(),
+            applied,
+        });
+        Ok(directive)
+    }
+
+    /// Carry a directive out against the pool. Returns false when it
+    /// could not be applied (nothing to reopen / retire target gone) —
+    /// the fleet holds rather than errors, since the next tick gets a
+    /// fresh observation.
+    fn execute(&self, d: &FleetDirective, obs: &FleetObservation) -> bool {
+        match d {
+            FleetDirective::Hold => true,
+            FleetDirective::Spawn { profile } => {
+                // Prefer a parked replica of the requested profile;
+                // any parked capacity (cheapest first) beats holding
+                // while overloaded.
+                match self
+                    .parked_with_profile(obs, &profile.name)
+                    .or_else(|| self.cheapest_parked(obs))
+                {
+                    Some(i) => {
+                        self.set.replica(i).reopen();
+                        true
+                    }
+                    None => false,
+                }
+            }
+            FleetDirective::Retire { replica } => {
+                if *replica < self.set.len()
+                    && !obs.loads[*replica].draining
+                {
+                    self.set.replica(*replica).begin_drain();
+                    true
+                } else {
+                    false
+                }
+            }
+            // The live router's policy belongs to the ReplicaSet the
+            // embedding layer built; record only.
+            FleetDirective::Repin { .. } => false,
+        }
+    }
+
+    /// A parked (draining, not shut down) replica deployed under the
+    /// named profile, preferring the lowest index.
+    fn parked_with_profile(&self, obs: &FleetObservation, name: &str)
+                           -> Option<usize> {
+        (0..self.set.len()).find(|&i| {
+            obs.loads[i].draining
+                && !self.set.replica(i).is_shutdown()
+                && self.profiles[i].name == name
+        })
+    }
+
+    /// The cheapest parked replica, ties to the lowest index.
+    fn cheapest_parked(&self, obs: &FleetObservation) -> Option<usize> {
+        (0..self.set.len())
+            .filter(|&i| {
+                obs.loads[i].draining
+                    && !self.set.replica(i).is_shutdown()
+            })
+            .min_by(|&a, &b| {
+                self.profiles[a]
+                    .cost_unit
+                    .total_cmp(&self.profiles[b].cost_unit)
+                    .then(a.cmp(&b))
+            })
+    }
+
+    /// Manual scaling: bring the live count to `target` by reopening
+    /// parked replicas (cheapest profile first) or parking live ones
+    /// (most expensive first — the same preference the autoscaler
+    /// uses). Returns the live count after. Zero-loss: parking only
+    /// stops admissions; in-flight work finishes.
+    pub fn scale(&self, target: usize) -> Result<usize> {
+        if target == 0 || target > self.set.len() {
+            bail!(
+                "scale target {target} out of range (pool has {} \
+                 replicas; 0 is not a fleet)",
+                self.set.len()
+            );
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let loads = self.set.loads();
+        let mut live: Vec<usize> =
+            (0..loads.len()).filter(|&i| !loads[i].draining).collect();
+        let mut parked: Vec<usize> = (0..loads.len())
+            .filter(|&i| {
+                loads[i].draining && !self.set.replica(i).is_shutdown()
+            })
+            .collect();
+        // Reopen cheapest-first, park most-expensive-first.
+        parked.sort_by(|&a, &b| {
+            self.profiles[a]
+                .cost_unit
+                .total_cmp(&self.profiles[b].cost_unit)
+                .then(a.cmp(&b))
+        });
+        live.sort_by(|&a, &b| {
+            self.profiles[b]
+                .cost_unit
+                .total_cmp(&self.profiles[a].cost_unit)
+                .then(b.cmp(&a))
+        });
+        while live.len() < target {
+            let Some(i) = parked.first().copied() else {
+                bail!(
+                    "scale to {target}: only {} replicas available \
+                     (rest shut down)",
+                    live.len()
+                );
+            };
+            parked.remove(0);
+            self.set.replica(i).reopen();
+            inner.log.push(FleetLogEntry {
+                at: f64::NAN,
+                directive: format!("scale:reopen({i})"),
+                applied: true,
+            });
+            live.push(i);
+        }
+        while live.len() > target {
+            let i = live.remove(0);
+            self.set.replica(i).begin_drain();
+            inner.log.push(FleetLogEntry {
+                at: f64::NAN,
+                directive: format!("scale:park({i})"),
+                applied: true,
+            });
+        }
+        Ok(live.len())
+    }
+
+    pub fn stats(&self) -> FleetStats {
+        let loads = self.set.loads();
+        let inner = self.inner.lock().unwrap();
+        FleetStats {
+            n_replicas: self.set.len(),
+            live: loads.iter().filter(|l| !l.draining).count(),
+            profiles: self
+                .profiles
+                .iter()
+                .map(|p| p.name.clone())
+                .collect(),
+            parked: loads.iter().map(|l| l.draining).collect(),
+            policy: inner.policy.label(),
+            ticks: inner.ticks,
+            log: inner.log.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{cpu_host, profile_by_name, tiny_real};
+    use crate::service::{GenRequest, ServiceBuilder};
+
+    /// Synthetic observation: `n` live replicas sharing `backlog`
+    /// waiting requests (plus `parked` parked ones), KV half-used, no
+    /// TTFT samples.
+    fn obs(now: f64, n: usize, parked: usize, backlog: u32)
+           -> FleetObservation {
+        let mut loads = Vec::new();
+        for i in 0..n {
+            loads.push(ReplicaLoad {
+                waiting: if i == 0 { backlog } else { 0 },
+                kv_free_blocks: 50,
+                kv_total_blocks: 100,
+                ..ReplicaLoad::default()
+            });
+        }
+        for _ in 0..parked {
+            loads.push(ReplicaLoad {
+                draining: true,
+                kv_free_blocks: 100,
+                kv_total_blocks: 100,
+                ..ReplicaLoad::default()
+            });
+        }
+        FleetObservation {
+            now,
+            loads,
+            class_ttft_p95: [0.0; PriorityClass::COUNT],
+        }
+    }
+
+    fn band_cfg() -> FleetConfig {
+        FleetConfig {
+            spawn_backlog: 10.0,
+            retire_backlog: 2.0,
+            dwell_decisions: 2,
+            decide_interval: 0.25,
+            cooldown: 1.0,
+            min_replicas: 1,
+            max_replicas: 3,
+            ..FleetConfig::default()
+        }
+    }
+
+    /// Satellite regression: a load step up then down produces exactly
+    /// one spawn and one retire on the directive log — the hysteresis
+    /// bands, dwell and cooldown must not flap. The synthetic fleet
+    /// executes each directive (live count tracks the controller), so
+    /// a sustained burst cannot be mistaken for N bursts.
+    #[test]
+    fn autoscaler_hysteresis_one_spawn_one_retire() {
+        let mut c = SlaAutoscaler::new(
+            band_cfg(),
+            profile_by_name("economy").unwrap(),
+        )
+        .unwrap();
+        let mut actions: Vec<FleetDirective> = Vec::new();
+        let mut t = 0.0;
+        let mut live = 1usize;
+        let mut parked = 1usize;
+        // Offered load per phase is the total backlog shared by the
+        // live replicas: 16 → 16/1 over the spawn band (10) but
+        // 16/2 = 8 inside the gap; 2 → 2/2 = 1 under the retire band
+        // (2) but 2/1 = 2 back in the gap at the floor.
+        let mut phase = |c: &mut SlaAutoscaler,
+                         actions: &mut Vec<FleetDirective>,
+                         t: &mut f64,
+                         live: &mut usize,
+                         parked: &mut usize,
+                         ticks: usize,
+                         backlog: u32| {
+            for _ in 0..ticks {
+                let d = c.decide(&obs(*t, *live, *parked, backlog));
+                *t += 0.25;
+                match &d {
+                    FleetDirective::Hold => {}
+                    FleetDirective::Spawn { .. } => {
+                        *live += 1;
+                        *parked -= 1;
+                        actions.push(d);
+                    }
+                    FleetDirective::Retire { .. } => {
+                        *live -= 1;
+                        *parked += 1;
+                        actions.push(d);
+                    }
+                    FleetDirective::Repin { .. } => actions.push(d),
+                }
+            }
+        };
+        // Idle at the floor: no retire below min_replicas.
+        phase(&mut c, &mut actions, &mut t, &mut live, &mut parked, 8, 0);
+        assert!(actions.is_empty(), "no action at the floor: {actions:?}");
+        // Load step UP, sustained: dwell accumulates, one spawn, and
+        // the doubled capacity (16/2 = 8 per live) lands in the
+        // hysteresis gap — no second spawn, ever.
+        phase(&mut c, &mut actions, &mut t, &mut live, &mut parked,
+              40, 16);
+        assert_eq!(actions.len(), 1, "exactly one spawn: {actions:?}");
+        assert!(
+            matches!(&actions[0], FleetDirective::Spawn { profile }
+                     if profile.name == "economy"),
+            "{actions:?}"
+        );
+        assert_eq!(live, 2);
+        // Load step DOWN, sustained: one retire back to the floor
+        // (2/2 = 1 under the retire band; at the floor 2/1 = 2 sits in
+        // the gap and min_replicas guards besides).
+        phase(&mut c, &mut actions, &mut t, &mut live, &mut parked,
+              40, 2);
+        assert_eq!(actions.len(), 2, "exactly one retire: {actions:?}");
+        assert!(matches!(actions[1], FleetDirective::Retire { .. }),
+                "{actions:?}");
+        assert_eq!(live, 1);
+        // And quiet stays quiet.
+        phase(&mut c, &mut actions, &mut t, &mut live, &mut parked, 8, 0);
+        assert_eq!(actions.len(), 2, "stable after the cycle: {actions:?}");
+    }
+
+    #[test]
+    fn autoscaler_retires_most_expensive_and_respects_ttft() {
+        let mut cfg = band_cfg();
+        cfg.ttft_targets = [Some(0.2), None, None];
+        cfg.dwell_decisions = 1;
+        let mut c = SlaAutoscaler::new(
+            cfg,
+            profile_by_name("economy").unwrap(),
+        )
+        .unwrap();
+        // TTFT breach alone (backlog fine) must trigger a spawn.
+        let mut o = obs(0.0, 1, 1, 0);
+        o.class_ttft_p95[0] = 0.19; // > 0.9 * 0.2
+        assert!(matches!(c.decide(&o), FleetDirective::Spawn { .. }));
+        // Past the cooldown, an underloaded fleet retires the most
+        // expensive live replica (ties to the higher index).
+        let mut o = obs(10.0, 3, 0, 0);
+        o.loads[0].cost_unit = 1.0;
+        o.loads[1].cost_unit = 1.5;
+        o.loads[2].cost_unit = 1.5;
+        assert_eq!(c.decide(&o),
+                   FleetDirective::Retire { replica: 2 });
+        // A TTFT p95 inside the retire guard band blocks retirement.
+        let mut c2 = SlaAutoscaler::new(
+            {
+                let mut cfg = band_cfg();
+                cfg.ttft_targets = [Some(0.2), None, None];
+                cfg.dwell_decisions = 1;
+                cfg
+            },
+            profile_by_name("economy").unwrap(),
+        )
+        .unwrap();
+        let mut o = obs(0.0, 2, 0, 0);
+        o.class_ttft_p95[0] = 0.15; // above 0.5 * 0.2 → not "comfortable"
+        assert_eq!(c2.decide(&o), FleetDirective::Hold);
+    }
+
+    #[test]
+    fn fleet_scale_parks_and_reopens_zero_loss() {
+        let profiles = vec![
+            profile_by_name("baseline").unwrap(),
+            profile_by_name("economy").unwrap(),
+        ];
+        let mk = {
+            let profiles = profiles.clone();
+            move |i: usize| {
+                ServiceBuilder::new(tiny_real(), cpu_host())
+                    .eta_tokens(100_000)
+                    .profile(profiles[i].clone())
+            }
+        };
+        let set = Arc::new(
+            ReplicaSet::build(2, RoutePolicy::LeastLoaded, mk).unwrap(),
+        );
+        let fleet = Fleet::new(set.clone(), profiles,
+                               FleetPolicyKind::Manual)
+            .unwrap();
+        assert_eq!(fleet.stats().live, 2);
+        // Scaling down parks the most expensive live replica:
+        // baseline (1.0) parks, economy (0.55) keeps serving.
+        assert_eq!(fleet.scale(1).unwrap(), 1);
+        let stats = fleet.stats();
+        assert_eq!(stats.live, 1);
+        assert!(stats.parked[0], "baseline (more expensive) parked");
+        assert!(!stats.parked[1]);
+        // The set still serves through the live replica — zero loss.
+        let h = set.submit(GenRequest::from_text("still on", 2)).unwrap();
+        assert_eq!(h.wait().unwrap().n_tokens, 2);
+        // Scale back up reopens the parked replica.
+        assert_eq!(fleet.scale(2).unwrap(), 2);
+        assert_eq!(fleet.stats().live, 2);
+        // Bad targets refuse.
+        assert!(fleet.scale(0).is_err());
+        assert!(fleet.scale(3).is_err());
+        set.shutdown();
+    }
+
+    #[test]
+    fn fleet_tick_executes_spawn_against_the_parked_pool() {
+        let profiles = vec![
+            profile_by_name("baseline").unwrap(),
+            profile_by_name("economy").unwrap(),
+        ];
+        let mk = {
+            let profiles = profiles.clone();
+            move |i: usize| {
+                ServiceBuilder::new(tiny_real(), cpu_host())
+                    .eta_tokens(100_000)
+                    .profile(profiles[i].clone())
+                    .paused(true)
+            }
+        };
+        let set = Arc::new(
+            ReplicaSet::build(2, RoutePolicy::LeastLoaded, mk).unwrap(),
+        );
+        let cfg = FleetConfig {
+            spawn_backlog: 3.0,
+            retire_backlog: 0.5,
+            dwell_decisions: 1,
+            cooldown: 0.0,
+            max_replicas: 2,
+            ..FleetConfig::default()
+        };
+        let fleet = Fleet::new(
+            set.clone(),
+            profiles,
+            FleetPolicyKind::Autoscale(cfg),
+        )
+        .unwrap();
+        // scale(1) parks the most expensive replica: baseline (1.0)
+        // parks, economy (0.55) keeps serving.
+        assert_eq!(fleet.scale(1).unwrap(), 1);
+        assert!(fleet.stats().parked[0]);
+        // Pile waiting work onto the live (paused) replica…
+        let mut handles = Vec::new();
+        for _ in 0..6 {
+            handles.push(
+                set.replica(1)
+                    .submit(GenRequest::from_text("q", 1))
+                    .unwrap(),
+            );
+        }
+        // …and wait for its snapshot to show the backlog.
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        while set.replica(1).snapshot().waiting < 6 {
+            assert!(std::time::Instant::now() < deadline,
+                    "backlog never published");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        // The tick observes the overload and spawns: the request asks
+        // for "economy" (cheapest in the pool), but only baseline is
+        // parked — the fallback reopens it rather than holding.
+        let d = fleet.tick(0.0).unwrap();
+        assert!(matches!(&d, FleetDirective::Spawn { profile }
+                         if profile.name == "economy"),
+                "{d:?}");
+        let stats = fleet.stats();
+        assert_eq!(stats.live, 2, "spawn reopened the parked replica");
+        assert_eq!(stats.log.last().unwrap().directive, "spawn(economy)");
+        assert!(stats.log.last().unwrap().applied);
+        // Manual policy swap goes back to hold.
+        fleet.set_policy(FleetPolicyKind::Manual).unwrap();
+        assert_eq!(fleet.tick(1.0).unwrap(), FleetDirective::Hold);
+        assert_eq!(fleet.policy_label(), "manual");
+        set.shutdown();
+    }
+}

@@ -28,20 +28,31 @@
 //! Scale-out lives one layer up: [`replica::ReplicaSet`] puts one
 //! submission front door over N `Service` replicas with pluggable
 //! routing ([`replica::RoutePolicy`]) and first-class rolling restarts
-//! built on [`Service::drain`] + [`Service::reopen`].
+//! built on [`Service::drain`] + [`Service::reopen`]. Above that sits
+//! the fleet layer ([`fleet`]): heterogeneous
+//! [`ReplicaProfile`](crate::config::ReplicaProfile)s per replica
+//! (declared via [`ServiceBuilder::profile`]), capability-aware routing,
+//! and an SLA-driven autoscaler ([`fleet::SlaAutoscaler`]) that spawns
+//! and retires replicas through the same zero-loss drain/reopen
+//! primitives.
 //!
 //! The TCP frontend ([`crate::server`]) is a thin protocol adapter over
 //! this module (including the v2 admin ops `stats` / `set_policy` /
 //! `drain`); the wire format is documented there and in DESIGN.md.
 
+pub mod fleet;
 pub mod replica;
 pub mod types;
 
 pub use crate::request::{PriorityClass, SamplingParams};
-pub use replica::{ReplicaLoad, ReplicaSet, RoutePolicy};
+pub use fleet::{Fleet, FleetController, FleetDirective, FleetLogEntry,
+                FleetObservation, FleetStats, SlaAutoscaler};
+pub use replica::{ReplicaLoad, ReplicaSet, RollingError, RouteKey,
+                  RoutePolicy};
 pub use types::{Completion, GenEvent, GenRequest, SubmitError};
 
-use crate::config::{HardwareSpec, ModelSpec, PolicyKind, SchedulerConfig};
+use crate::config::{HardwareSpec, ModelSpec, PolicyKind, ReplicaProfile,
+                    SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
 use crate::request::{FinishReason, Request, RequestId};
@@ -96,6 +107,7 @@ pub struct ServiceBuilder {
     prior_in: f64,
     prior_out: f64,
     engine: Option<EngineBuilderFn>,
+    profile: Option<ReplicaProfile>,
     start_paused: bool,
     id_start: u64,
     id_stride: u64,
@@ -112,6 +124,7 @@ impl ServiceBuilder {
             prior_in: 64.0,
             prior_out: 64.0,
             engine: None,
+            profile: None,
             start_paused: false,
             id_start: 1,
             id_stride: 1,
@@ -155,6 +168,20 @@ impl ServiceBuilder {
         self
     }
 
+    /// Deploy this replica under a [`ReplicaProfile`]: the resolved η
+    /// (KV token capacity — explicit or hardware-derived) is scaled by
+    /// the profile's `kv_scale`, and the default simulated engine runs
+    /// at the profile's decode/prefill speeds
+    /// ([`SimEngine::with_profile`]). A custom `.engine(...)` closure
+    /// wins over the profile's timing but the KV scaling still applies.
+    /// The profile's name, decode speed and cost unit are surfaced in
+    /// [`ServiceSnapshot`] so routers and the fleet controller can tell
+    /// heterogeneous replicas apart.
+    pub fn profile(mut self, profile: ReplicaProfile) -> Self {
+        self.profile = Some(profile);
+        self
+    }
+
     /// Seed the length estimators until real samples arrive.
     pub fn priors(mut self, prior_in: f64, prior_out: f64) -> Self {
         self.prior_in = prior_in;
@@ -188,10 +215,21 @@ impl ServiceBuilder {
         self.model.validate()?;
         self.hardware.validate()?;
         self.cfg.validate().context("service scheduler config")?;
-        let eta = self.eta_tokens.unwrap_or_else(|| {
+        let profiled = self.profile.is_some();
+        let profile = match self.profile {
+            Some(p) => {
+                p.validate().context("replica profile")?;
+                p
+            }
+            None => ReplicaProfile::baseline(),
+        };
+        let base_eta = self.eta_tokens.unwrap_or_else(|| {
             self.hardware.kv_budget(&self.model)
                 / self.model.kv_bytes_per_token().max(1)
         });
+        // η is the baseline capacity; the profile scales it (bigger or
+        // smaller KV pool than the anchoring node).
+        let eta = ((base_eta as f64) * profile.kv_scale).round() as u64;
         if eta < self.cfg.block_tokens as u64 {
             bail!(
                 "KV budget of {eta} tokens cannot hold a single block — \
@@ -208,6 +246,14 @@ impl ServiceBuilder {
         );
         let engine = match self.engine {
             Some(f) => f,
+            None if profiled => {
+                let (m, h) = (self.model, self.hardware);
+                let p = profile.clone();
+                Box::new(move || {
+                    Ok(Box::new(SimEngine::with_profile(&m, &h, &p))
+                        as Box<dyn Engine>)
+                })
+            }
             None => {
                 let (m, h) = (self.model, self.hardware);
                 Box::new(move || {
@@ -215,8 +261,8 @@ impl ServiceBuilder {
                 })
             }
         };
-        Service::spawn(engine, sched, self.start_paused, self.id_start,
-                       self.id_stride)
+        Service::spawn(engine, sched, &profile, self.start_paused,
+                       self.id_start, self.id_stride)
     }
 }
 
@@ -254,6 +300,18 @@ pub struct ServiceSnapshot {
     /// Recent per-class decode-latency p95 (seconds) — the router's
     /// per-class SLA headroom signal and the v2 `stats` payload.
     pub class_lat_p95: [f64; PriorityClass::COUNT],
+    /// Live per-class TTFT p95 (seconds; 0.0 until the class has seen a
+    /// first token). Fed by the scheduler the moment a request's first
+    /// token lands, so TTFT-driven routing and autoscaling never wait
+    /// for request completion.
+    pub class_ttft_p95: [f64; PriorityClass::COUNT],
+    /// Name of the [`ReplicaProfile`] this replica was deployed under
+    /// ("baseline" when none was set).
+    pub profile: String,
+    /// The profile's relative decode speed (1.0 = anchoring node).
+    pub decode_speed: f64,
+    /// The profile's relative cost per replica-second.
+    pub cost_unit: f64,
 }
 
 struct Shared {
@@ -296,19 +354,28 @@ impl Service {
     where
         F: FnOnce() -> Result<Box<dyn Engine>> + Send + 'static,
     {
-        Self::spawn(Box::new(engine_builder), sched, false, 1, 1)
+        Self::spawn(Box::new(engine_builder), sched,
+                    &ReplicaProfile::baseline(), false, 1, 1)
     }
 
     fn spawn(engine_builder: EngineBuilderFn, sched: Scheduler,
-             paused: bool, id_start: u64, id_stride: u64)
-             -> Result<Service> {
+             profile: &ReplicaProfile, paused: bool, id_start: u64,
+             id_stride: u64) -> Result<Service> {
         let (control, commands) = std::sync::mpsc::channel();
+        // The profile identity is static for the service's lifetime;
+        // `publish` never touches these fields, so seeding the initial
+        // snapshot is enough.
         let shared = Arc::new(Shared {
             shutdown: AtomicBool::new(false),
             paused: AtomicBool::new(paused),
             draining: AtomicBool::new(false),
             pending_submits: AtomicU64::new(0),
-            snapshot: Mutex::new(ServiceSnapshot::default()),
+            snapshot: Mutex::new(ServiceSnapshot {
+                profile: profile.name.clone(),
+                decode_speed: profile.decode_speed,
+                cost_unit: profile.cost_unit,
+                ..ServiceSnapshot::default()
+            }),
         });
         let worker = {
             let shared = shared.clone();
@@ -625,23 +692,32 @@ fn resolve_drains(no_pending_submits: bool, armed: &mut bool,
 #[derive(Default)]
 struct ClassLatCache {
     decode_steps: u64,
+    ttft_samples: u64,
     fresh: bool,
     p50: [f64; PriorityClass::COUNT],
     p95: [f64; PriorityClass::COUNT],
+    ttft_p95: [f64; PriorityClass::COUNT],
 }
 
 impl ClassLatCache {
     fn refresh(&mut self, sched: &Scheduler) {
-        if self.fresh && sched.stats.decode_steps == self.decode_steps {
+        if self.fresh
+            && sched.stats.decode_steps == self.decode_steps
+            && sched.telemetry.ttft_samples() == self.ttft_samples
+        {
             return;
         }
         self.decode_steps = sched.stats.decode_steps;
+        self.ttft_samples = sched.telemetry.ttft_samples();
         self.fresh = true;
         self.p50 = std::array::from_fn(|rank| {
             sched.telemetry.decode_latency_class_p(rank, 50.0)
         });
         self.p95 = std::array::from_fn(|rank| {
             sched.telemetry.decode_latency_class_p(rank, 95.0)
+        });
+        self.ttft_p95 = std::array::from_fn(|rank| {
+            sched.telemetry.ttft_class_p(rank, 95.0)
         });
     }
 }
@@ -674,6 +750,7 @@ fn publish(shared: &Shared, sched: &Scheduler, label: &str,
     lat_cache.refresh(sched);
     snap.class_lat_p50 = lat_cache.p50;
     snap.class_lat_p95 = lat_cache.p95;
+    snap.class_ttft_p95 = lat_cache.ttft_p95;
 }
 
 /// The serving loop: drain control commands, step the scheduler, stream
@@ -1017,6 +1094,52 @@ mod tests {
             })
             .collect();
         assert_eq!(ids, vec![3, 7, 11]);
+        service.shutdown();
+    }
+
+    #[test]
+    fn profile_scales_eta_and_tags_snapshot() {
+        let profile = ReplicaProfile {
+            name: "half-kv".into(),
+            kv_scale: 0.5,
+            decode_speed: 1.2,
+            prefill_speed: 1.1,
+            cost_unit: 1.3,
+        };
+        let service = ServiceBuilder::new(tiny_real(), cpu_host())
+            .eta_tokens(100_000)
+            .profile(profile)
+            .paused(true)
+            .build()
+            .unwrap();
+        let snap = snapshot_when(&service, |s| s.kv_total_blocks > 0);
+        assert_eq!(snap.profile, "half-kv");
+        assert_eq!(snap.decode_speed, 1.2);
+        assert_eq!(snap.cost_unit, 1.3);
+        // η was halved: 50_000 tokens of KV blocks, not 100_000.
+        let unscaled = sim_service();
+        let base =
+            snapshot_when(&unscaled, |s| s.kv_total_blocks > 0);
+        assert_eq!(base.profile, "baseline");
+        assert_eq!(base.cost_unit, 1.0);
+        assert_eq!(snap.kv_total_blocks * 2, base.kv_total_blocks);
+        service.shutdown();
+        unscaled.shutdown();
+    }
+
+    #[test]
+    fn snapshot_surfaces_live_ttft_p95() {
+        let service = sim_service();
+        let h = service
+            .submit(GenRequest::from_text("ttft probe", 4)
+                .with_class(PriorityClass::Interactive))
+            .unwrap();
+        h.wait().unwrap();
+        let rank = PriorityClass::Interactive.rank();
+        let snap = snapshot_when(&service, |s| {
+            s.class_ttft_p95[rank] > 0.0
+        });
+        assert!(snap.class_ttft_p95[rank] > 0.0);
         service.shutdown();
     }
 

@@ -23,6 +23,16 @@
 //!   [`ReplicaSet::reconfigure_partitions`] (e.g. a tight
 //!   `per-class-sla(interactive=50)` on the reserved partition, plain
 //!   Algorithm 1 on the rest).
+//! * **capability:L** — heterogeneous-fleet aware: interactive traffic
+//!   prefers the fastest decoders ([`ReplicaLoad::decode_speed`]),
+//!   prompts of `L`+ tokens prefer the biggest KV pools
+//!   ([`ReplicaLoad::kv_total_blocks`]), everything else is
+//!   least-loaded. Ties fall through to the least-loaded criteria
+//!   (backlog, per-class decode p95, per-class TTFT p95, KV headroom).
+//!
+//! Policies route on a [`RouteKey`] — the submitting class plus the
+//! prompt length — so capability routing can see prompt size without
+//! the policies growing bespoke signatures.
 //!
 //! Request ids are namespaced per replica (replica `k` of `n` allocates
 //! `k+1, k+1+n, …` — see [`super::ServiceBuilder::request_ids`]), so a
@@ -46,6 +56,29 @@ use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+/// What the route policies see of one submission: the priority class
+/// plus the prompt length (capability routing sends long prompts to
+/// big-KV replicas). `From<PriorityClass>` gives a zero-length key for
+/// call sites that only care about class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteKey {
+    pub class: PriorityClass,
+    /// Prompt length in tokens (0 when unknown).
+    pub prompt_len: usize,
+}
+
+impl RouteKey {
+    pub fn new(class: PriorityClass, prompt_len: usize) -> Self {
+        RouteKey { class, prompt_len }
+    }
+}
+
+impl From<PriorityClass> for RouteKey {
+    fn from(class: PriorityClass) -> Self {
+        RouteKey { class, prompt_len: 0 }
+    }
+}
+
 /// How the front door picks a replica for each submission.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RoutePolicy {
@@ -54,30 +87,49 @@ pub enum RoutePolicy {
     /// Smallest backlog wins (waiting + running + resuming off the live
     /// snapshot); ties go to the replica with the most per-class SLA
     /// headroom for the submitting class (lowest attributed decode p95
-    /// from the replica snapshots), then more free KV blocks, then the
-    /// lower index.
+    /// from the replica snapshots, then lowest live TTFT p95), then
+    /// more free KV blocks, then the lower index.
     LeastLoaded,
     /// Interactive requests go least-loaded over replicas
     /// `[0, reserved)`; standard/batch go least-loaded over
     /// `[reserved, n)`. A class falls back to the other partition only
     /// when its own is entirely draining.
     ClassPinned { reserved: usize },
+    /// Heterogeneous-fleet routing: interactive requests prefer the
+    /// fastest decoders ([`ReplicaLoad::decode_speed`] descending),
+    /// prompts of `long_prompt`+ tokens prefer the biggest KV pools
+    /// ([`ReplicaLoad::kv_total_blocks`] descending), everything else
+    /// routes least-loaded. All ties fall through to the least-loaded
+    /// criteria, so a homogeneous fleet degrades to `least-loaded`.
+    Capability { long_prompt: u32 },
 }
+
+/// Default long-prompt threshold for `capability` routing (tokens).
+pub const DEFAULT_LONG_PROMPT: u32 = 512;
 
 impl RoutePolicy {
     /// Parse a CLI/wire label: `round-robin` | `least-loaded` |
-    /// `class-pinned:R`.
+    /// `class-pinned:R` | `capability[:L]` (L defaults to
+    /// [`DEFAULT_LONG_PROMPT`] tokens).
     pub fn parse(s: &str) -> Result<Self> {
         let s = s.trim();
         if let Some(rest) = s.strip_prefix("class-pinned:") {
             return Ok(RoutePolicy::ClassPinned { reserved: rest.parse()? });
         }
+        if let Some(rest) = s.strip_prefix("capability:") {
+            return Ok(RoutePolicy::Capability {
+                long_prompt: rest.parse()?,
+            });
+        }
         Ok(match s {
             "round-robin" | "rr" => RoutePolicy::RoundRobin,
             "least-loaded" | "ll" => RoutePolicy::LeastLoaded,
+            "capability" | "cap" => RoutePolicy::Capability {
+                long_prompt: DEFAULT_LONG_PROMPT,
+            },
             other => bail!(
-                "unknown route policy '{other}' \
-                 (want round-robin|least-loaded|class-pinned:R)"
+                "unknown route policy '{other}' (want round-robin|\
+                 least-loaded|class-pinned:R|capability[:L])"
             ),
         })
     }
@@ -89,19 +141,30 @@ impl RoutePolicy {
             RoutePolicy::ClassPinned { reserved } => {
                 format!("class-pinned:{reserved}")
             }
+            RoutePolicy::Capability { long_prompt } => {
+                format!("capability:{long_prompt}")
+            }
         }
     }
 
     /// Structural validation against a set size (wire input reaches
     /// this, so bad shapes must be errors, not panics downstream).
     pub fn validate(&self, n_replicas: usize) -> Result<()> {
-        if let RoutePolicy::ClassPinned { reserved } = self {
-            if *reserved == 0 || *reserved >= n_replicas {
-                bail!(
-                    "class-pinned needs 0 < reserved < n_replicas \
-                     (reserved={reserved}, n_replicas={n_replicas})"
-                );
+        match self {
+            RoutePolicy::ClassPinned { reserved } => {
+                if *reserved == 0 || *reserved >= n_replicas {
+                    bail!(
+                        "class-pinned needs 0 < reserved < n_replicas \
+                         (reserved={reserved}, n_replicas={n_replicas})"
+                    );
+                }
             }
+            RoutePolicy::Capability { long_prompt } => {
+                if *long_prompt == 0 {
+                    bail!("capability needs a long-prompt threshold >= 1");
+                }
+            }
+            _ => {}
         }
         Ok(())
     }
@@ -111,8 +174,10 @@ impl RoutePolicy {
     /// is the caller's monotone submission counter (consumed by
     /// round-robin, ignored otherwise). Pure over the load snapshot so
     /// the live router and the virtual-time driver share one policy.
-    pub fn order(&self, class: PriorityClass, loads: &[ReplicaLoad],
+    pub fn order(&self, key: impl Into<RouteKey>, loads: &[ReplicaLoad],
                  rr: usize) -> Vec<usize> {
+        let key = key.into();
+        let class = key.class;
         match self {
             RoutePolicy::RoundRobin => {
                 if loads.is_empty() {
@@ -143,30 +208,64 @@ impl RoutePolicy {
                 out.extend(least_loaded(&other, loads, class.rank()));
                 out
             }
+            RoutePolicy::Capability { long_prompt } => {
+                let mut v: Vec<usize> = (0..loads.len())
+                    .filter(|&i| !loads[i].draining)
+                    .collect();
+                let rank = class.rank();
+                if class == PriorityClass::Interactive {
+                    // Latency-bound work onto the fastest decoders.
+                    v.sort_by(|&a, &b| {
+                        loads[b]
+                            .decode_speed
+                            .total_cmp(&loads[a].decode_speed)
+                            .then(load_cmp(&loads[a], &loads[b], rank))
+                            .then(a.cmp(&b))
+                    });
+                } else if key.prompt_len >= *long_prompt as usize {
+                    // Long prompts onto the biggest KV pools.
+                    v.sort_by(|&a, &b| {
+                        loads[b]
+                            .kv_total_blocks
+                            .cmp(&loads[a].kv_total_blocks)
+                            .then(load_cmp(&loads[a], &loads[b], rank))
+                            .then(a.cmp(&b))
+                    });
+                } else {
+                    v = least_loaded(&v, loads, rank);
+                }
+                v
+            }
         }
     }
 
     /// First choice of [`Self::order`], if any replica is routable.
-    pub fn pick(&self, class: PriorityClass, loads: &[ReplicaLoad],
+    pub fn pick(&self, key: impl Into<RouteKey>, loads: &[ReplicaLoad],
                 rr: usize) -> Option<usize> {
-        self.order(class, loads, rr).first().copied()
+        self.order(key, loads, rr).first().copied()
     }
 }
 
+/// The shared load comparison (less = better) for a request of class
+/// rank `rank`: backlog, then per-class SLA headroom (lower attributed
+/// decode p95 for that class = more headroom), then lower live per-class
+/// TTFT p95, then free KV blocks.
+fn load_cmp(a: &ReplicaLoad, b: &ReplicaLoad, rank: usize)
+            -> std::cmp::Ordering {
+    a.backlog()
+        .cmp(&b.backlog())
+        .then(a.class_p95[rank].total_cmp(&b.class_p95[rank]))
+        .then(a.class_ttft_p95[rank].total_cmp(&b.class_ttft_p95[rank]))
+        .then(b.kv_free_blocks.cmp(&a.kv_free_blocks))
+}
+
 /// Sort candidate replicas best-first for a request of class rank
-/// `rank`: backlog, then per-class SLA headroom (lower attributed decode
-/// p95 for that class = more headroom), then free KV blocks, then index.
+/// `rank` by [`load_cmp`], then index.
 fn least_loaded(idx: &[usize], loads: &[ReplicaLoad], rank: usize)
                 -> Vec<usize> {
     let mut v = idx.to_vec();
     v.sort_by(|&a, &b| {
-        loads[a]
-            .backlog()
-            .cmp(&loads[b].backlog())
-            .then(loads[a].class_p95[rank]
-                .total_cmp(&loads[b].class_p95[rank]))
-            .then(loads[b].kv_free_blocks.cmp(&loads[a].kv_free_blocks))
-            .then(a.cmp(&b))
+        load_cmp(&loads[a], &loads[b], rank).then(a.cmp(&b))
     });
     v
 }
@@ -174,7 +273,7 @@ fn least_loaded(idx: &[usize], loads: &[ReplicaLoad], rank: usize)
 /// Point-in-time load view of one replica, as the route policies consume
 /// it. Built from [`ServiceSnapshot`]s on the live path and from
 /// scheduler queue lengths on the virtual-time driver path.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy)]
 pub struct ReplicaLoad {
     pub waiting: u32,
     pub running: u32,
@@ -186,13 +285,47 @@ pub struct ReplicaLoad {
     /// the virtual-time driver path, which reads queues synchronously.
     pub in_flight_to: u32,
     pub kv_free_blocks: usize,
+    /// Total KV pool size — the capability router's long-prompt signal
+    /// (heterogeneous fleets size pools per [`ReplicaProfile`]).
+    ///
+    /// [`ReplicaProfile`]: crate::config::ReplicaProfile
+    pub kv_total_blocks: usize,
+    /// The replica profile's relative decode speed (1.0 = baseline) —
+    /// the capability router's interactive signal.
+    pub decode_speed: f64,
+    /// The replica profile's relative cost per replica-second — the
+    /// fleet controller's retire-preference signal.
+    pub cost_unit: f64,
     /// Recent decode-latency p95 attributed per class (seconds, indexed
     /// by [`PriorityClass::rank`]; 0.0 until that class has decoded on
     /// the replica) — the per-class SLA budget signal `least-loaded`
     /// tie-breaks on.
     pub class_p95: [f64; PriorityClass::COUNT],
+    /// Live per-class TTFT p95 (seconds; 0.0 until the class has seen a
+    /// first token on the replica).
+    pub class_ttft_p95: [f64; PriorityClass::COUNT],
     /// Draining or shut down: not a routing candidate.
     pub draining: bool,
+}
+
+impl Default for ReplicaLoad {
+    /// Neutral-profile idle replica (decode speed and cost at the
+    /// baseline 1.0 — zeros would misroute capability traffic).
+    fn default() -> Self {
+        ReplicaLoad {
+            waiting: 0,
+            running: 0,
+            resuming: 0,
+            in_flight_to: 0,
+            kv_free_blocks: 0,
+            kv_total_blocks: 0,
+            decode_speed: 1.0,
+            cost_unit: 1.0,
+            class_p95: [0.0; PriorityClass::COUNT],
+            class_ttft_p95: [0.0; PriorityClass::COUNT],
+            draining: false,
+        }
+    }
 }
 
 impl ReplicaLoad {
@@ -205,6 +338,57 @@ impl ReplicaLoad {
             + self.in_flight_to as u64
     }
 }
+
+/// Why a [`ReplicaSet::rolling_restart`] stopped, identifying the
+/// replica that failed its rotation step. Downcastable from the anyhow
+/// error (like [`SubmitError`]), so operators and the wire layer can
+/// report *which* replica aborted the rotation instead of a generic
+/// failure — replicas before it are already rotated and reopened,
+/// replicas after it untouched.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RollingError {
+    /// The replica's drain failed (its worker died mid-drain).
+    Drain { replica: usize, message: String },
+    /// The drain went through but the controller hot-swap failed; the
+    /// replica is left drained (not reopened) so it cannot serve under
+    /// the stale controller.
+    Reconfigure { replica: usize, message: String },
+    /// The replica's worker was already gone — draining a dead worker
+    /// would hang, so the rotation refuses it up front.
+    Dead { replica: usize },
+}
+
+impl RollingError {
+    /// The replica whose rotation step failed.
+    pub fn replica(&self) -> usize {
+        match self {
+            RollingError::Drain { replica, .. }
+            | RollingError::Reconfigure { replica, .. }
+            | RollingError::Dead { replica } => *replica,
+        }
+    }
+}
+
+impl std::fmt::Display for RollingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RollingError::Drain { replica, message } => {
+                write!(f, "rolling restart: drain of replica {replica} \
+                           failed: {message}")
+            }
+            RollingError::Reconfigure { replica, message } => {
+                write!(f, "rolling restart: reconfigure of replica \
+                           {replica} failed (left drained): {message}")
+            }
+            RollingError::Dead { replica } => {
+                write!(f, "rolling restart: replica {replica} is shut \
+                           down — rotation refused")
+            }
+        }
+    }
+}
+
+impl std::error::Error for RollingError {}
 
 /// N `Service` replicas behind one submission front door. Cheap to share
 /// behind an `Arc`; dropping it shuts every replica down (via the
@@ -361,7 +545,11 @@ impl ReplicaSet {
                     resuming: snap.resuming,
                     in_flight_to,
                     kv_free_blocks: snap.kv_free_blocks,
+                    kv_total_blocks: snap.kv_total_blocks,
+                    decode_speed: snap.decode_speed,
+                    cost_unit: snap.cost_unit,
                     class_p95: snap.class_lat_p95,
+                    class_ttft_p95: snap.class_ttft_p95,
                     // The snapshot's flag is published once per loop
                     // iteration; read the authoritative flags so
                     // routing reacts to begin_drain/shutdown
@@ -391,10 +579,11 @@ impl ReplicaSet {
                          -> Result<(usize, SubmissionHandle)> {
         const MAX_ROUTE_PASSES: usize = 8;
         let mut last_err: Option<anyhow::Error> = None;
+        let key = RouteKey::new(req.class, req.prompt_tokens.len());
         for _pass in 0..MAX_ROUTE_PASSES {
             let loads = self.loads();
             let rr = self.rr.fetch_add(1, Ordering::Relaxed);
-            let order = self.route.order(req.class, &loads, rr);
+            let order = self.route.order(key, &loads, rr);
             if order.is_empty() {
                 break; // the whole set is draining
             }
@@ -446,17 +635,21 @@ impl ReplicaSet {
     /// KV accounting sum, `b_t` sums (total concurrency target),
     /// `controller` is the replicas' common label (distinct labels join
     /// with `|`), `draining` means *every* replica is draining — i.e.
-    /// the whole set refuses work — and the per-class latency
+    /// the whole set refuses work — and the per-class latency/TTFT
     /// percentiles take the worst (max) replica, the conservative
     /// set-level SLA read (exact percentiles cannot be folded from
     /// per-replica ones; per-replica values stay attributed under
-    /// `stats.replicas`).
+    /// `stats.replicas`). Profile fields fold fleet-wise: `profile`
+    /// joins the distinct profile names with `|`, `cost_unit` sums
+    /// (the fleet's cost rate in baseline-replica-seconds per second)
+    /// and `decode_speed` takes the fastest replica.
     pub fn aggregate(snaps: &[ServiceSnapshot]) -> ServiceSnapshot {
         let mut agg = ServiceSnapshot {
             draining: !snaps.is_empty(),
             ..ServiceSnapshot::default()
         };
         let mut labels: Vec<&str> = Vec::new();
+        let mut profiles: Vec<&str> = Vec::new();
         for s in snaps {
             agg.running += s.running;
             agg.waiting += s.waiting;
@@ -484,12 +677,22 @@ impl ReplicaSet {
                     agg.class_lat_p50[rank].max(s.class_lat_p50[rank]);
                 agg.class_lat_p95[rank] =
                     agg.class_lat_p95[rank].max(s.class_lat_p95[rank]);
+                agg.class_ttft_p95[rank] =
+                    agg.class_ttft_p95[rank].max(s.class_ttft_p95[rank]);
             }
+            agg.cost_unit += s.cost_unit;
+            agg.decode_speed = agg.decode_speed.max(s.decode_speed);
             if !labels.contains(&s.controller.as_str()) {
                 labels.push(s.controller.as_str());
             }
+            if !s.profile.is_empty()
+                && !profiles.contains(&s.profile.as_str())
+            {
+                profiles.push(s.profile.as_str());
+            }
         }
         agg.controller = labels.join("|");
+        agg.profile = profiles.join("|");
         agg
     }
 
@@ -636,6 +839,14 @@ impl ReplicaSet {
     /// replica's post-rotation controller label. With a single replica
     /// the set refuses submissions during its own window — run ≥ 2
     /// replicas for a zero-downtime rotation.
+    ///
+    /// A step failure surfaces as a downcastable [`RollingError`]
+    /// naming the replica that aborted the rotation: replicas before it
+    /// are rotated and reopened, replicas after it untouched, and a
+    /// [`RollingError::Reconfigure`] leaves its replica drained so it
+    /// cannot serve under the stale controller. A replica whose worker
+    /// is already gone fails fast with [`RollingError::Dead`] instead
+    /// of hanging its drain.
     pub fn rolling_restart(&self, policy: Option<&PolicyKind>)
                            -> Result<Vec<String>> {
         if let Some(k) = policy {
@@ -646,11 +857,23 @@ impl ReplicaSet {
         let _turn = self.rotation.lock().unwrap();
         let mut labels = Vec::with_capacity(self.replicas.len());
         for (i, s) in self.replicas.iter().enumerate() {
-            s.drain()
-                .map_err(|e| anyhow!("rolling drain replica {i}: {e:#}"))?;
+            if s.is_shutdown() {
+                return Err(anyhow::Error::new(RollingError::Dead {
+                    replica: i,
+                }));
+            }
+            s.drain().map_err(|e| {
+                anyhow::Error::new(RollingError::Drain {
+                    replica: i,
+                    message: format!("{e:#}"),
+                })
+            })?;
             let label = match policy {
                 Some(k) => s.reconfigure(k.clone()).map_err(|e| {
-                    anyhow!("rolling reconfigure replica {i}: {e:#}")
+                    anyhow::Error::new(RollingError::Reconfigure {
+                        replica: i,
+                        message: format!("{e:#}"),
+                    })
                 })?,
                 None => s.snapshot().controller,
             };
@@ -803,6 +1026,97 @@ mod tests {
     }
 
     #[test]
+    fn capability_routes_by_profile_and_prompt_len() {
+        let p = RoutePolicy::Capability { long_prompt: 512 };
+        assert_eq!(RoutePolicy::parse("capability").unwrap(), p);
+        assert_eq!(RoutePolicy::parse(&p.label()).unwrap(), p);
+        assert_eq!(RoutePolicy::parse("cap").unwrap(), p);
+        assert!(RoutePolicy::Capability { long_prompt: 0 }
+            .validate(2)
+            .is_err());
+        // Replica 0: fast decoder, small KV. Replica 1: slow decoder,
+        // big KV. Replica 2: baseline, but idle (others have backlog 2).
+        let mut fast = load(1, 1, 10);
+        fast.decode_speed = 1.5;
+        fast.kv_total_blocks = 100;
+        let mut big = load(1, 1, 10);
+        big.decode_speed = 0.9;
+        big.kv_total_blocks = 400;
+        let mut idle = load(0, 0, 10);
+        idle.kv_total_blocks = 100;
+        let loads = vec![fast, big, idle];
+        // Interactive chases decode speed even over the idle replica.
+        let key = RouteKey::new(PriorityClass::Interactive, 8);
+        assert_eq!(p.order(key, &loads, 0), vec![0, 2, 1]);
+        // A long batch prompt chases KV pool size.
+        let long = RouteKey::new(PriorityClass::Batch, 2048);
+        assert_eq!(p.order(long, &loads, 0), vec![1, 2, 0]);
+        // Short non-interactive work falls back to least-loaded.
+        let short = RouteKey::new(PriorityClass::Batch, 8);
+        assert_eq!(p.pick(short, &loads, 0), Some(2));
+        // Draining replicas stay excluded.
+        let mut l2 = loads.clone();
+        l2[0].draining = true;
+        assert_eq!(p.order(key, &l2, 0), vec![2, 1]);
+        // Homogeneous profiles degrade to least-loaded order.
+        let homo = vec![load(2, 0, 10), load(0, 0, 10)];
+        assert_eq!(p.order(key, &homo, 0),
+                   RoutePolicy::LeastLoaded.order(key, &homo, 0));
+    }
+
+    #[test]
+    fn rolling_restart_surfaces_dead_replica_as_typed_error() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(3, RoutePolicy::RoundRobin, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        // Kill replica 1's worker; the rotation must refuse it by name
+        // instead of hanging on its drain or aborting anonymously.
+        set.replica(1).shutdown();
+        let err = set.rolling_restart(None).unwrap_err();
+        let rolling = err
+            .downcast_ref::<RollingError>()
+            .expect("rolling restart error must downcast");
+        assert_eq!(*rolling, RollingError::Dead { replica: 1 });
+        assert_eq!(rolling.replica(), 1);
+        assert!(err.to_string().contains("replica 1"), "{err}");
+        // Replica 0 was rotated before the failure and must serve.
+        assert!(!set.replica(0).is_draining());
+        set.shutdown();
+    }
+
+    #[test]
+    fn drain_reopen_drain_single_replica_reentrancy() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(2, RoutePolicy::LeastLoaded, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        // Regression: drain → reopen → drain on one replica must
+        // resolve every time (the drain waiter plumbing re-arms), and
+        // the set keeps serving throughout via the other replica.
+        for round in 0..2 {
+            set.drain_replica(0).unwrap();
+            assert!(set.replica(0).is_draining(), "round {round}");
+            let (i, h) = set
+                .submit_routed(GenRequest::from_text("during", 1))
+                .unwrap();
+            assert_eq!(i, 1, "round {round}: routed around the drain");
+            assert_eq!(h.wait().unwrap().n_tokens, 1);
+            set.reopen_replica(0).unwrap();
+            assert!(!set.replica(0).is_draining(), "round {round}");
+            let h = set.replica(0)
+                .submit(GenRequest::from_text("after", 1))
+                .unwrap();
+            assert_eq!(h.wait().unwrap().n_tokens, 1);
+        }
+        set.shutdown();
+    }
+
+    #[test]
     fn aggregate_folds_counters_and_labels() {
         let mk = |controller: &str, draining: bool| ServiceSnapshot {
             running: 2,
@@ -827,6 +1141,14 @@ mod tests {
             } else {
                 [0.08, 0.0, 0.1]
             },
+            class_ttft_p95: if draining {
+                [0.30, 0.0, 0.0]
+            } else {
+                [0.10, 0.0, 0.0]
+            },
+            profile: if draining { "big-kv" } else { "baseline" }.into(),
+            decode_speed: if draining { 0.9 } else { 1.0 },
+            cost_unit: if draining { 1.4 } else { 1.0 },
         };
         let a = ReplicaSet::aggregate(&[mk("x", true), mk("x", false)]);
         assert_eq!(a.running, 4);
@@ -834,10 +1156,17 @@ mod tests {
         assert_eq!(a.waiting_by_class, [2, 4, 0]);
         assert_eq!(a.class_lat_p95, [0.08, 0.0, 0.2],
                    "set-level per-class p95 is the worst replica");
+        assert_eq!(a.class_ttft_p95, [0.30, 0.0, 0.0],
+                   "set-level per-class TTFT p95 is the worst replica");
         assert_eq!(a.kv_total_blocks, 20);
         assert_eq!(a.b_t, 16);
         assert_eq!(a.finished, 8);
         assert_eq!(a.controller, "x", "common label collapses");
+        assert_eq!(a.profile, "big-kv|baseline",
+                   "distinct profiles join");
+        assert!((a.cost_unit - 2.4).abs() < 1e-12,
+                "fleet cost rate sums the profiles");
+        assert_eq!(a.decode_speed, 1.0, "fastest replica");
         assert!(!a.draining, "one live replica keeps the set serving");
         let b = ReplicaSet::aggregate(&[mk("x", true), mk("y", true)]);
         assert_eq!(b.controller, "x|y");

@@ -17,6 +17,12 @@
 //! router's per-class SLA budgets and the v2 `stats` op. Only decode
 //! steps are attributed — cancelled or shed requests never contribute a
 //! latency sample, so a class's window reflects work it actually ran.
+//!
+//! Time-to-first-token is tracked per class the same way
+//! ([`Telemetry::record_ttft`], one sample per request at its first
+//! generated token), so TTFT p95 is available *live* — in
+//! [`Observation::ttft_by_class`], in service snapshots, and to the
+//! capability router — instead of only post-hoc in run metrics.
 
 use crate::request::PriorityClass;
 use crate::util::stats::{RingLog, SlidingWindow, Welford};
@@ -66,6 +72,12 @@ pub struct Observation {
     /// driving the class's SLA loop after its traffic left). A step's
     /// latency is attributed to every class present in its decode batch.
     pub decode_latency_by_class: [Option<f64>; PriorityClass::COUNT],
+    /// Recent mean time-to-first-token per class (seconds), indexed by
+    /// [`PriorityClass::rank`]; `None` until the class has produced a
+    /// first token. One sample per request (at its first generated
+    /// token), so unlike the decode windows there is no step-count
+    /// staleness horizon — TTFT is a queueing signal, not a per-step one.
+    pub ttft_by_class: [Option<f64>; PriorityClass::COUNT],
 }
 
 impl Observation {
@@ -92,6 +104,7 @@ impl Observation {
             waiting: 10,
             waiting_by_class: [0, 10, 0],
             decode_latency_by_class: [None; PriorityClass::COUNT],
+            ttft_by_class: [None; PriorityClass::COUNT],
         }
     }
 }
@@ -118,6 +131,14 @@ pub struct Telemetry {
     /// accounting); experiment drivers lift the caps via
     /// [`Self::retain_full_traces`].
     class_lat_log: [RingLog<f64>; PriorityClass::COUNT],
+    /// Per-class TTFT windows + bounded traces, one sample per request at
+    /// its first generated token ([`Self::record_ttft`]).
+    class_ttft: [SlidingWindow; PriorityClass::COUNT],
+    class_ttft_log: [RingLog<f64>; PriorityClass::COUNT],
+    /// Total TTFT samples recorded — the freshness counter snapshot
+    /// caches key on (the service layer republishes percentiles only
+    /// when this moves).
+    ttft_samples: u64,
     /// Classed decode steps seen in total, and per class the count at
     /// its last attribution — the staleness gauge: a class absent from
     /// the last `latency_window` decode steps reports `None` on
@@ -151,6 +172,13 @@ impl Telemetry {
             class_lat_log: std::array::from_fn(|_| {
                 RingLog::bounded(CLASS_LAT_CAP)
             }),
+            class_ttft: std::array::from_fn(|_| {
+                SlidingWindow::new(latency_window)
+            }),
+            class_ttft_log: std::array::from_fn(|_| {
+                RingLog::bounded(CLASS_LAT_CAP)
+            }),
+            ttft_samples: 0,
             classed_steps: 0,
             class_last_seen: [0; PriorityClass::COUNT],
             class_stale_after: latency_window.max(1) as u64,
@@ -165,6 +193,9 @@ impl Telemetry {
     /// per-class percentiles; the serve path keeps the bounded rings.
     pub fn retain_full_traces(&mut self) {
         for log in &mut self.class_lat_log {
+            log.set_unbounded();
+        }
+        for log in &mut self.class_ttft_log {
             log.set_unbounded();
         }
     }
@@ -214,6 +245,35 @@ impl Telemetry {
                 self.class_last_seen[rank] = self.classed_steps;
             }
         }
+    }
+
+    /// Observe one request's time-to-first-token (seconds from arrival to
+    /// its first generated token), attributed to the class with
+    /// [`PriorityClass::rank`] `rank`. Exactly one sample per request —
+    /// the scheduler calls this the step a request's first token lands.
+    pub fn record_ttft(&mut self, rank: usize, ttft: f64) {
+        self.class_ttft[rank].push(ttft);
+        self.class_ttft_log[rank].push(ttft);
+        self.ttft_samples += 1;
+    }
+
+    /// Total TTFT samples recorded across classes — moves exactly when a
+    /// new first token lands, so snapshot caches can key refreshes on it.
+    pub fn ttft_samples(&self) -> u64 {
+        self.ttft_samples
+    }
+
+    /// Percentile of the recent TTFTs attributed to class `rank` (0.0
+    /// before any sample) — the live per-class TTFT p95 surfaced in
+    /// service snapshots and read by the capability router.
+    pub fn ttft_class_p(&self, rank: usize, p: f64) -> f64 {
+        self.class_ttft[rank].percentile(p)
+    }
+
+    /// The bounded (or, after [`Self::retain_full_traces`], full) trace
+    /// of per-request TTFTs attributed to class `rank`.
+    pub fn class_ttfts(&self, rank: usize) -> &RingLog<f64> {
+        &self.class_ttft_log[rank]
     }
 
     /// Is the class's latency window live — any samples, and attributed
@@ -297,6 +357,13 @@ impl Telemetry {
                     Some(self.class_lat[rank].mean())
                 } else {
                     None
+                }
+            }),
+            ttft_by_class: std::array::from_fn(|rank| {
+                if self.class_ttft[rank].is_empty() {
+                    None
+                } else {
+                    Some(self.class_ttft[rank].mean())
                 }
             }),
         }
@@ -438,6 +505,33 @@ mod tests {
         t.record_decode_step_classed(0.05, 4, [2, 0, 2]);
         let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
         assert!(obs.decode_latency_by_class[0].is_some());
+    }
+
+    #[test]
+    fn ttft_attribution_is_per_class_and_live() {
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert_eq!(obs.ttft_by_class, [None; 3]);
+        assert_eq!(t.ttft_samples(), 0);
+        assert_eq!(t.ttft_class_p(0, 95.0), 0.0, "no sample → 0.0");
+        t.record_ttft(0, 0.10);
+        t.record_ttft(0, 0.30);
+        t.record_ttft(2, 1.50);
+        assert_eq!(t.ttft_samples(), 3);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert!((obs.ttft_by_class[0].unwrap() - 0.20).abs() < 1e-12);
+        assert_eq!(obs.ttft_by_class[1], None, "no first token yet");
+        assert_eq!(obs.ttft_by_class[2], Some(1.50));
+        assert_eq!(t.ttft_class_p(0, 100.0), 0.30);
+        assert_eq!(t.class_ttfts(0).to_vec(), vec![0.10, 0.30]);
+        assert_eq!(t.class_ttfts(1).len(), 0);
+        // Decode-step staleness never blanks TTFT: it is one sample per
+        // request, not per step.
+        for _ in 0..8 {
+            t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
+        }
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        assert!(obs.ttft_by_class[0].is_some());
     }
 
     #[test]
