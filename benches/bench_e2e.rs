@@ -32,6 +32,7 @@ fn main() {
                 output: LengthDist::around(344.5, 1024),
                 n_requests: n,
                 seed: 42,
+                prefix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,

@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
             output: LengthDist::around(447.5, 2048),
             n_requests: 400,
             seed: 44,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -1,0 +1,65 @@
+//! Prefix-cache quickstart: the same Zipf multi-tenant burst run twice
+//! on a deliberately small KV pool — once paying the full prompt per
+//! request, once sharing each tenant's system prefix through the
+//! ref-counted radix tree (`SchedulerConfig::prefix_cache`).
+//!
+//!     cargo run --release --example prefix_quickstart
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::{run_sim, SimScenario};
+use dynabatch::workload::{Arrival, LengthDist, SharedPrefixSpec, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+
+    // 4 tenants, each with a 512-token system prefix; requests add a
+    // ~32-token private question and decode 64 tokens. The 6000-token
+    // KV pool fits only a handful of full prompts — but dozens of
+    // requests once the tenant prefixes are shared.
+    let workload = Workload {
+        name: "prefix-quickstart".into(),
+        arrival: Arrival::AllAtOnce,
+        prompt: LengthDist::around(32.0, 256), // private-suffix length
+        output: LengthDist::Fixed(64),
+        n_requests: 120,
+        seed: 91,
+        prefix: Some(SharedPrefixSpec {
+            n_prefixes: 4,
+            prefix_tokens: 512,
+            zipf_s: 1.1,
+        }),
+    };
+    println!("model: {} — 4 tenants x 512-token shared prefix, \
+              6000-token KV pool", model.name);
+
+    for prefix_cache in [false, true] {
+        let s = SimScenario {
+            model: model.clone(),
+            hardware: hardware.clone(),
+            sched: SchedulerConfig {
+                policy: PolicyKind::StaticGreedy { max: 256 },
+                prefix_cache,
+                ..SchedulerConfig::default()
+            },
+            workload: workload.clone(),
+            eta_tokens_override: Some(6_000),
+            swap_tokens: 0,
+        };
+        let m = run_sim(&s)?;
+        let hit = m
+            .prefix_hit_rate
+            .map(|h| format!("{:.0}%", h * 100.0))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "prefix_cache={:5}  {:7.0} tok/s  makespan {:6.1}s  \
+             mean batch {:5.1}  hit-rate {}",
+            prefix_cache, m.throughput, m.makespan, m.mean_batch, hit
+        );
+    }
+    println!("\nSharing admits each tenant prefix once instead of per \
+              request, so the same\npool carries a far larger decode \
+              batch. See `dynabatch prefix` for the\ncapacity regression \
+              against the no-sharing baseline.");
+    Ok(())
+}

@@ -21,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         output: LengthDist::around(344.5, 1024),
         n_requests: 400,
         seed: 42,
+        prefix: None,
     };
 
     for policy in [

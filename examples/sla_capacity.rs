@@ -31,6 +31,7 @@ fn main() -> anyhow::Result<()> {
             output: LengthDist::around(61.5, 2048),
             n_requests: 300,
             seed: 43,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
                                         max: 1024 },
         n_requests: 300,
         seed: 7,
+        prefix: None,
     };
     trace::save(&path, &w.generate())?;
     println!("recorded {} → {}", w.name, path.display());

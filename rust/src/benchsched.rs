@@ -392,6 +392,8 @@ pub mod legacy {
                 running_decode as u32,
                 pending_prefill as u32,
                 std::array::from_fn(|i| self.waiting[i].len() as u32),
+                0,
+                0.0,
             );
             if self.steps_since_decision >= self.cfg.interval_steps {
                 let mut d = self.controller.decide(&obs);

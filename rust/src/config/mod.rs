@@ -501,6 +501,12 @@ pub struct SchedulerConfig {
     pub swap_high_water: f64,
     /// Low-water mark that disengages it (hysteresis band).
     pub swap_low_water: f64,
+    /// Route admission-time allocations through the ref-counted prefix
+    /// tree (`kv::KvBlockManager::enable_prefix_cache`): identical
+    /// prompt prefixes share KV blocks, cold prefixes are LRU-evicted
+    /// under pressure. Off by default — the scheduler is then
+    /// bit-identical to the no-sharing one.
+    pub prefix_cache: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -530,6 +536,7 @@ impl Default for SchedulerConfig {
             swap_pressure: false,
             swap_high_water: 0.90,
             swap_low_water: 0.70,
+            prefix_cache: false,
         }
     }
 }

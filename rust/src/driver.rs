@@ -199,6 +199,9 @@ pub fn run_sim_with_requests(scenario: &SimScenario,
         &final_policy.sla_targets(scenario.sched.d_sla),
         scenario.sched.eps_d,
     );
+    if sched.kv.prefix_enabled() {
+        m.prefix_hit_rate = Some(sched.kv.prefix_hit_rate());
+    }
     Ok(m)
 }
 
@@ -959,6 +962,7 @@ pub fn switch_sweep(scenario: &SimScenario, to: PolicyKind,
                     .seed
                     .wrapping_mul(0x9e37_79b9)
                     .wrapping_add(spike_n as u64),
+                prefix: None,
             };
             let base_n = requests.len() as u64;
             let mut spike = spike_w.generate();
@@ -1147,6 +1151,75 @@ pub fn capacity_search(
     Ok(CapacityResult { capacity_qps: lo, at_capacity: at })
 }
 
+/// Outcome of the prefix-sharing capacity regression
+/// ([`prefix_capacity`], the `dynabatch prefix` subcommand): the same
+/// multi-tenant workload capacity-searched twice — prefix cache off
+/// (baseline) and on (shared) — at the same SLA.
+#[derive(Debug, Clone)]
+pub struct PrefixCapacityResult {
+    pub baseline: CapacityResult,
+    pub shared: CapacityResult,
+    /// `shared.capacity_qps / baseline.capacity_qps` (0.0 when the
+    /// baseline sustains nothing).
+    pub ratio: f64,
+}
+
+impl PrefixCapacityResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("baseline_qps", Json::Num(self.baseline.capacity_qps)),
+            ("shared_qps", Json::Num(self.shared.capacity_qps)),
+            ("ratio", Json::Num(self.ratio)),
+            (
+                "shared_hit_rate",
+                self.shared
+                    .at_capacity
+                    .prefix_hit_rate
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+            ("baseline", self.baseline.at_capacity.to_json()),
+            ("shared", self.shared.at_capacity.to_json()),
+        ])
+    }
+}
+
+/// Capacity with and without prefix sharing on the scenario's
+/// multi-tenant workload: two [`capacity_search`]es differing only in
+/// `sched.prefix_cache`, same seed, same SLA. On memory-bound
+/// shared-prefix traffic the shared run admits the tenant prefix once
+/// instead of per request, so it sustains a higher rate — the
+/// regression the `dynabatch prefix` scenario pins. Errors unless the
+/// workload carries a [`SharedPrefixSpec`]
+/// (`workload.prefix`) — without materialized prompt tokens there is
+/// nothing to share and the comparison would be vacuous.
+///
+/// [`SharedPrefixSpec`]: crate::workload::SharedPrefixSpec
+pub fn prefix_capacity(scenario: &SimScenario, d_sla: f64, eps_d: f64,
+                       pct: f64, probe_requests: usize, resolution: f64)
+                       -> Result<PrefixCapacityResult> {
+    if scenario.workload.prefix.is_none() {
+        bail!("prefix_capacity needs a multi-tenant workload \
+               (workload.prefix = Some(SharedPrefixSpec {{ … }}))");
+    }
+    let mut base = scenario.clone();
+    base.sched.prefix_cache = false;
+    let mut shrd = scenario.clone();
+    shrd.sched.prefix_cache = true;
+    let baseline =
+        capacity_search(&base, d_sla, eps_d, pct, probe_requests,
+                        resolution)?;
+    let shared =
+        capacity_search(&shrd, d_sla, eps_d, pct, probe_requests,
+                        resolution)?;
+    let ratio = if baseline.capacity_qps > 0.0 {
+        shared.capacity_qps / baseline.capacity_qps
+    } else {
+        0.0
+    };
+    Ok(PrefixCapacityResult { baseline, shared, ratio })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1169,6 +1242,7 @@ mod tests {
                 output: LengthDist::Fixed(128),
                 n_requests: n,
                 seed: 5,
+                prefix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -1215,6 +1289,7 @@ mod tests {
                 output: LengthDist::around(344.5, 1024),
                 n_requests: 300,
                 seed: 5,
+                prefix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -1692,6 +1767,7 @@ mod tests {
                 output: LengthDist::Fixed(128),
                 n_requests: 300,
                 seed: 11,
+                prefix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -1768,6 +1844,100 @@ mod tests {
         assert_eq!(set.aggregate.per_class[0].n_requests, 0);
         assert!(set.aggregate.per_class[1].tbt_p95 > 0.0);
         assert_eq!(set.aggregate.per_class[0].sla_target, Some(0.5));
+    }
+
+    /// A memory-bound multi-tenant regime: tiny KV pool, a 512-token
+    /// tenant prefix dwarfing the 32-token private suffix, greedy
+    /// batching so admission is gated by KV room alone. Sharing admits
+    /// each tenant prefix once instead of per request.
+    fn prefix_scenario() -> SimScenario {
+        use crate::workload::SharedPrefixSpec;
+        let model = pangu_7b();
+        let hardware = node_for(&model);
+        SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig {
+                policy: PolicyKind::StaticGreedy { max: 256 },
+                ..SchedulerConfig::default()
+            },
+            workload: Workload {
+                name: "prefix-mt".into(),
+                arrival: Arrival::Poisson { rate: 1.0 },
+                prompt: LengthDist::Fixed(32), // private-suffix length
+                output: LengthDist::Fixed(64),
+                n_requests: 60,
+                seed: 91,
+                prefix: Some(SharedPrefixSpec {
+                    n_prefixes: 4,
+                    prefix_tokens: 512,
+                    zipf_s: 1.1,
+                }),
+            },
+            eta_tokens_override: Some(6_000),
+            swap_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn prefix_sharing_multiplies_capacity_deterministically() {
+        // The PR's headline regression: on Zipf shared-prefix traffic,
+        // prefix sharing must sustain ≥ 1.5× the users of the
+        // no-sharing baseline at the same p95 SLA — and the whole
+        // comparison must be bit-identical per seed.
+        let s = prefix_scenario();
+        let r = prefix_capacity(&s, 0.5, 0.01, 95.0, 60, 0.25).unwrap();
+        assert!(r.baseline.capacity_qps > 0.0,
+                "baseline sustains something");
+        assert!(
+            r.ratio >= 1.5,
+            "sharing must carry ≥1.5× the users: baseline {:.2} qps, \
+             shared {:.2} qps (ratio {:.2})",
+            r.baseline.capacity_qps,
+            r.shared.capacity_qps,
+            r.ratio
+        );
+        assert!(
+            r.shared.at_capacity.prefix_hit_rate.unwrap() > 0.5,
+            "the hot tenant prefixes must actually hit"
+        );
+        assert!(r.baseline.at_capacity.prefix_hit_rate.is_none(),
+                "the baseline never consulted the tree");
+        let again = prefix_capacity(&s, 0.5, 0.01, 95.0, 60, 0.25)
+            .unwrap();
+        assert_eq!(r.to_json().to_string(), again.to_json().to_string(),
+                   "same seed → bit-identical regression");
+    }
+
+    #[test]
+    fn prefix_capacity_requires_a_multi_tenant_workload() {
+        let mut s = prefix_scenario();
+        s.workload.prefix = None;
+        assert!(prefix_capacity(&s, 0.5, 0.01, 95.0, 40, 0.25).is_err());
+    }
+
+    #[test]
+    fn shared_run_reports_hit_rate_and_beats_baseline() {
+        // One fixed-rate run each way: sharing at minimum matches the
+        // baseline's completion and reports its hit rate; the baseline
+        // reports None (no tree consulted).
+        let mut s = prefix_scenario();
+        s.workload.arrival = Arrival::AllAtOnce;
+        s.workload.n_requests = 120;
+        let base = run_sim(&s).unwrap();
+        assert_eq!(base.prefix_hit_rate, None);
+        s.sched.prefix_cache = true;
+        let shared = run_sim(&s).unwrap();
+        assert_eq!(shared.n_finished, 120);
+        assert!(shared.prefix_hit_rate.unwrap() > 0.5,
+                "hit rate {:?}", shared.prefix_hit_rate);
+        assert!(
+            shared.makespan < base.makespan,
+            "sharing must finish the memory-bound burst sooner: \
+             {:.2}s vs {:.2}s",
+            shared.makespan,
+            base.makespan
+        );
     }
 
     #[test]

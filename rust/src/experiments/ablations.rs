@@ -23,6 +23,7 @@ fn base_scenario(n: usize) -> SimScenario {
             output: LengthDist::around(344.5, 1024),
             n_requests: n,
             seed: 17,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -107,6 +107,7 @@ pub fn fig2(n_requests: usize) -> Result<Fig2Result> {
             output: LengthDist::around(381.9, 1024),
             n_requests,
             seed: 7,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -1,0 +1,1313 @@
+//! Paged KV-cache block manager (the vLLM-style memory substrate).
+//!
+//! GPU KV memory is divided into fixed-size blocks of `block_tokens`
+//! tokens. Each running request owns a block table; blocks move between
+//! the GPU free pool, request tables, and an (optional) CPU swap pool.
+//! The manager is purely accounting — actual tensor storage lives in the
+//! engine — but its numbers *are* the memory constraint `M(b_t) ≤ M_max`
+//! the paper's Algorithm 1 manages, so its invariants are property-tested
+//! hard (no leaks, no double-free, exact token↔block arithmetic).
+//!
+//! ## Data layout (hot-path overhaul)
+//!
+//! Block tables live in a slab: a dense `Vec<Option<Allocation>>` plus a
+//! free-list, with a `RequestId → slot` map consulted only at the
+//! admission boundary. The scheduler caches each running request's
+//! [`KvSlot`] and drives the per-step path through the `*_at` methods,
+//! so decode-growth checks are a single array index. Aggregates the
+//! telemetry reads every step — [`KvBlockManager::used_tokens`],
+//! [`KvBlockManager::resident_requests`] — are maintained incrementally
+//! on every allocate/grow/free/swap and are O(1) reads; they used to be
+//! full `BTreeMap` walks, twice per scheduler step.
+//! [`KvBlockManager::check_invariants`] still recomputes everything from
+//! scratch and cross-checks the cached counters.
+//!
+//! ## Prefix sharing (opt-in)
+//!
+//! With [`KvBlockManager::enable_prefix_cache`], admission-time
+//! allocations route through a ref-counted prefix tree keyed on whole
+//! `block_tokens`-sized chunks of the prompt token ids: matched chunks
+//! are shared across requests (one device block, many users), missed
+//! chunks are inserted for future requests, and only the *unshared*
+//! remainder is charged to the request's private table. Cold zero-ref
+//! prefixes stay cached and are LRU-evicted under memory pressure
+//! instead of failing allocation. The decode fast path is untouched:
+//! a request's private table begins block-aligned after its shared
+//! prefix, so [`KvBlockManager::can_grow_at`]/[`KvBlockManager::grow_at`]
+//! never consult the tree. This makes *physical* vs *logical* token
+//! accounting distinct — see [`KvBlockManager::used_tokens`] vs
+//! [`KvBlockManager::logical_tokens`].
+
+mod prefix;
+
+use crate::request::RequestId;
+use prefix::{PrefixCache, NO_NODE};
+use std::collections::HashMap;
+
+/// Dense slab handle for a live block table. Valid from `allocate` until
+/// `free`; the owner (the scheduler) must drop it at free time. Survives
+/// swap-out/swap-in (the allocation record stays in place).
+pub type KvSlot = u32;
+
+/// Sentinel for "no KV slot cached".
+pub const KV_NO_SLOT: KvSlot = u32::MAX;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KvError {
+    OutOfBlocks { needed: usize, free: usize },
+    /// The id has no block table; `op` names the rejected operation
+    /// ("grow", "free", "swap_out", "swap_in") since these messages
+    /// surface verbatim in v2 error events.
+    UnknownRequest { id: RequestId, op: &'static str },
+    AlreadyAllocated(RequestId),
+    SwapSpaceExhausted { needed: usize, free: usize },
+    /// `swap_out` on a request whose blocks already live in the CPU
+    /// pool.
+    AlreadySwapped(RequestId),
+    /// `swap_in` on a request that is resident on device.
+    NotSwapped(RequestId),
+}
+
+impl std::fmt::Display for KvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            KvError::OutOfBlocks { needed, free } => {
+                write!(f, "out of KV blocks: need {needed}, free {free}")
+            }
+            KvError::UnknownRequest { id, op } => {
+                write!(f, "unknown request {id}: no block table to {op}")
+            }
+            KvError::AlreadyAllocated(id) => {
+                write!(f, "request {id} already has a block table")
+            }
+            KvError::SwapSpaceExhausted { needed, free } => {
+                write!(f, "swap space exhausted: need {needed}, free {free}")
+            }
+            KvError::AlreadySwapped(id) => {
+                write!(f, "request {id} is already swapped out")
+            }
+            KvError::NotSwapped(id) => {
+                write!(f, "request {id} is not swapped out")
+            }
+        }
+    }
+}
+
+impl std::error::Error for KvError {}
+
+/// What [`KvBlockManager::allocate_shared`] carved out of the prefix
+/// tree for one request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SharedAlloc {
+    /// Tokens served by shared tree blocks (hit + freshly inserted).
+    pub shared_tokens: u32,
+    /// Tokens matched against *pre-existing* tree chunks — their KV
+    /// entries are already computed, so their prefill can be skipped.
+    pub warm_tokens: u32,
+}
+
+#[derive(Debug, Clone)]
+struct Allocation {
+    id: RequestId,
+    /// Private blocks (excludes shared tree blocks).
+    blocks: usize,
+    /// Private tokens (excludes `shared_tokens`).
+    tokens: u32,
+    swapped: bool,
+    /// Tokens shared through the prefix tree (whole chunks only).
+    shared_tokens: u32,
+    /// Deepest pinned tree node, or [`NO_NODE`] without sharing.
+    prefix_tail: u32,
+    /// Pinned path length in chunks (== shared_tokens / block_tokens).
+    prefix_chunks: u32,
+}
+
+/// Block-granular KV accounting for one device (or TP group).
+#[derive(Debug, Clone)]
+pub struct KvBlockManager {
+    block_tokens: u32,
+    total_blocks: usize,
+    free_blocks: usize,
+    /// CPU swap pool capacity in blocks (0 disables swapping).
+    swap_blocks_total: usize,
+    swap_blocks_free: usize,
+    /// Slab of live block tables + free-list of vacated slots.
+    slots: Vec<Option<Allocation>>,
+    free_slots: Vec<KvSlot>,
+    /// Admission-boundary index; the per-step path uses [`KvSlot`]s.
+    by_id: HashMap<RequestId, KvSlot>,
+    /// Cached Σ *private* tokens of on-device (non-swapped) tables.
+    used_tokens_device: u64,
+    /// Cached count of on-device (non-swapped) tables — O(1) reads.
+    resident: usize,
+    /// Cached Σ `shared_tokens` over on-device tables (logical view).
+    shared_tokens_logical: u64,
+    /// The prefix tree; `None` keeps every allocation fully private
+    /// and the manager behaviorally identical to the pre-sharing one.
+    prefix: Option<PrefixCache>,
+    /// Cumulative counters for telemetry.
+    pub stat_allocs: u64,
+    pub stat_frees: u64,
+    pub stat_swap_outs: u64,
+    pub stat_swap_ins: u64,
+}
+
+impl KvBlockManager {
+    /// `capacity_tokens` is η — the token budget the hardware's KV memory
+    /// allows (HardwareSpec::kv_budget / kv_bytes_per_token).
+    pub fn new(capacity_tokens: u64, block_tokens: u32,
+               swap_capacity_tokens: u64) -> Self {
+        assert!(block_tokens > 0);
+        let total_blocks = (capacity_tokens / block_tokens as u64) as usize;
+        let swap_blocks = (swap_capacity_tokens / block_tokens as u64) as usize;
+        KvBlockManager {
+            block_tokens,
+            total_blocks,
+            free_blocks: total_blocks,
+            swap_blocks_total: swap_blocks,
+            swap_blocks_free: swap_blocks,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            by_id: HashMap::new(),
+            used_tokens_device: 0,
+            resident: 0,
+            shared_tokens_logical: 0,
+            prefix: None,
+            stat_allocs: 0,
+            stat_frees: 0,
+            stat_swap_outs: 0,
+            stat_swap_ins: 0,
+        }
+    }
+
+    /// Turn on the prefix-sharing tree (idempotent). Off by default:
+    /// without it every code path below is byte-for-byte the plain
+    /// per-request slab manager.
+    pub fn enable_prefix_cache(&mut self) {
+        if self.prefix.is_none() {
+            self.prefix = Some(PrefixCache::new(self.block_tokens));
+        }
+    }
+
+    pub fn prefix_enabled(&self) -> bool {
+        self.prefix.is_some()
+    }
+
+    pub fn block_tokens(&self) -> u32 {
+        self.block_tokens
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
+    }
+
+    /// Capacity in tokens (η, rounded down to block granularity).
+    pub fn capacity_tokens(&self) -> u64 {
+        self.total_blocks as u64 * self.block_tokens as u64
+    }
+
+    /// *Physical* tokens resident on device: every private table token
+    /// plus each live prefix-tree block counted **once**, no matter how
+    /// many requests share it. This is the number to compare against
+    /// [`Self::capacity_tokens`] — it is what the memory-aware policy
+    /// must budget. O(1): maintained incrementally, cross-checked by
+    /// [`Self::check_invariants`]. For the per-request sum see
+    /// [`Self::logical_tokens`].
+    pub fn used_tokens(&self) -> u64 {
+        self.used_tokens_device + self.tree_tokens()
+    }
+
+    /// *Logical* tokens on device: Σ over resident requests of
+    /// (private + shared) tokens — each shared block counted once per
+    /// user. `logical_tokens() - used_tokens()` (plus cold cached tree
+    /// blocks) is the memory the prefix cache is saving. O(1).
+    pub fn logical_tokens(&self) -> u64 {
+        self.used_tokens_device + self.shared_tokens_logical
+    }
+
+    /// Σ `shared_tokens` over resident (non-swapped) requests. O(1).
+    pub fn shared_tokens(&self) -> u64 {
+        self.shared_tokens_logical
+    }
+
+    /// Device blocks owned by the prefix tree (shared + cold cached).
+    pub fn prefix_blocks(&self) -> usize {
+        self.prefix.as_ref().map(|p| p.blocks()).unwrap_or(0)
+    }
+
+    /// Lifetime fraction of eligible prompt chunks that matched warm
+    /// in the prefix tree. 0.0 when sharing is disabled.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        self.prefix.as_ref().map(|p| p.hit_rate()).unwrap_or(0.0)
+    }
+
+    fn tree_tokens(&self) -> u64 {
+        self.prefix_blocks() as u64 * self.block_tokens as u64
+    }
+
+    /// Live on-device (non-swapped) block tables. O(1).
+    pub fn resident_requests(&self) -> usize {
+        self.resident
+    }
+
+    /// Fraction of device blocks in use — *physical* blocks: private
+    /// tables plus prefix-tree blocks (shared and cold alike), since
+    /// cold cached prefixes still occupy real memory until evicted.
+    /// 1.0 if the pool has zero capacity.
+    pub fn utilization(&self) -> f64 {
+        if self.total_blocks == 0 {
+            return 1.0;
+        }
+        self.used_blocks() as f64 / self.total_blocks as f64
+    }
+
+    fn blocks_for(&self, tokens: u32) -> usize {
+        tokens.div_ceil(self.block_tokens) as usize
+    }
+
+    fn alloc_at(&self, slot: KvSlot) -> &Allocation {
+        self.slots[slot as usize].as_ref().expect("live KV slot")
+    }
+
+    fn alloc_at_mut(&mut self, slot: KvSlot) -> &mut Allocation {
+        self.slots[slot as usize].as_mut().expect("live KV slot")
+    }
+
+    /// The slab slot backing `id`'s block table, for the `*_at` fast
+    /// path. Cache it at admission; it stays valid until `free`.
+    pub fn slot_of(&self, id: RequestId) -> Option<KvSlot> {
+        self.by_id.get(&id).copied()
+    }
+
+    /// Can `tokens` more tokens be appended for `id` (or allocated fresh)
+    /// without exceeding capacity? (Private blocks only — growth never
+    /// touches the prefix tree.)
+    pub fn can_grow(&self, id: RequestId, tokens: u32) -> bool {
+        let cur = self
+            .by_id
+            .get(&id)
+            .map(|&s| {
+                let a = self.alloc_at(s);
+                (a.blocks, a.tokens)
+            });
+        let (blocks, cur_tokens) = cur.unwrap_or((0, 0));
+        let need = self.blocks_for(cur_tokens + tokens) - blocks;
+        need <= self.free_blocks
+    }
+
+    /// [`Self::can_grow`] over a cached slot: one array index, no map
+    /// lookup — the per-decode-token path.
+    pub fn can_grow_at(&self, slot: KvSlot, tokens: u32) -> bool {
+        let a = self.alloc_at(slot);
+        let need = self.blocks_for(a.tokens + tokens) - a.blocks;
+        need <= self.free_blocks
+    }
+
+    /// How many eligible whole chunks a prompt of `tokens` tokens can
+    /// share. The last prompt token is always private — its prefill
+    /// produces the request's first output token — and sharing needs
+    /// the actual token ids, so a `prompt` that doesn't cover `tokens`
+    /// (simulation requests without materialized ids) shares nothing.
+    fn eligible_chunks(&self, prompt: &[i32], tokens: u32) -> usize {
+        if self.prefix.is_none() || tokens == 0
+            || prompt.len() != tokens as usize
+        {
+            return 0;
+        }
+        ((tokens - 1) / self.block_tokens) as usize
+    }
+
+    /// Evict cold prefixes until at least `need` blocks are free (or
+    /// nothing cold is left). True when the pool can now cover `need`.
+    fn ensure_free(&mut self, need: usize) -> bool {
+        if need <= self.free_blocks {
+            return true;
+        }
+        if let Some(p) = self.prefix.as_mut() {
+            self.free_blocks += p.evict(need - self.free_blocks);
+        }
+        need <= self.free_blocks
+    }
+
+    /// Reclaim up to `blocks` device blocks by evicting cold (zero-ref)
+    /// prefix-tree nodes, LRU first. Returns blocks reclaimed; 0 with
+    /// sharing disabled. The scheduler calls this under decode memory
+    /// pressure *before* resorting to preemption — it only runs on the
+    /// slow path (a failed `can_grow_at`), never in steady state.
+    pub fn reclaim_cold(&mut self, blocks: usize) -> usize {
+        match self.prefix.as_mut() {
+            Some(p) => {
+                let got = p.evict(blocks);
+                self.free_blocks += got;
+                got
+            }
+            None => 0,
+        }
+    }
+
+    /// Would [`Self::allocate_shared`] succeed right now for a fresh
+    /// request with this prompt? May evict cold prefixes to make room
+    /// (that is the point: pressure reclaims cache instead of refusing
+    /// admission). The matched path is pinned for the duration of the
+    /// probe so the probe's own evictions cannot invalidate its match
+    /// count, then released — a `true` answer stays true until the
+    /// caller mutates the manager.
+    pub fn can_admit_shared(&mut self, prompt: &[i32], tokens: u32)
+                            -> bool {
+        let eligible = self.eligible_chunks(prompt, tokens);
+        if eligible == 0 {
+            return self.ensure_free(self.blocks_for(tokens));
+        }
+        let pin = self
+            .prefix
+            .as_mut()
+            .expect("eligible implies prefix")
+            .pin_matched(prompt, eligible, false);
+        let shared = eligible as u32 * self.block_tokens;
+        let need =
+            (eligible - pin.hit_chunks) + self.blocks_for(tokens - shared);
+        let ok = self.ensure_free(need);
+        self.prefix
+            .as_mut()
+            .expect("pinned above")
+            .release(pin.tail, pin.hit_chunks);
+        ok
+    }
+
+    /// Allocate the initial table for a request's first `tokens` tokens.
+    /// Fully private — the prefix-sharing admission path is
+    /// [`Self::allocate_shared`].
+    pub fn allocate(&mut self, id: RequestId, tokens: u32)
+                    -> Result<(), KvError> {
+        if self.by_id.contains_key(&id) {
+            return Err(KvError::AlreadyAllocated(id));
+        }
+        let need = self.blocks_for(tokens);
+        if need > self.free_blocks {
+            return Err(KvError::OutOfBlocks { needed: need,
+                                              free: self.free_blocks });
+        }
+        self.install(Allocation {
+            id,
+            blocks: need,
+            tokens,
+            swapped: false,
+            shared_tokens: 0,
+            prefix_tail: NO_NODE,
+            prefix_chunks: 0,
+        });
+        Ok(())
+    }
+
+    /// Allocate through the prefix tree: pin every already-cached chunk
+    /// of the prompt (warm — prefill skippable), insert the missed
+    /// chunks for future requests, and charge only the inserted chunks
+    /// plus the private remainder against the device pool. Under
+    /// pressure, cold cached prefixes are LRU-evicted before failing.
+    /// Falls back to a fully private [`Self::allocate`] when sharing is
+    /// disabled or the prompt ids aren't materialized.
+    pub fn allocate_shared(&mut self, id: RequestId, prompt: &[i32],
+                           tokens: u32) -> Result<SharedAlloc, KvError> {
+        if self.by_id.contains_key(&id) {
+            return Err(KvError::AlreadyAllocated(id));
+        }
+        let eligible = self.eligible_chunks(prompt, tokens);
+        if eligible == 0 {
+            self.allocate(id, tokens)?;
+            return Ok(SharedAlloc::default());
+        }
+        let pin = self
+            .prefix
+            .as_mut()
+            .expect("eligible implies prefix")
+            .pin_matched(prompt, eligible, true);
+        let shared = eligible as u32 * self.block_tokens;
+        let private = tokens - shared;
+        let priv_blocks = self.blocks_for(private);
+        let need = (eligible - pin.hit_chunks) + priv_blocks;
+        // The pinned path is ref-held, so eviction cannot cannibalize
+        // the chunks we just matched.
+        if !self.ensure_free(need) {
+            self.prefix
+                .as_mut()
+                .expect("pinned above")
+                .release(pin.tail, pin.hit_chunks);
+            return Err(KvError::OutOfBlocks { needed: need,
+                                              free: self.free_blocks });
+        }
+        let tail = self
+            .prefix
+            .as_mut()
+            .expect("pinned above")
+            .insert_tail(pin.tail, prompt, pin.hit_chunks, eligible);
+        self.free_blocks -= eligible - pin.hit_chunks;
+        self.install(Allocation {
+            id,
+            blocks: priv_blocks,
+            tokens: private,
+            swapped: false,
+            shared_tokens: shared,
+            prefix_tail: tail,
+            prefix_chunks: eligible as u32,
+        });
+        Ok(SharedAlloc {
+            shared_tokens: shared,
+            warm_tokens: pin.hit_chunks as u32 * self.block_tokens,
+        })
+    }
+
+    /// Slot in a freshly built allocation and charge its private side
+    /// (shared blocks were charged by the caller as they were inserted).
+    fn install(&mut self, alloc: Allocation) {
+        debug_assert!(!alloc.swapped);
+        debug_assert!(alloc.blocks <= self.free_blocks);
+        let id = alloc.id;
+        let (blocks, tokens) = (alloc.blocks, alloc.tokens);
+        let shared = alloc.shared_tokens;
+        let slot = match self.free_slots.pop() {
+            Some(s) => {
+                debug_assert!(self.slots[s as usize].is_none());
+                self.slots[s as usize] = Some(alloc);
+                s
+            }
+            None => {
+                self.slots.push(Some(alloc));
+                (self.slots.len() - 1) as KvSlot
+            }
+        };
+        self.by_id.insert(id, slot);
+        self.free_blocks -= blocks;
+        self.used_tokens_device += tokens as u64;
+        self.shared_tokens_logical += shared as u64;
+        self.resident += 1;
+        self.stat_allocs += 1;
+    }
+
+    /// Append `tokens` tokens to an existing table (decode growth or the
+    /// next prefill chunk), acquiring new blocks as needed.
+    pub fn grow(&mut self, id: RequestId, tokens: u32) -> Result<(), KvError> {
+        let slot = *self
+            .by_id
+            .get(&id)
+            .ok_or(KvError::UnknownRequest { id, op: "grow" })?;
+        self.grow_at(slot, tokens)
+    }
+
+    /// [`Self::grow`] over a cached slot (per-step fast path). Growth is
+    /// always private: decode appends to the request's own tail blocks,
+    /// never to the shared tree.
+    pub fn grow_at(&mut self, slot: KvSlot, tokens: u32)
+                   -> Result<(), KvError> {
+        let free = self.free_blocks;
+        let block_tokens = self.block_tokens;
+        let alloc = self.alloc_at_mut(slot);
+        debug_assert!(!alloc.swapped, "grow on swapped request");
+        let new_tokens = alloc.tokens + tokens;
+        let need_total = new_tokens.div_ceil(block_tokens) as usize;
+        let extra = need_total.saturating_sub(alloc.blocks);
+        if extra > free {
+            return Err(KvError::OutOfBlocks { needed: extra, free });
+        }
+        alloc.blocks = need_total;
+        alloc.tokens = new_tokens;
+        self.free_blocks -= extra;
+        self.used_tokens_device += tokens as u64;
+        Ok(())
+    }
+
+    /// Release a request's blocks (finish or recompute-preemption).
+    /// Private blocks return to their pool immediately; the shared
+    /// path is unpinned but stays cached for future requests until
+    /// memory pressure evicts it. Returns the *private* token count.
+    pub fn free(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let slot = self
+            .by_id
+            .remove(&id)
+            .ok_or(KvError::UnknownRequest { id, op: "free" })?;
+        let alloc =
+            self.slots[slot as usize].take().expect("indexed KV slot");
+        self.free_slots.push(slot);
+        if alloc.prefix_tail != NO_NODE {
+            self.prefix
+                .as_mut()
+                .expect("shared alloc implies prefix")
+                .release(alloc.prefix_tail, alloc.prefix_chunks as usize);
+        }
+        if alloc.swapped {
+            self.swap_blocks_free += alloc.blocks;
+        } else {
+            self.free_blocks += alloc.blocks;
+            self.used_tokens_device -= alloc.tokens as u64;
+            self.shared_tokens_logical -= alloc.shared_tokens as u64;
+            self.resident -= 1;
+        }
+        self.stat_frees += 1;
+        debug_assert!(self.free_blocks <= self.total_blocks);
+        Ok(alloc.tokens)
+    }
+
+    /// Move a request's *private* blocks to the CPU pool (its shared
+    /// prefix stays pinned on device — other requests may be using it).
+    /// Returns the bytes-worth of blocks moved (in tokens) so the
+    /// engine can cost the transfer.
+    pub fn swap_out(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let slot = *self
+            .by_id
+            .get(&id)
+            .ok_or(KvError::UnknownRequest { id, op: "swap_out" })?;
+        let swap_free = self.swap_blocks_free;
+        let alloc = self.alloc_at_mut(slot);
+        if alloc.swapped {
+            return Err(KvError::AlreadySwapped(id));
+        }
+        if alloc.blocks > swap_free {
+            return Err(KvError::SwapSpaceExhausted {
+                needed: alloc.blocks,
+                free: swap_free,
+            });
+        }
+        alloc.swapped = true;
+        let (blocks, tokens) = (alloc.blocks, alloc.tokens);
+        let shared = alloc.shared_tokens;
+        self.swap_blocks_free -= blocks;
+        self.free_blocks += blocks;
+        self.used_tokens_device -= tokens as u64;
+        self.shared_tokens_logical -= shared as u64;
+        self.resident -= 1;
+        self.stat_swap_outs += 1;
+        Ok(tokens)
+    }
+
+    /// Bring a swapped request's private blocks back to the device.
+    pub fn swap_in(&mut self, id: RequestId) -> Result<u32, KvError> {
+        let slot = *self
+            .by_id
+            .get(&id)
+            .ok_or(KvError::UnknownRequest { id, op: "swap_in" })?;
+        let free = self.free_blocks;
+        let alloc = self.alloc_at_mut(slot);
+        if !alloc.swapped {
+            return Err(KvError::NotSwapped(id));
+        }
+        if alloc.blocks > free {
+            return Err(KvError::OutOfBlocks { needed: alloc.blocks,
+                                              free });
+        }
+        alloc.swapped = false;
+        let (blocks, tokens) = (alloc.blocks, alloc.tokens);
+        let shared = alloc.shared_tokens;
+        self.free_blocks -= blocks;
+        self.swap_blocks_free += blocks;
+        self.used_tokens_device += tokens as u64;
+        self.shared_tokens_logical += shared as u64;
+        self.resident += 1;
+        self.stat_swap_ins += 1;
+        Ok(tokens)
+    }
+
+    pub fn is_swapped(&self, id: RequestId) -> bool {
+        self.by_id
+            .get(&id)
+            .map(|&s| self.alloc_at(s).swapped)
+            .unwrap_or(false)
+    }
+
+    /// *Private* tokens of `id`'s table — the blocks a swap cycle
+    /// actually moves. Shared-prefix tokens are excluded; see
+    /// [`Self::shared_tokens_of`].
+    pub fn tokens_of(&self, id: RequestId) -> Option<u32> {
+        self.by_id.get(&id).map(|&s| self.alloc_at(s).tokens)
+    }
+
+    /// Tokens `id` serves out of the shared prefix tree (0 without
+    /// sharing).
+    pub fn shared_tokens_of(&self, id: RequestId) -> Option<u32> {
+        self.by_id.get(&id).map(|&s| self.alloc_at(s).shared_tokens)
+    }
+}
+
+impl KvBlockManager {
+    /// Internal consistency check (used by tests and debug assertions):
+    /// block conservation across private tables, the prefix tree and
+    /// the free pool; swap-pool conservation; exact token↔block
+    /// arithmetic per table; every shared path re-walked and every
+    /// tree ref-count recomputed from scratch against the live
+    /// allocations; and the O(1) cached aggregates vs their
+    /// recomputation. Allocation-free on success, so the scheduler's
+    /// shadow-check regime can run it every step.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let live = || self.slots.iter().flatten();
+        let dev: usize =
+            live().filter(|a| !a.swapped).map(|a| a.blocks).sum();
+        let tree = self.prefix_blocks();
+        if dev + tree + self.free_blocks != self.total_blocks {
+            return Err(format!(
+                "device leak: private {dev} + tree {tree} + free {} != \
+                 total {}",
+                self.free_blocks, self.total_blocks
+            ));
+        }
+        let swp: usize =
+            live().filter(|a| a.swapped).map(|a| a.blocks).sum();
+        if swp + self.swap_blocks_free != self.swap_blocks_total {
+            return Err(format!(
+                "swap leak: used {swp} + free {} != total {}",
+                self.swap_blocks_free, self.swap_blocks_total
+            ));
+        }
+        for a in live() {
+            let want = a.tokens.div_ceil(self.block_tokens) as usize;
+            if a.blocks != want {
+                return Err(format!(
+                    "req {}: {} private tokens in {} blocks (want {want})",
+                    a.id, a.tokens, a.blocks
+                ));
+            }
+        }
+        // Shared-side per-table checks: chunk arithmetic and path
+        // liveness (an evicted block under a live ref would show here).
+        for a in live() {
+            if a.prefix_tail == NO_NODE {
+                if a.shared_tokens != 0 || a.prefix_chunks != 0 {
+                    return Err(format!(
+                        "req {}: {} shared tokens without a tree path",
+                        a.id, a.shared_tokens
+                    ));
+                }
+                continue;
+            }
+            let p = self.prefix.as_ref().ok_or_else(|| {
+                format!("req {}: tree path without a prefix cache", a.id)
+            })?;
+            if a.shared_tokens != a.prefix_chunks * self.block_tokens {
+                return Err(format!(
+                    "req {}: {} shared tokens over {} chunks",
+                    a.id, a.shared_tokens, a.prefix_chunks
+                ));
+            }
+            let mut at = a.prefix_tail;
+            let mut depth = 0u32;
+            while at != NO_NODE {
+                if !p.is_live(at) {
+                    return Err(format!(
+                        "req {}: pinned node {at} was evicted",
+                        a.id
+                    ));
+                }
+                depth += 1;
+                at = p.parent_of(at);
+            }
+            if depth != a.prefix_chunks {
+                return Err(format!(
+                    "req {}: path depth {depth}, claims {} chunks",
+                    a.id, a.prefix_chunks
+                ));
+            }
+        }
+        // Tree structure, then every node's ref-count recomputed from
+        // the live allocations' pinned paths.
+        if let Some(p) = self.prefix.as_ref() {
+            p.check()?;
+            for ni in 0..p.node_count() as u32 {
+                if !p.is_live(ni) {
+                    continue;
+                }
+                let mut want = 0u32;
+                for a in live() {
+                    let mut at = a.prefix_tail;
+                    while at != NO_NODE {
+                        if at == ni {
+                            want += 1;
+                            break;
+                        }
+                        at = p.parent_of(at);
+                    }
+                }
+                if p.refs_of(ni) != want {
+                    return Err(format!(
+                        "tree node {ni}: {} refs, {want} live users",
+                        p.refs_of(ni)
+                    ));
+                }
+            }
+        }
+        // Cached aggregates vs full recomputation.
+        let used: u64 = live()
+            .filter(|a| !a.swapped)
+            .map(|a| a.tokens as u64)
+            .sum();
+        if used != self.used_tokens_device {
+            return Err(format!(
+                "used_tokens cache drift: cached {} != recomputed {used}",
+                self.used_tokens_device
+            ));
+        }
+        let shared: u64 = live()
+            .filter(|a| !a.swapped)
+            .map(|a| a.shared_tokens as u64)
+            .sum();
+        if shared != self.shared_tokens_logical {
+            return Err(format!(
+                "shared_tokens cache drift: cached {} != recomputed \
+                 {shared}",
+                self.shared_tokens_logical
+            ));
+        }
+        let res = live().filter(|a| !a.swapped).count();
+        if res != self.resident {
+            return Err(format!(
+                "resident cache drift: cached {} != recomputed {res}",
+                self.resident
+            ));
+        }
+        // Index ↔ slab coherence.
+        let n_live = live().count();
+        if n_live != self.by_id.len() {
+            return Err(format!(
+                "index drift: {} live slots vs {} index entries",
+                n_live,
+                self.by_id.len()
+            ));
+        }
+        for (&id, &slot) in &self.by_id {
+            match self.slots.get(slot as usize).and_then(|s| s.as_ref()) {
+                Some(a) if a.id == id => {}
+                _ => {
+                    return Err(format!(
+                        "index drift: request {id} maps to dead slot {slot}"
+                    ))
+                }
+            }
+        }
+        if self.free_slots.len() + n_live != self.slots.len() {
+            return Err(format!(
+                "free-list drift: {} free + {} live != {} slots",
+                self.free_slots.len(),
+                n_live,
+                self.slots.len()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    fn mgr(tokens: u64) -> KvBlockManager {
+        KvBlockManager::new(tokens, 16, tokens)
+    }
+
+    /// Deterministic prompt ids: `n` tokens namespaced by `tag` so two
+    /// prompts with the same tag share their leading chunks.
+    fn ids(tag: i32, n: usize) -> Vec<i32> {
+        (0..n).map(|t| tag * 10_000 + t as i32).collect()
+    }
+
+    #[test]
+    fn allocate_grow_free_roundtrip() {
+        let mut m = mgr(1024); // 64 blocks
+        assert_eq!(m.total_blocks(), 64);
+        m.allocate(1, 20).unwrap(); // 2 blocks
+        assert_eq!(m.free_blocks(), 62);
+        assert_eq!(m.used_tokens(), 20);
+        assert_eq!(m.resident_requests(), 1);
+        m.grow(1, 12).unwrap(); // 32 tokens → 2 blocks, no extra
+        assert_eq!(m.free_blocks(), 62);
+        m.grow(1, 1).unwrap(); // 33 tokens → 3 blocks
+        assert_eq!(m.free_blocks(), 61);
+        assert_eq!(m.free(1).unwrap(), 33);
+        assert_eq!(m.free_blocks(), 64);
+        assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.resident_requests(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rejects_double_alloc_and_unknown() {
+        let mut m = mgr(256);
+        m.allocate(7, 10).unwrap();
+        assert_eq!(m.allocate(7, 10), Err(KvError::AlreadyAllocated(7)));
+        assert_eq!(m.grow(9, 1),
+                   Err(KvError::UnknownRequest { id: 9, op: "grow" }));
+        assert_eq!(m.free(9),
+                   Err(KvError::UnknownRequest { id: 9, op: "free" }));
+    }
+
+    /// The enriched error variants carry the request id and state, and
+    /// these exact strings surface in v2 error events — test verbatim.
+    #[test]
+    fn error_messages_carry_id_and_state() {
+        let mut m = KvBlockManager::new(256, 16, 128);
+        assert_eq!(m.free(42).unwrap_err().to_string(),
+                   "unknown request 42: no block table to free");
+        assert_eq!(m.grow(7, 1).unwrap_err().to_string(),
+                   "unknown request 7: no block table to grow");
+        assert_eq!(m.swap_out(3).unwrap_err().to_string(),
+                   "unknown request 3: no block table to swap_out");
+        assert_eq!(m.swap_in(3).unwrap_err().to_string(),
+                   "unknown request 3: no block table to swap_in");
+        m.allocate(5, 16).unwrap();
+        assert_eq!(m.swap_in(5).unwrap_err().to_string(),
+                   "request 5 is not swapped out");
+        m.swap_out(5).unwrap();
+        assert_eq!(m.swap_out(5).unwrap_err().to_string(),
+                   "request 5 is already swapped out");
+        assert_eq!(m.allocate(5, 8).unwrap_err().to_string(),
+                   "request 5 already has a block table");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_reports_exact_need() {
+        let mut m = mgr(64); // 4 blocks
+        m.allocate(1, 33).unwrap(); // 3 blocks
+        let err = m.allocate(2, 32).unwrap_err(); // needs 2, free 1
+        assert_eq!(err, KvError::OutOfBlocks { needed: 2, free: 1 });
+        // State unchanged on failure.
+        assert_eq!(m.free_blocks(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_grow_predicts_grow() {
+        let mut m = mgr(64); // 4 blocks
+        m.allocate(1, 16).unwrap(); // 1 block
+        assert!(m.can_grow(1, 48)); // 64 tokens → 4 blocks, need 3, free 3
+        assert!(!m.can_grow(1, 49));
+        assert!(m.can_grow(2, 48)); // fresh alloc prediction
+        assert!(!m.can_grow(2, 49));
+    }
+
+    #[test]
+    fn slot_fast_path_matches_id_path() {
+        let mut m = mgr(256); // 16 blocks
+        m.allocate(5, 30).unwrap();
+        let s = m.slot_of(5).expect("slot for live table");
+        assert_eq!(m.slot_of(99), None);
+        assert_eq!(m.can_grow_at(s, 2), m.can_grow(5, 2));
+        m.grow_at(s, 34).unwrap(); // 64 tokens → 4 blocks
+        assert_eq!(m.tokens_of(5), Some(64));
+        assert_eq!(m.used_tokens(), 64);
+        // Slot survives a swap cycle.
+        m.swap_out(5).unwrap();
+        assert_eq!(m.slot_of(5), Some(s));
+        m.swap_in(5).unwrap();
+        assert!(m.can_grow_at(s, 1));
+        // Exhaustion through the slot path reports exact need.
+        assert!(matches!(m.grow_at(s, 10_000),
+                         Err(KvError::OutOfBlocks { .. })));
+        m.free(5).unwrap();
+        assert_eq!(m.slot_of(5), None);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let mut m = mgr(10_240);
+        for id in 0..8u64 {
+            m.allocate(id, 16).unwrap();
+        }
+        let slots_high = m.slots.len();
+        for id in 0..8u64 {
+            m.free(id).unwrap();
+        }
+        for id in 100..108u64 {
+            m.allocate(id, 16).unwrap();
+        }
+        assert_eq!(m.slots.len(), slots_high, "freed slots are reused");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_out_in_cycle() {
+        let mut m = KvBlockManager::new(256, 16, 128);
+        m.allocate(1, 40).unwrap(); // 3 blocks
+        let before_free = m.free_blocks();
+        let toks = m.swap_out(1).unwrap();
+        assert_eq!(toks, 40);
+        assert_eq!(m.free_blocks(), before_free + 3);
+        assert!(m.is_swapped(1));
+        assert_eq!(m.used_tokens(), 0);
+        assert_eq!(m.resident_requests(), 0);
+        m.swap_in(1).unwrap();
+        assert!(!m.is_swapped(1));
+        assert_eq!(m.free_blocks(), before_free);
+        assert_eq!(m.used_tokens(), 40);
+        assert_eq!(m.resident_requests(), 1);
+        m.check_invariants().unwrap();
+        // Freeing a swapped request returns blocks to the swap pool.
+        m.swap_out(1).unwrap();
+        m.free(1).unwrap();
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_space_exhaustion() {
+        let mut m = KvBlockManager::new(256, 16, 32); // swap: 2 blocks
+        m.allocate(1, 48).unwrap(); // 3 blocks
+        assert!(matches!(m.swap_out(1),
+                         Err(KvError::SwapSpaceExhausted { .. })));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn utilization_bounds() {
+        let mut m = mgr(160); // 10 blocks
+        assert_eq!(m.utilization(), 0.0);
+        m.allocate(1, 160).unwrap();
+        assert_eq!(m.utilization(), 1.0);
+        assert_eq!(KvBlockManager::new(0, 16, 0).utilization(), 1.0);
+    }
+
+    #[test]
+    fn shared_alloc_charges_only_unshared_tokens() {
+        let mut m = KvBlockManager::new(1024, 16, 0); // 64 blocks
+        m.enable_prefix_cache();
+        let prompt = ids(1, 48); // 2 shareable chunks + private tail
+        let a = m.allocate_shared(10, &prompt, 48).unwrap();
+        assert_eq!(a.shared_tokens, 32);
+        assert_eq!(a.warm_tokens, 0, "first user inserts, nothing warm");
+        assert_eq!(m.used_blocks(), 3); // 2 tree + 1 private
+        assert_eq!(m.used_tokens(), 48);
+        assert_eq!(m.logical_tokens(), 48);
+        let b = m.allocate_shared(11, &prompt, 48).unwrap();
+        assert_eq!(b.shared_tokens, 32);
+        assert_eq!(b.warm_tokens, 32, "fully warm: prefill skippable");
+        assert_eq!(m.used_blocks(), 4, "only one more private block");
+        assert_eq!(m.used_tokens(), 64); // physical: prefix counted once
+        assert_eq!(m.logical_tokens(), 96); // logical: once per user
+        assert_eq!(m.shared_tokens(), 64);
+        assert_eq!(m.shared_tokens_of(11), Some(32));
+        assert!(m.prefix_hit_rate() > 0.0);
+        m.check_invariants().unwrap();
+        m.free(10).unwrap();
+        m.free(11).unwrap();
+        // The prefix stays cached (cold) until pressure evicts it.
+        assert_eq!(m.prefix_blocks(), 2);
+        assert_eq!(m.used_tokens(), 32);
+        assert_eq!(m.logical_tokens(), 0);
+        assert_eq!(m.reclaim_cold(99), 2);
+        assert_eq!(m.free_blocks(), m.total_blocks());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn pressure_evicts_cold_prefixes_instead_of_failing() {
+        let mut m = KvBlockManager::new(64, 16, 0); // 4 blocks
+        m.enable_prefix_cache();
+        let p1 = ids(1, 33); // 2 chunks + 1 private token → 3 blocks
+        m.allocate_shared(1, &p1, 33).unwrap();
+        m.free(1).unwrap(); // 2 cold tree blocks remain
+        assert_eq!(m.free_blocks(), 2);
+        let p2 = ids(2, 48); // needs 2 tree + 1 private = 3 blocks
+        assert!(m.can_admit_shared(&p2, 48));
+        let a = m.allocate_shared(2, &p2, 48).unwrap();
+        assert_eq!(a.warm_tokens, 0);
+        assert_eq!(m.prefix_blocks(), 2, "cold p1 chunks were evicted");
+        m.check_invariants().unwrap();
+        // Live pins are never evicted: a too-big request fails cleanly.
+        let p3 = ids(3, 200);
+        assert!(!m.can_admit_shared(&p3, 200));
+        assert!(matches!(m.allocate_shared(3, &p3, 200),
+                         Err(KvError::OutOfBlocks { .. })));
+        assert_eq!(m.shared_tokens_of(2), Some(32), "pins survived");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn swap_cycle_moves_private_blocks_and_keeps_pins() {
+        let mut m = KvBlockManager::new(256, 16, 128);
+        m.enable_prefix_cache();
+        let p = ids(4, 40); // 2 chunks shared, 8 private tokens
+        m.allocate_shared(1, &p, 40).unwrap();
+        let before_free = m.free_blocks();
+        assert_eq!(m.swap_out(1).unwrap(), 8, "private tokens only");
+        assert_eq!(m.free_blocks(), before_free + 1);
+        assert_eq!(m.shared_tokens(), 0, "swapped req leaves logical view");
+        assert_eq!(m.prefix_blocks(), 2, "prefix pinned across swap");
+        assert_eq!(m.reclaim_cold(4), 0, "pinned path is not evictable");
+        m.swap_in(1).unwrap();
+        assert_eq!(m.shared_tokens(), 32);
+        m.check_invariants().unwrap();
+        m.free(1).unwrap();
+        m.check_invariants().unwrap();
+    }
+
+    /// Sharing off, or prompts without materialized token ids (the
+    /// plain-simulation case): `allocate_shared` degrades to the fully
+    /// private path and the manager is byte-for-byte the old one.
+    #[test]
+    fn unmaterialized_prompts_stay_private() {
+        let mut m = KvBlockManager::new(256, 16, 0);
+        m.enable_prefix_cache();
+        let a = m.allocate_shared(1, &[], 40).unwrap();
+        assert_eq!((a.shared_tokens, a.warm_tokens), (0, 0));
+        assert_eq!(m.prefix_blocks(), 0);
+        assert_eq!(m.tokens_of(1), Some(40));
+        assert_eq!(m.logical_tokens(), m.used_tokens());
+        // Short prompts (no full chunk before the last token) too.
+        let b = m.allocate_shared(2, &ids(9, 16), 16).unwrap();
+        assert_eq!(b.shared_tokens, 0);
+        assert_eq!(m.prefix_blocks(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    /// Property: any interleaving of alloc/grow/free/swap operations
+    /// preserves exact block accounting (no leak, no double-free).
+    #[test]
+    fn prop_no_leaks_under_random_ops() {
+        check("kv accounting", 300, |g| {
+            let cap = g.u64(64..=2048);
+            let block = *g.choose(&[1u32, 8, 16, 32]);
+            let mut m = KvBlockManager::new(cap, block, cap / 2);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..=120) {
+                match g.u64(0..=5) {
+                    0 => {
+                        let t = g.u64(1..=300) as u32;
+                        if m.allocate(next_id, t).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.grow(id, g.u64(1..=64) as u32);
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.usize(0..=live.len() - 1);
+                        let id = live.swap_remove(i);
+                        m.free(id).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.swap_out(id);
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if m.is_swapped(id) {
+                            let _ = m.swap_in(id);
+                        }
+                    }
+                    _ => {}
+                }
+                if let Err(e) = m.check_invariants() {
+                    eprintln!("invariant violated: {e}");
+                    return false;
+                }
+            }
+            // Drain everything; pool must return to full.
+            for id in live {
+                m.free(id).unwrap();
+            }
+            m.free_blocks() == m.total_blocks()
+                && m.used_tokens() == 0
+                && m.resident_requests() == 0
+                && m.check_invariants().is_ok()
+        });
+    }
+
+    /// Property: the O(1) cached aggregates (`used_tokens`,
+    /// `resident_requests`) equal a from-scratch recomputation over the
+    /// live ids after every random alloc/grow/free/swap-out/swap-in —
+    /// including the mixed slot-handle fast path.
+    #[test]
+    fn prop_cached_counters_match_recompute() {
+        check("kv cached counters", 300, |g| {
+            let cap = g.u64(128..=4096);
+            let block = *g.choose(&[8u32, 16, 64]);
+            let mut m = KvBlockManager::new(cap, block, cap / 2);
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..=150) {
+                match g.u64(0..=5) {
+                    0 => {
+                        if m.allocate(next_id, g.u64(1..=200) as u32)
+                            .is_ok()
+                        {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    1 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            // Exercise the slot fast path half the time.
+                            let t = g.u64(1..=48) as u32;
+                            if g.u64(0..=1) == 0 {
+                                let s = m.slot_of(id).unwrap();
+                                let _ = m.grow_at(s, t);
+                            } else {
+                                let _ = m.grow(id, t);
+                            }
+                        }
+                    }
+                    2 if !live.is_empty() => {
+                        let i = g.usize(0..=live.len() - 1);
+                        m.free(live.swap_remove(i)).unwrap();
+                    }
+                    3 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.swap_out(id);
+                        }
+                    }
+                    4 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if m.is_swapped(id) {
+                            let _ = m.swap_in(id);
+                        }
+                    }
+                    _ => {}
+                }
+                // Recompute from scratch via the public id-keyed API.
+                let want_used: u64 = live
+                    .iter()
+                    .filter(|&&id| !m.is_swapped(id))
+                    .map(|&id| m.tokens_of(id).unwrap() as u64)
+                    .sum();
+                let want_res = live
+                    .iter()
+                    .filter(|&&id| !m.is_swapped(id))
+                    .count();
+                if m.used_tokens() != want_used
+                    || m.resident_requests() != want_res
+                {
+                    eprintln!(
+                        "cache drift: used {} vs {want_used}, resident {} \
+                         vs {want_res}",
+                        m.used_tokens(),
+                        m.resident_requests()
+                    );
+                    return false;
+                }
+            }
+            m.check_invariants().is_ok()
+        });
+    }
+
+    /// Property: used_tokens never exceeds capacity_tokens.
+    #[test]
+    fn prop_capacity_respected() {
+        check("kv capacity", 200, |g| {
+            let cap = g.u64(32..=512);
+            let mut m = KvBlockManager::new(cap, 16, 0);
+            let mut id = 0u64;
+            for _ in 0..g.usize(1..=60) {
+                let t = g.u64(1..=128) as u32;
+                let _ = m.allocate(id, t);
+                let _ = m.grow(id, g.u64(1..=32) as u32);
+                id += 1;
+            }
+            m.used_tokens() <= m.capacity_tokens()
+                && m.used_blocks() <= m.total_blocks()
+        });
+    }
+
+    /// Property (prefix tree): random allocate/grow/free/swap/evict
+    /// interleavings over Zipf-ish shared prefixes keep every cached
+    /// counter equal to the `check_invariants` recompute — which also
+    /// re-walks every pinned path and re-derives every node ref-count,
+    /// so an eviction of a block with live refs cannot hide.
+    #[test]
+    fn prop_prefix_tree_accounting() {
+        check("kv prefix tree", 250, |g| {
+            let cap = g.u64(256..=2048);
+            let block = *g.choose(&[4u32, 8, 16]);
+            let mut m = KvBlockManager::new(cap, block, cap / 2);
+            m.enable_prefix_cache();
+            let n_prefixes = g.usize(1..=4) as i32;
+            let mut live: Vec<RequestId> = Vec::new();
+            let mut next_id = 0u64;
+            for _ in 0..g.usize(1..=120) {
+                match g.u64(0..=6) {
+                    0 | 1 => {
+                        // Shared head chunks + unique private suffix.
+                        let tag = g.usize(1..=n_prefixes as usize) as i32;
+                        let head = g.usize(0..=3) * block as usize;
+                        let tail =
+                            g.usize(1..=2 * block as usize + 1);
+                        let mut prompt = ids(tag, head);
+                        prompt.extend((0..tail).map(|t| {
+                            -(1 + next_id as i32 * 997 + t as i32)
+                        }));
+                        let tokens = prompt.len() as u32;
+                        if m.allocate_shared(next_id, &prompt, tokens)
+                            .is_ok()
+                        {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                    2 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.grow(id, g.u64(1..=48) as u32);
+                        }
+                    }
+                    3 if !live.is_empty() => {
+                        let i = g.usize(0..=live.len() - 1);
+                        m.free(live.swap_remove(i)).unwrap();
+                    }
+                    4 if !live.is_empty() => {
+                        let id = *g.choose(&live);
+                        if !m.is_swapped(id) {
+                            let _ = m.swap_out(id);
+                        } else {
+                            let _ = m.swap_in(id);
+                        }
+                    }
+                    5 => {
+                        m.reclaim_cold(g.usize(1..=8));
+                    }
+                    _ => {}
+                }
+                if let Err(e) = m.check_invariants() {
+                    eprintln!("prefix invariant violated: {e}");
+                    return false;
+                }
+                // Logical ≥ physical-private; shared counted per user.
+                let shared: u64 = live
+                    .iter()
+                    .filter(|&&id| !m.is_swapped(id))
+                    .map(|&id| {
+                        m.shared_tokens_of(id).unwrap() as u64
+                    })
+                    .sum();
+                if m.shared_tokens() != shared {
+                    eprintln!(
+                        "shared drift: cached {} vs {shared}",
+                        m.shared_tokens()
+                    );
+                    return false;
+                }
+            }
+            // Drain: private pool refills; cold tree evicts to empty.
+            for id in live {
+                m.free(id).unwrap();
+            }
+            m.reclaim_cold(m.total_blocks());
+            m.free_blocks() == m.total_blocks()
+                && m.used_tokens() == 0
+                && m.shared_tokens() == 0
+                && m.prefix_blocks() == 0
+                && m.check_invariants().is_ok()
+        });
+    }
+}

@@ -1,0 +1,421 @@
+//! Ref-counted radix/prefix tree over whole KV blocks.
+//!
+//! Nodes are full `block_tokens`-sized chunks of prompt token ids; a
+//! path from a root spells out a shared prompt prefix, one device block
+//! per node. Requests pin their matched path with per-node reference
+//! counts; zero-ref nodes stay cached ("cold") and are reclaimed in
+//! LRU order when the device pool runs dry. Divergence is
+//! copy-on-write by construction: only whole matching chunks are ever
+//! shared, so a request whose prompt departs mid-chunk keeps that
+//! chunk — and everything after it, including every decode token — in
+//! its private block table.
+//!
+//! The tree is slab-allocated (`Vec<Node>` + free-list) like the block
+//! tables in [`super::KvBlockManager`]; traversal orders are
+//! index-based and deterministic, and the success path of the
+//! consistency checks performs no heap allocation, so they can run
+//! under the scheduler's shadow-check regime.
+
+/// Sentinel node index: "no node" (roots' parent, disabled tails).
+pub(crate) const NO_NODE: u32 = u32::MAX;
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// The chunk's token ids; exactly `block_tokens` long while live.
+    key: Vec<i32>,
+    /// Parent node, or [`NO_NODE`] for a depth-0 (root) chunk.
+    parent: u32,
+    /// Live child nodes (evicted children are removed eagerly).
+    children: Vec<u32>,
+    /// Number of live allocations whose pinned path crosses this node.
+    refs: u32,
+    /// LRU stamp: bumped on every pin/release touch; smaller = colder.
+    last_used: u64,
+    live: bool,
+}
+
+/// Result of pinning a request's matched prefix path.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct PinnedPath {
+    /// Deepest matched node ([`NO_NODE`] when nothing matched).
+    pub tail: u32,
+    /// Chunks matched warm — their prefill can be skipped.
+    pub hit_chunks: usize,
+}
+
+#[derive(Debug, Clone)]
+pub(crate) struct PrefixCache {
+    block_tokens: u32,
+    nodes: Vec<Node>,
+    free_nodes: Vec<u32>,
+    /// Live depth-0 chunks (children lists for the virtual root).
+    roots: Vec<u32>,
+    /// Monotone logical clock feeding the LRU stamps.
+    tick: u64,
+    /// Live node count == device blocks owned by the tree.
+    live_blocks: usize,
+    /// Cumulative eligible-chunk lookups and warm matches (hit rate).
+    lookups: u64,
+    hits: u64,
+}
+
+impl PrefixCache {
+    pub(crate) fn new(block_tokens: u32) -> Self {
+        assert!(block_tokens > 0);
+        PrefixCache {
+            block_tokens,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: Vec::new(),
+            tick: 0,
+            live_blocks: 0,
+            lookups: 0,
+            hits: 0,
+        }
+    }
+
+    /// Device blocks currently owned by the tree (live nodes). O(1).
+    pub(crate) fn blocks(&self) -> usize {
+        self.live_blocks
+    }
+
+    /// Fraction of eligible prompt chunks that matched warm, over the
+    /// cache's lifetime. 0.0 before the first lookup.
+    pub(crate) fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / self.lookups as f64
+    }
+
+    /// Live zero-ref nodes — the blocks [`Self::evict`] could reclaim.
+    pub(crate) fn cold_blocks(&self) -> usize {
+        self.nodes.iter().filter(|n| n.live && n.refs == 0).count()
+    }
+
+    /// Slab length (live and dead slots) — for exhaustive index walks
+    /// in the manager's from-scratch invariant recompute.
+    pub(crate) fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub(crate) fn parent_of(&self, i: u32) -> u32 {
+        self.nodes[i as usize].parent
+    }
+
+    pub(crate) fn is_live(&self, i: u32) -> bool {
+        (i as usize) < self.nodes.len() && self.nodes[i as usize].live
+    }
+
+    pub(crate) fn refs_of(&self, i: u32) -> u32 {
+        self.nodes[i as usize].refs
+    }
+
+    fn child_matching(&self, parent: u32, key: &[i32]) -> Option<u32> {
+        let list = if parent == NO_NODE {
+            &self.roots
+        } else {
+            &self.nodes[parent as usize].children
+        };
+        list.iter()
+            .copied()
+            .find(|&c| self.nodes[c as usize].key == key)
+    }
+
+    /// Read-only walk: how many of the first `n_chunks` chunks of
+    /// `prompt` are already cached (consecutively, from the root)?
+    pub(crate) fn matched_chunks(&self, prompt: &[i32],
+                                 n_chunks: usize) -> usize {
+        let bt = self.block_tokens as usize;
+        let mut at = NO_NODE;
+        let mut hit = 0;
+        while hit < n_chunks {
+            let key = &prompt[hit * bt..(hit + 1) * bt];
+            match self.child_matching(at, key) {
+                Some(c) => {
+                    at = c;
+                    hit += 1;
+                }
+                None => break,
+            }
+        }
+        hit
+    }
+
+    /// Walk the first `n_chunks` chunks of `prompt`, pinning (+1 ref,
+    /// LRU touch) every matched node. With `count`, all `n_chunks`
+    /// register as lookups and the matched depth as hits (admission);
+    /// without, the pin is a quiet probe (admission prechecks pin,
+    /// inspect, release — without skewing the hit rate). Consumes no
+    /// blocks; pair with [`Self::insert_tail`] for the missed
+    /// remainder.
+    pub(crate) fn pin_matched(&mut self, prompt: &[i32],
+                              n_chunks: usize, count: bool)
+                              -> PinnedPath {
+        let bt = self.block_tokens as usize;
+        let mut at = NO_NODE;
+        let mut hit = 0;
+        while hit < n_chunks {
+            let key = &prompt[hit * bt..(hit + 1) * bt];
+            match self.child_matching(at, key) {
+                Some(c) => {
+                    at = c;
+                    hit += 1;
+                    self.tick += 1;
+                    let t = self.tick;
+                    let n = &mut self.nodes[c as usize];
+                    n.refs += 1;
+                    n.last_used = t;
+                }
+                None => break,
+            }
+        }
+        if count {
+            self.lookups += n_chunks as u64;
+            self.hits += hit as u64;
+        }
+        PinnedPath { tail: at, hit_chunks: hit }
+    }
+
+    /// Insert chunks `from..to` of `prompt` below `tail` (refs = 1
+    /// each, already pinned by the inserting request). Each inserted
+    /// node owns one device block — the caller charges `to - from`
+    /// blocks against its pool. Returns the new path tail.
+    pub(crate) fn insert_tail(&mut self, tail: u32, prompt: &[i32],
+                              from: usize, to: usize) -> u32 {
+        let bt = self.block_tokens as usize;
+        let mut at = tail;
+        for i in from..to {
+            let key = &prompt[i * bt..(i + 1) * bt];
+            self.tick += 1;
+            let t = self.tick;
+            let node = Node {
+                key: key.to_vec(),
+                parent: at,
+                children: Vec::new(),
+                refs: 1,
+                last_used: t,
+                live: true,
+            };
+            let idx = match self.free_nodes.pop() {
+                Some(s) => {
+                    debug_assert!(!self.nodes[s as usize].live);
+                    self.nodes[s as usize] = node;
+                    s
+                }
+                None => {
+                    self.nodes.push(node);
+                    (self.nodes.len() - 1) as u32
+                }
+            };
+            if at == NO_NODE {
+                self.roots.push(idx);
+            } else {
+                self.nodes[at as usize].children.push(idx);
+            }
+            self.live_blocks += 1;
+            at = idx;
+        }
+        at
+    }
+
+    /// Unpin a path of `n_chunks` nodes ending at `tail` (free,
+    /// rollback, or swap-free). Nodes stay cached; ones going cold get
+    /// a fresh LRU stamp so recently-released prefixes die last.
+    pub(crate) fn release(&mut self, tail: u32, n_chunks: usize) {
+        let mut at = tail;
+        for _ in 0..n_chunks {
+            debug_assert_ne!(at, NO_NODE, "path shorter than claimed");
+            self.tick += 1;
+            let t = self.tick;
+            let n = &mut self.nodes[at as usize];
+            debug_assert!(n.live && n.refs > 0, "release of unpinned node");
+            n.refs -= 1;
+            n.last_used = t;
+            at = n.parent;
+        }
+    }
+
+    /// Reclaim up to `want` blocks by evicting cold (zero-ref) leaves,
+    /// coldest first (smallest `last_used`, node index breaking ties).
+    /// Never touches a node with live refs — pinned paths are safe.
+    /// Returns the number of blocks actually reclaimed.
+    pub(crate) fn evict(&mut self, want: usize) -> usize {
+        let mut got = 0;
+        while got < want {
+            let mut victim: Option<(u64, u32)> = None;
+            for (i, n) in self.nodes.iter().enumerate() {
+                if !n.live || n.refs != 0 || !n.children.is_empty() {
+                    continue;
+                }
+                let cand = (n.last_used, i as u32);
+                match victim {
+                    Some(v) if cand >= v => {}
+                    _ => victim = Some(cand),
+                }
+            }
+            let Some((_, idx)) = victim else { break };
+            let parent = self.nodes[idx as usize].parent;
+            if parent == NO_NODE {
+                self.roots.retain(|&r| r != idx);
+            } else {
+                self.nodes[parent as usize]
+                    .children
+                    .retain(|&c| c != idx);
+            }
+            let n = &mut self.nodes[idx as usize];
+            n.live = false;
+            n.key.clear();
+            n.children.clear();
+            self.free_nodes.push(idx);
+            self.live_blocks -= 1;
+            got += 1;
+        }
+        got
+    }
+
+    /// Structural self-check (slabs, links, counters); the ref-count
+    /// recompute against live allocations lives in
+    /// [`super::KvBlockManager::check_invariants`], which owns the
+    /// allocation side. Allocation-free on success.
+    pub(crate) fn check(&self) -> Result<(), String> {
+        let n_live = self.nodes.iter().filter(|n| n.live).count();
+        if n_live != self.live_blocks {
+            return Err(format!(
+                "prefix block drift: {} live nodes, cached {}",
+                n_live, self.live_blocks
+            ));
+        }
+        if n_live + self.free_nodes.len() != self.nodes.len() {
+            return Err(format!(
+                "prefix free-list drift: {} live + {} free != {} nodes",
+                n_live,
+                self.free_nodes.len(),
+                self.nodes.len()
+            ));
+        }
+        for (i, n) in self.nodes.iter().enumerate() {
+            if !n.live {
+                continue;
+            }
+            if n.key.len() != self.block_tokens as usize {
+                return Err(format!(
+                    "prefix node {i}: partial chunk of {} tokens",
+                    n.key.len()
+                ));
+            }
+            if n.parent == NO_NODE {
+                if !self.roots.contains(&(i as u32)) {
+                    return Err(format!("prefix root {i} not in roots"));
+                }
+            } else {
+                let p = self
+                    .nodes
+                    .get(n.parent as usize)
+                    .filter(|p| p.live)
+                    .ok_or_else(|| {
+                        format!("prefix node {i}: dead parent {}", n.parent)
+                    })?;
+                if !p.children.contains(&(i as u32)) {
+                    return Err(format!(
+                        "prefix node {i} missing from parent {}'s children",
+                        n.parent
+                    ));
+                }
+            }
+            for &c in &n.children {
+                if !self.is_live(c) {
+                    return Err(format!(
+                        "prefix node {i}: dead child {c}"
+                    ));
+                }
+            }
+        }
+        for &r in &self.roots {
+            if !self.is_live(r) {
+                return Err(format!("dead root {r}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunks(vals: &[i32]) -> Vec<i32> {
+        vals.to_vec()
+    }
+
+    #[test]
+    fn match_pin_insert_release_roundtrip() {
+        let mut p = PrefixCache::new(4);
+        // Two chunks: [0..4), [4..8).
+        let prompt = chunks(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(p.matched_chunks(&prompt, 2), 0);
+        let pin = p.pin_matched(&prompt, 2, true);
+        assert_eq!(pin.hit_chunks, 0);
+        let tail = p.insert_tail(pin.tail, &prompt, 0, 2);
+        assert_eq!(p.blocks(), 2);
+        assert_eq!(p.refs_of(tail), 1);
+        p.check().unwrap();
+        // Second request shares both chunks warm.
+        let pin2 = p.pin_matched(&prompt, 2, true);
+        assert_eq!(pin2.hit_chunks, 2);
+        assert_eq!(pin2.tail, tail);
+        assert_eq!(p.refs_of(tail), 2);
+        assert_eq!(p.hit_rate(), 0.5); // 2 of 4 lifetime lookups warm
+        p.release(tail, 2);
+        p.release(tail, 2);
+        assert_eq!(p.refs_of(tail), 0);
+        assert_eq!(p.blocks(), 2, "released nodes stay cached");
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn divergence_shares_common_chunks_only() {
+        let mut p = PrefixCache::new(4);
+        let a = chunks(&[9, 9, 9, 9, 1, 1, 1, 1]);
+        let b = chunks(&[9, 9, 9, 9, 2, 2, 2, 2]);
+        let pa = p.pin_matched(&a, 2, true);
+        let ta = p.insert_tail(pa.tail, &a, 0, 2);
+        let pb = p.pin_matched(&b, 2, true);
+        assert_eq!(pb.hit_chunks, 1, "shared first chunk only");
+        let tb = p.insert_tail(pb.tail, &b, 1, 2);
+        assert_eq!(p.blocks(), 3);
+        assert_ne!(ta, tb);
+        assert_eq!(p.parent_of(ta), p.parent_of(tb));
+        p.check().unwrap();
+    }
+
+    #[test]
+    fn evict_takes_cold_lru_leaves_and_spares_pinned() {
+        let mut p = PrefixCache::new(2);
+        let a = chunks(&[1, 1, 2, 2]);
+        let b = chunks(&[7, 7]);
+        let pa = p.pin_matched(&a, 2, true);
+        let ta = p.insert_tail(pa.tail, &a, 0, 2);
+        let pb = p.pin_matched(&b, 1, true);
+        let tb = p.insert_tail(pb.tail, &b, 0, 1);
+        // Everything pinned: nothing evictable.
+        assert_eq!(p.evict(3), 0);
+        p.release(tb, 1); // b cold first...
+        p.release(ta, 2); // ...then a (fresher stamps)
+        assert_eq!(p.cold_blocks(), 3);
+        // LRU: b's root is the coldest evictable leaf.
+        assert_eq!(p.evict(1), 1);
+        assert!(!p.is_live(tb));
+        assert!(p.is_live(ta));
+        // a's chain evicts leaf-first.
+        assert_eq!(p.evict(2), 2);
+        assert_eq!(p.blocks(), 0);
+        p.check().unwrap();
+        // Slots recycle through the free list.
+        let pc = p.pin_matched(&b, 1, true);
+        assert_eq!(pc.hit_chunks, 0, "evicted prefix is gone");
+        p.insert_tail(pc.tail, &b, 0, 1);
+        assert_eq!(p.nodes.len(), 3, "node slots are reused");
+        p.check().unwrap();
+    }
+}

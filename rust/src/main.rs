@@ -7,9 +7,9 @@ use dynabatch::config::{
     SchedulerConfig,
 };
 use dynabatch::driver::{
-    capacity_search, fleet_frontier, run_replica_sim, run_sim,
-    run_sim_switched, sla_sweep, switch_sweep, FleetScenario, PolicySwitch,
-    SimScenario,
+    capacity_search, fleet_frontier, prefix_capacity, run_replica_sim,
+    run_sim, run_sim_switched, sla_sweep, switch_sweep, FleetScenario,
+    PolicySwitch, SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
@@ -17,7 +17,9 @@ use dynabatch::experiments::{ablations, figures, table1, table2};
 use dynabatch::server;
 use dynabatch::service::{Fleet, ReplicaSet, RoutePolicy, ServiceBuilder};
 use dynabatch::util::cli::Command;
-use dynabatch::workload::{trace, Arrival, LengthDist, Workload};
+use dynabatch::workload::{
+    trace, Arrival, LengthDist, SharedPrefixSpec, Workload,
+};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -179,6 +181,31 @@ fn cli() -> Command {
                 .opt("probe", "300", "probe request count"),
         )
         .subcommand(
+            Command::new("prefix",
+                         "multi-tenant prefix-sharing capacity \
+                          regression: capacity (max sustained qps at \
+                          the SLA) with the prefix cache on vs off on \
+                          a Zipf shared-prefix workload (fixed seed → \
+                          bit-identical)")
+                .opt("model", "pangu-7b", "model preset")
+                .opt("policy", "static-greedy:256", "batching policy")
+                .opt("d-sla", "500", "p95 decode SLA in ms")
+                .opt("tenants", "4", "distinct shared tenant prefixes")
+                .opt("prefix-tokens", "512",
+                     "tokens in every tenant's shared prefix")
+                .opt("zipf", "1.1", "Zipf exponent of the tenant draw")
+                .opt("suffix-mean", "32",
+                     "mean private-suffix tokens per request")
+                .opt("output-mean", "64", "mean output tokens")
+                .opt("eta", "6000",
+                     "KV capacity override in tokens (0 = derive from \
+                      hardware; small pools make memory the binding \
+                      constraint)")
+                .opt("probe", "60", "probe request count")
+                .opt("seed", "91", "workload seed")
+                .flag("json", "emit the full comparison as JSON"),
+        )
+        .subcommand(
             Command::new("serve", "serve the real TinyGPT over TCP (PJRT)")
                 .opt("artifacts", "artifacts", "AOT artifacts directory")
                 .opt("bind", "127.0.0.1:7077", "listen address")
@@ -193,7 +220,10 @@ fn cli() -> Command {
                       replica; enables the fleet admin ops)")
                 .opt("fleet-policy", "manual",
                      "manual | autoscale[(…)] — fleet controller when \
-                      --profiles is set"),
+                      --profiles is set")
+                .flag("prefix-cache",
+                      "share KV across requests with identical prompt \
+                       prefixes (radix tree; see `dynabatch prefix`)"),
         )
         .subcommand(
             Command::new("bench-sched",
@@ -251,6 +281,7 @@ fn main() {
         "fleet" => cmd_fleet(&sub),
         "sla" => cmd_sla(&sub),
         "capacity" => cmd_capacity(&sub),
+        "prefix" => cmd_prefix(&sub),
         "serve" => cmd_serve(&sub),
         "bench-sched" => cmd_bench_sched(&sub),
         "workload" => cmd_workload(&sub),
@@ -341,6 +372,7 @@ fn scenario_from(m: &M) -> Result<SimScenario> {
             output: LengthDist::around(output_mean, 4096),
             n_requests: 500,
             seed: 42,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
@@ -393,6 +425,7 @@ fn cmd_switch(m: &M) -> Result<()> {
             output: LengthDist::around(m.get_f64("output-mean")?, 4096),
             n_requests: m.get_usize("requests")?,
             seed: m.get_u64("seed")?,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
@@ -722,6 +755,68 @@ fn cmd_capacity(m: &M) -> Result<()> {
     Ok(())
 }
 
+/// `dynabatch prefix`: the prefix-sharing capacity regression — the
+/// same Zipf multi-tenant workload capacity-searched with the prefix
+/// cache off (baseline) and on (shared), at the same p95 SLA.
+fn cmd_prefix(m: &M) -> Result<()> {
+    let model = dynabatch::experiments::table_model(m.get("model"));
+    let hardware = presets::node_for(&model);
+    let d_sla = m.get_f64("d-sla")? / 1e3;
+    let eta = m.get_u64("eta")?;
+    let s = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::parse(m.get("policy"))?,
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "prefix".into(),
+            arrival: Arrival::Poisson { rate: 1.0 },
+            prompt: LengthDist::around(m.get_f64("suffix-mean")?, 4096),
+            output: LengthDist::around(m.get_f64("output-mean")?, 4096),
+            n_requests: m.get_usize("probe")?,
+            seed: m.get_u64("seed")?,
+            prefix: Some(SharedPrefixSpec {
+                n_prefixes: m.get_usize("tenants")?,
+                prefix_tokens: m.get_u64("prefix-tokens")? as u32,
+                zipf_s: m.get_f64("zipf")?,
+            }),
+        },
+        eta_tokens_override: if eta > 0 { Some(eta) } else { None },
+        swap_tokens: 0,
+    };
+    let r = prefix_capacity(&s, d_sla, s.sched.eps_d, 95.0,
+                            m.get_usize("probe")?, 0.25)?;
+    if m.get_flag("json") {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "prefix-sharing capacity [{}] tenants={} prefix={} tok \
+         zipf={} seed={}",
+        s.sched.policy.label(),
+        m.get("tenants"),
+        m.get("prefix-tokens"),
+        m.get("zipf"),
+        s.workload.seed
+    );
+    println!(
+        "  baseline (no sharing): {:>6.2} qps  tbt_p95 {:>5.1} ms",
+        r.baseline.capacity_qps,
+        r.baseline.at_capacity.tbt_p95 * 1e3
+    );
+    println!(
+        "  shared  (prefix on) : {:>6.2} qps  tbt_p95 {:>5.1} ms  \
+         hit-rate {:.0}%",
+        r.shared.capacity_qps,
+        r.shared.at_capacity.tbt_p95 * 1e3,
+        r.shared.at_capacity.prefix_hit_rate.unwrap_or(0.0) * 100.0
+    );
+    println!("  ratio: {:.2}x", r.ratio);
+    Ok(())
+}
+
 fn cmd_serve(m: &M) -> Result<()> {
     let dir = Path::new(m.get("artifacts"));
     if !dir.join("manifest.json").exists() {
@@ -741,6 +836,7 @@ fn cmd_serve(m: &M) -> Result<()> {
         policy: PolicyKind::parse(m.get("policy"))?,
         b_max: max_batch,
         d_sla: if d_sla_ms > 0.0 { Some(d_sla_ms / 1e3) } else { None },
+        prefix_cache: m.get_flag("prefix-cache"),
         ..SchedulerConfig::default()
     };
     // η for the real engine: slots × context window.
@@ -837,6 +933,7 @@ fn cmd_workload(m: &M) -> Result<()> {
         output: LengthDist::around(m.get_f64("output-mean")?, 4096),
         n_requests: m.get_usize("requests")?,
         seed: m.get_u64("seed")?,
+        prefix: None,
     };
     let reqs = w.generate();
     trace::save(Path::new(m.get("out")), &reqs)?;

@@ -96,6 +96,10 @@ pub struct RunMetrics {
     pub reconfigs: u64,
     /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
     pub utilization: Option<f64>,
+    /// Lifetime prefix-cache hit rate over eligible prompt chunks;
+    /// `None` when the run's scheduler had the prefix cache disabled
+    /// (the sim drivers set it from the KV manager after the run).
+    pub prefix_hit_rate: Option<f64>,
     /// Per-class latency/SLA attribution (rank order; empty until
     /// [`Self::attach_class_stats`] runs — the sim drivers always attach
     /// it).
@@ -153,6 +157,7 @@ impl RunMetrics {
             cancelled: stats.cancelled,
             reconfigs: stats.reconfigs,
             utilization,
+            prefix_hit_rate: None,
             per_class: Vec::new(),
         }
     }
@@ -254,6 +259,12 @@ impl RunMetrics {
             (
                 "utilization",
                 self.utilization.map(Json::Num).unwrap_or(Json::Null),
+            ),
+            (
+                "prefix_hit_rate",
+                self.prefix_hit_rate
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
             ),
             (
                 "per_class",

@@ -208,8 +208,11 @@ impl Scheduler {
         let controller = build_controller(&cfg);
         let telemetry =
             Telemetry::new(prior_in, prior_out, cfg.latency_window);
-        let kv = KvBlockManager::new(eta_tokens, cfg.block_tokens,
-                                     swap_tokens);
+        let mut kv = KvBlockManager::new(eta_tokens, cfg.block_tokens,
+                                         swap_tokens);
+        if cfg.prefix_cache {
+            kv.enable_prefix_cache();
+        }
         let b0 = cfg.b_min;
         Scheduler {
             // Placeholder until the first decision (taken on step 1).
@@ -520,6 +523,8 @@ impl Scheduler {
             running_decode as u32,
             pending_prefill as u32,
             self.waiting_by_class(),
+            self.kv.shared_tokens(),
+            self.kv.prefix_hit_rate(),
         )
     }
 
@@ -822,8 +827,21 @@ impl Scheduler {
                 prompt_len
             };
             // Admission headroom: leave one block spare per running request
-            // would be ideal; vLLM uses a small watermark.
-            if !self.kv.can_grow(id, first_alloc) {
+            // would be ideal; vLLM uses a small watermark. Fresh
+            // admissions go through the prefix-aware probe (which may
+            // reclaim cold cached prefixes); resumes re-materialize a
+            // fully private context and take the plain path.
+            let fits = if !from_resume && self.kv.prefix_enabled() {
+                let prompt = &self.slots[slot as usize]
+                    .as_ref()
+                    .expect("live request slot")
+                    .req
+                    .prompt_tokens;
+                self.kv.can_admit_shared(prompt, first_alloc)
+            } else {
+                self.kv.can_grow(id, first_alloc)
+            };
+            if !fits {
                 break;
             }
             if prompt_len.max(1) + max_new > engine.max_seq() {
@@ -844,12 +862,36 @@ impl Scheduler {
                 self.finished.push(req);
                 continue;
             }
-            self.kv.allocate(id, first_alloc).expect("can_grow checked");
+            let warm = if !from_resume && self.kv.prefix_enabled() {
+                let prompt = &self.slots[slot as usize]
+                    .as_ref()
+                    .expect("live request slot")
+                    .req
+                    .prompt_tokens;
+                // Identical tree state as the probe above (the probe
+                // releases its pins but evicts nothing that matched),
+                // so room is guaranteed.
+                let sa = self
+                    .kv
+                    .allocate_shared(id, prompt, first_alloc)
+                    .expect("admission room ensured");
+                sa.warm_tokens
+            } else {
+                self.kv.allocate(id, first_alloc)
+                    .expect("can_grow checked");
+                0
+            };
             let kv_slot = self.kv.slot_of(id).expect("just allocated");
             {
                 let e = self.entry_mut(slot);
                 e.kv = kv_slot;
                 e.req.phase = Phase::Prefill;
+                if warm > 0 {
+                    // Warm-matched prefix chunks already hold their KV:
+                    // skip their prefill. The last prompt token is always
+                    // private, so prefill never fully disappears here.
+                    e.req.prefilled = e.req.prefilled.max(warm);
+                }
                 if e.req.prefill_done() {
                     // Zero-length prompt: nothing to prefill, so no
                     // prefill step will ever flip the phase — go straight
@@ -939,8 +981,12 @@ impl Scheduler {
             if phase != Phase::Decode {
                 continue;
             }
-            // Ensure one more token fits; preempt victims if not.
+            // Ensure one more token fits; reclaim cold cached prefixes
+            // first, then preempt victims.
             while !self.kv.can_grow_at(kv_slot, 1) {
+                if self.kv.reclaim_cold(1) > 0 {
+                    continue;
+                }
                 if !self.preempt_victim(engine, slot, plan) {
                     break; // nothing left to preempt; skip this decode
                 }

@@ -65,6 +65,12 @@ pub struct ServerStats {
     pub kv_used_tokens: u64,
     pub kv_free_blocks: u64,
     pub kv_total_blocks: u64,
+    /// Logical tokens served from shared prefix-cache blocks (0 from
+    /// pre-prefix servers or when the cache is disabled).
+    pub kv_shared_tokens: u64,
+    /// Lifetime prefix-cache hit rate over eligible prompt chunks (0
+    /// from pre-prefix servers; aggregate: worst replica).
+    pub prefix_hit_rate: f64,
     pub b_t: u32,
     /// Label of the live batching controller.
     pub controller: String,
@@ -198,6 +204,14 @@ fn parse_stats(ev: &Json) -> ServerStats {
         kv_used_tokens: ev.get("kv_used_tokens").as_u64().unwrap_or(0),
         kv_free_blocks: ev.get("kv_free_blocks").as_u64().unwrap_or(0),
         kv_total_blocks: ev.get("kv_total_blocks").as_u64().unwrap_or(0),
+        kv_shared_tokens: ev
+            .get("kv_shared_tokens")
+            .as_u64()
+            .unwrap_or(0),
+        prefix_hit_rate: ev
+            .get("prefix_hit_rate")
+            .as_f64()
+            .unwrap_or(0.0),
         b_t: ev.get("b_t").as_u64().unwrap_or(0) as u32,
         controller: ev.get("controller").as_str().unwrap_or("").into(),
         steps: ev.get("steps").as_u64().unwrap_or(0),

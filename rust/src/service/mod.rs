@@ -168,6 +168,15 @@ impl ServiceBuilder {
         self
     }
 
+    /// Opt into the ref-counted prefix cache: admission-time allocations
+    /// walk the radix tree over prompt token chunks and share KV blocks
+    /// for matched prefixes (see [`crate::kv`]). Off by default — the
+    /// scheduler is then bit-identical to the no-sharing one.
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.prefix_cache = on;
+        self
+    }
+
     /// Deploy this replica under a [`ReplicaProfile`]: the resolved η
     /// (KV token capacity — explicit or hardware-derived) is scaled by
     /// the profile's `kv_scale`, and the default simulated engine runs
@@ -281,6 +290,12 @@ pub struct ServiceSnapshot {
     pub kv_used_tokens: u64,
     pub kv_free_blocks: usize,
     pub kv_total_blocks: usize,
+    /// Logical tokens served from shared prefix blocks (0 unless the
+    /// prefix cache is enabled; see [`ServiceBuilder::prefix_cache`]).
+    pub kv_shared_tokens: u64,
+    /// Lifetime prefix-cache hit rate over eligible prompt chunks (0.0
+    /// before any lookup or when the cache is disabled).
+    pub prefix_hit_rate: f64,
     pub b_t: u32,
     /// Label of the live controller (changes on `reconfigure`).
     pub controller: String,
@@ -736,6 +751,8 @@ fn publish(shared: &Shared, sched: &Scheduler, label: &str,
     snap.kv_used_tokens = sched.kv.used_tokens();
     snap.kv_free_blocks = sched.kv.free_blocks();
     snap.kv_total_blocks = sched.kv.total_blocks();
+    snap.kv_shared_tokens = sched.kv.shared_tokens();
+    snap.prefix_hit_rate = sched.kv.prefix_hit_rate();
     snap.b_t = sched.current_bt();
     if snap.controller != label {
         snap.controller = label.to_string();

@@ -642,10 +642,18 @@ impl ReplicaSet {
     /// `stats.replicas`). Profile fields fold fleet-wise: `profile`
     /// joins the distinct profile names with `|`, `cost_unit` sums
     /// (the fleet's cost rate in baseline-replica-seconds per second)
-    /// and `decode_speed` takes the fastest replica.
+    /// and `decode_speed` takes the fastest replica. `kv_shared_tokens`
+    /// sums; `prefix_hit_rate` takes the worst (min) replica — the set
+    /// is only as warm as its coldest cache.
     pub fn aggregate(snaps: &[ServiceSnapshot]) -> ServiceSnapshot {
         let mut agg = ServiceSnapshot {
             draining: !snaps.is_empty(),
+            // Min-folded below; empty sets report the 0.0 default.
+            prefix_hit_rate: if snaps.is_empty() {
+                0.0
+            } else {
+                f64::INFINITY
+            },
             ..ServiceSnapshot::default()
         };
         let mut labels: Vec<&str> = Vec::new();
@@ -664,6 +672,12 @@ impl ReplicaSet {
             agg.kv_used_tokens += s.kv_used_tokens;
             agg.kv_free_blocks += s.kv_free_blocks;
             agg.kv_total_blocks += s.kv_total_blocks;
+            agg.kv_shared_tokens += s.kv_shared_tokens;
+            // Worst replica: the set is only as warm as its coldest
+            // cache, which is the honest signal for an operator asking
+            // "is sharing paying off?".
+            agg.prefix_hit_rate =
+                agg.prefix_hit_rate.min(s.prefix_hit_rate);
             agg.b_t += s.b_t;
             agg.steps += s.steps;
             agg.finished += s.finished;
@@ -1126,6 +1140,8 @@ mod tests {
             kv_used_tokens: 100,
             kv_free_blocks: 5,
             kv_total_blocks: 10,
+            kv_shared_tokens: if draining { 64 } else { 128 },
+            prefix_hit_rate: if draining { 0.25 } else { 0.75 },
             b_t: 8,
             controller: controller.to_string(),
             steps: 7,
@@ -1159,6 +1175,9 @@ mod tests {
         assert_eq!(a.class_ttft_p95, [0.30, 0.0, 0.0],
                    "set-level per-class TTFT p95 is the worst replica");
         assert_eq!(a.kv_total_blocks, 20);
+        assert_eq!(a.kv_shared_tokens, 192, "shared tokens sum");
+        assert_eq!(a.prefix_hit_rate, 0.25,
+                   "set hit rate is the coldest replica's");
         assert_eq!(a.b_t, 16);
         assert_eq!(a.finished, 8);
         assert_eq!(a.controller, "x", "common label collapses");

@@ -65,6 +65,15 @@ pub struct Observation {
     /// Waiting-queue depth per priority class, indexed by
     /// [`PriorityClass::rank`] (0 = Interactive).
     pub waiting_by_class: [u32; PriorityClass::COUNT],
+    /// Tokens served from shared prefix-cache blocks (logical view over
+    /// non-swapped requests) — 0 unless the prefix cache is enabled.
+    /// `used_tokens` stays physical; the memory-aware policy reads
+    /// physical occupancy, this field tells it how much logical context
+    /// that physical budget is covering.
+    pub kv_shared_tokens: u64,
+    /// Lifetime fraction of eligible prompt chunks served warm from the
+    /// prefix cache (0.0 before any lookup or when disabled).
+    pub prefix_hit_rate: f64,
     /// Recent mean decode latency attributed per class (seconds), indexed
     /// by [`PriorityClass::rank`]; `None` until the class has appeared in
     /// a decode batch — and again once it has been absent from a full
@@ -103,6 +112,8 @@ impl Observation {
             pending_prefill,
             waiting: 10,
             waiting_by_class: [0, 10, 0],
+            kv_shared_tokens: 0,
+            prefix_hit_rate: 0.0,
             decode_latency_by_class: [None; PriorityClass::COUNT],
             ttft_by_class: [None; PriorityClass::COUNT],
         }
@@ -326,7 +337,8 @@ impl Telemetry {
 
     pub fn observe(&self, now: f64, eta: u64, used: u64, running_decode: u32,
                    pending_prefill: u32,
-                   waiting_by_class: [u32; PriorityClass::COUNT])
+                   waiting_by_class: [u32; PriorityClass::COUNT],
+                   kv_shared_tokens: u64, prefix_hit_rate: f64)
                    -> Observation {
         let waiting = waiting_by_class.iter().sum();
         Observation {
@@ -352,6 +364,8 @@ impl Telemetry {
             pending_prefill,
             waiting,
             waiting_by_class,
+            kv_shared_tokens,
+            prefix_hit_rate,
             decode_latency_by_class: std::array::from_fn(|rank| {
                 if self.class_window_live(rank) {
                     Some(self.class_lat[rank].mean())
@@ -414,12 +428,12 @@ mod tests {
     #[test]
     fn decode_window_tracks_recent() {
         let mut t = Telemetry::new(1.0, 1.0, 4);
-        let obs0 = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs0 = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert!(obs0.recent_decode_latency.is_none());
         for i in 0..10 {
             t.record_decode_step(0.01 * (i + 1) as f64, 8);
         }
-        let obs = t.observe(1.0, 1000, 0, 10, 3, [1, 4, 0]);
+        let obs = t.observe(1.0, 1000, 0, 10, 3, [1, 4, 0], 0, 0.0);
         // window=4 → last 4 samples: 0.07,0.08,0.09,0.10
         assert!((obs.recent_decode_latency.unwrap() - 0.085).abs() < 1e-9);
         assert_eq!(obs.recent_decode_batch, Some(8.0));
@@ -438,7 +452,7 @@ mod tests {
         t.record_decode_step_classed(0.05, 8, [2, 0, 6]);
         // Step 2: batch only.
         t.record_decode_step_classed(0.07, 8, [0, 0, 8]);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert_eq!(obs.decode_latency_by_class[0], Some(0.05));
         assert_eq!(obs.decode_latency_by_class[1], None,
                    "absent class gets no sample");
@@ -483,18 +497,18 @@ mod tests {
         // driving a per-class SLA loop after the traffic left.
         let mut t = Telemetry::new(1.0, 1.0, 4);
         t.record_decode_step_classed(0.2, 4, [1, 0, 1]);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert_eq!(obs.decode_latency_by_class[0], Some(0.2));
         // Three batch-only steps: interactive still within the horizon.
         for _ in 0..3 {
             t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
         }
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert_eq!(obs.decode_latency_by_class[0], Some(0.2),
                    "brief absence keeps the window live");
         // A fourth absent step crosses the staleness horizon.
         t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert_eq!(obs.decode_latency_by_class[0], None,
                    "stale window stops reporting");
         assert!(obs.decode_latency_by_class[2].is_some(),
@@ -503,14 +517,14 @@ mod tests {
         assert_eq!(t.decode_latency_class_p(0, 100.0), 0.2);
         // Returning traffic revives the window immediately.
         t.record_decode_step_classed(0.05, 4, [2, 0, 2]);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert!(obs.decode_latency_by_class[0].is_some());
     }
 
     #[test]
     fn ttft_attribution_is_per_class_and_live() {
         let mut t = Telemetry::new(1.0, 1.0, 4);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert_eq!(obs.ttft_by_class, [None; 3]);
         assert_eq!(t.ttft_samples(), 0);
         assert_eq!(t.ttft_class_p(0, 95.0), 0.0, "no sample → 0.0");
@@ -518,7 +532,7 @@ mod tests {
         t.record_ttft(0, 0.30);
         t.record_ttft(2, 1.50);
         assert_eq!(t.ttft_samples(), 3);
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert!((obs.ttft_by_class[0].unwrap() - 0.20).abs() < 1e-12);
         assert_eq!(obs.ttft_by_class[1], None, "no first token yet");
         assert_eq!(obs.ttft_by_class[2], Some(1.50));
@@ -530,7 +544,7 @@ mod tests {
         for _ in 0..8 {
             t.record_decode_step_classed(0.01, 4, [0, 0, 4]);
         }
-        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0]);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert!(obs.ttft_by_class[0].is_some());
     }
 

@@ -89,6 +89,27 @@ impl LengthDist {
     }
 }
 
+/// Multi-tenant shared-prefix overlay: every generated request is
+/// assigned one of `n_prefixes` tenants by a Zipf(`zipf_s`) draw and
+/// its prompt becomes that tenant's `prefix_tokens`-token system
+/// prefix followed by a per-request private suffix (the workload's
+/// `prompt` distribution then samples the *suffix* length). Token ids
+/// are materialized concretely — tenant prefixes are identical across
+/// requests, suffixes are unique — so the prefix cache
+/// ([`crate::kv`]) can share the tenant blocks. `None` leaves
+/// `prompt_tokens` empty and the generator byte-identical to the
+/// pre-prefix one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SharedPrefixSpec {
+    /// Distinct tenant prefixes (Zipf ranks; tenant 0 is hottest).
+    pub n_prefixes: usize,
+    /// Tokens in every tenant's shared prefix.
+    pub prefix_tokens: u32,
+    /// Zipf exponent for the tenant draw (0.0 = uniform; ~1.0 is the
+    /// classic heavy skew of multi-tenant traffic).
+    pub zipf_s: f64,
+}
+
 /// A full workload: arrival process + lengths + volume.
 #[derive(Debug, Clone)]
 pub struct Workload {
@@ -98,6 +119,18 @@ pub struct Workload {
     pub output: LengthDist,
     pub n_requests: usize,
     pub seed: u64,
+    /// Optional multi-tenant shared-prefix overlay (see
+    /// [`SharedPrefixSpec`]).
+    pub prefix: Option<SharedPrefixSpec>,
+}
+
+/// splitmix64 finalizer — deterministic token-id material for the
+/// shared-prefix generator (no global state, stable across runs).
+fn mix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
 }
 
 impl Workload {
@@ -106,6 +139,7 @@ impl Workload {
         let mut rng = Rng::new(self.seed);
         let mut arr_rng = rng.fork(1);
         let mut len_rng = rng.fork(2);
+        let mut pfx_rng = rng.fork(3);
         let mut t = 0.0f64;
         let mut burst_high = true;
         let mut burst_switch = 0.0f64;
@@ -136,7 +170,33 @@ impl Workload {
             };
             let prompt = self.prompt.sample(&mut len_rng).max(1);
             let output = self.output.sample(&mut len_rng).max(1);
-            out.push(Request::new(i as u64, prompt, output, at));
+            match &self.prefix {
+                None => {
+                    out.push(Request::new(i as u64, prompt, output, at));
+                }
+                Some(spec) => {
+                    let tenant = pfx_rng.zipf(spec.n_prefixes, spec.zipf_s);
+                    let total =
+                        spec.prefix_tokens as usize + prompt as usize;
+                    let mut toks = Vec::with_capacity(total);
+                    // Tenant prefix: identical across requests of the
+                    // same tenant (positive ids).
+                    for pos in 0..spec.prefix_tokens as u64 {
+                        let h = mix(((tenant as u64) << 32) | pos);
+                        toks.push((h & 0x7FFF_FFFF) as i32);
+                    }
+                    // Private suffix: unique per request (negative ids
+                    // — disjoint from every prefix token by sign).
+                    for pos in 0..prompt as u64 {
+                        let h = mix(((i as u64) << 24)
+                                    ^ pos
+                                    ^ (self.seed << 48));
+                        toks.push(-1 - (h & 0x7FFF_FFFE) as i32);
+                    }
+                    out.push(Request::with_tokens(i as u64, toks, output,
+                                                  at));
+                }
+            }
         }
         out.sort_by(|a, b| a.arrived_at.total_cmp(&b.arrived_at));
         out
@@ -170,6 +230,7 @@ pub fn table1_rows() -> Vec<(&'static str, Workload)> {
             output,
             n_requests: n,
             seed: 42,
+            prefix: None,
         })
     };
     vec![
@@ -191,6 +252,7 @@ pub fn table2_rows() -> Vec<(&'static str, f64, Workload, bool)> {
         output: LengthDist::around(o, 2048),
         n_requests: n,
         seed: 43,
+        prefix: None,
     };
     vec![
         ("llama-65b", 0.050, mk("t2-llama65b", 237.7, 416.2, 3000), false),
@@ -214,6 +276,7 @@ mod tests {
             output: LengthDist::Fixed(5),
             n_requests: 100,
             seed: 1,
+            prefix: None,
         };
         let reqs = w.generate();
         assert_eq!(reqs.len(), 100);
@@ -231,6 +294,7 @@ mod tests {
             output: LengthDist::Fixed(1),
             n_requests: 5000,
             seed: 2,
+            prefix: None,
         };
         let reqs = w.generate();
         let span = reqs.last().unwrap().arrived_at;
@@ -251,6 +315,7 @@ mod tests {
             output: LengthDist::around(300.0, 1000),
             n_requests: 50,
             seed: 7,
+            prefix: None,
         };
         let a = w.generate();
         let b = w.generate();
@@ -282,6 +347,7 @@ mod tests {
             output: LengthDist::Fixed(1),
             n_requests: 500,
             seed: 9,
+            prefix: None,
         };
         let reqs = w.generate();
         for pair in reqs.windows(2) {
@@ -307,6 +373,91 @@ mod tests {
             assert!(d_sla > 0.0);
             assert_eq!(w.generate().len(), w.n_requests);
         }
+    }
+
+    #[test]
+    fn shared_prefix_materializes_tenant_prefixes() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(8),
+            output: LengthDist::Fixed(4),
+            n_requests: 400,
+            seed: 13,
+            prefix: Some(SharedPrefixSpec {
+                n_prefixes: 4,
+                prefix_tokens: 32,
+                zipf_s: 1.1,
+            }),
+        };
+        let reqs = w.generate();
+        // Total prompt = shared prefix + sampled suffix.
+        assert!(reqs.iter().all(|r| r.prompt_len == 32 + 8));
+        assert!(reqs.iter().all(|r| r.prompt_tokens.len() == 40));
+        // Prefix tokens are positive, suffixes negative (disjoint by
+        // sign), suffixes unique per request.
+        for r in &reqs {
+            assert!(r.prompt_tokens[..32].iter().all(|&t| t >= 0));
+            assert!(r.prompt_tokens[32..].iter().all(|&t| t < 0));
+        }
+        // Same tenant → identical prefix; the Zipf draw with 4 tenants
+        // over 400 requests exercises every tenant, and tenant 0 (the
+        // hottest rank) dominates.
+        let mut counts = std::collections::HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.prompt_tokens[..32].to_vec()).or_insert(0u32)
+                += 1;
+        }
+        assert_eq!(counts.len(), 4, "all four tenant prefixes appear");
+        let max = *counts.values().max().unwrap();
+        assert!(max > 100, "Zipf skew concentrates on the hot tenant");
+        // No two requests share a suffix.
+        let mut suffixes: Vec<_> =
+            reqs.iter().map(|r| r.prompt_tokens[32..].to_vec()).collect();
+        suffixes.sort();
+        suffixes.dedup();
+        assert_eq!(suffixes.len(), reqs.len());
+    }
+
+    #[test]
+    fn shared_prefix_is_deterministic_per_seed() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Poisson { rate: 3.0 },
+            prompt: LengthDist::around(64.0, 256),
+            output: LengthDist::Fixed(4),
+            n_requests: 60,
+            seed: 21,
+            prefix: Some(SharedPrefixSpec {
+                n_prefixes: 8,
+                prefix_tokens: 48,
+                zipf_s: 1.0,
+            }),
+        };
+        let a = w.generate();
+        let b = w.generate();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+            assert_eq!(x.arrived_at, y.arrived_at);
+        }
+        let c = w.with_seed(22).generate();
+        assert!(a.iter().zip(&c).any(|(x, y)| {
+            x.prompt_tokens[48..] != y.prompt_tokens[48..]
+        }));
+    }
+
+    #[test]
+    fn no_prefix_leaves_prompt_tokens_empty() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(10),
+            output: LengthDist::Fixed(5),
+            n_requests: 20,
+            seed: 1,
+            prefix: None,
+        };
+        assert!(w.generate().iter().all(|r| r.prompt_tokens.is_empty()));
     }
 
     #[test]

@@ -78,6 +78,7 @@ mod tests {
             output: LengthDist::around(128.0, 512),
             n_requests: 200,
             seed: 11,
+            prefix: None,
         };
         let mut reqs = w.generate();
         // Mixed classes must survive the roundtrip.

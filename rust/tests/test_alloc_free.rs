@@ -50,6 +50,10 @@ fn steady_state_decode_steps_do_not_allocate() {
     // finishes inside the measured window.
     let cfg = SchedulerConfig {
         policy: PolicyKind::StaticFixed { batch: 64 },
+        // The prefix cache must not cost the decode hot path anything:
+        // decode appends to private tail blocks and never touches the
+        // tree, so the zero-allocation contract holds with it enabled.
+        prefix_cache: true,
         ..SchedulerConfig::default()
     };
     let m = pangu_7b();

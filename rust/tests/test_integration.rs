@@ -28,6 +28,7 @@ fn scenario(policy: PolicyKind) -> SimScenario {
             output: LengthDist::around(200.0, 512),
             n_requests: 150,
             seed: 99,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

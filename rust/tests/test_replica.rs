@@ -319,6 +319,7 @@ fn route_two_replicas_reach_1_8x_aggregate_throughput() {
             output: LengthDist::Fixed(64),
             n_requests: 208,
             seed: 7,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

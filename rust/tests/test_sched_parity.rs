@@ -49,6 +49,7 @@ fn scenario(policy: PolicyKind, n: usize) -> SimScenario {
             output: LengthDist::around(96.0, 1024),
             n_requests: n,
             seed: 7,
+            prefix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
