@@ -25,16 +25,20 @@ use crate::config::{FleetPolicyKind, HardwareSpec, ModelSpec, PolicyKind,
                     ReplicaProfile, SchedulerConfig};
 use crate::engine::sim::SimEngine;
 use crate::engine::Engine;
-use crate::metrics::{FleetMetrics, ReplicaSetMetrics, RunMetrics};
-use crate::request::{PriorityClass, Request};
+use crate::metrics::{ChaosMetrics, FleetMetrics, ReplicaSetMetrics,
+                     RunMetrics};
+use crate::request::{PriorityClass, Request, RequestId};
 use crate::scheduler::{SchedStats, Scheduler};
 use crate::service::fleet::{build_fleet_controller, FleetController,
                             FleetDirective, FleetObservation};
-use crate::service::replica::{ReplicaLoad, RouteKey, RoutePolicy};
+use crate::service::replica::{Health, HealthPolicy, HealthTracker,
+                              ReplicaLoad, RouteKey, RoutePolicy};
 use crate::sim::{Clock, VirtualClock};
 use crate::util::json::Json;
+use crate::util::stats::percentile_of;
 use crate::workload::{Arrival, Workload};
 use anyhow::{bail, Result};
+use std::collections::{HashMap, HashSet};
 
 /// A fully-specified simulation scenario.
 #[derive(Debug, Clone)]
@@ -437,6 +441,740 @@ fn fold_replica_set(reps: &[&SimReplica], scenario: &SimScenario,
         per_replica,
         aggregate,
     }
+}
+
+/// Hedge duplicates live in a disjoint request-id space so they can
+/// coexist with any original id on the same replica: duplicate of
+/// request `id` is `HEDGE_BASE + id`.
+pub const HEDGE_BASE: RequestId = 1 << 40;
+
+/// One injected fault for the chaos co-simulation ([`run_chaos_sim`]).
+#[derive(Debug, Clone)]
+pub enum Fault {
+    /// The replica dies at virtual time `at`: its in-flight population
+    /// is torn down ([`Scheduler::crash_extract`]) — prompt-intact
+    /// requests re-route to a healthy replica, streamed ones end with a
+    /// typed terminal error — and it never steps again.
+    Crash { replica: usize, at: f64 },
+    /// Straggler: the replica's per-step time is multiplied by `factor`
+    /// from `at` to `at + duration` (threaded through
+    /// [`SimEngine::set_slow`]).
+    Slow { replica: usize, at: f64, factor: f64, duration: f64 },
+    /// The replicas are unreachable from `at` to `at + duration`: they
+    /// stop stepping (in-flight work stalls, nothing is lost), take no
+    /// new routes, and drain their backlog after healing.
+    Partition { replicas: Vec<usize>, at: f64, duration: f64 },
+}
+
+/// A chaos-run configuration: the fault schedule plus the detection
+/// and mitigation knobs layered on the replica co-simulation.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Straggler-detector tuning; the [`HealthTracker`] it drives is
+    /// the same state machine the live [`crate::service::ReplicaSet`]
+    /// runs.
+    pub health: HealthPolicy,
+    /// Virtual-time spacing of straggler-detector observations.
+    pub observe_interval: f64,
+    /// Duplicate-submit interactive prompt-intact requests off a
+    /// newly-`Suspect` replica; first token wins, the loser is
+    /// cancelled via the O(1) cancel path.
+    pub hedging: bool,
+    /// Traffic mix for [`assign_classes`] (all-zero leaves every
+    /// request on its generated class).
+    pub mix: [f64; PriorityClass::COUNT],
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            faults: Vec::new(),
+            health: HealthPolicy::default(),
+            observe_interval: 0.25,
+            hedging: true,
+            mix: [0.0; PriorityClass::COUNT],
+        }
+    }
+}
+
+impl FaultPlan {
+    pub fn validate(&self, n_replicas: usize) -> Result<()> {
+        if self.observe_interval <= 0.0
+            || !self.observe_interval.is_finite()
+        {
+            bail!("fault plan needs a positive finite observe interval");
+        }
+        if self.health.suspect_factor <= 1.0
+            || !self.health.suspect_factor.is_finite()
+        {
+            bail!("health.suspect_factor must be > 1 (a replica cannot \
+                   straggle behind itself)");
+        }
+        let check = |replica: usize, at: f64| -> Result<()> {
+            if replica >= n_replicas {
+                bail!("fault targets replica {replica} but the sim has \
+                       {n_replicas}");
+            }
+            if at < 0.0 || !at.is_finite() {
+                bail!("fault time must be finite and >= 0, got {at}");
+            }
+            Ok(())
+        };
+        for f in &self.faults {
+            match f {
+                Fault::Crash { replica, at } => check(*replica, *at)?,
+                Fault::Slow { replica, at, factor, duration } => {
+                    check(*replica, *at)?;
+                    if *factor <= 0.0 || !factor.is_finite() {
+                        bail!("slow factor must be finite and > 0");
+                    }
+                    if *duration <= 0.0 || duration.is_nan() {
+                        bail!("slow duration must be > 0");
+                    }
+                }
+                Fault::Partition { replicas, at, duration } => {
+                    if replicas.is_empty() {
+                        bail!("partition needs at least one replica");
+                    }
+                    for &r in replicas {
+                        check(r, *at)?;
+                    }
+                    if *duration <= 0.0 || !duration.is_finite() {
+                        bail!("partition duration must be > 0");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the plan into per-replica point events, sorted by time
+    /// (stable: plan order breaks ties) — the deterministic application
+    /// schedule [`run_chaos_sim`] consumes.
+    fn events(&self) -> Vec<(f64, ChaosEvent)> {
+        let mut ev = Vec::new();
+        for f in &self.faults {
+            match f {
+                Fault::Crash { replica, at } => {
+                    ev.push((*at, ChaosEvent::Crash(*replica)));
+                }
+                Fault::Slow { replica, at, factor, duration } => {
+                    ev.push((*at, ChaosEvent::SlowStart(*replica,
+                                                        *factor)));
+                    ev.push((*at + *duration,
+                             ChaosEvent::SlowEnd(*replica)));
+                }
+                Fault::Partition { replicas, at, duration } => {
+                    for &r in replicas {
+                        ev.push((*at, ChaosEvent::PartitionStart(r)));
+                        ev.push((*at + *duration,
+                                 ChaosEvent::PartitionEnd(r)));
+                    }
+                }
+            }
+        }
+        ev.sort_by(|a, b| a.0.total_cmp(&b.0));
+        ev
+    }
+
+    /// The fault activity envelope `[start, end)` used to bucket
+    /// finished requests into pre/during/post phases by arrival time.
+    /// A crash never ends, so its envelope runs to +∞ (empty post
+    /// phase); an empty plan yields an empty during phase.
+    fn envelope(&self) -> (f64, f64) {
+        let mut start = f64::INFINITY;
+        let mut end = f64::NEG_INFINITY;
+        for f in &self.faults {
+            let (at, until) = match f {
+                Fault::Crash { at, .. } => (*at, f64::INFINITY),
+                Fault::Slow { at, duration, .. } => (*at, *at + *duration),
+                Fault::Partition { at, duration, .. } => {
+                    (*at, *at + *duration)
+                }
+            };
+            start = start.min(at);
+            end = end.max(until);
+        }
+        (start, end)
+    }
+}
+
+/// A [`FaultPlan`] fault expanded to a single-replica point event.
+#[derive(Debug, Clone, Copy)]
+enum ChaosEvent {
+    Crash(usize),
+    SlowStart(usize, f64),
+    SlowEnd(usize),
+    PartitionStart(usize),
+    PartitionEnd(usize),
+}
+
+/// One live hedge pair: the original runs on `orig_rep`, its duplicate
+/// (`HEDGE_BASE + id`) on `dup_rep`; first token wins.
+#[derive(Debug, Clone, Copy)]
+struct Hedge {
+    orig_rep: usize,
+    dup_rep: usize,
+}
+
+/// The chaos counters accumulated while the simulation runs (the rest
+/// of [`ChaosMetrics`] is computed from the finished replicas).
+#[derive(Debug, Default)]
+struct ChaosCounters {
+    crashes: u64,
+    partitions: u64,
+    suspected: u64,
+    recovered: u64,
+    lost: u64,
+    rerouted: u64,
+    hedged: u64,
+    hedge_wins: u64,
+    duplicates_suppressed: u64,
+}
+
+/// The chaos co-simulation's mutable state: the replicas plus fault
+/// flags, the health tracker driving routing exclusion, the event and
+/// observation schedules on the monotone time front, and the hedge
+/// book-keeping.
+struct ChaosSim<'a> {
+    reps: Vec<SimReplica>,
+    requests: Vec<Request>,
+    next: usize,
+    route: &'a RoutePolicy,
+    rr: usize,
+    health: HealthTracker,
+    crashed: Vec<bool>,
+    partitioned: Vec<bool>,
+    events: Vec<(f64, ChaosEvent)>,
+    next_event: usize,
+    /// Monotone virtual-time front: the max time any replica or arrival
+    /// has reached — faults and detector observations fire on it.
+    front: f64,
+    next_observe: f64,
+    observe_interval: f64,
+    hedging: bool,
+    /// Request id → index into `requests` (for hedge duplication).
+    by_index: HashMap<RequestId, usize>,
+    /// Original ids that were accepted somewhere (the zero-loss ledger).
+    assigned: HashMap<RequestId, usize>,
+    hedges: HashMap<RequestId, Hedge>,
+    /// Each request is hedged at most once, ever.
+    hedged_ever: HashSet<RequestId>,
+    m: ChaosCounters,
+}
+
+impl ChaosSim<'_> {
+    /// Advance the time front and fire, in time order, every fault
+    /// event and detector observation it crossed (ties: faults first).
+    fn advance_front(&mut self, t: f64) {
+        if t > self.front {
+            self.front = t;
+        }
+        loop {
+            let ev_at = self.events.get(self.next_event).map(|e| e.0);
+            let ev_due = ev_at.is_some_and(|at| at <= self.front);
+            let ob_due = self.next_observe <= self.front;
+            if ev_due
+                && (!ob_due
+                    || ev_at.is_some_and(|at| at <= self.next_observe))
+            {
+                let (at, ev) = self.events[self.next_event];
+                self.next_event += 1;
+                self.apply_event(at, ev);
+            } else if ob_due {
+                self.next_observe += self.observe_interval;
+                self.observe();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn apply_event(&mut self, at: f64, ev: ChaosEvent) {
+        match ev {
+            ChaosEvent::Crash(i) => {
+                if self.crashed[i] {
+                    return;
+                }
+                self.crashed[i] = true;
+                self.partitioned[i] = false;
+                self.health.mark_down(i);
+                self.m.crashes += 1;
+                let SimReplica { sched, engine, clock } =
+                    &mut self.reps[i];
+                let now = clock.now().max(at);
+                let intact = sched.crash_extract(engine, now);
+                for req in intact {
+                    self.reroute(req);
+                }
+            }
+            ChaosEvent::SlowStart(i, factor) => {
+                if !self.crashed[i] {
+                    self.reps[i].engine.set_slow(Some(factor));
+                }
+            }
+            ChaosEvent::SlowEnd(i) => {
+                self.reps[i].engine.set_slow(None);
+            }
+            ChaosEvent::PartitionStart(i) => {
+                if !self.crashed[i] && !self.partitioned[i] {
+                    self.partitioned[i] = true;
+                    self.health.mark_down(i);
+                    self.m.partitions += 1;
+                }
+            }
+            ChaosEvent::PartitionEnd(i) => {
+                if self.partitioned[i] {
+                    self.partitioned[i] = false;
+                    // The replica was frozen for the whole outage: its
+                    // clock jumps to the heal time, then it drains.
+                    self.reps[i].clock.sleep_until(at);
+                    self.health.mark_recovering(i);
+                    self.m.recovered += 1;
+                }
+            }
+        }
+    }
+
+    /// One straggler-detector pass over the per-replica decode p95s
+    /// (worst class wins — the same signal
+    /// `ReplicaSet::observe_health` reads off live snapshots). Newly
+    /// suspect replicas trigger hedging.
+    fn observe(&mut self) {
+        let p95: Vec<f64> = self
+            .reps
+            .iter()
+            .map(|r| {
+                (0..PriorityClass::COUNT)
+                    .map(|rank| {
+                        r.sched
+                            .telemetry
+                            .decode_latency_class_p(rank, 95.0)
+                    })
+                    .fold(0.0, f64::max)
+            })
+            .collect();
+        let newly = self.health.observe(&p95);
+        self.m.suspected += newly.len() as u64;
+        if self.hedging {
+            for i in newly {
+                self.hedge_off(i);
+            }
+        }
+    }
+
+    /// Duplicate-submit every interactive prompt-intact request on the
+    /// newly suspect replica `i` to a healthy peer: first token wins,
+    /// the loser is cancelled when [`Self::resolve_hedges`] sees a
+    /// winner.
+    fn hedge_off(&mut self, i: usize) {
+        for id in self.reps[i].sched.prompt_intact_ids() {
+            if id >= HEDGE_BASE
+                || self.hedges.contains_key(&id)
+                || self.hedged_ever.contains(&id)
+            {
+                continue;
+            }
+            let Some(&idx) = self.by_index.get(&id) else { continue };
+            if self.requests[idx].class != PriorityClass::Interactive {
+                continue;
+            }
+            let prompt_len = self.requests[idx].prompt_len as usize;
+            let picked =
+                self.pick_alive(PriorityClass::Interactive, prompt_len);
+            let Some(j) = picked else { continue };
+            if j == i {
+                continue; // no healthy peer — hedging is pointless
+            }
+            let mut dup = self.requests[idx].clone();
+            dup.id = HEDGE_BASE + id;
+            // The duplicate "arrives" when the hedge fires; its TTFT
+            // measures the recovery, not the original's queueing.
+            dup.arrived_at = self.front;
+            self.hedged_ever.insert(id);
+            self.hedges.insert(id, Hedge { orig_rep: i, dup_rep: j });
+            let SimReplica { sched, clock, .. } = &mut self.reps[j];
+            clock.sleep_until(dup.arrived_at);
+            sched.submit(dup);
+            self.m.hedged += 1;
+        }
+    }
+
+    /// After replica `stepped` advanced, settle any hedge it is a side
+    /// of: the first side past its first token (or already finished)
+    /// wins and the other is cancelled. Ids are visited in order so the
+    /// resolution is deterministic.
+    fn resolve_hedges(&mut self, stepped: usize) {
+        if self.hedges.is_empty() {
+            return;
+        }
+        let mut ids: Vec<RequestId> = self
+            .hedges
+            .iter()
+            .filter(|(_, h)| {
+                h.orig_rep == stepped || h.dup_rep == stepped
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        for id in ids {
+            let Some(&h) = self.hedges.get(&id) else { continue };
+            let dup_id = HEDGE_BASE + id;
+            // `Some(true)` = still before its first token; anything
+            // else means that side produced (streamed or finished).
+            let orig_waiting =
+                self.reps[h.orig_rep].sched.prompt_intact(id);
+            let dup_waiting =
+                self.reps[h.dup_rep].sched.prompt_intact(dup_id);
+            if orig_waiting != Some(true) {
+                self.suppress(h.dup_rep, dup_id);
+                self.hedges.remove(&id);
+            } else if dup_waiting != Some(true) {
+                self.suppress(h.orig_rep, id);
+                self.m.hedge_wins += 1;
+                self.hedges.remove(&id);
+            }
+        }
+    }
+
+    /// Cancel the losing side of a resolved hedge (idempotent: the
+    /// loser may already have finished, which costs duplicate work but
+    /// loses nothing).
+    fn suppress(&mut self, rep: usize, id: RequestId) {
+        let SimReplica { sched, engine, clock } = &mut self.reps[rep];
+        if sched.cancel(engine, id, clock.now()) {
+            self.m.duplicates_suppressed += 1;
+        }
+    }
+
+    /// Index-aligned loads with the health overlay the router consumes;
+    /// a crashed replica reads as draining so even the degraded-mode
+    /// fallback never routes to it.
+    fn loads(&self) -> Vec<ReplicaLoad> {
+        let mut loads: Vec<ReplicaLoad> =
+            self.reps.iter().map(|r| r.load()).collect();
+        for (i, l) in loads.iter_mut().enumerate() {
+            l.health = self.health.state(i);
+            if self.crashed[i] {
+                l.draining = true;
+            }
+        }
+        loads
+    }
+
+    /// Route-pick a live replica for a request, honouring health; when
+    /// every survivor is unhealthy, retry health-blind (degraded mode,
+    /// mirroring `ReplicaSet::submit_routed`). `None` only when no
+    /// replica survives at all.
+    fn pick_alive(&mut self, class: PriorityClass, prompt_len: usize)
+                  -> Option<usize> {
+        let loads = self.loads();
+        let key = RouteKey::new(class, prompt_len);
+        let pick = self.route.pick(key, &loads, self.rr);
+        self.rr += 1;
+        if pick.is_some() {
+            return pick;
+        }
+        let mut blind = loads;
+        for (i, l) in blind.iter_mut().enumerate() {
+            if !self.crashed[i] {
+                l.health = Health::Healthy;
+            }
+        }
+        let pick = self.route.pick(key, &blind, self.rr);
+        self.rr += 1;
+        pick.or_else(|| (0..self.reps.len()).find(|&i| !self.crashed[i]))
+    }
+
+    /// Dispatch the next arrival (the chaos twin of [`route_one`]).
+    fn route_next(&mut self) {
+        let mut req = self.requests[self.next].clone();
+        self.next += 1;
+        match self.pick_alive(req.class, req.prompt_len as usize) {
+            Some(i) => {
+                req.arrived_at = req.arrived_at.max(0.0);
+                self.assigned.insert(req.id, i);
+                let SimReplica { sched, clock, .. } = &mut self.reps[i];
+                clock.sleep_until(req.arrived_at);
+                sched.submit(req);
+            }
+            None => self.m.lost += 1,
+        }
+    }
+
+    /// Re-home one prompt-intact request extracted from a crashed
+    /// replica. Requests covered by a live hedge duplicate ride the
+    /// duplicate instead of re-submitting (and a dead duplicate simply
+    /// dissolves its pair).
+    fn reroute(&mut self, mut req: Request) {
+        if req.id >= HEDGE_BASE {
+            self.hedges.remove(&(req.id - HEDGE_BASE));
+            return;
+        }
+        if self.hedges.remove(&req.id).is_some() {
+            self.m.hedge_wins += 1;
+            return;
+        }
+        req.arrived_at = req.arrived_at.max(0.0);
+        match self.pick_alive(req.class, req.prompt_len as usize) {
+            Some(j) => {
+                self.assigned.insert(req.id, j);
+                let SimReplica { sched, clock, .. } = &mut self.reps[j];
+                clock.sleep_until(req.arrived_at);
+                sched.submit(req);
+                self.m.rerouted += 1;
+            }
+            None => self.m.lost += 1,
+        }
+    }
+
+    /// When the only remaining work sits behind a partition, the heal
+    /// time the front must jump to (else the loop would end and strand
+    /// it).
+    fn stalled_heal_time(&self) -> Option<f64> {
+        let stalled = (0..self.reps.len()).any(|i| {
+            self.partitioned[i] && self.reps[i].sched.has_work()
+        });
+        if !stalled {
+            return None;
+        }
+        self.events[self.next_event..]
+            .iter()
+            .filter(|(_, e)| {
+                matches!(e, ChaosEvent::PartitionEnd(i)
+                         if self.partitioned[*i])
+            })
+            .map(|(t, _)| *t)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+}
+
+/// [`run_replica_sim`] under injected faults: the same virtual-time
+/// replica co-simulation, plus a fault schedule ([`FaultPlan`]), the
+/// [`HealthTracker`] driving routing exclusion of `Suspect`/`Down`
+/// replicas, crash re-routing (prompt-intact requests re-home, streamed
+/// ones end with a typed terminal record — never a hang), partition
+/// stall/heal, and first-token-wins hedging for interactive requests on
+/// suspect replicas. Fully deterministic for a fixed workload seed —
+/// the chaos regression base behind `dynabatch chaos`. With an empty
+/// plan and a quiet detector (a suspect factor high enough that clean
+/// p95 spread never trips it) the run routes exactly like
+/// [`run_replica_sim`], which the no-fault anchor test pins.
+pub fn run_chaos_sim(scenario: &SimScenario, n_replicas: usize,
+                     route: &RoutePolicy, plan: &FaultPlan)
+                     -> Result<ChaosMetrics> {
+    if n_replicas == 0 {
+        bail!("run_chaos_sim needs at least one replica");
+    }
+    route.validate(n_replicas)?;
+    plan.validate(n_replicas)?;
+    let reps: Vec<SimReplica> = (0..n_replicas)
+        .map(|_| {
+            let mut sched = Scheduler::new(
+                scenario.sched.clone(),
+                scenario.eta_tokens(),
+                scenario.swap_tokens,
+                scenario.workload.prompt.mean(),
+                scenario.workload.output.mean(),
+            );
+            sched.retain_full_traces();
+            sched.telemetry.set_prior_variances(
+                scenario.workload.prompt.variance(),
+                scenario.workload.output.variance(),
+            );
+            SimReplica {
+                sched,
+                engine: SimEngine::new(&scenario.model,
+                                       &scenario.hardware),
+                clock: VirtualClock::new(),
+            }
+        })
+        .collect();
+    let mut requests = scenario.workload.generate();
+    assign_classes(&mut requests, plan.mix);
+    let by_index: HashMap<RequestId, usize> = requests
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (r.id, i))
+        .collect();
+    let mut sim = ChaosSim {
+        reps,
+        requests,
+        next: 0,
+        route,
+        rr: 0,
+        health: HealthTracker::new(n_replicas, plan.health),
+        crashed: vec![false; n_replicas],
+        partitioned: vec![false; n_replicas],
+        events: plan.events(),
+        next_event: 0,
+        front: 0.0,
+        next_observe: plan.observe_interval,
+        observe_interval: plan.observe_interval,
+        hedging: plan.hedging,
+        by_index,
+        assigned: HashMap::new(),
+        hedges: HashMap::new(),
+        hedged_ever: HashSet::new(),
+        m: ChaosCounters::default(),
+    };
+    let max_steps =
+        (sim.requests.len() as u64 * 4096).max(1_000_000);
+    let mut steps = 0u64;
+    loop {
+        // The steppable replica (work, not crashed, not partitioned)
+        // with the earliest clock steps next.
+        let mut active: Option<usize> = None;
+        for (i, r) in sim.reps.iter().enumerate() {
+            if sim.crashed[i] || sim.partitioned[i]
+                || !r.sched.has_work()
+            {
+                continue;
+            }
+            let earlier = match active {
+                None => true,
+                Some(b) => r.clock.now() < sim.reps[b].clock.now(),
+            };
+            if earlier {
+                active = Some(i);
+            }
+        }
+        match active {
+            Some(i) => {
+                let now = sim.reps[i].clock.now();
+                sim.advance_front(now);
+                if sim.crashed[i] || sim.partitioned[i] {
+                    continue; // a fault just hit the stepping replica
+                }
+                if sim.next < sim.requests.len()
+                    && sim.requests[sim.next].arrived_at <= now
+                {
+                    // Dispatch everything the time front has reached,
+                    // then re-pick — routing may wake an earlier clock.
+                    while sim.next < sim.requests.len()
+                        && sim.requests[sim.next].arrived_at <= now
+                    {
+                        sim.route_next();
+                    }
+                    continue;
+                }
+                let next_arrival =
+                    sim.requests.get(sim.next).map(|r| r.arrived_at);
+                let SimReplica { sched, engine, clock } =
+                    &mut sim.reps[i];
+                match sched.step(engine, now)? {
+                    Some(elapsed) => clock.advance(elapsed),
+                    None => {
+                        // Work exists but nothing runnable: advance to
+                        // the next event.
+                        match next_arrival {
+                            Some(t) => {
+                                clock.sleep_until(t.max(now + 1e-3));
+                            }
+                            None => clock.advance(1e-3),
+                        }
+                    }
+                }
+                sim.resolve_hedges(i);
+                steps += 1;
+                if steps >= max_steps {
+                    break;
+                }
+            }
+            None => {
+                if sim.next < sim.requests.len() {
+                    // Every steppable replica idle: the front jumps to
+                    // the arrival (pending faults fire in the gap).
+                    let t = sim.requests[sim.next].arrived_at;
+                    sim.advance_front(t);
+                    sim.route_next();
+                    continue;
+                }
+                // Arrivals done: only partitioned backlogs can remain —
+                // jump the front to the earliest heal and drain them.
+                match sim.stalled_heal_time() {
+                    Some(t) => sim.advance_front(t),
+                    None => break,
+                }
+            }
+        }
+    }
+
+    // The zero-loss ledger: every accepted original id must show a
+    // terminal record somewhere (a winning hedge duplicate's terminal
+    // counts for its original).
+    let mut terminal: HashSet<RequestId> = HashSet::new();
+    for r in &sim.reps {
+        for req in r.sched.finished() {
+            let id = if req.id >= HEDGE_BASE {
+                req.id - HEDGE_BASE
+            } else {
+                req.id
+            };
+            terminal.insert(id);
+        }
+    }
+    let unaccounted = sim
+        .assigned
+        .keys()
+        .filter(|id| !terminal.contains(id))
+        .count() as u64;
+    let lost = sim.m.lost + unaccounted;
+
+    // Pre/during/post fault-phase latency percentiles, bucketed by
+    // arrival time against the plan's activity envelope.
+    let (env_start, env_end) = plan.envelope();
+    let mut ttft_by_phase: [Vec<f64>; 3] =
+        std::array::from_fn(|_| Vec::new());
+    let mut e2e_by_phase: [Vec<f64>; 3] =
+        std::array::from_fn(|_| Vec::new());
+    for r in &sim.reps {
+        for req in r.sched.finished() {
+            let bucket = if req.arrived_at < env_start {
+                0
+            } else if req.arrived_at < env_end {
+                1
+            } else {
+                2
+            };
+            if let Some(t) = req.ttft() {
+                ttft_by_phase[bucket].push(t);
+            }
+            if let Some(e) = req.e2e_latency() {
+                e2e_by_phase[bucket].push(e);
+            }
+        }
+    }
+    let mut phase_ttft_p95 = [0.0f64; 3];
+    let mut phase_e2e_p95 = [0.0f64; 3];
+    for ((t, e), (tv, ev)) in phase_ttft_p95
+        .iter_mut()
+        .zip(phase_e2e_p95.iter_mut())
+        .zip(ttft_by_phase.iter_mut().zip(e2e_by_phase.iter_mut()))
+    {
+        *t = percentile_of(tv, 95.0);
+        *e = percentile_of(ev, 95.0);
+    }
+
+    let sims: Vec<&SimReplica> = sim.reps.iter().collect();
+    let set = fold_replica_set(&sims, scenario, route.label());
+    Ok(ChaosMetrics {
+        faults_injected: plan.faults.len(),
+        crashes: sim.m.crashes,
+        partitions: sim.m.partitions,
+        suspected: sim.m.suspected,
+        recovered: sim.m.recovered,
+        lost,
+        failed: set.aggregate.failed,
+        rerouted: sim.m.rerouted,
+        hedged: sim.m.hedged,
+        hedge_wins: sim.m.hedge_wins,
+        duplicates_suppressed: sim.m.duplicates_suppressed,
+        phase_ttft_p95,
+        phase_e2e_p95,
+        set,
+    })
 }
 
 /// A fleet co-simulation scenario: the base scenario plus the fleet
@@ -1420,6 +2158,179 @@ mod tests {
         assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
                    "same seed → bit-identical replica-set metrics");
         assert_eq!(a.aggregate.n_requests, 60);
+    }
+
+    /// With an empty fault plan the chaos loop must be behaviourally
+    /// inert: same routing, same numbers, bit-identical to
+    /// [`run_replica_sim`] — the guard that keeps every pre-chaos
+    /// fixed-seed anchor honest. The suspect factor is set impossibly
+    /// high so the detector observes without ever firing.
+    #[test]
+    fn chaos_sim_without_faults_matches_replica_sim() {
+        let s = scenario(PolicyKind::Combined, 60,
+                         Arrival::Poisson { rate: 20.0 });
+        let plain =
+            run_replica_sim(&s, 2, &RoutePolicy::LeastLoaded).unwrap();
+        let plan = FaultPlan {
+            health: HealthPolicy {
+                suspect_factor: 1e9,
+                ..HealthPolicy::default()
+            },
+            ..FaultPlan::default()
+        };
+        let chaos =
+            run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+                .unwrap();
+        assert_eq!(chaos.set.to_json().to_string(),
+                   plain.to_json().to_string(),
+                   "an empty fault plan must be behaviourally inert");
+        assert_eq!(chaos.lost, 0);
+        assert_eq!(chaos.failed, 0);
+        assert_eq!((chaos.rerouted, chaos.hedged), (0, 0));
+        assert_eq!(chaos.faults_injected, 0);
+    }
+
+    /// The crash acceptance regression: a mid-run replica crash at
+    /// steady load loses nothing — every accepted request is re-routed
+    /// (prompt intact) or ends in a typed terminal error — and the
+    /// interactive TTFT p95 stays within a pinned envelope of the
+    /// no-fault run while the survivor absorbs the traffic. Bit-
+    /// identical per seed.
+    #[test]
+    fn chaos_crash_loses_nothing_and_stays_in_envelope() {
+        let s = scenario(PolicyKind::Combined, 100,
+                         Arrival::Poisson { rate: 10.0 });
+        let mix = [0.5, 0.3, 0.2];
+        let quiet = FaultPlan { mix, ..FaultPlan::default() };
+        let base =
+            run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &quiet)
+                .unwrap();
+        let plan = FaultPlan {
+            faults: vec![Fault::Crash { replica: 0, at: 2.0 }],
+            mix,
+            ..FaultPlan::default()
+        };
+        let a = run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+            .unwrap();
+        let b = run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+            .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
+                   "same seed → bit-identical chaos metrics");
+        assert_eq!(a.crashes, 1);
+        assert_eq!(a.lost, 0, "zero accepted requests lost");
+        // Exactly one terminal record per request: completions on the
+        // survivor plus typed failures for mid-stream victims.
+        assert_eq!(a.set.aggregate.n_requests, 100);
+        assert!(a.rerouted + a.failed >= 1,
+                "the crash must have hit in-flight work (rerouted {} \
+                 failed {})", a.rerouted, a.failed);
+        let rank = PriorityClass::Interactive.rank();
+        let base_p95 = base.set.aggregate.per_class[rank].ttft_p95;
+        let got_p95 = a.set.aggregate.per_class[rank].ttft_p95;
+        assert!(got_p95 <= base_p95 * 4.0 + 1.0,
+                "interactive TTFT p95 out of envelope: {got_p95} vs \
+                 no-fault {base_p95}");
+    }
+
+    /// The straggler acceptance regression: a 4× slow replica is
+    /// detected (p95 over the fleet median for the dwell window),
+    /// excluded from routing, and the healthy replica absorbs the
+    /// traffic with interactive TTFT p95 inside the envelope. Bit-
+    /// identical per seed.
+    #[test]
+    fn chaos_straggler_detected_excluded_and_in_envelope() {
+        let s = scenario(PolicyKind::Combined, 100,
+                         Arrival::Poisson { rate: 10.0 });
+        let mix = [0.5, 0.3, 0.2];
+        let quiet = FaultPlan { mix, ..FaultPlan::default() };
+        let base =
+            run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &quiet)
+                .unwrap();
+        let plan = FaultPlan {
+            faults: vec![Fault::Slow {
+                replica: 0,
+                at: 1.0,
+                factor: 4.0,
+                duration: 1e6,
+            }],
+            mix,
+            ..FaultPlan::default()
+        };
+        let a = run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+            .unwrap();
+        let b = run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+            .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
+                   "same seed → bit-identical chaos metrics");
+        assert!(a.suspected >= 1, "4x straggler must be detected");
+        assert_eq!(a.lost, 0);
+        assert_eq!(a.failed, 0, "a slow replica kills nothing");
+        assert!(a.set.aggregate.n_requests >= 100,
+                "every original request has a terminal record");
+        let rank = PriorityClass::Interactive.rank();
+        let base_p95 = base.set.aggregate.per_class[rank].ttft_p95;
+        let got_p95 = a.set.aggregate.per_class[rank].ttft_p95;
+        assert!(got_p95 <= base_p95 * 6.0 + 1.0,
+                "interactive TTFT p95 out of envelope: {got_p95} vs \
+                 no-fault {base_p95}");
+    }
+
+    /// A partition is a stall, not a death: the replica freezes for the
+    /// outage, takes no routes, then heals, drains its backlog, and
+    /// every request ends in exactly one terminal record.
+    #[test]
+    fn chaos_partition_stalls_heals_and_drains_zero_loss() {
+        let s = scenario(PolicyKind::Combined, 80,
+                         Arrival::Poisson { rate: 10.0 });
+        let plan = FaultPlan {
+            faults: vec![Fault::Partition {
+                replicas: vec![0],
+                at: 1.0,
+                duration: 2.0,
+            }],
+            hedging: false,
+            ..FaultPlan::default()
+        };
+        let m = run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+            .unwrap();
+        assert_eq!((m.partitions, m.recovered), (1, 1));
+        assert_eq!(m.lost, 0);
+        assert_eq!(m.failed, 0);
+        assert_eq!(m.set.aggregate.n_requests, 80,
+                   "exactly one terminal record per request");
+        assert_eq!(m.set.aggregate.output_tokens, 80 * 128,
+                   "the stalled backlog drains to full completion");
+    }
+
+    /// Hedging rescues interactive requests stranded behind a
+    /// straggler: round-robin keeps feeding the slow replica until the
+    /// detector fires, then its queued interactive prompts duplicate
+    /// onto the healthy peer, first token wins, and losers are
+    /// cancelled — nothing is lost and no hedge dangles.
+    #[test]
+    fn chaos_hedging_rescues_interactive_from_straggler() {
+        let s = scenario(PolicyKind::Combined, 120,
+                         Arrival::Poisson { rate: 16.0 });
+        let plan = FaultPlan {
+            faults: vec![Fault::Slow {
+                replica: 0,
+                at: 1.0,
+                factor: 8.0,
+                duration: 1e6,
+            }],
+            mix: [1.0, 0.0, 0.0],
+            ..FaultPlan::default()
+        };
+        let m = run_chaos_sim(&s, 2, &RoutePolicy::RoundRobin, &plan)
+            .unwrap();
+        assert!(m.suspected >= 1, "8x straggler must be detected");
+        assert!(m.hedged >= 1,
+                "queued interactive prompts must hedge off the \
+                 suspect replica");
+        assert!(m.duplicates_suppressed <= m.hedged);
+        assert_eq!(m.lost, 0);
+        assert!(m.set.aggregate.n_requests >= 120,
+                "every original request has a terminal record");
     }
 
     /// A manual fleet of one neutral baseline replica is the replica

@@ -102,6 +102,11 @@ pub struct SimEngine {
     /// prefill_speed)`; `None` keeps the exact unscaled timing
     /// expression (bit-identical to a profile-free engine).
     profile: Option<(f64, f64)>,
+    /// Chaos-layer straggler fault: when `Some(f)`, every step's elapsed
+    /// time is multiplied by `f` after the normal cost expression. `None`
+    /// (the default) leaves the arithmetic untouched, so fault-free runs
+    /// stay bit-identical.
+    slow: Option<f64>,
     pub stat_steps: u64,
     pub stat_busy_time: f64,
     /// Time the step pipeline spent on prefill+decode compute only — the
@@ -116,6 +121,7 @@ impl SimEngine {
             cost: CostModel::new(model, hw),
             max_seq: model.max_model_len,
             profile: None,
+            slow: None,
             stat_steps: 0,
             stat_busy_time: 0.0,
             stat_compute_time: 0.0,
@@ -141,6 +147,18 @@ impl SimEngine {
 
     pub fn cost_model(&self) -> &CostModel {
         &self.cost
+    }
+
+    /// Install (or clear) a straggler fault: `Some(f)` multiplies every
+    /// subsequent step's elapsed time by `f`; `None` restores the exact
+    /// unfaulted timing. Used by the chaos layer's `Slow` fault.
+    pub fn set_slow(&mut self, factor: Option<f64>) {
+        self.slow = factor.filter(|f| *f != 1.0);
+    }
+
+    /// Current straggler factor, if a `Slow` fault is active.
+    pub fn slow_factor(&self) -> Option<f64> {
+        self.slow
     }
 }
 
@@ -195,6 +213,9 @@ impl Engine for SimEngine {
         elapsed += self.cost.swap_time(plan.swap_out_tokens)
             + self.cost.swap_time(plan.swap_in_tokens)
             + self.cost.preempt_overhead * plan.preempt_events as f64;
+        if let Some(factor) = self.slow {
+            elapsed *= factor;
+        }
 
         for d in &plan.decodes {
             out.tokens.push((d.id, 0i32));
@@ -388,6 +409,26 @@ mod tests {
         let t_pre_fast = p.step_owned(&pre).unwrap().elapsed;
         assert!(t_pre_fast < t_pre_base,
                 "{t_pre_fast} !< {t_pre_base}");
+    }
+
+    #[test]
+    fn slow_fault_scales_elapsed_and_clears_bit_identically() {
+        let plan = decode_plan(32, 100);
+        let mut base = engine();
+        let tb = base.step_owned(&plan).unwrap().elapsed;
+        let mut e = engine();
+        assert_eq!(e.slow_factor(), None);
+        e.set_slow(Some(4.0));
+        assert_eq!(e.slow_factor(), Some(4.0));
+        let ts = e.step_owned(&plan).unwrap().elapsed;
+        assert!((ts - 4.0 * tb).abs() / tb < 1e-12, "ts={ts} tb={tb}");
+        // Clearing the fault restores the exact unfaulted arithmetic.
+        e.set_slow(None);
+        assert_eq!(e.step_owned(&plan).unwrap().elapsed, tb);
+        // A neutral factor is dropped entirely.
+        e.set_slow(Some(1.0));
+        assert_eq!(e.slow_factor(), None);
+        assert_eq!(e.step_owned(&plan).unwrap().elapsed, tb);
     }
 
     #[test]

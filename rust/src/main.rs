@@ -7,9 +7,9 @@ use dynabatch::config::{
     SchedulerConfig,
 };
 use dynabatch::driver::{
-    capacity_search, fleet_frontier, prefix_capacity, run_replica_sim,
-    run_sim, run_sim_switched, sla_sweep, switch_sweep, FleetScenario,
-    PolicySwitch, SimScenario,
+    capacity_search, fleet_frontier, prefix_capacity, run_chaos_sim,
+    run_replica_sim, run_sim, run_sim_switched, sla_sweep, switch_sweep,
+    Fault, FaultPlan, FleetScenario, PolicySwitch, SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
@@ -107,6 +107,39 @@ fn cli() -> Command {
                 .opt("d-sla", "0", "decode SLA in ms (0 = none)")
                 .opt("seed", "42", "workload seed")
                 .flag("json", "emit every run's metrics as JSON"),
+        )
+        .subcommand(
+            Command::new("chaos",
+                         "fault-injection regression on the N-replica \
+                          co-simulation: crash / straggler / partition \
+                          faults with health-driven routing exclusion, \
+                          crash re-routing, and interactive hedging \
+                          (fixed seeds → bit-identical tables)")
+                .opt("model", "pangu-7b", "model preset")
+                .opt("policy", "dynamic", "batching policy per replica")
+                .opt("route", "least-loaded",
+                     "round-robin | least-loaded | class-pinned:R | \
+                      capability[:LONG]")
+                .opt("replicas", "2", "replica count")
+                .opt("faults", "crash,0,2.0",
+                     "';'-separated faults: crash,REP,AT | \
+                      slow,REP,AT,FACTOR,DUR | part,R|R,AT,DUR \
+                      (seconds)")
+                .opt("requests", "200", "request count")
+                .opt("rate", "10", "Poisson arrival rate qps, or 'inf'")
+                .opt("mix", "0.5,0.25,0.25",
+                     "traffic fractions interactive,standard,batch")
+                .opt("suspect-factor", "3",
+                     "straggler suspicion multiple of the fleet median \
+                      decode p95")
+                .opt("prompt-mean", "128", "mean prompt tokens")
+                .opt("output-mean", "128", "mean output tokens")
+                .opt("d-sla", "0", "decode SLA in ms (0 = none)")
+                .opt("seed", "42", "workload seed")
+                .flag("no-hedge",
+                      "disable interactive hedging off suspect replicas")
+                .flag("json",
+                      "emit baseline + chaos metrics as JSON"),
         )
         .subcommand(
             Command::new("fleet",
@@ -278,6 +311,7 @@ fn main() {
         "run" => cmd_run(&sub),
         "switch" => cmd_switch(&sub),
         "route" => cmd_route(&sub),
+        "chaos" => cmd_chaos(&sub),
         "fleet" => cmd_fleet(&sub),
         "sla" => cmd_sla(&sub),
         "capacity" => cmd_capacity(&sub),
@@ -562,6 +596,126 @@ fn cmd_route(m: &M) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// Parse the `--faults` spec: ';'-separated entries — `crash,REP,AT`,
+/// `slow,REP,AT,FACTOR,DUR`, `part,R|R|…,AT,DUR` (times and durations
+/// in seconds; a slow DUR of `inf` never heals). Empty = no faults.
+fn parse_faults(s: &str) -> Result<Vec<Fault>> {
+    let mut faults = Vec::new();
+    for entry in s.split(';').filter(|e| !e.trim().is_empty()) {
+        let parts: Vec<&str> =
+            entry.trim().split(',').map(str::trim).collect();
+        let fault = match parts.as_slice() {
+            ["crash", rep, at] => Fault::Crash {
+                replica: rep.parse()?,
+                at: at.parse()?,
+            },
+            ["slow", rep, at, factor, dur] => Fault::Slow {
+                replica: rep.parse()?,
+                at: at.parse()?,
+                factor: factor.parse()?,
+                duration: dur.parse()?,
+            },
+            ["part" | "partition", reps, at, dur] => Fault::Partition {
+                replicas: reps
+                    .split('|')
+                    .map(|r| Ok(r.trim().parse::<usize>()?))
+                    .collect::<Result<Vec<usize>>>()?,
+                at: at.parse()?,
+                duration: dur.parse()?,
+            },
+            _ => {
+                return Err(anyhow!(
+                    "bad fault '{}' (want crash,REP,AT | \
+                     slow,REP,AT,FACTOR,DUR | part,R|R,AT,DUR)",
+                    entry.trim()
+                ));
+            }
+        };
+        faults.push(fault);
+    }
+    Ok(faults)
+}
+
+/// `dynabatch chaos`: fault-injection regression — the workload runs
+/// through N co-simulated replicas twice with the same seed, once
+/// fault-free and once under the `--faults` schedule with health-driven
+/// routing exclusion, crash re-routing, and interactive hedging. The
+/// table pins the chaos counters (lost must stay 0) and the faulted
+/// percentiles against the fault-free envelope. Fixed seeds →
+/// bit-identical tables.
+fn cmd_chaos(m: &M) -> Result<()> {
+    let mut s = scenario_from(m)?;
+    s.workload.name = "chaos".into();
+    s.workload.n_requests = m.get_usize("requests")?;
+    s.workload.seed = m.get_u64("seed")?;
+    s.workload.arrival = parse_arrival(m.get("rate"))?;
+    let route = RoutePolicy::parse(m.get("route"))?;
+    let n = m.get_usize("replicas")?;
+    let mix_list: Vec<f64> = parse_list(m.get("mix"))?;
+    let mix: [f64; 3] = mix_list
+        .as_slice()
+        .try_into()
+        .map_err(|_| anyhow!("--mix needs exactly 3 fractions"))?;
+    let mut plan = FaultPlan {
+        faults: parse_faults(m.get("faults"))?,
+        hedging: !m.get_flag("no-hedge"),
+        mix,
+        ..FaultPlan::default()
+    };
+    plan.health.suspect_factor = m.get_f64("suspect-factor")?;
+    let quiet = FaultPlan { faults: Vec::new(), ..plan.clone() };
+    let base = run_chaos_sim(&s, n, &route, &quiet)?;
+    let chaos = run_chaos_sim(&s, n, &route, &plan)?;
+    if m.get_flag("json") {
+        let j = dynabatch::util::json::Json::obj(vec![
+            ("baseline", base.to_json()),
+            ("chaos", chaos.to_json()),
+        ]);
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "chaos [{}] policy={} replicas={} requests={} seed={}",
+        route.label(),
+        s.sched.policy.label(),
+        n,
+        s.workload.n_requests,
+        s.workload.seed
+    );
+    println!(
+        "faults={} crashes={} partitions={} suspected={} recovered={}",
+        chaos.faults_injected, chaos.crashes, chaos.partitions,
+        chaos.suspected, chaos.recovered
+    );
+    println!(
+        "lost={} failed={} rerouted={} hedged={} hedge_wins={} \
+         duplicates_suppressed={}",
+        chaos.lost, chaos.failed, chaos.rerouted, chaos.hedged,
+        chaos.hedge_wins, chaos.duplicates_suppressed
+    );
+    for (label, row) in [("no-fault", &base), ("chaos", &chaos)] {
+        println!(
+            "{label:>8}: ttft p95={:>7.1}ms  tbt p95={:>6.1}ms  \
+             makespan={:>6.1}s  finished={}",
+            row.set.aggregate.ttft_p95 * 1e3,
+            row.set.aggregate.tbt_p95 * 1e3,
+            row.set.aggregate.makespan,
+            row.set.aggregate.n_requests,
+        );
+    }
+    println!(
+        "phase ttft p95 pre/during/post = {:.1}/{:.1}/{:.1} ms  \
+         e2e p95 = {:.2}/{:.2}/{:.2} s",
+        chaos.phase_ttft_p95[0] * 1e3,
+        chaos.phase_ttft_p95[1] * 1e3,
+        chaos.phase_ttft_p95[2] * 1e3,
+        chaos.phase_e2e_p95[0],
+        chaos.phase_e2e_p95[1],
+        chaos.phase_e2e_p95[2],
+    );
     Ok(())
 }
 

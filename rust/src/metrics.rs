@@ -92,6 +92,9 @@ pub struct RunMetrics {
     pub rejected: u64,
     pub shed: u64,
     pub cancelled: u64,
+    /// Requests that died mid-stream with a replica (typed terminal
+    /// error, never a hang) — nonzero only under fault injection.
+    pub failed: u64,
     /// Controller hot-swaps during the run (`Scheduler::reconfigure`).
     pub reconfigs: u64,
     /// Engine-compute fraction of busy time (the "GPU utilization" proxy).
@@ -155,6 +158,7 @@ impl RunMetrics {
             rejected: stats.rejected,
             shed: stats.shed,
             cancelled: stats.cancelled,
+            failed: stats.failed,
             reconfigs: stats.reconfigs,
             utilization,
             prefix_hit_rate: None,
@@ -255,6 +259,7 @@ impl RunMetrics {
             ("rejected", Json::from(self.rejected)),
             ("shed", Json::from(self.shed)),
             ("cancelled", Json::from(self.cancelled)),
+            ("failed", Json::from(self.failed)),
             ("reconfigs", Json::from(self.reconfigs)),
             (
                 "utilization",
@@ -318,6 +323,92 @@ impl ReplicaSetMetrics {
             ),
             ("aggregate", self.aggregate.to_json()),
             ("max_token_share", Json::Num(self.max_token_share())),
+        ])
+    }
+}
+
+/// One chaos run: the replica-set metrics plus the fault story — what
+/// was injected, what the detector caught, and where every accepted
+/// request ended up. `lost` is the headline number: accepted requests
+/// that reached *no* terminal event (re-route, completion, typed error,
+/// or cancel all count as terminals), so the zero-loss guarantee
+/// regresses as `lost == 0`. Produced by `driver::run_chaos_sim`.
+#[derive(Debug, Clone)]
+pub struct ChaosMetrics {
+    /// Faults in the injected plan (before per-replica expansion).
+    pub faults_injected: usize,
+    pub crashes: u64,
+    pub partitions: u64,
+    /// Straggler-detector `Suspect` transitions over the run.
+    pub suspected: u64,
+    /// Partitioned replicas that healed back to `Recovering`.
+    pub recovered: u64,
+    /// Accepted requests with no terminal event anywhere (must be 0
+    /// while any replica survives).
+    pub lost: u64,
+    /// Mid-stream deaths surfaced as typed terminal errors.
+    pub failed: u64,
+    /// Prompt-intact requests re-submitted to a healthy replica after
+    /// their replica crashed.
+    pub rerouted: u64,
+    /// Interactive requests duplicate-submitted off a suspect replica.
+    pub hedged: u64,
+    /// Hedges won by the duplicate (the suspect replica lost the race
+    /// or died first).
+    pub hedge_wins: u64,
+    /// Losing duplicates cancelled via the O(1) cancel path.
+    pub duplicates_suppressed: u64,
+    /// TTFT p95 bucketed by arrival into pre-fault / fault-window /
+    /// post-fault phases (0.0 with no samples; a crash never ends, so
+    /// its runs have an empty post phase).
+    pub phase_ttft_p95: [f64; 3],
+    /// End-to-end latency p95 over the same three phases.
+    pub phase_e2e_p95: [f64; 3],
+    pub set: ReplicaSetMetrics,
+}
+
+impl ChaosMetrics {
+    pub fn to_json(&self) -> Json {
+        let phases = Json::obj(vec![
+            (
+                "pre",
+                Json::obj(vec![
+                    ("ttft_p95_s", Json::Num(self.phase_ttft_p95[0])),
+                    ("e2e_p95_s", Json::Num(self.phase_e2e_p95[0])),
+                ]),
+            ),
+            (
+                "during",
+                Json::obj(vec![
+                    ("ttft_p95_s", Json::Num(self.phase_ttft_p95[1])),
+                    ("e2e_p95_s", Json::Num(self.phase_e2e_p95[1])),
+                ]),
+            ),
+            (
+                "post",
+                Json::obj(vec![
+                    ("ttft_p95_s", Json::Num(self.phase_ttft_p95[2])),
+                    ("e2e_p95_s", Json::Num(self.phase_e2e_p95[2])),
+                ]),
+            ),
+        ]);
+        Json::obj(vec![
+            ("faults_injected", Json::from(self.faults_injected)),
+            ("crashes", Json::from(self.crashes)),
+            ("partitions", Json::from(self.partitions)),
+            ("suspected", Json::from(self.suspected)),
+            ("recovered", Json::from(self.recovered)),
+            ("lost", Json::from(self.lost)),
+            ("failed", Json::from(self.failed)),
+            ("rerouted", Json::from(self.rerouted)),
+            ("hedged", Json::from(self.hedged)),
+            ("hedge_wins", Json::from(self.hedge_wins)),
+            (
+                "duplicates_suppressed",
+                Json::from(self.duplicates_suppressed),
+            ),
+            ("phases", phases),
+            ("set", self.set.to_json()),
         ])
     }
 }

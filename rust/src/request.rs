@@ -78,6 +78,10 @@ pub enum FinishReason {
     DeadlineExceeded,
     /// Cancelled by the client; any KV blocks were freed mid-flight.
     Cancelled,
+    /// The replica serving this request died after streaming had begun;
+    /// the partial output cannot be transparently re-derived, so the
+    /// request fails with a typed error instead of hanging.
+    Failed,
 }
 
 /// Typed sampling parameters, carried end-to-end (service → wire →

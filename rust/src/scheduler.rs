@@ -85,6 +85,9 @@ pub struct SchedStats {
     pub rejected: u64,
     pub shed: u64,
     pub cancelled: u64,
+    /// Requests that died with the replica after streaming had begun
+    /// (chaos-layer crash teardown, [`Scheduler::crash_extract`]).
+    pub failed: u64,
     /// Σ decode batch sizes (per decode step) — mean batch = /decode_steps.
     pub decode_batch_sum: u64,
     pub b_t_last: u32,
@@ -108,6 +111,7 @@ impl SchedStats {
         self.rejected += o.rejected;
         self.shed += o.shed;
         self.cancelled += o.cancelled;
+        self.failed += o.failed;
         self.decode_batch_sum += o.decode_batch_sum;
         self.b_t_last += o.b_t_last;
         self.reconfigs += o.reconfigs;
@@ -1115,6 +1119,91 @@ impl Scheduler {
         true
     }
 
+    /// Tear down the whole in-flight population after an unplanned
+    /// replica crash: every live request leaves its queue, its KV blocks
+    /// are freed and its engine slot released. Requests that have not
+    /// yet streamed a token are returned reset to a fresh
+    /// [`Phase::Waiting`] state — the prompt is intact, so the caller
+    /// can re-route them to a healthy replica. Requests that had
+    /// already streamed terminate with [`FinishReason::Failed`] and
+    /// land in `finished`, so their submitters observe a typed terminal
+    /// error instead of a hang. Iteration order is by request id, so
+    /// the extraction is deterministic.
+    pub fn crash_extract<E: Engine + ?Sized>(&mut self, engine: &mut E,
+                                             now: f64) -> Vec<Request> {
+        let mut live: Vec<(RequestId, u32)> =
+            self.by_id.iter().map(|(&id, &s)| (id, s)).collect();
+        live.sort_unstable();
+        let mut intact = Vec::new();
+        for (id, slot) in live {
+            let phase = self.entry(slot).req.phase;
+            match phase {
+                Phase::Finished => continue,
+                Phase::Waiting => {}
+                Phase::Preempted | Phase::Prefill | Phase::Decode => {
+                    if matches!(phase, Phase::Prefill | Phase::Decode) {
+                        self.leave_running(slot);
+                    }
+                    // Recompute victims hold no blocks — free is
+                    // best-effort, exactly as in cancel.
+                    let _ = self.kv.free(id);
+                    engine.release(id);
+                }
+            }
+            let mut req = self.free_slot(slot);
+            if req.first_token_at.is_none() {
+                req.phase = Phase::Waiting;
+                req.prefilled = 0;
+                req.slot = None;
+                intact.push(req);
+            } else {
+                req.terminate(FinishReason::Failed, now);
+                self.stats.failed += 1;
+                self.finished.push(req);
+            }
+        }
+        // Every queue member was freed above; reset the queues wholesale.
+        for q in self.waiting.iter_mut() {
+            q.clear();
+        }
+        self.resume_queue.clear();
+        self.waiting_deadlines = 0;
+        intact
+    }
+
+    /// Whether `id` is in flight with its prompt intact (no first token
+    /// streamed yet): `Some(true)` = safe to duplicate or re-route,
+    /// `Some(false)` = already streaming, `None` = not in flight
+    /// (finished, cancelled, or never submitted). Read-only — the
+    /// hedging layer polls this to decide which side of a duplicate
+    /// pair produced first.
+    pub fn prompt_intact(&self, id: RequestId) -> Option<bool> {
+        let &slot = self.by_id.get(&id)?;
+        let r = &self.entry(slot).req;
+        if matches!(r.phase, Phase::Finished) {
+            return None;
+        }
+        Some(r.first_token_at.is_none())
+    }
+
+    /// Ids of every in-flight request whose prompt is intact (no first
+    /// token yet), sorted — the candidates a hedging layer may
+    /// duplicate onto a healthy replica when this one turns suspect.
+    pub fn prompt_intact_ids(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .by_id
+            .iter()
+            .filter(|&(_, &slot)| {
+                let r = &self.entry(slot).req;
+                !matches!(r.phase, Phase::Finished)
+                    && r.first_token_at.is_none()
+            })
+            .map(|(&id, _)| id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
     /// Recompute every incrementally-maintained quantity from a full
     /// scan — the exact per-step scans the old hot path performed — and
     /// panic on any divergence. See [`Self::enable_shadow_checks`].
@@ -1546,6 +1635,51 @@ mod tests {
         assert_eq!(r1.generated, 0);
         let r0 = s.finished().iter().find(|r| r.id == 0).unwrap();
         assert_eq!(r0.finish, Some(FinishReason::Completed));
+    }
+
+    #[test]
+    fn crash_extract_partitions_intact_from_streamed() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 1 }, 100_000);
+        // Req 0 streams tokens; reqs 1–2 wait (batch=1) with no output.
+        s.submit(Request::new(0, 64, 1000, 0.0));
+        s.submit(Request::new(1, 64, 16, 0.0)
+            .with_class(PriorityClass::Interactive)
+            .with_deadline(Some(100.0)));
+        s.submit(Request::new(2, 64, 16, 0.0));
+        for _ in 0..50 {
+            if let Some(elapsed) = s.step(&mut e, c.now()).unwrap() {
+                c.advance(elapsed);
+            }
+            if s.request(0).map(|r| r.generated > 2).unwrap_or(false) {
+                break;
+            }
+        }
+        assert!(s.request(0).unwrap().generated > 2, "req 0 streaming");
+        let intact = s.crash_extract(&mut e, c.now());
+        // Waiting requests come back intact, in id order, reset.
+        let ids: Vec<u64> = intact.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+        for r in &intact {
+            assert_eq!(r.phase, Phase::Waiting);
+            assert_eq!(r.prefilled, 0);
+            assert_eq!(r.generated, 0);
+            assert_eq!(r.finish, None);
+        }
+        assert_eq!(intact[0].deadline, Some(100.0),
+                   "metadata survives extraction");
+        // The streaming request fails with a typed terminal reason.
+        let failed = s.finished().iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(failed.finish, Some(FinishReason::Failed));
+        assert_eq!(s.stats.failed, 1);
+        // The scheduler is empty and internally consistent afterwards.
+        assert!(!s.has_work());
+        assert_eq!(s.waiting_len(), 0);
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.kv.used_tokens(), 0, "crash teardown frees all KV");
+        s.kv.check_invariants().unwrap();
+        assert!(s.crash_extract(&mut e, c.now()).is_empty(),
+                "second extraction is a no-op");
     }
 
     #[test]

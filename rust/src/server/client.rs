@@ -19,6 +19,50 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
+use std::time::Duration;
+
+/// Typed client-side failure, surfaced through `anyhow` so callers can
+/// downcast: `err.downcast_ref::<ClientError>()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientError {
+    /// No reply line arrived within the per-op timeout configured via
+    /// [`Client::set_op_timeout`].
+    TimedOut,
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::TimedOut => write!(f, "server reply timed out"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+/// Bounded exponential-backoff schedule used by the *idempotent* admin
+/// ops ([`Client::stats`], [`Client::fleet_stats`]) when a read times
+/// out (see [`Client::set_op_timeout`]). Non-idempotent ops never
+/// retry — a duplicate `generate` or `scale` is not harmless.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = never retry).
+    pub attempts: u32,
+    /// Sleep before the first retry; doubles on each further retry.
+    pub base: Duration,
+    /// Backoff cap.
+    pub max: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            attempts: 3,
+            base: Duration::from_millis(100),
+            max: Duration::from_secs(2),
+        }
+    }
+}
 
 pub struct Client {
     reader: BufReader<TcpStream>,
@@ -27,6 +71,12 @@ pub struct Client {
     /// stream's tokens arriving before a `submit`'s `accepted`); drained
     /// by [`Client::next_event`] before touching the socket.
     pending: VecDeque<ClientEvent>,
+    /// Backoff schedule for the idempotent admin ops.
+    retry: RetryPolicy,
+    /// Partial line salvaged when a timed-out read stopped mid-line;
+    /// the next read resumes appending to it instead of corrupting the
+    /// stream.
+    partial: String,
 }
 
 /// Final result of one generation call.
@@ -105,6 +155,11 @@ pub struct ServerStats {
     pub n_replicas: u64,
     /// Route policy label (empty from pre-replica servers).
     pub route_policy: String,
+    /// Health labels (`healthy` | `suspect` | `down` | `recovering`;
+    /// empty from pre-chaos servers). Top level: index-aligned with the
+    /// replicas; each per-replica entry holds its own single-element
+    /// view.
+    pub health: Vec<String>,
     /// Per-replica snapshots, index-aligned with the replicas.
     pub replicas: Vec<ServerStats>,
 }
@@ -242,6 +297,22 @@ fn parse_stats(ev: &Json) -> ServerStats {
         n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
         route_policy:
             ev.get("route_policy").as_str().unwrap_or("").into(),
+        health: {
+            let h = ev.get("health");
+            if let Some(s) = h.as_str() {
+                vec![s.to_string()]
+            } else {
+                h.as_arr()
+                    .map(|a| {
+                        a.iter()
+                            .map(|x| {
+                                x.as_str().unwrap_or("").to_string()
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            }
+        },
         replicas: ev
             .get("replicas")
             .as_arr()
@@ -304,7 +375,53 @@ impl Client {
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
             pending: VecDeque::new(),
+            retry: RetryPolicy::default(),
+            partial: String::new(),
         })
+    }
+
+    /// Bound every socket read: ops against a wedged or partitioned
+    /// server fail with [`ClientError::TimedOut`] instead of blocking
+    /// forever. `None` (the default) restores blocking reads. The
+    /// idempotent admin ops ([`Self::stats`], [`Self::fleet_stats`])
+    /// retry timed-out reads per [`Self::set_retry`]; everything else
+    /// surfaces the error to the caller.
+    pub fn set_op_timeout(&mut self, timeout: Option<Duration>)
+                          -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Swap the bounded exponential-backoff schedule used by the
+    /// idempotent admin ops after a [`ClientError::TimedOut`].
+    pub fn set_retry(&mut self, retry: RetryPolicy) {
+        self.retry = retry;
+    }
+
+    /// Run an idempotent op with bounded exponential backoff on
+    /// [`ClientError::TimedOut`]. A reply that was merely late (not
+    /// lost) can still arrive after the resend; for the idempotent ops
+    /// routed through here the earlier reply is equivalent, so
+    /// first-in wins and the duplicate is consumed by a later call of
+    /// the same kind.
+    fn retrying<T>(
+        &mut self,
+        mut call: impl FnMut(&mut Self) -> Result<T>,
+    ) -> Result<T> {
+        let RetryPolicy { attempts, base, max } = self.retry;
+        let mut backoff = base;
+        for _ in 1..attempts.max(1) {
+            match call(self) {
+                Err(e) if e.downcast_ref::<ClientError>()
+                    == Some(&ClientError::TimedOut) =>
+                {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(max);
+                }
+                other => return other,
+            }
+        }
+        call(self)
     }
 
     fn send(&mut self, j: &Json) -> Result<()> {
@@ -314,15 +431,30 @@ impl Client {
     }
 
     fn recv(&mut self) -> Result<Json> {
-        let mut line = String::new();
+        use std::io::ErrorKind;
+        // Resume any partial line a previous timed-out read left behind.
+        let mut line = std::mem::take(&mut self.partial);
         loop {
-            line.clear();
-            let n = self.reader.read_line(&mut line)?;
-            if n == 0 {
-                bail!("server closed connection");
-            }
-            if !line.trim().is_empty() {
-                break;
+            match self.reader.read_line(&mut line) {
+                Ok(0) => bail!("server closed connection"),
+                Ok(_) if line.ends_with('\n') => {
+                    if line.trim().is_empty() {
+                        line.clear();
+                        continue;
+                    }
+                    break;
+                }
+                // read_line only returns early without a newline at
+                // EOF; loop to observe the close on the next read.
+                Ok(_) => {}
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock
+                                             | ErrorKind::TimedOut) => {
+                    // Salvage whatever arrived so a later read resumes
+                    // mid-line instead of corrupting the stream.
+                    self.partial = line;
+                    return Err(ClientError::TimedOut.into());
+                }
+                Err(e) => return Err(e.into()),
             }
         }
         Json::parse(line.trim()).map_err(|e| anyhow!("bad server json: {e}"))
@@ -527,8 +659,14 @@ impl Client {
 
     /// Fetch the server's live stats (v2 `stats` op). Events belonging to
     /// in-flight streams that arrive first are buffered for
-    /// [`Self::next_event`], not dropped.
+    /// [`Self::next_event`], not dropped. Idempotent: with a per-op
+    /// timeout set ([`Self::set_op_timeout`]) a timed-out poll is
+    /// retried with bounded exponential backoff ([`Self::set_retry`]).
     pub fn stats(&mut self) -> Result<ServerStats> {
+        self.retrying(|c| c.stats_once())
+    }
+
+    fn stats_once(&mut self) -> Result<ServerStats> {
         self.send(&Json::obj(vec![("op", Json::from("stats"))]))?;
         loop {
             match self.read_event()? {
@@ -666,8 +804,13 @@ impl Client {
     }
 
     /// Fetch the fleet layer's operator view (v2 `fleet_stats` op;
-    /// errors against servers started without a fleet).
+    /// errors against servers started without a fleet). Idempotent:
+    /// timed-out polls retry like [`Self::stats`].
     pub fn fleet_stats(&mut self) -> Result<FleetStats> {
+        self.retrying(|c| c.fleet_stats_once())
+    }
+
+    fn fleet_stats_once(&mut self) -> Result<FleetStats> {
         self.send(&Json::obj(vec![("op", Json::from("fleet_stats"))]))?;
         loop {
             match self.read_event()? {

@@ -399,12 +399,22 @@ fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
 /// The `stats` reply: aggregate fields at the top level (wire-compatible
 /// with the single-replica v2 shape) plus per-replica attribution.
 fn stats_to_json(set: &ReplicaSet) -> Json {
+    // Each stats poll doubles as a straggler-detection pass, so the
+    // health view stays live without a dedicated background thread.
+    set.observe_health();
+    let health = set.health_states();
     let snaps = set.snapshots();
     let agg = ReplicaSet::aggregate(&snaps);
     let mut fields = vec![("type", Json::from("stats"))];
     fields.extend(snapshot_fields(&agg));
     fields.push(("n_replicas", Json::from(set.len())));
     fields.push(("route_policy", Json::from(set.route_policy().label())));
+    fields.push((
+        "health",
+        Json::Arr(
+            health.iter().map(|h| Json::from(h.label())).collect(),
+        ),
+    ));
     fields.push((
         "replicas",
         Json::Arr(
@@ -414,6 +424,10 @@ fn stats_to_json(set: &ReplicaSet) -> Json {
                 .map(|(i, s)| {
                     let mut f = vec![("replica", Json::from(i))];
                     f.extend(snapshot_fields(s));
+                    f.push((
+                        "health",
+                        Json::from(health[i].label()),
+                    ));
                     Json::obj(f)
                 })
                 .collect(),

@@ -52,9 +52,13 @@ pub struct FleetObservation {
 }
 
 impl FleetObservation {
-    /// Replicas currently serving (not draining/parked).
+    /// Replicas currently serving new traffic: not draining/parked and
+    /// health-routable. A `Down` replica is capacity the fleet has
+    /// *lost*, not capacity it holds — excluding it here is what makes
+    /// the autoscaler spawn to cover an unplanned failure exactly like
+    /// a load step.
     pub fn live(&self) -> usize {
-        self.loads.iter().filter(|l| !l.draining).count()
+        self.loads.iter().filter(|l| l.routable()).count()
     }
 
     /// Mean backlog per live replica — the primary scale signal (a
@@ -67,7 +71,7 @@ impl FleetObservation {
         let backlog: u64 = self
             .loads
             .iter()
-            .filter(|l| !l.draining)
+            .filter(|l| l.routable())
             .map(|l| l.backlog())
             .sum();
         backlog as f64 / live as f64
@@ -76,7 +80,7 @@ impl FleetObservation {
     /// Fraction of the live fleet's KV blocks in use, in `[0, 1]`.
     pub fn kv_pressure(&self) -> f64 {
         let (mut free, mut total) = (0usize, 0usize);
-        for l in self.loads.iter().filter(|l| !l.draining) {
+        for l in self.loads.iter().filter(|l| l.routable()) {
             free += l.kv_free_blocks;
             total += l.kv_total_blocks;
         }
@@ -202,10 +206,12 @@ impl SlaAutoscaler {
     }
 
     /// The live replica to park: highest profile cost first, ties to
-    /// the highest index (LIFO over equal-cost replicas).
+    /// the highest index (LIFO over equal-cost replicas). A `Down` or
+    /// `Suspect` replica is never the pick — it already takes no
+    /// traffic, so parking it would waste the scale-down action.
     fn retire_pick(obs: &FleetObservation) -> Option<usize> {
         (0..obs.loads.len())
-            .filter(|&i| !obs.loads[i].draining)
+            .filter(|&i| obs.loads[i].routable())
             .max_by(|&a, &b| {
                 obs.loads[a]
                     .cost_unit
@@ -300,6 +306,9 @@ pub struct FleetStats {
     pub profiles: Vec<String>,
     /// Per-replica parked flags (draining or shut down), index-aligned.
     pub parked: Vec<bool>,
+    /// Per-replica health labels (`healthy`/`suspect`/`down`/
+    /// `recovering`), index-aligned.
+    pub health: Vec<String>,
     /// Fleet policy label (`manual` or the autoscale band spec).
     pub policy: String,
     /// Decision ticks taken so far.
@@ -448,7 +457,10 @@ impl Fleet {
         for (snap, load) in
             self.set.snapshots().iter().zip(loads.iter())
         {
-            if load.draining {
+            // Skip non-routable replicas too: a crashed replica's last
+            // published p95 is frozen at its worst — folding it in
+            // would trigger spawns forever.
+            if !load.routable() {
                 continue;
             }
             for rank in 0..PriorityClass::COUNT {
@@ -614,13 +626,17 @@ impl Fleet {
         let inner = self.inner.lock().unwrap();
         FleetStats {
             n_replicas: self.set.len(),
-            live: loads.iter().filter(|l| !l.draining).count(),
+            live: loads.iter().filter(|l| l.routable()).count(),
             profiles: self
                 .profiles
                 .iter()
                 .map(|p| p.name.clone())
                 .collect(),
             parked: loads.iter().map(|l| l.draining).collect(),
+            health: loads
+                .iter()
+                .map(|l| l.health.label().to_string())
+                .collect(),
             policy: inner.policy.label(),
             ticks: inner.ticks,
             log: inner.log.clone(),
@@ -749,6 +765,50 @@ mod tests {
         // And quiet stays quiet.
         phase(&mut c, &mut actions, &mut t, &mut live, &mut parked, 8, 0);
         assert_eq!(actions.len(), 2, "stable after the cycle: {actions:?}");
+    }
+
+    #[test]
+    fn down_replica_counts_as_lost_capacity_and_spawns_cover() {
+        use crate::service::replica::Health;
+        let mut cfg = band_cfg();
+        cfg.dwell_decisions = 1;
+        let mut c = SlaAutoscaler::new(
+            cfg,
+            profile_by_name("economy").unwrap(),
+        )
+        .unwrap();
+        // Two live replicas sharing backlog 12 → 6 per live: in the
+        // hysteresis gap, hold.
+        let mut o = obs(0.0, 2, 1, 12);
+        assert_eq!(o.live(), 2);
+        assert_eq!(c.decide(&o), FleetDirective::Hold);
+        // Replica 1 crashes: same offered load, but per-routable
+        // backlog doubles past the spawn band → the autoscaler spawns
+        // to cover the loss exactly like a load step.
+        o.loads[1].health = Health::Down;
+        o.now = 10.0;
+        assert_eq!(o.live(), 1, "a down replica is lost capacity");
+        assert!(matches!(c.decide(&o),
+                         FleetDirective::Spawn { .. }));
+        // And an underloaded fleet never "retires" the down replica —
+        // it takes no traffic, so parking it would waste the action.
+        let mut c2 = SlaAutoscaler::new(
+            {
+                let mut cfg = band_cfg();
+                cfg.dwell_decisions = 1;
+                cfg.min_replicas = 1;
+                cfg
+            },
+            profile_by_name("economy").unwrap(),
+        )
+        .unwrap();
+        let mut o = obs(0.0, 3, 0, 0);
+        o.loads[2].health = Health::Down;
+        o.loads[0].cost_unit = 1.0;
+        o.loads[1].cost_unit = 2.0;
+        assert_eq!(c2.decide(&o),
+                   FleetDirective::Retire { replica: 1 },
+                   "retire picks the priciest ROUTABLE replica");
     }
 
     #[test]

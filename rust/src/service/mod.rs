@@ -47,8 +47,8 @@ pub mod types;
 pub use crate::request::{PriorityClass, SamplingParams};
 pub use fleet::{Fleet, FleetController, FleetDirective, FleetLogEntry,
                 FleetObservation, FleetStats, SlaAutoscaler};
-pub use replica::{ReplicaLoad, ReplicaSet, RollingError, RouteKey,
-                  RoutePolicy};
+pub use replica::{Health, HealthPolicy, HealthTracker, ReplicaLoad,
+                  ReplicaSet, RollingError, RouteKey, RoutePolicy};
 pub use types::{Completion, GenEvent, GenRequest, SubmitError};
 
 use crate::config::{HardwareSpec, ModelSpec, PolicyKind, ReplicaProfile,
@@ -455,7 +455,10 @@ impl Service {
             .control
             .send(Command::Submit { request, events: events_tx });
         self.shared.pending_submits.fetch_sub(1, Ordering::SeqCst);
-        sent.map_err(|_| anyhow!("service worker is gone"))?;
+        // A closed channel means the worker is dead — surface the same
+        // typed error as an explicit shutdown so routers can fall
+        // through to the next replica instead of failing the request.
+        sent.map_err(|_| anyhow::Error::new(SubmitError::ShutDown))?;
         Ok(SubmissionHandle {
             id,
             events: events_rx,
@@ -928,6 +931,10 @@ fn engine_loop(mut engine: Box<dyn Engine>, sched: &mut Scheduler,
                 },
                 Some(FinishReason::Cancelled) => GenEvent::Cancelled {
                     id: r.id,
+                },
+                Some(FinishReason::Failed) => GenEvent::Error {
+                    id: r.id,
+                    message: "replica failed mid-stream".into(),
                 },
             };
             let _ = tx.send(ev);

@@ -45,6 +45,18 @@
 //! replica is skipped, so accepted work is never failed), hot-swaps its
 //! controller, reopens it, and advances. Zero requests are lost or hung
 //! across the rotation; `rust/tests/test_replica.rs` asserts it.
+//!
+//! The chaos layer adds *unplanned*-failure handling on top: each
+//! replica carries a [`Health`] state (`Healthy → Suspect → Down →
+//! Recovering`) in a [`HealthTracker`], driven by a straggler detector
+//! over the per-replica decode p95s (a replica whose p95 exceeds a
+//! configurable multiple of the fleet median for a dwell window turns
+//! `Suspect` — hysteresis like the autoscaler bands) plus hard error
+//! signals (a dead worker marks its replica `Down`). Routing excludes
+//! `Suspect`/`Down` replicas exactly like draining ones; when *every*
+//! live replica is unhealthy the router degrades to health-blind
+//! ordering rather than rejecting — serving on a suspect replica beats
+//! serving on none. See DESIGN.md "Chaos layer".
 
 use super::{
     GenRequest, Service, ServiceBuilder, ServiceSnapshot, SubmissionHandle,
@@ -187,19 +199,19 @@ impl RoutePolicy {
                 let start = rr % n;
                 (0..n)
                     .map(|k| (start + k) % n)
-                    .filter(|&i| !loads[i].draining)
+                    .filter(|&i| loads[i].routable())
                     .collect()
             }
             RoutePolicy::LeastLoaded => {
                 let up: Vec<usize> = (0..loads.len())
-                    .filter(|&i| !loads[i].draining)
+                    .filter(|&i| loads[i].routable())
                     .collect();
                 least_loaded(&up, loads, class.rank())
             }
             RoutePolicy::ClassPinned { reserved } => {
                 let (own, other): (Vec<usize>, Vec<usize>) =
                     (0..loads.len())
-                        .filter(|&i| !loads[i].draining)
+                        .filter(|&i| loads[i].routable())
                         .partition(|&i| {
                             (i < *reserved)
                                 == (class == PriorityClass::Interactive)
@@ -210,7 +222,7 @@ impl RoutePolicy {
             }
             RoutePolicy::Capability { long_prompt } => {
                 let mut v: Vec<usize> = (0..loads.len())
-                    .filter(|&i| !loads[i].draining)
+                    .filter(|&i| loads[i].routable())
                     .collect();
                 let rank = class.rank();
                 if class == PriorityClass::Interactive {
@@ -270,6 +282,187 @@ fn least_loaded(idx: &[usize], loads: &[ReplicaLoad], rank: usize)
     v
 }
 
+/// Per-replica health, as the router consumes it. Only [`Health::Healthy`]
+/// and [`Health::Recovering`] replicas are routing candidates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Health {
+    /// Serving normally.
+    #[default]
+    Healthy,
+    /// Straggler suspicion: the replica's decode p95 exceeded the
+    /// detector's multiple of the fleet median for the dwell window.
+    /// Excluded from routing until it observes clean again.
+    Suspect,
+    /// Hard failure (dead worker, crash fault, operator action).
+    /// Excluded from routing until explicitly recovered.
+    Down,
+    /// Post-`Down` probation: routable again, promoted back to
+    /// `Healthy` after a clean dwell window.
+    Recovering,
+}
+
+impl Health {
+    /// Whether the router may dispatch new work to this replica.
+    pub fn routable(self) -> bool {
+        matches!(self, Health::Healthy | Health::Recovering)
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Health::Healthy => "healthy",
+            Health::Suspect => "suspect",
+            Health::Down => "down",
+            Health::Recovering => "recovering",
+        }
+    }
+}
+
+/// Straggler-detection knobs for the [`HealthTracker`]. Dwell windows
+/// give the detector hysteresis (like the autoscaler bands): one noisy
+/// p95 sample neither condemns nor absolves a replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HealthPolicy {
+    /// A replica straggles when its decode p95 exceeds this multiple of
+    /// the fleet's (lower) median p95.
+    pub suspect_factor: f64,
+    /// Consecutive straggling observations before `Healthy → Suspect`.
+    pub suspect_dwell: u32,
+    /// Consecutive clean observations before `Suspect`/`Recovering`
+    /// promote back to `Healthy`.
+    pub recover_dwell: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            suspect_factor: 3.0,
+            suspect_dwell: 3,
+            recover_dwell: 3,
+        }
+    }
+}
+
+/// The per-replica [`Health`] state machine: `Healthy → Suspect` on a
+/// sustained straggler signal, any state `→ Down` on a hard failure,
+/// `Down → Recovering` on explicit recovery, `Suspect`/`Recovering
+/// → Healthy` after a clean dwell window. Pure over the observed
+/// per-replica p95s, so the live router and the virtual-time chaos
+/// driver share one detector.
+#[derive(Debug, Clone)]
+pub struct HealthTracker {
+    policy: HealthPolicy,
+    states: Vec<Health>,
+    slow_streak: Vec<u32>,
+    ok_streak: Vec<u32>,
+}
+
+impl HealthTracker {
+    pub fn new(n: usize, policy: HealthPolicy) -> Self {
+        HealthTracker {
+            policy,
+            states: vec![Health::Healthy; n],
+            slow_streak: vec![0; n],
+            ok_streak: vec![0; n],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    pub fn state(&self, i: usize) -> Health {
+        self.states[i]
+    }
+
+    pub fn states(&self) -> &[Health] {
+        &self.states
+    }
+
+    pub fn routable(&self, i: usize) -> bool {
+        self.states[i].routable()
+    }
+
+    /// Swap the detection knobs; states and streaks carry over.
+    pub fn set_policy(&mut self, policy: HealthPolicy) {
+        self.policy = policy;
+    }
+
+    pub fn policy(&self) -> HealthPolicy {
+        self.policy
+    }
+
+    /// Hard-failure signal (dead worker, crash fault, operator action):
+    /// the replica leaves the routing set until [`Self::mark_recovering`].
+    pub fn mark_down(&mut self, i: usize) {
+        self.states[i] = Health::Down;
+        self.slow_streak[i] = 0;
+        self.ok_streak[i] = 0;
+    }
+
+    /// Begin recovery of a `Down` replica: routable again on probation;
+    /// a clean dwell window promotes it back to `Healthy`. No-op for
+    /// replicas that are not `Down`.
+    pub fn mark_recovering(&mut self, i: usize) {
+        if self.states[i] == Health::Down {
+            self.states[i] = Health::Recovering;
+            self.slow_streak[i] = 0;
+            self.ok_streak[i] = 0;
+        }
+    }
+
+    /// One straggler-detection pass over the per-replica decode p95s
+    /// (0.0 = no samples). The fleet median is the lower median of the
+    /// non-`Down` replicas with samples, so with two replicas the
+    /// straggler is compared against the healthy one, not itself. At
+    /// least two sampled replicas are needed — a median of one is the
+    /// replica itself. Returns the replicas that just turned `Suspect`
+    /// (the hedging trigger).
+    pub fn observe(&mut self, p95: &[f64]) -> Vec<usize> {
+        debug_assert_eq!(p95.len(), self.states.len());
+        let mut sample: Vec<f64> = (0..self.states.len())
+            .filter(|&i| self.states[i] != Health::Down && p95[i] > 0.0)
+            .map(|i| p95[i])
+            .collect();
+        let median = if sample.len() >= 2 {
+            sample.sort_by(f64::total_cmp);
+            sample[(sample.len() - 1) / 2]
+        } else {
+            0.0
+        };
+        let mut newly_suspect = Vec::new();
+        for i in 0..self.states.len() {
+            if self.states[i] == Health::Down {
+                continue;
+            }
+            let straggling = median > 0.0
+                && p95[i] > self.policy.suspect_factor * median;
+            if straggling {
+                self.slow_streak[i] += 1;
+                self.ok_streak[i] = 0;
+                if self.slow_streak[i] >= self.policy.suspect_dwell
+                    && self.states[i] != Health::Suspect
+                {
+                    self.states[i] = Health::Suspect;
+                    newly_suspect.push(i);
+                }
+            } else {
+                self.ok_streak[i] += 1;
+                self.slow_streak[i] = 0;
+                if self.ok_streak[i] >= self.policy.recover_dwell
+                    && self.states[i] != Health::Healthy
+                {
+                    self.states[i] = Health::Healthy;
+                }
+            }
+        }
+        newly_suspect
+    }
+}
+
 /// Point-in-time load view of one replica, as the route policies consume
 /// it. Built from [`ServiceSnapshot`]s on the live path and from
 /// scheduler queue lengths on the virtual-time driver path.
@@ -306,6 +499,10 @@ pub struct ReplicaLoad {
     pub class_ttft_p95: [f64; PriorityClass::COUNT],
     /// Draining or shut down: not a routing candidate.
     pub draining: bool,
+    /// Chaos-layer health; `Suspect`/`Down` replicas are excluded from
+    /// routing like draining ones (but see the health-blind degraded
+    /// mode in [`ReplicaSet::submit_routed`]).
+    pub health: Health,
 }
 
 impl Default for ReplicaLoad {
@@ -324,6 +521,7 @@ impl Default for ReplicaLoad {
             class_p95: [0.0; PriorityClass::COUNT],
             class_ttft_p95: [0.0; PriorityClass::COUNT],
             draining: false,
+            health: Health::Healthy,
         }
     }
 }
@@ -336,6 +534,11 @@ impl ReplicaLoad {
             + self.running as u64
             + self.resuming as u64
             + self.in_flight_to as u64
+    }
+
+    /// Routing candidate: neither draining nor health-excluded.
+    pub fn routable(&self) -> bool {
+        !self.draining && self.health.routable()
     }
 }
 
@@ -433,6 +636,10 @@ pub struct ReplicaSet {
     /// that drain indefinitely, and two interleaved rotations can have
     /// every replica draining at once. Late callers queue.
     rotation: Mutex<()>,
+    /// Chaos-layer per-replica health (straggler detection + hard
+    /// failure signals); overlaid onto [`Self::loads`] so every route
+    /// policy excludes unhealthy replicas for free.
+    health: Mutex<HealthTracker>,
 }
 
 impl ReplicaSet {
@@ -464,6 +671,10 @@ impl ReplicaSet {
             rr: AtomicUsize::new(0),
             routed,
             rotation: Mutex::new(()),
+            health: Mutex::new(HealthTracker::new(
+                n,
+                HealthPolicy::default(),
+            )),
         })
     }
 
@@ -480,12 +691,17 @@ impl ReplicaSet {
             services.into_iter().map(Arc::new).collect();
         let routed =
             (0..replicas.len()).map(|_| AtomicU64::new(0)).collect();
+        let n = replicas.len();
         Ok(ReplicaSet {
             replicas,
             route,
             rr: AtomicUsize::new(0),
             routed,
             rotation: Mutex::new(()),
+            health: Mutex::new(HealthTracker::new(
+                n,
+                HealthPolicy::default(),
+            )),
         })
     }
 
@@ -518,7 +734,8 @@ impl ReplicaSet {
     /// router's not-yet-published dispatches, so consecutive picks
     /// within one snapshot refresh window spread by real load.
     pub fn loads(&self) -> Vec<ReplicaLoad> {
-        self.replicas
+        let mut loads: Vec<ReplicaLoad> = self
+            .replicas
             .iter()
             .zip(self.routed.iter())
             .map(|(s, routed)| {
@@ -555,9 +772,15 @@ impl ReplicaSet {
                     // routing reacts to begin_drain/shutdown
                     // immediately.
                     draining: s.is_draining() || s.is_shutdown(),
+                    health: Health::Healthy, // overlaid below
                 }
             })
-            .collect()
+            .collect();
+        let health = self.health.lock().unwrap();
+        for (i, l) in loads.iter_mut().enumerate() {
+            l.health = health.state(i);
+        }
+        loads
     }
 
     /// Route and submit. Skips draining replicas; when the routed
@@ -583,7 +806,19 @@ impl ReplicaSet {
         for _pass in 0..MAX_ROUTE_PASSES {
             let loads = self.loads();
             let rr = self.rr.fetch_add(1, Ordering::Relaxed);
-            let order = self.route.order(key, &loads, rr);
+            let mut order = self.route.order(key, &loads, rr);
+            if order.is_empty() {
+                // Degraded mode: when every live replica is merely
+                // unhealthy (suspect/down, not draining), route
+                // health-blind rather than reject — a dead worker
+                // still refuses with a typed error below, so this
+                // only ever lands work on a serving replica.
+                let mut blind = loads.clone();
+                for l in &mut blind {
+                    l.health = Health::Healthy;
+                }
+                order = self.route.order(key, &blind, rr);
+            }
             if order.is_empty() {
                 break; // the whole set is draining
             }
@@ -605,6 +840,14 @@ impl ReplicaSet {
                         if !retryable {
                             return Err(e);
                         }
+                        // A dead worker is a health signal (a drain is
+                        // planned, not a fault): stop routing to it.
+                        if matches!(
+                            e.downcast_ref::<SubmitError>(),
+                            Some(SubmitError::ShutDown)
+                        ) {
+                            self.health.lock().unwrap().mark_down(i);
+                        }
                         last_err = Some(e);
                     }
                 }
@@ -624,6 +867,47 @@ impl ReplicaSet {
             return false;
         }
         self.replicas[self.replica_of(id)].cancel(id)
+    }
+
+    /// Per-replica health states, index-aligned with the replicas.
+    pub fn health_states(&self) -> Vec<Health> {
+        self.health.lock().unwrap().states().to_vec()
+    }
+
+    /// Swap the straggler-detection knobs; current states carry over.
+    pub fn set_health_policy(&self, policy: HealthPolicy) {
+        self.health.lock().unwrap().set_policy(policy);
+    }
+
+    /// One straggler-detection pass over the live snapshots: each
+    /// replica's signal is its worst attributed per-class decode p95.
+    /// Call periodically (the server runs it on every `stats` request).
+    /// Returns the replicas that just turned [`Health::Suspect`].
+    pub fn observe_health(&self) -> Vec<usize> {
+        let signals: Vec<f64> = self
+            .snapshots()
+            .iter()
+            .map(|s| {
+                s.class_lat_p95.iter().fold(0.0f64, |a, &b| a.max(b))
+            })
+            .collect();
+        self.health.lock().unwrap().observe(&signals)
+    }
+
+    /// Mark a replica [`Health::Down`] (operator action or hard-failure
+    /// signal): it leaves the routing set until [`Self::mark_recovering`].
+    pub fn mark_down(&self, i: usize) -> Result<()> {
+        self.checked(i)?;
+        self.health.lock().unwrap().mark_down(i);
+        Ok(())
+    }
+
+    /// Begin recovery of a `Down` replica: routable again on probation,
+    /// promoted to `Healthy` after a clean dwell window.
+    pub fn mark_recovering(&self, i: usize) -> Result<()> {
+        self.checked(i)?;
+        self.health.lock().unwrap().mark_recovering(i);
+        Ok(())
     }
 
     /// Per-replica snapshots, index-aligned with the replicas.
@@ -1275,6 +1559,165 @@ mod tests {
             .is_err());
         set.shutdown();
         rr.shutdown();
+    }
+
+    #[test]
+    fn health_tracker_straggler_detection_with_hysteresis() {
+        let pol = HealthPolicy {
+            suspect_factor: 3.0,
+            suspect_dwell: 2,
+            recover_dwell: 2,
+        };
+        let mut t = HealthTracker::new(3, pol);
+        assert!(t.states().iter().all(|h| *h == Health::Healthy));
+        // Replica 2 straggles at 10× the fleet median (0.02).
+        let slow = [0.02, 0.02, 0.20];
+        assert!(t.observe(&slow).is_empty(), "one sample is not enough");
+        assert_eq!(t.state(2), Health::Healthy);
+        assert_eq!(t.observe(&slow), vec![2], "dwell reached");
+        assert_eq!(t.state(2), Health::Suspect);
+        assert!(!t.routable(2));
+        assert!(t.observe(&slow).is_empty(), "already suspect");
+        // Clean observations promote it back after the recover dwell.
+        let clean = [0.02, 0.02, 0.025];
+        assert!(t.observe(&clean).is_empty());
+        assert_eq!(t.state(2), Health::Suspect, "hysteresis holds");
+        t.observe(&clean);
+        assert_eq!(t.state(2), Health::Healthy);
+        // A noisy single straggle resets the clean streak but does not
+        // condemn: slow, clean, slow never reaches the dwell.
+        for obs in [&slow, &clean, &slow, &clean] {
+            t.observe(obs);
+        }
+        assert_eq!(t.state(2), Health::Healthy);
+        // Hard failure: down → not routable, observe skips it, explicit
+        // recovery puts it on probation, clean dwell promotes.
+        t.mark_down(2);
+        assert_eq!(t.state(2), Health::Down);
+        assert!(!t.routable(2));
+        t.observe(&clean);
+        assert_eq!(t.state(2), Health::Down, "observe never resurrects");
+        t.mark_recovering(2);
+        assert_eq!(t.state(2), Health::Recovering);
+        assert!(t.routable(2), "probation is routable");
+        t.observe(&clean);
+        t.observe(&clean);
+        assert_eq!(t.state(2), Health::Healthy);
+        // mark_recovering is a no-op off the Down state.
+        t.mark_recovering(2);
+        assert_eq!(t.state(2), Health::Healthy);
+        // With two replicas the median is the healthy one (lower
+        // median), so the straggler is still detected.
+        let mut t2 = HealthTracker::new(2, pol);
+        let s2 = [0.02, 0.30];
+        t2.observe(&s2);
+        assert_eq!(t2.observe(&s2), vec![1]);
+    }
+
+    #[test]
+    fn routing_excludes_unhealthy_replicas() {
+        let mut loads = vec![load(0, 0, 10); 3];
+        loads[0].health = Health::Suspect;
+        let c = PriorityClass::Standard;
+        assert_eq!(RoutePolicy::RoundRobin.order(c, &loads, 0), vec![1, 2]);
+        assert_eq!(RoutePolicy::LeastLoaded.order(c, &loads, 0),
+                   vec![1, 2]);
+        loads[1].health = Health::Down;
+        assert_eq!(RoutePolicy::LeastLoaded.order(c, &loads, 0), vec![2]);
+        loads[1].health = Health::Recovering;
+        assert_eq!(RoutePolicy::LeastLoaded.order(c, &loads, 0),
+                   vec![1, 2], "recovering replicas serve again");
+        // Class-pinned: a fully-down reserved partition spills
+        // interactive traffic across partitions instead of rejecting.
+        let p = RoutePolicy::ClassPinned { reserved: 1 };
+        let mut pin = vec![load(0, 0, 10); 3];
+        pin[0].health = Health::Down;
+        assert_eq!(p.order(PriorityClass::Interactive, &pin, 0),
+                   vec![1, 2]);
+    }
+
+    #[test]
+    fn mark_down_routes_around_and_recovery_restores() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(2, RoutePolicy::RoundRobin, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        set.mark_down(0).unwrap();
+        assert_eq!(set.health_states(), vec![Health::Down,
+                                             Health::Healthy]);
+        for _ in 0..4 {
+            let (i, h) = set
+                .submit_routed(GenRequest::from_text("hi", 1))
+                .unwrap();
+            assert_eq!(i, 1, "down replica must not receive traffic");
+            assert_eq!(h.wait().unwrap().n_tokens, 1);
+        }
+        set.mark_recovering(0).unwrap();
+        assert_eq!(set.health_states()[0], Health::Recovering);
+        let mut hit0 = false;
+        for _ in 0..4 {
+            let (i, h) = set
+                .submit_routed(GenRequest::from_text("hi", 1))
+                .unwrap();
+            hit0 |= i == 0;
+            assert_eq!(h.wait().unwrap().n_tokens, 1);
+        }
+        assert!(hit0, "recovering replica serves again");
+        assert!(set.mark_down(9).is_err(), "out-of-range is typed");
+        // Degraded mode: every replica unhealthy → health-blind
+        // routing still serves rather than rejecting.
+        set.mark_down(0).unwrap();
+        set.mark_down(1).unwrap();
+        let (_, h) = set
+            .submit_routed(GenRequest::from_text("degraded", 1))
+            .unwrap();
+        assert_eq!(h.wait().unwrap().n_tokens, 1);
+        set.shutdown();
+    }
+
+    #[test]
+    fn submit_survives_replica_death_with_typed_fall_through() {
+        use crate::config::presets::{cpu_host, tiny_real};
+        let set = ReplicaSet::build(2, RoutePolicy::RoundRobin, |_| {
+            ServiceBuilder::new(tiny_real(), cpu_host())
+                .eta_tokens(100_000)
+        })
+        .unwrap();
+        // Regression (chaos PR): a dead replica's submit refusal must
+        // be a downcastable SubmitError so the router falls through to
+        // the next candidate instead of surfacing the first replica's
+        // error. Kill replica 0 mid-burst; every routed submit must
+        // still land.
+        let dead = Arc::clone(&set.replicas[0]);
+        let killer = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            dead.shutdown();
+        });
+        for k in 0..50 {
+            let (_, h) = set
+                .submit_routed(GenRequest::from_text("race", 1))
+                .unwrap_or_else(|e| {
+                    panic!("submit {k} must fall through, got: {e:#}")
+                });
+            assert_eq!(h.wait().unwrap().n_tokens, 1);
+        }
+        killer.join().unwrap();
+        // The dead replica's direct refusal is typed…
+        let err =
+            set.replicas[0].submit(GenRequest::from_text("x", 1));
+        assert!(matches!(
+            err.unwrap_err().downcast_ref::<SubmitError>(),
+            Some(SubmitError::ShutDown)
+        ));
+        // …and routed submissions keep landing on the survivor.
+        let (i, h) = set
+            .submit_routed(GenRequest::from_text("after", 1))
+            .unwrap();
+        assert_eq!(i, 1);
+        assert_eq!(h.wait().unwrap().n_tokens, 1);
+        set.shutdown();
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Chaos-layer coverage from the public API: random fault plans must
+//! never lose an accepted request — every id ends in exactly one
+//! terminal event — and any fixed plan must replay bit-identically
+//! under the same seed.
+
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::{run_chaos_sim, Fault, FaultPlan, SimScenario};
+use dynabatch::service::{HealthPolicy, RoutePolicy};
+use dynabatch::util::prop::{check, Gen};
+use dynabatch::workload::{Arrival, LengthDist, Workload};
+
+fn scenario(n_requests: usize, rate: f64, seed: u64) -> SimScenario {
+    let model = llama_65b();
+    let hardware = node_for(&model);
+    SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::Combined,
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "chaos-prop".into(),
+            arrival: Arrival::Poisson { rate },
+            prompt: LengthDist::around(68.4, 256),
+            output: LengthDist::around(80.0, 256),
+            n_requests,
+            seed,
+            prefix: None,
+        },
+        eta_tokens_override: None,
+        swap_tokens: 0,
+    }
+}
+
+/// A random-but-valid fault plan. Replica 0 is never crashed so the
+/// zero-loss property always has a landing spot for re-routed work
+/// (crashing the whole set legitimately loses in-flight prompts).
+fn random_plan(g: &mut Gen, n_replicas: usize) -> FaultPlan {
+    let mut faults = Vec::new();
+    for _ in 0..g.usize(0..=3) {
+        let at = g.f64(0.2, 6.0);
+        match g.usize(0..=2) {
+            0 if n_replicas > 1 => faults.push(Fault::Crash {
+                replica: g.usize(1..=n_replicas - 1),
+                at,
+            }),
+            0 => {}
+            1 => faults.push(Fault::Slow {
+                replica: g.usize(0..=n_replicas - 1),
+                at,
+                factor: g.f64(2.0, 8.0),
+                duration: if g.bool_with(0.2) {
+                    f64::INFINITY // never heals
+                } else {
+                    g.f64(0.5, 3.0)
+                },
+            }),
+            _ => faults.push(Fault::Partition {
+                replicas: vec![g.usize(0..=n_replicas - 1)],
+                at,
+                duration: g.f64(0.5, 2.0),
+            }),
+        }
+    }
+    FaultPlan {
+        faults,
+        health: HealthPolicy {
+            suspect_factor: g.f64(1.5, 4.0),
+            ..HealthPolicy::default()
+        },
+        hedging: g.bool(),
+        ..FaultPlan::default()
+    }
+}
+
+/// The tentpole invariant: whatever the interleaving of crashes,
+/// stragglers, partitions, detector transitions and hedges, an
+/// accepted request is never silently dropped — `lost` counts exactly
+/// the accepted ids with no terminal record anywhere in the set.
+#[test]
+fn prop_random_fault_plans_lose_nothing() {
+    check("chaos zero-loss under random fault plans", 25, |g| {
+        let n_replicas = g.usize(2..=3);
+        let s = scenario(
+            g.usize(20..=45),
+            g.f64(8.0, 25.0),
+            g.u64(1..=1_000),
+        );
+        let plan = random_plan(g, n_replicas);
+        let has_crash = plan
+            .faults
+            .iter()
+            .any(|f| matches!(f, Fault::Crash { .. }));
+        let m = run_chaos_sim(
+            &s,
+            n_replicas,
+            &RoutePolicy::LeastLoaded,
+            &plan,
+        )
+        .unwrap();
+        // `failed` (typed terminal errors) can only come from a crash
+        // cutting off a mid-decode request; nothing else may fail.
+        m.lost == 0 && (has_crash || m.failed == 0)
+    });
+}
+
+/// A mixed plan — straggler, crash and partition in one run — replays
+/// bit-identically under the same seed, the property that makes chaos
+/// tables usable as regression anchors.
+#[test]
+fn chaos_mixed_plan_replays_bit_identically() {
+    let s = scenario(60, 12.0, 7);
+    let plan = FaultPlan {
+        faults: vec![
+            Fault::Slow { replica: 1, at: 0.5, factor: 3.0,
+                          duration: 2.0 },
+            Fault::Crash { replica: 2, at: 1.5 },
+            Fault::Partition { replicas: vec![0], at: 3.0,
+                               duration: 1.0 },
+        ],
+        mix: [0.4, 0.3, 0.3],
+        ..FaultPlan::default()
+    };
+    let a = run_chaos_sim(&s, 3, &RoutePolicy::LeastLoaded, &plan)
+        .unwrap();
+    let b = run_chaos_sim(&s, 3, &RoutePolicy::LeastLoaded, &plan)
+        .unwrap();
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string(),
+               "same seed + same plan → bit-identical chaos metrics");
+    assert_eq!(a.lost, 0, "mixed plan must not lose requests");
+    assert_eq!(a.crashes, 1);
+    assert_eq!(a.partitions, 1);
+    assert_eq!(a.recovered, 1, "the partition must heal");
+}
+
+#[test]
+fn chaos_plan_validation_rejects_nonsense() {
+    let s = scenario(10, 10.0, 1);
+    let bad = [
+        FaultPlan {
+            faults: vec![Fault::Crash { replica: 5, at: 1.0 }],
+            ..FaultPlan::default()
+        },
+        FaultPlan {
+            faults: vec![Fault::Slow { replica: 0, at: -1.0,
+                                       factor: 2.0, duration: 1.0 }],
+            ..FaultPlan::default()
+        },
+        FaultPlan {
+            faults: vec![Fault::Slow { replica: 0, at: 1.0,
+                                       factor: 0.0, duration: 1.0 }],
+            ..FaultPlan::default()
+        },
+        FaultPlan {
+            faults: vec![Fault::Partition { replicas: vec![], at: 1.0,
+                                            duration: 1.0 }],
+            ..FaultPlan::default()
+        },
+        FaultPlan {
+            faults: vec![Fault::Partition { replicas: vec![0], at: 1.0,
+                                            duration: f64::INFINITY }],
+            ..FaultPlan::default()
+        },
+    ];
+    for plan in bad {
+        assert!(
+            run_chaos_sim(&s, 2, &RoutePolicy::LeastLoaded, &plan)
+                .is_err(),
+            "plan must be rejected: {:?}",
+            plan.faults
+        );
+    }
+}
