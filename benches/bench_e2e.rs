@@ -33,6 +33,7 @@ fn main() {
                 n_requests: n,
                 seed: 42,
                 prefix: None,
+                length_mix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,

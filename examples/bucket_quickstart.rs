@@ -1,0 +1,63 @@
+//! Bucketed-batching quickstart: a long-tail (bimodal) prompt mix run
+//! twice under the padded-prefill cost model — once planning prefills
+//! as one flat group padded to the step's longest prompt, once grouped
+//! into geometric length buckets (`SchedulerConfig::buckets`) so short
+//! prompts only pad to their bucket ceiling.
+//!
+//!     cargo run --release --example bucket_quickstart
+use dynabatch::config::presets::*;
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::driver::{run_sim, SimScenario};
+use dynabatch::workload::{Arrival, LengthDist, LengthMix, Workload};
+
+fn main() -> anyhow::Result<()> {
+    let model = pangu_7b();
+    let hardware = node_for(&model);
+
+    // 80% short chat turns (16-32 tokens), 20% long documents
+    // (~1024 tokens): the mix where flat padding hurts most, because
+    // one long prompt in a step inflates every short one to its size.
+    let workload = Workload {
+        name: "bucket-quickstart".into(),
+        arrival: Arrival::AllAtOnce,
+        prompt: LengthDist::Fixed(128), // nominal; the mix draws lengths
+        output: LengthDist::Fixed(8),
+        n_requests: 64,
+        seed: 17,
+        prefix: None,
+        length_mix: Some(LengthMix::bimodal(16, 32, 1024.0, 0.2, 2048)),
+    };
+    println!("model: {} — 80/20 short/long prompt mix, padded prefill \
+              cost model", model.name);
+
+    for buckets in [0u32, 4] {
+        let s = SimScenario {
+            model: model.clone(),
+            hardware: hardware.clone(),
+            sched: SchedulerConfig {
+                policy: PolicyKind::StaticGreedy { max: 256 },
+                buckets,
+                bucket_base: 64,
+                padded_prefill: true,
+                ..SchedulerConfig::default()
+            },
+            workload: workload.clone(),
+            eta_tokens_override: Some(200_000),
+            swap_tokens: 0,
+        };
+        let m = run_sim(&s)?;
+        let waste = m
+            .padding_waste
+            .map(|w| format!("{:.0}%", w * 100.0))
+            .unwrap_or_else(|| "-".into());
+        println!(
+            "buckets={}  {:7.0} tok/s  makespan {:6.2}s  padding waste {}",
+            buckets, m.throughput, m.makespan, waste
+        );
+    }
+    println!("\nBucketing pads each prefill group only to its bucket \
+              ceiling instead of the\nstep-wide maximum, so the short \
+              tail stops paying for the long one. See\n`dynabatch \
+              bucket` for the fixed-seed throughput regression.");
+    Ok(())
+}

@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             n_requests: 120,
             seed: 42,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

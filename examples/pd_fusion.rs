@@ -28,6 +28,7 @@ fn main() -> anyhow::Result<()> {
             n_requests: 400,
             seed: 44,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -29,6 +29,7 @@ fn main() -> anyhow::Result<()> {
             prefix_tokens: 512,
             zipf_s: 1.1,
         }),
+        length_mix: None,
     };
     println!("model: {} — 4 tenants x 512-token shared prefix, \
               6000-token KV pool", model.name);

@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         n_requests: 400,
         seed: 42,
         prefix: None,
+        length_mix: None,
     };
 
     for policy in [

@@ -32,6 +32,7 @@ fn main() -> anyhow::Result<()> {
             n_requests: 300,
             seed: 43,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

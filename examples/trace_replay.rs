@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
         n_requests: 300,
         seed: 7,
         prefix: None,
+        length_mix: None,
     };
     trace::save(&path, &w.generate())?;
     println!("recorded {} → {}", w.name, path.display());

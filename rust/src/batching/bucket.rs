@@ -1,0 +1,356 @@
+//! Shape-aware bucketed batching — the [`BucketPlan`] carried on
+//! [`Directive`](super::Directive) and the [`BucketedController`] that
+//! adapts it to KV pressure.
+//!
+//! The paper's controllers tune *how many* requests run per step and
+//! treat the batch as shape-homogeneous; BucketServe (PAPERS.md) shows
+//! padding waste from mixed sequence lengths is a first-order throughput
+//! loss at scale. A `BucketPlan` partitions prompt lengths into at most
+//! [`MAX_BUCKETS`] contiguous ranges ("buckets"); the scheduler then
+//! groups prefill work by bucket, so a step's rectangular prefill kernel
+//! pads each group only to its own longest chunk instead of the step-wide
+//! maximum (see `Scheduler`'s bucket index and the padded-prefill cost
+//! accounting in `engine::sim`).
+//!
+//! The plan is a fixed-size, `Copy + Eq` value — directives are logged
+//! and compared on the hot path, so no heap is allowed here.
+//!
+//! [`BucketedController`] wraps any inner controller (the same shape as
+//! `ChunkedController`): each decision it attaches the current plan, and
+//! under KV pressure it *merges* adjacent buckets pairwise (coarser
+//! buckets → fuller groups → fewer, larger steps), splitting back toward
+//! the base plan when pressure subsides. Transitions require a dwell
+//! (consecutive decisions leaning the same way) so bucket boundaries do
+//! not thrash with the memory gauge.
+
+use super::{Controller, Directive};
+use crate::config::SchedulerConfig;
+use crate::telemetry::Observation;
+
+/// Hard cap on buckets per plan; fixed so [`BucketPlan`] stays `Copy`.
+pub const MAX_BUCKETS: usize = 8;
+
+/// A prompt-length bucketing: bucket `i` covers lengths in
+/// `(ceilings[i-1], ceilings[i]]` (bucket 0 starts at 0). The last
+/// active ceiling is always `u32::MAX`, so every length lands somewhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BucketPlan {
+    /// Active bucket count (1..=[`MAX_BUCKETS`]).
+    pub n_buckets: u8,
+    /// Ascending per-bucket prompt-length ceilings; entries past
+    /// `n_buckets` are unused (kept `u32::MAX`).
+    pub ceilings: [u32; MAX_BUCKETS],
+    /// Per-bucket admission quota: how many *new* requests of that
+    /// bucket the scheduler may admit per step (0 = unlimited). Resume
+    /// admissions bypass quotas — they hold completed work.
+    pub quotas: [u32; MAX_BUCKETS],
+}
+
+impl BucketPlan {
+    /// One bucket covering every length, no quota — admission and
+    /// planning under this plan are exactly the unbucketed order (the
+    /// parity contract pinned in `test_sched_parity`).
+    pub fn catch_all() -> Self {
+        BucketPlan {
+            n_buckets: 1,
+            ceilings: [u32::MAX; MAX_BUCKETS],
+            quotas: [0; MAX_BUCKETS],
+        }
+    }
+
+    /// Geometric boundaries: ceilings `base, 2·base, 4·base, …` with the
+    /// last bucket open-ended (`u32::MAX`). `n` is clamped to
+    /// `1..=MAX_BUCKETS`; every bucket gets the same admission `quota`
+    /// (0 = unlimited).
+    pub fn geometric(base: u32, n: usize, quota: u32) -> Self {
+        let n = n.clamp(1, MAX_BUCKETS);
+        let base = base.max(1);
+        let mut p = BucketPlan {
+            n_buckets: n as u8,
+            ceilings: [u32::MAX; MAX_BUCKETS],
+            quotas: [quota; MAX_BUCKETS],
+        };
+        for (i, c) in p.ceilings[..n - 1].iter_mut().enumerate() {
+            *c = base.saturating_mul(1u32 << i.min(30));
+        }
+        p
+    }
+
+    /// Active bucket count as a `usize` index bound.
+    pub fn n(&self) -> usize {
+        self.n_buckets as usize
+    }
+
+    /// The bucket a prompt of `len` tokens belongs to. Total: the last
+    /// active ceiling is `u32::MAX`.
+    pub fn bucket_of(&self, len: u32) -> usize {
+        let n = self.n();
+        for (i, &c) in self.ceilings[..n].iter().enumerate() {
+            if len <= c {
+                return i;
+            }
+        }
+        n - 1
+    }
+
+    /// One merge level coarser: adjacent buckets pair up (the new bucket
+    /// keeps the pair's upper ceiling; quotas add, with 0 = unlimited
+    /// absorbing). A one-bucket plan merges to itself.
+    pub fn merged(&self) -> Self {
+        let n = self.n();
+        if n <= 1 {
+            return *self;
+        }
+        let m = n.div_ceil(2);
+        let mut p = BucketPlan {
+            n_buckets: m as u8,
+            ceilings: [u32::MAX; MAX_BUCKETS],
+            quotas: [0; MAX_BUCKETS],
+        };
+        for j in 0..m {
+            let hi = (2 * j + 1).min(n - 1);
+            p.ceilings[j] = self.ceilings[hi];
+            let (a, b) = (self.quotas[2 * j], self.quotas[hi]);
+            p.quotas[j] = if a == 0 || b == 0 || hi == 2 * j {
+                if hi == 2 * j { a } else { 0 }
+            } else {
+                a.saturating_add(b)
+            };
+        }
+        p
+    }
+
+    /// Elementwise quota merge for the directive combinators: boundaries
+    /// (`n_buckets`/`ceilings`) come from `a` — the first emitting part
+    /// owns the plan's shape, exactly as the first part seeds every other
+    /// directive field — and quotas resolve per bucket with `pick`,
+    /// treating 0 (unlimited) as infinity so `min(0, q) == q` and
+    /// `max(0, q) == 0`.
+    pub fn merge_quotas(a: &BucketPlan, b: &BucketPlan,
+                        pick: fn(u32, u32) -> u32) -> BucketPlan {
+        let mut out = *a;
+        for i in 0..MAX_BUCKETS {
+            let qa = if a.quotas[i] == 0 { u32::MAX } else { a.quotas[i] };
+            let qb = if b.quotas[i] == 0 { u32::MAX } else { b.quotas[i] };
+            let q = pick(qa, qb);
+            out.quotas[i] = if q == u32::MAX { 0 } else { q };
+        }
+        out
+    }
+}
+
+/// Attaches a [`BucketPlan`] to every directive of an inner controller,
+/// merging buckets pairwise under KV pressure and splitting back when it
+/// subsides — with dwell hysteresis so the plan does not thrash.
+///
+/// Merge levels are precomputed at construction: level 0 is the base
+/// plan, each next level is [`BucketPlan::merged`] of the previous, up
+/// to the one-bucket (catch-all) top. Utilization at or above `high`
+/// leans toward merging (coarser buckets keep groups full when KV
+/// headroom is scarce); at or below `low` leans toward splitting
+/// (tighter buckets minimize padding when memory is plentiful). A lean
+/// must persist `min_dwell` consecutive decisions to act, and changing
+/// direction resets the count.
+pub struct BucketedController {
+    inner: Box<dyn Controller>,
+    /// Plans by merge level; `plans[0]` = base, last = single bucket.
+    plans: Vec<BucketPlan>,
+    level: usize,
+    /// Direction of the current lean: +1 merge, -1 split, 0 none.
+    leaning: i8,
+    dwell: u32,
+    min_dwell: u32,
+    high: f64,
+    low: f64,
+}
+
+impl BucketedController {
+    pub fn new(inner: Box<dyn Controller>, base: BucketPlan,
+               min_dwell: u32, high: f64, low: f64) -> Self {
+        let mut plans = vec![base];
+        while plans.last().unwrap().n() > 1 {
+            let next = plans.last().unwrap().merged();
+            plans.push(next);
+        }
+        BucketedController {
+            inner,
+            plans,
+            level: 0,
+            leaning: 0,
+            dwell: 0,
+            min_dwell: min_dwell.max(1),
+            high,
+            low,
+        }
+    }
+
+    /// [`Self::new`] off the scheduler config's bucket knobs
+    /// (`buckets`/`bucket_base`/`bucket_quota`/`bucket_dwell`/
+    /// `bucket_high`/`bucket_low`).
+    pub fn from_cfg(cfg: &SchedulerConfig, inner: Box<dyn Controller>)
+                    -> Self {
+        let base = BucketPlan::geometric(cfg.bucket_base,
+                                         cfg.buckets as usize,
+                                         cfg.bucket_quota);
+        Self::new(inner, base, cfg.bucket_dwell, cfg.bucket_high,
+                  cfg.bucket_low)
+    }
+
+    /// The plan the next directive will carry (current merge level).
+    pub fn current_plan(&self) -> BucketPlan {
+        self.plans[self.level]
+    }
+}
+
+impl Controller for BucketedController {
+    fn decide(&mut self, obs: &Observation) -> Directive {
+        let mut d = self.inner.decide(obs);
+        let pressure = if obs.eta_tokens > 0 {
+            obs.used_tokens as f64 / obs.eta_tokens as f64
+        } else {
+            0.0
+        };
+        let lean: i8 = if pressure >= self.high
+            && self.level + 1 < self.plans.len()
+        {
+            1
+        } else if pressure <= self.low && self.level > 0 {
+            -1
+        } else {
+            0
+        };
+        if lean == 0 || lean != self.leaning {
+            self.leaning = lean;
+            self.dwell = 0;
+        }
+        if lean != 0 {
+            self.dwell += 1;
+            if self.dwell >= self.min_dwell {
+                self.level = (self.level as i64 + lean as i64) as usize;
+                self.leaning = 0;
+                self.dwell = 0;
+            }
+        }
+        d.bucket_plan = Some(self.plans[self.level]);
+        d
+    }
+
+    fn label(&self) -> String {
+        format!("{}+buckets", self.inner.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::batching::build_controller;
+    use crate::config::PolicyKind;
+
+    #[test]
+    fn geometric_boundaries_and_lookup() {
+        let p = BucketPlan::geometric(64, 4, 2);
+        assert_eq!(p.n(), 4);
+        assert_eq!(&p.ceilings[..4], &[64, 128, 256, u32::MAX]);
+        assert_eq!(&p.quotas[..4], &[2, 2, 2, 2]);
+        assert_eq!(p.bucket_of(1), 0);
+        assert_eq!(p.bucket_of(64), 0);
+        assert_eq!(p.bucket_of(65), 1);
+        assert_eq!(p.bucket_of(256), 2);
+        assert_eq!(p.bucket_of(100_000), 3);
+        // Clamping: zero-ish inputs still yield a total plan.
+        let q = BucketPlan::geometric(0, 0, 0);
+        assert_eq!(q.n(), 1);
+        assert_eq!(q.bucket_of(u32::MAX), 0);
+    }
+
+    #[test]
+    fn catch_all_covers_everything() {
+        let p = BucketPlan::catch_all();
+        assert_eq!(p.n(), 1);
+        assert_eq!(p.bucket_of(0), 0);
+        assert_eq!(p.bucket_of(u32::MAX), 0);
+        assert_eq!(p.quotas[0], 0, "unlimited");
+    }
+
+    #[test]
+    fn merged_pairs_adjacent_buckets() {
+        let p = BucketPlan::geometric(32, 4, 3);
+        let m = p.merged();
+        assert_eq!(m.n(), 2);
+        assert_eq!(&m.ceilings[..2], &[64, u32::MAX]);
+        assert_eq!(&m.quotas[..2], &[6, 6], "quotas add pairwise");
+        let top = m.merged();
+        assert_eq!(top.n(), 1);
+        assert_eq!(top.ceilings[0], u32::MAX);
+        assert_eq!(top.merged(), top, "one bucket is a fixed point");
+        // Odd bucket counts: the dangling bucket carries over alone.
+        let odd = BucketPlan::geometric(32, 3, 1).merged();
+        assert_eq!(odd.n(), 2);
+        assert_eq!(&odd.quotas[..2], &[2, 1]);
+        // 0 = unlimited absorbs in a pair.
+        let mut z = BucketPlan::geometric(32, 2, 5);
+        z.quotas[1] = 0;
+        assert_eq!(z.merged().quotas[0], 0);
+    }
+
+    #[test]
+    fn merge_quotas_treats_zero_as_unlimited() {
+        let mut a = BucketPlan::geometric(64, 2, 4);
+        let mut b = BucketPlan::geometric(99, 2, 6);
+        a.quotas[1] = 0;
+        b.quotas[0] = 0;
+        let lo = BucketPlan::merge_quotas(&a, &b, u32::min);
+        assert_eq!(&lo.ceilings[..2], &[64, u32::MAX],
+                   "first part owns the boundaries");
+        assert_eq!(&lo.quotas[..2], &[4, 6], "min(q, unlimited) = q");
+        let hi = BucketPlan::merge_quotas(&a, &b, u32::max);
+        assert_eq!(&hi.quotas[..2], &[0, 0], "max(q, unlimited) = unlimited");
+    }
+
+    #[test]
+    fn controller_attaches_plan_and_merges_under_pressure() {
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::StaticFixed { batch: 8 },
+            buckets: 4,
+            bucket_base: 64,
+            bucket_dwell: 2,
+            ..SchedulerConfig::default()
+        };
+        let mut c = build_controller(&cfg);
+        assert!(c.label().ends_with("+buckets"), "{}", c.label());
+        let calm = Observation::synthetic(100_000, 10_000, 4, 1);
+        let hot = Observation::synthetic(100_000, 95_000, 4, 1);
+        let d = c.decide(&calm);
+        let plan = d.bucket_plan.expect("plan attached");
+        assert_eq!(plan.n(), 4, "base plan at low pressure");
+        assert_eq!(d.target_batch, 8, "inner directive passes through");
+        // One hot decision is not enough (dwell = 2)...
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 4);
+        // ...the second consecutive one merges a level.
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 2);
+        // Pressure still high: dwell restarts toward the next level.
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 2);
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 1);
+        // Calm again: split back one level per dwell window.
+        assert_eq!(c.decide(&calm).bucket_plan.unwrap().n(), 1);
+        assert_eq!(c.decide(&calm).bucket_plan.unwrap().n(), 2);
+    }
+
+    #[test]
+    fn direction_flip_resets_dwell() {
+        let base = BucketPlan::geometric(64, 4, 0);
+        let inner = build_controller(&SchedulerConfig {
+            policy: PolicyKind::StaticFixed { batch: 8 },
+            ..SchedulerConfig::default()
+        });
+        let mut c = BucketedController::new(inner, base, 2, 0.85, 0.60);
+        let hot = Observation::synthetic(100_000, 95_000, 4, 1);
+        let mid = Observation::synthetic(100_000, 70_000, 4, 1);
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 4);
+        // The band interior breaks the streak; the next hot decision
+        // starts a fresh dwell instead of completing the old one.
+        assert_eq!(c.decide(&mid).bucket_plan.unwrap().n(), 4);
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 4);
+        assert_eq!(c.decide(&hot).bucket_plan.unwrap().n(), 2);
+    }
+}

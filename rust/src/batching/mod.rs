@@ -21,10 +21,14 @@
 //!   the min over binding classes).
 //! * [`chunk`] — the PD-fusion adaptive chunk-size controller, attached
 //!   to any controller via [`ChunkedController`].
+//! * [`bucket`] — shape-aware bucketed batching: the [`BucketPlan`]
+//!   carried on [`Directive::bucket_plan`] and the pressure-adaptive
+//!   [`BucketedController`] wrapper.
 //! * combinators — [`MinOf`] (`b*_t = min(b_mem, b_SLA)`, the paper's
 //!   combined controller), [`MaxOf`], and [`ClassWeighted`] (blend by
 //!   priority-class backlog).
 
+pub mod bucket;
 pub mod chunk;
 pub mod memory_aware;
 pub mod sla;
@@ -35,6 +39,7 @@ use crate::config::{PolicyKind, SchedulerConfig};
 use crate::request::PriorityClass;
 use crate::telemetry::Observation;
 
+pub use bucket::{BucketPlan, BucketedController, MAX_BUCKETS};
 pub use chunk::ChunkController;
 pub use memory_aware::{MemoryAwarePolicy, MemoryAwareVariant};
 pub use sla::{PerClassSlaPolicy, SlaFeedbackPolicy};
@@ -80,6 +85,11 @@ pub struct Directive {
     /// share without touching the others. Weights are clamped to ≥ 1 at
     /// the consumer, so no class can be starved outright.
     pub class_weights: Option<[u32; PriorityClass::COUNT]>,
+    /// Prompt-length bucketing for admission and prefill planning
+    /// ([`BucketPlan`]); `None` (the default) keeps the scheduler's
+    /// exact unbucketed order — every pre-bucketing anchor is pinned
+    /// against that path. Emitted by [`BucketedController`].
+    pub bucket_plan: Option<BucketPlan>,
 }
 
 impl Directive {
@@ -92,6 +102,7 @@ impl Directive {
             prefill_chunk: None,
             swap_hint: SwapHint::Auto,
             class_weights: None,
+            bucket_plan: None,
         }
     }
 }
@@ -104,8 +115,10 @@ pub trait Controller: Send {
 
 /// Instantiate the controller stack named by the config: the policy (or
 /// combinator tree) from `cfg.policy`, wrapped with chunked-prefill
-/// sizing when `cfg.chunk_tokens` is set, and with the memory-pressure
-/// swap heuristic when `cfg.swap_pressure` is set.
+/// sizing when `cfg.chunk_tokens` is set, with the memory-pressure swap
+/// heuristic when `cfg.swap_pressure` is set, and with bucketed-batching
+/// plans when `cfg.buckets` > 0 (outermost, so the plan rides every
+/// resolved directive).
 pub fn build_controller(cfg: &SchedulerConfig) -> Box<dyn Controller> {
     let base = build_kind(cfg, &cfg.policy);
     let base = match cfg.chunk_tokens {
@@ -114,8 +127,14 @@ pub fn build_controller(cfg: &SchedulerConfig) -> Box<dyn Controller> {
         }
         None => base,
     };
-    if cfg.swap_pressure {
+    let base = if cfg.swap_pressure {
         Box::new(SwapPressureController::from_cfg(cfg, base))
+            as Box<dyn Controller>
+    } else {
+        base
+    };
+    if cfg.buckets > 0 {
+        Box::new(BucketedController::from_cfg(cfg, base))
     } else {
         base
     }
@@ -160,6 +179,9 @@ fn build_kind(cfg: &SchedulerConfig, kind: &PolicyKind)
         PolicyKind::PerClassSla(targets) => {
             Box::new(PerClassSlaPolicy::new(cfg, *targets))
         }
+        PolicyKind::PerClassSlaTtft { decode, ttft } => {
+            Box::new(PerClassSlaPolicy::with_ttft(cfg, *decode, *ttft))
+        }
     }
 }
 
@@ -168,7 +190,9 @@ fn build_kind(cfg: &SchedulerConfig, kind: &PolicyKind)
 /// (strictest wins — a greedy baseline combined with a dynamic policy
 /// must not bypass the gate); the first non-`Auto` swap hint wins; class
 /// admission weights resolve elementwise with `pick` when two parts both
-/// emit them (the only emitting part wins otherwise).
+/// emit them (the only emitting part wins otherwise); bucket plans merge
+/// quotas elementwise the same way, the first emitter owning the
+/// boundaries ([`BucketPlan::merge_quotas`]).
 fn combine(parts: &[Directive], pick: fn(u32, u32) -> u32) -> Directive {
     let mut it = parts.iter();
     let mut out = *it.next().expect("combinators need >= 1 part");
@@ -190,6 +214,15 @@ fn combine(parts: &[Directive], pick: fn(u32, u32) -> u32) -> Directive {
         out.class_weights = match (out.class_weights, d.class_weights) {
             (Some(a), Some(b)) => {
                 Some(std::array::from_fn(|i| pick(a[i], b[i])))
+            }
+            (a, b) => a.or(b),
+        };
+        out.bucket_plan = match (out.bucket_plan, d.bucket_plan) {
+            // Quotas merge elementwise like `class_weights` (0 =
+            // unlimited is treated as infinity by `pick`); the first
+            // emitting part owns the bucket boundaries.
+            (Some(a), Some(b)) => {
+                Some(BucketPlan::merge_quotas(&a, &b, pick))
             }
             (a, b) => a.or(b),
         };
@@ -540,6 +573,58 @@ mod tests {
         assert_eq!(d.admission, AdmissionMode::Gated);
         assert!(c.label().contains("per-class-sla(interactive=50)"),
                 "{}", c.label());
+    }
+
+    #[test]
+    fn bucket_plans_merge_through_the_combinators() {
+        // MinOf/MaxOf/ClassWeighted must merge bucket quotas elementwise
+        // like `class_weights`: both-emitting parts resolve with the
+        // combinator's pick (0 = unlimited behaving as infinity), a lone
+        // emitter propagates untouched.
+        struct Fixed(Directive);
+        impl Controller for Fixed {
+            fn decide(&mut self, _obs: &Observation) -> Directive {
+                self.0
+            }
+            fn label(&self) -> String {
+                "fixed".into()
+            }
+        }
+        let mut a = BucketPlan::geometric(64, 2, 4);
+        let mut b = BucketPlan::geometric(99, 2, 6);
+        a.quotas[1] = 0;
+        b.quotas[0] = 0;
+        let da = Directive {
+            bucket_plan: Some(a),
+            ..Directive::gated(8)
+        };
+        let db = Directive {
+            bucket_plan: Some(b),
+            ..Directive::gated(16)
+        };
+        let obs = Observation::synthetic(100_000, 0, 4, 1);
+        let part =
+            |d: Directive| Box::new(Fixed(d)) as Box<dyn Controller>;
+
+        let d = MinOf::new(vec![part(da), part(db)]).decide(&obs);
+        let p = d.bucket_plan.expect("merged plan propagates");
+        assert_eq!(&p.ceilings[..2], &[64, u32::MAX],
+                   "first emitter owns the boundaries");
+        assert_eq!(&p.quotas[..2], &[4, 6], "min with unlimited = finite");
+        assert_eq!(d.target_batch, 8);
+
+        let d = MaxOf::new(vec![part(da), part(db)]).decide(&obs);
+        assert_eq!(&d.bucket_plan.unwrap().quotas[..2], &[0, 0],
+                   "max with unlimited = unlimited");
+
+        let d = ClassWeighted::new(vec![part(da), part(db)]).decide(&obs);
+        assert_eq!(&d.bucket_plan.unwrap().quotas[..2], &[4, 6],
+                   "class-weighted folds fields with min");
+
+        // Only one part emits a plan: it wins verbatim through min.
+        let d = MinOf::new(vec![part(Directive::gated(8)), part(db)])
+            .decide(&obs);
+        assert_eq!(d.bucket_plan, Some(b), "lone emitter propagates");
     }
 
     #[test]

@@ -25,7 +25,7 @@
 //!   moves.
 
 use super::{Controller, Directive};
-use crate::config::{format_sla_targets, SchedulerConfig};
+use crate::config::{format_class_sla_targets, SchedulerConfig};
 use crate::request::PriorityClass;
 use crate::telemetry::Observation;
 
@@ -157,8 +157,20 @@ const WEIGHT_SCALE: u32 = 16;
 /// (`per-class-sla(interactive=50,batch=none)`); compose it with
 /// Algorithm 1 as `min(alg1,per-class-sla(...))` for the paper's combined
 /// controller with per-class targets.
+///
+/// A class may additionally carry a **TTFT target**
+/// (`interactive=250@ttft`, built from
+/// [`PolicyKind::PerClassSlaTtft`](crate::config::PolicyKind)): when the
+/// class's live attributed TTFT ([`Observation::ttft_by_class`]) exceeds
+/// the target, its admission share is *boosted* (capped at 4× base,
+/// proportional to the violation ratio) so the weighted-round-robin
+/// picker admits that class's prefills sooner. TTFT violations pull in
+/// the opposite direction from decode-latency violations — a starving
+/// class needs more admission, not less — and the boost always wins over
+/// a concurrent decode-driven shrink (`max` of the two).
 pub struct PerClassSlaPolicy {
     targets: [Option<f64>; PriorityClass::COUNT],
+    ttft_targets: [Option<f64>; PriorityClass::COUNT],
     /// One Algorithm-2 search window per class, index-aligned with
     /// [`PriorityClass::rank`]; unconstrained classes hold a degenerate
     /// loop that always returns `B_max`.
@@ -170,6 +182,15 @@ pub struct PerClassSlaPolicy {
 impl PerClassSlaPolicy {
     pub fn new(cfg: &SchedulerConfig,
                targets: [Option<f64>; PriorityClass::COUNT]) -> Self {
+        Self::with_ttft(cfg, targets, [None; PriorityClass::COUNT])
+    }
+
+    /// Like [`Self::new`] but with per-class TTFT targets alongside the
+    /// decode-latency targets.
+    pub fn with_ttft(cfg: &SchedulerConfig,
+                     targets: [Option<f64>; PriorityClass::COUNT],
+                     ttft_targets: [Option<f64>; PriorityClass::COUNT])
+                     -> Self {
         let loops = targets
             .iter()
             .map(|t| {
@@ -180,6 +201,7 @@ impl PerClassSlaPolicy {
             .collect();
         PerClassSlaPolicy {
             targets,
+            ttft_targets,
             loops,
             eps_d: cfg.eps_d,
             b_max: cfg.b_max,
@@ -189,6 +211,11 @@ impl PerClassSlaPolicy {
     /// The decode-latency target for the class with rank `rank`, if any.
     pub fn class_target(&self, rank: usize) -> Option<f64> {
         self.targets[rank]
+    }
+
+    /// The TTFT target for the class with rank `rank`, if any.
+    pub fn class_ttft_target(&self, rank: usize) -> Option<f64> {
+        self.ttft_targets[rank]
     }
 }
 
@@ -224,13 +251,31 @@ impl Controller for PerClassSlaPolicy {
                     .max(1);
             }
         }
+        // TTFT loop: a class whose live attributed TTFT exceeds its
+        // target is *starving at admission* — boost its share
+        // (proportional to the violation ratio, capped at 4× base). The
+        // boost wins over any decode-driven shrink above: a class that is
+        // both slow to start and slow to decode still needs to start.
+        for c in PriorityClass::ALL {
+            let rank = c.rank();
+            let Some(t_c) = self.ttft_targets[rank] else { continue };
+            let Some(m) = obs.ttft_by_class[rank] else { continue };
+            if m > t_c {
+                let base = c.weight() * WEIGHT_SCALE;
+                let ratio = (m / t_c).min(4.0);
+                let boosted = (base as f64 * ratio) as u32;
+                weights[rank] = weights[rank].max(boosted);
+            }
+        }
         let mut d = Directive::gated(target.max(1));
         d.class_weights = Some(weights);
         d
     }
 
     fn label(&self) -> String {
-        format!("per-class-sla({})", format_sla_targets(&self.targets))
+        format!("per-class-sla({})",
+                format_class_sla_targets(&self.targets,
+                                         &self.ttft_targets))
     }
 }
 
@@ -423,6 +468,64 @@ mod tests {
                    PolicyKind::PerClassSla([Some(0.05), None, Some(0.5)]));
         assert_eq!(p.class_target(0), Some(0.05));
         assert_eq!(p.class_target(1), None);
+    }
+
+    #[test]
+    fn ttft_violation_boosts_admission_share() {
+        let mut p = PerClassSlaPolicy::with_ttft(
+            &cfg(0.05),
+            [None, None, None],
+            [Some(0.25), None, None],
+        );
+        // Under target: base shares, untouched.
+        let mut o = obs_classed([None, None, None], 64.0);
+        o.ttft_by_class = [Some(0.10), None, None];
+        let w = p.decide(&o).class_weights.unwrap();
+        assert_eq!(w, [8 * 16, 3 * 16, 16], "under target → base shares");
+        // 2× over target: the share doubles.
+        o.ttft_by_class = [Some(0.50), None, None];
+        let w = p.decide(&o).class_weights.unwrap();
+        assert_eq!(w[0], 2 * 8 * 16, "2× violation doubles the share");
+        assert_eq!(w[1], 3 * 16, "other classes keep base shares");
+        // Extreme violation: the boost caps at 4× base.
+        o.ttft_by_class = [Some(25.0), None, None];
+        let w = p.decide(&o).class_weights.unwrap();
+        assert_eq!(w[0], 4 * 8 * 16, "boost caps at 4× base");
+    }
+
+    #[test]
+    fn ttft_boost_wins_over_decode_shrink() {
+        // The class is both violating its decode target (→ shrink) and
+        // its TTFT target (→ boost): the boost must win, because a class
+        // that never starts can never stop violating.
+        let mut p = PerClassSlaPolicy::with_ttft(
+            &cfg(0.05),
+            [Some(0.05), None, None],
+            [Some(0.25), None, None],
+        );
+        let mut o = obs_classed([Some(0.2), None, None], 64.0);
+        o.ttft_by_class = [Some(10.0), None, None];
+        let w = p.decide(&o).class_weights.unwrap();
+        assert_eq!(w[0], 4 * 8 * 16, "boost beats the decode shrink");
+    }
+
+    #[test]
+    fn per_class_ttft_label_roundtrips_through_policy_kind() {
+        use crate::config::PolicyKind;
+        let p = PerClassSlaPolicy::with_ttft(
+            &cfg(0.05),
+            [Some(0.05), None, None],
+            [Some(0.25), None, None],
+        );
+        assert_eq!(p.label(),
+                   "per-class-sla(interactive=50,interactive=250@ttft)");
+        assert_eq!(PolicyKind::parse(&p.label()).unwrap(),
+                   PolicyKind::PerClassSlaTtft {
+                       decode: [Some(0.05), None, None],
+                       ttft: [Some(0.25), None, None],
+                   });
+        assert_eq!(p.class_ttft_target(0), Some(0.25));
+        assert_eq!(p.class_ttft_target(1), None);
     }
 
     #[test]

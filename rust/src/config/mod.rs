@@ -236,22 +236,46 @@ pub enum PolicyKind {
     /// `per-class-sla(interactive=50,batch=500)`. See
     /// `batching::PerClassSlaPolicy`.
     PerClassSla([Option<f64>; PriorityClass::COUNT]),
+    /// [`Self::PerClassSla`] plus per-class *time-to-first-token*
+    /// targets: entries with an `@ttft` suffix
+    /// (`per-class-sla(interactive=50,interactive=250@ttft)`) constrain
+    /// TTFT instead of decode latency. The policy boosts a
+    /// TTFT-violating class's prefill-admission share off the live
+    /// `Observation::ttft_by_class` signal (see
+    /// `batching::PerClassSlaPolicy::with_ttft`). Parsing produces this
+    /// variant only when at least one `@ttft` entry is present, so
+    /// decode-only labels round-trip through [`Self::PerClassSla`]
+    /// unchanged.
+    PerClassSlaTtft {
+        decode: [Option<f64>; PriorityClass::COUNT],
+        ttft: [Option<f64>; PriorityClass::COUNT],
+    },
 }
 
 /// Parse a per-class SLA target list — `class=ms` entries separated by
 /// commas, `none` for an explicitly unconstrained class, unnamed classes
-/// unconstrained. Shared by [`PolicyKind::parse`] and the
-/// `dynabatch sla --targets` CLI.
-pub fn parse_sla_targets(s: &str)
-                         -> Result<[Option<f64>; PriorityClass::COUNT]> {
-    let mut targets = [None; PriorityClass::COUNT];
+/// unconstrained, and a `@ttft` suffix marking a time-to-first-token
+/// target (`interactive=50,interactive=250@ttft`). Returns the decode
+/// targets and the TTFT targets (both seconds, indexed by
+/// [`PriorityClass::rank`]). Shared by [`PolicyKind::parse`] and the
+/// CLI target options.
+pub fn parse_class_sla_targets(
+    s: &str,
+) -> Result<([Option<f64>; PriorityClass::COUNT],
+             [Option<f64>; PriorityClass::COUNT])> {
+    let mut decode = [None; PriorityClass::COUNT];
+    let mut ttft = [None; PriorityClass::COUNT];
     for part in s.split(',').filter(|p| !p.trim().is_empty()) {
         let (class, value) = part
             .split_once('=')
             .with_context(|| format!("want class=ms in '{part}'"))?;
         let rank = PriorityClass::parse(class)?.rank();
         let value = value.trim();
-        targets[rank] = if value.eq_ignore_ascii_case("none")
+        let (value, is_ttft) = match value.strip_suffix("@ttft") {
+            Some(v) => (v.trim(), true),
+            None => (value, false),
+        };
+        let target = if value.eq_ignore_ascii_case("none")
             || value == "inf"
         {
             None
@@ -261,24 +285,57 @@ pub fn parse_sla_targets(s: &str)
                 .with_context(|| format!("bad SLA target '{value}' ms"))?;
             Some(ms / 1e3)
         };
+        if is_ttft {
+            ttft[rank] = target;
+        } else {
+            decode[rank] = target;
+        }
     }
-    Ok(targets)
+    Ok((decode, ttft))
 }
 
-/// Render per-class SLA targets as the canonical `class=ms` list (only
-/// constrained classes appear; values in milliseconds at µs precision so
-/// labels round-trip through [`parse_sla_targets`]).
+/// [`parse_class_sla_targets`] restricted to decode targets — rejects
+/// `@ttft` entries. Kept for call sites that only consume decode
+/// targets (e.g. `dynabatch sla --targets`).
+pub fn parse_sla_targets(s: &str)
+                         -> Result<[Option<f64>; PriorityClass::COUNT]> {
+    let (decode, ttft) = parse_class_sla_targets(s)?;
+    if ttft.iter().any(|t| t.is_some()) {
+        bail!("@ttft targets are not valid here (decode targets only)");
+    }
+    Ok(decode)
+}
+
+/// Render per-class decode + TTFT SLA targets as the canonical
+/// `class=ms[,class=ms@ttft]` list (only constrained classes appear;
+/// decode entries first, then TTFT entries; values in milliseconds at
+/// µs precision so labels round-trip through
+/// [`parse_class_sla_targets`]).
+pub fn format_class_sla_targets(
+    decode: &[Option<f64>; PriorityClass::COUNT],
+    ttft: &[Option<f64>; PriorityClass::COUNT],
+) -> String {
+    let ms = |d: f64| (d * 1e6).round() / 1e3;
+    let mut parts: Vec<String> = Vec::new();
+    for c in PriorityClass::ALL.iter() {
+        if let Some(d) = decode[c.rank()] {
+            parts.push(format!("{}={}", c.label(), ms(d)));
+        }
+    }
+    for c in PriorityClass::ALL.iter() {
+        if let Some(d) = ttft[c.rank()] {
+            parts.push(format!("{}={}@ttft", c.label(), ms(d)));
+        }
+    }
+    parts.join(",")
+}
+
+/// Render per-class decode SLA targets as the canonical `class=ms` list
+/// (only constrained classes appear; values in milliseconds at µs
+/// precision so labels round-trip through [`parse_sla_targets`]).
 pub fn format_sla_targets(targets: &[Option<f64>; PriorityClass::COUNT])
                           -> String {
-    PriorityClass::ALL
-        .iter()
-        .filter_map(|c| {
-            targets[c.rank()].map(|d| {
-                format!("{}={}", c.label(), (d * 1e6).round() / 1e3)
-            })
-        })
-        .collect::<Vec<_>>()
-        .join(",")
+    format_class_sla_targets(targets, &[None; PriorityClass::COUNT])
 }
 
 impl PolicyKind {
@@ -294,7 +351,12 @@ impl PolicyKind {
             let inner = rest
                 .strip_suffix(')')
                 .with_context(|| format!("unbalanced parens in '{s}'"))?;
-            return Ok(PolicyKind::PerClassSla(parse_sla_targets(inner)?));
+            let (decode, ttft) = parse_class_sla_targets(inner)?;
+            return Ok(if ttft.iter().all(|t| t.is_none()) {
+                PolicyKind::PerClassSla(decode)
+            } else {
+                PolicyKind::PerClassSlaTtft { decode, ttft }
+            });
         }
         for (prefix, build) in [
             ("min(", PolicyKind::Min as fn(Vec<PolicyKind>) -> PolicyKind),
@@ -348,6 +410,10 @@ impl PolicyKind {
             PolicyKind::PerClassSla(t) => {
                 format!("per-class-sla({})", format_sla_targets(t))
             }
+            PolicyKind::PerClassSlaTtft { decode, ttft } => {
+                format!("per-class-sla({})",
+                        format_class_sla_targets(decode, ttft))
+            }
         }
     }
 
@@ -372,6 +438,7 @@ impl PolicyKind {
                               -> Option<[Option<f64>; PriorityClass::COUNT]> {
         match self {
             PolicyKind::PerClassSla(t) => Some(*t),
+            PolicyKind::PerClassSlaTtft { decode, .. } => Some(*decode),
             PolicyKind::Min(parts)
             | PolicyKind::Max(parts)
             | PolicyKind::ClassWeighted(parts) => {
@@ -416,16 +483,23 @@ impl PolicyKind {
                 Ok(())
             }
             PolicyKind::PerClassSla(targets) => {
-                if targets.iter().all(|t| t.is_none()) {
+                validate_class_targets(targets, "per-class-sla")
+            }
+            PolicyKind::PerClassSlaTtft { decode, ttft } => {
+                if decode.iter().chain(ttft).all(|t| t.is_none()) {
                     bail!("per-class-sla needs at least one \
                            constrained class");
                 }
-                for (c, t) in PriorityClass::ALL.iter().zip(targets) {
-                    if let Some(d) = t {
-                        if !d.is_finite() || *d <= 0.0 {
-                            bail!("per-class-sla target for {} must be a \
-                                   positive number of ms",
-                                  c.label());
+                for (label, targets) in
+                    [("per-class-sla", decode), ("per-class-sla@ttft", ttft)]
+                {
+                    for (c, t) in PriorityClass::ALL.iter().zip(targets) {
+                        if let Some(d) = t {
+                            if !d.is_finite() || *d <= 0.0 {
+                                bail!("{label} target for {} must be a \
+                                       positive number of ms",
+                                      c.label());
+                            }
                         }
                     }
                 }
@@ -434,6 +508,26 @@ impl PolicyKind {
             _ => Ok(()),
         }
     }
+}
+
+/// Shared target-array validation: at least one constrained class, and
+/// every present target a positive finite number.
+fn validate_class_targets(
+    targets: &[Option<f64>; PriorityClass::COUNT], what: &str,
+) -> Result<()> {
+    if targets.iter().all(|t| t.is_none()) {
+        bail!("{what} needs at least one constrained class");
+    }
+    for (c, t) in PriorityClass::ALL.iter().zip(targets) {
+        if let Some(d) = t {
+            if !d.is_finite() || *d <= 0.0 {
+                bail!("{what} target for {} must be a \
+                       positive number of ms",
+                      c.label());
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Split `a,b,c` on commas not nested inside parentheses.
@@ -507,6 +601,32 @@ pub struct SchedulerConfig {
     /// under pressure. Off by default — the scheduler is then
     /// bit-identical to the no-sharing one.
     pub prefix_cache: bool,
+    /// Shape-aware bucketed batching: number of prompt-length buckets
+    /// (`batching::BucketPlan::geometric`) the controller stack attaches
+    /// to every directive; 0 (the default) disables bucketing — the
+    /// scheduler then keeps its exact unbucketed admission and planning
+    /// order. Capped at `batching::MAX_BUCKETS`.
+    pub buckets: u32,
+    /// First bucket's prompt-length ceiling in tokens; each following
+    /// bucket doubles it (geometric boundaries).
+    pub bucket_base: u32,
+    /// Per-bucket admission quota — new requests of one bucket admitted
+    /// per step (0 = unlimited).
+    pub bucket_quota: u32,
+    /// Decisions a KV-pressure lean must persist before the bucket plan
+    /// merges or splits a level (dwell hysteresis).
+    pub bucket_dwell: u32,
+    /// KV-utilization at or above which the plan leans toward merging
+    /// buckets (coarser plan keeps step groups full under pressure).
+    pub bucket_high: f64,
+    /// KV-utilization at or below which the plan leans back toward the
+    /// base (finer) plan; must sit strictly below `bucket_high`.
+    pub bucket_low: f64,
+    /// Charge prefill steps for padded (per-group rectangular-kernel
+    /// ceiling) tokens instead of real tokens in the simulated cost
+    /// model, and account the waste in telemetry. Off by default — the
+    /// engine arithmetic is then bit-identical to the pre-padding one.
+    pub padded_prefill: bool,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -537,6 +657,13 @@ impl Default for SchedulerConfig {
             swap_high_water: 0.90,
             swap_low_water: 0.70,
             prefix_cache: false,
+            buckets: 0,
+            bucket_base: 64,
+            bucket_quota: 0,
+            bucket_dwell: 4,
+            bucket_high: 0.85,
+            bucket_low: 0.60,
+            padded_prefill: false,
         }
     }
 }
@@ -569,6 +696,25 @@ impl SchedulerConfig {
                 self.swap_low_water,
                 self.swap_high_water
             );
+        }
+        if self.buckets > 0 {
+            if self.buckets as usize > crate::batching::MAX_BUCKETS {
+                bail!("buckets must be <= {}",
+                      crate::batching::MAX_BUCKETS);
+            }
+            if self.bucket_base == 0 {
+                bail!("bucket_base must be positive");
+            }
+            if !(0.0 < self.bucket_low
+                && self.bucket_low < self.bucket_high
+                && self.bucket_high <= 1.0)
+            {
+                bail!(
+                    "bucket watermarks need 0 < low ({}) < high ({}) <= 1",
+                    self.bucket_low,
+                    self.bucket_high
+                );
+            }
         }
         Ok(())
     }
@@ -1019,6 +1165,62 @@ mod tests {
         assert!(PolicyKind::PerClassSla([Some(-0.05), None, None])
             .validate()
             .is_err());
+    }
+
+    #[test]
+    fn per_class_sla_ttft_parse_label_and_validation() {
+        // An @ttft entry promotes the parse to the TTFT-aware variant.
+        let p = PolicyKind::parse(
+            "per-class-sla(interactive=50,interactive=250@ttft)",
+        )
+        .unwrap();
+        assert_eq!(
+            p,
+            PolicyKind::PerClassSlaTtft {
+                decode: [Some(0.05), None, None],
+                ttft: [Some(0.25), None, None],
+            }
+        );
+        assert_eq!(p.label(),
+                   "per-class-sla(interactive=50,interactive=250@ttft)");
+        assert_eq!(PolicyKind::parse(&p.label()).unwrap(), p,
+                   "label round-trips");
+        p.validate().unwrap();
+        // TTFT-only target sets are valid too.
+        let q =
+            PolicyKind::parse("per-class-sla(batch=2000@ttft)").unwrap();
+        assert_eq!(
+            q,
+            PolicyKind::PerClassSlaTtft {
+                decode: [None; 3],
+                ttft: [None, None, Some(2.0)],
+            }
+        );
+        q.validate().unwrap();
+        assert_eq!(PolicyKind::parse(&q.label()).unwrap(), q);
+        // Decode-only strings keep producing the plain variant, so
+        // pre-TTFT labels and stored policies are untouched.
+        assert!(matches!(
+            PolicyKind::parse("per-class-sla(interactive=50)").unwrap(),
+            PolicyKind::PerClassSla(_)
+        ));
+        // The decode half feeds metrics attribution; TTFT does not.
+        assert_eq!(p.sla_targets(None), [Some(0.05), None, None]);
+        // Validation: all-unconstrained and non-positive targets fail.
+        assert!(PolicyKind::PerClassSlaTtft {
+            decode: [None; 3],
+            ttft: [None; 3],
+        }
+        .validate()
+        .is_err());
+        assert!(PolicyKind::PerClassSlaTtft {
+            decode: [None; 3],
+            ttft: [Some(-1.0), None, None],
+        }
+        .validate()
+        .is_err());
+        // parse_sla_targets (decode-only call sites) rejects @ttft.
+        assert!(parse_sla_targets("interactive=50@ttft").is_err());
     }
 
     #[test]

@@ -163,14 +163,14 @@ pub fn run_sim_with_requests(scenario: &SimScenario,
         scenario.sched.clone(),
         scenario.eta_tokens(),
         scenario.swap_tokens,
-        scenario.workload.prompt.mean(),
+        scenario.workload.prompt_mean(),
         scenario.workload.output.mean(),
     );
     // Experiment path: keep exact full-run traces (the serve path keeps
     // the bounded rings instead).
     sched.retain_full_traces();
     sched.telemetry.set_prior_variances(
-        scenario.workload.prompt.variance(),
+        scenario.workload.prompt_variance(),
         scenario.workload.output.variance(),
     );
     let mut clock = VirtualClock::new();
@@ -205,6 +205,11 @@ pub fn run_sim_with_requests(scenario: &SimScenario,
     );
     if sched.kv.prefix_enabled() {
         m.prefix_hit_rate = Some(sched.kv.prefix_hit_rate());
+    }
+    if scenario.sched.padded_prefill {
+        m.padded_prefill_tokens =
+            Some(sched.telemetry.prefill_padded_tokens());
+        m.padding_waste = Some(sched.telemetry.padding_waste());
     }
     Ok(m)
 }
@@ -292,12 +297,12 @@ pub fn run_replica_sim(scenario: &SimScenario, n_replicas: usize,
                 scenario.sched.clone(),
                 scenario.eta_tokens(),
                 scenario.swap_tokens,
-                scenario.workload.prompt.mean(),
+                scenario.workload.prompt_mean(),
                 scenario.workload.output.mean(),
             );
             sched.retain_full_traces();
             sched.telemetry.set_prior_variances(
-                scenario.workload.prompt.variance(),
+                scenario.workload.prompt_variance(),
                 scenario.workload.output.variance(),
             );
             SimReplica {
@@ -975,12 +980,12 @@ pub fn run_chaos_sim(scenario: &SimScenario, n_replicas: usize,
                 scenario.sched.clone(),
                 scenario.eta_tokens(),
                 scenario.swap_tokens,
-                scenario.workload.prompt.mean(),
+                scenario.workload.prompt_mean(),
                 scenario.workload.output.mean(),
             );
             sched.retain_full_traces();
             sched.telemetry.set_prior_variances(
-                scenario.workload.prompt.variance(),
+                scenario.workload.prompt_variance(),
                 scenario.workload.output.variance(),
             );
             SimReplica {
@@ -1229,12 +1234,12 @@ fn mk_fleet_replica(scenario: &SimScenario, profile: &ReplicaProfile,
         scenario.sched.clone(),
         eta,
         scenario.swap_tokens,
-        scenario.workload.prompt.mean(),
+        scenario.workload.prompt_mean(),
         scenario.workload.output.mean(),
     );
     sched.retain_full_traces();
     sched.telemetry.set_prior_variances(
-        scenario.workload.prompt.variance(),
+        scenario.workload.prompt_variance(),
         scenario.workload.output.variance(),
     );
     let engine = if profile.is_neutral() {
@@ -1701,6 +1706,7 @@ pub fn switch_sweep(scenario: &SimScenario, to: PolicyKind,
                     .wrapping_mul(0x9e37_79b9)
                     .wrapping_add(spike_n as u64),
                 prefix: None,
+                length_mix: None,
             };
             let base_n = requests.len() as u64;
             let mut spike = spike_w.generate();
@@ -1958,12 +1964,88 @@ pub fn prefix_capacity(scenario: &SimScenario, d_sla: f64, eps_d: f64,
     Ok(PrefixCapacityResult { baseline, shared, ratio })
 }
 
+/// Outcome of the bucketed-batching regression ([`bucket_compare`],
+/// the `dynabatch bucket` subcommand): the same long-tail workload run
+/// twice under rectangular-kernel padding accounting — flat admission
+/// (every prefill group padded to the step maximum) vs length-bucketed
+/// admission (padded only to each bucket's ceiling).
+#[derive(Debug, Clone)]
+pub struct BucketCompareResult {
+    /// Flat (unbucketed) run, `padded_prefill` accounting on.
+    pub flat: RunMetrics,
+    /// Bucketed run — same seed, same accounting, `sched.buckets` on.
+    pub bucketed: RunMetrics,
+    /// `bucketed.throughput / flat.throughput` (0.0 when the flat run
+    /// moved nothing).
+    pub ratio: f64,
+}
+
+impl BucketCompareResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("flat_throughput_tok_s", Json::Num(self.flat.throughput)),
+            (
+                "bucketed_throughput_tok_s",
+                Json::Num(self.bucketed.throughput),
+            ),
+            ("ratio", Json::Num(self.ratio)),
+            (
+                "flat_padding_waste",
+                self.flat
+                    .padding_waste
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "bucketed_padding_waste",
+                self.bucketed
+                    .padding_waste
+                    .map(Json::Num)
+                    .unwrap_or(Json::Null),
+            ),
+            ("flat", self.flat.to_json()),
+            ("bucketed", self.bucketed.to_json()),
+        ])
+    }
+}
+
+/// Throughput with and without length-bucketed admission on the
+/// scenario's workload: two [`run_sim`]s differing only in
+/// `sched.buckets` (the flat arm forces it to 0), both with
+/// `padded_prefill` rectangular-kernel accounting on so the padding
+/// cost the buckets exist to kill is actually charged. Same seed, same
+/// admission (bucket quotas stay as configured — leave
+/// `bucket_quota = 0` for an apples-to-apples comparison where only
+/// the kernel grouping differs). Errors unless the scenario enables
+/// bucketing — without `sched.buckets > 0` there is nothing to
+/// compare.
+pub fn bucket_compare(scenario: &SimScenario)
+                      -> Result<BucketCompareResult> {
+    if scenario.sched.buckets == 0 {
+        bail!("bucket_compare needs sched.buckets > 0 \
+               (the bucketed arm's plan)");
+    }
+    let mut flat = scenario.clone();
+    flat.sched.buckets = 0;
+    flat.sched.padded_prefill = true;
+    let mut bkt = scenario.clone();
+    bkt.sched.padded_prefill = true;
+    let flat_m = run_sim(&flat)?;
+    let bucketed = run_sim(&bkt)?;
+    let ratio = if flat_m.throughput > 0.0 {
+        bucketed.throughput / flat_m.throughput
+    } else {
+        0.0
+    };
+    Ok(BucketCompareResult { flat: flat_m, bucketed, ratio })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets::*;
     use crate::config::{FleetConfig, PolicyKind};
-    use crate::workload::LengthDist;
+    use crate::workload::{LengthDist, LengthMix};
 
     fn scenario(policy: PolicyKind, n: usize, arrival: Arrival)
                 -> SimScenario {
@@ -1981,6 +2063,7 @@ mod tests {
                 n_requests: n,
                 seed: 5,
                 prefix: None,
+                length_mix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -2028,6 +2111,7 @@ mod tests {
                 n_requests: 300,
                 seed: 5,
                 prefix: None,
+                length_mix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -2679,6 +2763,7 @@ mod tests {
                 n_requests: 300,
                 seed: 11,
                 prefix: None,
+                length_mix: None,
             },
             eta_tokens_override: None,
             swap_tokens: 0,
@@ -2784,6 +2869,7 @@ mod tests {
                     prefix_tokens: 512,
                     zipf_s: 1.1,
                 }),
+                length_mix: None,
             },
             eta_tokens_override: Some(6_000),
             swap_tokens: 0,
@@ -2880,5 +2966,100 @@ mod tests {
         assert!(unstable, "2x overload should be unstable (ttft_p95={}, \
                 makespan={span_m}, span={span})", m.ttft_p95,
                 span_m = m.makespan);
+    }
+
+    /// The bucketing regression's traffic: 80% short chat turns (16–32
+    /// tokens), 20% long documents (~1k), everything at t=0 so flat
+    /// admission pads every short prompt up to the longest in the step.
+    /// Small outputs keep the run prefill-dominated — the regime where
+    /// padding waste decides throughput.
+    fn bucket_scenario() -> SimScenario {
+        let model = pangu_7b();
+        let hardware = node_for(&model);
+        SimScenario {
+            model,
+            hardware,
+            sched: SchedulerConfig {
+                policy: PolicyKind::StaticGreedy { max: 256 },
+                buckets: 4,
+                bucket_base: 64,
+                ..SchedulerConfig::default()
+            },
+            workload: Workload {
+                name: "bucket-mini".into(),
+                arrival: Arrival::AllAtOnce,
+                prompt: LengthDist::Fixed(128), // nominal; mix overrides
+                output: LengthDist::Fixed(8),
+                n_requests: 64,
+                seed: 17,
+                prefix: None,
+                length_mix: Some(LengthMix::bimodal(16, 32, 1024.0, 0.2,
+                                                    2048)),
+            },
+            eta_tokens_override: Some(200_000),
+            swap_tokens: 0,
+        }
+    }
+
+    #[test]
+    fn bucketed_beats_flat_on_long_tail_traffic() {
+        // The PR's headline regression: under rectangular-kernel padding
+        // accounting, length-bucketed admission must buy >= 1.15x
+        // throughput on bimodal traffic while leaving the decode path
+        // untouched.
+        let r = bucket_compare(&bucket_scenario()).unwrap();
+        assert_eq!(r.flat.n_finished, 64);
+        assert_eq!(r.bucketed.n_finished, 64);
+        assert!(r.ratio >= 1.15,
+                "bucketing must kill enough padding: ratio {:.3} \
+                 (flat {:.0} tok/s, bucketed {:.0} tok/s)",
+                r.ratio, r.flat.throughput, r.bucketed.throughput);
+        // Decode steps are identical in both arms (same admission, same
+        // batch, padding charges compute on prefill groups only), so the
+        // decode p95 matches *exactly* — bucketing must not trade TBT
+        // for throughput.
+        assert_eq!(r.flat.tbt_p95.to_bits(), r.bucketed.tbt_p95.to_bits(),
+                   "decode p95 drifted: flat {} vs bucketed {}",
+                   r.flat.tbt_p95, r.bucketed.tbt_p95);
+        // Waste accounting points the same way the throughput does.
+        let wf = r.flat.padding_waste.unwrap();
+        let wb = r.bucketed.padding_waste.unwrap();
+        assert!(wb < wf, "bucketed waste {wb} >= flat waste {wf}");
+        assert!(wf > 0.5, "flat arm must be padding-dominated: {wf}");
+    }
+
+    #[test]
+    fn bucket_compare_is_bit_identical_per_seed() {
+        let a = bucket_compare(&bucket_scenario()).unwrap();
+        let b = bucket_compare(&bucket_scenario()).unwrap();
+        assert_eq!(a.ratio.to_bits(), b.ratio.to_bits());
+        assert_eq!(a.flat.throughput.to_bits(),
+                   b.flat.throughput.to_bits());
+        assert_eq!(a.bucketed.throughput.to_bits(),
+                   b.bucketed.throughput.to_bits());
+        assert_eq!(a.bucketed.padded_prefill_tokens,
+                   b.bucketed.padded_prefill_tokens);
+        // And the result shape survives its JSON projection.
+        let j = a.to_json();
+        let s = j.to_string_pretty();
+        assert!(s.contains("\"ratio\""));
+        assert!(s.contains("\"bucketed_padding_waste\""));
+    }
+
+    #[test]
+    fn bucket_compare_requires_buckets() {
+        let mut s = bucket_scenario();
+        s.sched.buckets = 0;
+        assert!(bucket_compare(&s).is_err());
+    }
+
+    #[test]
+    fn padding_stats_absent_without_accounting() {
+        // The default path never charges padding, so the metrics report
+        // None rather than a misleading zero.
+        let s = scenario(PolicyKind::MemoryAware, 40, Arrival::AllAtOnce);
+        let m = run_sim(&s).unwrap();
+        assert_eq!(m.padded_prefill_tokens, None);
+        assert_eq!(m.padding_waste, None);
     }
 }

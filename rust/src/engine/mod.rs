@@ -73,6 +73,12 @@ pub struct StepPlan {
     /// Preemption events triggered while planning this step (each costs
     /// an iteration abort — HardwareSpec::preempt_overhead_s).
     pub preempt_events: u32,
+    /// Padded (wasted) prefill tokens this step: the gap between each
+    /// prefill group's rectangular-kernel charge (chunks × group max)
+    /// and the real token count. Zero unless the scheduler runs with
+    /// `padded_prefill` accounting on — engines add it to the compute
+    /// term only (padding burns FLOPs, not KV traffic).
+    pub prefill_padded_tokens: u64,
 }
 
 impl StepPlan {
@@ -84,6 +90,7 @@ impl StepPlan {
         self.swap_out_tokens = 0;
         self.swap_in_tokens = 0;
         self.preempt_events = 0;
+        self.prefill_padded_tokens = 0;
     }
 
     /// Append a prefill chunk, copying `tokens` (empty on the simulation
@@ -196,8 +203,10 @@ mod tests {
         assert_eq!(plan.chunk_tokens(&plan.prefills[2]), &[13, 14]);
         assert_eq!(plan.prefill_tokens(), 10);
         assert!(!plan.is_empty());
+        plan.prefill_padded_tokens = 7;
         let arena_cap = plan.tok_arena.capacity();
         plan.clear();
+        assert_eq!(plan.prefill_padded_tokens, 0, "padding reset");
         assert!(plan.is_empty());
         assert_eq!(plan.tok_arena.capacity(), arena_cap, "capacity kept");
     }

@@ -182,12 +182,18 @@ impl Engine for SimEngine {
         }
 
         let decode_tokens = plan.decodes.len() as u64;
+        // Padded (ceiling) prefill tokens burn GEMM FLOPs exactly like
+        // real ones but stream no KV — they join the compute term only.
+        // Zero when padding accounting is off, so the arithmetic below is
+        // bit-identical to the pre-padding engine.
+        let pf_tokens =
+            plan.prefill_tokens() + plan.prefill_padded_tokens;
         let compute;
         let mut elapsed = match self.profile {
             None => {
                 compute = self
                     .cost
-                    .compute_time(decode_tokens + plan.prefill_tokens());
+                    .compute_time(decode_tokens + pf_tokens);
                 self.cost.overhead
                     + self.cost.t_weights()
                     + compute
@@ -198,7 +204,7 @@ impl Engine for SimEngine {
                 // scale independently; the fixed overhead does not.
                 let dc = self.cost.compute_time(decode_tokens)
                     / decode_speed;
-                let pc = self.cost.compute_time(plan.prefill_tokens())
+                let pc = self.cost.compute_time(pf_tokens)
                     / prefill_speed;
                 compute = dc + pc;
                 self.cost.overhead
@@ -333,6 +339,23 @@ mod tests {
         // Completed prompt emits exactly one token.
         assert_eq!(out.tokens.len(), 1);
         assert_eq!(out.tokens[0].0, 1);
+    }
+
+    #[test]
+    fn padded_tokens_cost_compute_only() {
+        let mut plan = StepPlan::default();
+        plan.push_prefill(1, &[], 512, 0, true);
+        let base = engine().step_owned(&plan).unwrap().elapsed;
+        // Explicitly-zero padding is the exact same arithmetic.
+        plan.prefill_padded_tokens = 0;
+        assert_eq!(engine().step_owned(&plan).unwrap().elapsed, base);
+        // Padding to a 1024 ceiling costs exactly the compute time of
+        // the extra tokens — no KV term moves.
+        plan.prefill_padded_tokens = 512;
+        let padded = engine().step_owned(&plan).unwrap().elapsed;
+        let want = base + engine().cost_model().compute_time(512);
+        assert!((padded - want).abs() < 1e-12,
+                "padded={padded} want={want}");
     }
 
     #[test]

@@ -24,6 +24,7 @@ fn base_scenario(n: usize) -> SimScenario {
             n_requests: n,
             seed: 17,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

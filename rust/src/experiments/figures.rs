@@ -108,6 +108,7 @@ pub fn fig2(n_requests: usize) -> Result<Fig2Result> {
             n_requests,
             seed: 7,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -7,9 +7,10 @@ use dynabatch::config::{
     SchedulerConfig,
 };
 use dynabatch::driver::{
-    capacity_search, fleet_frontier, prefix_capacity, run_chaos_sim,
-    run_replica_sim, run_sim, run_sim_switched, sla_sweep, switch_sweep,
-    Fault, FaultPlan, FleetScenario, PolicySwitch, SimScenario,
+    bucket_compare, capacity_search, fleet_frontier, prefix_capacity,
+    run_chaos_sim, run_replica_sim, run_sim, run_sim_switched, sla_sweep,
+    switch_sweep, Fault, FaultPlan, FleetScenario, PolicySwitch,
+    SimScenario,
 };
 use dynabatch::engine::pjrt::PjrtEngine;
 use dynabatch::engine::Engine;
@@ -18,7 +19,7 @@ use dynabatch::server;
 use dynabatch::service::{Fleet, ReplicaSet, RoutePolicy, ServiceBuilder};
 use dynabatch::util::cli::Command;
 use dynabatch::workload::{
-    trace, Arrival, LengthDist, SharedPrefixSpec, Workload,
+    trace, Arrival, LengthDist, LengthMix, SharedPrefixSpec, Workload,
 };
 use std::path::Path;
 use std::sync::Arc;
@@ -239,6 +240,33 @@ fn cli() -> Command {
                 .flag("json", "emit the full comparison as JSON"),
         )
         .subcommand(
+            Command::new("bucket",
+                         "shape-aware bucketed-batching regression: \
+                          throughput under rectangular-kernel padding \
+                          accounting with length-bucketed admission on \
+                          vs off on a bimodal short/long workload \
+                          (fixed seed → bit-identical)")
+                .opt("model", "pangu-7b", "model preset")
+                .opt("policy", "static-greedy:256", "batching policy")
+                .opt("buckets", "4", "prompt-length buckets (2..=8)")
+                .opt("bucket-base", "64",
+                     "finest bucket ceiling in tokens (geometric \
+                      boundaries: base, 2·base, 4·base, …)")
+                .opt("requests", "64", "request count (all at t=0)")
+                .opt("short-lo", "16", "shortest chat-turn prompt tokens")
+                .opt("short-hi", "32", "longest chat-turn prompt tokens")
+                .opt("long-mean", "1024",
+                     "mean long-document prompt tokens")
+                .opt("long-frac", "0.2",
+                     "fraction of requests drawing the long mode")
+                .opt("output-mean", "8", "output tokens per request")
+                .opt("eta", "200000",
+                     "KV capacity override in tokens (0 = derive from \
+                      hardware)")
+                .opt("seed", "17", "workload seed")
+                .flag("json", "emit the full comparison as JSON"),
+        )
+        .subcommand(
             Command::new("serve", "serve the real TinyGPT over TCP (PJRT)")
                 .opt("artifacts", "artifacts", "AOT artifacts directory")
                 .opt("bind", "127.0.0.1:7077", "listen address")
@@ -316,6 +344,7 @@ fn main() {
         "sla" => cmd_sla(&sub),
         "capacity" => cmd_capacity(&sub),
         "prefix" => cmd_prefix(&sub),
+        "bucket" => cmd_bucket(&sub),
         "serve" => cmd_serve(&sub),
         "bench-sched" => cmd_bench_sched(&sub),
         "workload" => cmd_workload(&sub),
@@ -407,6 +436,7 @@ fn scenario_from(m: &M) -> Result<SimScenario> {
             n_requests: 500,
             seed: 42,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
@@ -460,6 +490,7 @@ fn cmd_switch(m: &M) -> Result<()> {
             n_requests: m.get_usize("requests")?,
             seed: m.get_u64("seed")?,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
@@ -936,6 +967,7 @@ fn cmd_prefix(m: &M) -> Result<()> {
                 prefix_tokens: m.get_u64("prefix-tokens")? as u32,
                 zipf_s: m.get_f64("zipf")?,
             }),
+            length_mix: None,
         },
         eta_tokens_override: if eta > 0 { Some(eta) } else { None },
         swap_tokens: 0,
@@ -968,6 +1000,72 @@ fn cmd_prefix(m: &M) -> Result<()> {
         r.shared.at_capacity.prefix_hit_rate.unwrap_or(0.0) * 100.0
     );
     println!("  ratio: {:.2}x", r.ratio);
+    Ok(())
+}
+
+/// `dynabatch bucket`: the bucketed-batching regression — the same
+/// bimodal short/long workload run twice under rectangular-kernel
+/// padding accounting, flat admission vs length-bucketed admission.
+fn cmd_bucket(m: &M) -> Result<()> {
+    let model = dynabatch::experiments::table_model(m.get("model"));
+    let hardware = presets::node_for(&model);
+    let eta = m.get_u64("eta")?;
+    let s = SimScenario {
+        model,
+        hardware,
+        sched: SchedulerConfig {
+            policy: PolicyKind::parse(m.get("policy"))?,
+            buckets: m.get_u64("buckets")? as u32,
+            bucket_base: m.get_u64("bucket-base")? as u32,
+            ..SchedulerConfig::default()
+        },
+        workload: Workload {
+            name: "bucket".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(128), // nominal; mix overrides
+            output: LengthDist::Fixed(m.get_u64("output-mean")? as u32),
+            n_requests: m.get_usize("requests")?,
+            seed: m.get_u64("seed")?,
+            prefix: None,
+            length_mix: Some(LengthMix::bimodal(
+                m.get_u64("short-lo")? as u32,
+                m.get_u64("short-hi")? as u32,
+                m.get_f64("long-mean")?,
+                m.get_f64("long-frac")?,
+                4096,
+            )),
+        },
+        eta_tokens_override: if eta > 0 { Some(eta) } else { None },
+        swap_tokens: 0,
+    };
+    let r = bucket_compare(&s)?;
+    if m.get_flag("json") {
+        println!("{}", r.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!(
+        "bucketed-batching regression [{}] buckets={} base={} seed={}",
+        s.sched.policy.label(),
+        s.sched.buckets,
+        s.sched.bucket_base,
+        s.workload.seed
+    );
+    println!(
+        "  flat (pad to step max): {:>8.0} tok/s  waste {:>5.1}%  \
+         makespan {:>6.2}s",
+        r.flat.throughput,
+        r.flat.padding_waste.unwrap_or(0.0) * 100.0,
+        r.flat.makespan
+    );
+    println!(
+        "  bucketed              : {:>8.0} tok/s  waste {:>5.1}%  \
+         makespan {:>6.2}s",
+        r.bucketed.throughput,
+        r.bucketed.padding_waste.unwrap_or(0.0) * 100.0,
+        r.bucketed.makespan
+    );
+    println!("  ratio: {:.2}x  (decode p95 {:.2} ms vs {:.2} ms)",
+             r.ratio, r.flat.tbt_p95 * 1e3, r.bucketed.tbt_p95 * 1e3);
     Ok(())
 }
 
@@ -1088,6 +1186,7 @@ fn cmd_workload(m: &M) -> Result<()> {
         n_requests: m.get_usize("requests")?,
         seed: m.get_u64("seed")?,
         prefix: None,
+        length_mix: None,
     };
     let reqs = w.generate();
     trace::save(Path::new(m.get("out")), &reqs)?;

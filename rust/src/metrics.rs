@@ -103,6 +103,14 @@ pub struct RunMetrics {
     /// `None` when the run's scheduler had the prefix cache disabled
     /// (the sim drivers set it from the KV manager after the run).
     pub prefix_hit_rate: Option<f64>,
+    /// Lifetime padded (wasted) prefill tokens under rectangular-kernel
+    /// accounting; `None` unless the run's scheduler had
+    /// `padded_prefill` on (the sim drivers fill it from telemetry).
+    pub padded_prefill_tokens: Option<u64>,
+    /// padded / (real + padded) prefill tokens — the fraction of
+    /// prefill FLOPs burned on padding. `None` alongside
+    /// [`Self::padded_prefill_tokens`].
+    pub padding_waste: Option<f64>,
     /// Per-class latency/SLA attribution (rank order; empty until
     /// [`Self::attach_class_stats`] runs — the sim drivers always attach
     /// it).
@@ -162,6 +170,8 @@ impl RunMetrics {
             reconfigs: stats.reconfigs,
             utilization,
             prefix_hit_rate: None,
+            padded_prefill_tokens: None,
+            padding_waste: None,
             per_class: Vec::new(),
         }
     }
@@ -270,6 +280,16 @@ impl RunMetrics {
                 self.prefix_hit_rate
                     .map(Json::Num)
                     .unwrap_or(Json::Null),
+            ),
+            (
+                "padded_prefill_tokens",
+                self.padded_prefill_tokens
+                    .map(Json::from)
+                    .unwrap_or(Json::Null),
+            ),
+            (
+                "padding_waste",
+                self.padding_waste.map(Json::Num).unwrap_or(Json::Null),
             ),
             (
                 "per_class",

@@ -48,7 +48,8 @@
 //!   traces via [`Scheduler::retain_full_traces`].
 
 use crate::batching::{
-    build_controller, AdmissionMode, Controller, Directive, SwapHint,
+    build_controller, AdmissionMode, BucketPlan, Controller, Directive,
+    SwapHint, MAX_BUCKETS,
 };
 use crate::config::{PolicyKind, PreemptMode, SchedulerConfig};
 use crate::engine::{DecodeWork, Engine, StepOutcome, StepPlan};
@@ -129,6 +130,13 @@ struct SlotEntry {
     pf_prev: u32,
     pf_next: u32,
     in_pf: bool,
+    /// Length-bucket list (prefill subset grouped by prompt-length
+    /// bucket; only maintained while a [`BucketPlan`] is applied).
+    bk_prev: u32,
+    bk_next: u32,
+    in_bk: bool,
+    /// Bucket index under the applied plan (meaningful iff `in_bk`).
+    bucket: u8,
     /// Cached KV slab slot (valid between allocate and free).
     kv: KvSlot,
 }
@@ -164,6 +172,15 @@ pub struct Scheduler {
     pf_head: u32,
     pf_tail: u32,
     pf_len: usize,
+    /// Third intrusive index: the prefill set partitioned by
+    /// prompt-length bucket (admission order within a bucket), one list
+    /// per bucket of the applied plan. Empty while no plan is applied.
+    bk_head: [u32; MAX_BUCKETS],
+    bk_tail: [u32; MAX_BUCKETS],
+    bk_len: [usize; MAX_BUCKETS],
+    /// The [`BucketPlan`] the bucket index is currently built for; the
+    /// index is rebuilt (one pf-list walk) when a decision changes it.
+    applied_bucket_plan: Option<BucketPlan>,
     finished: Vec<Request>,
     b_t: u32,
     steps_since_decision: u32,
@@ -241,6 +258,10 @@ impl Scheduler {
             pf_head: NIL,
             pf_tail: NIL,
             pf_len: 0,
+            bk_head: [NIL; MAX_BUCKETS],
+            bk_tail: [NIL; MAX_BUCKETS],
+            bk_len: [0; MAX_BUCKETS],
+            applied_bucket_plan: None,
             finished: Vec::new(),
             b_t: b0,
             steps_since_decision: u32::MAX, // decide on first step
@@ -324,6 +345,10 @@ impl Scheduler {
             pf_prev: NIL,
             pf_next: NIL,
             in_pf: false,
+            bk_prev: NIL,
+            bk_next: NIL,
+            in_bk: false,
+            bucket: 0,
             kv: KV_NO_SLOT,
         };
         match self.free_slots.pop() {
@@ -400,9 +425,18 @@ impl Scheduler {
         }
         self.pf_tail = slot;
         self.pf_len += 1;
+        // Bucket index mirrors prefill-index membership while a plan is
+        // applied.
+        if let Some(p) = self.applied_bucket_plan {
+            let len = self.entry(slot).req.prompt_len;
+            self.bk_push_back(slot, p.bucket_of(len) as u8);
+        }
     }
 
     fn pf_remove(&mut self, slot: u32) {
+        if self.entry(slot).in_bk {
+            self.bk_remove(slot);
+        }
         let (prev, next) = {
             let e = self.entry(slot);
             debug_assert!(e.in_pf);
@@ -423,6 +457,80 @@ impl Scheduler {
         e.pf_next = NIL;
         e.in_pf = false;
         self.pf_len -= 1;
+    }
+
+    fn bk_push_back(&mut self, slot: u32, bucket: u8) {
+        let bi = bucket as usize;
+        let tail = self.bk_tail[bi];
+        {
+            let e = self.entry_mut(slot);
+            debug_assert!(!e.in_bk);
+            e.bk_prev = tail;
+            e.bk_next = NIL;
+            e.in_bk = true;
+            e.bucket = bucket;
+        }
+        if tail == NIL {
+            self.bk_head[bi] = slot;
+        } else {
+            self.entry_mut(tail).bk_next = slot;
+        }
+        self.bk_tail[bi] = slot;
+        self.bk_len[bi] += 1;
+    }
+
+    fn bk_remove(&mut self, slot: u32) {
+        let (prev, next, bi) = {
+            let e = self.entry(slot);
+            debug_assert!(e.in_bk);
+            (e.bk_prev, e.bk_next, e.bucket as usize)
+        };
+        if prev == NIL {
+            self.bk_head[bi] = next;
+        } else {
+            self.entry_mut(prev).bk_next = next;
+        }
+        if next == NIL {
+            self.bk_tail[bi] = prev;
+        } else {
+            self.entry_mut(next).bk_prev = prev;
+        }
+        let e = self.entry_mut(slot);
+        e.bk_prev = NIL;
+        e.bk_next = NIL;
+        e.in_bk = false;
+        self.bk_len[bi] -= 1;
+    }
+
+    /// (Re)build the bucket index for `plan`: one walk over the prefill
+    /// list, preserving admission order within each bucket. Called when a
+    /// decision changes the directive's plan (including to/from `None`) —
+    /// never on the per-step path.
+    fn rebuild_bucket_index(&mut self, plan: Option<BucketPlan>) {
+        self.bk_head = [NIL; MAX_BUCKETS];
+        self.bk_tail = [NIL; MAX_BUCKETS];
+        self.bk_len = [0; MAX_BUCKETS];
+        let mut cur = self.pf_head;
+        while cur != NIL {
+            let e = self.entry_mut(cur);
+            e.bk_prev = NIL;
+            e.bk_next = NIL;
+            e.in_bk = false;
+            e.bucket = 0;
+            cur = e.pf_next;
+        }
+        self.applied_bucket_plan = plan;
+        if let Some(p) = plan {
+            let mut cur = self.pf_head;
+            while cur != NIL {
+                let (next, len) = {
+                    let e = self.entry(cur);
+                    (e.pf_next, e.req.prompt_len)
+                };
+                self.bk_push_back(cur, p.bucket_of(len) as u8);
+                cur = next;
+            }
+        }
     }
 
     /// Add an admitted/resumed request to the running set, maintaining
@@ -551,6 +659,9 @@ impl Scheduler {
             d.target_batch =
                 d.target_batch.min(engine.max_batch()).max(1);
             self.b_t = d.target_batch;
+            if d.bucket_plan != self.applied_bucket_plan {
+                self.rebuild_bucket_index(d.bucket_plan);
+            }
             self.directive = d;
             self.steps_since_decision = 0;
             self.stats.decisions += 1;
@@ -617,6 +728,12 @@ impl Scheduler {
         }
         if !plan.prefills.is_empty() {
             self.stats.prefill_steps += 1;
+            if self.cfg.padded_prefill {
+                self.telemetry.record_prefill_padding(
+                    plan.prefill_tokens(),
+                    plan.prefill_padded_tokens,
+                );
+            }
             for p in &plan.prefills {
                 let slot = *self.by_id.get(&p.id).expect("prefill req");
                 let done = {
@@ -744,12 +861,16 @@ impl Scheduler {
     /// the class with the highest `credit + weight` wins (ties go to the
     /// higher-priority class). Credits are only committed when the pick
     /// leads to an actual admission, so a memory-blocked head does not
-    /// burn the class's turn.
-    fn pick_waiting_class(&self) -> Option<usize> {
+    /// burn the class's turn. Classes in `blocked` are skipped — a class
+    /// whose head-of-line request sits in a quota-exhausted bucket stays
+    /// strictly FIFO (documented head-of-line blocking) while the other
+    /// classes keep admitting.
+    fn pick_waiting_class(&self, blocked: &[bool; N_CLASSES])
+                          -> Option<usize> {
         let mut best: Option<(usize, i64)> = None;
         for c in PriorityClass::ALL {
             let i = c.rank();
-            if self.waiting[i].is_empty() {
+            if self.waiting[i].is_empty() || blocked[i] {
                 continue;
             }
             let eff = self.wrr_credit[i] + self.admission_weight(c);
@@ -778,6 +899,13 @@ impl Scheduler {
     /// picked class-weighted. The directive decides the mode: `Gated`
     /// admits strictly up to `b_t`, `Greedy` admits while prompt blocks
     /// fit up to its cap (vLLM static-greedy semantics).
+    ///
+    /// When the directive carries a [`BucketPlan`] with quotas, fresh
+    /// admissions are additionally capped per length bucket per step
+    /// (quota 0 = unlimited). A class whose head-of-line request sits in
+    /// an exhausted bucket is skipped for the rest of this step's
+    /// admission (head-of-line blocking keeps in-class FIFO strict);
+    /// resume admissions bypass quotas — they hold completed work.
     fn resume_and_admit<E: Engine + ?Sized>(&mut self, engine: &mut E,
                                             now: f64, plan: &mut StepPlan) {
         let cap = match self.directive.admission {
@@ -785,6 +913,9 @@ impl Scheduler {
             AdmissionMode::Greedy { cap } => cap,
         }
         .min(engine.max_batch());
+        let bucket_plan = self.directive.bucket_plan;
+        let mut admitted_by_bucket = [0u32; MAX_BUCKETS];
+        let mut blocked = [false; N_CLASSES];
 
         loop {
             if self.run_len as u32 >= cap {
@@ -794,7 +925,7 @@ impl Scheduler {
             let (slot, class_idx) = if from_resume {
                 (*self.resume_queue.front().expect("non-empty"), None)
             } else {
-                match self.pick_waiting_class() {
+                match self.pick_waiting_class(&blocked) {
                     Some(c) => {
                         (*self.waiting[c].front().expect("picked non-empty"),
                          Some(c))
@@ -807,6 +938,17 @@ impl Scheduler {
                 (r.id, r.prompt_len, r.max_new_tokens,
                  r.resume_prefill_tokens(), r.deadline.is_some())
             };
+            // Per-bucket admission quota (fresh admissions only).
+            if !from_resume {
+                if let Some(p) = &bucket_plan {
+                    let b = p.bucket_of(prompt_len);
+                    let q = p.quotas[b];
+                    if q > 0 && admitted_by_bucket[b] >= q {
+                        blocked[class_idx.expect("waiting pick")] = true;
+                        continue; // head-of-line blocked: try next class
+                    }
+                }
+            }
             // Swapped victim: bring blocks back instead of re-allocating.
             if from_resume && self.kv.is_swapped(id) {
                 let tokens = self.kv.tokens_of(id).unwrap_or(0);
@@ -913,43 +1055,126 @@ impl Scheduler {
                     self.waiting_deadlines -= 1;
                 }
                 self.stats.admitted += 1;
+                if let Some(p) = &bucket_plan {
+                    admitted_by_bucket[p.bucket_of(prompt_len)] += 1;
+                }
             }
             self.enter_running(slot);
         }
     }
 
+    /// Rectangular-kernel padding charge for one prefill group (the plan
+    /// entries from `group_start` on): each of the group's `k` chunks is
+    /// charged the group's longest chunk, so the waste is
+    /// `k·max − Σ real`. No-op unless `padded_prefill` accounting is on —
+    /// the default path's plans carry an exact zero.
+    fn charge_padding(&self, plan: &mut StepPlan, group_start: usize) {
+        if !self.cfg.padded_prefill {
+            return;
+        }
+        let group = &plan.prefills[group_start..];
+        if group.is_empty() {
+            return;
+        }
+        let mut max = 0u64;
+        let mut real = 0u64;
+        for p in group {
+            max = max.max(p.n_tokens as u64);
+            real += p.n_tokens as u64;
+        }
+        plan.prefill_padded_tokens += max * group.len() as u64 - real;
+    }
+
     /// Segregated mode: whole remaining prompts for every request in the
-    /// prefill index (admission order).
+    /// prefill index. Under an applied [`BucketPlan`] the walk runs
+    /// bucket by bucket (admission order within each), so the plan's
+    /// prefills are contiguous per bucket and each group pads only to
+    /// its own ceiling-length chunk; otherwise the whole step is one
+    /// group in admission order.
     fn plan_whole_prefills(&mut self, plan: &mut StepPlan) {
-        let mut cur = self.pf_head;
-        while cur != NIL {
-            let e = self.entry(cur);
-            let r = &e.req;
-            let remaining = r.prompt_len - r.prefilled;
-            plan.push_prefill(r.id, chunk_slice(r, r.prefilled, remaining),
-                              remaining, r.prefilled, true);
-            cur = e.pf_next;
+        match self.applied_bucket_plan {
+            Some(bp) => {
+                for b in 0..bp.n() {
+                    let start = plan.prefills.len();
+                    let mut cur = self.bk_head[b];
+                    while cur != NIL {
+                        let e = self.entry(cur);
+                        let r = &e.req;
+                        let remaining = r.prompt_len - r.prefilled;
+                        plan.push_prefill(
+                            r.id, chunk_slice(r, r.prefilled, remaining),
+                            remaining, r.prefilled, true);
+                        cur = e.bk_next;
+                    }
+                    self.charge_padding(plan, start);
+                }
+            }
+            None => {
+                let start = plan.prefills.len();
+                let mut cur = self.pf_head;
+                while cur != NIL {
+                    let e = self.entry(cur);
+                    let r = &e.req;
+                    let remaining = r.prompt_len - r.prefilled;
+                    plan.push_prefill(
+                        r.id, chunk_slice(r, r.prefilled, remaining),
+                        remaining, r.prefilled, true);
+                    cur = e.pf_next;
+                }
+                self.charge_padding(plan, start);
+            }
         }
     }
 
     /// PD fusion: take up to the directive's `prefill_chunk` prompt
     /// tokens across the requests still prefilling (FIFO over admission
-    /// order via the prefill index).
+    /// order via the prefill index; bucket-grouped under an applied
+    /// [`BucketPlan`], exactly as in [`Self::plan_whole_prefills`]).
     fn plan_chunked_prefills(&mut self, plan: &mut StepPlan) {
         let mut budget =
             self.directive.prefill_chunk.unwrap_or(0).max(1);
-        let mut cur = self.pf_head;
-        while cur != NIL && budget > 0 {
-            let e = self.entry(cur);
-            let r = &e.req;
-            let remaining = r.prompt_len - r.prefilled;
-            let take = remaining.min(budget);
-            if take > 0 {
-                plan.push_prefill(r.id, chunk_slice(r, r.prefilled, take),
-                                  take, r.prefilled, take == remaining);
-                budget -= take;
+        match self.applied_bucket_plan {
+            Some(bp) => {
+                for b in 0..bp.n() {
+                    if budget == 0 {
+                        break;
+                    }
+                    let start = plan.prefills.len();
+                    let mut cur = self.bk_head[b];
+                    while cur != NIL && budget > 0 {
+                        let e = self.entry(cur);
+                        let r = &e.req;
+                        let remaining = r.prompt_len - r.prefilled;
+                        let take = remaining.min(budget);
+                        if take > 0 {
+                            plan.push_prefill(
+                                r.id, chunk_slice(r, r.prefilled, take),
+                                take, r.prefilled, take == remaining);
+                            budget -= take;
+                        }
+                        cur = e.bk_next;
+                    }
+                    self.charge_padding(plan, start);
+                }
             }
-            cur = e.pf_next;
+            None => {
+                let start = plan.prefills.len();
+                let mut cur = self.pf_head;
+                while cur != NIL && budget > 0 {
+                    let e = self.entry(cur);
+                    let r = &e.req;
+                    let remaining = r.prompt_len - r.prefilled;
+                    let take = remaining.min(budget);
+                    if take > 0 {
+                        plan.push_prefill(
+                            r.id, chunk_slice(r, r.prefilled, take),
+                            take, r.prefilled, take == remaining);
+                        budget -= take;
+                    }
+                    cur = e.pf_next;
+                }
+                self.charge_padding(plan, start);
+            }
         }
     }
 
@@ -1034,6 +1259,10 @@ impl Scheduler {
         if plan.decodes.len() < had_decode {
             self.decode_class_scratch[victim_rank] -= 1;
         }
+        // A dropped chunk's padding charge (if accounting is on) stands:
+        // the kernel was shaped before the abort, and recomputing group
+        // maxima here would need the group boundaries the plan no longer
+        // has. Deterministic either way.
         plan.prefills.retain(|p| p.id != victim_id);
         let mode = match self.directive.swap_hint {
             SwapHint::Auto => self.cfg.preempt,
@@ -1250,6 +1479,46 @@ impl Scheduler {
         }
         assert_eq!(self.pf_tail, prev, "pf tail stale");
         assert_eq!(n, self.pf_len, "pf list length drift");
+        // Bucket index: mirrors the prefill set exactly while a plan is
+        // applied (every member prefilling, assignment fresh, admission
+        // order preserved per bucket); empty otherwise.
+        match self.applied_bucket_plan {
+            None => {
+                assert_eq!(self.bk_len, [0; MAX_BUCKETS],
+                           "bucket lists must be empty without a plan");
+                for e in self.slots.iter().flatten() {
+                    assert!(!e.in_bk,
+                            "bucket link without an applied plan");
+                }
+            }
+            Some(p) => {
+                let mut total = 0usize;
+                for b in 0..MAX_BUCKETS {
+                    let mut n = 0usize;
+                    let mut prev = NIL;
+                    let mut cur = self.bk_head[b];
+                    while cur != NIL {
+                        let e = self.entry(cur);
+                        assert_eq!(e.bk_prev, prev,
+                                   "bk list back-link broken");
+                        assert!(e.in_bk && e.in_pf,
+                                "bucket member must be prefilling");
+                        assert_eq!(e.bucket as usize, b,
+                                   "entry in the wrong bucket list");
+                        assert_eq!(p.bucket_of(e.req.prompt_len), b,
+                                   "bucket assignment stale");
+                        n += 1;
+                        prev = cur;
+                        cur = e.bk_next;
+                    }
+                    assert_eq!(self.bk_tail[b], prev, "bk tail stale");
+                    assert_eq!(n, self.bk_len[b], "bk_len drift");
+                    total += n;
+                }
+                assert_eq!(total, self.pf_len,
+                           "bucket index must cover the prefill set");
+            }
+        }
         // Waiting-deadline gate.
         let wd = self
             .waiting
@@ -1878,6 +2147,138 @@ mod tests {
         );
         assert_eq!(s.by_id.len(), 0);
         assert_eq!(s.free_slots.len(), s.slots.len());
+    }
+
+    /// Pins a fixed [`BucketPlan`] onto a fixed batch — the scheduler
+    /// half of the bucketing mechanism, isolated from the
+    /// `BucketedController`'s pressure adaptation.
+    struct PinnedBuckets {
+        batch: u32,
+        plan: BucketPlan,
+    }
+
+    impl crate::batching::Controller for PinnedBuckets {
+        fn decide(&mut self, _obs: &Observation) -> Directive {
+            let mut d = Directive::gated(self.batch);
+            d.bucket_plan = Some(self.plan);
+            d
+        }
+
+        fn label(&self) -> String {
+            "pinned-buckets".into()
+        }
+    }
+
+    #[test]
+    fn bucketed_prefill_groups_by_bucket_and_charges_padding() {
+        let cfg = SchedulerConfig {
+            policy: PolicyKind::StaticFixed { batch: 8 },
+            padded_prefill: true,
+            ..SchedulerConfig::default()
+        };
+        let m = pangu_7b();
+        let hw = node_for(&m);
+        let mut e = SimEngine::new(&m, &hw);
+        let mut s = Scheduler::new(cfg.clone(), 100_000, 0, 128.0, 8.0);
+        s.enable_shadow_checks();
+        s.install_controller(Box::new(PinnedBuckets {
+            batch: 8,
+            plan: BucketPlan::geometric(64, 2, 0), // ceilings [64, MAX]
+        }));
+        s.submit(Request::new(0, 16, 4, 0.0));
+        s.submit(Request::new(1, 500, 4, 0.0));
+        s.submit(Request::new(2, 64, 4, 0.0));
+        s.submit(Request::new(3, 300, 4, 0.0));
+        let t_bucketed = s.step(&mut e, 0.0).unwrap().unwrap();
+        // The prefill plan is grouped by bucket, FIFO within each:
+        // short bucket (16, 64) first, long bucket (500, 300) after.
+        let ids: Vec<u64> = s.plan.prefills.iter().map(|p| p.id).collect();
+        assert_eq!(ids, vec![0, 2, 1, 3], "grouped by bucket");
+        // Padding to the per-group max: short 2·64 − 80 = 48,
+        // long 2·500 − 800 = 200.
+        assert_eq!(s.plan.prefill_padded_tokens, 248);
+        assert_eq!(s.telemetry.prefill_padded_tokens(), 248);
+        let waste = s.telemetry.padding_waste();
+        assert!((waste - 248.0 / 1128.0).abs() < 1e-12, "waste {waste}");
+
+        // The unbucketed arm pads everything to the step-wide max:
+        // 4·500 − 880 = 1120 wasted tokens, and a slower step.
+        let mut e2 = SimEngine::new(&m, &hw);
+        let mut u = Scheduler::new(cfg, 100_000, 0, 128.0, 8.0);
+        u.enable_shadow_checks();
+        for (id, len) in [(0, 16), (1, 500), (2, 64), (3, 300)] {
+            u.submit(Request::new(id, len, 4, 0.0));
+        }
+        let t_flat = u.step(&mut e2, 0.0).unwrap().unwrap();
+        assert_eq!(u.plan.prefill_padded_tokens, 1120);
+        assert_eq!(u.telemetry.prefill_padded_tokens(), 1120);
+        assert!(t_bucketed < t_flat,
+                "bucketed prefill must cost less: {t_bucketed} vs {t_flat}");
+    }
+
+    #[test]
+    fn bucket_quota_caps_fresh_admissions_per_step() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 8 }, 100_000);
+        s.install_controller(Box::new(PinnedBuckets {
+            batch: 8,
+            plan: BucketPlan::geometric(64, 2, 1), // 1 per bucket per step
+        }));
+        s.submit(Request::new(0, 32, 4, 0.0)
+            .with_class(PriorityClass::Interactive));
+        s.submit(Request::new(1, 32, 4, 0.0)
+            .with_class(PriorityClass::Interactive));
+        s.submit(Request::new(2, 500, 4, 0.0)
+            .with_class(PriorityClass::Batch));
+        s.submit(Request::new(3, 500, 4, 0.0)
+            .with_class(PriorityClass::Batch));
+        s.step(&mut e, c.now()).unwrap();
+        // One admission per bucket: the head of each class enters; the
+        // second of each is head-of-line blocked behind its quota.
+        assert_eq!(s.running_len(), 2, "quota 1 per bucket per step");
+        assert_eq!(s.stats.admitted, 2);
+        run_all(&mut s, &mut e, &mut c, 100_000);
+        assert_eq!(s.finished().len(), 4, "quotas delay, never starve");
+    }
+
+    /// Alternates between two bucket plans every decision, forcing the
+    /// bucket-index rebuild path while prefill entries are live.
+    struct FlippingBuckets {
+        calls: u32,
+    }
+
+    impl crate::batching::Controller for FlippingBuckets {
+        fn decide(&mut self, _obs: &Observation) -> Directive {
+            self.calls += 1;
+            let mut d = Directive::gated(8);
+            d.prefill_chunk = Some(16);
+            d.bucket_plan = Some(if self.calls % 2 == 0 {
+                BucketPlan::geometric(64, 4, 0)
+            } else {
+                BucketPlan::geometric(100, 2, 0)
+            });
+            d
+        }
+
+        fn label(&self) -> String {
+            "flipping-buckets".into()
+        }
+    }
+
+    #[test]
+    fn bucket_index_rebuilds_on_plan_change_mid_prefill() {
+        let (mut s, mut e, mut c) =
+            sim_setup(PolicyKind::StaticFixed { batch: 8 }, 100_000);
+        s.install_controller(Box::new(FlippingBuckets { calls: 0 }));
+        s.submit(Request::new(0, 200, 4, 0.0));
+        s.submit(Request::new(1, 100, 4, 0.0));
+        s.submit(Request::new(2, 50, 4, 0.0));
+        // Chunk budget 16/step: prefill spans many steps while the plan
+        // flips every decision — each step's shadow check revalidates
+        // the rebuilt index against the prefill set.
+        run_all(&mut s, &mut e, &mut c, 10_000);
+        assert_eq!(s.finished().len(), 3);
+        assert!(!s.has_work());
     }
 
     #[test]

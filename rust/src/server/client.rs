@@ -121,6 +121,13 @@ pub struct ServerStats {
     /// Lifetime prefix-cache hit rate over eligible prompt chunks (0
     /// from pre-prefix servers; aggregate: worst replica).
     pub prefix_hit_rate: f64,
+    /// Lifetime padded prefill tokens under rectangular-kernel
+    /// accounting (0 from pre-bucketing servers or with accounting
+    /// off; aggregate: sum).
+    pub prefill_padded_tokens: u64,
+    /// padded / (real + padded) prefill tokens (0 from pre-bucketing
+    /// servers; aggregate: worst replica).
+    pub padding_waste: f64,
     pub b_t: u32,
     /// Label of the live batching controller.
     pub controller: String,
@@ -267,6 +274,11 @@ fn parse_stats(ev: &Json) -> ServerStats {
             .get("prefix_hit_rate")
             .as_f64()
             .unwrap_or(0.0),
+        prefill_padded_tokens: ev
+            .get("prefill_padded_tokens")
+            .as_u64()
+            .unwrap_or(0),
+        padding_waste: ev.get("padding_waste").as_f64().unwrap_or(0.0),
         b_t: ev.get("b_t").as_u64().unwrap_or(0) as u32,
         controller: ev.get("controller").as_str().unwrap_or("").into(),
         steps: ev.get("steps").as_u64().unwrap_or(0),

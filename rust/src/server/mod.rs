@@ -59,7 +59,8 @@
 //!    "waiting_by_class":[1,4,0], "resuming":0,
 //!    "kv_used_tokens":4096, "kv_free_blocks":120,
 //!    "kv_total_blocks":376, "kv_shared_tokens":0,
-//!    "prefix_hit_rate":0.0, "b_t":32,
+//!    "prefix_hit_rate":0.0, "prefill_padded_tokens":0,
+//!    "padding_waste":0.0, "b_t":32,
 //!    "controller":"combined(min(alg1,alg2))", "steps":901,
 //!    "finished":40, "rejected":0, "shed":1, "cancelled":2,
 //!    "reconfigs":0, "draining":false,
@@ -354,6 +355,8 @@ fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
         ("kv_total_blocks", Json::from(s.kv_total_blocks)),
         ("kv_shared_tokens", Json::from(s.kv_shared_tokens)),
         ("prefix_hit_rate", Json::Num(s.prefix_hit_rate)),
+        ("prefill_padded_tokens", Json::from(s.prefill_padded_tokens)),
+        ("padding_waste", Json::Num(s.padding_waste)),
         ("b_t", Json::from(s.b_t as u64)),
         ("controller", Json::from(s.controller.clone())),
         ("steps", Json::from(s.steps)),

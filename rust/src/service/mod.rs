@@ -296,6 +296,13 @@ pub struct ServiceSnapshot {
     /// Lifetime prefix-cache hit rate over eligible prompt chunks (0.0
     /// before any lookup or when the cache is disabled).
     pub prefix_hit_rate: f64,
+    /// Lifetime padded (wasted) prefill tokens under rectangular-kernel
+    /// accounting (0 unless the scheduler runs with
+    /// `SchedulerConfig::padded_prefill`).
+    pub prefill_padded_tokens: u64,
+    /// padded / (real + padded) prefill tokens (0.0 with accounting
+    /// off) — "is padding eating my throughput?" in one gauge.
+    pub padding_waste: f64,
     pub b_t: u32,
     /// Label of the live controller (changes on `reconfigure`).
     pub controller: String,
@@ -756,6 +763,8 @@ fn publish(shared: &Shared, sched: &Scheduler, label: &str,
     snap.kv_total_blocks = sched.kv.total_blocks();
     snap.kv_shared_tokens = sched.kv.shared_tokens();
     snap.prefix_hit_rate = sched.kv.prefix_hit_rate();
+    snap.prefill_padded_tokens = sched.telemetry.prefill_padded_tokens();
+    snap.padding_waste = sched.telemetry.padding_waste();
     snap.b_t = sched.current_bt();
     if snap.controller != label {
         snap.controller = label.to_string();

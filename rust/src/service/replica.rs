@@ -928,7 +928,10 @@ impl ReplicaSet {
     /// (the fleet's cost rate in baseline-replica-seconds per second)
     /// and `decode_speed` takes the fastest replica. `kv_shared_tokens`
     /// sums; `prefix_hit_rate` takes the worst (min) replica — the set
-    /// is only as warm as its coldest cache.
+    /// is only as warm as its coldest cache. `prefill_padded_tokens`
+    /// sums; `padding_waste` takes the worst (max) replica — the
+    /// honest read for "is padding eating my throughput?" across the
+    /// set.
     pub fn aggregate(snaps: &[ServiceSnapshot]) -> ServiceSnapshot {
         let mut agg = ServiceSnapshot {
             draining: !snaps.is_empty(),
@@ -962,6 +965,8 @@ impl ReplicaSet {
             // "is sharing paying off?".
             agg.prefix_hit_rate =
                 agg.prefix_hit_rate.min(s.prefix_hit_rate);
+            agg.prefill_padded_tokens += s.prefill_padded_tokens;
+            agg.padding_waste = agg.padding_waste.max(s.padding_waste);
             agg.b_t += s.b_t;
             agg.steps += s.steps;
             agg.finished += s.finished;
@@ -1426,6 +1431,8 @@ mod tests {
             kv_total_blocks: 10,
             kv_shared_tokens: if draining { 64 } else { 128 },
             prefix_hit_rate: if draining { 0.25 } else { 0.75 },
+            prefill_padded_tokens: if draining { 40 } else { 60 },
+            padding_waste: if draining { 0.3 } else { 0.1 },
             b_t: 8,
             controller: controller.to_string(),
             steps: 7,
@@ -1462,6 +1469,9 @@ mod tests {
         assert_eq!(a.kv_shared_tokens, 192, "shared tokens sum");
         assert_eq!(a.prefix_hit_rate, 0.25,
                    "set hit rate is the coldest replica's");
+        assert_eq!(a.prefill_padded_tokens, 100, "padded tokens sum");
+        assert_eq!(a.padding_waste, 0.3,
+                   "set waste is the worst replica's");
         assert_eq!(a.b_t, 16);
         assert_eq!(a.finished, 8);
         assert_eq!(a.controller, "x", "common label collapses");

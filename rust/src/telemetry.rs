@@ -87,6 +87,14 @@ pub struct Observation {
     /// token), so unlike the decode windows there is no step-count
     /// staleness horizon — TTFT is a queueing signal, not a per-step one.
     pub ttft_by_class: [Option<f64>; PriorityClass::COUNT],
+    /// Lifetime padded (wasted) prefill tokens — the gap between the
+    /// rectangular-kernel charge of every prefill group and its real
+    /// token count. 0 unless `padded_prefill` accounting is on.
+    pub padded_prefill_tokens: u64,
+    /// Lifetime fraction of charged prefill tokens that were padding
+    /// (`padded / (real + padded)`; 0.0 before any prefill or with
+    /// accounting off) — the "is padding eating my throughput?" gauge.
+    pub padding_waste: f64,
 }
 
 impl Observation {
@@ -116,6 +124,8 @@ impl Observation {
             prefix_hit_rate: 0.0,
             decode_latency_by_class: [None; PriorityClass::COUNT],
             ttft_by_class: [None; PriorityClass::COUNT],
+            padded_prefill_tokens: 0,
+            padding_waste: 0.0,
         }
     }
 }
@@ -160,6 +170,11 @@ pub struct Telemetry {
     class_last_seen: [u64; PriorityClass::COUNT],
     /// Staleness horizon in decode steps (== the latency window).
     class_stale_after: u64,
+    /// Lifetime real prefill tokens charged (denominator half of the
+    /// padding-waste gauge; only advanced when padding accounting is on).
+    prefill_real_tokens: u64,
+    /// Lifetime padded (ceiling − real) prefill tokens charged.
+    prefill_padded_tokens: u64,
     /// Memory-utilization time series (t, used, capacity) for Fig. 2.
     pub mem_timeline: Vec<(f64, u64, u64)>,
     record_timeline: bool,
@@ -193,6 +208,8 @@ impl Telemetry {
             classed_steps: 0,
             class_last_seen: [0; PriorityClass::COUNT],
             class_stale_after: latency_window.max(1) as u64,
+            prefill_real_tokens: 0,
+            prefill_padded_tokens: 0,
             mem_timeline: Vec::new(),
             record_timeline: false,
         }
@@ -297,6 +314,31 @@ impl Telemetry {
                 < self.class_stale_after
     }
 
+    /// Account one step's prefill padding: `real` tokens actually
+    /// prefilled, `padded_extra` ceiling tokens charged on top of them
+    /// (the rectangular-kernel waste). The scheduler calls this once per
+    /// step when `padded_prefill` accounting is on.
+    pub fn record_prefill_padding(&mut self, real: u64, padded_extra: u64) {
+        self.prefill_real_tokens += real;
+        self.prefill_padded_tokens += padded_extra;
+    }
+
+    /// Lifetime padded (wasted) prefill tokens charged.
+    pub fn prefill_padded_tokens(&self) -> u64 {
+        self.prefill_padded_tokens
+    }
+
+    /// Lifetime fraction of charged prefill tokens that were padding:
+    /// `padded / (real + padded)`, 0.0 before any charged prefill.
+    pub fn padding_waste(&self) -> f64 {
+        let total = self.prefill_real_tokens + self.prefill_padded_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefill_padded_tokens as f64 / total as f64
+        }
+    }
+
     pub fn record_memory(&mut self, now: f64, used: u64, cap: u64) {
         if self.record_timeline {
             self.mem_timeline.push((now, used, cap));
@@ -380,6 +422,8 @@ impl Telemetry {
                     Some(self.class_ttft[rank].mean())
                 }
             }),
+            padded_prefill_tokens: self.prefill_padded_tokens,
+            padding_waste: self.padding_waste(),
         }
     }
 
@@ -546,6 +590,72 @@ mod tests {
         }
         let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
         assert!(obs.ttft_by_class[0].is_some());
+    }
+
+    #[test]
+    fn padding_waste_accumulates_and_reports() {
+        let mut t = Telemetry::new(1.0, 1.0, 4);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
+        assert_eq!(obs.padded_prefill_tokens, 0);
+        assert_eq!(obs.padding_waste, 0.0, "no prefill → 0.0, not NaN");
+        t.record_prefill_padding(300, 100);
+        t.record_prefill_padding(100, 0);
+        let obs = t.observe(0.0, 1000, 0, 0, 0, [0, 0, 0], 0, 0.0);
+        assert_eq!(obs.padded_prefill_tokens, 100);
+        assert!((obs.padding_waste - 0.2).abs() < 1e-12,
+                "100 / (400 + 100) = 0.2, got {}", obs.padding_waste);
+        assert_eq!(t.prefill_padded_tokens(), 100);
+    }
+
+    /// Compile-time exhaustiveness guard: [`Observation::synthetic`] has
+    /// drifted behind the real struct before (PRs 5–8 each added fields
+    /// it silently defaulted). This destructure has no `..`, so adding a
+    /// field to `Observation` without deciding its synthetic value is a
+    /// compile error that points here.
+    #[test]
+    fn synthetic_observation_covers_every_field() {
+        let Observation {
+            now,
+            eta_tokens,
+            used_tokens,
+            mean_in,
+            mean_out,
+            var_in,
+            var_out,
+            length_samples,
+            recent_decode_latency,
+            recent_decode_batch,
+            running_decode,
+            pending_prefill,
+            waiting,
+            waiting_by_class,
+            kv_shared_tokens,
+            prefix_hit_rate,
+            decode_latency_by_class,
+            ttft_by_class,
+            padded_prefill_tokens,
+            padding_waste,
+        } = Observation::synthetic(1_000_000, 4096, 32, 4);
+        assert_eq!(now, 0.0);
+        assert_eq!(eta_tokens, 1_000_000);
+        assert_eq!(used_tokens, 4096);
+        assert_eq!(mean_in, 128.0);
+        assert_eq!(mean_out, 128.0);
+        assert_eq!(var_in, 64.0 * 64.0);
+        assert_eq!(var_out, 64.0 * 64.0);
+        assert_eq!(length_samples, 100);
+        assert_eq!(recent_decode_latency, Some(0.04));
+        assert_eq!(recent_decode_batch, Some(32.0));
+        assert_eq!(running_decode, 32);
+        assert_eq!(pending_prefill, 4);
+        assert_eq!(waiting, 10);
+        assert_eq!(waiting_by_class, [0, 10, 0]);
+        assert_eq!(kv_shared_tokens, 0);
+        assert_eq!(prefix_hit_rate, 0.0);
+        assert_eq!(decode_latency_by_class, [None; 3]);
+        assert_eq!(ttft_by_class, [None; 3]);
+        assert_eq!(padded_prefill_tokens, 0);
+        assert_eq!(padding_waste, 0.0);
     }
 
     #[test]

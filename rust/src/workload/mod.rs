@@ -89,6 +89,61 @@ impl LengthDist {
     }
 }
 
+/// Bimodal long-tail prompt mixture: with probability `long_frac` a
+/// prompt is drawn from `long`, otherwise from `short`. Models the
+/// interactive-chat vs document-ingest split that makes flat batching
+/// pad every short prompt up to the longest in the step — the traffic
+/// shape length-bucketed admission ([`crate::batching::BucketPlan`])
+/// is built for. `None` on [`Workload::length_mix`] keeps generation
+/// byte-identical to the single-distribution path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LengthMix {
+    /// Short-prompt mode (e.g. chat turns, tens of tokens).
+    pub short: LengthDist,
+    /// Long-prompt mode (e.g. document contexts, ~1k tokens).
+    pub long: LengthDist,
+    /// Probability a request draws from `long` (in [0, 1]).
+    pub long_frac: f64,
+}
+
+impl LengthMix {
+    /// The standard short-interactive / long-document shape: short mode
+    /// uniform in [`short_lo`, `short_hi`], long mode Normal around
+    /// `long_mean` (CV 0.3, clamped to `max`).
+    pub fn bimodal(short_lo: u32, short_hi: u32, long_mean: f64,
+                   long_frac: f64, max: u32) -> LengthMix {
+        LengthMix {
+            short: LengthDist::Uniform { min: short_lo, max: short_hi },
+            long: LengthDist::around(long_mean, max),
+            long_frac,
+        }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        if rng.f64() < self.long_frac {
+            self.long.sample(rng)
+        } else {
+            self.short.sample(rng)
+        }
+    }
+
+    /// Mixture mean: (1-p)·E[short] + p·E[long].
+    pub fn mean(&self) -> f64 {
+        let p = self.long_frac;
+        (1.0 - p) * self.short.mean() + p * self.long.mean()
+    }
+
+    /// Mixture variance via the law of total variance.
+    pub fn variance(&self) -> f64 {
+        let p = self.long_frac;
+        let (ms, ml) = (self.short.mean(), self.long.mean());
+        let e2 = (1.0 - p) * (self.short.variance() + ms * ms)
+            + p * (self.long.variance() + ml * ml);
+        let m = self.mean();
+        e2 - m * m
+    }
+}
+
 /// Multi-tenant shared-prefix overlay: every generated request is
 /// assigned one of `n_prefixes` tenants by a Zipf(`zipf_s`) draw and
 /// its prompt becomes that tenant's `prefix_tokens`-token system
@@ -122,6 +177,11 @@ pub struct Workload {
     /// Optional multi-tenant shared-prefix overlay (see
     /// [`SharedPrefixSpec`]).
     pub prefix: Option<SharedPrefixSpec>,
+    /// Optional bimodal prompt-length overlay (see [`LengthMix`]);
+    /// when set it replaces `prompt` for the length draw. `prompt`
+    /// still seeds nothing — keep it as a nominal fallback so older
+    /// tooling that inspects it stays sensible.
+    pub length_mix: Option<LengthMix>,
 }
 
 /// splitmix64 finalizer — deterministic token-id material for the
@@ -140,6 +200,13 @@ impl Workload {
         let mut arr_rng = rng.fork(1);
         let mut len_rng = rng.fork(2);
         let mut pfx_rng = rng.fork(3);
+        // Fork 4 only when the mixture is active: `fork` advances the
+        // root state, and the `None` path must stay byte-identical to
+        // every pre-mixture run.
+        let mut mix_rng = match self.length_mix {
+            Some(_) => Some(rng.fork(4)),
+            None => None,
+        };
         let mut t = 0.0f64;
         let mut burst_high = true;
         let mut burst_switch = 0.0f64;
@@ -168,7 +235,10 @@ impl Workload {
                     t
                 }
             };
-            let prompt = self.prompt.sample(&mut len_rng).max(1);
+            let prompt = match (&self.length_mix, mix_rng.as_mut()) {
+                (Some(m), Some(r)) => m.sample(r).max(1),
+                _ => self.prompt.sample(&mut len_rng).max(1),
+            };
             let output = self.output.sample(&mut len_rng).max(1);
             match &self.prefix {
                 None => {
@@ -211,6 +281,23 @@ impl Workload {
     pub fn with_seed(&self, seed: u64) -> Workload {
         Workload { seed, ..self.clone() }
     }
+
+    /// Prompt-length mean for telemetry priors — the mixture's when one
+    /// is active, else the base distribution's.
+    pub fn prompt_mean(&self) -> f64 {
+        match &self.length_mix {
+            Some(m) => m.mean(),
+            None => self.prompt.mean(),
+        }
+    }
+
+    /// Prompt-length variance (same mixture-aware dispatch).
+    pub fn prompt_variance(&self) -> f64 {
+        match &self.length_mix {
+            Some(m) => m.variance(),
+            None => self.prompt.variance(),
+        }
+    }
 }
 
 /// The six Table I rows: (model preset name, workload).
@@ -231,6 +318,7 @@ pub fn table1_rows() -> Vec<(&'static str, Workload)> {
             n_requests: n,
             seed: 42,
             prefix: None,
+            length_mix: None,
         })
     };
     vec![
@@ -253,6 +341,7 @@ pub fn table2_rows() -> Vec<(&'static str, f64, Workload, bool)> {
         n_requests: n,
         seed: 43,
         prefix: None,
+        length_mix: None,
     };
     vec![
         ("llama-65b", 0.050, mk("t2-llama65b", 237.7, 416.2, 3000), false),
@@ -277,6 +366,7 @@ mod tests {
             n_requests: 100,
             seed: 1,
             prefix: None,
+            length_mix: None,
         };
         let reqs = w.generate();
         assert_eq!(reqs.len(), 100);
@@ -295,6 +385,7 @@ mod tests {
             n_requests: 5000,
             seed: 2,
             prefix: None,
+            length_mix: None,
         };
         let reqs = w.generate();
         let span = reqs.last().unwrap().arrived_at;
@@ -316,6 +407,7 @@ mod tests {
             n_requests: 50,
             seed: 7,
             prefix: None,
+            length_mix: None,
         };
         let a = w.generate();
         let b = w.generate();
@@ -348,6 +440,7 @@ mod tests {
             n_requests: 500,
             seed: 9,
             prefix: None,
+            length_mix: None,
         };
         let reqs = w.generate();
         for pair in reqs.windows(2) {
@@ -389,6 +482,7 @@ mod tests {
                 prefix_tokens: 32,
                 zipf_s: 1.1,
             }),
+            length_mix: None,
         };
         let reqs = w.generate();
         // Total prompt = shared prefix + sampled suffix.
@@ -433,6 +527,7 @@ mod tests {
                 prefix_tokens: 48,
                 zipf_s: 1.0,
             }),
+            length_mix: None,
         };
         let a = w.generate();
         let b = w.generate();
@@ -456,8 +551,81 @@ mod tests {
             n_requests: 20,
             seed: 1,
             prefix: None,
+            length_mix: None,
         };
         assert!(w.generate().iter().all(|r| r.prompt_tokens.is_empty()));
+    }
+
+    #[test]
+    fn length_mix_draws_both_modes_with_right_moments() {
+        let mix = LengthMix::bimodal(16, 32, 1024.0, 0.2, 2048);
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::AllAtOnce,
+            prompt: LengthDist::Fixed(128), // nominal; overridden by mix
+            output: LengthDist::Fixed(4),
+            n_requests: 10_000,
+            seed: 31,
+            prefix: None,
+            length_mix: Some(mix.clone()),
+        };
+        let reqs = w.generate();
+        let (mut short, mut long) = (0usize, 0usize);
+        for r in &reqs {
+            if r.prompt_len <= 32 {
+                short += 1;
+            } else if r.prompt_len > 256 {
+                long += 1;
+            }
+        }
+        // ~80/20 split; the Normal long mode rarely dips below 256.
+        assert!((short as f64 / reqs.len() as f64 - 0.8).abs() < 0.02,
+                "short frac {}", short as f64 / reqs.len() as f64);
+        assert!((long as f64 / reqs.len() as f64 - 0.2).abs() < 0.02);
+        let mean = reqs.iter().map(|r| r.prompt_len as f64).sum::<f64>()
+            / reqs.len() as f64;
+        assert!((mean - mix.mean()).abs() / mix.mean() < 0.05,
+                "sampled {mean} vs analytic {}", mix.mean());
+        assert_eq!(w.prompt_mean(), mix.mean());
+        assert_eq!(w.prompt_variance(), mix.variance());
+        // Mixture variance dwarfs either mode's own spread.
+        assert!(mix.variance() > mix.long.variance());
+    }
+
+    #[test]
+    fn length_mix_none_is_byte_identical() {
+        // The mixture rng is forked lazily, so `length_mix: None` must
+        // reproduce the historical stream exactly.
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Poisson { rate: 2.0 },
+            prompt: LengthDist::around(100.0, 500),
+            output: LengthDist::around(300.0, 1000),
+            n_requests: 80,
+            seed: 7,
+            prefix: None,
+            length_mix: None,
+        };
+        let reqs = w.generate();
+        let again = w.generate();
+        for (x, y) in reqs.iter().zip(&again) {
+            assert_eq!(x.prompt_len, y.prompt_len);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+            assert_eq!(x.arrived_at, y.arrived_at);
+        }
+        // And flipping the mixture on changes prompts but not arrivals
+        // (the arrival fork is untouched by the length draw).
+        let mixed = Workload {
+            length_mix: Some(LengthMix::bimodal(8, 16, 600.0, 0.5, 900)),
+            ..w.clone()
+        };
+        let m = mixed.generate();
+        for (x, y) in reqs.iter().zip(&m) {
+            assert_eq!(x.arrived_at, y.arrived_at, "arrival fork intact");
+        }
+        assert!(reqs.iter().zip(&m).any(|(x, y)| {
+            x.prompt_len != y.prompt_len
+        }));
     }
 
     #[test]

@@ -79,6 +79,7 @@ mod tests {
             n_requests: 200,
             seed: 11,
             prefix: None,
+            length_mix: None,
         };
         let mut reqs = w.generate();
         // Mixed classes must survive the roundtrip.

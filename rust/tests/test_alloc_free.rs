@@ -54,6 +54,14 @@ fn steady_state_decode_steps_do_not_allocate() {
         // decode appends to private tail blocks and never touches the
         // tree, so the zero-allocation contract holds with it enabled.
         prefix_cache: true,
+        // Bucketing on, too: the controller's per-interval decision
+        // copies a precomputed `BucketPlan` (fixed arrays, `Copy`) into
+        // the directive, the third intrusive index is pointer surgery
+        // in the slab, and the padding charge is a plain field update —
+        // none of it may allocate in steady state.
+        buckets: 4,
+        bucket_base: 64,
+        padded_prefill: true,
         ..SchedulerConfig::default()
     };
     let m = pangu_7b();

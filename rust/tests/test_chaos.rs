@@ -28,6 +28,7 @@ fn scenario(n_requests: usize, rate: f64, seed: u64) -> SimScenario {
             n_requests,
             seed,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

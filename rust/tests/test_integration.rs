@@ -29,6 +29,7 @@ fn scenario(policy: PolicyKind) -> SimScenario {
             n_requests: 150,
             seed: 99,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

@@ -320,6 +320,7 @@ fn route_two_replicas_reach_1_8x_aggregate_throughput() {
             n_requests: 208,
             seed: 7,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,

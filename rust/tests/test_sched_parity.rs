@@ -50,6 +50,7 @@ fn scenario(policy: PolicyKind, n: usize) -> SimScenario {
             n_requests: n,
             seed: 7,
             prefix: None,
+            length_mix: None,
         },
         eta_tokens_override: None,
         swap_tokens: 0,
@@ -209,6 +210,42 @@ fn mixed_lifecycle_stress_under_shadow() {
     assert_eq!(sched.stats.cancelled, 1);
     assert_eq!(sched.kv.used_tokens(), 0);
     sched.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn catch_all_bucket_is_parity_with_unbucketed() {
+    // `buckets: 1` degenerates every plan level to the catch-all
+    // bucket: one prefill group per step, unlimited quota — exactly
+    // the unbucketed semantics. The bucketed run must therefore
+    // reproduce the plain run bit-for-bit (shadow checks additionally
+    // re-verify the third intrusive index every step), with only the
+    // controller label differing.
+    for (policy, name) in policies_under_test() {
+        let s = scenario(policy, 150);
+        let plain = run_manual(&s, false);
+        let mut b = s.clone();
+        b.sched.buckets = 1;
+        let mut bucketed = run_manual(&b, true);
+        assert!(bucketed.policy.ends_with("+buckets"),
+                "{name}: bucketing controller must be installed \
+                 (label {})", bucketed.policy);
+        bucketed.policy = plain.policy.clone();
+        assert_eq!(plain.to_json().to_string(),
+                   bucketed.to_json().to_string(),
+                   "{name}: catch-all bucketing changed behavior");
+    }
+    // Same degenerate-plan parity through the chunked-prefill planner
+    // (per-bucket budget consumption must reduce to the flat walk).
+    let mut s = scenario(PolicyKind::MemoryAware, 120);
+    s.sched.chunk_tokens = Some(64);
+    s.sched.adaptive_chunk = true;
+    let plain = run_manual(&s, false);
+    s.sched.buckets = 1;
+    let mut bucketed = run_manual(&s, true);
+    bucketed.policy = plain.policy.clone();
+    assert_eq!(plain.to_json().to_string(),
+               bucketed.to_json().to_string(),
+               "chunked: catch-all bucketing changed behavior");
 }
 
 #[test]
