@@ -1,0 +1,60 @@
+//! The serving edge under open-loop load in one sitting: self-host a
+//! simulated replica behind the event-loop server, drive it with a
+//! fixed-seed Poisson arrival schedule over real sockets, read the
+//! BENCH_server.json-style report, then shrink the edge caps and watch
+//! the server shed with typed overload frames instead of queueing.
+//!
+//!     cargo run --release --example loadgen_quickstart
+use dynabatch::loadgen::{run, LoadgenConfig};
+use dynabatch::server::EdgeConfig;
+use dynabatch::workload::Arrival;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open-loop: arrivals fire on the fixed-seed schedule whether or
+    //    not earlier requests finished — the schedule never adapts to
+    //    the server, which is what makes overload observable at all.
+    let cfg = LoadgenConfig {
+        arrival: Arrival::Poisson { rate: 60.0 },
+        duration_s: 1.5,
+        seed: 7,
+        max_new_tokens: 4,
+        ..LoadgenConfig::default()
+    };
+    let r = run(&cfg)?;
+    println!(
+        "healthy edge: {} arrivals, {} done, {} shed, {:.0} conn/s",
+        r.n_arrivals, r.done, r.overloaded, r.conn_per_s
+    );
+    println!("  accept-to-first-byte p95 = {:.2} ms, e2e p95 = {:.2} ms",
+             r.accept_to_first_byte.p95 * 1e3, r.e2e.p95 * 1e3);
+
+    // 2. Same seed → bit-identical schedule (the report pins it).
+    let again = run(&cfg)?;
+    assert_eq!(r.schedule_hash, again.schedule_hash);
+    println!("schedule hash {:016x} reproduced exactly", r.schedule_hash);
+
+    // 3. Starve the edge: two in-flight streams max, paced engine, and
+    //    a burst on top. Excess arrivals get a typed overload frame
+    //    *before* the scheduler ever sees them — the queue cannot grow.
+    let tiny = LoadgenConfig {
+        arrival: Arrival::Bursty { high: 150.0, low: 10.0, period: 0.3 },
+        duration_s: 1.0,
+        seed: 11,
+        max_new_tokens: 8,
+        edge: Some(EdgeConfig { max_inflight: 2, ..EdgeConfig::default() }),
+        host_step_delay_ms: 2,
+        ..LoadgenConfig::default()
+    };
+    let s = run(&tiny)?;
+    println!(
+        "starved edge: {} launched, {} done, {} shed ({:.0}% shed rate), \
+         {} hung",
+        s.launched, s.done, s.overloaded, s.shed_rate * 100.0, s.hung
+    );
+
+    // 4. The full report is the same JSON `dynabatch loadgen` writes to
+    //    BENCH_server.json (config/schedule/results deterministic for a
+    //    fixed seed; timing is wall-clock).
+    println!("{}", s.to_json(&tiny).to_string_pretty());
+    Ok(())
+}

@@ -2093,6 +2093,26 @@ mod tests {
     }
 
     #[test]
+    fn diurnal_run_completes_deterministically() {
+        // The loadgen's day/night arrival process through the same
+        // virtual-time path as every other workload: nothing lost,
+        // arrival-dominated makespan, bit-identical reruns.
+        let s = scenario(
+            PolicyKind::MemoryAware,
+            80,
+            Arrival::Diurnal { mean: 2.0, amplitude: 0.7, period: 10.0 },
+        );
+        let a = run_sim(&s).unwrap();
+        let b = run_sim(&s).unwrap();
+        assert_eq!(a.n_requests, 80);
+        // 80 requests at mean 2 qps → ≈ 40 s of arrivals.
+        assert!(a.makespan > 20.0, "makespan={}", a.makespan);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+        assert_eq!(a.tbt_p95.to_bits(), b.tbt_p95.to_bits());
+    }
+
+    #[test]
     fn dynamic_beats_greedy_under_memory_pressure() {
         // The Table-I mechanism in miniature, in the regime where it bites
         // (the LLaMA-65B row: long, variable outputs — every recompute

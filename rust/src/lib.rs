@@ -60,6 +60,7 @@ pub mod driver;
 pub mod engine;
 pub mod experiments;
 pub mod kv;
+pub mod loadgen;
 pub mod metrics;
 pub mod request;
 pub mod runtime;

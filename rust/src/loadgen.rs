@@ -1,0 +1,634 @@
+//! `dynabatch loadgen`: open-loop arrival generator driving the serving
+//! edge over real sockets.
+//!
+//! Open-loop means the arrival schedule is fixed *before* the run and
+//! never reacts to server latency — the honest way to measure a serving
+//! edge, since closed-loop clients self-throttle exactly when the
+//! server degrades (coordinated omission). The schedule is derived from
+//! the workload layer's [`ArrivalGen`] (Poisson / bursty / diurnal)
+//! with a fixed seed, so the same seed produces a bit-identical arrival
+//! schedule — and, on a run the server fully absorbs, bit-identical
+//! outcome counters.
+//!
+//! Each arrival is one short-lived connection issuing a single v2
+//! `generate` and reading its stream to the terminal event — thousands
+//! of simulated connections multiplexed from one thread over
+//! nonblocking sockets, reusing the server's own
+//! [`FrameBuf`]/[`WriteBuf`] framing. The report
+//! ([`LoadgenReport::to_json`]) is the `BENCH_server.json` trajectory:
+//! a deterministic part (`config` / `schedule` / `results` — the
+//! sections CI compares across two seeded runs) and a wall-clock part
+//! (`timing`: sustained conn/s, accept-to-first-byte, TTFT, e2e, shed
+//! rate).
+//!
+//! With no `--addr`, the generator self-hosts a simulated replica set
+//! behind the real event-loop edge ([`crate::server::serve_replicas_with`])
+//! so the whole path — accept, framing, backpressure, streaming —
+//! is exercised without PJRT artifacts.
+
+use crate::metrics::LatencySummary;
+use crate::server::protocol::{FrameBuf, WriteBuf};
+use crate::server::{self, EdgeConfig, Server};
+use crate::util::json::Json;
+use crate::util::rng::{splitmix64, Rng};
+use crate::workload::{Arrival, ArrivalGen};
+use anyhow::{anyhow, Result};
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Hard cap on materialized arrivals — a runaway-rate backstop, not a
+/// tuning knob. Hitting it is reported (`schedule.capped`), never
+/// silent.
+pub const MAX_ARRIVALS: usize = 200_000;
+
+/// One loadgen run's shape. `addr: None` self-hosts a simulated
+/// replica set behind the real serving edge.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Target server (`host:port`); `None` = self-host.
+    pub addr: Option<String>,
+    /// Open-loop arrival process ([`Arrival::AllAtOnce`] is rejected —
+    /// an open-loop run needs a rate).
+    pub arrival: Arrival,
+    /// Arrival-window length in seconds (connections may drain past
+    /// it, up to `grace_s`).
+    pub duration_s: f64,
+    /// Schedule seed: same seed ⇒ bit-identical arrival times.
+    pub seed: u64,
+    /// Prompt tokens per request (ids `1..=n`, v2 `prompt_tokens`).
+    pub prompt_tokens: u32,
+    /// `max_new_tokens` per request.
+    pub max_new_tokens: u32,
+    /// Simultaneously-open connection cap (fd guard). Arrivals landing
+    /// while at the cap are counted `local_capped`, not launched.
+    pub max_open: usize,
+    /// Replicas for the self-hosted set (`addr: None` only).
+    pub replicas: usize,
+    /// Edge limits for the self-hosted server (`None` = defaults) —
+    /// the backpressure tests shrink these to force shedding.
+    pub edge: Option<EdgeConfig>,
+    /// Seconds past the arrival window before an undrained connection
+    /// is declared hung and abandoned.
+    pub grace_s: f64,
+    /// Artificial per-step wall delay (ms) for the self-hosted sim
+    /// engine — the simulated engine decodes near-instantly, so
+    /// backpressure experiments pace it to force genuine overlap.
+    pub host_step_delay_ms: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: None,
+            arrival: Arrival::Poisson { rate: 50.0 },
+            duration_s: 2.0,
+            seed: 7,
+            prompt_tokens: 8,
+            max_new_tokens: 4,
+            max_open: 512,
+            replicas: 1,
+            edge: None,
+            grace_s: 10.0,
+            host_step_delay_ms: 0,
+        }
+    }
+}
+
+/// The run's outcome: deterministic schedule facts + outcome counters
+/// + wall-clock timing digests.
+#[derive(Debug, Clone, Default)]
+pub struct LoadgenReport {
+    pub n_arrivals: usize,
+    /// Order-sensitive hash over every arrival time's bit pattern —
+    /// the cheap cross-run schedule-identity check.
+    pub schedule_hash: u64,
+    pub schedule_capped: bool,
+    pub first_at: f64,
+    pub last_at: f64,
+    /// Connections actually opened (arrivals minus `local_capped` and
+    /// `connect_failed`).
+    pub launched: usize,
+    pub connect_failed: usize,
+    pub local_capped: usize,
+    /// Terminal outcomes per launched connection.
+    pub done: usize,
+    pub overloaded: usize,
+    pub errored: usize,
+    pub hung: usize,
+    /// Wall-clock section (never compared across runs).
+    pub wall_s: f64,
+    pub conn_per_s: f64,
+    pub shed_rate: f64,
+    pub accept_to_first_byte: LatencySummary,
+    pub ttft: LatencySummary,
+    pub e2e: LatencySummary,
+}
+
+impl LoadgenReport {
+    /// The `BENCH_server.json` document. `config` + `schedule` +
+    /// `results` are deterministic for a fixed seed on a run the
+    /// server fully absorbs; `timing` is wall-clock and excluded from
+    /// cross-run comparison.
+    pub fn to_json(&self, cfg: &LoadgenConfig) -> Json {
+        Json::obj(vec![
+            ("bench", Json::from("loadgen")),
+            (
+                "config",
+                Json::obj(vec![
+                    ("arrival", Json::from(arrival_label(&cfg.arrival))),
+                    ("duration_s", Json::Num(cfg.duration_s)),
+                    ("seed", Json::from(cfg.seed)),
+                    ("prompt_tokens", Json::from(cfg.prompt_tokens as u64)),
+                    (
+                        "max_new_tokens",
+                        Json::from(cfg.max_new_tokens as u64),
+                    ),
+                    ("max_open", Json::from(cfg.max_open)),
+                    (
+                        "target",
+                        match &cfg.addr {
+                            Some(a) => Json::from(a.clone()),
+                            None => Json::from(format!(
+                                "self-hosted sim x{}",
+                                cfg.replicas.max(1)
+                            )),
+                        },
+                    ),
+                ]),
+            ),
+            (
+                "schedule",
+                Json::obj(vec![
+                    ("n_arrivals", Json::from(self.n_arrivals)),
+                    (
+                        "hash",
+                        Json::from(format!("{:016x}", self.schedule_hash)),
+                    ),
+                    ("capped", Json::from(self.schedule_capped)),
+                    ("first_at_s", Json::Num(self.first_at)),
+                    ("last_at_s", Json::Num(self.last_at)),
+                ]),
+            ),
+            (
+                "results",
+                Json::obj(vec![
+                    ("launched", Json::from(self.launched)),
+                    ("connect_failed", Json::from(self.connect_failed)),
+                    ("local_capped", Json::from(self.local_capped)),
+                    ("done", Json::from(self.done)),
+                    ("overloaded", Json::from(self.overloaded)),
+                    ("errored", Json::from(self.errored)),
+                    ("hung", Json::from(self.hung)),
+                ]),
+            ),
+            (
+                "timing",
+                Json::obj(vec![
+                    ("wall_s", Json::Num(self.wall_s)),
+                    ("sustained_conn_per_s", Json::Num(self.conn_per_s)),
+                    ("shed_rate", Json::Num(self.shed_rate)),
+                    (
+                        "accept_to_first_byte_ms",
+                        self.accept_to_first_byte.to_json_scaled(1e3),
+                    ),
+                    ("ttft_ms", self.ttft.to_json_scaled(1e3)),
+                    ("e2e_ms", self.e2e.to_json_scaled(1e3)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Human label for an arrival process (report `config.arrival`).
+pub fn arrival_label(a: &Arrival) -> String {
+    match *a {
+        Arrival::AllAtOnce => "all-at-once".into(),
+        Arrival::Poisson { rate } => format!("poisson(rate={rate})"),
+        Arrival::Bursty { high, low, period } => {
+            format!("bursty(high={high},low={low},period={period})")
+        }
+        Arrival::Diurnal { mean, amplitude, period } => format!(
+            "diurnal(mean={mean},amplitude={amplitude},period={period})"
+        ),
+    }
+}
+
+/// The deterministic arrival schedule: every arrival in
+/// `[0, duration_s]` under `arrival` with `seed` (via the workload
+/// layer's fork-1 discipline, so a loadgen schedule and a
+/// [`crate::workload::Workload`] with the same seed and process agree
+/// bit for bit). Errors on [`Arrival::AllAtOnce`].
+pub fn schedule(
+    arrival: &Arrival,
+    duration_s: f64,
+    seed: u64,
+) -> Result<Vec<f64>> {
+    if matches!(arrival, Arrival::AllAtOnce) {
+        return Err(anyhow!(
+            "open-loop loadgen needs a rated arrival process \
+             (poisson/bursty/diurnal), not all-at-once"
+        ));
+    }
+    let mut root = Rng::new(seed);
+    let mut g = ArrivalGen::new(root.fork(1));
+    let mut out = Vec::new();
+    loop {
+        let at = g.next_at(arrival);
+        if at > duration_s || out.len() >= MAX_ARRIVALS {
+            break;
+        }
+        out.push(at);
+    }
+    Ok(out)
+}
+
+/// Order-sensitive digest of a schedule's exact bit patterns.
+pub fn schedule_hash(times: &[f64]) -> u64 {
+    let mut h = 0x9E37_79B9_7F4A_7C15u64 ^ times.len() as u64;
+    for t in times {
+        let mut s = h ^ t.to_bits();
+        h = splitmix64(&mut s);
+    }
+    h
+}
+
+/// Run one loadgen pass: build the schedule, resolve (or self-host)
+/// the target, drive every arrival to a terminal outcome, digest.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    let times = schedule(&cfg.arrival, cfg.duration_s, cfg.seed)?;
+    let hosted: Option<Arc<Server>> = match cfg.addr {
+        Some(_) => None,
+        None => Some(host_sim(cfg)?),
+    };
+    let addr = match &cfg.addr {
+        Some(a) => a.clone(),
+        None => hosted.as_ref().unwrap().local_addr.to_string(),
+    };
+    let result = drive(&addr, &times, cfg);
+    if let Some(s) = hosted {
+        s.shutdown();
+    }
+    result
+}
+
+/// Simulated engine with an artificial wall-clock cost per step, so
+/// self-hosted backpressure runs have genuine in-flight overlap.
+struct PacedEngine {
+    inner: crate::engine::sim::SimEngine,
+    delay: Duration,
+}
+
+impl crate::engine::Engine for PacedEngine {
+    fn step(
+        &mut self,
+        plan: &crate::engine::StepPlan,
+        out: &mut crate::engine::StepOutcome,
+    ) -> Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.step(plan, out)
+    }
+
+    fn release(&mut self, id: crate::request::RequestId) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        format!("paced({})", self.inner.label())
+    }
+}
+
+/// Self-host a simulated replica set behind the real serving edge.
+fn host_sim(cfg: &LoadgenConfig) -> Result<Arc<Server>> {
+    use crate::config::presets::{cpu_host, tiny_real};
+    use crate::config::PolicyKind;
+    use crate::engine::sim::SimEngine;
+    use crate::engine::Engine;
+    use crate::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
+    let delay = cfg.host_step_delay_ms;
+    let set = ReplicaSet::build(
+        cfg.replicas.max(1),
+        RoutePolicy::LeastLoaded,
+        |_| {
+            let b = ServiceBuilder::new(tiny_real(), cpu_host())
+                .policy(PolicyKind::Combined)
+                .d_sla(0.05)
+                .eta_tokens(100_000);
+            if delay == 0 {
+                return b;
+            }
+            b.engine(move || {
+                Ok(Box::new(PacedEngine {
+                    inner: SimEngine::new(&tiny_real(), &cpu_host()),
+                    delay: Duration::from_millis(delay),
+                }) as Box<dyn Engine>)
+            })
+        },
+    )?;
+    server::serve_replicas_with(
+        set,
+        "127.0.0.1:0",
+        cfg.edge.clone().unwrap_or_default(),
+    )
+}
+
+/// Per-connection client state (mirrors the server's conn shape, one
+/// request deep).
+struct LcConn {
+    stream: TcpStream,
+    rbuf: FrameBuf,
+    wbuf: WriteBuf,
+    opened_at: f64,
+    first_byte_at: Option<f64>,
+    first_token_at: Option<f64>,
+    outcome: Option<Outcome>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Done,
+    Overloaded,
+    Errored,
+}
+
+/// Drive the schedule against `addr` from one thread: launch arrivals
+/// on time, multiplex every open connection's reads/writes
+/// nonblockingly, and account each to exactly one terminal outcome.
+fn drive(
+    addr: &str,
+    times: &[f64],
+    cfg: &LoadgenConfig,
+) -> Result<LoadgenReport> {
+    let mut report = LoadgenReport {
+        n_arrivals: times.len(),
+        schedule_hash: schedule_hash(times),
+        schedule_capped: times.len() >= MAX_ARRIVALS,
+        first_at: times.first().copied().unwrap_or(0.0),
+        last_at: times.last().copied().unwrap_or(0.0),
+        ..LoadgenReport::default()
+    };
+    // One request line, serialized once and replayed per connection.
+    let prompt: Vec<Json> = (1..=cfg.prompt_tokens as i64)
+        .map(Json::from)
+        .collect();
+    let req = Json::obj(vec![
+        ("op", Json::from("generate")),
+        ("prompt_tokens", Json::Arr(prompt)),
+        ("max_new_tokens", Json::from(cfg.max_new_tokens as u64)),
+    ]);
+    let mut scratch = String::new();
+
+    let start = Instant::now();
+    let deadline = cfg.duration_s + cfg.grace_s.max(0.0);
+    let mut conns: Vec<LcConn> = Vec::new();
+    let mut next = 0usize;
+    let (mut a2fb, mut ttft, mut e2e) =
+        (Vec::new(), Vec::new(), Vec::new());
+
+    while next < times.len() || !conns.is_empty() {
+        let now = start.elapsed().as_secs_f64();
+        let mut active = false;
+
+        // Launch every arrival whose time has come (open-loop: we
+        // never wait for the server before opening the next one).
+        while next < times.len() && times[next] <= now {
+            next += 1;
+            if conns.len() >= cfg.max_open {
+                report.local_capped += 1;
+                continue;
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nonblocking(true)?;
+                    let _ = stream.set_nodelay(true);
+                    let mut wbuf = WriteBuf::new();
+                    wbuf.push_line(&req, &mut scratch);
+                    conns.push(LcConn {
+                        stream,
+                        rbuf: FrameBuf::new(),
+                        wbuf,
+                        opened_at: start.elapsed().as_secs_f64(),
+                        first_byte_at: None,
+                        first_token_at: None,
+                        outcome: None,
+                    });
+                    report.launched += 1;
+                }
+                Err(_) => report.connect_failed += 1,
+            }
+            active = true;
+        }
+
+        // Poll every open connection: flush, read, frame, classify.
+        let mut i = 0;
+        while i < conns.len() {
+            let c = &mut conns[i];
+            let mut dead = false;
+            if c.wbuf.pending() > 0 {
+                match c.wbuf.flush_into(&mut c.stream) {
+                    Ok(n) if n > 0 => active = true,
+                    Ok(_) => {}
+                    Err(_) => {
+                        c.outcome.get_or_insert(Outcome::Errored);
+                        dead = true;
+                    }
+                }
+            }
+            if !dead {
+                match c.rbuf.fill_from(&mut c.stream) {
+                    Ok(0) => {
+                        // EOF without a terminal event = server closed
+                        // on us (e.g. after an accept-refusal frame).
+                        c.outcome.get_or_insert(Outcome::Errored);
+                        dead = true;
+                    }
+                    Ok(_) => {
+                        active = true;
+                        let at = start.elapsed().as_secs_f64();
+                        if c.first_byte_at.is_none() {
+                            c.first_byte_at = Some(at);
+                        }
+                        while let Some(frame) = c.rbuf.next_frame() {
+                            let Ok(text) = std::str::from_utf8(frame)
+                            else {
+                                c.outcome
+                                    .get_or_insert(Outcome::Errored);
+                                dead = true;
+                                break;
+                            };
+                            let Ok(msg) = Json::parse(text) else {
+                                c.outcome
+                                    .get_or_insert(Outcome::Errored);
+                                dead = true;
+                                break;
+                            };
+                            match msg.get("type").as_str() {
+                                Some("token") => {
+                                    if c.first_token_at.is_none() {
+                                        c.first_token_at = Some(at);
+                                    }
+                                }
+                                Some("done") => {
+                                    c.outcome = Some(Outcome::Done);
+                                    dead = true;
+                                    break;
+                                }
+                                Some("overload") => {
+                                    c.outcome =
+                                        Some(Outcome::Overloaded);
+                                    dead = true;
+                                    break;
+                                }
+                                Some("error") | Some("cancelled") => {
+                                    c.outcome =
+                                        Some(Outcome::Errored);
+                                    dead = true;
+                                    break;
+                                }
+                                // accepted / stats / anything else:
+                                // keep streaming.
+                                _ => {}
+                            }
+                        }
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock
+                        || e.kind() == ErrorKind::Interrupted => {}
+                    Err(_) => {
+                        c.outcome.get_or_insert(Outcome::Errored);
+                        dead = true;
+                    }
+                }
+            }
+            if !dead && now > deadline {
+                // Past the grace window with no terminal event.
+                report.hung += 1;
+                conns.swap_remove(i);
+                continue;
+            }
+            if dead {
+                match c.outcome.unwrap_or(Outcome::Errored) {
+                    Outcome::Done => {
+                        report.done += 1;
+                        let open = c.opened_at;
+                        if let Some(fb) = c.first_byte_at {
+                            a2fb.push(fb - open);
+                        }
+                        if let Some(ft) = c.first_token_at {
+                            ttft.push(ft - open);
+                        }
+                        e2e.push(
+                            start.elapsed().as_secs_f64() - open,
+                        );
+                    }
+                    Outcome::Overloaded => report.overloaded += 1,
+                    Outcome::Errored => report.errored += 1,
+                }
+                conns.swap_remove(i);
+                continue;
+            }
+            i += 1;
+        }
+
+        if now > deadline && next >= times.len() && conns.is_empty() {
+            break;
+        }
+        if !active {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    report.wall_s = start.elapsed().as_secs_f64();
+    report.conn_per_s =
+        report.launched as f64 / report.wall_s.max(1e-9);
+    report.shed_rate = report.overloaded as f64
+        / (report.launched.max(1)) as f64;
+    report.accept_to_first_byte =
+        LatencySummary::from_samples(&mut a2fb);
+    report.ttft = LatencySummary::from_samples(&mut ttft);
+    report.e2e = LatencySummary::from_samples(&mut e2e);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_bounded() {
+        let a = Arrival::Poisson { rate: 40.0 };
+        let s1 = schedule(&a, 2.0, 7).unwrap();
+        let s2 = schedule(&a, 2.0, 7).unwrap();
+        assert_eq!(s1.len(), s2.len());
+        assert!(!s1.is_empty());
+        for (x, y) in s1.iter().zip(&s2) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(schedule_hash(&s1), schedule_hash(&s2));
+        assert!(s1.iter().all(|&t| (0.0..=2.0).contains(&t)));
+        let s3 = schedule(&a, 2.0, 8).unwrap();
+        assert_ne!(schedule_hash(&s1), schedule_hash(&s3));
+    }
+
+    #[test]
+    fn schedule_matches_workload_layer() {
+        use crate::workload::{LengthDist, Workload};
+        let a = Arrival::Bursty { high: 30.0, low: 2.0, period: 1.0 };
+        let s = schedule(&a, 5.0, 13).unwrap();
+        let w = Workload {
+            name: "t".into(),
+            arrival: a,
+            prompt: LengthDist::Fixed(1),
+            output: LengthDist::Fixed(1),
+            n_requests: s.len(),
+            seed: 13,
+            prefix: None,
+            length_mix: None,
+        };
+        let reqs = w.generate();
+        for (t, r) in s.iter().zip(&reqs) {
+            assert_eq!(t.to_bits(), r.arrived_at.to_bits());
+        }
+    }
+
+    #[test]
+    fn all_at_once_is_rejected() {
+        assert!(schedule(&Arrival::AllAtOnce, 1.0, 1).is_err());
+        let cfg = LoadgenConfig {
+            arrival: Arrival::AllAtOnce,
+            ..LoadgenConfig::default()
+        };
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn report_json_sections() {
+        let cfg = LoadgenConfig::default();
+        let r = LoadgenReport {
+            n_arrivals: 3,
+            schedule_hash: 0xABCD,
+            done: 3,
+            launched: 3,
+            ..LoadgenReport::default()
+        };
+        let j = r.to_json(&cfg);
+        for sec in ["config", "schedule", "results", "timing"] {
+            assert!(!j.get(sec).is_null(), "missing section {sec}");
+        }
+        assert_eq!(
+            j.get("schedule").get("hash").as_str(),
+            Some("000000000000abcd")
+        );
+        assert_eq!(j.get("results").get("done").as_u64(), Some(3));
+        // round-trips
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

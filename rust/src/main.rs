@@ -297,6 +297,33 @@ fn cli() -> Command {
                 .flag("quick", "smoke mode: 500 requests (CI)"),
         )
         .subcommand(
+            Command::new("loadgen",
+                         "open-loop load generator over real sockets: \
+                          fixed-seed arrival schedule (Poisson / bursty \
+                          / diurnal) driving the serving edge, one \
+                          connection per arrival → BENCH_server.json \
+                          (deterministic schedule/results sections + \
+                          wall-clock timing)")
+                .opt("addr", "",
+                     "target server host:port (empty = self-host a \
+                      simulated replica set behind the real edge)")
+                .opt("rate", "50",
+                     "mean arrival rate qps (poisson rate / diurnal \
+                      mean)")
+                .opt("arrival", "poisson",
+                     "poisson | bursty:HIGH,LOW,PERIOD | \
+                      diurnal:AMPLITUDE,PERIOD")
+                .opt("duration", "2", "arrival window (seconds)")
+                .opt("seed", "7", "schedule seed")
+                .opt("prompt-tokens", "8", "prompt tokens per request")
+                .opt("max-new", "4", "max_new_tokens per request")
+                .opt("max-open", "512",
+                     "simultaneously-open connection cap (fd guard)")
+                .opt("replicas", "1", "self-hosted sim replicas")
+                .opt("out", "BENCH_server.json",
+                     "output path ('' = stdout only)"),
+        )
+        .subcommand(
             Command::new("workload", "generate a workload trace (JSONL)")
                 .opt("out", "trace.jsonl", "output path")
                 .opt("requests", "1000", "request count")
@@ -347,6 +374,7 @@ fn main() {
         "bucket" => cmd_bucket(&sub),
         "serve" => cmd_serve(&sub),
         "bench-sched" => cmd_bench_sched(&sub),
+        "loadgen" => cmd_loadgen(&sub),
         "workload" => cmd_workload(&sub),
         _ => unreachable!(),
     };
@@ -1172,6 +1200,92 @@ fn cmd_bench_sched(m: &M) -> Result<()> {
     let out = m.get("out");
     if !out.is_empty() {
         std::fs::write(out, report.to_string_pretty())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+/// Parse `--arrival` for loadgen: `poisson` (rate from `--rate`),
+/// `bursty:HIGH,LOW,PERIOD`, `diurnal:AMPLITUDE,PERIOD` (mean from
+/// `--rate`).
+fn parse_loadgen_arrival(spec: &str, rate: f64) -> Result<Arrival> {
+    let (kind, args) = match spec.split_once(':') {
+        Some((k, a)) => (k, a),
+        None => (spec, ""),
+    };
+    match kind {
+        "poisson" => Ok(Arrival::Poisson { rate }),
+        "bursty" => {
+            let v: Vec<f64> = parse_list(args)?;
+            let [high, low, period] = v.as_slice() else {
+                return Err(anyhow!(
+                    "bursty wants HIGH,LOW,PERIOD (got '{args}')"
+                ));
+            };
+            Ok(Arrival::Bursty {
+                high: *high,
+                low: *low,
+                period: *period,
+            })
+        }
+        "diurnal" => {
+            let v: Vec<f64> = parse_list(args)?;
+            let [amplitude, period] = v.as_slice() else {
+                return Err(anyhow!(
+                    "diurnal wants AMPLITUDE,PERIOD (got '{args}')"
+                ));
+            };
+            Ok(Arrival::Diurnal {
+                mean: rate,
+                amplitude: *amplitude,
+                period: *period,
+            })
+        }
+        other => Err(anyhow!(
+            "unknown arrival '{other}' (poisson | bursty:H,L,P | \
+             diurnal:A,P)"
+        )),
+    }
+}
+
+/// `dynabatch loadgen`: open-loop load against a live serving edge (or
+/// a self-hosted simulated one) → BENCH_server.json.
+fn cmd_loadgen(m: &M) -> Result<()> {
+    let rate = m.get_f64("rate")?;
+    let arrival = parse_loadgen_arrival(m.get("arrival"), rate)?;
+    let addr = m.get("addr");
+    let cfg = dynabatch::loadgen::LoadgenConfig {
+        addr: if addr.is_empty() { None } else { Some(addr.into()) },
+        arrival,
+        duration_s: m.get_f64("duration")?,
+        seed: m.get_u64("seed")?,
+        prompt_tokens: m.get_u64("prompt-tokens")? as u32,
+        max_new_tokens: m.get_u64("max-new")? as u32,
+        max_open: m.get_usize("max-open")?,
+        replicas: m.get_usize("replicas")?,
+        ..dynabatch::loadgen::LoadgenConfig::default()
+    };
+    let report = dynabatch::loadgen::run(&cfg)?;
+    let j = report.to_json(&cfg);
+    println!(
+        "loadgen: {} arrivals over {:.1}s → launched={} done={} \
+         overloaded={} errored={} hung={} ({:.0} conn/s, shed \
+         {:.1}%)",
+        report.n_arrivals,
+        cfg.duration_s,
+        report.launched,
+        report.done,
+        report.overloaded,
+        report.errored,
+        report.hung,
+        report.conn_per_s,
+        report.shed_rate * 100.0,
+    );
+    let out = m.get("out");
+    if out.is_empty() {
+        println!("{}", j.to_string_pretty());
+    } else {
+        std::fs::write(out, j.to_string_pretty())?;
         println!("wrote {out}");
     }
     Ok(())

@@ -62,6 +62,53 @@ impl ClassMetrics {
     }
 }
 
+/// Compact latency digest (count + mean + tail percentiles) for
+/// metrics that are collected as raw sample vectors — the load
+/// generator's accept-to-first-byte / TTFT / e2e distributions. Units
+/// are whatever the samples carry (the loadgen report uses seconds and
+/// converts to ms at serialization).
+#[derive(Debug, Clone, Default)]
+pub struct LatencySummary {
+    pub n: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl LatencySummary {
+    /// Digest a sample vector (sorted in place; empty in → all-zero
+    /// out, so "no data" serializes as zeros with `n == 0` flagging
+    /// it).
+    pub fn from_samples(xs: &mut [f64]) -> LatencySummary {
+        if xs.is_empty() {
+            return LatencySummary::default();
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        LatencySummary {
+            n: xs.len(),
+            mean,
+            p50: percentile_of(xs, 50.0),
+            p95: percentile_of(xs, 95.0),
+            p99: percentile_of(xs, 99.0),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+
+    /// Serialize with a unit scale (e.g. `1e3` for seconds → ms).
+    pub fn to_json_scaled(&self, scale: f64) -> Json {
+        Json::obj(vec![
+            ("n", Json::from(self.n)),
+            ("mean", Json::Num(self.mean * scale)),
+            ("p50", Json::Num(self.p50 * scale)),
+            ("p95", Json::Num(self.p95 * scale)),
+            ("p99", Json::Num(self.p99 * scale)),
+            ("max", Json::Num(self.max * scale)),
+        ])
+    }
+}
+
 /// Everything a single experiment run yields.
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
@@ -643,6 +690,23 @@ mod tests {
         assert_eq!(pc[0].get("class").as_str(), Some("interactive"));
         assert!(pc[1].get("sla_target_s").is_null());
         assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn latency_summary_digest_and_empty() {
+        let mut xs: Vec<f64> = (1..=100).map(|i| i as f64 / 1e3).collect();
+        let s = LatencySummary::from_samples(&mut xs);
+        assert_eq!(s.n, 100);
+        assert!((s.mean - 0.0505).abs() < 1e-9);
+        assert!((s.p50 - 0.0505).abs() < 1e-6, "p50={}", s.p50);
+        assert!(s.p95 > s.p50 && s.p99 >= s.p95 && s.max >= s.p99);
+        assert!((s.max - 0.1).abs() < 1e-12);
+        let j = s.to_json_scaled(1e3);
+        assert_eq!(j.get("n").as_u64(), Some(100));
+        assert!((j.get("max").as_f64().unwrap() - 100.0).abs() < 1e-9);
+        let empty = LatencySummary::from_samples(&mut []);
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.max, 0.0);
     }
 
     #[test]

@@ -28,12 +28,19 @@ pub enum ClientError {
     /// No reply line arrived within the per-op timeout configured via
     /// [`Client::set_op_timeout`].
     TimedOut,
+    /// The server shed this request at the serving edge with a typed
+    /// `overload` frame (before it reached the scheduler). The
+    /// connection is still usable — back off and retry.
+    Overloaded,
 }
 
 impl std::fmt::Display for ClientError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             ClientError::TimedOut => write!(f, "server reply timed out"),
+            ClientError::Overloaded => {
+                write!(f, "server shed the request at the edge")
+            }
         }
     }
 }
@@ -162,6 +169,22 @@ pub struct ServerStats {
     pub n_replicas: u64,
     /// Route policy label (empty from pre-replica servers).
     pub route_policy: String,
+    /// Serving-edge counters (all 0 from pre-event-loop servers):
+    /// connections accepted / refused-at-accept / currently open.
+    pub edge_accepted_conns: u64,
+    pub edge_refused_conns: u64,
+    pub edge_open_conns: u64,
+    /// Requests currently streaming through the edge.
+    pub edge_inflight: u64,
+    /// `generate` ops shed with a typed `overload` frame before
+    /// reaching the scheduler.
+    pub edge_sheds: u64,
+    /// Connections closed by the slow-reader guard.
+    pub edge_slow_closed: u64,
+    /// Frames parsed / frames rejected (bad utf-8, bad json,
+    /// oversized).
+    pub edge_frames: u64,
+    pub edge_bad_frames: u64,
     /// Health labels (`healthy` | `suspect` | `down` | `recovering`;
     /// empty from pre-chaos servers). Top level: index-aligned with the
     /// replicas; each per-replica entry holds its own single-element
@@ -242,6 +265,17 @@ pub enum ClientEvent {
     FleetPolicySet { policy: String },
     /// Reply to `scale`: the live replica count after scaling.
     Scaled { live: u64 },
+    /// The edge shed a request (or refused the connection) with a
+    /// typed `overload` frame: `shed` is `"edge"` or `"accept"`,
+    /// `limit` the cap that was hit, `retry_ms` the server's backoff
+    /// hint. The blocking helpers surface this as
+    /// [`ClientError::Overloaded`].
+    Overload {
+        limit: u64,
+        retry_ms: f64,
+        shed: String,
+        message: String,
+    },
     /// Server-side error; `id` is absent for connection-level errors.
     Error { id: Option<u64>, message: String },
     Bye,
@@ -309,6 +343,17 @@ fn parse_stats(ev: &Json) -> ServerStats {
         n_replicas: ev.get("n_replicas").as_u64().unwrap_or(0),
         route_policy:
             ev.get("route_policy").as_str().unwrap_or("").into(),
+        edge_accepted_conns:
+            ev.get("edge_accepted_conns").as_u64().unwrap_or(0),
+        edge_refused_conns:
+            ev.get("edge_refused_conns").as_u64().unwrap_or(0),
+        edge_open_conns: ev.get("edge_open_conns").as_u64().unwrap_or(0),
+        edge_inflight: ev.get("edge_inflight").as_u64().unwrap_or(0),
+        edge_sheds: ev.get("edge_sheds").as_u64().unwrap_or(0),
+        edge_slow_closed:
+            ev.get("edge_slow_closed").as_u64().unwrap_or(0),
+        edge_frames: ev.get("edge_frames").as_u64().unwrap_or(0),
+        edge_bad_frames: ev.get("edge_bad_frames").as_u64().unwrap_or(0),
         health: {
             let h = ev.get("health");
             if let Some(s) = h.as_str() {
@@ -540,6 +585,12 @@ impl Client {
             Some("scaled") => ClientEvent::Scaled {
                 live: ev.get("live").as_u64().unwrap_or(0),
             },
+            Some("overload") => ClientEvent::Overload {
+                limit: ev.get("limit").as_u64().unwrap_or(0),
+                retry_ms: ev.get("retry_ms").as_f64().unwrap_or(0.0),
+                shed: ev.get("shed").as_str().unwrap_or("edge").into(),
+                message: ev.get("error").as_str().unwrap_or("").into(),
+            },
             Some("error") => ClientEvent::Error {
                 id: id(),
                 message: ev.get("error").as_str().unwrap_or("?").into(),
@@ -627,6 +678,15 @@ impl Client {
                         None => bail!("server error: {message}"),
                     }
                 }
+                // A shed can only target the generate this helper just
+                // sent: anything accepted earlier is already streaming
+                // and anything sent later is not in flight yet.
+                ClientEvent::Overload { message, .. } if id.is_none() => {
+                    return Err(anyhow::Error::new(
+                        ClientError::Overloaded,
+                    )
+                    .context(message));
+                }
                 ClientEvent::Bye => {
                     bail!("server shut down mid-generation");
                 }
@@ -648,6 +708,12 @@ impl Client {
             // on events this call itself just buffered.
             match self.read_event()? {
                 ClientEvent::Accepted { id, .. } => return Ok(id),
+                ClientEvent::Overload { message, .. } => {
+                    return Err(anyhow::Error::new(
+                        ClientError::Overloaded,
+                    )
+                    .context(message));
+                }
                 ClientEvent::Error { id: None, message } => {
                     bail!("server rejected submission: {message}")
                 }

@@ -1,0 +1,843 @@
+//! The serving edge: one nonblocking event loop owning every
+//! connection.
+//!
+//! Readiness polling over plain `std::net` (the tree is
+//! dependency-light by design): the listener and every accepted socket
+//! run nonblocking, and a single "dynabatch-serve" thread laps over
+//! accept → read/frame/dispatch → stream-poll → completion-drain →
+//! flush, sleeping ~1 ms only when a full lap saw no work. Per
+//! connection there is a small state machine ([`Conn`]) with recycled
+//! read/write buffers (`FrameBuf`/`WriteBuf` from
+//! [`super::protocol`]) — no thread per connection, no thread per
+//! stream, no allocation per frame in steady state.
+//!
+//! Backpressure happens at the edge, before the scheduler sees the
+//! request:
+//!
+//! - **accept shed** — over [`EdgeConfig::max_conns`] open connections,
+//!   a new one gets a best-effort typed `overload` frame and is closed.
+//! - **edge shed** — over [`EdgeConfig::max_inflight`] streaming
+//!   requests server-wide, a `generate` gets the typed `overload`
+//!   frame instead of reaching `ReplicaSet::submit`; the scheduler's
+//!   queues never grow.
+//! - **slow reader** — a connection whose unread output exceeds
+//!   [`EdgeConfig::max_wbuf_bytes`] is closed (its in-flight requests
+//!   are cancelled so their KV blocks free); it cannot stall anyone
+//!   else because writes never block the loop.
+//!
+//! Admin ops that genuinely block (`drain`, `rolling_restart`,
+//! `set_policy` — each waits on service-loop progress) run on side
+//! threads and post their reply frame back through a completion
+//! channel; everything else (stats, cancel, reopen, fleet ops, submit)
+//! is handled inline in the lap.
+
+use super::protocol::{
+    conn_error, event_to_json, overload_json, parse_generate,
+    parse_replica, FrameBuf, WriteBuf,
+};
+use super::{fleet_stats_to_json, stats_to_json, Server};
+use crate::config::{FleetPolicyKind, PolicyKind};
+use crate::service::SubmissionHandle;
+use crate::util::json::Json;
+use anyhow::anyhow;
+use std::collections::HashSet;
+use std::io::ErrorKind;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Edge limits and tuning for the event-loop server. Defaults are
+/// generous for tests and single-host serving; loadgen experiments
+/// shrink them via [`super::serve_replicas_with`] to force shedding.
+#[derive(Clone, Debug)]
+pub struct EdgeConfig {
+    /// Open-connection cap; further accepts are shed with a typed
+    /// `overload` frame (`shed:"accept"`).
+    pub max_conns: usize,
+    /// Server-wide cap on concurrently streaming requests; `generate`
+    /// beyond it is shed with `overload` (`shed:"edge"`) *before*
+    /// submission, so scheduler queues never grow from overload.
+    pub max_inflight: usize,
+    /// Per-connection streaming-request cap (protocol-visible since
+    /// v2: the "too many in-flight requests on this connection" error).
+    pub max_inflight_per_conn: usize,
+    /// Unread-output bound per connection; beyond it the reader is
+    /// declared dead and the connection is closed (slow-reader guard).
+    pub max_wbuf_bytes: usize,
+    /// Largest accepted frame; a longer line is a typed error and the
+    /// connection closes (it cannot be resynchronized cheaply).
+    pub max_frame_bytes: usize,
+    /// Retry hint stamped into `overload` frames, milliseconds.
+    pub retry_ms: f64,
+}
+
+impl Default for EdgeConfig {
+    fn default() -> Self {
+        EdgeConfig {
+            max_conns: 4096,
+            max_inflight: 1024,
+            max_inflight_per_conn: 64,
+            max_wbuf_bytes: 4 << 20,
+            max_frame_bytes: 1 << 20,
+            retry_ms: 50.0,
+        }
+    }
+}
+
+/// Live edge counters, surfaced as `edge_*` fields of the v2 `stats`
+/// reply (additive — older clients ignore them). Written by the serve
+/// loop, read from any thread.
+#[derive(Default)]
+pub struct EdgeStats {
+    pub accepted_conns: AtomicU64,
+    pub refused_conns: AtomicU64,
+    pub open_conns: AtomicU64,
+    pub inflight: AtomicU64,
+    pub sheds: AtomicU64,
+    pub slow_closed: AtomicU64,
+    pub frames: AtomicU64,
+    pub bad_frames: AtomicU64,
+}
+
+impl EdgeStats {
+    pub(super) fn fields(&self) -> Vec<(&'static str, Json)> {
+        let g = |a: &AtomicU64| Json::from(a.load(Ordering::Relaxed));
+        vec![
+            ("edge_accepted_conns", g(&self.accepted_conns)),
+            ("edge_refused_conns", g(&self.refused_conns)),
+            ("edge_open_conns", g(&self.open_conns)),
+            ("edge_inflight", g(&self.inflight)),
+            ("edge_sheds", g(&self.sheds)),
+            ("edge_slow_closed", g(&self.slow_closed)),
+            ("edge_frames", g(&self.frames)),
+            ("edge_bad_frames", g(&self.bad_frames)),
+        ]
+    }
+}
+
+/// Reply frame posted back by a blocking-op side thread. `gen` guards
+/// against slot reuse: if the connection died and its slot was handed
+/// to a newcomer, the stale completion is dropped.
+struct Completion {
+    slot: usize,
+    gen: u64,
+    line: Json,
+    /// Drain watcher finished for this target → clear its
+    /// pending-dedup entry (same-target repeats share one watcher).
+    clear_drain: Option<Option<u64>>,
+    clear_rolling: bool,
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    rbuf: FrameBuf,
+    wbuf: WriteBuf,
+    /// Streams this loop is forwarding (polled nonblocking each lap).
+    streams: Vec<SubmissionHandle>,
+    /// Every id this connection ever submitted; cancelled when it
+    /// closes so a dead client's requests release their KV blocks
+    /// (cancel is idempotent — finished ids are no-ops).
+    submitted: Vec<u64>,
+    /// One drain watcher per (connection, target); see the drain arm.
+    drains_pending: HashSet<Option<u64>>,
+    rolling_pending: bool,
+    /// Monotone connection generation (slot-reuse guard).
+    gen: u64,
+    /// Stop reading, flush what is queued, then close (shutdown `bye`,
+    /// oversized frame).
+    closing: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn push(&mut self, j: &Json, scratch: &mut String) {
+        self.wbuf.push_line(j, scratch);
+    }
+}
+
+/// Everything a dispatch needs besides the connection itself.
+struct LoopCtx<'a> {
+    server: &'a Arc<Server>,
+    cfg: &'a EdgeConfig,
+    done_tx: &'a Sender<Completion>,
+}
+
+/// Cap on events forwarded per stream per lap — keeps one chatty
+/// stream from starving the rest of a lap (the remainder is picked up
+/// next lap; the loop stays "active" so there is no sleep in between).
+const EVENTS_PER_STREAM_PER_LAP: usize = 256;
+
+/// How many recycled buffer pairs to keep for future connections.
+const POOL_KEEP: usize = 64;
+
+/// The serve loop. Runs until the replica set shuts down or the
+/// listener dies; consumes the thread.
+pub(super) fn run(server: &Arc<Server>, listener: TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    let cfg = server.cfg.clone();
+    let (done_tx, done_rx) = std::sync::mpsc::channel::<Completion>();
+    let ctx = LoopCtx { server, cfg: &cfg, done_tx: &done_tx };
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut pool: Vec<(FrameBuf, WriteBuf)> = Vec::new();
+    let mut scratch = String::new();
+    let mut open: usize = 0;
+    let mut inflight: usize = 0;
+    let mut next_gen: u64 = 1;
+
+    loop {
+        if server.set.is_shutdown() {
+            final_flush(&mut conns);
+            return;
+        }
+        let mut active = false;
+
+        // ------------------------------------------------------ accept
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    active = true;
+                    if open >= cfg.max_conns {
+                        server
+                            .edge
+                            .refused_conns
+                            .fetch_add(1, Ordering::Relaxed);
+                        refuse(stream, &cfg, &mut scratch);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    stream.set_nodelay(true).ok();
+                    let (rbuf, wbuf) = pool.pop().unwrap_or_default();
+                    let conn = Conn {
+                        stream,
+                        rbuf,
+                        wbuf,
+                        streams: Vec::new(),
+                        submitted: Vec::new(),
+                        drains_pending: HashSet::new(),
+                        rolling_pending: false,
+                        gen: next_gen,
+                        closing: false,
+                        dead: false,
+                    };
+                    next_gen += 1;
+                    open += 1;
+                    server
+                        .edge
+                        .accepted_conns
+                        .fetch_add(1, Ordering::Relaxed);
+                    server
+                        .edge
+                        .open_conns
+                        .store(open as u64, Ordering::Relaxed);
+                    match free.pop() {
+                        Some(slot) => conns[slot] = Some(conn),
+                        None => conns.push(Some(conn)),
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+
+        // -------------------------------------- read, frame, dispatch
+        for slot in 0..conns.len() {
+            let Some(conn) = conns[slot].as_mut() else { continue };
+            if conn.dead || conn.closing {
+                continue;
+            }
+            match conn.rbuf.fill_from(&mut conn.stream) {
+                Ok(0) => {
+                    // EOF: the client is gone; reap below cancels its
+                    // in-flight requests (mid-stream disconnect frees
+                    // the KV blocks via the existing cancel path).
+                    conn.dead = true;
+                    active = true;
+                    continue;
+                }
+                Ok(_) => active = true,
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(_) => {
+                    conn.dead = true;
+                    active = true;
+                    continue;
+                }
+            }
+            // Take the frame buffer out so dispatch can borrow the
+            // connection mutably while frames reference the buffer.
+            let mut rbuf = std::mem::take(&mut conn.rbuf);
+            loop {
+                let msg = {
+                    let Some(frame) = rbuf.next_frame() else { break };
+                    server.edge.frames.fetch_add(1, Ordering::Relaxed);
+                    if frame.iter().all(|b| b.is_ascii_whitespace()) {
+                        continue;
+                    }
+                    let parsed = std::str::from_utf8(frame)
+                        .map_err(|e| anyhow!("bad utf-8: {e}"))
+                        .and_then(|s| {
+                            Json::parse(s)
+                                .map_err(|e| anyhow!("bad json: {e}"))
+                        });
+                    match parsed {
+                        Ok(m) => m,
+                        Err(e) => {
+                            server
+                                .edge
+                                .bad_frames
+                                .fetch_add(1, Ordering::Relaxed);
+                            conn.push(&conn_error(format!("{e:#}")),
+                                      &mut scratch);
+                            continue;
+                        }
+                    }
+                };
+                dispatch(&ctx, conn, slot, &msg, &mut inflight,
+                         &mut scratch);
+                if conn.dead || conn.closing {
+                    break;
+                }
+            }
+            if !conn.dead
+                && !conn.closing
+                && rbuf.buffered() > cfg.max_frame_bytes
+            {
+                server.edge.bad_frames.fetch_add(1, Ordering::Relaxed);
+                conn.push(
+                    &conn_error(format!(
+                        "frame exceeds {} bytes",
+                        cfg.max_frame_bytes
+                    )),
+                    &mut scratch,
+                );
+                conn.closing = true;
+            }
+            conn.rbuf = rbuf;
+        }
+
+        // ----------------------------------------------- poll streams
+        for conn in conns.iter_mut().flatten() {
+            if conn.dead || conn.closing {
+                continue;
+            }
+            let mut i = 0;
+            while i < conn.streams.len() {
+                let mut n = 0;
+                while n < EVENTS_PER_STREAM_PER_LAP {
+                    match conn.streams[i].try_next_event() {
+                        Some(ev) => {
+                            active = true;
+                            n += 1;
+                            conn.wbuf.push_line(&event_to_json(&ev),
+                                                &mut scratch);
+                        }
+                        None => break,
+                    }
+                }
+                if conn.streams[i].is_finished() {
+                    conn.streams.swap_remove(i);
+                    inflight -= 1;
+                    server
+                        .edge
+                        .inflight
+                        .store(inflight as u64, Ordering::Relaxed);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+
+        // ------------------------------------------ drain completions
+        while let Ok(c) = done_rx.try_recv() {
+            active = true;
+            if let Some(conn) =
+                conns.get_mut(c.slot).and_then(|o| o.as_mut())
+            {
+                if conn.gen == c.gen && !conn.dead {
+                    if let Some(t) = c.clear_drain {
+                        conn.drains_pending.remove(&t);
+                    }
+                    if c.clear_rolling {
+                        conn.rolling_pending = false;
+                    }
+                    conn.push(&c.line, &mut scratch);
+                }
+            }
+        }
+
+        // ------------------------------------------------------ flush
+        for conn in conns.iter_mut().flatten() {
+            if conn.dead {
+                continue;
+            }
+            if conn.wbuf.pending() > 0 {
+                match conn.wbuf.flush_into(&mut conn.stream) {
+                    Ok(n) => {
+                        if n > 0 {
+                            active = true;
+                        }
+                    }
+                    Err(_) => {
+                        conn.dead = true;
+                        continue;
+                    }
+                }
+            }
+            if conn.wbuf.pending() > cfg.max_wbuf_bytes {
+                // Slow reader: it only ever backed up its own buffer;
+                // cut it loose so the memory comes back.
+                server
+                    .edge
+                    .slow_closed
+                    .fetch_add(1, Ordering::Relaxed);
+                conn.dead = true;
+            } else if conn.closing && conn.wbuf.pending() == 0 {
+                conn.dead = true;
+            }
+        }
+
+        // ------------------------------------------------------- reap
+        for slot in 0..conns.len() {
+            if conns[slot].as_ref().is_some_and(|c| c.dead) {
+                let mut conn = conns[slot].take().unwrap();
+                for id in conn.submitted.drain(..) {
+                    server.set.cancel(id);
+                }
+                inflight -= conn.streams.len();
+                server
+                    .edge
+                    .inflight
+                    .store(inflight as u64, Ordering::Relaxed);
+                conn.streams.clear();
+                open -= 1;
+                server
+                    .edge
+                    .open_conns
+                    .store(open as u64, Ordering::Relaxed);
+                let (mut rbuf, mut wbuf) = (conn.rbuf, conn.wbuf);
+                rbuf.reset();
+                wbuf.reset();
+                if pool.len() < POOL_KEEP {
+                    pool.push((rbuf, wbuf));
+                }
+                free.push(slot);
+                active = true;
+            }
+        }
+
+        if !active {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Best-effort `overload` frame to a connection refused at accept;
+/// the socket closes when `stream` drops either way.
+fn refuse(mut stream: TcpStream, cfg: &EdgeConfig, scratch: &mut String) {
+    scratch.clear();
+    overload_json(cfg.max_conns, cfg.retry_ms, "accept")
+        .write_compact(scratch);
+    scratch.push('\n');
+    stream.set_nonblocking(true).ok();
+    let _ = std::io::Write::write(&mut stream, scratch.as_bytes());
+}
+
+/// On shutdown, give queued replies (`bye`, last events) a moment to
+/// drain before the listener thread exits.
+fn final_flush(conns: &mut [Option<Conn>]) {
+    let deadline =
+        std::time::Instant::now() + Duration::from_millis(500);
+    loop {
+        let mut pending = false;
+        for conn in conns.iter_mut().flatten() {
+            if conn.dead {
+                continue;
+            }
+            if conn.wbuf.pending() > 0 {
+                if conn.wbuf.flush_into(&mut conn.stream).is_err() {
+                    conn.dead = true;
+                    continue;
+                }
+                if conn.wbuf.pending() > 0 {
+                    pending = true;
+                }
+            }
+        }
+        if !pending || std::time::Instant::now() >= deadline {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Handle one parsed frame. Mirrors the protocol v1/v2 op set exactly;
+/// replies queue onto the connection's write buffer (blocking ops post
+/// theirs through the completion channel instead).
+fn dispatch(ctx: &LoopCtx<'_>, conn: &mut Conn, slot: usize, msg: &Json,
+            inflight: &mut usize, scratch: &mut String) {
+    let server = ctx.server;
+    match msg.get("op").as_str() {
+        Some("generate") => {
+            if conn.streams.len() >= ctx.cfg.max_inflight_per_conn {
+                conn.push(
+                    &conn_error(format!(
+                        "too many in-flight requests on this \
+                         connection (max {})",
+                        ctx.cfg.max_inflight_per_conn
+                    )),
+                    scratch,
+                );
+                return;
+            }
+            if *inflight >= ctx.cfg.max_inflight {
+                // The edge shed: the request never reaches
+                // ReplicaSet::submit, so scheduler queues stay flat
+                // under overload.
+                server.edge.sheds.fetch_add(1, Ordering::Relaxed);
+                conn.push(
+                    &overload_json(ctx.cfg.max_inflight,
+                                   ctx.cfg.retry_ms, "edge"),
+                    scratch,
+                );
+                return;
+            }
+            match parse_generate(msg)
+                .and_then(|req| server.set.submit(req))
+            {
+                Ok(handle) => {
+                    conn.submitted.push(handle.id());
+                    conn.streams.push(handle);
+                    *inflight += 1;
+                    server
+                        .edge
+                        .inflight
+                        .store(*inflight as u64, Ordering::Relaxed);
+                }
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                }
+            }
+        }
+        Some("cancel") => match msg.get("id").as_u64() {
+            Some(id) => {
+                let enqueued = server.set.cancel(id);
+                conn.push(
+                    &Json::obj(vec![
+                        ("type", Json::from("cancel_ack")),
+                        ("id", Json::from(id)),
+                        ("enqueued", Json::from(enqueued)),
+                    ]),
+                    scratch,
+                );
+            }
+            None => {
+                conn.push(
+                    &conn_error("cancel needs a numeric id".into()),
+                    scratch,
+                );
+            }
+        },
+        Some("stats") => {
+            conn.push(&stats_to_json(&server.set, &server.edge),
+                      scratch);
+        }
+        Some("set_policy") => {
+            // Optional `replica` targets a single replica (the
+            // partition-tuning building block); absent = fan out to
+            // the whole set. The reconfigure handshake waits on the
+            // service loop, so it runs on a side thread.
+            let replica = match parse_replica(msg) {
+                Ok(r) => r,
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                    return;
+                }
+            };
+            let kind = match msg.get("policy").as_str() {
+                Some(p) => match PolicyKind::parse(p) {
+                    Ok(k) => k,
+                    Err(e) => {
+                        conn.push(&conn_error(format!("{e:#}")),
+                                  scratch);
+                        return;
+                    }
+                },
+                None => {
+                    conn.push(
+                        &conn_error(
+                            "set_policy needs a string 'policy' field"
+                                .into(),
+                        ),
+                        scratch,
+                    );
+                    return;
+                }
+            };
+            let set = server.set.clone();
+            let tx = ctx.done_tx.clone();
+            let gen = conn.gen;
+            std::thread::spawn(move || {
+                let r = match replica {
+                    Some(i) => {
+                        set.reconfigure_replica(i as usize, kind)
+                    }
+                    None => set.reconfigure(kind),
+                };
+                let line = match r {
+                    Ok(label) => {
+                        let mut f = vec![
+                            ("type", Json::from("policy_set")),
+                            ("policy", Json::from(label)),
+                        ];
+                        if let Some(i) = replica {
+                            f.push(("replica", Json::from(i)));
+                        }
+                        Json::obj(f)
+                    }
+                    Err(e) => conn_error(format!("{e:#}")),
+                };
+                let _ = tx.send(Completion {
+                    slot,
+                    gen,
+                    line,
+                    clear_drain: None,
+                    clear_rolling: false,
+                });
+            });
+        }
+        Some("drain") => {
+            // Optional `replica` selects a single-replica drain (the
+            // rotation building block); absent = whole set.
+            let replica = match parse_replica(msg) {
+                Ok(r) => r,
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                    return;
+                }
+            };
+            if let Some(r) = replica {
+                if r as usize >= server.set.len() {
+                    conn.push(
+                        &conn_error(format!(
+                            "replica {r} out of range (set has {})",
+                            server.set.len()
+                        )),
+                        scratch,
+                    );
+                    return;
+                }
+            }
+            // Ack immediately (admissions stop now), announce
+            // `drained` from a side thread so this connection keeps
+            // being served — the loop even keeps driving this very
+            // connection's streams, which the drain waits on.
+            let with_replica = |ty: &str| {
+                let mut f = vec![("type", Json::from(ty))];
+                if let Some(r) = replica {
+                    f.push(("replica", Json::from(r)));
+                }
+                Json::obj(f)
+            };
+            conn.push(&with_replica("draining"), scratch);
+            // A repeat op for the same target while its watcher is
+            // pending shares that `drained` line instead of stacking
+            // blocked threads; a different target gets its own watcher
+            // (its drain must actually run).
+            if !conn.drains_pending.insert(replica) {
+                return;
+            }
+            let set = server.set.clone();
+            let drained = with_replica("drained");
+            let tx = ctx.done_tx.clone();
+            let gen = conn.gen;
+            std::thread::spawn(move || {
+                let r = match replica {
+                    Some(i) => set.drain_replica(i as usize),
+                    None => set.drain(),
+                };
+                let line = match r {
+                    Ok(()) => drained,
+                    Err(e) => conn_error(format!("{e:#}")),
+                };
+                let _ = tx.send(Completion {
+                    slot,
+                    gen,
+                    line,
+                    clear_drain: Some(replica),
+                    clear_rolling: false,
+                });
+            });
+        }
+        Some("reopen") => {
+            let r = parse_replica(msg).and_then(|replica| {
+                match replica {
+                    Some(i) => server
+                        .set
+                        .reopen_replica(i as usize)
+                        .map(|()| Some(i)),
+                    None => server.set.reopen().map(|()| None),
+                }
+            });
+            match r {
+                Ok(i) => {
+                    let mut f = vec![("type", Json::from("reopened"))];
+                    if let Some(i) = i {
+                        f.push(("replica", Json::from(i)));
+                    }
+                    conn.push(&Json::obj(f), scratch);
+                }
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                }
+            }
+        }
+        Some("rolling_restart") => {
+            // Parse (and reject) up front; the rotation itself blocks
+            // on each replica's drain, so it runs on a side thread and
+            // announces `rolling_done` through the completion channel.
+            let policy = match msg.get("policy").as_str() {
+                Some(p) => match PolicyKind::parse(p) {
+                    Ok(k) => Some(k),
+                    Err(e) => {
+                        conn.push(&conn_error(format!("{e:#}")),
+                                  scratch);
+                        return;
+                    }
+                },
+                None => None,
+            };
+            conn.push(
+                &Json::obj(vec![("type", Json::from("rolling"))]),
+                scratch,
+            );
+            if conn.rolling_pending {
+                return; // share the pending rolling_done
+            }
+            conn.rolling_pending = true;
+            let set = server.set.clone();
+            let tx = ctx.done_tx.clone();
+            let gen = conn.gen;
+            std::thread::spawn(move || {
+                let line = match set.rolling_restart(policy.as_ref()) {
+                    Ok(labels) => {
+                        let mut f = vec![
+                            ("type", Json::from("rolling_done")),
+                            ("replicas", Json::from(labels.len())),
+                        ];
+                        // Only when a controller swap was actually
+                        // requested — consumers use the field's
+                        // presence to tell a swap rotation from a
+                        // plain one.
+                        if policy.is_some() {
+                            if let Some(l) = labels.last() {
+                                f.push(("policy",
+                                        Json::from(l.clone())));
+                            }
+                        }
+                        Json::obj(f)
+                    }
+                    Err(e) => conn_error(format!("{e:#}")),
+                };
+                let _ = tx.send(Completion {
+                    slot,
+                    gen,
+                    line,
+                    clear_drain: None,
+                    clear_rolling: true,
+                });
+            });
+        }
+        Some("fleet_stats") => match &server.fleet {
+            Some(fleet) => {
+                conn.push(&fleet_stats_to_json(&fleet.stats()),
+                          scratch);
+            }
+            None => {
+                conn.push(
+                    &conn_error(
+                        "no fleet configured on this server".into(),
+                    ),
+                    scratch,
+                );
+            }
+        },
+        Some("set_fleet_policy") => {
+            let r = match &server.fleet {
+                Some(fleet) => match msg.get("policy").as_str() {
+                    Some(p) => FleetPolicyKind::parse(p)
+                        .and_then(|k| fleet.set_policy(k)),
+                    None => Err(anyhow!(
+                        "set_fleet_policy needs a string 'policy' \
+                         field"
+                    )),
+                },
+                None => {
+                    Err(anyhow!("no fleet configured on this server"))
+                }
+            };
+            match r {
+                Ok(label) => {
+                    conn.push(
+                        &Json::obj(vec![
+                            ("type", Json::from("fleet_policy_set")),
+                            ("policy", Json::from(label)),
+                        ]),
+                        scratch,
+                    );
+                }
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                }
+            }
+        }
+        Some("scale") => {
+            // Fleet scale is begin_drain-based (non-blocking), so it
+            // stays inline.
+            let r = match &server.fleet {
+                Some(fleet) => match msg.get("target").as_u64() {
+                    Some(t) => fleet.scale(t as usize),
+                    None => Err(anyhow!(
+                        "scale needs a non-negative integer 'target' \
+                         field"
+                    )),
+                },
+                None => {
+                    Err(anyhow!("no fleet configured on this server"))
+                }
+            };
+            match r {
+                Ok(live) => {
+                    conn.push(
+                        &Json::obj(vec![
+                            ("type", Json::from("scaled")),
+                            ("live", Json::from(live)),
+                        ]),
+                        scratch,
+                    );
+                }
+                Err(e) => {
+                    conn.push(&conn_error(format!("{e:#}")), scratch);
+                }
+            }
+        }
+        Some("shutdown") => {
+            conn.push(&Json::obj(vec![("type", Json::from("bye"))]),
+                      scratch);
+            conn.closing = true;
+            server.shutdown();
+        }
+        other => {
+            conn.push(&conn_error(format!("unknown op {other:?}")),
+                      scratch);
+        }
+    }
+}

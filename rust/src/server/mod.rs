@@ -148,32 +148,60 @@
 //! `accepted`, `token`… then `done`. v2 additionally allows several
 //! concurrent `generate`s per connection (streams are interleaved,
 //! disambiguated by `id`) and `cancel` by id from any connection.
+//!
+//! # Serving edge (event loop + backpressure)
+//!
+//! Since the event-loop rework the whole protocol above is served by
+//! one nonblocking readiness loop ([`eventloop`] internally): no
+//! thread per connection, zero-copy line framing into recycled
+//! buffers ([`protocol::FrameBuf`]), buffered nonblocking writes
+//! ([`protocol::WriteBuf`]). Overload is shed *at the edge*, before a
+//! request can reach the scheduler, with a typed frame:
+//!
+//! ```text
+//! ← {"type":"overload", "error":"server overloaded (edge limit 1024
+//!    reached); retry in 50 ms", "limit":1024, "retry_ms":50,
+//!    "shed":"edge"}
+//! ```
+//!
+//! `shed` is `"edge"` when the server-wide in-flight cap cut a
+//! `generate` (the connection stays usable — back off `retry_ms` and
+//! retry) and `"accept"` when the open-connection cap refused a new
+//! connection outright (best effort; the socket closes right after).
+//! Limits live in [`EdgeConfig`]; live counters (accepted/refused
+//! connections, in-flight streams, sheds, slow-reader closes, frame
+//! totals) ride the v2 `stats` reply as additive `edge_*` fields. A
+//! reader that stops draining its socket only ever backs up its own
+//! write buffer — past `max_wbuf_bytes` the connection is closed and
+//! its in-flight requests are cancelled (the same path that frees a
+//! mid-stream disconnect's KV blocks).
 
 pub mod client;
+pub mod protocol;
 
-use crate::config::{FleetPolicyKind, PolicyKind};
+mod eventloop;
+
+pub use eventloop::{EdgeConfig, EdgeStats};
+
 use crate::engine::Engine;
-use crate::request::{PriorityClass, SamplingParams};
 use crate::scheduler::Scheduler;
 use crate::service::{
-    Fleet, FleetStats, GenEvent, GenRequest, ReplicaSet, RoutePolicy,
-    Service, ServiceSnapshot, SubmissionHandle,
+    Fleet, FleetStats, ReplicaSet, RoutePolicy, Service, ServiceSnapshot,
 };
-use crate::tokenizer;
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashSet;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use anyhow::{Context, Result};
+use std::net::TcpListener;
+use std::sync::Arc;
 
 /// Shared server state: the replica set, the optional fleet layer over
-/// it, and the bound address.
+/// it, the bound address, and the serving-edge configuration and
+/// counters.
 pub struct Server {
     set: Arc<ReplicaSet>,
     fleet: Option<Arc<Fleet>>,
     pub local_addr: std::net::SocketAddr,
+    cfg: EdgeConfig,
+    edge: Arc<EdgeStats>,
 }
 
 /// Compatibility entry point: build a [`Service`] over an explicit
@@ -198,10 +226,18 @@ pub fn serve_service(service: Service, bind: &str) -> Result<Arc<Server>> {
     )
 }
 
-/// Spawn the TCP acceptor over a replica set. Returns once the listener
-/// is bound; serving continues on background threads until shutdown.
+/// Spawn the serving edge over a replica set. Returns once the
+/// listener is bound; serving continues on the event-loop thread until
+/// shutdown.
 pub fn serve_replicas(set: ReplicaSet, bind: &str) -> Result<Arc<Server>> {
-    serve_set(Arc::new(set), None, bind)
+    serve_set(Arc::new(set), None, bind, EdgeConfig::default())
+}
+
+/// [`serve_replicas`] with explicit edge limits — the hook loadgen and
+/// the backpressure tests use to force shedding at small scales.
+pub fn serve_replicas_with(set: ReplicaSet, bind: &str, cfg: EdgeConfig)
+                           -> Result<Arc<Server>> {
+    serve_set(Arc::new(set), None, bind, cfg)
 }
 
 /// Serve a [`Fleet`]: the fleet's replica set takes the traffic, the
@@ -213,7 +249,8 @@ pub fn serve_replicas(set: ReplicaSet, bind: &str) -> Result<Arc<Server>> {
 pub fn serve_fleet(fleet: Fleet, bind: &str) -> Result<Arc<Server>> {
     let set = fleet.set().clone();
     let fleet = Arc::new(fleet);
-    let server = serve_set(set, Some(fleet.clone()), bind)?;
+    let server =
+        serve_set(set, Some(fleet.clone()), bind, EdgeConfig::default())?;
     {
         let set = server.set.clone();
         std::thread::Builder::new()
@@ -237,40 +274,24 @@ pub fn serve_fleet(fleet: Fleet, bind: &str) -> Result<Arc<Server>> {
     Ok(server)
 }
 
-fn serve_set(set: Arc<ReplicaSet>, fleet: Option<Arc<Fleet>>,
-             bind: &str) -> Result<Arc<Server>> {
+fn serve_set(set: Arc<ReplicaSet>, fleet: Option<Arc<Fleet>>, bind: &str,
+             cfg: EdgeConfig) -> Result<Arc<Server>> {
     let listener =
         TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let local_addr = listener.local_addr()?;
-    let server = Arc::new(Server { set, fleet, local_addr });
+    let server = Arc::new(Server {
+        set,
+        fleet,
+        local_addr,
+        cfg,
+        edge: Arc::new(EdgeStats::default()),
+    });
 
     {
         let server = server.clone();
         std::thread::Builder::new()
-            .name("dynabatch-accept".into())
-            .spawn(move || {
-                listener
-                    .set_nonblocking(true)
-                    .expect("nonblocking listener");
-                while !server.set.is_shutdown() {
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            let server = server.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_conn(stream, &server);
-                            });
-                        }
-                        Err(e)
-                            if e.kind() == std::io::ErrorKind::WouldBlock =>
-                        {
-                            std::thread::sleep(
-                                std::time::Duration::from_millis(5),
-                            );
-                        }
-                        Err(_) => break,
-                    }
-                }
-            })?;
+            .name("dynabatch-serve".into())
+            .spawn(move || eventloop::run(&server, listener))?;
     }
 
     Ok(server)
@@ -294,44 +315,20 @@ impl Server {
         self.fleet.as_ref()
     }
 
+    /// Live serving-edge counters (also on the wire as the `stats`
+    /// reply's `edge_*` fields).
+    pub fn edge_stats(&self) -> &EdgeStats {
+        &self.edge
+    }
+
+    /// The edge limits this server was started with.
+    pub fn edge_config(&self) -> &EdgeConfig {
+        &self.cfg
+    }
+
     pub fn shutdown(&self) {
         self.set.shutdown();
     }
-}
-
-fn sampling_from_json(j: &Json) -> SamplingParams {
-    SamplingParams {
-        temperature: j.get("temperature").as_f64().unwrap_or(0.0),
-        top_k: j.get("top_k").as_u64().unwrap_or(0) as u32,
-        top_p: j.get("top_p").as_f64().unwrap_or(1.0),
-        seed: j.get("seed").as_u64(),
-    }
-}
-
-/// Decode a `generate` op into a typed request (v1 and v2 forms).
-fn parse_generate(msg: &Json) -> Result<GenRequest> {
-    let prompt_tokens = match msg.get("prompt_tokens").as_arr() {
-        Some(arr) => arr
-            .iter()
-            .map(|t| t.as_i64().map(|x| x as i32))
-            .collect::<Option<Vec<i32>>>()
-            .ok_or_else(|| anyhow!("prompt_tokens must be integers"))?,
-        None => tokenizer::encode(msg.get("prompt").as_str().unwrap_or("")),
-    };
-    let max_new =
-        msg.get("max_new_tokens").as_u64().unwrap_or(16).max(1) as u32;
-    let mut req = GenRequest::new(prompt_tokens, max_new);
-    if let Some(c) = msg.get("class").as_str() {
-        req.class = PriorityClass::parse(c)?;
-    }
-    if let Some(ms) = msg.get("deadline_ms").as_f64() {
-        req.deadline = Some(ms / 1e3);
-    }
-    let sampling = msg.get("sampling");
-    if !sampling.is_null() {
-        req.sampling = sampling_from_json(sampling);
-    }
-    Ok(req)
 }
 
 /// The snapshot fields shared by the set-level aggregate and each
@@ -400,8 +397,9 @@ fn snapshot_fields(s: &ServiceSnapshot) -> Vec<(&'static str, Json)> {
 }
 
 /// The `stats` reply: aggregate fields at the top level (wire-compatible
-/// with the single-replica v2 shape) plus per-replica attribution.
-fn stats_to_json(set: &ReplicaSet) -> Json {
+/// with the single-replica v2 shape) plus per-replica attribution and
+/// the serving-edge counters.
+fn stats_to_json(set: &ReplicaSet, edge: &EdgeStats) -> Json {
     // Each stats poll doubles as a straggler-detection pass, so the
     // health view stays live without a dedicated background thread.
     set.observe_health();
@@ -412,6 +410,7 @@ fn stats_to_json(set: &ReplicaSet) -> Json {
     fields.extend(snapshot_fields(&agg));
     fields.push(("n_replicas", Json::from(set.len())));
     fields.push(("route_policy", Json::from(set.route_policy().label())));
+    fields.extend(edge.fields());
     fields.push((
         "health",
         Json::Arr(
@@ -484,446 +483,14 @@ fn fleet_stats_to_json(s: &FleetStats) -> Json {
     ])
 }
 
-fn event_to_json(ev: &GenEvent) -> Json {
-    match ev {
-        GenEvent::Accepted { id, class } => Json::obj(vec![
-            ("type", Json::from("accepted")),
-            ("id", Json::from(*id)),
-            ("class", Json::from(class.label())),
-        ]),
-        GenEvent::Token { id, token, text } => Json::obj(vec![
-            ("type", Json::from("token")),
-            ("id", Json::from(*id)),
-            ("token", Json::from(*token as i64)),
-            ("text", Json::from(text.clone())),
-        ]),
-        GenEvent::Done { id, text, n_tokens, ttft, e2e } => Json::obj(vec![
-            ("type", Json::from("done")),
-            ("id", Json::from(*id)),
-            ("text", Json::from(text.clone())),
-            ("n_tokens", Json::from(*n_tokens as u64)),
-            ("ttft_ms", Json::Num(ttft * 1e3)),
-            ("e2e_ms", Json::Num(e2e * 1e3)),
-        ]),
-        GenEvent::Error { id, message } => Json::obj(vec![
-            ("type", Json::from("error")),
-            ("id", Json::from(*id)),
-            ("error", Json::from(message.clone())),
-        ]),
-        GenEvent::Cancelled { id } => Json::obj(vec![
-            ("type", Json::from("cancelled")),
-            ("id", Json::from(*id)),
-        ]),
-    }
-}
-
-/// Forward one submission's events to the wire. Runs on its own thread so
-/// the connection's read loop keeps accepting `cancel` (and further
-/// `generate`) ops mid-stream. A dead client cancels its request so the
-/// scheduler frees the KV blocks.
-fn stream_events(mut handle: SubmissionHandle, out: Arc<Mutex<TcpStream>>) {
-    while let Some(ev) = handle.next_event() {
-        let terminal = ev.is_terminal();
-        if write_json(&out, &event_to_json(&ev)).is_err() {
-            handle.cancel();
-            return;
-        }
-        if terminal {
-            return;
-        }
-    }
-}
-
-/// Hard bound on concurrently streaming requests per connection: a
-/// client writing `generate` ops without reading responses must not be
-/// able to spawn unbounded writer threads.
-const MAX_INFLIGHT_PER_CONN: usize = 64;
-
-fn handle_conn(stream: TcpStream, server: &Server) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
-    let out = Arc::new(Mutex::new(stream));
-    let inflight = Arc::new(AtomicUsize::new(0));
-    // At most one drain-watcher thread per (connection, target): a
-    // repeat of the SAME target (a replica index, or None = whole set)
-    // shares the pending `drained` announcement; distinct targets each
-    // get their own watcher, so the thread count is bounded by
-    // n_replicas + 1. Entries clear before `drained` is written so a
-    // later op starts a fresh watcher.
-    let drains_pending: Arc<Mutex<HashSet<Option<u64>>>> =
-        Arc::new(Mutex::new(HashSet::new()));
-    // Likewise one pending rolling-restart watcher per connection — a
-    // repeat op shares its `rolling_done` (rotations are serialized
-    // set-side anyway; this just avoids stacking blocked threads).
-    let rolling_pending = Arc::new(AtomicBool::new(false));
-    // Every id this connection submitted; cancelled when the read side
-    // closes so a dead client's requests stop holding KV blocks
-    // (cancel is idempotent, so already-finished ids are no-ops).
-    let mut submitted: Vec<u64> = Vec::new();
-    let result = (|| -> Result<()> {
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let msg = match Json::parse(&line) {
-                Ok(m) => m,
-                Err(e) => {
-                    write_json(&out,
-                               &conn_error(format!("bad json: {e}")))?;
-                    continue;
-                }
-            };
-            match msg.get("op").as_str() {
-                Some("generate") => {
-                    if inflight.load(Ordering::SeqCst)
-                        >= MAX_INFLIGHT_PER_CONN
-                    {
-                        write_json(&out, &conn_error(format!(
-                            "too many in-flight requests on this \
-                             connection (max {MAX_INFLIGHT_PER_CONN})"
-                        )))?;
-                        continue;
-                    }
-                    match parse_generate(&msg)
-                        .and_then(|req| server.set.submit(req))
-                    {
-                        Ok(handle) => {
-                            submitted.push(handle.id());
-                            inflight.fetch_add(1, Ordering::SeqCst);
-                            let out = out.clone();
-                            let inflight = inflight.clone();
-                            std::thread::spawn(move || {
-                                stream_events(handle, out);
-                                inflight.fetch_sub(1, Ordering::SeqCst);
-                            });
-                        }
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                        }
-                    }
-                }
-                Some("cancel") => match msg.get("id").as_u64() {
-                    Some(id) => {
-                        let enqueued = server.set.cancel(id);
-                        write_json(&out, &Json::obj(vec![
-                            ("type", Json::from("cancel_ack")),
-                            ("id", Json::from(id)),
-                            ("enqueued", Json::from(enqueued)),
-                        ]))?;
-                    }
-                    None => {
-                        write_json(&out,
-                                   &conn_error("cancel needs a numeric id"
-                                       .into()))?;
-                    }
-                },
-                Some("stats") => {
-                    write_json(&out, &stats_to_json(&server.set))?;
-                }
-                Some("set_policy") => {
-                    // Optional `replica` targets a single replica (the
-                    // partition-tuning building block); absent = fan out
-                    // to the whole set.
-                    let replica = match parse_replica(&msg) {
-                        Ok(r) => r,
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                            continue;
-                        }
-                    };
-                    let r = match msg.get("policy").as_str() {
-                        Some(p) => {
-                            PolicyKind::parse(p).and_then(|k| match replica
-                            {
-                                Some(i) => server
-                                    .set
-                                    .reconfigure_replica(i as usize, k),
-                                None => server.set.reconfigure(k),
-                            })
-                        }
-                        None => Err(anyhow!(
-                            "set_policy needs a string 'policy' field"
-                        )),
-                    };
-                    match r {
-                        Ok(label) => {
-                            let mut f = vec![
-                                ("type", Json::from("policy_set")),
-                                ("policy", Json::from(label)),
-                            ];
-                            if let Some(i) = replica {
-                                f.push(("replica", Json::from(i)));
-                            }
-                            write_json(&out, &Json::obj(f))?;
-                        }
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                        }
-                    }
-                }
-                Some("drain") => {
-                    // Optional `replica` selects a single-replica drain
-                    // (the rotation building block); absent = whole set.
-                    let replica = match parse_replica(&msg) {
-                        Ok(r) => r,
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                            continue;
-                        }
-                    };
-                    if let Some(r) = replica {
-                        if r as usize >= server.set.len() {
-                            write_json(&out, &conn_error(format!(
-                                "replica {r} out of range (set has {})",
-                                server.set.len()
-                            )))?;
-                            continue;
-                        }
-                    }
-                    // Ack immediately (admissions stop now), announce
-                    // `drained` from a side thread so this connection's
-                    // read loop keeps serving stats/cancel meanwhile.
-                    let with_replica = |ty: &str| {
-                        let mut f = vec![("type", Json::from(ty))];
-                        if let Some(r) = replica {
-                            f.push(("replica", Json::from(r)));
-                        }
-                        Json::obj(f)
-                    };
-                    write_json(&out, &with_replica("draining"))?;
-                    // A repeat op for the same target while its watcher
-                    // is pending shares that `drained` line instead of
-                    // stacking blocked threads; a different target gets
-                    // its own watcher (its drain must actually run).
-                    if !drains_pending.lock().unwrap().insert(replica) {
-                        continue;
-                    }
-                    let set = server.set.clone();
-                    let drained = with_replica("drained");
-                    let out = out.clone();
-                    let drains_pending = drains_pending.clone();
-                    std::thread::spawn(move || {
-                        let r = match replica {
-                            Some(i) => set.drain_replica(i as usize),
-                            None => set.drain(),
-                        };
-                        let j = match r {
-                            Ok(()) => drained,
-                            Err(e) => conn_error(format!("{e:#}")),
-                        };
-                        // Clear before writing: an op arriving after the
-                        // entry clears starts a fresh watcher, one racing
-                        // it still has this `drained` line to read.
-                        drains_pending.lock().unwrap().remove(&replica);
-                        let _ = write_json(&out, &j);
-                    });
-                }
-                Some("reopen") => {
-                    let r = parse_replica(&msg).and_then(|replica| {
-                        match replica {
-                            Some(i) => server
-                                .set
-                                .reopen_replica(i as usize)
-                                .map(|()| Some(i)),
-                            None => server.set.reopen().map(|()| None),
-                        }
-                    });
-                    match r {
-                        Ok(i) => {
-                            let mut f =
-                                vec![("type", Json::from("reopened"))];
-                            if let Some(i) = i {
-                                f.push(("replica", Json::from(i)));
-                            }
-                            write_json(&out, &Json::obj(f))?;
-                        }
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                        }
-                    }
-                }
-                Some("rolling_restart") => {
-                    // Parse (and reject) up front; the rotation itself
-                    // runs on a side thread — it blocks on each
-                    // replica's drain — and announces `rolling_done`.
-                    let policy = match msg.get("policy").as_str() {
-                        Some(p) => match PolicyKind::parse(p) {
-                            Ok(k) => Some(k),
-                            Err(e) => {
-                                write_json(&out,
-                                           &conn_error(format!("{e:#}")))?;
-                                continue;
-                            }
-                        },
-                        None => None,
-                    };
-                    write_json(&out, &Json::obj(vec![
-                        ("type", Json::from("rolling")),
-                    ]))?;
-                    if rolling_pending.swap(true, Ordering::SeqCst) {
-                        continue; // share the pending rolling_done
-                    }
-                    let set = server.set.clone();
-                    let out = out.clone();
-                    let rolling_pending = rolling_pending.clone();
-                    std::thread::spawn(move || {
-                        let j = match set.rolling_restart(policy.as_ref())
-                        {
-                            Ok(labels) => {
-                                let mut f = vec![
-                                    ("type", Json::from("rolling_done")),
-                                    ("replicas",
-                                     Json::from(labels.len())),
-                                ];
-                                // Only when a controller swap was
-                                // actually requested — consumers use
-                                // the field's presence to tell a swap
-                                // rotation from a plain one.
-                                if policy.is_some() {
-                                    if let Some(l) = labels.last() {
-                                        f.push(("policy",
-                                                Json::from(l.clone())));
-                                    }
-                                }
-                                Json::obj(f)
-                            }
-                            Err(e) => conn_error(format!("{e:#}")),
-                        };
-                        rolling_pending.store(false, Ordering::SeqCst);
-                        let _ = write_json(&out, &j);
-                    });
-                }
-                Some("fleet_stats") => {
-                    match &server.fleet {
-                        Some(fleet) => {
-                            write_json(&out,
-                                       &fleet_stats_to_json(&fleet.stats()))?;
-                        }
-                        None => {
-                            write_json(&out, &conn_error(
-                                "no fleet configured on this server".into(),
-                            ))?;
-                        }
-                    }
-                }
-                Some("set_fleet_policy") => {
-                    let r = match &server.fleet {
-                        Some(fleet) => match msg.get("policy").as_str() {
-                            Some(p) => FleetPolicyKind::parse(p)
-                                .and_then(|k| fleet.set_policy(k)),
-                            None => Err(anyhow!(
-                                "set_fleet_policy needs a string \
-                                 'policy' field"
-                            )),
-                        },
-                        None => Err(anyhow!(
-                            "no fleet configured on this server"
-                        )),
-                    };
-                    match r {
-                        Ok(label) => {
-                            write_json(&out, &Json::obj(vec![
-                                ("type",
-                                 Json::from("fleet_policy_set")),
-                                ("policy", Json::from(label)),
-                            ]))?;
-                        }
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                        }
-                    }
-                }
-                Some("scale") => {
-                    let r = match &server.fleet {
-                        Some(fleet) => match msg.get("target").as_u64() {
-                            Some(t) => fleet.scale(t as usize),
-                            None => Err(anyhow!(
-                                "scale needs a non-negative integer \
-                                 'target' field"
-                            )),
-                        },
-                        None => Err(anyhow!(
-                            "no fleet configured on this server"
-                        )),
-                    };
-                    match r {
-                        Ok(live) => {
-                            write_json(&out, &Json::obj(vec![
-                                ("type", Json::from("scaled")),
-                                ("live", Json::from(live)),
-                            ]))?;
-                        }
-                        Err(e) => {
-                            write_json(&out,
-                                       &conn_error(format!("{e:#}")))?;
-                        }
-                    }
-                }
-                Some("shutdown") => {
-                    write_json(&out, &Json::obj(vec![
-                        ("type", Json::from("bye")),
-                    ]))?;
-                    server.shutdown();
-                    break;
-                }
-                other => {
-                    write_json(&out,
-                               &conn_error(format!("unknown op {other:?}")))?;
-                }
-            }
-        }
-        Ok(())
-    })();
-    // Read side closed (EOF, error, or shutdown): cancel everything this
-    // connection submitted so a dead client's requests release their KV
-    // blocks instead of running to completion unobserved.
-    for id in submitted {
-        server.set.cancel(id);
-    }
-    result
-}
-
-fn conn_error(message: String) -> Json {
-    Json::obj(vec![
-        ("type", Json::from("error")),
-        ("error", Json::from(message)),
-    ])
-}
-
-/// Decode an op's optional `replica` field. A present-but-malformed
-/// value (string, negative, fractional) is an error, not a silent
-/// fall-through to the whole-set form of the op.
-fn parse_replica(msg: &Json) -> Result<Option<u64>> {
-    let field = msg.get("replica");
-    if field.is_null() {
-        return Ok(None);
-    }
-    field
-        .as_u64()
-        .map(Some)
-        .ok_or_else(|| anyhow!("'replica' must be a non-negative integer"))
-}
-
-fn write_json(out: &Arc<Mutex<TcpStream>>, j: &Json) -> Result<()> {
-    let mut s = out.lock().unwrap();
-    writeln!(s, "{}", j.to_string())?;
-    s.flush()?;
-    Ok(())
-}
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::presets::*;
-    use crate::config::{PolicyKind, SchedulerConfig};
+    use crate::config::{FleetPolicyKind, PolicyKind, SchedulerConfig};
     use crate::engine::sim::SimEngine;
+    use crate::request::{PriorityClass, SamplingParams};
     use crate::server::client::{Client, GenOptions};
 
     fn sim_server() -> Arc<Server> {

@@ -1,0 +1,331 @@
+//! Wire-level protocol pieces shared by the event-loop server, the
+//! typed client, and the protocol test battery: zero-copy line framing
+//! over recycled byte buffers, buffered nonblocking writes, and the
+//! canonical JSON shapes for every v1/v2 frame.
+//!
+//! Framing is exactly "one JSON object per `\n`-terminated line" (a
+//! trailing `\r` is tolerated and stripped). [`FrameBuf`] extends the
+//! hot-path buffer-reuse contract to the wire: bytes land in a recycled
+//! buffer and complete frames are yielded as *borrowed* slices — no
+//! per-line `String` allocation, no copy between the socket and the
+//! JSON parser. [`WriteBuf`] is the outbound mirror: frames are
+//! serialized into one recycled byte buffer (via a shared scratch
+//! `String`) and drained opportunistically by a nonblocking writer, so
+//! a stalled reader backs up its own buffer instead of blocking the
+//! serving thread.
+//!
+//! The serializers ([`event_to_json`], [`conn_error`],
+//! [`overload_json`]) and request parsers ([`parse_generate`],
+//! [`parse_replica`], [`sampling_from_json`]) are the single source of
+//! truth for frame shapes; the golden-frame tests in
+//! `rust/tests/test_protocol.rs` pin their output byte-for-byte so the
+//! server rework stays provably wire-compatible.
+
+use crate::request::{PriorityClass, SamplingParams};
+use crate::service::{GenEvent, GenRequest};
+use crate::tokenizer;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::io::{ErrorKind, Read, Write};
+
+/// Compact the consumed prefix away once it exceeds this many bytes —
+/// below that, shifting costs more than the dead space is worth.
+const COMPACT_AT: usize = 4096;
+
+/// Minimum read chunk: small enough that idle connections stay cheap,
+/// large enough that a busy one drains the socket in few syscalls.
+const READ_CHUNK: usize = 4096;
+
+// --------------------------------------------------------------- framing
+
+/// Incremental line framer over a recycled byte buffer.
+///
+/// Feed it with [`fill_from`](FrameBuf::fill_from) (one nonblocking
+/// `read` into spare capacity), then drain complete frames with
+/// [`next_frame`](FrameBuf::next_frame) — each frame is a borrowed
+/// slice of the internal buffer, valid until the next `fill_from`.
+/// Partial trailing lines survive across fills; the consumed prefix is
+/// compacted lazily so steady-state traffic reuses one allocation.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+    /// First unconsumed byte.
+    start: usize,
+    /// Resume point for the newline scan (never rescans consumed or
+    /// already-scanned bytes, so total scan work is linear in bytes
+    /// received even when frames arrive one byte at a time).
+    scan: usize,
+}
+
+impl FrameBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Unconsumed bytes currently buffered (the incomplete tail once
+    /// all complete frames have been drained) — the caller's hook for
+    /// an oversized-frame guard.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Append bytes from a directly-supplied slice (tests, loadgen
+    /// replay). The wire path uses [`fill_from`](FrameBuf::fill_from).
+    pub fn extend(&mut self, bytes: &[u8]) {
+        self.compact();
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// One `read` into spare capacity. Returns `Ok(0)` on EOF, the
+    /// byte count otherwise; `WouldBlock` et al. surface unchanged for
+    /// the caller's readiness loop.
+    pub fn fill_from(&mut self, r: &mut impl Read)
+                     -> std::io::Result<usize> {
+        self.compact();
+        let old = self.buf.len();
+        let spare = (self.buf.capacity() - old).max(READ_CHUNK);
+        self.buf.resize(old + spare, 0);
+        match r.read(&mut self.buf[old..]) {
+            Ok(n) => {
+                self.buf.truncate(old + n);
+                Ok(n)
+            }
+            Err(e) => {
+                self.buf.truncate(old);
+                Err(e)
+            }
+        }
+    }
+
+    /// The next complete frame, `\n` consumed and `\r` stripped, as a
+    /// borrowed slice — `None` once only a partial line remains.
+    pub fn next_frame(&mut self) -> Option<&[u8]> {
+        while self.scan < self.buf.len() {
+            if self.buf[self.scan] == b'\n' {
+                let s = self.start;
+                let mut end = self.scan;
+                self.start = self.scan + 1;
+                self.scan = self.start;
+                if end > s && self.buf[end - 1] == b'\r' {
+                    end -= 1;
+                }
+                return Some(&self.buf[s..end]);
+            }
+            self.scan += 1;
+        }
+        None
+    }
+
+    /// Drop buffered content, keep the allocation (connection-pool
+    /// recycling).
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+        self.scan = 0;
+    }
+
+    fn compact(&mut self) {
+        if self.start >= self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+            self.scan = 0;
+        } else if self.start >= COMPACT_AT {
+            self.buf.drain(..self.start);
+            self.scan -= self.start;
+            self.start = 0;
+        }
+    }
+}
+
+/// Outbound frame buffer with nonblocking draining.
+///
+/// Frames are appended whole ([`push_line`](WriteBuf::push_line)
+/// serializes through a caller-owned scratch `String`, reused across
+/// every frame on the connection); [`flush_into`](WriteBuf::flush_into)
+/// writes as much as the socket accepts and keeps the rest for the
+/// next readiness lap. [`pending`](WriteBuf::pending) is the
+/// backpressure signal: a reader that stops reading grows this, and
+/// only this.
+#[derive(Default)]
+pub struct WriteBuf {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl WriteBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes queued but not yet accepted by the socket.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Serialize one frame (compact JSON + `\n`) onto the queue.
+    pub fn push_line(&mut self, j: &Json, scratch: &mut String) {
+        scratch.clear();
+        j.write_compact(scratch);
+        self.buf.extend_from_slice(scratch.as_bytes());
+        self.buf.push(b'\n');
+    }
+
+    /// Write queued bytes until the socket would block (or the queue
+    /// empties). Returns the bytes written this call; `WouldBlock` is
+    /// progress-so-far, not an error. `Ok(0)` from the socket is
+    /// surfaced as `WriteZero`.
+    pub fn flush_into(&mut self, w: &mut impl Write)
+                      -> std::io::Result<usize> {
+        let mut written = 0;
+        while self.start < self.buf.len() {
+            match w.write(&self.buf[self.start..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => {
+                    self.start += n;
+                    written += n;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.start >= self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= COMPACT_AT {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        Ok(written)
+    }
+
+    /// Drop buffered content, keep the allocation.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+        self.start = 0;
+    }
+}
+
+// ------------------------------------------------------------ serializers
+
+/// The streamed per-request events, exactly as protocol v1/v2 shipped
+/// them (key order is alphabetical — object serialization is
+/// BTreeMap-backed — so these shapes are byte-stable).
+pub fn event_to_json(ev: &GenEvent) -> Json {
+    match ev {
+        GenEvent::Accepted { id, class } => Json::obj(vec![
+            ("type", Json::from("accepted")),
+            ("id", Json::from(*id)),
+            ("class", Json::from(class.label())),
+        ]),
+        GenEvent::Token { id, token, text } => Json::obj(vec![
+            ("type", Json::from("token")),
+            ("id", Json::from(*id)),
+            ("token", Json::from(*token as i64)),
+            ("text", Json::from(text.clone())),
+        ]),
+        GenEvent::Done { id, text, n_tokens, ttft, e2e } => Json::obj(vec![
+            ("type", Json::from("done")),
+            ("id", Json::from(*id)),
+            ("text", Json::from(text.clone())),
+            ("n_tokens", Json::from(*n_tokens as u64)),
+            ("ttft_ms", Json::Num(ttft * 1e3)),
+            ("e2e_ms", Json::Num(e2e * 1e3)),
+        ]),
+        GenEvent::Error { id, message } => Json::obj(vec![
+            ("type", Json::from("error")),
+            ("id", Json::from(*id)),
+            ("error", Json::from(message.clone())),
+        ]),
+        GenEvent::Cancelled { id } => Json::obj(vec![
+            ("type", Json::from("cancelled")),
+            ("id", Json::from(*id)),
+        ]),
+    }
+}
+
+/// A connection-level error frame (no `id`): malformed input, failed
+/// admin ops, rejected submissions.
+pub fn conn_error(message: String) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("error")),
+        ("error", Json::from(message)),
+    ])
+}
+
+/// The typed edge-overload frame: the server refuses work *before* it
+/// reaches the scheduler, names the limit it hit, and suggests a retry
+/// delay. `shed` says where the cut happened — `"edge"` (per-server
+/// in-flight cap at submit) or `"accept"` (connection cap at accept).
+pub fn overload_json(limit: usize, retry_ms: f64, shed: &str) -> Json {
+    Json::obj(vec![
+        ("type", Json::from("overload")),
+        (
+            "error",
+            Json::from(format!(
+                "server overloaded ({shed} limit {limit} reached); \
+                 retry in {retry_ms:.0} ms"
+            )),
+        ),
+        ("limit", Json::from(limit)),
+        ("retry_ms", Json::Num(retry_ms)),
+        ("shed", Json::from(shed)),
+    ])
+}
+
+// --------------------------------------------------------------- parsers
+
+/// Decode the optional `sampling` object of a v2 `generate`.
+pub fn sampling_from_json(j: &Json) -> SamplingParams {
+    SamplingParams {
+        temperature: j.get("temperature").as_f64().unwrap_or(0.0),
+        top_k: j.get("top_k").as_u64().unwrap_or(0) as u32,
+        top_p: j.get("top_p").as_f64().unwrap_or(1.0),
+        seed: j.get("seed").as_u64(),
+    }
+}
+
+/// Decode a `generate` op into a typed request (v1 and v2 forms).
+pub fn parse_generate(msg: &Json) -> Result<GenRequest> {
+    let prompt_tokens = match msg.get("prompt_tokens").as_arr() {
+        Some(arr) => arr
+            .iter()
+            .map(|t| t.as_i64().map(|x| x as i32))
+            .collect::<Option<Vec<i32>>>()
+            .ok_or_else(|| anyhow!("prompt_tokens must be integers"))?,
+        None => tokenizer::encode(msg.get("prompt").as_str().unwrap_or("")),
+    };
+    let max_new =
+        msg.get("max_new_tokens").as_u64().unwrap_or(16).max(1) as u32;
+    let mut req = GenRequest::new(prompt_tokens, max_new);
+    if let Some(c) = msg.get("class").as_str() {
+        req.class = PriorityClass::parse(c)?;
+    }
+    if let Some(ms) = msg.get("deadline_ms").as_f64() {
+        req.deadline = Some(ms / 1e3);
+    }
+    let sampling = msg.get("sampling");
+    if !sampling.is_null() {
+        req.sampling = sampling_from_json(sampling);
+    }
+    Ok(req)
+}
+
+/// Decode an op's optional `replica` field. A present-but-malformed
+/// value (string, negative, fractional) is an error, not a silent
+/// fall-through to the whole-set form of the op.
+pub fn parse_replica(msg: &Json) -> Result<Option<u64>> {
+    let field = msg.get("replica");
+    if field.is_null() {
+        return Ok(None);
+    }
+    field
+        .as_u64()
+        .map(Some)
+        .ok_or_else(|| anyhow!("'replica' must be a non-negative integer"))
+}

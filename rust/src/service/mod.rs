@@ -610,6 +610,33 @@ impl SubmissionHandle {
         }
     }
 
+    /// Nonblocking poll: `Some(ev)` if an event is ready, `None`
+    /// otherwise. Never blocks — the event-loop server polls every open
+    /// stream each lap with this. After the terminal event (check
+    /// [`is_finished`](Self::is_finished)) it always returns `None`.
+    pub fn try_next_event(&mut self) -> Option<GenEvent> {
+        if self.terminal {
+            return None;
+        }
+        match self.events.try_recv() {
+            Ok(ev) => {
+                self.terminal = ev.is_terminal();
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.terminal = true;
+                None
+            }
+        }
+    }
+
+    /// `true` once the terminal event has been delivered (or the service
+    /// died). A finished handle yields no further events.
+    pub fn is_finished(&self) -> bool {
+        self.terminal
+    }
+
     /// Like [`next_event`](Self::next_event) but gives up after
     /// `timeout` (returning `None` without ending the stream).
     pub fn next_event_timeout(&mut self, timeout: Duration)

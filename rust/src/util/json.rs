@@ -153,6 +153,13 @@ impl Json {
         out
     }
 
+    /// Compact serialization into a caller-owned buffer — the
+    /// allocation-lean path for hot writers (the server's per-connection
+    /// write buffers reuse one scratch `String` across frames).
+    pub fn write_compact(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
         match self {
             Json::Null => out.push_str("null"),

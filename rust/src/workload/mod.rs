@@ -17,6 +17,77 @@ pub enum Arrival {
     /// Markov-modulated on/off burst: `high`/`low` rates switched every
     /// exponential(1/period) seconds — the λ(t) spikes of Section II.
     Bursty { high: f64, low: f64, period: f64 },
+    /// Sinusoidal non-homogeneous Poisson process — the day/night swing
+    /// of real serving traffic: λ(t) = `mean`·(1 + `amplitude`·sin(2πt/
+    /// `period`)), sampled by thinning against λ_max = `mean`·(1 +
+    /// `amplitude`). `amplitude` in [0, 1); `period` in seconds.
+    Diurnal { mean: f64, amplitude: f64, period: f64 },
+}
+
+/// Incremental arrival-time generator: the exact draw sequence of
+/// [`Workload::generate`]'s arrival loop, factored out so open-loop
+/// drivers (`dynabatch loadgen`) can produce *duration-bounded*
+/// schedules one arrival at a time instead of materializing a request
+/// count up front. Feeding it the fork-1 rng of a seed reproduces the
+/// workload generator's arrival times bit for bit.
+#[derive(Debug, Clone)]
+pub struct ArrivalGen {
+    rng: Rng,
+    t: f64,
+    burst_high: bool,
+    burst_switch: f64,
+}
+
+impl ArrivalGen {
+    pub fn new(rng: Rng) -> ArrivalGen {
+        ArrivalGen { rng, t: 0.0, burst_high: true, burst_switch: 0.0 }
+    }
+
+    /// Absolute time of the next arrival under `arrival`. Monotone
+    /// non-decreasing across calls (constant 0 for `AllAtOnce`).
+    pub fn next_at(&mut self, arrival: &Arrival) -> f64 {
+        match *arrival {
+            Arrival::AllAtOnce => 0.0,
+            Arrival::Poisson { rate } => {
+                self.t += self.rng.exp(rate);
+                self.t
+            }
+            Arrival::Bursty { high, low, period } => {
+                loop {
+                    if self.burst_switch <= self.t {
+                        self.burst_high = !self.burst_high;
+                        self.burst_switch =
+                            self.t + self.rng.exp(1.0 / period);
+                    }
+                    let rate = if self.burst_high { high } else { low };
+                    let dt = self.rng.exp(rate);
+                    if self.t + dt <= self.burst_switch
+                        || self.burst_switch <= self.t
+                    {
+                        self.t += dt;
+                        break;
+                    }
+                    self.t = self.burst_switch;
+                }
+                self.t
+            }
+            Arrival::Diurnal { mean, amplitude, period } => {
+                // Thinning (Lewis–Shedler): homogeneous candidates at
+                // λ_max, each kept with probability λ(t)/λ_max.
+                let lam_max = mean * (1.0 + amplitude);
+                loop {
+                    self.t += self.rng.exp(lam_max);
+                    let phase =
+                        2.0 * std::f64::consts::PI * self.t / period;
+                    let lam = mean * (1.0 + amplitude * phase.sin());
+                    if self.rng.f64() * lam_max <= lam {
+                        break;
+                    }
+                }
+                self.t
+            }
+        }
+    }
 }
 
 /// Token-length distribution for prompts or outputs.
@@ -197,7 +268,7 @@ impl Workload {
     /// Materialize into (arrival_time, request) pairs, sorted by time.
     pub fn generate(&self) -> Vec<Request> {
         let mut rng = Rng::new(self.seed);
-        let mut arr_rng = rng.fork(1);
+        let arr_rng = rng.fork(1);
         let mut len_rng = rng.fork(2);
         let mut pfx_rng = rng.fork(3);
         // Fork 4 only when the mixture is active: `fork` advances the
@@ -207,34 +278,12 @@ impl Workload {
             Some(_) => Some(rng.fork(4)),
             None => None,
         };
-        let mut t = 0.0f64;
-        let mut burst_high = true;
-        let mut burst_switch = 0.0f64;
+        // ArrivalGen owns fork-1 and replays the exact historical draw
+        // sequence, so every fixed-seed anchor below stays valid.
+        let mut arr = ArrivalGen::new(arr_rng);
         let mut out = Vec::with_capacity(self.n_requests);
         for i in 0..self.n_requests {
-            let at = match self.arrival {
-                Arrival::AllAtOnce => 0.0,
-                Arrival::Poisson { rate } => {
-                    t += arr_rng.exp(rate);
-                    t
-                }
-                Arrival::Bursty { high, low, period } => {
-                    loop {
-                        if burst_switch <= t {
-                            burst_high = !burst_high;
-                            burst_switch = t + arr_rng.exp(1.0 / period);
-                        }
-                        let rate = if burst_high { high } else { low };
-                        let dt = arr_rng.exp(rate);
-                        if t + dt <= burst_switch || burst_switch <= t {
-                            t += dt;
-                            break;
-                        }
-                        t = burst_switch;
-                    }
-                    t
-                }
-            };
+            let at = arr.next_at(&self.arrival);
             let prompt = match (&self.length_mix, mix_rng.as_mut()) {
                 (Some(m), Some(r)) => m.sample(r).max(1),
                 _ => self.prompt.sample(&mut len_rng).max(1),
@@ -447,6 +496,86 @@ mod tests {
             assert!(pair[0].arrived_at <= pair[1].arrived_at);
         }
         assert!(reqs.last().unwrap().arrived_at.is_finite());
+    }
+
+    #[test]
+    fn diurnal_oscillates_deterministically() {
+        let w = Workload {
+            name: "t".into(),
+            arrival: Arrival::Diurnal {
+                mean: 50.0,
+                amplitude: 0.8,
+                period: 10.0,
+            },
+            prompt: LengthDist::Fixed(1),
+            output: LengthDist::Fixed(1),
+            n_requests: 4000,
+            seed: 11,
+            prefix: None,
+            length_mix: None,
+        };
+        let reqs = w.generate();
+        for pair in reqs.windows(2) {
+            assert!(pair[0].arrived_at <= pair[1].arrived_at);
+        }
+        // Same seed → bit-identical schedule.
+        let again = w.generate();
+        for (a, b) in reqs.iter().zip(&again) {
+            assert_eq!(a.arrived_at.to_bits(), b.arrived_at.to_bits());
+        }
+        // The thinned process must actually oscillate: the peak-phase
+        // half of each cycle (sin > 0) should hold well more arrivals
+        // than the trough half at amplitude 0.8.
+        let span = reqs.last().unwrap().arrived_at;
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for r in &reqs {
+            let phase = 2.0 * std::f64::consts::PI * r.arrived_at / 10.0;
+            if phase.sin() > 0.0 {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(span > 3.0 * 10.0, "need a few cycles, span={span}");
+        assert!(
+            peak as f64 > 1.5 * trough as f64,
+            "peak={peak} trough={trough}"
+        );
+        // Long-run average rate stays near `mean` (sin integrates to 0).
+        let rate = reqs.len() as f64 / span;
+        assert!((rate - 50.0).abs() / 50.0 < 0.1, "rate={rate}");
+    }
+
+    #[test]
+    fn arrival_gen_matches_generate_bitwise() {
+        // The extracted generator must replay the inline loop exactly.
+        for arrival in [
+            Arrival::Poisson { rate: 3.0 },
+            Arrival::Bursty { high: 20.0, low: 1.0, period: 2.0 },
+            Arrival::Diurnal { mean: 8.0, amplitude: 0.5, period: 5.0 },
+        ] {
+            let w = Workload {
+                name: "t".into(),
+                arrival: arrival.clone(),
+                prompt: LengthDist::Fixed(1),
+                output: LengthDist::Fixed(1),
+                n_requests: 300,
+                seed: 42,
+                prefix: None,
+                length_mix: None,
+            };
+            let reqs = w.generate();
+            let mut root = Rng::new(42);
+            let mut gen = ArrivalGen::new(root.fork(1));
+            for (i, r) in reqs.iter().enumerate() {
+                let at = gen.next_at(&arrival);
+                assert_eq!(
+                    at.to_bits(),
+                    r.arrived_at.to_bits(),
+                    "{arrival:?} arrival {i} diverged"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,231 @@
+//! Loadgen battery: fixed-seed determinism of the open-loop arrival
+//! schedule and the BENCH_server.json counters, and edge backpressure
+//! under deliberate overload — typed `overload` to the client, zero
+//! scheduler-queue growth, zero hung connections.
+
+use dynabatch::config::presets::{cpu_host, tiny_real};
+use dynabatch::config::PolicyKind;
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::{Engine, StepOutcome, StepPlan};
+use dynabatch::loadgen::{
+    run, schedule, schedule_hash, LoadgenConfig, LoadgenReport,
+};
+use dynabatch::request::RequestId;
+use dynabatch::server::client::{Client, ClientError, GenOptions};
+use dynabatch::server::{serve_replicas_with, EdgeConfig, Server};
+use dynabatch::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
+use dynabatch::util::json::Json;
+use dynabatch::workload::Arrival;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Sim engine with a real wall cost per step, so a stream stays in
+/// flight long enough for the edge cap to be observably occupied.
+struct SlowEngine {
+    inner: SimEngine,
+    delay: Duration,
+}
+
+impl Engine for SlowEngine {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.step(plan, out)
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        format!("slow({})", self.inner.label())
+    }
+}
+
+fn tiny_edge_server(edge: EdgeConfig, step_delay_ms: u64) -> Arc<Server> {
+    let set = ReplicaSet::build(1, RoutePolicy::LeastLoaded, |_| {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+            .engine(move || {
+                Ok(Box::new(SlowEngine {
+                    inner: SimEngine::new(&tiny_real(), &cpu_host()),
+                    delay: Duration::from_millis(step_delay_ms),
+                }) as Box<dyn Engine>)
+            })
+    })
+    .unwrap();
+    serve_replicas_with(set, "127.0.0.1:0", edge).unwrap()
+}
+
+/// The deterministic report sections as comparable strings (the
+/// `timing` section is wall-clock and explicitly excluded — the same
+/// split the CI double-run comparison uses).
+fn deterministic_sections(r: &LoadgenReport, cfg: &LoadgenConfig)
+                          -> (String, String, String) {
+    let j = r.to_json(cfg);
+    (
+        j.get("config").to_string(),
+        j.get("schedule").to_string(),
+        j.get("results").to_string(),
+    )
+}
+
+#[test]
+fn same_seed_same_schedule_and_counters() {
+    let cfg = LoadgenConfig {
+        arrival: Arrival::Poisson { rate: 40.0 },
+        duration_s: 1.0,
+        seed: 7,
+        max_new_tokens: 3,
+        ..LoadgenConfig::default()
+    };
+    let a = run(&cfg).unwrap();
+    let b = run(&cfg).unwrap();
+
+    // Schedule: bit-identical across runs.
+    assert_eq!(a.n_arrivals, b.n_arrivals);
+    assert!(a.n_arrivals > 10, "rate 40 over 1s should arrive");
+    assert_eq!(a.schedule_hash, b.schedule_hash);
+    assert_eq!(a.first_at.to_bits(), b.first_at.to_bits());
+    assert_eq!(a.last_at.to_bits(), b.last_at.to_bits());
+
+    // A fully-absorbed run pins every outcome counter.
+    for r in [&a, &b] {
+        assert_eq!(r.launched, r.n_arrivals);
+        assert_eq!(r.done, r.launched, "{r:?}");
+        assert_eq!(r.connect_failed, 0);
+        assert_eq!(r.local_capped, 0);
+        assert_eq!(r.overloaded, 0);
+        assert_eq!(r.errored, 0);
+        assert_eq!(r.hung, 0);
+        assert_eq!(r.e2e.n, r.done);
+    }
+
+    // The JSON sections CI compares are string-identical.
+    assert_eq!(
+        deterministic_sections(&a, &cfg),
+        deterministic_sections(&b, &cfg)
+    );
+
+    // A different seed reshuffles the schedule.
+    let c = run(&LoadgenConfig { seed: 8, ..cfg.clone() }).unwrap();
+    assert_ne!(a.schedule_hash, c.schedule_hash);
+}
+
+#[test]
+fn bursty_and_diurnal_schedules_are_seed_stable() {
+    for arrival in [
+        Arrival::Bursty { high: 60.0, low: 5.0, period: 0.5 },
+        Arrival::Diurnal { mean: 30.0, amplitude: 0.6, period: 1.0 },
+    ] {
+        let s1 = schedule(&arrival, 3.0, 21).unwrap();
+        let s2 = schedule(&arrival, 3.0, 21).unwrap();
+        assert!(!s1.is_empty());
+        assert_eq!(schedule_hash(&s1), schedule_hash(&s2));
+        for w in s1.windows(2) {
+            assert!(w[0] <= w[1], "schedule must be monotone");
+        }
+        assert!(*s1.last().unwrap() <= 3.0);
+    }
+}
+
+#[test]
+fn overload_sheds_typed_and_queues_never_grow() {
+    // max_inflight 1: the second concurrent generate must shed at the
+    // edge with the typed error, before the scheduler sees it. The
+    // 2ms/step engine keeps A's 64-token stream in flight for the
+    // whole assertion window.
+    let server = tiny_edge_server(
+        EdgeConfig { max_inflight: 1, ..EdgeConfig::default() },
+        2,
+    );
+    let addr = server.local_addr.to_string();
+
+    let mut a = Client::connect(&addr).unwrap();
+    let mut b = Client::connect(&addr).unwrap();
+    // A long-running stream occupies the single edge slot.
+    let id_a = a.submit("occupy the edge", 64, &GenOptions::default())
+        .unwrap();
+
+    // B's generate is shed with the typed client error...
+    let err = b
+        .generate("shed me", 2)
+        .expect_err("second stream must shed at the edge");
+    assert_eq!(
+        err.downcast_ref::<ClientError>(),
+        Some(&ClientError::Overloaded),
+        "want typed overload, got: {err:#}"
+    );
+
+    // ...and never reached the scheduler: no queue growth beyond A's
+    // single request, the shed is counted at the edge, and B's
+    // connection stays usable for admin ops.
+    let stats = b.stats().unwrap();
+    assert!(stats.waiting + stats.running <= 1, "queue grew: {stats:?}");
+    assert!(stats.edge_sheds >= 1);
+    assert_eq!(stats.edge_inflight, 1);
+
+    // Drain A fully: the slot frees and B can now generate — nothing
+    // is hung on either connection.
+    let mut done = false;
+    while !done {
+        use dynabatch::server::client::ClientEvent;
+        match a.next_event().unwrap() {
+            ClientEvent::Done { id, .. } => {
+                assert_eq!(id, id_a);
+                done = true;
+            }
+            ClientEvent::Error { message, .. } => {
+                panic!("stream A failed: {message}")
+            }
+            _ => {}
+        }
+    }
+    let g = b.generate("after the drain", 2).unwrap();
+    assert_eq!(g.n_tokens, 2);
+    let stats = b.stats().unwrap();
+    assert_eq!(stats.edge_inflight, 0);
+    server.shutdown();
+}
+
+#[test]
+fn loadgen_reports_sheds_without_hangs_under_tiny_edge() {
+    // Self-hosted server with a 2-stream edge under a 200 qps burst:
+    // some arrivals must shed, every one must resolve (no hangs), and
+    // the arithmetic must close.
+    let cfg = LoadgenConfig {
+        arrival: Arrival::Poisson { rate: 200.0 },
+        duration_s: 0.5,
+        seed: 11,
+        max_new_tokens: 8,
+        edge: Some(EdgeConfig {
+            max_inflight: 2,
+            ..EdgeConfig::default()
+        }),
+        host_step_delay_ms: 2,
+        ..LoadgenConfig::default()
+    };
+    let r = run(&cfg).unwrap();
+    assert!(r.n_arrivals > 50, "{r:?}");
+    assert_eq!(r.launched + r.local_capped + r.connect_failed,
+               r.n_arrivals);
+    assert_eq!(r.done + r.overloaded + r.errored + r.hung, r.launched);
+    assert!(r.overloaded > 0, "tiny edge must shed: {r:?}");
+    assert!(r.done > 0, "some streams must finish: {r:?}");
+    assert_eq!(r.hung, 0, "no hung connections: {r:?}");
+    assert!((r.shed_rate - r.overloaded as f64 / r.launched as f64)
+                .abs() < 1e-12);
+    // Report serializes and round-trips.
+    let j = r.to_json(&cfg);
+    assert!(Json::parse(&j.to_string()).is_ok());
+}

@@ -1,0 +1,478 @@
+//! Protocol battery for the event-loop serving edge: golden byte-for-byte
+//! frame pins (the serializers are BTreeMap-backed, so compact output is
+//! byte-stable), fixed-seed property/fuzz tests of the zero-copy line
+//! framer (arbitrary chunking / merging / truncation / garbage must never
+//! panic and never misframe), parser round-trips for the v1/v2 `generate`
+//! forms, and live-wire pins of every state-independent response frame.
+
+use dynabatch::config::presets::{cpu_host, tiny_real};
+use dynabatch::config::{PolicyKind, SchedulerConfig};
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::Engine;
+use dynabatch::request::PriorityClass;
+use dynabatch::scheduler::Scheduler;
+use dynabatch::server::protocol::{
+    conn_error, event_to_json, overload_json, parse_generate,
+    parse_replica, sampling_from_json, FrameBuf, WriteBuf,
+};
+use dynabatch::server::{serve, EdgeConfig, Server};
+use dynabatch::service::GenEvent;
+use dynabatch::tokenizer;
+use dynabatch::util::json::Json;
+use dynabatch::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn compact(j: &Json) -> String {
+    let mut s = String::new();
+    j.write_compact(&mut s);
+    s
+}
+
+// ------------------------------------------------- golden serializer pins
+
+#[test]
+fn golden_event_frames_byte_for_byte() {
+    let cases: Vec<(GenEvent, &str)> = vec![
+        (
+            GenEvent::Accepted { id: 7, class: PriorityClass::Interactive },
+            r#"{"class":"interactive","id":7,"type":"accepted"}"#,
+        ),
+        (
+            GenEvent::Token { id: 7, token: 104, text: "h".into() },
+            r#"{"id":7,"text":"h","token":104,"type":"token"}"#,
+        ),
+        (
+            // Exact-in-binary latencies so ms scaling stays integral.
+            GenEvent::Done {
+                id: 7,
+                text: "hi".into(),
+                n_tokens: 2,
+                ttft: 0.5,
+                e2e: 2.0,
+            },
+            r#"{"e2e_ms":2000,"id":7,"n_tokens":2,"text":"hi","ttft_ms":500,"type":"done"}"#,
+        ),
+        (
+            GenEvent::Error { id: 3, message: "boom".into() },
+            r#"{"error":"boom","id":3,"type":"error"}"#,
+        ),
+        (
+            GenEvent::Cancelled { id: 9 },
+            r#"{"id":9,"type":"cancelled"}"#,
+        ),
+    ];
+    for (ev, want) in &cases {
+        assert_eq!(&compact(&event_to_json(ev)), want);
+    }
+}
+
+#[test]
+fn golden_connection_frames_byte_for_byte() {
+    assert_eq!(
+        compact(&conn_error("bad json: oops".into())),
+        r#"{"error":"bad json: oops","type":"error"}"#
+    );
+    assert_eq!(
+        compact(&overload_json(64, 50.0, "edge")),
+        concat!(
+            r#"{"error":"server overloaded (edge limit 64 reached); "#,
+            r#"retry in 50 ms","limit":64,"retry_ms":50,"shed":"edge"}"#
+        )
+    );
+    assert_eq!(
+        compact(&overload_json(4096, 50.0, "accept")),
+        concat!(
+            r#"{"error":"server overloaded (accept limit 4096 reached); "#,
+            r#"retry in 50 ms","limit":4096,"retry_ms":50,"shed":"accept"}"#
+        )
+    );
+}
+
+// ------------------------------------------------------- parser round-trip
+
+#[test]
+fn parse_generate_v1_and_v2_forms() {
+    // v1: text prompt through the byte tokenizer, defaults everywhere.
+    let v1 = Json::parse(r#"{"op":"generate","prompt":"hi"}"#).unwrap();
+    let r = parse_generate(&v1).unwrap();
+    assert_eq!(r.prompt_tokens, tokenizer::encode("hi"));
+    assert_eq!(r.max_new_tokens, 16);
+    assert_eq!(r.class, PriorityClass::Standard);
+    assert_eq!(r.deadline, None);
+
+    // v2: raw token ids + class + deadline + sampling.
+    let v2 = Json::parse(concat!(
+        r#"{"op":"generate","prompt_tokens":[256,104,105],"#,
+        r#""max_new_tokens":32,"class":"interactive","#,
+        r#""deadline_ms":1500,"#,
+        r#""sampling":{"temperature":0.7,"top_k":40,"top_p":0.9,"#,
+        r#""seed":1}}"#
+    ))
+    .unwrap();
+    let r = parse_generate(&v2).unwrap();
+    assert_eq!(r.prompt_tokens, vec![256, 104, 105]);
+    assert_eq!(r.max_new_tokens, 32);
+    assert_eq!(r.class, PriorityClass::Interactive);
+    assert_eq!(r.deadline, Some(1.5));
+    assert_eq!(r.sampling.top_k, 40);
+    assert_eq!(r.sampling.seed, Some(1));
+
+    // max_new_tokens is clamped to >= 1; fractional prompt ids error.
+    let z = Json::parse(
+        r#"{"op":"generate","prompt":"x","max_new_tokens":0}"#,
+    )
+    .unwrap();
+    assert_eq!(parse_generate(&z).unwrap().max_new_tokens, 1);
+    let bad =
+        Json::parse(r#"{"op":"generate","prompt_tokens":[1.5]}"#).unwrap();
+    assert!(parse_generate(&bad).is_err());
+}
+
+#[test]
+fn parse_replica_strict_on_malformed() {
+    let none = Json::parse(r#"{"op":"drain"}"#).unwrap();
+    assert_eq!(parse_replica(&none).unwrap(), None);
+    let some = Json::parse(r#"{"op":"drain","replica":2}"#).unwrap();
+    assert_eq!(parse_replica(&some).unwrap(), Some(2));
+    for bad in [
+        r#"{"op":"drain","replica":"0"}"#,
+        r#"{"op":"drain","replica":-1}"#,
+        r#"{"op":"drain","replica":1.5}"#,
+    ] {
+        let msg = Json::parse(bad).unwrap();
+        assert!(parse_replica(&msg).is_err(), "{bad} must error");
+    }
+}
+
+#[test]
+fn sampling_defaults_fill_missing_fields() {
+    let s = sampling_from_json(&Json::parse("{}").unwrap());
+    assert_eq!(s.temperature, 0.0);
+    assert_eq!(s.top_k, 0);
+    assert_eq!(s.top_p, 1.0);
+    assert_eq!(s.seed, None);
+}
+
+// --------------------------------------------- framer property/fuzz tests
+
+/// A corpus that exercises the framer's edges: tiny frames, a frame
+/// larger than the 4096-byte compaction threshold, `\r\n` endings, and
+/// whitespace-only lines.
+fn corpus() -> Vec<Vec<u8>> {
+    let big = format!(r#"{{"pad":"{}"}}"#, "x".repeat(6000));
+    vec![
+        br#"{"op":"stats"}"#.to_vec(),
+        b"".to_vec(),
+        br#"{"op":"generate","prompt":"hi","max_new_tokens":2}"#.to_vec(),
+        b"  \t ".to_vec(),
+        big.into_bytes(),
+        br#"{"op":"cancel","id":7}"#.to_vec(),
+    ]
+}
+
+fn wire_bytes(frames: &[Vec<u8>], crlf: bool) -> Vec<u8> {
+    let mut out = Vec::new();
+    for f in frames {
+        out.extend_from_slice(f);
+        if crlf {
+            out.push(b'\r');
+        }
+        out.push(b'\n');
+    }
+    out
+}
+
+fn one_shot_frames(bytes: &[u8]) -> Vec<Vec<u8>> {
+    let mut fb = FrameBuf::new();
+    fb.extend(bytes);
+    let mut out = Vec::new();
+    while let Some(f) = fb.next_frame() {
+        out.push(f.to_vec());
+    }
+    out
+}
+
+#[test]
+fn chunking_never_changes_framing() {
+    for crlf in [false, true] {
+        let bytes = wire_bytes(&corpus(), crlf);
+        let want = one_shot_frames(&bytes);
+        assert_eq!(want.len(), corpus().len());
+        // The \r is stripped, the \n consumed, the payload untouched.
+        for (w, c) in want.iter().zip(corpus()) {
+            assert_eq!(w, &c);
+        }
+        let mut rng = Rng::new(0xF00D + crlf as u64);
+        for _ in 0..60 {
+            let mut fb = FrameBuf::new();
+            let mut got = Vec::new();
+            let mut i = 0;
+            while i < bytes.len() {
+                let n = rng.range_usize(1, 97).min(bytes.len() - i);
+                fb.extend(&bytes[i..i + n]);
+                i += n;
+                while let Some(f) = fb.next_frame() {
+                    got.push(f.to_vec());
+                }
+            }
+            assert_eq!(got, want, "chunked parse diverged");
+        }
+    }
+}
+
+#[test]
+fn truncated_tail_is_held_not_yielded() {
+    let mut fb = FrameBuf::new();
+    fb.extend(br#"{"op":"stats"}"#); // no newline yet
+    assert!(fb.next_frame().is_none());
+    assert_eq!(fb.buffered(), 14);
+    fb.extend(b"\n");
+    assert_eq!(fb.next_frame().unwrap(), br#"{"op":"stats"}"#);
+    assert!(fb.next_frame().is_none());
+    assert_eq!(fb.buffered(), 0);
+}
+
+#[test]
+fn garbage_streams_never_panic_or_misframe() {
+    let mut rng = Rng::new(0xBAD5EED);
+    for _ in 0..200 {
+        let mut fb = FrameBuf::new();
+        let len = rng.range_usize(0, 512);
+        let mut bytes = Vec::with_capacity(len);
+        for _ in 0..len {
+            // Bias toward newlines and high bytes (invalid UTF-8).
+            bytes.push(match rng.below(8) {
+                0 => b'\n',
+                1 => b'\r',
+                2 => 0xFF,
+                _ => rng.below(256) as u8,
+            });
+        }
+        fb.extend(&bytes);
+        while let Some(frame) = fb.next_frame() {
+            // Frames must never contain the delimiter...
+            assert!(!frame.contains(&b'\n'));
+            // ...and downstream decode must fail typed, not panic.
+            if let Ok(text) = std::str::from_utf8(frame) {
+                let _ = Json::parse(text);
+            }
+        }
+        // Whatever remains is a partial line, bounded by the input.
+        assert!(fb.buffered() <= bytes.len());
+    }
+}
+
+#[test]
+fn write_buf_preserves_bytes_under_tiny_writes() {
+    /// Accepts one byte per call — the pathological trickle writer.
+    struct OneByte(Vec<u8>);
+    impl Write for OneByte {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.push(buf[0]);
+            Ok(1)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let mut wb = WriteBuf::new();
+    let mut scratch = String::new();
+    let frames = [
+        Json::obj(vec![("type", Json::from("bye"))]),
+        conn_error("x".into()),
+        overload_json(1, 50.0, "edge"),
+    ];
+    let mut want = String::new();
+    for f in &frames {
+        wb.push_line(f, &mut scratch);
+        f.write_compact(&mut want);
+        want.push('\n');
+    }
+    let mut sink = OneByte(Vec::new());
+    let mut total = 0;
+    while wb.pending() > 0 {
+        total += wb.flush_into(&mut sink).unwrap();
+    }
+    assert_eq!(total, want.len());
+    assert_eq!(sink.0, want.as_bytes());
+}
+
+// ------------------------------------------------------- live-wire pins
+
+fn sim_server() -> Arc<Server> {
+    let model = tiny_real();
+    let hw = cpu_host();
+    let cfg = SchedulerConfig {
+        policy: PolicyKind::Combined,
+        d_sla: Some(0.05),
+        ..SchedulerConfig::default()
+    };
+    let sched = Scheduler::new(cfg, 100_000, 0, 16.0, 8.0);
+    serve(
+        move || Ok(Box::new(SimEngine::new(&model, &hw)) as Box<dyn Engine>),
+        sched,
+        "127.0.0.1:0",
+    )
+    .unwrap()
+}
+
+fn raw_conn(server: &Server) -> (TcpStream, BufReader<TcpStream>) {
+    let s = TcpStream::connect(server.local_addr).unwrap();
+    let r = BufReader::new(s.try_clone().unwrap());
+    (s, r)
+}
+
+fn read_line(r: &mut BufReader<TcpStream>) -> String {
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    line.trim_end().to_string()
+}
+
+#[test]
+fn live_v1_generate_first_frame_pinned_byte_for_byte() {
+    let server = sim_server();
+    let (mut s, mut r) = raw_conn(&server);
+    // First request on a fresh single-replica server: id namespace
+    // starts at 1, so the whole accepted frame is state-independent.
+    s.write_all(b"{\"op\":\"generate\",\"prompt\":\"hi\",\
+                   \"max_new_tokens\":2}\n")
+        .unwrap();
+    assert_eq!(
+        read_line(&mut r),
+        r#"{"class":"standard","id":1,"type":"accepted"}"#
+    );
+    // The stream then carries exactly 2 tokens and one `done`.
+    let mut tokens = 0;
+    loop {
+        let line = read_line(&mut r);
+        let j = Json::parse(&line).unwrap();
+        match j.get("type").as_str() {
+            Some("token") => {
+                tokens += 1;
+                assert_eq!(j.get("id").as_u64(), Some(1));
+            }
+            Some("done") => {
+                assert_eq!(j.get("n_tokens").as_u64(), Some(2));
+                break;
+            }
+            other => panic!("unexpected frame {other:?}: {line}"),
+        }
+    }
+    assert_eq!(tokens, 2);
+    server.shutdown();
+}
+
+#[test]
+fn live_error_and_bye_frames_pinned_byte_for_byte() {
+    let server = sim_server();
+    let (mut s, mut r) = raw_conn(&server);
+    s.write_all(b"{\"op\":\"nope\"}\n").unwrap();
+    assert_eq!(
+        read_line(&mut r),
+        r#"{"error":"unknown op \"nope\"","type":"error"}"#
+    );
+    s.write_all(b"not json at all\n").unwrap();
+    let line = read_line(&mut r);
+    assert!(line.starts_with(r#"{"error":"bad json:"#), "{line}");
+    // The connection survived both malformed frames.
+    s.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+    assert_eq!(read_line(&mut r), r#"{"type":"bye"}"#);
+    server.shutdown();
+}
+
+#[test]
+fn live_edge_shed_frame_pinned_byte_for_byte() {
+    use dynabatch::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
+    // max_inflight 0: every generate is shed at the edge, so the
+    // overload frame is fully state-independent.
+    let set = ReplicaSet::build(1, RoutePolicy::LeastLoaded, |_| {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+    })
+    .unwrap();
+    let server = dynabatch::server::serve_replicas_with(
+        set,
+        "127.0.0.1:0",
+        EdgeConfig { max_inflight: 0, ..EdgeConfig::default() },
+    )
+    .unwrap();
+    let (mut s, mut r) = raw_conn(&server);
+    s.write_all(b"{\"op\":\"generate\",\"prompt\":\"hi\"}\n").unwrap();
+    assert_eq!(
+        read_line(&mut r),
+        concat!(
+            r#"{"error":"server overloaded (edge limit 0 reached); "#,
+            r#"retry in 50 ms","limit":0,"retry_ms":50,"shed":"edge"}"#
+        )
+    );
+    // The shed is pre-scheduler: the connection stays usable for
+    // admin ops, and nothing reached the waiting queue.
+    s.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let stats = Json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(stats.get("type").as_str(), Some("stats"));
+    assert_eq!(stats.get("waiting").as_u64(), Some(0));
+    assert_eq!(stats.get("running").as_u64(), Some(0));
+    assert_eq!(stats.get("edge_sheds").as_u64(), Some(1));
+    server.shutdown();
+}
+
+#[test]
+fn live_v2_ops_round_trip_with_edge_fields() {
+    let server = sim_server();
+    let (mut s, mut r) = raw_conn(&server);
+    // stats: the v2 shape plus the additive edge_* counters.
+    s.write_all(b"{\"op\":\"stats\"}\n").unwrap();
+    let stats = Json::parse(&read_line(&mut r)).unwrap();
+    for key in [
+        "running",
+        "waiting",
+        "kv_used_tokens",
+        "controller",
+        "n_replicas",
+        "route_policy",
+        "edge_accepted_conns",
+        "edge_open_conns",
+        "edge_inflight",
+        "edge_sheds",
+        "edge_frames",
+        "edge_bad_frames",
+    ] {
+        assert!(!stats.get(key).is_null(), "stats missing {key}");
+    }
+    assert_eq!(stats.get("edge_open_conns").as_u64(), Some(1));
+    // set_policy round-trip.
+    s.write_all(b"{\"op\":\"set_policy\",\"policy\":\"alg1\"}\n")
+        .unwrap();
+    let rep = Json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(rep.get("type").as_str(), Some("policy_set"));
+    assert!(rep.get("policy").as_str().is_some());
+    // cancel ack for an unknown id still answers (typed, same conn).
+    s.write_all(b"{\"op\":\"cancel\",\"id\":424242}\n").unwrap();
+    let ack = Json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(ack.get("type").as_str(), Some("cancel_ack"));
+    assert_eq!(ack.get("id").as_u64(), Some(424242));
+    // drain → draining + drained; reopen → reopened.
+    s.write_all(b"{\"op\":\"drain\"}\n").unwrap();
+    assert_eq!(
+        Json::parse(&read_line(&mut r)).unwrap().get("type").as_str(),
+        Some("draining")
+    );
+    assert_eq!(
+        Json::parse(&read_line(&mut r)).unwrap().get("type").as_str(),
+        Some("drained")
+    );
+    s.write_all(b"{\"op\":\"reopen\"}\n").unwrap();
+    assert_eq!(
+        Json::parse(&read_line(&mut r)).unwrap().get("type").as_str(),
+        Some("reopened")
+    );
+    // fleet ops answer a typed error on a fleet-less server.
+    s.write_all(b"{\"op\":\"fleet_stats\"}\n").unwrap();
+    let err = Json::parse(&read_line(&mut r)).unwrap();
+    assert_eq!(err.get("type").as_str(), Some("error"));
+    server.shutdown();
+}

@@ -1,0 +1,230 @@
+//! Concurrency regressions for the event-loop serving edge: a slow
+//! reader must not block other connections, a mid-stream disconnect
+//! must free the request through the cancel path (KV accounting
+//! asserted), and a burst of concurrent connects/submits/cancels under
+//! `serve_replicas` must lose nothing.
+
+use dynabatch::config::presets::{cpu_host, tiny_real};
+use dynabatch::config::PolicyKind;
+use dynabatch::engine::sim::SimEngine;
+use dynabatch::engine::{Engine, StepOutcome, StepPlan};
+use dynabatch::request::RequestId;
+use dynabatch::server::client::{Client, ClientEvent, GenOptions};
+use dynabatch::server::{serve_replicas_with, EdgeConfig, Server};
+use dynabatch::service::{ReplicaSet, RoutePolicy, ServiceBuilder};
+use dynabatch::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Sim engine with a real wall cost per step: streams stay in flight
+/// long enough for the concurrency windows under test to be real.
+struct SlowEngine {
+    inner: SimEngine,
+    delay: Duration,
+}
+
+impl Engine for SlowEngine {
+    fn step(&mut self, plan: &StepPlan, out: &mut StepOutcome)
+            -> anyhow::Result<()> {
+        std::thread::sleep(self.delay);
+        self.inner.step(plan, out)
+    }
+
+    fn release(&mut self, id: RequestId) {
+        self.inner.release(id);
+    }
+
+    fn max_batch(&self) -> u32 {
+        self.inner.max_batch()
+    }
+
+    fn max_seq(&self) -> u32 {
+        self.inner.max_seq()
+    }
+
+    fn label(&self) -> String {
+        format!("slow({})", self.inner.label())
+    }
+}
+
+fn paced_server(replicas: usize, step_delay_ms: u64) -> Arc<Server> {
+    let set = ReplicaSet::build(replicas, RoutePolicy::LeastLoaded, |_| {
+        ServiceBuilder::new(tiny_real(), cpu_host())
+            .policy(PolicyKind::Combined)
+            .d_sla(0.05)
+            .eta_tokens(100_000)
+            .engine(move || {
+                Ok(Box::new(SlowEngine {
+                    inner: SimEngine::new(&tiny_real(), &cpu_host()),
+                    delay: Duration::from_millis(step_delay_ms),
+                }) as Box<dyn Engine>)
+            })
+    })
+    .unwrap();
+    serve_replicas_with(set, "127.0.0.1:0", EdgeConfig::default()).unwrap()
+}
+
+/// Poll the server until `pred` holds or the deadline passes; returns
+/// the last observed stats either way.
+fn poll_stats(
+    addr: &str,
+    timeout: Duration,
+    pred: impl Fn(&dynabatch::server::client::ServerStats) -> bool,
+) -> dynabatch::server::client::ServerStats {
+    let mut c = Client::connect(addr).unwrap();
+    let deadline = Instant::now() + timeout;
+    loop {
+        let s = c.stats().unwrap();
+        if pred(&s) || Instant::now() >= deadline {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn slow_reader_does_not_block_other_connections() {
+    let server = paced_server(1, 2);
+    let addr = server.local_addr.to_string();
+
+    // A is a deliberately slow reader: it submits a long stream and
+    // then never touches its socket, so the server keeps buffering
+    // frames for it while the event loop serves everyone else.
+    let mut a = TcpStream::connect(&addr).unwrap();
+    a.write_all(
+        b"{\"op\":\"generate\",\"prompt\":\"slow reader\",\
+          \"max_new_tokens\":64}\n",
+    )
+    .unwrap();
+    a.flush().unwrap();
+
+    // B must stream to completion while A is stalled.
+    let t0 = Instant::now();
+    let mut b = Client::connect(&addr).unwrap();
+    let g = b.generate("unblocked neighbor", 4).unwrap();
+    assert_eq!(g.n_tokens, 4);
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "B took {:?} behind a slow reader",
+        t0.elapsed()
+    );
+
+    // A's frames were buffered, not dropped: once it finally reads, the
+    // accepted frame (and the rest of its stream) is all there.
+    let mut lines = BufReader::new(a).lines();
+    let first = lines.next().unwrap().unwrap();
+    let j = Json::parse(&first).unwrap();
+    assert_eq!(j.get("type").as_str(), Some("accepted"));
+    let mut saw_done = false;
+    for line in lines {
+        let j = Json::parse(&line.unwrap()).unwrap();
+        if j.get("type").as_str() == Some("done") {
+            saw_done = true;
+            break;
+        }
+    }
+    assert!(saw_done, "slow reader's stream must still finish");
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_mid_stream_frees_request_and_kv() {
+    let server = paced_server(1, 2);
+    let addr = server.local_addr.to_string();
+
+    // Raw connection: submit a long stream, read the accepted frame so
+    // the request is provably in flight, then vanish.
+    {
+        let mut a = TcpStream::connect(&addr).unwrap();
+        a.write_all(
+            b"{\"op\":\"generate\",\"prompt\":\"goodbye cruel world\",\
+              \"max_new_tokens\":200}\n",
+        )
+        .unwrap();
+        a.flush().unwrap();
+        let mut r = BufReader::new(&mut a);
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("type").as_str(), Some("accepted"));
+        // Dropping the stream closes the socket mid-stream.
+    }
+
+    // The reaper must route the orphan through the cancel path: the
+    // request leaves the running set and every KV block frees.
+    let s = poll_stats(&addr, Duration::from_secs(20), |s| {
+        s.running == 0 && s.waiting == 0 && s.kv_used_tokens == 0
+    });
+    assert_eq!(s.running, 0, "request leaked after disconnect: {s:?}");
+    assert_eq!(s.waiting, 0, "{s:?}");
+    assert_eq!(s.kv_used_tokens, 0, "KV leaked after disconnect: {s:?}");
+    assert!(s.cancelled >= 1, "disconnect must count a cancel: {s:?}");
+    server.shutdown();
+}
+
+#[test]
+fn concurrent_connect_submit_cancel_burst_loses_nothing() {
+    let server = paced_server(2, 1);
+    let addr = server.local_addr.to_string();
+    let n_threads = 12;
+
+    let handles: Vec<_> = (0..n_threads)
+        .map(|i| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let id = c
+                    .submit(&format!("burst {i}"), 16,
+                            &GenOptions::default())
+                    .unwrap();
+                // Every third connection cancels its own stream while
+                // it is (probably) still decoding.
+                if i % 3 == 0 {
+                    c.send_cancel(id).unwrap();
+                }
+                // Either way the stream MUST end with a terminal event.
+                loop {
+                    match c.next_event().unwrap() {
+                        ClientEvent::Done { id: did, .. } => {
+                            assert_eq!(did, id);
+                            return "done";
+                        }
+                        ClientEvent::Cancelled { id: cid } => {
+                            assert_eq!(cid, id);
+                            return "cancelled";
+                        }
+                        ClientEvent::Error { .. } => return "error",
+                        _ => {}
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let mut done = 0;
+    let mut cancelled = 0;
+    for h in handles {
+        match h.join().unwrap() {
+            "done" => done += 1,
+            "cancelled" => cancelled += 1,
+            other => panic!("stream ended with {other}"),
+        }
+    }
+    assert_eq!(done + cancelled, n_threads, "every stream terminates");
+    assert!(done > 0, "uncancelled streams must finish");
+
+    // Nothing may linger: queues empty, KV fully freed, and the edge
+    // saw every connection out.
+    let s = poll_stats(&addr, Duration::from_secs(20), |s| {
+        s.running == 0 && s.waiting == 0 && s.kv_used_tokens == 0
+            && s.edge_inflight == 0
+    });
+    assert_eq!(s.running, 0, "{s:?}");
+    assert_eq!(s.waiting, 0, "{s:?}");
+    assert_eq!(s.kv_used_tokens, 0, "{s:?}");
+    assert_eq!(s.edge_inflight, 0, "{s:?}");
+    assert_eq!(s.finished + s.cancelled, n_threads as u64, "{s:?}");
+    server.shutdown();
+}
